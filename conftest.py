@@ -1,0 +1,7 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from the root by
+putting `python/` (the build-path package tree) on sys.path."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

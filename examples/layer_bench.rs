@@ -1,0 +1,82 @@
+//! Standalone-layer scaling study (paper Figs 2-3): run every layer artifact,
+//! print the measured CPU series next to the analytic A6000 model, and flag
+//! the linear-vs-quadratic scaling slopes + the FlashAttention crossover.
+//!
+//!     cargo run --release --example layer_bench [-- fwd|bwd]
+
+use anyhow::Result;
+use repro::bench::{report as rpt, SweepRunner};
+use repro::runtime::Engine;
+
+fn slope_loglog(points: &[(usize, f64)]) -> f64 {
+    // least-squares slope of log t vs log N
+    let logs: Vec<(f64, f64)> = points
+        .iter()
+        .map(|&(n, t)| ((n as f64).ln(), t.ln()))
+        .collect();
+    let n = logs.len() as f64;
+    let sx: f64 = logs.iter().map(|p| p.0).sum();
+    let sy: f64 = logs.iter().map(|p| p.1).sum();
+    let sxx: f64 = logs.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = logs.iter().map(|p| p.0 * p.1).sum();
+    (n * sxy - sx * sy) / (n * sxx - sx * sx)
+}
+
+fn main() -> Result<()> {
+    let which = std::env::args().nth(1).unwrap_or_else(|| "fwd".into());
+    let kind = match which.as_str() {
+        "bwd" => "layer_fwdbwd",
+        _ => "layer_fwd",
+    };
+
+    let engine = Engine::discover()?;
+    let runner = SweepRunner::new(&engine);
+
+    let impls = ["ours", "ours_scan", "gated", "quadratic", "specdec", "flash", "softmax"];
+    let mut all = Vec::new();
+    for imp in impls {
+        eprintln!("sweeping {kind}/{imp} …");
+        let pts = runner.run_series(kind, imp)?;
+        if pts.is_empty() {
+            continue;
+        }
+        // N-scaling slope at fixed D=128 (paper's top panels)
+        let series: Vec<(usize, f64)> = pts
+            .iter()
+            .filter(|p| p.d == 128)
+            .map(|p| (p.n, p.cpu_s.p50))
+            .collect();
+        if series.len() >= 3 {
+            println!(
+                "{imp:10} N-scaling slope (log-log): {:.2}  ({} points)",
+                slope_loglog(&series),
+                series.len()
+            );
+        }
+        all.extend(pts);
+    }
+
+    println!("\n{}", rpt::sweep_markdown(&format!("{kind} sweep"), &all));
+
+    // crossover vs FlashAttention (paper §5.1: ours wins for N > ~3000)
+    let ours: Vec<_> = all
+        .iter()
+        .filter(|p| p.impl_name == "ours" && p.d == 128)
+        .collect();
+    let flash: Vec<_> = all
+        .iter()
+        .filter(|p| p.impl_name == "flash" && p.d == 128)
+        .collect();
+    for o in &ours {
+        if let Some(f) = flash.iter().find(|f| f.n == o.n) {
+            println!(
+                "N={:6}  ours {}  flash {}  → {}",
+                o.n,
+                rpt::fmt_time(o.cpu_s.p50),
+                rpt::fmt_time(f.cpu_s.p50),
+                if o.cpu_s.p50 < f.cpu_s.p50 { "ours wins" } else { "flash wins" }
+            );
+        }
+    }
+    Ok(())
+}

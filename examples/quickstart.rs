@@ -1,0 +1,66 @@
+//! Quickstart: load the AOT linear-attention kernel, run a forward and a
+//! forward+backward pass from Rust, and verify against the quadratic oracle
+//! artifact — the whole three-layer stack in ~60 lines.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use repro::bench::report::fmt_time;
+use repro::runtime::{Engine, Tensor};
+
+fn main() -> Result<()> {
+    let engine = Engine::discover()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // quickstart artifacts are fixed at BH=4, N=256, D=64 (see aot.py)
+    let fwd = engine.load("quickstart_la_fwd")?;
+    let bwd = engine.load("quickstart_la_bwd")?;
+    let oracle = engine.load("quickstart_la_ref")?;
+
+    let shape = fwd.meta.inputs[0].shape.clone();
+    let mut q = Tensor::randn(shape.clone(), 1);
+    let mut k = Tensor::randn(shape.clone(), 2);
+    let v = Tensor::randn(shape.clone(), 3);
+    q.normalize_rows(); // paper §3.3
+    k.normalize_rows();
+
+    // --- forward: Pallas kernel vs direct Eq. 4 oracle ---------------------
+    let o_kernel = &fwd.run(&[q.clone(), k.clone(), v.clone()])?[0];
+    let o_ref = &oracle.run(&[q.clone(), k.clone(), v.clone()])?[0];
+    let max_err = o_kernel
+        .as_f32()?
+        .iter()
+        .zip(o_ref.as_f32()?)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("forward  max |kernel − oracle| = {max_err:.2e}");
+    assert!(max_err < 1e-4, "kernel disagrees with oracle");
+
+    // --- backward: analytical gradients (Eq. 16-21) ------------------------
+    let grad_o = Tensor::randn(shape.clone(), 4);
+    let grads = bwd.run(&[q.clone(), k.clone(), v.clone(), grad_o])?;
+    println!(
+        "backward outputs: dQ {:?}, dK {:?}, dV {:?}",
+        grads[0].shape(),
+        grads[1].shape(),
+        grads[2].shape()
+    );
+    for (name, g) in ["dQ", "dK", "dV"].iter().zip(&grads) {
+        let finite = g.as_f32()?.iter().all(|x| x.is_finite());
+        assert!(finite, "{name} has non-finite entries");
+    }
+
+    // --- quick timing -------------------------------------------------------
+    let lits: Vec<xla::Literal> = [&q, &k, &v]
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let stats = repro::bench::measure(2, 10, || Ok(fwd.run_timed(&lits)?.1))?;
+    println!(
+        "forward kernel (BH=4, N=256, D=64): p50 {} (p95 {})",
+        fmt_time(stats.p50),
+        fmt_time(stats.p95)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

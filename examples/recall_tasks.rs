@@ -1,0 +1,75 @@
+//! Table-2 analog: train a small LM briefly with several attention variants
+//! and score each on the synthetic reasoning suite (associative recall,
+//! induction, copy, reverse, modular arithmetic).
+//!
+//!     cargo run --release --example recall_tasks -- [--steps 40] [--count 32]
+//!
+//! The claim under test is *relative*: our LA should score in the same band
+//! as softmax attention (paper Table 2), not that either is good in absolute
+//! terms at this scale.
+
+use anyhow::Result;
+use repro::coordinator::config::{DataSection, OutputSection, TrainSection};
+use repro::coordinator::{Checkpoint, RunConfig, Trainer};
+use repro::runtime::Engine;
+use repro::tasks::{score_task, TaskKind};
+use repro::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let steps = args.get_usize("steps", 40)?;
+    let count = args.get_usize("count", 32)?;
+    let preset = args.get_or("preset", "tiny").to_string();
+
+    let engine = Engine::discover()?;
+    let attns = ["ours", "softmax", "gated"];
+
+    // train each variant, keep task accuracies
+    let mut scored: Vec<(String, Vec<f64>)> = Vec::new();
+    for attn in attns {
+        let cfg = RunConfig {
+            train: TrainSection {
+                preset: preset.clone(),
+                attn: attn.to_string(),
+                steps,
+                eval_every: 0,
+                ckpt_every: 0,
+                seed: 0,
+            },
+            data: DataSection::default(),
+            output: OutputSection { dir: "runs/tasks".into() },
+        };
+        let trainer = Trainer::new(&engine, cfg.clone())?;
+        eprintln!("training {attn} for {steps} steps …");
+        let outcome = trainer.run()?;
+        eprintln!("  final loss {:.4}", outcome.final_loss);
+
+        let ckpt = Checkpoint::load(outcome.run_dir.join("final.ckpt"))?;
+        let params: Vec<xla::Literal> = ckpt
+            .state
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let logits = format!("{}_logits", cfg.artifact_tag());
+        let mut accs = Vec::new();
+        for kind in TaskKind::all() {
+            let s = score_task(&engine, &logits, &params, kind, count, 0)?;
+            accs.push(s.accuracy());
+        }
+        scored.push((attn.to_string(), accs));
+    }
+
+    println!("| task | {} |", attns.join(" | "));
+    println!(
+        "|---|{}|",
+        attns.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for (ti, kind) in TaskKind::all().iter().enumerate() {
+        let row: Vec<String> = scored
+            .iter()
+            .map(|(_, accs)| format!("{:.1}%", accs[ti] * 100.0))
+            .collect();
+        println!("| {} | {} |", kind.name(), row.join(" | "));
+    }
+    Ok(())
+}

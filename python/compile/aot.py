@@ -1,0 +1,411 @@
+"""AOT artifact builder: lower every jax computation to HLO text, once.
+
+This is the *only* place Python runs in the whole system — `make artifacts`
+invokes it, and the Rust coordinator then works exclusively from
+``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled XLA
+(xla_extension 0.5.1) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts are content-hash cached: an artifact is re-lowered only when the
+Python sources, jax version, or its spec change.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--preset default|bench|lm|min]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs
+from .kernels import baselines
+from .kernels.linear_attention import LAParams, default_chunk, la_fwd, \
+    la_fwd_scan, linear_attention
+from .model import param_specs
+from .train import TrainConfig, eval_loss, init_state, train_step
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True: the Rust
+    side unwraps with to_tuple*).
+
+    `as_hlo_text(True)` prints large constants in full — the default elides
+    them as ``{...}``, which the Rust-side HLO text parser silently
+    zero-fills (observed: GLA decay tables became zeros → NaN outputs).
+    A belt-and-braces check in `build()` rejects any ``{...}`` leftover.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(True)  # print_large_constants=True
+
+
+def _count_entry_params(hlo_text: str) -> int:
+    """Number of parameters of the ENTRY computation in HLO text."""
+    import re
+    entry = hlo_text.split("ENTRY ", 1)[1]
+    ids = {int(m) for m in re.findall(r"parameter\((\d+)\)", entry)}
+    return len(ids)
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(dt)]
+
+
+def _io_spec(avals) -> list[dict]:
+    return [{"index": i, "dtype": _dtype_tag(a.dtype), "shape": list(a.shape)}
+            for i, a in enumerate(avals)]
+
+
+# ---------------------------------------------------------------------------
+# Artifact inventory
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    fn: "callable"
+    args: list  # ShapeDtypeStructs
+    meta: dict
+
+
+def _qkv(bh: int, n: int, d: int):
+    s = jax.ShapeDtypeStruct((bh, n, d), F32)
+    return [s, s, s]
+
+
+_LAYER_IMPLS = {
+    # impl name -> forward callable (q, k, v, chunk) -> o
+    "ours": lambda q, k, v, chunk: la_fwd(q, k, v, LAParams(), chunk),
+    # ablation: identical chunkwise algorithm as a plain lax.scan (no Pallas
+    # interpret overhead) — the production-CPU form of "ours"
+    "ours_scan": lambda q, k, v, chunk: la_fwd_scan(q, k, v, LAParams(),
+                                                    chunk),
+    "gated": lambda q, k, v, chunk: baselines.gated_la_chunkwise(
+        q, k, v, chunk=chunk),
+    "quadratic": lambda q, k, v, chunk: baselines.quadratic_la(q, k, v),
+    "specdec": lambda q, k, v, chunk: baselines.spec_dec_la(q, k, v),
+    "flash": lambda q, k, v, chunk: baselines.flash_softmax(q, k, v,
+                                                            chunk=chunk),
+    "softmax": lambda q, k, v, chunk: baselines.softmax_attention(q, k, v),
+}
+
+# gradient path: custom-vjp (analytical kernels) for ours; autodiff otherwise
+_LAYER_GRAD_IMPLS = dict(_LAYER_IMPLS)
+_LAYER_GRAD_IMPLS["ours"] = lambda q, k, v, chunk: linear_attention(
+    q, k, v, LAParams(), chunk)
+
+
+def _n_cap(impl: str) -> int:
+    if impl in ("quadratic", "specdec", "softmax"):
+        return configs.QUAD_N_CAP
+    if impl == "flash":
+        return configs.FLASH_N_CAP
+    return 1 << 30
+
+
+def layer_artifacts() -> list[Artifact]:
+    """Figs 2-4 / Table 1: per-(impl, N, D) forward and fwd+bwd modules."""
+    out: list[Artifact] = []
+    bh = configs.BENCH_BH
+    points: list[tuple[int, int]] = [
+        (n, configs.BENCH_D_DEFAULT) for n in configs.BENCH_N_SWEEP]
+    points += [(configs.BENCH_N_DEFAULT, d) for d in configs.BENCH_D_SWEEP
+               if d != configs.BENCH_D_DEFAULT]
+
+    for impl, fwd in _LAYER_IMPLS.items():
+        for n, d in points:
+            if n > _n_cap(impl):
+                continue
+            chunk = default_chunk(n)
+            out.append(Artifact(
+                f"layer_{impl}_fwd_n{n}_d{d}",
+                (lambda f, c: lambda q, k, v: (f(q, k, v, c),))(fwd, chunk),
+                _qkv(bh, n, d),
+                {"kind": "layer_fwd", "impl": impl, "bh": bh, "n": n,
+                 "d": d, "chunk": chunk}))
+
+    for impl, fwd in _LAYER_GRAD_IMPLS.items():
+        for n, d in points:
+            if n > _n_cap(impl):
+                continue
+            chunk = default_chunk(n)
+
+            def make(f, c):
+                def fwdbwd(q, k, v, go):
+                    _, vjp = jax.vjp(
+                        lambda a_, b_, c_: f(a_, b_, c_, c), q, k, v)
+                    return vjp(go)
+                return fwdbwd
+
+            out.append(Artifact(
+                f"layer_{impl}_bwd_n{n}_d{d}", make(fwd, chunk),
+                _qkv(bh, n, d) + [jax.ShapeDtypeStruct((bh, n, d), F32)],
+                {"kind": "layer_fwdbwd", "impl": impl, "bh": bh, "n": n,
+                 "d": d, "chunk": chunk}))
+    return out
+
+
+def ablation_artifacts() -> list[Artifact]:
+    """§Perf chunk ablation: the same (N, D) point at several chunk lengths,
+    for both the Pallas kernel and the scan form."""
+    out: list[Artifact] = []
+    bh, n, d = configs.BENCH_BH, 8192, configs.BENCH_D_DEFAULT
+    for chunk in (64, 128, 256, 512):
+        out.append(Artifact(
+            f"ablate_ours_fwd_n{n}_c{chunk}",
+            (lambda c: lambda q, k, v: (la_fwd(q, k, v, LAParams(), c),))(chunk),
+            _qkv(bh, n, d),
+            {"kind": "ablation_fwd", "impl": "ours", "bh": bh, "n": n,
+             "d": d, "chunk": chunk}))
+        out.append(Artifact(
+            f"ablate_ours_scan_fwd_n{n}_c{chunk}",
+            (lambda c: lambda q, k, v: (la_fwd_scan(q, k, v, LAParams(),
+                                                    c),))(chunk),
+            _qkv(bh, n, d),
+            {"kind": "ablation_fwd", "impl": "ours_scan", "bh": bh, "n": n,
+             "d": d, "chunk": chunk}))
+    return out
+
+
+def quickstart_artifacts() -> list[Artifact]:
+    """Small fixed-shape modules for examples/quickstart.rs."""
+    bh, n, d = 4, 256, 64
+    chunk = 64
+    arts = [Artifact(
+        "quickstart_la_fwd",
+        lambda q, k, v: (la_fwd(q, k, v, LAParams(), chunk),),
+        _qkv(bh, n, d),
+        {"kind": "layer_fwd", "impl": "ours", "bh": bh, "n": n, "d": d,
+         "chunk": chunk})]
+
+    def fwdbwd(q, k, v, go):
+        _, vjp = jax.vjp(
+            lambda a_, b_, c_: linear_attention(a_, b_, c_, LAParams(),
+                                                chunk), q, k, v)
+        return vjp(go)
+
+    arts.append(Artifact(
+        "quickstart_la_bwd", fwdbwd,
+        _qkv(bh, n, d) + [jax.ShapeDtypeStruct((bh, n, d), F32)],
+        {"kind": "layer_fwdbwd", "impl": "ours", "bh": bh, "n": n, "d": d,
+         "chunk": chunk}))
+    arts.append(Artifact(
+        "quickstart_la_ref",
+        lambda q, k, v: (baselines.quadratic_la(q, k, v),),
+        _qkv(bh, n, d),
+        {"kind": "layer_fwd", "impl": "quadratic", "bh": bh, "n": n, "d": d,
+         "chunk": chunk}))
+    return arts
+
+
+LM_ATTNS = ("ours", "gated", "softmax")
+
+
+def lm_artifacts(preset: str, attns=LM_ATTNS, batch: int = 4,
+                 train_cfg: TrainConfig | None = None) -> list[Artifact]:
+    """End-to-end LM modules (Fig 5 / Table 2): init, train_step, eval, logits.
+
+    The training state (params ++ adam_m ++ adam_v, flat) crosses the FFI as
+    individual buffers in param_specs order — the manifest records the names.
+    """
+    tc = train_cfg or TrainConfig()
+    out: list[Artifact] = []
+    for attn in attns:
+        cfg = configs.model_preset(preset, attn)
+        specs = param_specs(cfg)
+        nparam = len(specs)
+        base_meta = {
+            "preset": preset, "attn": attn,
+            "model": dataclasses.asdict(cfg),
+            "train": dataclasses.asdict(tc),
+            "n_params": cfg.n_params,
+            "n_param_arrays": nparam,
+            "param_names": [n for n, _ in specs],
+            "batch": batch,
+        }
+        tag = f"lm_{preset.replace('lm-', '')}_{attn}"
+
+        state_shapes = [jax.ShapeDtypeStruct(s, F32) for _, s in specs] * 3
+        tokens = jax.ShapeDtypeStruct((batch, cfg.n_ctx + 1), I32)
+        tokens_fwd = jax.ShapeDtypeStruct((batch, cfg.n_ctx), I32)
+        seed = jax.ShapeDtypeStruct((), I32)
+        step = jax.ShapeDtypeStruct((), I32)
+
+        out.append(Artifact(
+            tag + "_init",
+            lambda s, cfg=cfg: tuple(init_state(cfg, s)),
+            [seed], {**base_meta, "kind": "lm_init"}))
+
+        def mk_step(cfg=cfg, tc=tc, nstate=3 * nparam):
+            def f(*args):
+                state = list(args[:nstate])
+                loss, new_state = train_step(cfg, tc, state, args[nstate],
+                                             args[nstate + 1])
+                return (loss, *new_state)
+            return f
+
+        out.append(Artifact(
+            tag + "_train_step", mk_step(),
+            state_shapes + [tokens, step],
+            {**base_meta, "kind": "lm_train_step"}))
+
+        def mk_eval(cfg=cfg, nparam=nparam):
+            def f(*args):
+                return (eval_loss(cfg, list(args[:nparam]), args[nparam]),)
+            return f
+
+        out.append(Artifact(
+            tag + "_eval", mk_eval(),
+            state_shapes[:nparam] + [tokens],
+            {**base_meta, "kind": "lm_eval"}))
+
+        def mk_logits(cfg=cfg, nparam=nparam):
+            from .model import forward
+
+            def f(*args):
+                return (forward(cfg, list(args[:nparam]), args[nparam]),)
+            return f
+
+        out.append(Artifact(
+            tag + "_logits", mk_logits(),
+            state_shapes[:nparam] + [tokens_fwd],
+            {**base_meta, "kind": "lm_logits"}))
+    return out
+
+
+def inventory(preset: str) -> list[Artifact]:
+    arts = quickstart_artifacts()
+    if preset in ("default", "bench"):
+        arts += layer_artifacts()
+        arts += ablation_artifacts()
+    if preset in ("default", "lm"):
+        arts += lm_artifacts("lm-tiny", batch=2,
+                             train_cfg=TrainConfig(warmup_steps=10,
+                                                   total_steps=100))
+        arts += lm_artifacts("lm-small", batch=4)
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Build driver with content-hash cache
+# ---------------------------------------------------------------------------
+
+
+def _source_hash() -> str:
+    h = hashlib.sha256()
+    root = pathlib.Path(__file__).parent
+    for p in sorted(root.rglob("*.py")):
+        h.update(p.read_bytes())
+    h.update(jax.__version__.encode())
+    return h.hexdigest()[:16]
+
+
+def _artifact_hash(src_hash: str, art: Artifact) -> str:
+    h = hashlib.sha256()
+    h.update(src_hash.encode())
+    h.update(art.name.encode())
+    h.update(json.dumps(art.meta, sort_keys=True, default=str).encode())
+    h.update(json.dumps(_io_spec(art.args), sort_keys=True).encode())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: pathlib.Path, preset: str, only: str | None = None,
+          verbose: bool = True) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    old: dict = {}
+    if manifest_path.exists():
+        try:
+            old = json.loads(manifest_path.read_text()).get("artifacts", {})
+        except json.JSONDecodeError:
+            old = {}
+
+    src_hash = _source_hash()
+    arts = inventory(preset)
+    if only:
+        arts = [a for a in arts if only in a.name]
+
+    manifest = {"version": 1, "jax": jax.__version__, "preset": preset,
+                "source_hash": src_hash, "artifacts": {}}
+    n_built = n_cached = 0
+    for art in arts:
+        ahash = _artifact_hash(src_hash, art)
+        fpath = out_dir / f"{art.name}.hlo.txt"
+        prev = old.get(art.name)
+        if prev and prev.get("hash") == ahash and fpath.exists():
+            manifest["artifacts"][art.name] = prev
+            n_cached += 1
+            continue
+        t0 = time.time()
+        lowered = jax.jit(art.fn).lower(*art.args)
+        text = to_hlo_text(lowered)
+        # Contract check: the ENTRY computation must take exactly the declared
+        # inputs.  jax hoists long-lived closure Arrays into extra leading
+        # parameters, which would silently break the Rust runtime.
+        if "{...}" in text:
+            raise RuntimeError(
+                f"{art.name}: HLO text contains an elided constant ({{...}})"
+                " — the Rust parser would zero-fill it")
+        n_entry_params = _count_entry_params(text)
+        if n_entry_params != len(art.args):
+            raise RuntimeError(
+                f"{art.name}: HLO entry has {n_entry_params} parameters but "
+                f"{len(art.args)} inputs declared — a closure constant was "
+                "hoisted; compute it in-graph instead")
+        fpath.write_text(text)
+        out_avals = jax.eval_shape(art.fn, *art.args)
+        manifest["artifacts"][art.name] = {
+            "file": fpath.name,
+            "hash": ahash,
+            **art.meta,
+            "inputs": _io_spec(art.args),
+            "outputs": _io_spec(jax.tree_util.tree_leaves(out_avals)),
+        }
+        n_built += 1
+        if verbose:
+            print(f"  built {art.name}  ({len(text) / 1e6:.2f} MB, "
+                  f"{time.time() - t0:.1f}s)", flush=True)
+
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    if verbose:
+        print(f"artifacts: {n_built} built, {n_cached} cached → {out_dir}")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="default",
+                    choices=["default", "bench", "lm", "min"])
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args(argv)
+    build(pathlib.Path(args.out), args.preset, args.only)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

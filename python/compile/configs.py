@@ -1,0 +1,56 @@
+"""Model / bench presets shared by aot.py and the test suite.
+
+The paper's end-to-end run is Pythia-1.4B @ N=8192 on 8×A6000; this testbed
+is one CPU core running interpret-mode Pallas, so the *recorded* runs use the
+scaled presets below (DESIGN.md §Substitutions).  `lm-pythia1b4` exists to
+document the paper-faithful shape; it is lowerable but not part of the default
+artifact set.
+"""
+
+from __future__ import annotations
+
+from .model import ModelConfig
+
+__all__ = ["MODEL_PRESETS", "BENCH_N_SWEEP", "BENCH_D_SWEEP", "BENCH_BH",
+           "QUAD_N_CAP", "FLASH_N_CAP", "model_preset"]
+
+MODEL_PRESETS: dict[str, ModelConfig] = {
+    # ~0.86 M params — unit tests, smoke runs
+    "lm-tiny": ModelConfig(vocab_size=256, d_model=128, n_heads=4,
+                           n_layers=2, n_ctx=128, chunk=32),
+    # ~4.4 M params — the recorded Fig-5/Table-2 runs.  chunk=128 after the
+    # §Perf ablation: interpret-mode cost is per-grid-step, so fewer, larger
+    # chunks win on CPU (−38 % step time vs chunk=64; EXPERIMENTS.md §Perf).
+    "lm-small": ModelConfig(vocab_size=512, d_model=256, n_heads=8,
+                            n_layers=4, n_ctx=256, chunk=128),
+    # ~28 M params — overnight-scale config
+    "lm-base": ModelConfig(vocab_size=1024, d_model=512, n_heads=8,
+                           n_layers=8, n_ctx=512, chunk=64),
+    # ~86 M params — the "~100M transformer" config
+    "lm-100m": ModelConfig(vocab_size=2048, d_model=768, n_heads=12,
+                           n_layers=12, n_ctx=512, chunk=64),
+    # paper-faithful Pythia-1.4B shape (documentation / lowering check only)
+    "lm-pythia1b4": ModelConfig(vocab_size=50304, d_model=2048, n_heads=16,
+                                n_layers=24, n_ctx=8192, chunk=128),
+}
+
+
+def model_preset(name: str, attn: str | None = None) -> ModelConfig:
+    cfg = MODEL_PRESETS[name]
+    if attn is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn=attn)
+    return cfg
+
+
+# Layer-bench sweeps (Figs 2-4, Table 1). The paper sweeps N ∈ [1e3, 3e5] and
+# D ∈ [32, 256] at B=4, H=16; we keep D and the N *range shape* but flatten
+# BH to 4 and cap the quadratic-memory implementations so a 35 GB host
+# survives (documented in EXPERIMENTS.md).
+BENCH_BH = 4
+BENCH_N_SWEEP = [1024, 2048, 4096, 8192, 16384, 32768]
+BENCH_D_SWEEP = [32, 64, 128, 256]
+BENCH_D_DEFAULT = 128
+BENCH_N_DEFAULT = 4096
+QUAD_N_CAP = 4096    # softmax / quadratic LA / spec-dec: N² buffers
+FLASH_N_CAP = 16384  # flash: O(N·D) memory but O(N²·D) single-core time

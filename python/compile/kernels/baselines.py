@@ -1,0 +1,210 @@
+"""Comparator attention implementations from the paper's evaluation (§5).
+
+Each baseline reproduces the *algorithm* (and hence its complexity and
+off-chip-traffic class) of a system the paper compares against:
+
+  ``quadratic_la``      — "baseline PyTorch LA": Eq. 4 evaluated directly,
+                          materializing the N×N attention matrix (O(N²D) time,
+                          O(N²) memory; autodiff backward → O(N·D²) residency).
+  ``spec_dec_la``       — Speculative-Decoding LA (You et al. 2024): f(x)=b·x
+                          transformer-based LA, quadratic materialization with
+                          causal mask (their causal backward stores O(N·D²)).
+  ``softmax_attention`` — Regular Attention (Vaswani et al.), direct.
+  ``flash_softmax``     — FlashAttention-2 analog: blocked *online-softmax*
+                          streaming over key chunks, O(N²D) time / O(N·D) mem.
+  ``gated_la_recurrent``/``gated_la_chunkwise`` — Gated LA (Yang et al. 2023)
+                          analog: per-dimension decay gate, token-recurrent
+                          oracle + the chunkwise hardware-efficient form GLA
+                          actually ships.
+
+All take (BH, N, D) float32 and return (BH, N, D); all are causal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .masks import causal_mask_bool, causal_mask_f32
+
+__all__ = [
+    "quadratic_la",
+    "spec_dec_la",
+    "softmax_attention",
+    "flash_softmax",
+    "gated_la_recurrent",
+    "gated_la_chunkwise",
+]
+
+
+def quadratic_la(q, k, v, a: float = 1.0, b: float = 1.0):
+    """Baseline LA: direct Eq. 4 with causal mask, full N×N materialization."""
+    scores = a + b * jnp.einsum("bnd,bmd->bnm", q, k)
+    n = q.shape[1]
+    mask = causal_mask_f32(n)
+    scores = scores * mask
+    g = jnp.sum(scores, axis=-1, keepdims=True)
+    return jnp.einsum("bnm,bmd->bnd", scores, v) / g
+
+
+def spec_dec_la(q, k, v, b: float = 1.0, eps: float = 1e-6):
+    """Speculative-Decoding LA analog: kernel f(x) = b·x (no constant term).
+
+    Follows You et al.'s transformer-based formulation; the denominator can
+    approach zero for raw inputs, so an eps guard is applied (their models use
+    feature maps that keep it positive — with row-normalized q, k and the eps
+    the behaviour matches at bench scale).
+    """
+    scores = b * jnp.einsum("bnd,bmd->bnm", q, k)
+    n = q.shape[1]
+    mask = causal_mask_f32(n)
+    scores = scores * mask
+    g = jnp.sum(scores, axis=-1, keepdims=True)
+    g = jnp.where(jnp.abs(g) < eps, eps, g)
+    return jnp.einsum("bnm,bmd->bnd", scores, v) / g
+
+
+def softmax_attention(q, k, v):
+    """Regular Attention: softmax(QKᵀ/√D) with causal mask, direct O(N²)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) / jnp.sqrt(jnp.float32(d))
+    n = q.shape[1]
+    mask = causal_mask_bool(n)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnm,bmd->bnd", w, v)
+
+
+def flash_softmax(q, k, v, chunk: int = 128):
+    """FlashAttention-2 analog: streaming blocked softmax.
+
+    Scans key/value chunks carrying the online-softmax state (running max m,
+    running sum l, unnormalized accumulator acc) for *all* queries at once.
+    Never materializes the N×N matrix → O(N·D) memory, still O(N²·D) time.
+    """
+    bh, n, d = q.shape
+    c = min(chunk, n)
+    while n % c:
+        c -= 1
+    nc = n // c
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    kc = k.reshape(bh, nc, c, d)
+    vc = v.reshape(bh, nc, c, d)
+    row_ids = jnp.arange(n)[None, :, None]  # (1, N, 1)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs  # kj, vj: (BH, C, D)
+        s = jnp.einsum("bnd,bcd->bnc", q, kj) * scale  # (BH, N, C)
+        col_ids = j * c + jnp.arange(c)[None, None, :]
+        s = jnp.where(col_ids <= row_ids, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf) against NaN from exp(-inf+inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        alpha = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        p = jnp.exp(s - m_safe[..., None])
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[..., None] * acc + jnp.einsum("bnc,bcd->bnd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((bh, n), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bh, n), jnp.float32)
+    acc0 = jnp.zeros((bh, n, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (jnp.arange(nc), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    return acc / l[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Gated LA (Yang et al. 2023 analog)
+# ---------------------------------------------------------------------------
+
+
+def gated_la_recurrent(q, k, v, gamma=None):
+    """Token-by-token GLA recurrence (oracle): S_t = Diag(γ)·S_{t-1} + k_t v_tᵀ,
+    o_t = S_tᵀ q_t.  γ ∈ (0,1)^D is a per-key-dimension decay gate.
+
+    This is the RNN form the paper contrasts with (Appendix B, Table 3) —
+    inherently sequential over tokens.
+    """
+    bh, n, d = q.shape
+    if gamma is None:
+        gamma = _default_gamma(d)
+
+    def step(s, inputs):
+        qt, kt, vt = inputs  # (BH, D) each
+        s = gamma[:, None] * s + jnp.einsum("bm,bj->bmj", kt, vt)
+        ot = jnp.einsum("bm,bmj->bj", qt, s)
+        return s, ot
+
+    s0 = jnp.zeros((bh, d, d), jnp.float32)
+    _, o = jax.lax.scan(step, s0,
+                        (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+                         jnp.moveaxis(v, 1, 0)))
+    return jnp.moveaxis(o, 0, 1)
+
+
+def gated_la_chunkwise(q, k, v, gamma=None, chunk: int = 64):
+    """Chunkwise-parallel GLA — the hardware-efficient form Yang et al. ship.
+
+    Within a chunk of length C, with Λ_i = γ^i:
+      o_i = (q_i ⊙ Λ_i)·S_prev + Σ_{l≤i} [(q_i⊙Λ_i)·(k_l⊘Λ_l)] v_l
+      S_new = Λ_C ⊙ S_prev + Σ_l (k_l ⊙ Λ_{C-l}) v_lᵀ
+    Chunk state crosses chunks via lax.scan (the "carry over" of GLA §4).
+    """
+    import numpy as np
+
+    bh, n, d = q.shape
+    if gamma is None:
+        gamma = np.asarray(_default_gamma_tuple(d), np.float32)
+    c = min(chunk, n)
+    while n % c:
+        c -= 1
+    nc = n // c
+
+    # Decay tables are computed in numpy so they lower as literal constants.
+    # (jax ≥0.8 re-materializes jnp-level constants as in-graph iota+power
+    # chains, which the pinned xla_extension 0.5.1 CPU backend miscompiles
+    # to NaN — see DESIGN.md §Substitutions / known-issues.)
+    gamma_np = np.asarray(gamma, np.float32)
+    i1 = np.arange(1, c + 1, dtype=np.float32)[:, None]  # (C, 1)
+    lam = jnp.asarray(gamma_np[None, :] ** i1)            # Λ_i = γ^i, (C, D)
+    lam_inv = jnp.asarray(gamma_np[None, :] ** (-i1))     # γ^{-l}
+    lam_rem = jnp.asarray(gamma_np[None, :] ** (c - i1))  # γ^{C-l}
+    lam_c = jnp.asarray(gamma_np ** c)                    # γ^C, (D,)
+    mask = causal_mask_f32(c)
+
+    qc = jnp.moveaxis(q.reshape(bh, nc, c, d), 1, 0)
+    kc = jnp.moveaxis(k.reshape(bh, nc, c, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(bh, nc, c, d), 1, 0)
+
+    def step(s, inputs):
+        qi, ki, vi = inputs  # (BH, C, D)
+        qt = qi * lam
+        kt = ki * lam_inv
+        scores = jnp.einsum("bcd,bed->bce", qt, kt) * mask
+        o_intra = jnp.einsum("bce,bed->bcd", scores, vi)
+        o_inter = jnp.einsum("bcm,bmj->bcj", qt, s)
+        s_new = lam_c[None, :, None] * s + jnp.einsum(
+            "bcm,bcj->bmj", ki * lam_rem, vi)
+        return s_new, o_intra + o_inter
+
+    s0 = jnp.zeros((bh, d, d), jnp.float32)
+    _, o = jax.lax.scan(step, s0, (qc, kc, vc))
+    return jnp.moveaxis(o, 0, 1).reshape(bh, n, d)
+
+
+@functools.lru_cache(maxsize=None)
+def _default_gamma_tuple(d: int):
+    # log-spaced decays in [0.95, 0.999], the range GLA-family models learn
+    import numpy as np
+    g = np.exp(np.linspace(np.log(0.95), np.log(0.999), d)).astype("float32")
+    return tuple(float(x) for x in g)
+
+
+def _default_gamma(d: int) -> jax.Array:
+    return jnp.asarray(_default_gamma_tuple(d), jnp.float32)

@@ -1,0 +1,451 @@
+"""Factorized causal linear attention — the paper's core contribution (§3, §4).
+
+Forward (Eq. 5-9) and analytical backward (Eq. 16-21) of linear attention with
+kernel ``f(x) = a + b·x`` and causal mask, in ``O(N·D²)`` time and ``O(N·D)``
+memory, implemented as Pallas kernels.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+implementation keeps the running prefix state ``x⁽²⁾ ∈ R^{D×D}`` in per-thread
+registers and streams ``q_i, k_i`` through shared memory.  On TPU the same
+insight — keep the O(D²) state on-chip, touch each sequence element once —
+maps to a VMEM scratch accumulator carried across a *sequential* grid over
+sequence chunks, with BlockSpec pipelining the HBM→VMEM chunk transfers.
+Intra-chunk terms use a causal-masked (C,C) matmul (MXU work); inter-chunk
+terms use the carried state.  This is the chunkwise-parallel form of the
+paper's recurrences: mathematically identical, one pass over the sequence.
+
+State carried by the forward scan (per batch·head):
+    S ∈ R^{D×D} = Σ_{n≤i} k_n v_nᵀ        (paper's x⁽²⁾ / b)
+    z ∈ R^{D}   = Σ_{n≤i} k_n             (paper's y⁽²⁾ / b)
+    t ∈ R^{D}   = Σ_{n≤i} v_n             (paper's x⁽¹⁾ / a)
+    n ∈ R       = i                       (paper's y⁽¹⁾ / a)
+so that  o_i = (a·t + b·S ᵀq_i) / (a·n + b·z·q_i)   (Eq. 8).
+
+Backward (derived from Eq. 16-18, see DESIGN.md):
+    Ω̂_i  = Ω_i / g_i                                        (Eq. 20)
+    ∇q_i = b·[ S_iᵀ Ω̂_i − z_i · (o_i·Ω̂_i) ]                 forward scan
+    ∇k_p = b·[ A_p v_p − c_p ]                                reverse scan
+    ∇v_p = a·u_p + b·A_pᵀ k_p                                 reverse scan
+with reverse-cumulative states A_p = Σ_{i≥p} q_i Ω̂_iᵀ, c_p = Σ_{i≥p} q_i (o_i·Ω̂_i),
+u_p = Σ_{i≥p} Ω̂_i.  Only Q, K, V, O, g are stored between passes → O(N·D).
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); they lower to plain HLO and compose into the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "LAParams",
+    "normalize_qk",
+    "la_fwd",
+    "la_fwd_with_denom",
+    "la_fwd_scan",
+    "la_bwd",
+    "linear_attention",
+    "default_chunk",
+]
+
+_NEG_SLOPE = None  # no leaky parameters; attention kernel is f(x) = a + b x
+
+
+class LAParams(NamedTuple):
+    """Static coefficients of the attention kernel ``f(x) = a + b·x``.
+
+    The paper uses ``a = b = 1`` (§4: "We employ attention kernel of
+    f(x) = 1 + x"); they may also be set from a Taylor expansion of exp.
+    """
+
+    a: float = 1.0
+    b: float = 1.0
+
+
+def default_chunk(n: int, preferred: int = 128) -> int:
+    """Largest chunk length ≤ ``preferred`` that divides ``n``.
+
+    The sequential grid requires N % C == 0; TPU tiling prefers multiples of 8
+    (sublane) — all our Ns are powers of two so this returns a power of two.
+    """
+    c = min(preferred, n)
+    while n % c != 0:
+        c -= 1
+    return max(c, 1)
+
+
+def normalize_qk(q: jax.Array, k: jax.Array, eps: float = 1e-6):
+    """Row-wise L2 normalization of queries and keys (paper §3.3, Eq. 22).
+
+    Keeps q·k ∈ [−1, 1] so f(x) = 1 + x ≥ 0 and the denominator g_i ≥ Σ eps
+    stays well-conditioned — the paper's recommended guard against vanishing /
+    exploding gradients in sub-quadratic attention.
+    """
+    qn = q * jax.lax.rsqrt(jnp.sum(q * q, axis=-1, keepdims=True) + eps)
+    kn = k * jax.lax.rsqrt(jnp.sum(k * k, axis=-1, keepdims=True) + eps)
+    return qn, kn
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, g_ref, s_ref, z_ref, t_ref, n_ref,
+                *, a: float, b: float, chunk: int):
+    """One (batch·head, chunk) grid step of the forward pass.
+
+    Refs (VMEM blocks):
+      q/k/v_ref : (C, D) current sequence chunk
+      o_ref     : (C, D) output chunk
+      g_ref     : (C,)  per-row denominator (saved for the backward pass)
+      s_ref     : (D, D) scratch — running Σ k vᵀ         (persists across grid)
+      z_ref     : (1, D) scratch — running Σ k
+      t_ref     : (1, D) scratch — running Σ v
+      n_ref     : (1, 1) scratch — running token count
+    """
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _reset():  # new batch·head row: zero the carried state
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+
+    # --- intra-chunk (causal within the chunk, diagonal included) ----------
+    scores = a + b * jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (cols <= rows).astype(scores.dtype)
+    scores = scores * mask
+    f_intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    g_intra = jnp.sum(scores, axis=1, keepdims=True)
+
+    # --- inter-chunk (carried prefix state) ---------------------------------
+    s = s_ref[...]
+    z = z_ref[...]
+    t = t_ref[...]
+    n = n_ref[...]
+    f_inter = a * t + b * jnp.dot(q, s, preferred_element_type=jnp.float32)
+    g_inter = a * n + b * jnp.dot(q, z.T, preferred_element_type=jnp.float32)
+
+    g = g_intra + g_inter
+    o_ref[...] = (f_intra + f_inter) / g
+    g_ref[...] = g[:, 0]
+
+    # --- advance the carried state ------------------------------------------
+    s_ref[...] = s + jnp.dot(k.T, v, preferred_element_type=jnp.float32)
+    z_ref[...] = z + jnp.sum(k, axis=0, keepdims=True)
+    t_ref[...] = t + jnp.sum(v, axis=0, keepdims=True)
+    n_ref[...] = n + jnp.float32(chunk)
+
+
+def la_fwd_with_denom(q: jax.Array, k: jax.Array, v: jax.Array,
+                      params: LAParams = LAParams(),
+                      chunk: int | None = None):
+    """Forward pass returning ``(O, g)`` where g is the row denominator.
+
+    Args:
+      q, k, v: float32 arrays of shape (BH, N, D) — batch·heads flattened.
+      params: attention-kernel coefficients (a, b).
+      chunk: sequence chunk length C (must divide N); default ≤128 divisor.
+
+    Returns:
+      o: (BH, N, D) attention output, g: (BH, N) denominators.
+    """
+    bh, n, d = q.shape
+    c = chunk or default_chunk(n)
+    if n % c:
+        raise ValueError(f"chunk {c} must divide sequence length {n}")
+    nc = n // c
+
+    grid = (bh, nc)
+    blk = lambda: pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0))
+    gblk = pl.BlockSpec((1, c), lambda i, j: (i, j))
+
+    kern = functools.partial(_fwd_kernel, a=params.a, b=params.b, chunk=c)
+
+    def _squeeze(kernel):
+        # pallas blocks come in with the leading grid dim of size 1; present
+        # (C, D) views to the kernel body.
+        def wrapped(q_ref, k_ref, v_ref, o_ref, g_ref, *scratch):
+            kernel(q_ref.at[0], k_ref.at[0], v_ref.at[0],
+                   o_ref.at[0], g_ref.at[0], *scratch)
+        return wrapped
+
+    o, g = pl.pallas_call(
+        _squeeze(kern),
+        grid=grid,
+        in_specs=[blk(), blk(), blk()],
+        out_specs=[blk(), gblk],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pl.MemorySpace.ANY((d, d), jnp.float32),
+            pl.MemorySpace.ANY((1, d), jnp.float32),
+            pl.MemorySpace.ANY((1, d), jnp.float32),
+            pl.MemorySpace.ANY((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, g
+
+
+def la_fwd(q, k, v, params: LAParams = LAParams(), chunk: int | None = None):
+    """Forward pass returning only the attention output O (BH, N, D)."""
+    return la_fwd_with_denom(q, k, v, params, chunk)[0]
+
+
+def la_fwd_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+                params: LAParams = LAParams(), chunk: int | None = None):
+    """The same chunkwise algorithm as `la_fwd`, expressed as a lax.scan.
+
+    Ablation implementation (DESIGN.md): identical math and O(N·D²) work, but
+    compiled as a plain XLA while-loop instead of an interpret-mode Pallas
+    grid.  On CPU this is the production-speed form; on TPU the Pallas kernel
+    controls the HBM↔VMEM schedule that this form leaves to the compiler.
+    """
+    bh, n, d = q.shape
+    a, b = params.a, params.b
+    c = chunk or default_chunk(n)
+    if n % c:
+        raise ValueError(f"chunk {c} must divide sequence length {n}")
+    nc = n // c
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    mask = (cols <= rows).astype(jnp.float32)
+    offs = jnp.arange(1, c + 1, dtype=jnp.float32)  # token count inside chunk
+
+    qc = jnp.moveaxis(q.reshape(bh, nc, c, d), 1, 0)
+    kc = jnp.moveaxis(k.reshape(bh, nc, c, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(bh, nc, c, d), 1, 0)
+
+    def step(carry, inputs):
+        s, z, t, cnt = carry  # (BH,D,D), (BH,D), (BH,D), (BH,)
+        qi, ki, vi = inputs
+        scores = (a + b * jnp.einsum("bcd,bed->bce", qi, ki)) * mask
+        f_intra = jnp.einsum("bce,bed->bcd", scores, vi)
+        g_intra = jnp.sum(scores, axis=-1)
+        f_inter = a * t[:, None, :] + b * jnp.einsum("bcd,bde->bce", qi, s)
+        g_inter = a * cnt[:, None] + b * jnp.einsum("bcd,bd->bc", qi, z)
+        # NOTE: g_intra already contains a·(local count); offs only covers the
+        # intra part, cnt the carried part — see the kernel version.
+        g = g_intra + g_inter
+        o = (f_intra + f_inter) / g[..., None]
+        s = s + jnp.einsum("bcd,bce->bde", ki, vi)
+        z = z + jnp.sum(ki, axis=1)
+        t = t + jnp.sum(vi, axis=1)
+        cnt = cnt + jnp.float32(c)
+        return (s, z, t, cnt), o
+
+    del offs
+    carry0 = (
+        jnp.zeros((bh, d, d), jnp.float32),
+        jnp.zeros((bh, d), jnp.float32),
+        jnp.zeros((bh, d), jnp.float32),
+        jnp.zeros((bh,), jnp.float32),
+    )
+    _, o = jax.lax.scan(step, carry0, (qc, kc, vc))
+    return jnp.moveaxis(o, 0, 1).reshape(bh, n, d)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, o_ref, om_ref, dq_ref,
+                   s_ref, z_ref, *, a: float, b: float, chunk: int):
+    """∇Q — forward scan (Eq. 16).  om_ref holds Ω̂ = Ω/g.
+
+    ∇q_i = b·[ S_iᵀ Ω̂_i − z_i (o_i·Ω̂_i) ]  where S_i, z_i include rows ≤ i.
+    Intra-chunk part via causal-masked matmuls; inter-chunk via carried S, z.
+    """
+    del a  # ∇Q has no a-term: d/dq of the constant term is zero
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    o = o_ref[...]
+    om = om_ref[...]  # Ω̂, (C, D)
+    w = jnp.sum(o * om, axis=-1, keepdims=True)  # (C,1): o_i·Ω̂_i
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = (cols <= rows).astype(jnp.float32)
+
+    # intra: Σ_{l≤i} k_l (v_l·Ω̂_i) = (M ⊙ (Ω̂ Vᵀ)) K ;  Σ_{l≤i} k_l = M K
+    ov = jnp.dot(om, v.T, preferred_element_type=jnp.float32) * mask
+    dq_intra = jnp.dot(ov, k, preferred_element_type=jnp.float32)
+    ksum_intra = jnp.dot(mask, k, preferred_element_type=jnp.float32)
+
+    s = s_ref[...]
+    z = z_ref[...]
+    dq_inter = jnp.dot(om, s.T, preferred_element_type=jnp.float32)
+    dq_ref[...] = b * (dq_intra + dq_inter - (ksum_intra + z) * w)
+
+    s_ref[...] = s + jnp.dot(k.T, v, preferred_element_type=jnp.float32)
+    z_ref[...] = z + jnp.sum(k, axis=0, keepdims=True)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, o_ref, om_ref, dk_ref, dv_ref,
+                    a_ref, c_ref, u_ref, *, a: float, b: float, chunk: int):
+    """∇K, ∇V — reverse scan (Eq. 17-18).
+
+    Grid walks chunks back-to-front (index_map reverses).  Carried state is
+    *strictly-future* (rows > this chunk):
+      A = Σ_{i>chunk} q_i Ω̂_iᵀ, c = Σ_{i>chunk} q_i (o_i·Ω̂_i), u = Σ_{i>chunk} Ω̂_i.
+    """
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        a_ref[...] = jnp.zeros_like(a_ref)
+        c_ref[...] = jnp.zeros_like(c_ref)
+        u_ref[...] = jnp.zeros_like(u_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    o = o_ref[...]
+    om = om_ref[...]
+    w = jnp.sum(o * om, axis=-1, keepdims=True)  # (C,1)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # mask[p, i] = 1 where i ≥ p (future-inclusive, transposed causal)
+    maskT = (cols >= rows).astype(jnp.float32)
+
+    A = a_ref[...]  # (D, D): Σ q Ω̂ᵀ  (rows: q-dim r, cols: Ω̂-dim j)
+    cc = c_ref[...]  # (1, D)
+    u = u_ref[...]  # (1, D)
+
+    # ∇k_p = b [ A_p v_p − c_p ]; split A_p into intra (i in chunk, i ≥ p) + carried.
+    # intra: Σ_{i≥p} q_i (v_p·Ω̂_i) = (Mᵀ ⊙ (V Ω̂ᵀ)) Q
+    vo = jnp.dot(v, om.T, preferred_element_type=jnp.float32) * maskT
+    dk_intra = jnp.dot(vo, q, preferred_element_type=jnp.float32)
+    dk_inter = jnp.dot(v, A.T, preferred_element_type=jnp.float32)
+    cw_intra = jnp.dot(maskT, q * w, preferred_element_type=jnp.float32)
+    dk_ref[...] = b * (dk_intra + dk_inter - cw_intra - cc)
+
+    # ∇v_p = a u_p + b A_pᵀ k_p; intra A-part: Σ_{i≥p} (q_i·k_p) Ω̂_ij = (Mᵀ ⊙ (K Qᵀ)) Ω̂
+    kq = jnp.dot(k, q.T, preferred_element_type=jnp.float32) * maskT
+    dv_intra = b * jnp.dot(kq, om, preferred_element_type=jnp.float32)
+    dv_inter = b * jnp.dot(k, A, preferred_element_type=jnp.float32)
+    u_intra = jnp.dot(maskT, om, preferred_element_type=jnp.float32)
+    dv_ref[...] = a * (u_intra + u) + dv_intra + dv_inter
+
+    a_ref[...] = A + jnp.dot(q.T, om, preferred_element_type=jnp.float32)
+    c_ref[...] = cc + jnp.sum(q * w, axis=0, keepdims=True)
+    u_ref[...] = u + jnp.sum(om, axis=0, keepdims=True)
+
+
+def la_bwd(q, k, v, o, g, grad_o,
+           params: LAParams = LAParams(), chunk: int | None = None):
+    """Analytical backward pass (Eq. 16-21): returns (∇Q, ∇K, ∇V).
+
+    Only Q, K, V, O, g are consumed — the O(N·D²) intermediates of the forward
+    recurrence are *recomputed on the fly* inside the scans, which is the
+    paper's memory-reduction result (§3.2): O(N·D) residency.
+    """
+    bh, n, d = q.shape
+    c = chunk or default_chunk(n)
+    if n % c:
+        raise ValueError(f"chunk {c} must divide sequence length {n}")
+    nc = n // c
+
+    om = grad_o / g[..., None]  # Ω̂ (Eq. 20)
+
+    blk_f = lambda: pl.BlockSpec((1, c, d), lambda i, j: (i, j, 0))
+    # reverse scan: grid step j processes chunk nc-1-j
+    blk_r = lambda: pl.BlockSpec((1, c, d), lambda i, j: (i, nc - 1 - j, 0))
+
+    def _squeeze(kernel, nin, nout):
+        def wrapped(*refs):
+            ins = [r.at[0] for r in refs[:nin]]
+            outs = [r.at[0] for r in refs[nin:nin + nout]]
+            kernel(*ins, *outs, *refs[nin + nout:])
+        return wrapped
+
+    dq = pl.pallas_call(
+        _squeeze(functools.partial(_bwd_dq_kernel, a=params.a, b=params.b,
+                                   chunk=c), 5, 1),
+        grid=(bh, nc),
+        in_specs=[blk_f() for _ in range(5)],
+        out_specs=blk_f(),
+        out_shape=jax.ShapeDtypeStruct((bh, n, d), jnp.float32),
+        scratch_shapes=[
+            pl.MemorySpace.ANY((d, d), jnp.float32),
+            pl.MemorySpace.ANY((1, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, o, om)
+
+    dk, dv = pl.pallas_call(
+        _squeeze(functools.partial(_bwd_dkv_kernel, a=params.a, b=params.b,
+                                   chunk=c), 5, 2),
+        grid=(bh, nc),
+        in_specs=[blk_r() for _ in range(5)],
+        out_specs=[blk_r(), blk_r()],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, n, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pl.MemorySpace.ANY((d, d), jnp.float32),
+            pl.MemorySpace.ANY((1, d), jnp.float32),
+            pl.MemorySpace.ANY((1, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, o, om)
+
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring — the public differentiable entry point
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def linear_attention(q, k, v, params: LAParams = LAParams(),
+                     chunk: int | None = None):
+    """Causal linear attention with kernel f(x) = a + b·x (differentiable).
+
+    Shapes: q, k, v (BH, N, D) float32 → (BH, N, D).  Uses the Pallas forward
+    kernel and, under ``jax.grad``, the analytical backward kernels (never
+    autodiff through the recurrence — that is the paper's O(N·D²)-memory trap).
+    """
+    return la_fwd(q, k, v, params, chunk)
+
+
+def _la_vjp_fwd(q, k, v, params, chunk):
+    o, g = la_fwd_with_denom(q, k, v, params, chunk)
+    return o, (q, k, v, o, g)
+
+
+def _la_vjp_bwd(params, chunk, res, grad_o):
+    q, k, v, o, g = res
+    return la_bwd(q, k, v, o, g, grad_o, params, chunk)
+
+
+linear_attention.defvjp(_la_vjp_fwd, _la_vjp_bwd)

@@ -1,0 +1,29 @@
+"""Causal-mask helpers that lower to iota+compare, never to an N×N literal.
+
+``jnp.tril(jnp.ones((n, n)))`` embeds an N² constant into the HLO text — at
+N = 32768 that is a gigabyte of literal. These helpers emit
+``broadcasted_iota`` comparisons instead, which XLA fuses for free.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["causal_mask_f32", "causal_mask_bool"]
+
+
+def causal_mask_f32(n: int, m: int | None = None) -> jax.Array:
+    """(n, m) float32 mask: 1 where col ≤ row (causal, diagonal kept)."""
+    m = n if m is None else m
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    return (cols <= rows).astype(jnp.float32)
+
+
+def causal_mask_bool(n: int, m: int | None = None) -> jax.Array:
+    """(n, m) bool mask: True where col ≤ row."""
+    m = n if m is None else m
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (n, m), 1)
+    return cols <= rows

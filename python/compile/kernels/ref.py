@@ -1,0 +1,58 @@
+"""Pure-jnp correctness oracles for the linear-attention kernels.
+
+These implement Eq. 4 of the paper *directly* — materializing the full N×N
+attention matrix — so they are O(N²·D) time / O(N²) memory and only usable at
+test scale.  They are the ground truth every kernel is validated against;
+gradients come from ``jax.grad`` through this direct form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .masks import causal_mask_bool, causal_mask_f32
+
+__all__ = ["ref_la", "ref_la_with_denom", "ref_la_grads", "ref_softmax"]
+
+
+def ref_la_with_denom(q, k, v, a: float = 1.0, b: float = 1.0,
+                      causal: bool = True):
+    """Direct evaluation of Eq. 4: o_ij = Σ f(q_i·k_n) v_nj / Σ f(q_i·k_n).
+
+    Returns (o, g) with o: (BH, N, D), g: (BH, N).
+    """
+    scores = a + b * jnp.einsum("bnd,bmd->bnm", q, k)
+    if causal:
+        n = q.shape[1]
+        mask = causal_mask_f32(n)
+        scores = scores * mask
+    g = jnp.sum(scores, axis=-1)
+    o = jnp.einsum("bnm,bmd->bnd", scores, v) / g[..., None]
+    return o, g
+
+
+def ref_la(q, k, v, a: float = 1.0, b: float = 1.0, causal: bool = True):
+    """Direct Eq. 4 forward, output only."""
+    return ref_la_with_denom(q, k, v, a, b, causal)[0]
+
+
+def ref_la_grads(q, k, v, grad_o, a: float = 1.0, b: float = 1.0,
+                 causal: bool = True):
+    """(∇Q, ∇K, ∇V) through the direct form via jax.vjp — the autodiff ground
+    truth for the paper's hand-derived Eq. 16-18."""
+    _, vjp = jax.vjp(lambda q_, k_, v_: ref_la(q_, k_, v_, a, b, causal),
+                     q, k, v)
+    return vjp(grad_o)
+
+
+def ref_softmax(q, k, v, causal: bool = True):
+    """Regular attention (Eq. 2-3): softmax kernel f(x) = exp(x/√D)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        n = q.shape[1]
+        mask = causal_mask_bool(n)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnm,bmd->bnd", w, v)

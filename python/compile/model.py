@@ -1,0 +1,218 @@
+"""L2 — JAX transformer language model whose attention calls the L1 kernels.
+
+A Pythia-style decoder-only LM (pre-LN, rotary position embedding, GELU MLP,
+tied embeddings) with a pluggable attention implementation:
+
+  "ours"      — the paper's factorized linear attention (Pallas kernels,
+                analytical backward via jax.custom_vjp), q/k normalized §3.3
+  "gated"     — Gated-LA chunkwise analog (Yang et al. 2023)
+  "softmax"   — Regular Attention (direct)
+  "flash"     — FlashAttention-2 analog (blocked online softmax)
+  "quadratic" — baseline LA (direct Eq. 4, autodiff backward)
+
+Everything here is build-time Python: `aot.py` lowers init / train-step /
+eval / logits functions to HLO text once; the Rust coordinator loads and runs
+the artifacts and never imports Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import baselines
+from .kernels.linear_attention import LAParams, linear_attention, normalize_qk
+
+__all__ = ["ModelConfig", "init_params", "forward", "loss_fn", "param_specs"]
+
+ATTN_IMPLS = ("ours", "gated", "softmax", "flash", "quadratic")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture hyper-parameters (baked into the HLO artifact)."""
+
+    vocab_size: int = 512
+    d_model: int = 256
+    n_heads: int = 8
+    n_layers: int = 4
+    n_ctx: int = 256
+    attn: str = "ours"
+    chunk: int = 64          # sequence chunk for chunked attention impls
+    mlp_ratio: int = 4
+    rope_base: float = 10000.0
+    eps: float = 1e-5
+
+    def __post_init__(self):
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model must be divisible by n_heads")
+        if self.attn not in ATTN_IMPLS:
+            raise ValueError(f"attn must be one of {ATTN_IMPLS}")
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        """Total trainable parameter count."""
+        return sum(math.prod(s) for _, s in param_specs(self))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) list — the contract with the Rust side.
+
+    The manifest emitted by aot.py serializes exactly this ordering; the Rust
+    checkpoint format stores buffers in the same order.
+    """
+    c, m = cfg.d_model, cfg.mlp_ratio
+    specs: list[tuple[str, tuple[int, ...]]] = [("embed", (cfg.vocab_size, c))]
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        specs += [
+            (p + "ln1.scale", (c,)), (p + "ln1.bias", (c,)),
+            (p + "attn.wq", (c, c)), (p + "attn.wk", (c, c)),
+            (p + "attn.wv", (c, c)), (p + "attn.wo", (c, c)),
+            (p + "ln2.scale", (c,)), (p + "ln2.bias", (c,)),
+            (p + "mlp.w1", (c, m * c)), (p + "mlp.b1", (m * c,)),
+            (p + "mlp.w2", (m * c, c)), (p + "mlp.b2", (c,)),
+        ]
+    specs += [("ln_f.scale", (c,)), ("ln_f.bias", (c,))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed) -> list[jax.Array]:
+    """GPT-2-style init: N(0, 0.02), residual-output projections scaled by
+    1/√(2L), LN scales 1, biases 0.  `seed` may be a python int or a traced
+    i32 scalar (AOT init artifact).  Returns the flat param_specs list."""
+    key = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+
+    out: list[jax.Array] = []
+    resid_scale = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    for i, (name, shape) in enumerate(param_specs(cfg)):
+        sub = jax.random.fold_in(key, i)
+        if name.endswith(".scale"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".bias", ".b1", ".b2")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith((".wo", ".w2")):
+            out.append(jax.random.normal(sub, shape, jnp.float32) *
+                       resid_scale)
+        else:
+            out.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return out
+
+
+def _tree(cfg: ModelConfig, flat: list[jax.Array]) -> dict[str, Any]:
+    return {name: arr for (name, _), arr in zip(param_specs(cfg), flat)}
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, scale, bias, eps):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _rope_tables(tokens: jax.Array, d_head: int, base: float):
+    """cos/sin tables computed *in-graph* from the traced token batch.
+
+    Deriving positions from `tokens` (rather than a cached concrete array)
+    keeps the tables inside the lowered HLO — jax hoists long-lived closure
+    Arrays into extra entry parameters, which would break the fixed
+    input contract with the Rust runtime (aot.py asserts this).
+    """
+    half = d_head // 2
+    freqs = (1.0 / base) ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.cumsum(jnp.ones_like(tokens[0], jnp.float32)) - 1.0  # (N,)
+    angles = pos[:, None] * freqs[None, :]
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def _rope(x, cos, sin):
+    """Rotary position embedding (half-split form, Su et al. 2024).
+    x: (BH, N, D); cos/sin: (N, D/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """Dispatch on the configured implementation. q,k,v: (BH, N, Dh)."""
+    if cfg.attn == "ours":
+        q, k = normalize_qk(q, k)
+        return linear_attention(q, k, v, LAParams(1.0, 1.0),
+                                min(cfg.chunk, q.shape[1]))
+    if cfg.attn == "gated":
+        q, k = normalize_qk(q, k)
+        return baselines.gated_la_chunkwise(q, k, v, chunk=cfg.chunk)
+    if cfg.attn == "softmax":
+        return baselines.softmax_attention(q, k, v)
+    if cfg.attn == "flash":
+        return baselines.flash_softmax(q, k, v, chunk=cfg.chunk)
+    if cfg.attn == "quadratic":
+        q, k = normalize_qk(q, k)
+        return baselines.quadratic_la(q, k, v)
+    raise ValueError(cfg.attn)
+
+
+def _block(cfg: ModelConfig, p: dict, prefix: str, x, cos, sin):
+    b, n, c = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    g = lambda s: p[prefix + s]
+
+    y = _layernorm(x, g("ln1.scale"), g("ln1.bias"), cfg.eps)
+    q = (y @ g("attn.wq")).reshape(b, n, h, dh)
+    k = (y @ g("attn.wk")).reshape(b, n, h, dh)
+    v = (y @ g("attn.wv")).reshape(b, n, h, dh)
+    # flatten batch·head for the kernels: (B*H, N, Dh)
+    to_bh = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+    q, k, v = to_bh(q), to_bh(k), to_bh(v)
+    q = _rope(q, cos, sin)
+    k = _rope(k, cos, sin)
+    o = _attention(cfg, q, k, v)
+    o = o.reshape(b, h, n, dh).transpose(0, 2, 1, 3).reshape(b, n, c)
+    x = x + o @ g("attn.wo")
+
+    y = _layernorm(x, g("ln2.scale"), g("ln2.bias"), cfg.eps)
+    y = jax.nn.gelu(y @ g("mlp.w1") + g("mlp.b1")) @ g("mlp.w2") + g("mlp.b2")
+    return x + y
+
+
+def forward(cfg: ModelConfig, flat_params: list[jax.Array],
+            tokens: jax.Array) -> jax.Array:
+    """Logits for a token batch. tokens: i32 (B, N) → f32 (B, N, V).
+
+    Embeddings are tied: the unembedding matrix is embedᵀ.
+    """
+    p = _tree(cfg, flat_params)
+    x = p["embed"][tokens]
+    cos, sin = _rope_tables(tokens, cfg.d_head, cfg.rope_base)
+    for i in range(cfg.n_layers):
+        x = _block(cfg, p, f"block{i}.", x, cos, sin)
+    x = _layernorm(x, p["ln_f.scale"], p["ln_f.bias"], cfg.eps)
+    return x @ p["embed"].T
+
+
+def loss_fn(cfg: ModelConfig, flat_params: list[jax.Array],
+            tokens: jax.Array) -> jax.Array:
+    """Next-token cross-entropy. tokens: i32 (B, N+1); predicts [1:] from [:-1]."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, flat_params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

@@ -1,0 +1,113 @@
+"""L2 — training step (AdamW + cosine warmup/decay) lowered into the HLO.
+
+The optimizer lives *inside* the artifact so the Rust coordinator only shuttles
+opaque state buffers: state = params ++ adam_m ++ adam_v (flat, in
+param_specs order).  One `train_step(state..., tokens, step)` call returns
+`(loss, state'...)`; Rust donates the old state and keeps the new one.
+
+The schedule mirrors the paper's LLM setup (§5.2): cosine warmup + decay
+between lr_min and lr_max.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig, init_params, loss_fn, param_specs
+
+__all__ = ["TrainConfig", "init_state", "train_step", "eval_loss",
+           "lr_at_step", "state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule hyper-parameters (baked into the artifact)."""
+
+    lr_max: float = 1e-3       # paper §5.2
+    lr_min: float = 5e-5       # paper §5.2
+    warmup_steps: int = 50
+    total_steps: int = 500
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at_step(tc: TrainConfig, step):
+    """Cosine warmup→decay. `step` may be a traced i32 scalar."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = tc.lr_max * s / max(tc.warmup_steps, 1)
+    span = max(tc.total_steps - tc.warmup_steps, 1)
+    frac = jnp.clip((s - tc.warmup_steps) / span, 0.0, 1.0)
+    cos = tc.lr_min + 0.5 * (tc.lr_max - tc.lr_min) * (
+        1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < tc.warmup_steps, warm, cos)
+
+
+def state_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """(name, shape) for the full training state: params, then m, then v."""
+    ps = param_specs(cfg)
+    return (ps + [("m." + n, s) for n, s in ps]
+            + [("v." + n, s) for n, s in ps])
+
+
+def init_state(cfg: ModelConfig, seed) -> list[jax.Array]:
+    """Fresh params + zeroed Adam moments (flat, state_specs order)."""
+    params = init_params(cfg, seed)
+    zeros = [jnp.zeros_like(p) for p in params]
+    return params + zeros + [jnp.zeros_like(p) for p in params]
+
+
+def _split_state(cfg: ModelConfig, state: list[jax.Array]):
+    n = len(param_specs(cfg))
+    return state[:n], state[n:2 * n], state[2 * n:]
+
+
+_NO_DECAY_SUFFIXES = (".scale", ".bias", ".b1", ".b2")
+
+
+def train_step(cfg: ModelConfig, tc: TrainConfig, state: list[jax.Array],
+               tokens: jax.Array, step: jax.Array):
+    """One AdamW step.  Returns (loss, new_state).
+
+    tokens: i32 (B, N+1); step: i32 scalar (0-based).
+    Gradient-norm clipping at tc.grad_clip; decoupled weight decay applied to
+    matrix weights only (standard GPT practice).
+    """
+    params, m, v = _split_state(cfg, state)
+    loss, grads = jax.value_and_grad(
+        lambda ps: loss_fn(cfg, ps, tokens))(params)
+
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-12))
+    grads = [g * scale for g in grads]
+
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    lr = lr_at_step(tc, step)
+    bc1 = 1.0 - tc.beta1 ** t
+    bc2 = 1.0 - tc.beta2 ** t
+
+    names = [n for n, _ in param_specs(cfg)]
+    new_p, new_m, new_v = [], [], []
+    for name, p, g, mi, vi in zip(names, params, grads, m, v):
+        mi = tc.beta1 * mi + (1.0 - tc.beta1) * g
+        vi = tc.beta2 * vi + (1.0 - tc.beta2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + tc.eps)
+        if not name.endswith(_NO_DECAY_SUFFIXES):
+            upd = upd + tc.weight_decay * p
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+
+    return loss, new_p + new_m + new_v
+
+
+def eval_loss(cfg: ModelConfig, params: list[jax.Array],
+              tokens: jax.Array) -> jax.Array:
+    """Held-out cross-entropy (no optimizer)."""
+    return loss_fn(cfg, params, tokens)

@@ -1,0 +1,25 @@
+"""Shared fixtures for the kernel / model test suite."""
+
+import jax
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_qkv(key, bh, n, d, normalized=True):
+    """Random (q, k, v) triple; q, k row-normalized by default (paper §3.3)."""
+    import jax.numpy as jnp
+    from compile.kernels.linear_attention import normalize_qk
+
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, n, d), jnp.float32)
+    k = jax.random.normal(kk, (bh, n, d), jnp.float32)
+    v = jax.random.normal(kv, (bh, n, d), jnp.float32)
+    if normalized:
+        q, k = normalize_qk(q, k)
+    return q, k, v

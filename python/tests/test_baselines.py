@@ -1,0 +1,116 @@
+"""Correctness of the comparator implementations (paper §5 baselines)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.baselines import (
+    flash_softmax, gated_la_chunkwise, gated_la_recurrent, quadratic_la,
+    softmax_attention, spec_dec_la)
+from compile.kernels.ref import ref_la, ref_softmax
+
+from .conftest import make_qkv
+
+
+def test_quadratic_la_is_oracle(rng):
+    q, k, v = make_qkv(rng, 2, 64, 16)
+    np.testing.assert_allclose(quadratic_la(q, k, v), ref_la(q, k, v),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_softmax_attention_is_oracle(rng):
+    q, k, v = make_qkv(jax.random.fold_in(rng, 1), 2, 64, 16,
+                       normalized=False)
+    np.testing.assert_allclose(softmax_attention(q, k, v),
+                               ref_softmax(q, k, v), atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64, 96])
+def test_flash_softmax_matches_direct(rng, chunk):
+    """Online-softmax streaming must be exact (up to fp) for any chunking."""
+    q, k, v = make_qkv(jax.random.fold_in(rng, 2), 2, 96, 16,
+                       normalized=False)
+    np.testing.assert_allclose(flash_softmax(q, k, v, chunk=chunk),
+                               ref_softmax(q, k, v), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_softmax_first_row(rng):
+    """Row 0 attends only to itself → output is exactly v_0."""
+    q, k, v = make_qkv(jax.random.fold_in(rng, 3), 1, 64, 8,
+                       normalized=False)
+    o = flash_softmax(q, k, v, chunk=16)
+    np.testing.assert_allclose(o[:, 0], v[:, 0], atol=1e-5)
+
+
+def test_spec_dec_la_linear_kernel(rng):
+    """f(x)=b·x: equals the a=0 direct form where the denominator is safe."""
+    q, k, v = make_qkv(jax.random.fold_in(rng, 4), 2, 64, 16)
+    got = spec_dec_la(q, k, v)
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) * jnp.tril(
+        jnp.ones((64, 64), jnp.float32))
+    g = jnp.sum(scores, axis=-1, keepdims=True)
+    safe = jnp.abs(g[..., 0]) >= 1e-6
+    want = jnp.einsum("bnm,bmd->bnd", scores, v) / g
+    np.testing.assert_allclose(got[safe], want[safe], atol=1e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+def test_gla_chunkwise_matches_recurrent(rng, chunk):
+    q, k, v = make_qkv(jax.random.fold_in(rng, 5), 2, 64, 16)
+    np.testing.assert_allclose(gated_la_chunkwise(q, k, v, chunk=chunk),
+                               gated_la_recurrent(q, k, v),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_gla_gamma_one_is_unnormalized_la(rng):
+    """With γ = 1 the gate never forgets → plain (unnormalized) linear attn."""
+    q, k, v = make_qkv(jax.random.fold_in(rng, 6), 1, 32, 8)
+    gamma = jnp.ones((8,), jnp.float32)
+    got = gated_la_chunkwise(q, k, v, gamma=gamma, chunk=8)
+    scores = jnp.einsum("bnd,bmd->bnm", q, k) * jnp.tril(
+        jnp.ones((32, 32), jnp.float32))
+    want = jnp.einsum("bnm,bmd->bnd", scores, v)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_gla_decay_forgets(rng):
+    """With strong decay, early tokens must stop influencing late outputs."""
+    q, k, v = make_qkv(jax.random.fold_in(rng, 7), 1, 128, 8)
+    gamma = jnp.full((8,), 0.5, jnp.float32)
+    o1 = gated_la_recurrent(q, k, v, gamma=gamma)
+    v2 = v.at[:, 0].set(v[:, 0] + 100.0)
+    o2 = gated_la_recurrent(q, k, v2, gamma=gamma)
+    # influence of token 0 on token 127 decayed by 0.5^127 ≈ 0
+    assert float(jnp.max(jnp.abs(o1[:, -1] - o2[:, -1]))) < 1e-3
+    assert float(jnp.max(jnp.abs(o1[:, 1] - o2[:, 1]))) > 1.0
+
+
+def test_all_baselines_causal(rng):
+    """No baseline may leak future tokens into past outputs."""
+    q, k, v = make_qkv(jax.random.fold_in(rng, 8), 1, 64, 16)
+    half = 32
+    impls = [
+        lambda q_, k_, v_: quadratic_la(q_, k_, v_),
+        lambda q_, k_, v_: softmax_attention(q_, k_, v_),
+        lambda q_, k_, v_: flash_softmax(q_, k_, v_, chunk=16),
+        lambda q_, k_, v_: gated_la_chunkwise(q_, k_, v_, chunk=16),
+        lambda q_, k_, v_: spec_dec_la(q_, k_, v_),
+    ]
+    v2 = v.at[:, half:].set(v[:, half:] * -2.0 + 1.0)
+    for impl in impls:
+        o1 = impl(q, k, v)
+        o2 = impl(q, k, v2)
+        np.testing.assert_allclose(o1[:, :half], o2[:, :half],
+                                   atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(logn=st.integers(3, 7), d=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_flash_hypothesis(logn, d, seed):
+    n = 2 ** logn
+    q, k, v = make_qkv(jax.random.PRNGKey(seed), 1, n, d, normalized=False)
+    np.testing.assert_allclose(flash_softmax(q, k, v, chunk=min(32, n)),
+                               ref_softmax(q, k, v), atol=5e-5, rtol=5e-5)

@@ -1,0 +1,117 @@
+"""Train-step semantics: AdamW updates, schedule, loss descent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, param_specs
+from compile.train import (TrainConfig, eval_loss, init_state, lr_at_step,
+                           state_specs, train_step)
+
+CFG = ModelConfig(vocab_size=64, d_model=32, n_heads=2, n_layers=1,
+                  n_ctx=32, chunk=8)
+TC = TrainConfig(warmup_steps=5, total_steps=50)
+
+
+def batch(key, b=2):
+    return jax.random.randint(key, (b, CFG.n_ctx + 1), 0, CFG.vocab_size)
+
+
+def test_state_specs_structure():
+    ps = param_specs(CFG)
+    ss = state_specs(CFG)
+    assert len(ss) == 3 * len(ps)
+    assert ss[len(ps)][0] == "m." + ps[0][0]
+    assert ss[2 * len(ps)][0] == "v." + ps[0][0]
+
+
+def test_init_state_moments_zero():
+    state = init_state(CFG, 0)
+    n = len(param_specs(CFG))
+    for m in state[n:]:
+        assert float(jnp.max(jnp.abs(m))) == 0.0
+
+
+def test_lr_schedule_matches_rust_mirror():
+    """Spot-check values the Rust CosineSchedule tests also pin down."""
+    tc = TrainConfig(lr_max=1e-3, lr_min=5e-5, warmup_steps=10,
+                     total_steps=100)
+    assert float(lr_at_step(tc, 0)) == 0.0
+    np.testing.assert_allclose(float(lr_at_step(tc, 5)), 5e-4, rtol=1e-6)
+    np.testing.assert_allclose(float(lr_at_step(tc, 10)), 1e-3, rtol=1e-6)
+    np.testing.assert_allclose(float(lr_at_step(tc, 100)), 5e-5, rtol=1e-5)
+    # monotone decay after warmup
+    lrs = [float(lr_at_step(tc, s)) for s in range(10, 101, 5)]
+    assert all(a >= b - 1e-12 for a, b in zip(lrs, lrs[1:]))
+
+
+def test_single_step_reduces_loss_on_same_batch(rng):
+    state = init_state(CFG, 0)
+    b = batch(rng)
+    step = jax.jit(lambda s, t, i: train_step(CFG, TC, s, t, i))
+    loss0, state = step(state, b, 0)
+    # a few steps on the same batch must overfit it
+    for i in range(1, 6):
+        loss, state = step(state, b, i)
+    assert float(loss) < float(loss0)
+
+
+def test_warmup_step0_freezes_params(rng):
+    """lr(0) = 0 during warmup — step 0 must update moments, not params."""
+    state = init_state(CFG, 0)
+    n = len(param_specs(CFG))
+    _, new_state = jax.jit(
+        lambda s, t: train_step(CFG, TC, s, t, 0))(state, batch(rng))
+    assert float(jnp.max(jnp.abs(new_state[0] - state[0]))) == 0.0
+    assert float(jnp.max(new_state[2 * n])) > 0  # v moment accumulated
+
+
+def test_update_changes_params_but_not_shapes(rng):
+    state = init_state(CFG, 0)
+    shapes = [tuple(s.shape) for s in state]
+    loss, new_state = jax.jit(
+        lambda s, t: train_step(CFG, TC, s, t, 3))(state, batch(rng))
+    assert [tuple(s.shape) for s in new_state] == shapes
+    n = len(param_specs(CFG))
+    # params moved
+    assert float(jnp.max(jnp.abs(new_state[0] - state[0]))) > 0
+    # second moment became positive somewhere
+    assert float(jnp.max(new_state[2 * n])) > 0
+
+
+def test_grad_clip_bounds_update(rng):
+    """With a tiny clip, the parameter step is bounded by ~lr·(1+wd·|p|)."""
+    tc = TrainConfig(warmup_steps=0, total_steps=10, grad_clip=1e-3)
+    state = init_state(CFG, 0)
+    _, new_state = jax.jit(
+        lambda s, t: train_step(CFG, tc, s, t, 5))(state, batch(rng))
+    lr = float(lr_at_step(tc, 5))
+    delta = float(jnp.max(jnp.abs(new_state[0] - state[0])))
+    assert delta <= lr * 1.5, (delta, lr)
+
+
+def test_eval_loss_matches_loss_fn(rng):
+    state = init_state(CFG, 3)
+    n = len(param_specs(CFG))
+    b = batch(rng)
+    from compile.model import loss_fn
+    np.testing.assert_allclose(
+        float(eval_loss(CFG, state[:n], b)),
+        float(loss_fn(CFG, state[:n], b)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("attn", ["ours", "softmax"])
+def test_short_training_descends(rng, attn):
+    cfg = ModelConfig(**{**CFG.__dict__, "attn": attn})
+    # random tokens carry no structure: the model must memorize the 3 batches,
+    # which needs a hotter LR than the paper schedule at 15 steps
+    tc = TrainConfig(warmup_steps=2, total_steps=20, lr_max=3e-3)
+    state = init_state(cfg, 0)
+    step = jax.jit(lambda s, t, i: train_step(cfg, tc, s, t, i))
+    losses = []
+    for i in range(15):
+        b = batch(jax.random.fold_in(rng, i % 3))
+        loss, state = step(state, b, i)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.2, losses

@@ -1,0 +1,38 @@
+//! Shared helpers for the bench binaries (plain `harness = false` mains —
+//! criterion is unavailable in this offline environment, so each bench is a
+//! small self-contained harness printing the paper's rows/series).
+
+use repro::bench::SweepRunner;
+use repro::runtime::Engine;
+
+/// Parse `--quick` style flags from the bench argv (cargo bench passes
+/// `--bench`; ignore it).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+/// Engine + runner tuned for benching.
+pub fn runner(engine: &Engine, reps: usize) -> SweepRunner<'_> {
+    let mut r = SweepRunner::new(engine);
+    r.reps = reps;
+    r.warmup = 1;
+    r
+}
+
+/// Cap on N for quadratic-*time* implementations so a single-core bench run
+/// stays bounded (memory caps are enforced by the artifact set itself).
+pub const QUAD_TIME_N_CAP: usize = 4096;
+pub const FLASH_TIME_N_CAP: usize = 8192;
+/// Interpret-mode Pallas pays a large per-grid-step dispatch cost on CPU
+/// (structural path, not a perf proxy — DESIGN.md); `ours_scan` carries the
+/// full-range wall-clock series for the same algorithm.
+pub const INTERPRET_TIME_N_CAP: usize = 8192;
+
+pub fn time_cap(impl_name: &str) -> usize {
+    match impl_name {
+        "quadratic" | "specdec" | "softmax" => QUAD_TIME_N_CAP,
+        "flash" => FLASH_TIME_N_CAP,
+        "ours" => INTERPRET_TIME_N_CAP,
+        _ => usize::MAX,
+    }
+}

@@ -1,0 +1,31 @@
+//! Fig 2: forward-pass time & memory scaling vs N (D=128) and vs D (N=4096),
+//! for every implementation — measured on CPU PJRT, with the analytic A6000
+//! model series alongside.
+
+mod common;
+
+use repro::bench::report::{sweep_csv, sweep_markdown};
+use repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::discover()?;
+    let reps = if common::quick_mode() { 2 } else { 3 };
+    let runner = common::runner(&engine, reps);
+
+    let mut points = Vec::new();
+    for impl_name in ["ours", "ours_scan", "gated", "quadratic", "specdec", "flash", "softmax"] {
+        let cap = common::time_cap(impl_name);
+        for (name, meta) in engine.manifest.layer_sweep("layer_fwd", impl_name) {
+            if meta.n.unwrap_or(0) > cap || !runner.fits(name) {
+                continue;
+            }
+            eprintln!("fig2: {name}");
+            points.push(runner.run_artifact(name)?);
+        }
+    }
+    println!("{}", sweep_markdown("Fig 2 — forward pass", &points));
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig2_fwd.csv", sweep_csv(&points))?;
+    eprintln!("wrote bench_out/fig2_fwd.csv");
+    Ok(())
+}

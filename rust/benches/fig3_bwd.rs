@@ -1,0 +1,36 @@
+//! Fig 3: backward-pass (fwd+bwd vjp) time & memory scaling vs N and D.
+//! "Ours" exercises the analytical-gradient kernels (Eq. 16-21); baselines
+//! autodiff through their forward graphs, reproducing the O(N·D²)-residency
+//! trap the paper describes for causal LA under autodiff.
+
+mod common;
+
+use repro::bench::report::{sweep_csv, sweep_markdown};
+use repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::discover()?;
+    let reps = if common::quick_mode() { 2 } else { 3 };
+    let runner = common::runner(&engine, reps);
+
+    let mut points = Vec::new();
+    for impl_name in ["ours", "ours_scan", "gated", "quadratic", "specdec", "flash", "softmax"] {
+        // backward is ~3× forward cost: halve the caps
+        let cap = match impl_name {
+            "ours_scan" | "gated" => usize::MAX,
+            other => common::time_cap(other).saturating_div(2).max(2048),
+        };
+        for (name, meta) in engine.manifest.layer_sweep("layer_fwdbwd", impl_name) {
+            if meta.n.unwrap_or(0) > cap || !runner.fits(name) {
+                continue;
+            }
+            eprintln!("fig3: {name}");
+            points.push(runner.run_artifact(name)?);
+        }
+    }
+    println!("{}", sweep_markdown("Fig 3 — forward+backward pass", &points));
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig3_bwd.csv", sweep_csv(&points))?;
+    eprintln!("wrote bench_out/fig3_bwd.csv");
+    Ok(())
+}

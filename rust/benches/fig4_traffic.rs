@@ -1,0 +1,33 @@
+//! Fig 4: ratio of data-movement time to total runtime (left panel) and
+//! total data-movement time (right panel) for the LA implementations —
+//! fully analytic (DESIGN.md §Substitutions documents why), plus the Pallas
+//! VMEM/MXU §Hardware-Adaptation estimates.
+
+use repro::bench::report::{fig4_csv, fig4_markdown, fmt_bytes};
+use repro::simulator::{DeviceSpec, TrafficModel, VmemModel};
+
+fn main() -> anyhow::Result<()> {
+    let model = TrafficModel::new(DeviceSpec::a6000());
+    let ns = [2048, 4096, 8192, 16384, 32768];
+    println!("## Fig 4 — data movement (analytic A6000, BH=64 D=128)\n");
+    println!("{}", fig4_markdown(&model, &ns));
+
+    std::fs::create_dir_all("bench_out").ok();
+    std::fs::write("bench_out/fig4_traffic.csv", fig4_csv(&model, &ns))?;
+    eprintln!("wrote bench_out/fig4_traffic.csv");
+
+    println!("\n## Pallas kernel on-chip model (TPU §Hardware-Adaptation)\n");
+    println!("| C | D | fwd VMEM | bwd VMEM | 16MiB occupancy | MXU util |");
+    println!("|---|---|---|---|---|---|");
+    for (c, d) in [(64, 64), (128, 128), (128, 256), (128, 512)] {
+        let vm = VmemModel::new(c, d);
+        println!(
+            "| {c} | {d} | {} | {} | {:.1}% | {:.0}% |",
+            fmt_bytes(vm.forward_bytes() as f64),
+            fmt_bytes(vm.backward_bytes() as f64),
+            vm.forward_occupancy(16 << 20) * 100.0,
+            vm.mxu_utilization() * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Fig 5 (bench form): per-step training wall-clock for each attention
+//! implementation on the tiny LM — the end-to-end speedup comparison.
+//! (The full learning curves come from `examples/train_lm.rs`.)
+
+mod common;
+
+use std::time::Instant;
+
+use repro::coordinator::config::{DataSection, OutputSection, TrainSection};
+use repro::coordinator::{RunConfig, Trainer};
+use repro::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::discover()?;
+    let steps = if common::quick_mode() { 4 } else { 10 };
+    println!("| attn | preset | step p50 | tok/s |");
+    println!("|---|---|---|---|");
+    for attn in ["ours", "gated", "softmax"] {
+        let cfg = RunConfig {
+            train: TrainSection {
+                preset: "tiny".into(),
+                attn: attn.into(),
+                steps,
+                eval_every: 0,
+                ckpt_every: 0,
+                seed: 0,
+            },
+            data: DataSection { corpus_bytes: 1 << 20, val_frac: 0.05 },
+            output: OutputSection { dir: "bench_out/fig5_runs".into() },
+        };
+        let trainer = Trainer::new(&engine, cfg)?;
+        let (_tok, ds) = trainer.build_dataset()?;
+        let mut batcher = repro::data::Batcher::new(
+            &ds,
+            repro::data::Split::Train,
+            trainer.batch_size(),
+            0,
+        )?;
+        let mut state = trainer.init_state()?;
+        let mut times = Vec::new();
+        for step in 0..steps {
+            let batch = batcher.next_batch()?;
+            let t0 = Instant::now();
+            let (_loss, new_state) = trainer.step(state, &batch, step)?;
+            times.push(t0.elapsed().as_secs_f64());
+            state = new_state;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = times[times.len() / 2];
+        let tokens = trainer.batch_size() * (trainer.seq_len() + 1);
+        println!(
+            "| {attn} | tiny | {:.1} ms | {:.0} |",
+            p50 * 1e3,
+            tokens as f64 / p50
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 1: complexity/latency summary.
+//!
+//! Analytic columns reproduce the paper's exact point (B=4, H=16, D=128,
+//! N=10⁴ on an A6000); the measured column runs the same algorithms through
+//! the CPU-PJRT runtime at the largest host-feasible shape so the *ordering*
+//! is validated by real execution.
+
+mod common;
+
+use repro::bench::report::{fmt_bytes, fmt_time, table1_markdown};
+use repro::runtime::Engine;
+use repro::simulator::{DeviceSpec, Impl, TrafficModel};
+
+fn main() -> anyhow::Result<()> {
+    let model = TrafficModel::new(DeviceSpec::a6000());
+    println!("## Table 1 — analytic A6000 model (B=4 H=16 D=128 N=10⁴)\n");
+    println!("{}", table1_markdown(&model));
+
+    println!("\n## Table 1 — measured (CPU PJRT, BH=4 D=128, N=4096)\n");
+    let engine = Engine::discover()?;
+    let runner = common::runner(&engine, if common::quick_mode() { 2 } else { 5 });
+    println!("| impl | N | fwd p50 (CPU) | model fwd (A6000) | model memory |");
+    println!("|---|---|---|---|---|");
+    for impl_name in ["softmax", "flash", "specdec", "gated", "ours"] {
+        let n = 4096usize;
+        let name = format!("layer_{impl_name}_fwd_n{n}_d128");
+        if engine.manifest.get(&name).is_err() {
+            continue;
+        }
+        let p = runner.run_artifact(&name)?;
+        let imp = Impl::from_name(impl_name).unwrap();
+        let rep = model.report(imp, 64, 10_000, 128);
+        println!(
+            "| {impl_name} | {n} | {} | {} | {} |",
+            fmt_time(p.cpu_s.p50),
+            fmt_time(rep.total_s),
+            fmt_bytes(rep.mem_bytes),
+        );
+    }
+    Ok(())
+}

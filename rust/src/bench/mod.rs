@@ -1,0 +1,16 @@
+//! Benchmark harness: regenerate every table and figure of the paper's §5.
+//!
+//! - [`timing`] — warmup + trimmed-mean measurement of artifact execution;
+//! - [`sweep`] — drive the per-(impl, N, D) layer artifacts (Figs 2-3, Table 1);
+//! - [`report`] — markdown/CSV emitters matching the paper's rows and series.
+//!
+//! Memory columns are analytic (the [`crate::simulator`] model): a CPU host
+//! cannot observe GPU residency, but the per-implementation formulas are
+//! exact element counts of each algorithm's live buffers.
+
+pub mod report;
+pub mod sweep;
+pub mod timing;
+
+pub use sweep::{SweepPoint, SweepRunner};
+pub use timing::{measure, TimingStats};

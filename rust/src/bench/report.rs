@@ -1,0 +1,197 @@
+//! Report emitters: markdown tables and CSV series matching the paper's
+//! figures/tables (consumed by EXPERIMENTS.md and any plotting tool).
+
+use std::fmt::Write as _;
+
+use crate::simulator::{Impl, TrafficModel, TrafficReport};
+
+use super::sweep::SweepPoint;
+
+/// Human units.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else {
+        format!("{:.1} KB", b / 1e3)
+    }
+}
+
+/// Fig-2/3 CSV: one row per measured point.
+pub fn sweep_csv(points: &[SweepPoint]) -> String {
+    let mut out = String::from(
+        "impl,kind,bh,n,d,chunk,cpu_s_p50,cpu_s_trimmed,model_total_s,model_move_s,model_bytes,mem_bytes\n",
+    );
+    for p in points {
+        let _ = writeln!(
+            out,
+            "{},{},{},{},{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
+            p.impl_name,
+            p.kind,
+            p.bh,
+            p.n,
+            p.d,
+            p.chunk,
+            p.cpu_s.p50,
+            p.cpu_s.trimmed_mean,
+            p.model_total_s,
+            p.model_move_s,
+            p.model_bytes,
+            p.mem_bytes
+        );
+    }
+    out
+}
+
+/// Fig-2/3 markdown: series grouped per implementation, one row per N (or D).
+pub fn sweep_markdown(title: &str, points: &[SweepPoint]) -> String {
+    let mut out = format!("### {title}\n\n");
+    let _ = writeln!(
+        out,
+        "| impl | N | D | C | CPU p50 | model (A6000) | model move | mem (model) |"
+    );
+    let _ = writeln!(out, "|---|---|---|---|---|---|---|---|");
+    for p in points {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {} | {} |",
+            p.impl_name,
+            p.n,
+            p.d,
+            p.chunk,
+            fmt_time(p.cpu_s.p50),
+            fmt_time(p.model_total_s),
+            fmt_time(p.model_move_s),
+            fmt_bytes(p.mem_bytes)
+        );
+    }
+    out
+}
+
+/// Table 1: the complexity/latency summary at the paper's point
+/// (B=4, H=16 → BH=64, D=128, N=10⁴), fully analytic.
+pub fn table1_markdown(model: &TrafficModel) -> String {
+    let (bh, n, d) = (64, 10_000, 128);
+    let rows: &[(&str, &str, &str, &str, Impl)] = &[
+        ("Regular Attention", "exp x", "O(N²D)", "O(N²+ND)", Impl::Softmax),
+        ("FlashAttention-2", "exp x", "O(N²D)", "O(ND)", Impl::Flash),
+        ("Spec. Decoding LA", "bx", "O(ND²)", "O(ND²)", Impl::SpecDec),
+        ("Gated LA", "bx", "O(ND²)", "O(ND)", Impl::Gated),
+        ("Our LA", "a+bx", "O(ND²)", "O(ND)", Impl::Ours),
+    ];
+    let mut out = String::from(
+        "| Mechanism | Kernel | Time | Memory (causal) | Fwd time (model) | Fwd memory (model) |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|\n");
+    for (name, kernel, time_c, mem_c, imp) in rows {
+        let r: TrafficReport = model.report(*imp, bh, n, d);
+        let _ = writeln!(
+            out,
+            "| {name} | {kernel} | {time_c} | {mem_c} | {} | {} |",
+            fmt_time(r.total_s),
+            fmt_bytes(r.mem_bytes),
+        );
+    }
+    out
+}
+
+/// Fig-4 markdown: movement ratio + movement time per LA implementation
+/// across sequence lengths.
+pub fn fig4_markdown(model: &TrafficModel, ns: &[usize]) -> String {
+    let (bh, d) = (64, 128);
+    let mut out = String::from("| impl |");
+    for n in ns {
+        let _ = write!(out, " ratio@N={n} |");
+    }
+    for n in ns {
+        let _ = write!(out, " move@N={n} |");
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in 0..ns.len() * 2 {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    for imp in Impl::la_impls() {
+        let _ = write!(out, "| {} |", imp.name());
+        for &n in ns {
+            let r = model.report(imp, bh, n, d);
+            let _ = write!(out, " {:.0}% |", r.move_ratio() * 100.0);
+        }
+        for &n in ns {
+            let r = model.report(imp, bh, n, d);
+            let _ = write!(out, " {} |", fmt_time(r.move_s));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig-4 CSV.
+pub fn fig4_csv(model: &TrafficModel, ns: &[usize]) -> String {
+    let (bh, d) = (64, 128);
+    let mut out = String::from("impl,n,move_ratio,move_s,total_s,bytes\n");
+    for imp in Impl::la_impls() {
+        for &n in ns {
+            let r = model.report(imp, bh, n, d);
+            let _ = writeln!(
+                out,
+                "{},{},{:.4},{:.6e},{:.6e},{:.6e}",
+                imp.name(),
+                n,
+                r.move_ratio(),
+                r.move_s,
+                r.total_s,
+                r.bytes
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::DeviceSpec;
+
+    #[test]
+    fn units() {
+        assert_eq!(fmt_time(2.0), "2.00 s");
+        assert_eq!(fmt_time(0.0025), "2.50 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.5 µs");
+        assert_eq!(fmt_bytes(1.5e9), "1.50 GB");
+        assert_eq!(fmt_bytes(2e6), "2.00 MB");
+    }
+
+    #[test]
+    fn table1_contains_all_rows() {
+        let m = TrafficModel::new(DeviceSpec::a6000());
+        let t = table1_markdown(&m);
+        for name in ["Regular Attention", "FlashAttention-2", "Gated LA", "Our LA"] {
+            assert!(t.contains(name), "missing {name}");
+        }
+        assert_eq!(t.lines().count(), 2 + 5);
+    }
+
+    #[test]
+    fn fig4_markdown_and_csv_shape() {
+        let m = TrafficModel::new(DeviceSpec::a6000());
+        let ns = [2048, 4096];
+        let md = fig4_markdown(&m, &ns);
+        assert!(md.contains("ours"));
+        assert!(md.contains("quadratic"));
+        let csv = fig4_csv(&m, &ns);
+        assert_eq!(csv.lines().count(), 1 + 4 * ns.len());
+    }
+}

@@ -1,0 +1,145 @@
+//! Sweep driver: execute the per-(impl, N, D) layer artifacts and join the
+//! measured wall-clock with the analytic traffic/memory model.
+
+use anyhow::Result;
+use xla::Literal;
+
+use crate::runtime::{Engine, Tensor};
+use crate::simulator::{DeviceSpec, Impl, TrafficModel};
+
+use super::timing::{measure, TimingStats};
+
+/// One measured point of a Fig-2/3 series.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub impl_name: String,
+    pub kind: String,
+    pub bh: usize,
+    pub n: usize,
+    pub d: usize,
+    /// Sequence chunk length of chunked implementations (0 = n/a).
+    pub chunk: usize,
+    /// Measured CPU-PJRT execution time (trimmed mean, seconds).
+    pub cpu_s: TimingStats,
+    /// Analytic A6000 model for the same point.
+    pub model_total_s: f64,
+    pub model_move_s: f64,
+    pub model_bytes: f64,
+    /// Analytic peak memory (bytes) — the paper's memory panels.
+    pub mem_bytes: f64,
+}
+
+/// Runs layer artifacts for a set of implementations.
+pub struct SweepRunner<'e> {
+    engine: &'e Engine,
+    model: TrafficModel,
+    pub warmup: usize,
+    pub reps: usize,
+    /// Skip artifacts whose input+output footprint exceeds this many bytes
+    /// (protects small hosts from the quadratic baselines at large N).
+    pub max_bytes: usize,
+}
+
+impl<'e> SweepRunner<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        Self {
+            engine,
+            model: TrafficModel::new(DeviceSpec::a6000()),
+            warmup: 1,
+            reps: 5,
+            max_bytes: 8 << 30,
+        }
+    }
+
+    /// Deterministic inputs for a layer artifact: normalized q, k; plain v
+    /// (and upstream gradient for fwdbwd artifacts).
+    fn inputs(&self, name: &str) -> Result<Vec<Literal>> {
+        let meta = self.engine.manifest.get(name)?;
+        let mut lits = Vec::with_capacity(meta.inputs.len());
+        for (i, spec) in meta.inputs.iter().enumerate() {
+            let mut t = Tensor::randn(spec.shape.clone(), 0x5EED + i as u64);
+            if i < 2 {
+                t.normalize_rows(); // q, k — paper §3.3
+            }
+            lits.push(t.to_literal()?);
+        }
+        Ok(lits)
+    }
+
+    /// Measure one artifact; `kind` is `layer_fwd` or `layer_fwdbwd`.
+    pub fn run_artifact(&self, name: &str) -> Result<SweepPoint> {
+        let exe = self.engine.load(name)?;
+        let meta = exe.meta.clone();
+        let lits = self.inputs(name)?;
+        let stats = measure(self.warmup, self.reps, || {
+            let (_out, secs) = exe.run_timed(&lits)?;
+            Ok(secs)
+        })?;
+        let impl_name = meta.implementation().unwrap_or("?").to_string();
+        let (bh, n, d) = (
+            meta.bh.unwrap_or(0),
+            meta.n.unwrap_or(0),
+            meta.d.unwrap_or(0),
+        );
+        let imp = Impl::from_name(&impl_name).unwrap_or(Impl::Ours);
+        let rep = self.model.report(imp, bh, n, d);
+        // backward ≈ 2× forward traffic (two scans) in the analytic model
+        let bwd_scale = if meta.kind == "layer_fwdbwd" { 3.0 } else { 1.0 };
+        Ok(SweepPoint {
+            impl_name,
+            kind: meta.kind.clone(),
+            bh,
+            n,
+            d,
+            chunk: meta.chunk.unwrap_or(0),
+            cpu_s: stats,
+            model_total_s: rep.total_s * bwd_scale,
+            model_move_s: rep.move_s * bwd_scale,
+            model_bytes: rep.bytes * bwd_scale,
+            mem_bytes: self.model.memory_bytes(imp, bh, n, d) * bwd_scale.min(2.0),
+        })
+    }
+
+    /// Whether an artifact fits the host budget.
+    pub fn fits(&self, name: &str) -> bool {
+        self.engine
+            .manifest
+            .get(name)
+            .map(|m| {
+                let io: usize = m
+                    .inputs
+                    .iter()
+                    .chain(m.outputs.iter())
+                    .map(|s| s.size_bytes())
+                    .sum();
+                // quadratic intermediates dominate the real footprint
+                let intermediate = match (m.implementation(), m.n) {
+                    (Some("quadratic" | "specdec" | "softmax"), Some(n)) => {
+                        m.bh.unwrap_or(1) * n * n * 4
+                    }
+                    _ => 0,
+                };
+                io + intermediate < self.max_bytes
+            })
+            .unwrap_or(false)
+    }
+
+    /// Run the full sweep for one (kind, impl) series, ordered by (N, D).
+    pub fn run_series(&self, kind: &str, impl_name: &str) -> Result<Vec<SweepPoint>> {
+        let names: Vec<String> = self
+            .engine
+            .manifest
+            .layer_sweep(kind, impl_name)
+            .iter()
+            .map(|(name, _)| (*name).clone())
+            .collect();
+        let mut out = Vec::new();
+        for name in names {
+            if !self.fits(&name) {
+                continue;
+            }
+            out.push(self.run_artifact(&name)?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,98 @@
+//! Robust timing: warmup, repetitions, trimmed statistics.
+
+/// Summary statistics over repeated measurements (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct TimingStats {
+    pub reps: usize,
+    pub mean: f64,
+    pub trimmed_mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TimingStats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Option<Self> {
+        if samples.is_empty() {
+            return None;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        // drop top/bottom ≥10% (at least one sample each side when n ≥ 3)
+        let cut = if n >= 3 { (n / 10).max(1) } else { 0 };
+        let core = &samples[cut..n - cut];
+        let trimmed = core.iter().sum::<f64>() / core.len() as f64;
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        Some(Self {
+            reps: n,
+            mean,
+            trimmed_mean: trimmed,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: samples[0],
+            max: samples[n - 1],
+        })
+    }
+
+    /// Relative spread — the harness aims for < 5% jitter (DESIGN.md §Perf).
+    pub fn jitter(&self) -> f64 {
+        if self.p50 == 0.0 {
+            0.0
+        } else {
+            (self.p95 - self.p50) / self.p50
+        }
+    }
+}
+
+/// Measure `f` with `warmup` throwaway calls and `reps` samples.
+pub fn measure<F: FnMut() -> anyhow::Result<f64>>(
+    warmup: usize,
+    reps: usize,
+    mut f: F,
+) -> anyhow::Result<TimingStats> {
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        samples.push(f()?);
+    }
+    TimingStats::from_samples(samples)
+        .ok_or_else(|| anyhow::anyhow!("no samples collected"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_samples() {
+        let s = TimingStats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 100.0]).unwrap();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.p50, 3.0);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+        // trimmed mean must be robust to the 100.0 outlier vs the raw mean
+        assert!(s.trimmed_mean < s.mean);
+    }
+
+    #[test]
+    fn empty_is_none() {
+        assert!(TimingStats::from_samples(vec![]).is_none());
+    }
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let s = measure(2, 5, || {
+            calls += 1;
+            Ok(0.001)
+        })
+        .unwrap();
+        assert_eq!(calls, 7);
+        assert_eq!(s.reps, 5);
+        assert!(s.jitter() < 1e-9);
+    }
+}

@@ -1,0 +1,198 @@
+//! Checkpoints: the flat training state (params ++ adam_m ++ adam_v) on disk.
+//!
+//! Format (little-endian, version-tagged):
+//!   magic "RPRCKPT1" | u32 n_tensors | per tensor:
+//!     u8 dtype (0=f32, 1=i32) | u32 rank | u64 dims[rank] | raw data
+//! followed by a JSON trailer (u64 length + bytes) carrying run metadata.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 8] = b"RPRCKPT1";
+
+/// Run metadata stored alongside the tensors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub artifact_tag: String,
+    pub step: usize,
+    pub loss: f32,
+    pub seed: u64,
+}
+
+impl CheckpointMeta {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("artifact_tag", Json::str(self.artifact_tag.clone())),
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss as f64)),
+            // u64 doesn't survive a JSON f64 round-trip above 2^53 — store
+            // the seed as a decimal string (found by prop_coordinator).
+            ("seed", Json::str(self.seed.to_string())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            artifact_tag: v
+                .req("artifact_tag")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad artifact_tag"))?
+                .to_string(),
+            step: v.req("step")?.as_usize().ok_or_else(|| anyhow!("bad step"))?,
+            loss: v.req("loss")?.as_f64().ok_or_else(|| anyhow!("bad loss"))? as f32,
+            seed: match v.req("seed")? {
+                Json::Str(s) => s.parse().map_err(|_| anyhow!("bad seed"))?,
+                other => other.as_f64().ok_or_else(|| anyhow!("bad seed"))? as u64,
+            },
+        })
+    }
+}
+
+/// A saved training state.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub meta: CheckpointMeta,
+    pub state: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&(self.state.len() as u32).to_le_bytes())?;
+            for t in &self.state {
+                let (tag, bytes): (u8, Vec<u8>) = match t {
+                    Tensor::F32 { data, .. } => {
+                        (0, data.iter().flat_map(|v| v.to_le_bytes()).collect())
+                    }
+                    Tensor::I32 { data, .. } => {
+                        (1, data.iter().flat_map(|v| v.to_le_bytes()).collect())
+                    }
+                };
+                f.write_all(&[tag])?;
+                f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+                for &d in t.shape() {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                f.write_all(&bytes)?;
+            }
+            let meta = self.meta.to_json().to_string().into_bytes();
+            f.write_all(&(meta.len() as u64).to_le_bytes())?;
+            f.write_all(&meta)?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a repro checkpoint (bad magic)");
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut state = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut raw = vec![0u8; numel * 4];
+            f.read_exact(&mut raw)?;
+            let t = match tag[0] {
+                0 => Tensor::f32(
+                    shape,
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )?,
+                1 => Tensor::i32(
+                    shape,
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                )?,
+                other => bail!("unknown dtype tag {other}"),
+            };
+            state.push(t);
+        }
+        let meta_len = read_u64(&mut f)? as usize;
+        let mut meta_raw = vec![0u8; meta_len];
+        f.read_exact(&mut meta_raw)?;
+        let meta = CheckpointMeta::from_json(&Json::parse(std::str::from_utf8(&meta_raw)?)?)?;
+        Ok(Self { meta, state })
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            meta: CheckpointMeta {
+                artifact_tag: "lm_tiny_ours".into(),
+                step: 42,
+                loss: 3.25,
+                seed: 7,
+            },
+            state: vec![
+                Tensor::randn(vec![4, 8], 1),
+                Tensor::i32(vec![3], vec![1, -2, 3]).unwrap(),
+                Tensor::scalar_f32(0.5),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.ckpt");
+        let ck = sample();
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.meta, ck.meta);
+        assert_eq!(back.state, ck.state);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.ckpt");
+        std::fs::write(&p, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

@@ -1,0 +1,179 @@
+//! TOML run configuration for the `repro` launcher (in-tree TOML subset).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::tomlmini::{self, TomlDoc};
+
+/// `[train]` section.
+#[derive(Debug, Clone)]
+pub struct TrainSection {
+    /// Model preset tag as baked by aot.py ("tiny", "small", ...).
+    pub preset: String,
+    /// Attention implementation ("ours" | "gated" | "softmax").
+    pub attn: String,
+    /// Number of optimizer steps to run.
+    pub steps: usize,
+    /// Evaluate on the val split every `eval_every` steps (0 = never).
+    pub eval_every: usize,
+    /// Checkpoint every `ckpt_every` steps (0 = only at the end).
+    pub ckpt_every: usize,
+    /// RNG seed (init artifact + data order).
+    pub seed: u64,
+}
+
+/// `[data]` section.
+#[derive(Debug, Clone)]
+pub struct DataSection {
+    /// Corpus size in bytes to synthesize.
+    pub corpus_bytes: usize,
+    /// Validation fraction.
+    pub val_frac: f64,
+}
+
+impl Default for DataSection {
+    fn default() -> Self {
+        Self { corpus_bytes: 2 << 20, val_frac: 0.05 }
+    }
+}
+
+/// `[output]` section.
+#[derive(Debug, Clone)]
+pub struct OutputSection {
+    /// Run directory for metrics + checkpoints.
+    pub dir: String,
+}
+
+impl Default for OutputSection {
+    fn default() -> Self {
+        Self { dir: "runs".to_string() }
+    }
+}
+
+/// Full launcher config.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub train: TrainSection,
+    pub data: DataSection,
+    pub output: OutputSection,
+}
+
+impl RunConfig {
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc: TomlDoc = tomlmini::parse(text).context("parsing run config")?;
+        let train = doc.get("train").context("missing [train] section")?;
+        let gets = |k: &str| train.get(k).and_then(|v| v.as_str().map(str::to_string));
+        let getu = |k: &str, d: usize| train.get(k).and_then(|v| v.as_usize()).unwrap_or(d);
+        let cfg = RunConfig {
+            train: TrainSection {
+                preset: gets("preset").context("train.preset is required")?,
+                attn: gets("attn").context("train.attn is required")?,
+                steps: train
+                    .get("steps")
+                    .and_then(|v| v.as_usize())
+                    .context("train.steps is required")?,
+                eval_every: getu("eval_every", 50),
+                ckpt_every: getu("ckpt_every", 0),
+                seed: train.get("seed").and_then(|v| v.as_u64()).unwrap_or(0),
+            },
+            data: {
+                let mut d = DataSection::default();
+                if let Some(sec) = doc.get("data") {
+                    if let Some(v) = sec.get("corpus_bytes").and_then(|v| v.as_usize()) {
+                        d.corpus_bytes = v;
+                    }
+                    if let Some(v) = sec.get("val_frac").and_then(|v| v.as_f64()) {
+                        d.val_frac = v;
+                    }
+                }
+                d
+            },
+            output: {
+                let mut o = OutputSection::default();
+                if let Some(sec) = doc.get("output") {
+                    if let Some(v) = sec.get("dir").and_then(|v| v.as_str()) {
+                        o.dir = v.to_string();
+                    }
+                }
+                o
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        const ATTNS: &[&str] = &["ours", "gated", "softmax"];
+        if !ATTNS.contains(&self.train.attn.as_str()) {
+            bail!("train.attn must be one of {ATTNS:?}, got {:?}", self.train.attn);
+        }
+        if self.train.steps == 0 {
+            bail!("train.steps must be positive");
+        }
+        if !(0.0..1.0).contains(&self.data.val_frac) {
+            bail!("data.val_frac must be in [0, 1)");
+        }
+        Ok(())
+    }
+
+    /// Artifact name prefix, e.g. `lm_small_ours`.
+    pub fn artifact_tag(&self) -> String {
+        format!("lm_{}_{}", self.train.preset.trim_start_matches("lm-"), self.train.attn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        [train]
+        preset = "small"
+        attn = "ours"
+        steps = 200
+        eval_every = 25
+
+        [data]
+        corpus_bytes = 1048576
+
+        [output]
+        dir = "runs/demo"
+    "#;
+
+    #[test]
+    fn parses_and_validates() {
+        let c = RunConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(c.train.steps, 200);
+        assert_eq!(c.artifact_tag(), "lm_small_ours");
+        assert_eq!(c.data.val_frac, 0.05); // default
+        assert_eq!(c.data.corpus_bytes, 1048576);
+        assert_eq!(c.output.dir, "runs/demo");
+    }
+
+    #[test]
+    fn rejects_bad_attn() {
+        let bad = SAMPLE.replace("\"ours\"", "\"mamba\"");
+        assert!(RunConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_steps() {
+        let bad = SAMPLE.replace("steps = 200", "steps = 0");
+        assert!(RunConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let min = "[train]\npreset = \"tiny\"\nattn = \"softmax\"\nsteps = 1";
+        let c = RunConfig::from_toml(min).unwrap();
+        assert_eq!(c.output.dir, "runs");
+        assert_eq!(c.train.eval_every, 50);
+    }
+}

@@ -1,0 +1,192 @@
+//! Training metrics: in-memory history + JSONL/CSV emission (Fig 5 series).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One optimizer step's record.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    /// Seconds since the start of training (wall clock — the Fig-5 x-axis).
+    pub wall_s: f64,
+    /// Seconds spent in this step (artifact execute + sync).
+    pub step_s: f64,
+    /// Learning rate according to the host-side schedule mirror.
+    pub lr: f64,
+    /// Tokens consumed in this step.
+    pub tokens: usize,
+    /// Validation loss, when measured at this step.
+    pub val_loss: Option<f32>,
+}
+
+impl StepRecord {
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("step", Json::num(self.step as f64)),
+            ("loss", Json::num(self.loss as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("step_s", Json::num(self.step_s)),
+            ("lr", Json::num(self.lr)),
+            ("tokens", Json::num(self.tokens as f64)),
+        ];
+        if let Some(v) = self.val_loss {
+            pairs.push(("val_loss", Json::num(v as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let num = |k: &str| -> Result<f64> {
+            v.req(k)?.as_f64().ok_or_else(|| anyhow!("bad field {k:?}"))
+        };
+        Ok(Self {
+            step: num("step")? as usize,
+            loss: num("loss")? as f32,
+            wall_s: num("wall_s")?,
+            step_s: num("step_s")?,
+            lr: num("lr")?,
+            tokens: num("tokens")? as usize,
+            val_loss: v.get("val_loss").and_then(Json::as_f64).map(|x| x as f32),
+        })
+    }
+}
+
+/// Append-only metrics log.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    records: Vec<StepRecord>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the final `k` steps (convergence summary).
+    pub fn tail_mean_loss(&self, k: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let tail = &self.records[self.records.len().saturating_sub(k)..];
+        Some(tail.iter().map(|r| r.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// Aggregate tokens/second across the run.
+    pub fn tokens_per_second(&self) -> Option<f64> {
+        let total_tokens: usize = self.records.iter().map(|r| r.tokens).sum();
+        let wall = self.records.last()?.wall_s;
+        if wall <= 0.0 {
+            return None;
+        }
+        Some(total_tokens as f64 / wall)
+    }
+
+    /// Write one JSON object per line.
+    pub fn write_jsonl(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        for r in &self.records {
+            writeln!(f, "{}", r.to_json().to_string())?;
+        }
+        Ok(())
+    }
+
+    /// Write the Fig-5 CSV: step,wall_s,loss,val_loss,lr.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        writeln!(f, "step,wall_s,loss,val_loss,lr,tokens")?;
+        for r in &self.records {
+            let val = r.val_loss.map(|v| v.to_string()).unwrap_or_default();
+            writeln!(f, "{},{:.3},{},{},{:.6e},{}", r.step, r.wall_s, r.loss, val, r.lr, r.tokens)?;
+        }
+        Ok(())
+    }
+
+    /// Load back a JSONL file (report generation).
+    pub fn read_jsonl(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let mut log = Self::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            log.push(StepRecord::from_json(&Json::parse(line)?)?);
+        }
+        Ok(log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32) -> StepRecord {
+        StepRecord {
+            step,
+            loss,
+            wall_s: step as f64 * 0.5,
+            step_s: 0.5,
+            lr: 1e-3,
+            tokens: 1024,
+            val_loss: if step % 2 == 0 { Some(loss + 0.1) } else { None },
+        }
+    }
+
+    #[test]
+    fn tail_mean_and_throughput() {
+        let mut log = MetricsLog::new();
+        for i in 1..=10 {
+            log.push(rec(i, 11.0 - i as f32));
+        }
+        assert_eq!(log.last_loss(), Some(1.0));
+        let tm = log.tail_mean_loss(2).unwrap();
+        assert!((tm - 1.5).abs() < 1e-6);
+        let tps = log.tokens_per_second().unwrap();
+        assert!((tps - 10.0 * 1024.0 / 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut log = MetricsLog::new();
+        log.push(rec(1, 5.0));
+        log.push(rec(2, 4.0));
+        let dir = std::env::temp_dir().join("repro_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.jsonl");
+        log.write_jsonl(&p).unwrap();
+        let back = MetricsLog::read_jsonl(&p).unwrap();
+        assert_eq!(back.records().len(), 2);
+        assert_eq!(back.records()[1].loss, 4.0);
+        assert_eq!(back.records()[0].val_loss, None);
+        assert_eq!(back.records()[1].val_loss, Some(4.1));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::new();
+        log.push(rec(1, 5.0));
+        let dir = std::env::temp_dir().join("repro_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        log.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,wall_s,loss"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: configuration, training loop, checkpoints, metrics.
+//!
+//! The paper's contribution lives in the L1 kernel, so the coordinator is the
+//! *driver framework around it*: it owns process lifecycle, the data pipeline,
+//! the step loop over the `lm_*_train_step` artifact, learning-rate /
+//! schedule bookkeeping, checkpointing, and metrics emission (JSONL + CSV for
+//! the Fig-5 learning curves).
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use config::{RunConfig, TrainSection};
+pub use metrics::{MetricsLog, StepRecord};
+pub use schedule::CosineSchedule;
+pub use trainer::{TrainOutcome, Trainer};

@@ -1,0 +1,67 @@
+//! Host-side mirror of the cosine warmup/decay schedule baked into the
+//! train-step artifact — used for logging and plan estimation (the authoritative
+//! schedule runs inside the HLO; `python/tests/test_train.py` cross-checks).
+
+/// Cosine warmup → decay between `lr_min` and `lr_max` (paper §5.2).
+#[derive(Debug, Clone, Copy)]
+pub struct CosineSchedule {
+    pub lr_max: f64,
+    pub lr_min: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl CosineSchedule {
+    pub fn new(lr_max: f64, lr_min: f64, warmup_steps: usize, total_steps: usize) -> Self {
+        Self { lr_max, lr_min, warmup_steps, total_steps }
+    }
+
+    /// Paper defaults: max 1e-3, min 5e-5.
+    pub fn paper_defaults(warmup_steps: usize, total_steps: usize) -> Self {
+        Self::new(1e-3, 5e-5, warmup_steps, total_steps)
+    }
+
+    /// Learning rate at 0-based `step` — must match `train.lr_at_step`.
+    pub fn lr(&self, step: usize) -> f64 {
+        let s = step as f64;
+        if step < self.warmup_steps {
+            return self.lr_max * s / (self.warmup_steps.max(1) as f64);
+        }
+        let span = (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f64;
+        let frac = ((s - self.warmup_steps as f64) / span).clamp(0.0, 1.0);
+        self.lr_min + 0.5 * (self.lr_max - self.lr_min) * (1.0 + (std::f64::consts::PI * frac).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_rises_linearly() {
+        let s = CosineSchedule::paper_defaults(10, 100);
+        assert_eq!(s.lr(0), 0.0);
+        assert!((s.lr(5) - 5e-4).abs() < 1e-12);
+        assert!(s.lr(9) < s.lr_max);
+    }
+
+    #[test]
+    fn peak_at_warmup_end_then_decays_to_min() {
+        let s = CosineSchedule::paper_defaults(10, 100);
+        assert!((s.lr(10) - 1e-3).abs() < 1e-12);
+        assert!(s.lr(50) < s.lr(10));
+        assert!((s.lr(100) - 5e-5).abs() < 1e-9);
+        assert!((s.lr(500) - 5e-5).abs() < 1e-9); // clamps past the end
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = CosineSchedule::paper_defaults(20, 200);
+        let mut prev = f64::INFINITY;
+        for step in 20..=200 {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-15, "step {step}");
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! The training loop: drive the `lm_*` artifacts from Rust.
+//!
+//! Per step: pull a batch from the [`Batcher`], execute the train-step
+//! artifact (state ++ tokens ++ step → loss ++ state'), log metrics, and
+//! periodically evaluate / checkpoint.  The state stays as XLA literals
+//! between steps — no host re-materialization on the hot path.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::Literal;
+
+use crate::data::{Batcher, ByteTokenizer, CorpusConfig, CorpusGenerator, PackedDataset, Split};
+use crate::runtime::{Engine, Executable, Tensor};
+
+use super::checkpoint::{Checkpoint, CheckpointMeta};
+use super::config::RunConfig;
+use super::metrics::{MetricsLog, StepRecord};
+use super::schedule::CosineSchedule;
+
+/// Result summary of a training run.
+#[derive(Debug)]
+pub struct TrainOutcome {
+    pub final_loss: f32,
+    pub final_val_loss: Option<f32>,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub tokens_per_s: f64,
+    pub run_dir: PathBuf,
+}
+
+/// Orchestrates one end-to-end training run.
+pub struct Trainer<'e> {
+    engine: &'e Engine,
+    cfg: RunConfig,
+    step_exe: Rc<Executable>,
+    eval_exe: Rc<Executable>,
+    init_exe: Rc<Executable>,
+    n_param_arrays: usize,
+    batch: usize,
+    seq_len: usize,
+    schedule: CosineSchedule,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let tag = cfg.artifact_tag();
+        let step_exe = engine
+            .load(&format!("{tag}_train_step"))
+            .with_context(|| format!("loading train-step artifact for {tag}"))?;
+        let eval_exe = engine.load(&format!("{tag}_eval"))?;
+        let init_exe = engine.load(&format!("{tag}_init"))?;
+
+        let meta = &step_exe.meta;
+        let n_param_arrays = meta
+            .n_param_arrays
+            .ok_or_else(|| anyhow!("artifact missing n_param_arrays"))?;
+        let batch = meta.batch.ok_or_else(|| anyhow!("artifact missing batch"))?;
+        let n_ctx = meta
+            .model_field_usize("n_ctx")
+            .ok_or_else(|| anyhow!("artifact missing model.n_ctx"))?;
+        let schedule = CosineSchedule::new(
+            meta.train_field_f64("lr_max").unwrap_or(1e-3),
+            meta.train_field_f64("lr_min").unwrap_or(5e-5),
+            meta.train_field_f64("warmup_steps").unwrap_or(50.0) as usize,
+            meta.train_field_f64("total_steps").unwrap_or(500.0) as usize,
+        );
+        Ok(Self {
+            engine,
+            cfg,
+            step_exe,
+            eval_exe,
+            init_exe,
+            n_param_arrays,
+            batch,
+            seq_len: n_ctx,
+            schedule,
+        })
+    }
+
+    /// Vocabulary size baked into the artifact (tokenizer must match).
+    pub fn vocab_size(&self) -> usize {
+        self.step_exe.meta.model_field_usize("vocab_size").unwrap_or(256)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    /// Build the synthetic dataset matching this model's tokenizer contract.
+    pub fn build_dataset(&self) -> Result<(ByteTokenizer, PackedDataset)> {
+        let corpus = CorpusGenerator::new(CorpusConfig {
+            seed: self.cfg.train.seed,
+            target_bytes: self.cfg.data.corpus_bytes,
+            ..Default::default()
+        })
+        .generate();
+        let vocab = self.vocab_size();
+        let tokenizer = if vocab <= 256 {
+            ByteTokenizer::bytes_only()
+        } else {
+            // train merges on a slice — enough signal, much faster
+            let slice_end = corpus
+                .char_indices()
+                .nth(100_000)
+                .map(|(i, _)| i)
+                .unwrap_or(corpus.len());
+            ByteTokenizer::train(&corpus[..slice_end], vocab)?
+        };
+        let tokens = tokenizer.encode(&corpus);
+        let ds = PackedDataset::pack(&tokens, self.seq_len, self.cfg.data.val_frac,
+                                     self.cfg.train.seed)?;
+        Ok((tokenizer, ds))
+    }
+
+    /// Initialize the training state via the init artifact.
+    pub fn init_state(&self) -> Result<Vec<Literal>> {
+        let seed = Tensor::scalar_i32(self.cfg.train.seed as i32).to_literal()?;
+        self.init_exe.run_to_literals(&[seed])
+    }
+
+    /// Run the configured number of steps; writes metrics + checkpoints into
+    /// `<output.dir>/<tag>/`.
+    pub fn run(&self) -> Result<TrainOutcome> {
+        let (_tok, ds) = self.build_dataset()?;
+        let mut batcher = Batcher::new(&ds, Split::Train, self.batch, self.cfg.train.seed)?;
+        let mut val_batcher = Batcher::new(&ds, Split::Val, self.batch, self.cfg.train.seed)
+            .ok();
+
+        let run_dir = PathBuf::from(&self.cfg.output.dir).join(self.cfg.artifact_tag());
+        std::fs::create_dir_all(&run_dir)?;
+
+        let mut state = self.init_state()?;
+        let mut log = MetricsLog::new();
+        let t_start = Instant::now();
+        let tokens_per_step = self.batch * (self.seq_len + 1);
+
+        let mut last_loss = f32::NAN;
+        let mut last_val: Option<f32> = None;
+        for step in 0..self.cfg.train.steps {
+            let t_step = Instant::now();
+            let batch = batcher.next_batch()?;
+            let (loss, new_state) = self.step(state, &batch, step)?;
+            state = new_state;
+            last_loss = loss;
+            if !loss.is_finite() {
+                bail!("loss diverged (non-finite) at step {step}");
+            }
+
+            let do_eval = self.cfg.train.eval_every > 0
+                && (step + 1) % self.cfg.train.eval_every == 0;
+            if do_eval {
+                if let Some(vb) = val_batcher.as_mut() {
+                    last_val = Some(self.eval(&state, &vb.next_batch()?)?);
+                }
+            }
+            log.push(StepRecord {
+                step,
+                loss,
+                wall_s: t_start.elapsed().as_secs_f64(),
+                step_s: t_step.elapsed().as_secs_f64(),
+                lr: self.schedule.lr(step),
+                tokens: tokens_per_step,
+                val_loss: if do_eval { last_val } else { None },
+            });
+
+            if self.cfg.train.ckpt_every > 0 && (step + 1) % self.cfg.train.ckpt_every == 0 {
+                self.save_checkpoint(&state, step, loss,
+                                     &run_dir.join(format!("step{:06}.ckpt", step + 1)))?;
+            }
+        }
+
+        let wall = t_start.elapsed().as_secs_f64();
+        self.save_checkpoint(&state, self.cfg.train.steps - 1, last_loss,
+                             &run_dir.join("final.ckpt"))?;
+        log.write_jsonl(run_dir.join("metrics.jsonl"))?;
+        log.write_csv(run_dir.join("metrics.csv"))?;
+
+        Ok(TrainOutcome {
+            final_loss: last_loss,
+            final_val_loss: last_val,
+            steps: self.cfg.train.steps,
+            wall_s: wall,
+            tokens_per_s: log.tokens_per_second().unwrap_or(0.0),
+            run_dir,
+        })
+    }
+
+    /// Execute one optimizer step; returns (loss, new state).
+    pub fn step(
+        &self,
+        mut state: Vec<Literal>,
+        batch: &Tensor,
+        step: usize,
+    ) -> Result<(f32, Vec<Literal>)> {
+        state.push(batch.to_literal()?);
+        state.push(Tensor::scalar_i32(step as i32).to_literal()?);
+        let mut out = self.step_exe.run_to_literals(&state)?;
+        if out.len() != 1 + state.len() - 2 {
+            bail!("train_step returned {} outputs", out.len());
+        }
+        let loss_lit = out.remove(0);
+        let loss = Tensor::from_literal(&loss_lit)?.scalar()?;
+        Ok((loss, out))
+    }
+
+    /// Evaluate held-out loss on one batch.
+    pub fn eval(&self, state: &[Literal], batch: &Tensor) -> Result<f32> {
+        let mut args: Vec<&Literal> = state[..self.n_param_arrays].iter().collect();
+        let batch_lit = batch.to_literal()?;
+        args.push(&batch_lit);
+        let out = self.eval_exe.run_literals_ref(&args)?;
+        out[0].scalar()
+    }
+
+    fn save_checkpoint(
+        &self,
+        state: &[Literal],
+        step: usize,
+        loss: f32,
+        path: &PathBuf,
+    ) -> Result<()> {
+        let tensors: Vec<Tensor> =
+            state.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
+        Checkpoint {
+            meta: CheckpointMeta {
+                artifact_tag: self.cfg.artifact_tag(),
+                step,
+                loss,
+                seed: self.cfg.train.seed,
+            },
+            state: tensors,
+        }
+        .save(path)
+    }
+
+    /// Restore a checkpoint into literal state (resume support).
+    pub fn restore(&self, ckpt: &Checkpoint) -> Result<Vec<Literal>> {
+        if ckpt.meta.artifact_tag != self.cfg.artifact_tag() {
+            bail!(
+                "checkpoint is for {:?}, trainer is {:?}",
+                ckpt.meta.artifact_tag,
+                self.cfg.artifact_tag()
+            );
+        }
+        ckpt.state.iter().map(|t| t.to_literal()).collect()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        self.engine
+    }
+}

@@ -1,0 +1,128 @@
+//! Epoch-shuffled batch iterator producing flattened i32 token batches.
+
+use anyhow::{bail, Result};
+
+use super::dataset::{PackedDataset, Split};
+use super::rng::SplitMix64;
+use crate::runtime::Tensor;
+
+/// Deterministic, epoch-reshuffled batcher over a [`PackedDataset`] split.
+///
+/// Yields `(B, seq_len+1)` i32 tensors ready for the `lm_*_train_step`
+/// artifact. A trailing partial batch is dropped (XLA shapes are static).
+pub struct Batcher<'a> {
+    ds: &'a PackedDataset,
+    split: Split,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a PackedDataset, split: Split, batch: usize, seed: u64) -> Result<Self> {
+        if batch == 0 {
+            bail!("batch size must be positive");
+        }
+        if ds.len(split) < batch {
+            bail!(
+                "split has {} rows < batch size {batch}",
+                ds.len(split)
+            );
+        }
+        let mut b = Self {
+            ds,
+            split,
+            batch,
+            order: (0..ds.len(split)).collect(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+        };
+        b.reshuffle();
+        Ok(b)
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = SplitMix64::new(self.seed ^ self.epoch.wrapping_mul(0x9E37));
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Number of full batches per epoch.
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.len(self.split) / self.batch
+    }
+
+    /// Next batch, rolling over epochs forever.
+    pub fn next_batch(&mut self) -> Result<Tensor> {
+        if self.cursor + self.batch > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let row_len = self.ds.row_len();
+        let mut data = Vec::with_capacity(self.batch * row_len);
+        let rows = self.ds.rows(self.split);
+        for i in 0..self.batch {
+            data.extend_from_slice(&rows[self.order[self.cursor + i]]);
+        }
+        self.cursor += self.batch;
+        Tensor::i32(vec![self.batch, row_len], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> PackedDataset {
+        let toks: Vec<i32> = (0..2000).collect();
+        PackedDataset::pack(&toks, 9, 0.1, 0).unwrap()
+    }
+
+    #[test]
+    fn batch_shape() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, Split::Train, 4, 0).unwrap();
+        let t = b.next_batch().unwrap();
+        assert_eq!(t.shape(), &[4, 10]);
+    }
+
+    #[test]
+    fn epochs_roll_and_reshuffle() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, Split::Train, 8, 0).unwrap();
+        let per_epoch = b.batches_per_epoch();
+        let first = b.next_batch().unwrap();
+        for _ in 1..per_epoch {
+            b.next_batch().unwrap();
+        }
+        assert_eq!(b.epoch(), 0);
+        let second_epoch_first = b.next_batch().unwrap();
+        assert_eq!(b.epoch(), 1);
+        // overwhelmingly likely the shuffle differs
+        assert_ne!(first, second_epoch_first);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = ds();
+        let mut a = Batcher::new(&ds, Split::Train, 4, 5).unwrap();
+        let mut b = Batcher::new(&ds, Split::Train, 4, 5).unwrap();
+        for _ in 0..10 {
+            assert_eq!(a.next_batch().unwrap(), b.next_batch().unwrap());
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_batch() {
+        let ds = ds();
+        assert!(Batcher::new(&ds, Split::Val, 10_000, 0).is_err());
+        assert!(Batcher::new(&ds, Split::Train, 0, 0).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Synthetic corpus generator — the Wiki-40B stand-in (DESIGN.md §Substitutions).
+//!
+//! Three mixed sources give the LM non-trivial, learnable structure:
+//! 1. a **Zipfian Markov word chain** (natural-language-like unigram/bigram
+//!    statistics over a synthetic vocabulary),
+//! 2. **template "fact" sentences** with recurring entities ("the <adj>
+//!    <noun> of <entity> is <value>.") that reward long-range copying,
+//! 3. **arithmetic snippets** ("12 + 7 = 19") that reward induction.
+//!
+//! The generator is fully deterministic in its seed.
+
+use super::rng::SplitMix64;
+
+/// Corpus synthesis parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    /// Approximate corpus size in bytes.
+    pub target_bytes: usize,
+    /// Synthetic word-vocabulary size for the Markov chain.
+    pub vocab_words: usize,
+    /// Zipf exponent for word frequencies.
+    pub zipf_s: f64,
+    /// Mixture weights: (markov, facts, arithmetic).
+    pub mix: (f64, f64, f64),
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            target_bytes: 2 << 20,
+            vocab_words: 512,
+            zipf_s: 1.1,
+            mix: (0.6, 0.3, 0.1),
+        }
+    }
+}
+
+/// Deterministic synthetic-text generator.
+pub struct CorpusGenerator {
+    cfg: CorpusConfig,
+    words: Vec<String>,
+    cdf: Vec<f64>,
+    /// per-word successor bias — gives the chain bigram structure
+    successor: Vec<usize>,
+    entities: Vec<String>,
+    adjectives: Vec<&'static str>,
+    nouns: Vec<&'static str>,
+}
+
+const ADJECTIVES: &[&str] = &[
+    "red", "ancient", "bright", "quiet", "northern", "hidden", "rapid",
+    "golden", "hollow", "frozen", "eastern", "little",
+];
+const NOUNS: &[&str] = &[
+    "river", "archive", "engine", "garden", "tower", "market", "harbor",
+    "forest", "bridge", "library", "square", "mill",
+];
+
+impl CorpusGenerator {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        let mut rng = SplitMix64::new(cfg.seed ^ 0xC0FFEE);
+        // synthetic word list: CV syllable strings, 2-4 syllables
+        let syl_c = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z"];
+        let syl_v = ["a", "e", "i", "o", "u"];
+        let mut words = Vec::with_capacity(cfg.vocab_words);
+        while words.len() < cfg.vocab_words {
+            let n_syl = 2 + rng.below(3);
+            let mut w = String::new();
+            for _ in 0..n_syl {
+                w.push_str(syl_c[rng.below(syl_c.len())]);
+                w.push_str(syl_v[rng.below(syl_v.len())]);
+            }
+            words.push(w);
+        }
+        // Zipf CDF over ranks
+        let mut cdf = Vec::with_capacity(cfg.vocab_words);
+        let mut acc = 0.0;
+        for r in 1..=cfg.vocab_words {
+            acc += 1.0 / (r as f64).powf(cfg.zipf_s);
+            cdf.push(acc);
+        }
+        let successor = (0..cfg.vocab_words).map(|_| rng.below(cfg.vocab_words)).collect();
+        let entities = (0..32)
+            .map(|i| {
+                let w = &words[rng.below(cfg.vocab_words.min(128))];
+                let mut e = w.clone();
+                e.push_str(&format!("{i}"));
+                e
+            })
+            .collect();
+        Self {
+            cfg,
+            words,
+            cdf,
+            successor,
+            entities,
+            adjectives: ADJECTIVES.to_vec(),
+            nouns: NOUNS.to_vec(),
+        }
+    }
+
+    fn markov_sentence(&self, rng: &mut SplitMix64) -> String {
+        let len = 4 + rng.below(12);
+        let mut out = String::new();
+        let mut w = rng.sample_cdf(&self.cdf);
+        for i in 0..len {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.words[w]);
+            // 50%: biased successor (bigram structure); 50%: fresh Zipf draw
+            w = if rng.next_f64() < 0.5 {
+                self.successor[w]
+            } else {
+                rng.sample_cdf(&self.cdf)
+            };
+        }
+        out.push('.');
+        out
+    }
+
+    fn fact_sentence(&self, rng: &mut SplitMix64) -> String {
+        let e = &self.entities[rng.below(self.entities.len())];
+        let a = self.adjectives[rng.below(self.adjectives.len())];
+        let n = self.nouns[rng.below(self.nouns.len())];
+        let v = &self.words[rng.below(self.words.len())];
+        match rng.below(3) {
+            0 => format!("the {a} {n} of {e} is {v}."),
+            1 => format!("{e} keeps a {a} {n} near {v}."),
+            _ => format!("in {e} the {n} was {a} and {v}."),
+        }
+    }
+
+    fn arithmetic_snippet(&self, rng: &mut SplitMix64) -> String {
+        let a = rng.below(50);
+        let b = rng.below(50);
+        match rng.below(2) {
+            0 => format!("{a} + {b} = {}.", a + b),
+            _ => format!("{a} * {b} = {}.", a * b),
+        }
+    }
+
+    /// Generate the corpus as one UTF-8 string of ≈ `target_bytes`.
+    pub fn generate(&self) -> String {
+        let mut rng = SplitMix64::new(self.cfg.seed);
+        let (wm, wf, wa) = self.cfg.mix;
+        let cdf = [wm, wm + wf, wm + wf + wa];
+        let mut out = String::with_capacity(self.cfg.target_bytes + 128);
+        let mut sentences_in_par = 0usize;
+        while out.len() < self.cfg.target_bytes {
+            let s = match rng.sample_cdf(&cdf) {
+                0 => self.markov_sentence(&mut rng),
+                1 => self.fact_sentence(&mut rng),
+                _ => self.arithmetic_snippet(&mut rng),
+            };
+            out.push_str(&s);
+            sentences_in_par += 1;
+            if sentences_in_par >= 5 + rng.below(5) {
+                out.push('\n');
+                sentences_in_par = 0;
+            } else {
+                out.push(' ');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = CorpusConfig { target_bytes: 10_000, ..Default::default() };
+        let a = CorpusGenerator::new(cfg.clone()).generate();
+        let b = CorpusGenerator::new(cfg).generate();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut cfg = CorpusConfig { target_bytes: 10_000, ..Default::default() };
+        let a = CorpusGenerator::new(cfg.clone()).generate();
+        cfg.seed = 1;
+        let b = CorpusGenerator::new(cfg).generate();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn reaches_target_size_and_is_ascii() {
+        let cfg = CorpusConfig { target_bytes: 50_000, ..Default::default() };
+        let text = CorpusGenerator::new(cfg).generate();
+        assert!(text.len() >= 50_000);
+        assert!(text.len() < 51_000);
+        assert!(text.is_ascii());
+    }
+
+    #[test]
+    fn zipf_head_words_dominate() {
+        let cfg = CorpusConfig { target_bytes: 200_000, ..Default::default() };
+        let g = CorpusGenerator::new(cfg);
+        let text = g.generate();
+        let head = &g.words[0];
+        let count = text.matches(head.as_str()).count();
+        // the rank-1 word must appear far more often than a tail word
+        let tail = &g.words[g.words.len() - 1];
+        let tail_count = text.matches(tail.as_str()).count();
+        assert!(count > tail_count, "head {count} vs tail {tail_count}");
+    }
+
+    #[test]
+    fn facts_repeat_entities() {
+        let cfg = CorpusConfig { target_bytes: 100_000, ..Default::default() };
+        let g = CorpusGenerator::new(cfg);
+        let text = g.generate();
+        let hits = g.entities.iter().filter(|e| text.contains(e.as_str())).count();
+        assert!(hits > 16, "only {hits}/32 entities appear");
+    }
+}

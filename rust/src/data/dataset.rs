@@ -1,0 +1,126 @@
+//! Packed next-token-prediction dataset: token stream → fixed-length rows.
+
+use anyhow::{bail, Result};
+
+use super::rng::SplitMix64;
+
+/// Train/validation split tag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+/// Token stream packed into non-overlapping rows of `seq_len + 1` tokens
+/// (input = row[..n], target = row[1..]), split deterministically.
+#[derive(Debug, Clone)]
+pub struct PackedDataset {
+    seq_len: usize,
+    train_rows: Vec<Vec<i32>>,
+    val_rows: Vec<Vec<i32>>,
+}
+
+impl PackedDataset {
+    /// Pack `tokens` into rows; `val_frac` of rows (deterministically chosen)
+    /// go to the validation split.
+    pub fn pack(tokens: &[i32], seq_len: usize, val_frac: f64, seed: u64) -> Result<Self> {
+        if seq_len == 0 {
+            bail!("seq_len must be positive");
+        }
+        let row_len = seq_len + 1;
+        let n_rows = tokens.len() / row_len;
+        if n_rows < 2 {
+            bail!(
+                "corpus too small: {} tokens < 2 rows of {}",
+                tokens.len(),
+                row_len
+            );
+        }
+        let mut idx: Vec<usize> = (0..n_rows).collect();
+        SplitMix64::new(seed ^ 0x5EED).shuffle(&mut idx);
+        let n_val = ((n_rows as f64 * val_frac).round() as usize).clamp(1, n_rows - 1);
+        let mut train_rows = Vec::with_capacity(n_rows - n_val);
+        let mut val_rows = Vec::with_capacity(n_val);
+        for (pos, &r) in idx.iter().enumerate() {
+            let row = tokens[r * row_len..(r + 1) * row_len].to_vec();
+            if pos < n_val {
+                val_rows.push(row);
+            } else {
+                train_rows.push(row);
+            }
+        }
+        Ok(Self { seq_len, train_rows, val_rows })
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn len(&self, split: Split) -> usize {
+        self.rows(split).len()
+    }
+
+    pub fn is_empty(&self, split: Split) -> bool {
+        self.rows(split).is_empty()
+    }
+
+    pub fn rows(&self, split: Split) -> &[Vec<i32>] {
+        match split {
+            Split::Train => &self.train_rows,
+            Split::Val => &self.val_rows,
+        }
+    }
+
+    /// Tokens per row including the shifted target.
+    pub fn row_len(&self) -> usize {
+        self.seq_len + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize) -> Vec<i32> {
+        (0..n as i32).collect()
+    }
+
+    #[test]
+    fn packs_and_splits() {
+        let ds = PackedDataset::pack(&toks(1000), 9, 0.2, 0).unwrap();
+        assert_eq!(ds.row_len(), 10);
+        let total = ds.len(Split::Train) + ds.len(Split::Val);
+        assert_eq!(total, 100);
+        assert_eq!(ds.len(Split::Val), 20);
+        for row in ds.rows(Split::Train) {
+            assert_eq!(row.len(), 10);
+        }
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_cover() {
+        let ds = PackedDataset::pack(&toks(500), 4, 0.25, 7).unwrap();
+        let mut firsts: Vec<i32> = ds
+            .rows(Split::Train)
+            .iter()
+            .chain(ds.rows(Split::Val))
+            .map(|r| r[0])
+            .collect();
+        firsts.sort();
+        firsts.dedup();
+        assert_eq!(firsts.len(), ds.len(Split::Train) + ds.len(Split::Val));
+    }
+
+    #[test]
+    fn deterministic_split() {
+        let a = PackedDataset::pack(&toks(600), 5, 0.1, 3).unwrap();
+        let b = PackedDataset::pack(&toks(600), 5, 0.1, 3).unwrap();
+        assert_eq!(a.rows(Split::Val), b.rows(Split::Val));
+    }
+
+    #[test]
+    fn rejects_tiny_corpus() {
+        assert!(PackedDataset::pack(&toks(5), 9, 0.1, 0).is_err());
+        assert!(PackedDataset::pack(&toks(100), 0, 0.1, 0).is_err());
+    }
+}

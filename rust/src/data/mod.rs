@@ -1,0 +1,19 @@
+//! Data substrate: synthetic corpora, tokenization, packing, batching.
+//!
+//! The paper trains on Wiki-40B (English); this testbed has no network, so we
+//! generate a *synthetic grammar corpus* with natural-language-like statistics
+//! (Zipfian unigrams, Markov bigram structure, sentence/paragraph segmentation)
+//! plus template-based "fact" sentences that give the LM learnable long-range
+//! structure.  DESIGN.md §Substitutions records why this preserves the
+//! learning-curve comparison the paper makes.
+
+pub mod batcher;
+pub mod corpus;
+pub mod dataset;
+pub mod rng;
+pub mod tokenizer;
+
+pub use batcher::Batcher;
+pub use corpus::{CorpusConfig, CorpusGenerator};
+pub use dataset::{PackedDataset, Split};
+pub use tokenizer::ByteTokenizer;

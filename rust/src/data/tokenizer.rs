@@ -1,0 +1,183 @@
+//! Byte-level tokenizer with a frequency-ranked vocabulary remap.
+//!
+//! The LM artifacts bake a `vocab_size` (256/512/1024/2048); raw bytes cover
+//! only 0..256, so to exercise larger vocabularies we extend byte tokens with
+//! learned *bigram merges* (a miniature BPE): the most frequent byte pairs in
+//! a training text are assigned the ids above 256, greedily and
+//! deterministically.  Round-tripping is exact.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Byte tokenizer + optional bigram merges up to `vocab_size`.
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    vocab_size: usize,
+    /// merge list in priority order: (left, right) -> new id (256 + rank)
+    merges: Vec<(u32, u32)>,
+    merge_lookup: HashMap<(u32, u32), u32>,
+}
+
+impl ByteTokenizer {
+    /// Pure byte tokenizer (vocab 256), no merges.
+    pub fn bytes_only() -> Self {
+        Self { vocab_size: 256, merges: vec![], merge_lookup: HashMap::new() }
+    }
+
+    /// Train merges on `text` until the vocabulary reaches `vocab_size`.
+    pub fn train(text: &str, vocab_size: usize) -> Result<Self> {
+        if vocab_size < 256 {
+            bail!("vocab_size must be ≥ 256, got {vocab_size}");
+        }
+        let mut toks: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        let mut merges = Vec::new();
+        let mut merge_lookup = HashMap::new();
+        for next_id in 256..vocab_size as u32 {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in toks.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: highest count, ties by smallest pair
+            let best = counts
+                .iter()
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)))
+                .map(|(&pair, &c)| (pair, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break; // nothing left worth merging
+            }
+            merges.push(pair);
+            merge_lookup.insert(pair, next_id);
+            toks = Self::apply_merge(&toks, pair, next_id);
+        }
+        Ok(Self { vocab_size, merges, merge_lookup })
+    }
+
+    fn apply_merge(toks: &[u32], pair: (u32, u32), id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(toks.len());
+        let mut i = 0;
+        while i < toks.len() {
+            if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
+                out.push(id);
+                i += 2;
+            } else {
+                out.push(toks[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Token id a (left, right) pair merges into, if that merge was learned.
+    pub fn merge_id(&self, left: u32, right: u32) -> Option<u32> {
+        self.merge_lookup.get(&(left, right)).copied()
+    }
+
+    /// Encode text to token ids (< vocab_size).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut toks: Vec<u32> = text.bytes().map(|b| b as u32).collect();
+        // apply merges in training order (priority = rank)
+        for (rank, &pair) in self.merges.iter().enumerate() {
+            let id = 256 + rank as u32;
+            if toks.len() < 2 {
+                break;
+            }
+            toks = Self::apply_merge(&toks, pair, id);
+        }
+        toks.into_iter().map(|t| t as i32).collect()
+    }
+
+    /// Decode ids back to text (lossless inverse of `encode`).
+    pub fn decode(&self, ids: &[i32]) -> Result<String> {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        for &id in ids {
+            self.push_bytes(id as u32, &mut bytes)?;
+        }
+        Ok(String::from_utf8_lossy(&bytes).into_owned())
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) -> Result<()> {
+        if id < 256 {
+            out.push(id as u8);
+            return Ok(());
+        }
+        let rank = (id - 256) as usize;
+        if rank >= self.merges.len() {
+            bail!("token id {id} out of vocabulary");
+        }
+        let (l, r) = self.merges[rank];
+        self.push_bytes(l, out)?;
+        self.push_bytes(r, out)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_only_roundtrip() {
+        let t = ByteTokenizer::bytes_only();
+        let s = "hello, linear attention!";
+        assert_eq!(t.decode(&t.encode(s)).unwrap(), s);
+    }
+
+    #[test]
+    fn merges_reduce_length_and_roundtrip() {
+        let text = "the cat sat on the mat. the cat sat on the mat. again the cat.";
+        let t = ByteTokenizer::train(text, 300).unwrap();
+        assert!(t.n_merges() > 0);
+        let ids = t.encode(text);
+        assert!(ids.len() < text.len(), "{} !< {}", ids.len(), text.len());
+        assert_eq!(t.decode(&ids).unwrap(), text);
+        assert!(ids.iter().all(|&i| (i as usize) < t.vocab_size()));
+    }
+
+    #[test]
+    fn merge_id_lookup_consistent() {
+        let t = ByteTokenizer::train("ababab ababab", 280).unwrap();
+        assert!(t.n_merges() > 0);
+        // every learned merge is addressable and maps above the byte range
+        for rank in 0..t.n_merges() {
+            let (l, r) = t.merges[rank];
+            assert_eq!(t.merge_id(l, r), Some(256 + rank as u32));
+        }
+        assert_eq!(t.merge_id(999, 999), None);
+    }
+
+    #[test]
+    fn train_is_deterministic() {
+        let text = "abab abab abab cdcd cdcd";
+        let a = ByteTokenizer::train(text, 280).unwrap();
+        let b = ByteTokenizer::train(text, 280).unwrap();
+        assert_eq!(a.encode(text), b.encode(text));
+    }
+
+    #[test]
+    fn roundtrip_on_unseen_text() {
+        let t = ByteTokenizer::train("aaa bbb aaa bbb", 270).unwrap();
+        let s = "completely different text 123!";
+        assert_eq!(t.decode(&t.encode(s)).unwrap(), s);
+    }
+
+    #[test]
+    fn rejects_small_vocab() {
+        assert!(ByteTokenizer::train("x", 100).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_oov() {
+        let t = ByteTokenizer::bytes_only();
+        assert!(t.decode(&[300]).is_err());
+    }
+}

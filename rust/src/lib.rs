@@ -1,0 +1,21 @@
+//! Reproduction of *"Transformer Based Linear Attention with Optimized GPU
+//! Kernel Implementation"* (Gerami & Duraiswami, 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **L1/L2** (build-time Python): Pallas linear-attention kernels and a JAX
+//!   transformer LM, AOT-lowered to HLO text under `artifacts/`.
+//! - **L3** (this crate): the coordinator — PJRT runtime, config system, data
+//!   pipeline, training loop, synthetic-task evaluation, GPU-traffic
+//!   simulator, and the benchmark harness that regenerates every table and
+//!   figure of the paper's evaluation section.
+//!
+//! Python never runs on the request path: the `repro` binary is self-contained
+//! once `make artifacts` has produced the HLO modules.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod simulator;
+pub mod tasks;
+pub mod util;

@@ -1,0 +1,275 @@
+//! `repro` — launcher for the linear-attention reproduction.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md
+//! per-experiment index):
+//!   - `train`         Fig 5 learning curves (one run per attention impl)
+//!   - `bench-layer`   Figs 2-3 / Table 1 standalone-layer sweeps
+//!   - `bench-traffic` Fig 4 data-movement analysis (analytic A6000 model)
+//!   - `eval-tasks`    Table 2 synthetic reasoning suite
+//!   - `report`        summarize finished training runs
+//!   - `inspect`       list available artifacts
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use repro::bench::{report as rpt, SweepRunner};
+use repro::coordinator::config::{DataSection, OutputSection, TrainSection};
+use repro::coordinator::{Checkpoint, MetricsLog, RunConfig, Trainer};
+use repro::runtime::Engine;
+use repro::simulator::{DeviceSpec, TrafficModel, VmemModel};
+use repro::tasks::{score_task, TaskKind};
+use repro::util::cli::Args;
+
+const USAGE: &str = "\
+repro — linear-attention reproduction launcher
+
+USAGE: repro <subcommand> [flags]
+
+SUBCOMMANDS
+  train          --preset small --attn ours --steps 200 --out runs
+                 [--config run.toml] [--seed 0] [--eval-every 25]
+  bench-layer    --kind layer_fwd|layer_fwdbwd [--impls a,b,c] [--reps 5]
+                 [--csv out.csv]
+  bench-traffic  [--csv out.csv]
+  eval-tasks     --ckpt runs/lm_small_ours/final.ckpt [--count 64] [--seed 0]
+  report         [--runs runs]
+  inspect        [--filter substr]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("bench-layer") => cmd_bench_layer(&args),
+        Some("bench-traffic") => cmd_bench_traffic(&args),
+        Some("eval-tasks") => cmd_eval_tasks(&args),
+        Some("report") => cmd_report(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("run-artifact") => cmd_run_artifact(&args),
+        Some(other) => bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(p) => RunConfig::load(p)?,
+        None => RunConfig {
+            train: TrainSection {
+                preset: args.get_or("preset", "small").to_string(),
+                attn: args.get_or("attn", "ours").to_string(),
+                steps: args.get_usize("steps", 200)?,
+                eval_every: args.get_usize("eval-every", 25)?,
+                ckpt_every: args.get_usize("ckpt-every", 0)?,
+                seed: args.get_u64("seed", 0)?,
+            },
+            data: DataSection::default(),
+            output: OutputSection { dir: args.get_or("out", "runs").to_string() },
+        },
+    };
+    let engine = Engine::discover()?;
+    let trainer = Trainer::new(&engine, cfg.clone())?;
+    eprintln!(
+        "training {} | batch {} × ctx {} | {} steps",
+        cfg.artifact_tag(),
+        trainer.batch_size(),
+        trainer.seq_len(),
+        cfg.train.steps
+    );
+    let outcome = trainer.run()?;
+    println!(
+        "done: final loss {:.4} (val {:?}) in {:.1}s — {:.0} tok/s → {}",
+        outcome.final_loss,
+        outcome.final_val_loss,
+        outcome.wall_s,
+        outcome.tokens_per_s,
+        outcome.run_dir.display()
+    );
+    Ok(())
+}
+
+fn cmd_bench_layer(args: &Args) -> Result<()> {
+    let kind = args.get_or("kind", "layer_fwd").to_string();
+    let engine = Engine::discover()?;
+    let mut runner = SweepRunner::new(&engine);
+    runner.reps = args.get_usize("reps", 5)?;
+    let impl_list: Vec<String> = match args.get("impls") {
+        Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+        None => ["ours", "ours_scan", "gated", "quadratic", "specdec", "flash", "softmax"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    let mut points = Vec::new();
+    for imp in &impl_list {
+        eprintln!("sweeping {kind} / {imp} …");
+        points.extend(runner.run_series(&kind, imp)?);
+    }
+    println!("{}", rpt::sweep_markdown(&format!("{kind} sweep"), &points));
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rpt::sweep_csv(&points))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_traffic(args: &Args) -> Result<()> {
+    let model = TrafficModel::new(DeviceSpec::a6000());
+    println!("## Table 1 (analytic A6000 model, B=4 H=16 D=128 N=10⁴)\n");
+    println!("{}", rpt::table1_markdown(&model));
+    let ns = [2048, 4096, 8192, 16384, 32768];
+    println!("\n## Fig 4 (data movement, LA implementations)\n");
+    println!("{}", rpt::fig4_markdown(&model, &ns));
+    let vm = VmemModel::new(128, 128);
+    println!(
+        "\nPallas kernel VMEM: fwd {} / bwd {} (16 MiB budget → {:.1}% occupancy), \
+         MXU utilization est. {:.0}%",
+        rpt::fmt_bytes(vm.forward_bytes() as f64),
+        rpt::fmt_bytes(vm.backward_bytes() as f64),
+        vm.forward_occupancy(16 << 20) * 100.0,
+        vm.mxu_utilization() * 100.0
+    );
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, rpt::fig4_csv(&model, &ns))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval_tasks(args: &Args) -> Result<()> {
+    let ckpt_path = args
+        .get("ckpt")
+        .ok_or_else(|| anyhow!("--ckpt is required"))?;
+    let count = args.get_usize("count", 64)?;
+    let seed = args.get_u64("seed", 0)?;
+    let engine = Engine::discover()?;
+    let ck = Checkpoint::load(ckpt_path)?;
+    let logits_artifact = format!("{}_logits", ck.meta.artifact_tag);
+    let params: Vec<xla::Literal> = ck
+        .state
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    println!(
+        "| task | accuracy | correct/positions | ckpt |",
+    );
+    println!("|---|---|---|---|");
+    for kind in TaskKind::all() {
+        let s = score_task(&engine, &logits_artifact, &params, kind, count, seed)?;
+        println!(
+            "| {} | {:.1}% | {}/{} | {} @ step {} |",
+            s.task,
+            s.accuracy() * 100.0,
+            s.correct,
+            s.positions,
+            ck.meta.artifact_tag,
+            ck.meta.step
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let runs = PathBuf::from(args.get_or("runs", "runs"));
+    println!("| run | steps | final loss | tail-10 loss | tok/s | wall |");
+    println!("|---|---|---|---|---|---|");
+    let mut entries: Vec<_> = std::fs::read_dir(&runs)
+        .map_err(|e| anyhow!("reading {runs:?}: {e}"))?
+        .filter_map(|e| e.ok())
+        .collect();
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let metrics = entry.path().join("metrics.jsonl");
+        if !metrics.exists() {
+            continue;
+        }
+        let log = MetricsLog::read_jsonl(&metrics)?;
+        let recs = log.records();
+        if recs.is_empty() {
+            continue;
+        }
+        println!(
+            "| {} | {} | {:.4} | {:.4} | {:.0} | {:.1}s |",
+            entry.file_name().to_string_lossy(),
+            recs.len(),
+            recs.last().unwrap().loss,
+            log.tail_mean_loss(10).unwrap_or(f32::NAN),
+            log.tokens_per_second().unwrap_or(0.0),
+            recs.last().unwrap().wall_s
+        );
+    }
+    Ok(())
+}
+
+/// Debug utility: execute one artifact with synthetic inputs and print
+/// output summary statistics (finite check, min/max/mean).
+fn cmd_run_artifact(args: &Args) -> Result<()> {
+    let name = args.get("name").ok_or_else(|| anyhow!("--name required"))?;
+    let engine = Engine::discover()?;
+    let exe = engine.load(name)?;
+    let mut inputs = Vec::new();
+    for (i, spec) in exe.meta.inputs.iter().enumerate() {
+        let t = match spec.dtype.as_str() {
+            "i32" | "s32" => {
+                // token-like inputs: small non-negative ids; scalars: zero
+                let n: usize = spec.shape.iter().product();
+                repro::runtime::Tensor::i32(
+                    spec.shape.clone(),
+                    (0..n).map(|j| (j % 97) as i32).collect(),
+                )?
+            }
+            _ => {
+                let mut t = repro::runtime::Tensor::randn(
+                    spec.shape.clone(),
+                    0xA11CE + i as u64,
+                );
+                if i < 2 && exe.meta.kind.starts_with("layer") {
+                    t.normalize_rows();
+                }
+                t
+            }
+        };
+        inputs.push(t);
+    }
+    let out = exe.run(&inputs)?;
+    for (i, t) in out.iter().enumerate() {
+        match t {
+            repro::runtime::Tensor::F32 { data, shape } => {
+                let finite = data.iter().all(|x| x.is_finite());
+                let mx = data.iter().cloned().fold(f32::MIN, f32::max);
+                let mn = data.iter().cloned().fold(f32::MAX, f32::min);
+                let mean = data.iter().sum::<f32>() / data.len().max(1) as f32;
+                println!(
+                    "out[{i}] f32{shape:?} finite={finite} min={mn:.4e} max={mx:.4e} mean={mean:.4e}"
+                );
+            }
+            repro::runtime::Tensor::I32 { shape, .. } => {
+                println!("out[{i}] i32{shape:?}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let engine = Engine::discover()?;
+    println!("platform: {}", engine.platform());
+    for (name, meta) in &engine.manifest.artifacts {
+        if let Some(f) = args.get("filter") {
+            if !name.contains(f) {
+                continue;
+            }
+        }
+        println!(
+            "{name}  kind={} inputs={} outputs={}",
+            meta.kind,
+            meta.inputs.len(),
+            meta.outputs.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! The PJRT engine: one client, a cache of compiled executables.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::Tensor;
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so PJRT hands back
+    /// a single tuple buffer which we sync to host and split.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let lits: Vec<Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&lits)
+    }
+
+    /// Execute with pre-converted literals (hot path: skips re-encoding
+    /// inputs that do not change between calls).
+    pub fn run_literals(&self, lits: &[Literal]) -> Result<Vec<Tensor>> {
+        let out = self.exe.execute::<Literal>(lits)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Like [`Self::run_literals`] but borrowing the inputs (avoids cloning
+    /// large state literals when only a subset is passed).
+    pub fn run_literals_ref(&self, lits: &[&Literal]) -> Result<Vec<Tensor>> {
+        let out = self.exe.execute::<&Literal>(lits)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute and return raw literals (hot path for the train loop: the
+    /// state literals round-trip without `Tensor` re-materialization).
+    pub fn run_to_literals(&self, lits: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self.exe.execute::<Literal>(lits)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Execute and time only the device execution + output sync.
+    pub fn run_timed(&self, lits: &[Literal]) -> Result<(Vec<Tensor>, f64)> {
+        let t0 = Instant::now();
+        let out = self.exe.execute::<Literal>(lits)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let secs = t0.elapsed().as_secs_f64();
+        let parts = tuple.to_tuple()?;
+        Ok((parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?, secs))
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (spec, t) in self.meta.inputs.iter().zip(inputs) {
+            if spec.shape != t.shape() {
+                bail!(
+                    "{} input #{}: expected shape {:?}, got {:?}",
+                    self.name,
+                    spec.index,
+                    spec.shape,
+                    t.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Total input bytes (for throughput accounting).
+    pub fn input_bytes(&self) -> usize {
+        self.meta.inputs.iter().map(|s| s.size_bytes()).sum()
+    }
+
+    /// Total output bytes.
+    pub fn output_bytes(&self) -> usize {
+        self.meta.outputs.iter().map(|s| s.size_bytes()).sum()
+    }
+}
+
+/// PJRT client + manifest + executable cache.
+///
+/// Cheap to clone conceptually but owns FFI handles — share via `Rc` (the
+/// coordinator is single-threaded around the PJRT calls; XLA parallelizes
+/// internally).
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over a loaded manifest.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Engine over the discovered `artifacts/` directory.
+    pub fn discover() -> Result<Self> {
+        Self::new(Manifest::discover()?)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (memoized).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(name)?;
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        let e = Rc::new(Executable { name: name.to_string(), meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Compile-time of an artifact (for the §Perf log); bypasses the cache.
+    pub fn compile_time(&self, name: &str) -> Result<f64> {
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let _exe = self.client.compile(&comp)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+}

@@ -1,0 +1,285 @@
+//! `artifacts/manifest.json` parsing — the build-time contract with aot.py.
+//!
+//! Parsed with the in-tree JSON reader (`crate::util::json`); unknown fields
+//! are ignored so the Python side can extend the manifest freely.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Input/output buffer spec of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub index: usize,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            index: v.req("index")?.as_usize().ok_or_else(|| anyhow!("bad index"))?,
+            dtype: v
+                .req("dtype")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad dtype"))?
+                .to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Per-artifact metadata (superset across artifact kinds).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub hash: String,
+    pub kind: String,
+    pub impl_name: Option<String>,
+    pub bh: Option<usize>,
+    pub n: Option<usize>,
+    pub d: Option<usize>,
+    pub chunk: Option<usize>,
+    pub preset: Option<String>,
+    pub attn: Option<String>,
+    pub batch: Option<usize>,
+    pub n_params: Option<u64>,
+    pub n_param_arrays: Option<usize>,
+    pub param_names: Option<Vec<String>>,
+    pub model: Option<Json>,
+    pub train: Option<Json>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let get_str = |k: &str| v.get(k).and_then(Json::as_str).map(str::to_string);
+        let get_usize = |k: &str| v.get(k).and_then(Json::as_usize);
+        let specs = |k: &str| -> Result<Vec<IoSpec>> {
+            v.req(k)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{k} is not an array"))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: get_str("file").ok_or_else(|| anyhow!("missing file"))?,
+            hash: get_str("hash").unwrap_or_default(),
+            kind: get_str("kind").ok_or_else(|| anyhow!("missing kind"))?,
+            impl_name: get_str("impl"),
+            bh: get_usize("bh"),
+            n: get_usize("n"),
+            d: get_usize("d"),
+            chunk: get_usize("chunk"),
+            preset: get_str("preset"),
+            attn: get_str("attn"),
+            batch: get_usize("batch"),
+            n_params: v.get("n_params").and_then(Json::as_f64).map(|x| x as u64),
+            n_param_arrays: get_usize("n_param_arrays"),
+            param_names: v.get("param_names").and_then(Json::as_arr).map(|a| {
+                a.iter()
+                    .filter_map(Json::as_str)
+                    .map(str::to_string)
+                    .collect()
+            }),
+            model: v.get("model").cloned(),
+            train: v.get("train").cloned(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+
+    /// The attention implementation this artifact benchmarks, if any.
+    pub fn implementation(&self) -> Option<&str> {
+        self.impl_name.as_deref()
+    }
+
+    /// Model-config field of an LM artifact (from the embedded config dict).
+    pub fn model_field_usize(&self, key: &str) -> Option<usize> {
+        self.model.as_ref()?.get(key)?.as_usize()
+    }
+
+    /// Train-config field of an LM artifact.
+    pub fn train_field_f64(&self, key: &str) -> Option<f64> {
+        self.train.as_ref()?.get(key)?.as_f64()
+    }
+}
+
+/// The parsed manifest: artifact name → metadata.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub jax: String,
+    pub preset: String,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in v
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts is not an object"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta::from_json(meta)
+                    .with_context(|| format!("artifact {name:?}"))?,
+            );
+        }
+        Ok(Self {
+            version: v.get("version").and_then(Json::as_usize).unwrap_or(0) as u32,
+            jax: v.get("jax").and_then(Json::as_str).unwrap_or("").to_string(),
+            preset: v.get("preset").and_then(Json::as_str).unwrap_or("").to_string(),
+            artifacts,
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let mut m = Self::from_json_text(&text)
+            .with_context(|| format!("parsing {path:?}"))?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    /// Locate the artifact directory: `$REPRO_ARTIFACTS`, else `./artifacts`,
+    /// walking up from the current directory (tests run from target subdirs).
+    pub fn discover() -> Result<Self> {
+        if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+            return Self::load(dir);
+        }
+        let mut cur = std::env::current_dir()?;
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return Self::load(cand);
+            }
+            if !cur.pop() {
+                return Err(anyhow!(
+                    "no artifacts/manifest.json found — run `make artifacts`"
+                ));
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest (preset {:?})", self.preset))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// All artifacts of a given kind, sorted by name.
+    pub fn by_kind<'a>(&'a self, kind: &str) -> Vec<(&'a String, &'a ArtifactMeta)> {
+        self.artifacts.iter().filter(|(_, a)| a.kind == kind).collect()
+    }
+
+    /// Layer artifacts for one implementation, ordered by N then D.
+    pub fn layer_sweep<'a>(
+        &'a self,
+        kind: &str,
+        impl_name: &str,
+    ) -> Vec<(&'a String, &'a ArtifactMeta)> {
+        let mut v: Vec<_> = self
+            .artifacts
+            .iter()
+            .filter(|(name, a)| {
+                a.kind == kind
+                    && a.implementation() == Some(impl_name)
+                    && !name.starts_with("quickstart")
+            })
+            .collect();
+        v.sort_by_key(|(_, a)| (a.n.unwrap_or(0), a.d.unwrap_or(0)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "jax": "0.8.2", "preset": "default",
+      "artifacts": {
+        "layer_ours_fwd_n1024_d128": {
+          "file": "layer_ours_fwd_n1024_d128.hlo.txt", "hash": "abc",
+          "kind": "layer_fwd", "impl": "ours", "bh": 4, "n": 1024, "d": 128,
+          "chunk": 128,
+          "inputs": [{"index":0,"dtype":"f32","shape":[4,1024,128]}],
+          "outputs": [{"index":0,"dtype":"f32","shape":[4,1024,128]}]
+        },
+        "lm_tiny_ours_train_step": {
+          "file": "lm.hlo.txt", "hash": "def", "kind": "lm_train_step",
+          "batch": 2, "n_param_arrays": 3,
+          "model": {"n_ctx": 128, "vocab_size": 256},
+          "train": {"lr_max": 0.001},
+          "inputs": [], "outputs": []
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        let a = m.artifacts.get("layer_ours_fwd_n1024_d128").unwrap();
+        assert_eq!(a.implementation(), Some("ours"));
+        assert_eq!(a.n, Some(1024));
+        assert_eq!(a.inputs[0].numel(), 4 * 1024 * 128);
+        assert_eq!(a.inputs[0].size_bytes(), 4 * 1024 * 128 * 4);
+    }
+
+    #[test]
+    fn lm_meta_fields() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        let a = m.artifacts.get("lm_tiny_ours_train_step").unwrap();
+        assert_eq!(a.model_field_usize("n_ctx"), Some(128));
+        assert_eq!(a.train_field_f64("lr_max"), Some(1e-3));
+        assert_eq!(a.batch, Some(2));
+    }
+
+    #[test]
+    fn by_kind_filters() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert_eq!(m.by_kind("layer_fwd").len(), 1);
+        assert_eq!(m.by_kind("lm_init").len(), 0);
+        assert_eq!(m.layer_sweep("layer_fwd", "ours").len(), 1);
+        assert_eq!(m.layer_sweep("layer_fwd", "gated").len(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::from_json_text(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+}

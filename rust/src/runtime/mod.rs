@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//!
+//! The interchange contract with the Python build path (`python/compile/aot.py`):
+//! - every computation is a file `artifacts/<name>.hlo.txt` (HLO **text** —
+//!   the xla crate's 0.5.1 extension rejects jax ≥ 0.5 serialized protos);
+//! - `artifacts/manifest.json` records per-artifact input/output specs and
+//!   metadata (kind, impl, N, D, model config, parameter names);
+//! - all computations are lowered with `return_tuple=True`, so execution
+//!   yields a single tuple literal that [`Executable::run`] decomposes.
+
+mod engine;
+mod manifest;
+mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactMeta, IoSpec, Manifest};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,220 @@
+//! Host-side tensor: the typed bridge between Rust data and XLA literals.
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal, Shape};
+
+/// Element type of a [`Tensor`] (the subset our artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_tag(tag: &str) -> Result<Self> {
+        match tag {
+            "f32" => Ok(DType::F32),
+            "i32" | "s32" => Ok(DType::I32),
+            other => bail!("unsupported dtype tag {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor (row-major), convertible to/from [`xla::Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+        }
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn zeros(dtype: DType, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::F32 { shape, data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { shape, data: vec![0; n] },
+        }
+    }
+
+    /// Scalar i32 (rank-0) — seeds, step counters.
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    /// Scalar f32 (rank-0).
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// First element as f32 (for rank-0 losses/metrics).
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            Tensor::F32 { data, .. } => {
+                data.first().copied().ok_or_else(|| anyhow!("empty tensor"))
+            }
+            Tensor::I32 { data, .. } => {
+                data.first().map(|v| *v as f32).ok_or_else(|| anyhow!("empty tensor"))
+            }
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => Literal::vec1(data),
+            Tensor::I32 { data, .. } => Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.shape()?;
+        let arr = match &shape {
+            Shape::Array(a) => a,
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+        match arr.ty() {
+            ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+
+    /// Deterministic pseudo-random normal tensor (Box–Muller over splitmix64);
+    /// used to generate benchmark inputs without a Python round trip.
+    pub fn randn(shape: Vec<usize>, seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let mut rng = crate::data::rng::SplitMix64::new(seed);
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            let u1 = rng.next_f64().max(1e-12);
+            let u2 = rng.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            data.push((r * th.cos()) as f32);
+            if data.len() < n {
+                data.push((r * th.sin()) as f32);
+            }
+        }
+        Tensor::F32 { shape, data }
+    }
+
+    /// Row-normalize the last axis to unit L2 norm (paper §3.3) — used to
+    /// build well-conditioned q/k bench inputs host-side.
+    pub fn normalize_rows(&mut self) {
+        if let Tensor::F32 { shape, data } = self {
+            let d = *shape.last().unwrap_or(&1);
+            if d == 0 {
+                return;
+            }
+            for row in data.chunks_mut(d) {
+                let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+                for x in row.iter_mut() {
+                    *x /= norm;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_i32(42);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.scalar().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn randn_is_deterministic_and_normalish() {
+        let a = Tensor::randn(vec![64, 32], 7);
+        let b = Tensor::randn(vec![64, 32], 7);
+        assert_eq!(a, b);
+        let mean: f32 =
+            a.as_f32().unwrap().iter().sum::<f32>() / a.numel() as f32;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn normalize_rows_unit_norm() {
+        let mut t = Tensor::randn(vec![8, 16], 3);
+        t.normalize_rows();
+        for row in t.as_f32().unwrap().chunks(16) {
+            let n = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-3, "norm {n}");
+        }
+    }
+
+    #[test]
+    fn size_accounting() {
+        let t = Tensor::zeros(DType::F32, vec![4, 256, 64]);
+        assert_eq!(t.numel(), 65536);
+        assert_eq!(t.size_bytes(), 262144);
+    }
+}

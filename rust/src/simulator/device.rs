@@ -1,0 +1,57 @@
+//! Device specifications for the roofline/traffic model.
+
+/// A GPU (or TPU-like) device for the analytic model.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Off-chip (HBM/GDDR) bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Peak fp32 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// On-chip scratch (shared memory / VMEM) per compute unit, bytes.
+    pub sram_bytes: f64,
+    /// Fixed cost per kernel launch, seconds.
+    pub launch_overhead: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA RTX A6000 — the paper's evaluation device.
+    /// 768 GB/s GDDR6, 38.7 TFLOP/s fp32, 100 KB smem/SM usable.
+    pub fn a6000() -> Self {
+        Self {
+            name: "A6000",
+            mem_bw: 768e9,
+            peak_flops: 38.7e12,
+            sram_bytes: 100e3,
+            launch_overhead: 5e-6,
+        }
+    }
+
+    /// A TPUv4-like core for the §Hardware-Adaptation estimates:
+    /// 1.2 TB/s HBM, 275 TFLOP/s bf16 (≈ 34 TFLOP/s fp32 VPU path is not the
+    /// relevant number for matmul; we model MXU fp32-accumulate), 16 MiB VMEM.
+    pub fn tpu_v4_like() -> Self {
+        Self {
+            name: "TPUv4-like",
+            mem_bw: 1.2e12,
+            peak_flops: 137.5e12,
+            sram_bytes: 16.0 * 1024.0 * 1024.0,
+            launch_overhead: 2e-6,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a6000_numbers() {
+        let d = DeviceSpec::a6000();
+        assert_eq!(d.name, "A6000");
+        assert!(d.mem_bw > 7e11 && d.mem_bw < 8e11);
+        // machine balance: flops per byte — sanity window
+        let balance = d.peak_flops / d.mem_bw;
+        assert!(balance > 30.0 && balance < 80.0, "balance {balance}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Analytic GPU data-movement / roofline simulator (DESIGN.md §Substitutions).
+//!
+//! The paper's Fig. 4 measures off-chip traffic of CUDA kernels on an A6000
+//! with profiling counters.  Without that hardware we compute the traffic
+//! *algorithmically*: every implementation's §4-style access pattern implies
+//! an exact count of off-chip bytes moved per forward pass, and combining it
+//! with the device's bandwidth and (derated) peak FLOP/s yields movement
+//! time, compute time, and the movement-to-total ratio the paper plots.
+//!
+//! The model is conservative (no compute/copy overlap) and deliberately
+//! simple; what it preserves is the *ordering and rough factors* between
+//! implementations, which is the figure's claim.
+
+pub mod device;
+pub mod traffic;
+pub mod vmem;
+
+pub use device::DeviceSpec;
+pub use traffic::{Impl, TrafficModel, TrafficReport};
+pub use vmem::VmemModel;

@@ -1,0 +1,299 @@
+//! Per-implementation off-chip traffic equations (forward pass, causal).
+//!
+//! Derivations follow each system's published access pattern; elements are
+//! fp32 (4 bytes), all counts per full layer (B·H heads folded in).
+//!
+//! | impl      | pattern                                                         |
+//! |-----------|------------------------------------------------------------------|
+//! | Ours      | one fused kernel: Q,K,V read once, O + g written once (§4)        |
+//! | Gated LA  | chunkwise, separate inter/intra/state phases; per-chunk D×D state |
+//! |           | materialized to HBM for the backward (Yang et al. §4)             |
+//! | Baseline  | eager tensor-wise ops: every intermediate (N×N scores, mask,      |
+//! |           | row-sums) round-trips HBM (paper §5.1 "100×" discussion)          |
+//! | Spec-dec  | quadratic materialization, fewer passes than eager baseline       |
+//! | Flash     | K,V re-streamed once per Q block of rows Br = M/(16·D)            |
+//! | Softmax   | naive: N² scores written + read twice (softmax, then AV)          |
+
+use super::device::DeviceSpec;
+
+const ELT: f64 = 4.0; // fp32 bytes
+
+/// Attention implementation, as named in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Impl {
+    Ours,
+    Gated,
+    Baseline,
+    SpecDec,
+    Flash,
+    Softmax,
+}
+
+impl Impl {
+    pub fn name(self) -> &'static str {
+        match self {
+            Impl::Ours => "ours",
+            Impl::Gated => "gated",
+            Impl::Baseline => "quadratic",
+            Impl::SpecDec => "specdec",
+            Impl::Flash => "flash",
+            Impl::Softmax => "softmax",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "ours" | "ours_scan" => Impl::Ours,
+            "gated" => Impl::Gated,
+            "quadratic" | "baseline" => Impl::Baseline,
+            "specdec" => Impl::SpecDec,
+            "flash" => Impl::Flash,
+            "softmax" => Impl::Softmax,
+            _ => return None,
+        })
+    }
+
+    /// All LA implementations (the Fig-4 set).
+    pub fn la_impls() -> [Impl; 4] {
+        [Impl::Ours, Impl::Gated, Impl::SpecDec, Impl::Baseline]
+    }
+
+    /// Achievable fraction of peak FLOP/s for this implementation's compute
+    /// pattern (fused custom kernel vs eager element-wise chains).
+    pub fn compute_efficiency(self) -> f64 {
+        match self {
+            Impl::Ours => 0.35,     // D×D MACs per thread-block, fused
+            Impl::Gated => 0.30,    // chunked matmuls, extra phases
+            Impl::Flash => 0.55,    // big tiled matmuls
+            Impl::Softmax => 0.50,  // cuBLAS matmuls + softmax pass
+            // eager chains run their two big matmuls through cuBLAS at high
+            // efficiency — their *time* is dominated by the element-wise
+            // HBM round-trips, which the movement term accounts for.
+            Impl::Baseline => 0.70,
+            Impl::SpecDec => 0.70,
+        }
+    }
+}
+
+/// Result of the traffic model for one (impl, shape) point.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficReport {
+    pub impl_: Impl,
+    pub bh: usize,
+    pub n: usize,
+    pub d: usize,
+    /// Off-chip bytes moved (read + write).
+    pub bytes: f64,
+    /// FLOPs executed.
+    pub flops: f64,
+    /// Seconds spent moving data at device bandwidth.
+    pub move_s: f64,
+    /// Seconds of compute at derated peak.
+    pub compute_s: f64,
+    /// Modeled total (no overlap) incl. launch overheads.
+    pub total_s: f64,
+    /// Peak resident off-chip memory, bytes.
+    pub mem_bytes: f64,
+}
+
+impl TrafficReport {
+    /// The Fig-4 left panel: movement / total.
+    pub fn move_ratio(&self) -> f64 {
+        self.move_s / self.total_s
+    }
+}
+
+/// The analytic model over a device.
+#[derive(Debug, Clone, Copy)]
+pub struct TrafficModel {
+    pub dev: DeviceSpec,
+    /// Sequence chunk used by chunkwise implementations.
+    pub chunk: f64,
+}
+
+impl TrafficModel {
+    pub fn new(dev: DeviceSpec) -> Self {
+        Self { dev, chunk: 64.0 }
+    }
+
+    /// Off-chip element transfers for one forward pass.
+    fn elements(&self, imp: Impl, bh: f64, n: f64, d: f64) -> f64 {
+        let c = self.chunk;
+        let io = 4.0 * n * d + n; // Q,K,V in + O out + g
+        bh * match imp {
+            // §4: fully fused; inputs once, outputs once.
+            Impl::Ours => io,
+            // GLA: 3 phases each re-touching the chunk inputs, per-chunk D×D
+            // state spilled + reloaded, intra-chunk C×C scores via HBM in the
+            // non-fused form.
+            Impl::Gated => 3.0 * 3.0 * n * d + n * d + 2.0 * (n / c) * d * d + 2.0 * n * c,
+            // eager PyTorch: scores(N²) write, mask materialize + rw, masked
+            // mul rw, row-sum read, AV read, broadcast-div r+r+w, plus the
+            // autograd graph saving score/mask copies → ≈12 N² round-trips.
+            Impl::Baseline => 12.0 * n * n + 6.0 * n * d,
+            // spec-dec: quadratic materialization, fewer passes (~8 N²).
+            Impl::SpecDec => 8.0 * n * n + 6.0 * n * d,
+            // FA-2: K,V streamed once per Q row-block; Br rows fit in SRAM.
+            Impl::Flash => {
+                let br = (self.dev.sram_bytes / (16.0 * d)).max(1.0);
+                2.0 * n * d * (n / br) + 2.0 * n * d
+            }
+            // naive softmax: scores written, softmaxed (rw), then read for AV.
+            Impl::Softmax => 4.0 * n * n + 3.0 * n * d,
+        }
+    }
+
+    /// FLOPs for one forward pass.
+    fn flops(&self, imp: Impl, bh: f64, n: f64, d: f64) -> f64 {
+        bh * match imp {
+            // intra-chunk (2NCD) + inter (2ND²) + state update (2ND²) + norm
+            Impl::Ours | Impl::Gated => 4.0 * n * d * d + 2.0 * n * self.chunk * d,
+            _ => 4.0 * n * n * d, // QKᵀ + AV
+        }
+    }
+
+    /// Kernel launches for one forward pass (adds fixed overhead).
+    fn launches(&self, imp: Impl, _n: f64) -> f64 {
+        match imp {
+            Impl::Ours => 2.0, // constant + linear phases
+            Impl::Gated => 6.0, // inter/intra/state kernels (chunk loop inside)
+            Impl::Baseline => 8.0,
+            Impl::SpecDec => 6.0,
+            Impl::Flash => 1.0,
+            Impl::Softmax => 4.0,
+        }
+    }
+
+    /// Peak resident off-chip bytes (the Fig-2/3 memory panels).
+    pub fn memory_bytes(&self, imp: Impl, bh: usize, n: usize, d: usize) -> f64 {
+        let (bh, n, d) = (bh as f64, n as f64, d as f64);
+        let io = 4.0 * n * d + n;
+        ELT * bh
+            * match imp {
+                Impl::Ours => io,                       // O(N·D)
+                Impl::Flash => io,                      // O(N·D)
+                Impl::Gated => io + 2.0 * (n / self.chunk) * d * d, // chunk states
+                Impl::Softmax => io + n * n,            // O(N²)
+                Impl::Baseline => io + 2.0 * n * n,     // scores + mask copies
+                Impl::SpecDec => io + n * d * d / 64.0, // causal autodiff residuals O(N·D²)/heads nuance
+            }
+    }
+
+    /// Full report for one point.
+    pub fn report(&self, imp: Impl, bh: usize, n: usize, d: usize) -> TrafficReport {
+        let (bhf, nf, df) = (bh as f64, n as f64, d as f64);
+        let bytes = ELT * self.elements(imp, bhf, nf, df);
+        let flops = self.flops(imp, bhf, nf, df);
+        let move_s = bytes / self.dev.mem_bw;
+        let compute_s = flops / (self.dev.peak_flops * imp.compute_efficiency());
+        let total_s = move_s + compute_s + self.launches(imp, nf) * self.dev.launch_overhead;
+        TrafficReport {
+            impl_: imp,
+            bh,
+            n,
+            d,
+            bytes,
+            flops,
+            move_s,
+            compute_s,
+            total_s,
+            mem_bytes: self.memory_bytes(imp, bh, n, d),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TrafficModel {
+        TrafficModel::new(DeviceSpec::a6000())
+    }
+
+    /// The paper's Table-1 point: B=4, H=16, D=128, N=10⁴.
+    const BH: usize = 64;
+    const N: usize = 10_000;
+    const D: usize = 128;
+
+    #[test]
+    fn ours_moves_least() {
+        let m = model();
+        let ours = m.report(Impl::Ours, BH, N, D);
+        for imp in [Impl::Gated, Impl::Baseline, Impl::SpecDec] {
+            let r = m.report(imp, BH, N, D);
+            assert!(r.bytes > 2.0 * ours.bytes, "{imp:?} bytes {} vs ours {}", r.bytes, ours.bytes);
+        }
+    }
+
+    #[test]
+    fn ours_ratio_is_lowest_and_baseline_traffic_is_100x() {
+        let m = model();
+        let ours = m.report(Impl::Ours, BH, N, D);
+        let gated = m.report(Impl::Gated, BH, N, D);
+        let base = m.report(Impl::Baseline, BH, N, D);
+        assert!(ours.move_ratio() < gated.move_ratio());
+        assert!(gated.move_ratio() < base.move_ratio());
+        // paper: baseline data movement ~100× ours
+        let factor = base.move_s / ours.move_s;
+        assert!(factor > 30.0, "factor {factor}");
+        // paper: gated ratio ≈ 71%, ours ≈ one-third of that — loose bands
+        assert!(gated.move_ratio() > 0.5, "gated ratio {}", gated.move_ratio());
+        assert!(ours.move_ratio() < 0.5, "ours ratio {}", ours.move_ratio());
+    }
+
+    #[test]
+    fn linear_vs_quadratic_scaling() {
+        let m = model();
+        let t1 = m.report(Impl::Ours, BH, 4096, D).total_s;
+        let t2 = m.report(Impl::Ours, BH, 8192, D).total_s;
+        let ratio = t2 / t1;
+        assert!(ratio > 1.7 && ratio < 2.3, "linear impl ratio {ratio}");
+        let q1 = m.report(Impl::Softmax, BH, 4096, D).total_s;
+        let q2 = m.report(Impl::Softmax, BH, 8192, D).total_s;
+        let qratio = q2 / q1;
+        assert!(qratio > 3.3, "quadratic impl ratio {qratio}");
+    }
+
+    #[test]
+    fn crossover_with_flash_is_in_the_thousands() {
+        // paper §5.1: ours faster than FlashAttention-2 for N > ~3000
+        let m = model();
+        let mut crossover = None;
+        for n in (512..32768).step_by(256) {
+            let ours = m.report(Impl::Ours, BH, n, D).total_s;
+            let flash = m.report(Impl::Flash, BH, n, D).total_s;
+            if ours < flash {
+                crossover = Some(n);
+                break;
+            }
+        }
+        // the model places the crossover earlier than the paper's measured
+        // ~3000 (FA-2's tensor-core constants are better than a generic
+        // efficiency factor captures); the *shape* claim is that a finite
+        // crossover exists and ours wins beyond it.
+        let n = crossover.expect("no crossover found");
+        assert!(n <= 8192, "crossover at {n}");
+        let big_ours = m.report(Impl::Ours, BH, 32768, D).total_s;
+        let big_flash = m.report(Impl::Flash, BH, 32768, D).total_s;
+        assert!(big_flash / big_ours > 3.0, "long-N win factor {}", big_flash / big_ours);
+    }
+
+    #[test]
+    fn memory_ours_matches_flash_and_beats_gated() {
+        // paper: ours & FA-2 lowest memory (overlapping lines), gated 3.6×
+        let m = model();
+        let ours = m.memory_bytes(Impl::Ours, BH, N, D);
+        let flash = m.memory_bytes(Impl::Flash, BH, N, D);
+        let gated = m.memory_bytes(Impl::Gated, BH, N, D);
+        assert!((ours - flash).abs() / ours < 1e-9);
+        assert!(gated > 1.5 * ours, "gated {gated} vs ours {ours}");
+    }
+
+    #[test]
+    fn impl_name_roundtrip() {
+        for imp in [Impl::Ours, Impl::Gated, Impl::Baseline, Impl::SpecDec, Impl::Flash, Impl::Softmax] {
+            assert_eq!(Impl::from_name(imp.name()), Some(imp));
+        }
+        assert_eq!(Impl::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,94 @@
+//! VMEM-footprint model for the Pallas kernel (DESIGN.md §Hardware-Adaptation).
+//!
+//! On a real TPU the forward kernel keeps, per grid step:
+//!   - the carried state: S (D×D) + z (D) + t (D) + n (1)
+//!   - the pipelined chunk blocks: q, k, v in + o out, each (C×D), with
+//!     double-buffering (×2) on the inputs so the next chunk's HBM→VMEM DMA
+//!     overlaps compute,
+//!   - the (C×C) intra-chunk score tile.
+//! The backward adds the Ω̂ block and the (D×D) reverse states A plus c, u.
+//!
+//! Everything is fp32 here (the kernels accumulate in f32; a bf16 variant
+//! would halve the streaming blocks but not the f32 state accumulators).
+
+const ELT: usize = 4;
+
+/// Footprint model for one (C, D) kernel configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct VmemModel {
+    pub chunk: usize,
+    pub d: usize,
+}
+
+impl VmemModel {
+    pub fn new(chunk: usize, d: usize) -> Self {
+        Self { chunk, d }
+    }
+
+    /// Forward-kernel VMEM bytes.
+    pub fn forward_bytes(&self) -> usize {
+        let (c, d) = (self.chunk, self.d);
+        let state = d * d + 2 * d + 1;
+        let blocks = 2 * (3 * c * d) + c * d + c; // in ×2 (dbl-buf), out o + g
+        let scores = c * c;
+        ELT * (state + blocks + scores)
+    }
+
+    /// Backward-kernel VMEM bytes (the dKV reverse scan is the larger one).
+    pub fn backward_bytes(&self) -> usize {
+        let (c, d) = (self.chunk, self.d);
+        let state = d * d + 2 * d; // A + c + u
+        let blocks = 2 * (5 * c * d) + 2 * c * d; // q,k,v,o,Ω̂ in ×2; dk,dv out
+        let scores = 2 * c * c;
+        ELT * (state + blocks + scores)
+    }
+
+    /// Fraction of a VMEM budget consumed by the forward kernel.
+    pub fn forward_occupancy(&self, vmem_budget: usize) -> f64 {
+        self.forward_bytes() as f64 / vmem_budget as f64
+    }
+
+    /// MXU utilization estimate: fraction of issued MACs that are "useful"
+    /// relative to an ideal dense schedule.  The causal-masked intra-chunk
+    /// (C×C) matmul wastes half its tile; inter-chunk (C×D)×(D×D) work is
+    /// dense.  Utilization = useful / issued.
+    pub fn mxu_utilization(&self) -> f64 {
+        let (c, d) = (self.chunk as f64, self.d as f64);
+        // issued MACs per chunk: intra c*c*d (half masked) + inter c*d*d + update c*d*d
+        let issued = c * c * d + 2.0 * c * d * d;
+        let useful = 0.5 * c * c * d + 2.0 * c * d * d;
+        useful / issued
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const VMEM: usize = 16 * 1024 * 1024;
+
+    #[test]
+    fn paper_shape_fits_vmem_easily() {
+        // D=128, C=128 — the bench default
+        let m = VmemModel::new(128, 128);
+        assert!(m.forward_bytes() < 1024 * 1024, "{} B", m.forward_bytes());
+        assert!(m.forward_occupancy(VMEM) < 0.10);
+        assert!(m.backward_bytes() < 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn largest_d_still_fits() {
+        // D=512 is the paper's stated upper bound (§4.1)
+        let m = VmemModel::new(128, 512);
+        assert!(m.forward_occupancy(VMEM) < 0.25, "{}", m.forward_occupancy(VMEM));
+    }
+
+    #[test]
+    fn utilization_improves_with_d_over_c() {
+        // more inter-chunk (dense) work per masked intra tile → better MXU use
+        let low = VmemModel::new(128, 32).mxu_utilization();
+        let high = VmemModel::new(128, 256).mxu_utilization();
+        assert!(high > low);
+        assert!(high > 0.85, "high-D utilization {high}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic reasoning suite — the Table-2 stand-in (DESIGN.md §Substitutions).
+//!
+//! MMLU/PIQA/ARC need real-world pretraining; at this scale we instead score
+//! the in-context abilities the LA literature itself uses as expressivity
+//! proxies (Arora et al. 2024): associative recall, induction, copy, reverse,
+//! and modular arithmetic.  Each task emits token sequences inside the byte
+//! vocabulary (ids < 256, valid for every LM artifact) with designated answer
+//! positions; the scorer runs the `lm_*_logits` artifact and counts argmax
+//! hits, i.e. 0-shot exact match.
+
+pub mod scorer;
+pub mod suite;
+
+pub use scorer::{score_task, TaskScore};
+pub use suite::{Example, Task, TaskKind};

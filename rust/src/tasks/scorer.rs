@@ -1,0 +1,111 @@
+//! Score a trained LM on the synthetic suite via the `lm_*_logits` artifact.
+
+use anyhow::{anyhow, bail, Result};
+use xla::Literal;
+
+use crate::runtime::{Engine, Tensor};
+
+use super::suite::{Task, TaskKind};
+
+/// Accuracy summary for one task.
+#[derive(Debug, Clone)]
+pub struct TaskScore {
+    pub task: &'static str,
+    pub examples: usize,
+    pub positions: usize,
+    pub correct: usize,
+}
+
+impl TaskScore {
+    pub fn accuracy(&self) -> f64 {
+        if self.positions == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.positions as f64
+        }
+    }
+}
+
+/// Run `examples` through the logits artifact in batches and count argmax
+/// hits at the answer positions.
+///
+/// `params` are the first `n_param_arrays` literals of a training state (or a
+/// checkpoint restored by the trainer).
+pub fn score_task(
+    engine: &Engine,
+    logits_artifact: &str,
+    params: &[Literal],
+    kind: TaskKind,
+    count: usize,
+    seed: u64,
+) -> Result<TaskScore> {
+    let exe = engine.load(logits_artifact)?;
+    let meta = &exe.meta;
+    let nparam = meta
+        .n_param_arrays
+        .ok_or_else(|| anyhow!("logits artifact missing n_param_arrays"))?;
+    if params.len() < nparam {
+        bail!("expected ≥{nparam} param literals, got {}", params.len());
+    }
+    let batch = meta.batch.ok_or_else(|| anyhow!("missing batch"))?;
+    let n_ctx = meta
+        .model_field_usize("n_ctx")
+        .ok_or_else(|| anyhow!("missing n_ctx"))?;
+    let vocab = meta.model_field_usize("vocab_size").unwrap_or(256);
+
+    let task = Task::new(kind, n_ctx)?;
+    let examples = task.generate(count, seed);
+
+    let mut score = TaskScore {
+        task: kind.name(),
+        examples: 0,
+        positions: 0,
+        correct: 0,
+    };
+    for chunk in examples.chunks(batch) {
+        if chunk.len() < batch {
+            break; // static shapes: drop the ragged tail
+        }
+        let mut data = Vec::with_capacity(batch * n_ctx);
+        for ex in chunk {
+            data.extend_from_slice(&ex.tokens);
+        }
+        let tokens = Tensor::i32(vec![batch, n_ctx], data)?;
+        let tokens_lit = tokens.to_literal()?;
+        let mut args: Vec<&Literal> = params[..nparam].iter().collect();
+        args.push(&tokens_lit);
+        let out = exe.run_literals_ref(&args)?;
+        let logits = out[0].as_f32()?;
+        // logits: (batch, n_ctx, vocab); prediction for pos p reads row p-1
+        for (bi, ex) in chunk.iter().enumerate() {
+            score.examples += 1;
+            for &p in &ex.answer_pos {
+                let row = &logits[(bi * n_ctx + (p - 1)) * vocab..][..vocab];
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(-1);
+                score.positions += 1;
+                if argmax == ex.tokens[p] {
+                    score.correct += 1;
+                }
+            }
+        }
+    }
+    Ok(score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_math() {
+        let s = TaskScore { task: "copy", examples: 4, positions: 10, correct: 7 };
+        assert!((s.accuracy() - 0.7).abs() < 1e-12);
+        let z = TaskScore { task: "copy", examples: 0, positions: 0, correct: 0 };
+        assert_eq!(z.accuracy(), 0.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Task generators: token sequences with designated answer positions.
+
+use anyhow::{bail, Result};
+
+use crate::data::rng::SplitMix64;
+
+/// The five synthetic reasoning tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// `k₁ v₁ k₂ v₂ … query=kᵢ → vᵢ` — in-context key/value lookup.
+    AssociativeRecall,
+    /// `… x y … x → y` — induction-head completion of a repeated bigram.
+    Induction,
+    /// `seq # seq` — verbatim copy after a separator.
+    Copy,
+    /// `seq # reverse(seq)` — reversal after a separator.
+    Reverse,
+    /// `a + b = c (mod 10)` digit sequences.
+    ModArithmetic,
+}
+
+impl TaskKind {
+    pub fn all() -> [TaskKind; 5] {
+        [
+            TaskKind::AssociativeRecall,
+            TaskKind::Induction,
+            TaskKind::Copy,
+            TaskKind::Reverse,
+            TaskKind::ModArithmetic,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::AssociativeRecall => "assoc_recall",
+            TaskKind::Induction => "induction",
+            TaskKind::Copy => "copy",
+            TaskKind::Reverse => "reverse",
+            TaskKind::ModArithmetic => "mod_arith",
+        }
+    }
+}
+
+/// One scored example: a fixed-length token row plus the positions whose
+/// tokens the model must predict (scored at `pos`, predicting `tokens[pos]`
+/// from the prefix `tokens[..pos]`).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub answer_pos: Vec<usize>,
+}
+
+/// A concrete task instance bound to a sequence length.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub kind: TaskKind,
+    pub seq_len: usize,
+}
+
+// byte-token helpers: letters for keys, digits for values, ascii filler
+const KEYS: &[u8] = b"abcdefghijklmnopqrstuvwxyz";
+const VALS: &[u8] = b"0123456789";
+const SEP: u8 = b'#';
+const SPACE: u8 = b' ';
+const FILL: u8 = b'.';
+
+impl Task {
+    pub fn new(kind: TaskKind, seq_len: usize) -> Result<Self> {
+        if seq_len < 32 {
+            bail!("seq_len {seq_len} too short for the task suite");
+        }
+        Ok(Self { kind, seq_len })
+    }
+
+    /// Generate `count` examples, deterministic in `seed`.
+    pub fn generate(&self, count: usize, seed: u64) -> Vec<Example> {
+        let mut rng = SplitMix64::new(seed ^ (self.kind.name().len() as u64) << 32);
+        (0..count).map(|_| self.generate_one(&mut rng)).collect()
+    }
+
+    fn generate_one(&self, rng: &mut SplitMix64) -> Example {
+        let mut body: Vec<u8> = Vec::new();
+        let mut answers_rel: Vec<usize> = Vec::new();
+        match self.kind {
+            TaskKind::AssociativeRecall => {
+                // pairs "k v " repeated; query "k" then answer v
+                let n_pairs = ((self.seq_len - 4) / 3 - 1).min(8).max(2);
+                let mut keys: Vec<u8> = KEYS.to_vec();
+                rng.shuffle(&mut keys);
+                let mut vals = Vec::with_capacity(n_pairs);
+                for i in 0..n_pairs {
+                    let v = VALS[rng.below(VALS.len())];
+                    vals.push(v);
+                    body.push(keys[i]);
+                    body.push(v);
+                    body.push(SPACE);
+                }
+                let qi = rng.below(n_pairs);
+                body.push(keys[qi]);
+                answers_rel.push(body.len()); // position of the value token
+                body.push(vals[qi]);
+            }
+            TaskKind::Induction => {
+                // random letter stream; plant "x y" early, re-query "x" late
+                let x = KEYS[rng.below(KEYS.len())];
+                let mut y = KEYS[rng.below(KEYS.len())];
+                while y == x {
+                    y = KEYS[rng.below(KEYS.len())];
+                }
+                let stream = (self.seq_len / 2).min(48);
+                for i in 0..stream {
+                    if i == 2 {
+                        body.push(x);
+                        body.push(y);
+                    } else {
+                        let mut c = KEYS[rng.below(KEYS.len())];
+                        while c == x {
+                            c = KEYS[rng.below(KEYS.len())];
+                        }
+                        body.push(c);
+                    }
+                }
+                body.push(x);
+                answers_rel.push(body.len());
+                body.push(y);
+            }
+            TaskKind::Copy | TaskKind::Reverse => {
+                let len = ((self.seq_len - 2) / 2).min(12).max(3);
+                let seq: Vec<u8> =
+                    (0..len).map(|_| KEYS[rng.below(KEYS.len())]).collect();
+                body.extend_from_slice(&seq);
+                body.push(SEP);
+                let target: Vec<u8> = if self.kind == TaskKind::Copy {
+                    seq.clone()
+                } else {
+                    seq.iter().rev().copied().collect()
+                };
+                for &t in &target {
+                    answers_rel.push(body.len());
+                    body.push(t);
+                }
+            }
+            TaskKind::ModArithmetic => {
+                let a = rng.below(10);
+                let b = rng.below(10);
+                let c = (a + b) % 10;
+                body.extend_from_slice(
+                    format!("{a} + {b} = ").as_bytes(),
+                );
+                answers_rel.push(body.len());
+                body.push(VALS[c]);
+            }
+        }
+        // left-pad with filler so answers sit deep in the context
+        let pad = self.seq_len.saturating_sub(body.len());
+        let mut tokens: Vec<i32> = Vec::with_capacity(self.seq_len);
+        tokens.extend(std::iter::repeat(FILL as i32).take(pad));
+        tokens.extend(body.iter().map(|&b| b as i32));
+        let answer_pos = answers_rel.iter().map(|&p| p + pad).collect();
+        Example { tokens, answer_pos }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_have_right_length_and_valid_answers() {
+        for kind in TaskKind::all() {
+            let t = Task::new(kind, 128).unwrap();
+            for ex in t.generate(20, 0) {
+                assert_eq!(ex.tokens.len(), 128, "{kind:?}");
+                assert!(!ex.answer_pos.is_empty(), "{kind:?}");
+                for &p in &ex.answer_pos {
+                    assert!(p > 0 && p < 128, "{kind:?} pos {p}");
+                    assert!(ex.tokens[p] < 256 && ex.tokens[p] >= 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let t = Task::new(TaskKind::AssociativeRecall, 64).unwrap();
+        let a = t.generate(5, 9);
+        let b = t.generate(5, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.answer_pos, y.answer_pos);
+        }
+    }
+
+    #[test]
+    fn recall_answer_is_the_planted_value() {
+        let t = Task::new(TaskKind::AssociativeRecall, 64).unwrap();
+        for ex in t.generate(50, 3) {
+            let p = ex.answer_pos[0];
+            let query_key = ex.tokens[p - 1];
+            // find the key earlier in context; its successor must equal answer
+            let hay = &ex.tokens[..p - 1];
+            let found = hay
+                .windows(2)
+                .rev()
+                .find(|w| w[0] == query_key)
+                .map(|w| w[1]);
+            assert_eq!(found, Some(ex.tokens[p]));
+        }
+    }
+
+    #[test]
+    fn copy_and_reverse_targets_are_correct() {
+        for (kind, rev) in [(TaskKind::Copy, false), (TaskKind::Reverse, true)] {
+            let t = Task::new(kind, 64).unwrap();
+            for ex in t.generate(20, 1) {
+                let sep = ex.tokens.iter().position(|&c| c == SEP as i32).unwrap();
+                let start = ex.tokens.iter().position(|&c| c != FILL as i32).unwrap();
+                let mut src: Vec<i32> = ex.tokens[start..sep].to_vec();
+                if rev {
+                    src.reverse();
+                }
+                let tgt: Vec<i32> = ex.answer_pos.iter().map(|&p| ex.tokens[p]).collect();
+                assert_eq!(src, tgt);
+            }
+        }
+    }
+
+    #[test]
+    fn mod_arith_is_correct() {
+        let t = Task::new(TaskKind::ModArithmetic, 32).unwrap();
+        for ex in t.generate(30, 2) {
+            let p = ex.answer_pos[0];
+            let text: String = ex.tokens[..p]
+                .iter()
+                .map(|&c| c as u8 as char)
+                .collect();
+            let text = text.trim_start_matches('.');
+            let parts: Vec<&str> = text.split_whitespace().collect();
+            let a: usize = parts[0].parse().unwrap();
+            let b: usize = parts[2].parse().unwrap();
+            let want = ((a + b) % 10).to_string();
+            assert_eq!(ex.tokens[p] as u8 as char, want.chars().next().unwrap());
+        }
+    }
+
+    #[test]
+    fn rejects_short_context() {
+        assert!(Task::new(TaskKind::Copy, 8).is_err());
+    }
+}

@@ -1,0 +1,6 @@
+//! Small in-tree utilities replacing external crates (the build is offline:
+//! only `xla` + `anyhow` are available — see Cargo.toml).
+
+pub mod cli;
+pub mod json;
+pub mod tomlmini;

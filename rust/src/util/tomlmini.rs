@@ -1,0 +1,153 @@
+//! Minimal TOML subset parser for run configs: `[section]` headers and
+//! `key = value` pairs with string / integer / float / boolean values and
+//! `#` comments.  No arrays-of-tables, no multi-line strings — the run
+//! config doesn't need them.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// section name → key → value; top-level keys live under "".
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse the TOML subset.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: unterminated section header", lineno + 1);
+            };
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected `key = value`", lineno + 1);
+        };
+        let key = k.trim().to_string();
+        let value = parse_value(v.trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue> {
+    if let Some(s) = v.strip_prefix('"') {
+        let Some(s) = s.strip_suffix('"') else {
+            bail!("unterminated string {v:?}");
+        };
+        return Ok(TomlValue::Str(s.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match v {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = v.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {v:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_types() {
+        let doc = parse(
+            r#"
+            top = 1
+            [train]
+            preset = "small"   # comment
+            steps = 2_000
+            lr = 1e-3
+            resume = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["train"]["preset"].as_str(), Some("small"));
+        assert_eq!(doc["train"]["steps"].as_usize(), Some(2000));
+        assert!((doc["train"]["lr"].as_f64().unwrap() - 1e-3).abs() < 1e-12);
+        assert_eq!(doc["train"]["resume"], TomlValue::Bool(false));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = parse(r#"k = "a#b""#).unwrap();
+        assert_eq!(doc[""]["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[open").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = what").is_err());
+    }
+}

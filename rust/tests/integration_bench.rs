@@ -1,0 +1,100 @@
+//! Integration: sweep runner + report emitters over the smallest artifacts,
+//! and the task scorer over a freshly-initialized model.
+
+use repro::bench::{report as rpt, SweepRunner};
+use repro::runtime::{Engine, Tensor};
+use repro::simulator::{DeviceSpec, TrafficModel};
+use repro::tasks::{score_task, TaskKind};
+
+#[test]
+fn sweep_runs_smallest_ours_artifact() {
+    let engine = Engine::discover().unwrap();
+    let mut runner = SweepRunner::new(&engine);
+    runner.reps = 2;
+    let p = runner.run_artifact("layer_ours_fwd_n1024_d128").unwrap();
+    assert_eq!(p.impl_name, "ours");
+    assert_eq!(p.n, 1024);
+    assert!(p.cpu_s.p50 > 0.0);
+    assert!(p.model_total_s > 0.0);
+    assert!(p.mem_bytes > 0.0);
+    assert!(p.cpu_s.min <= p.cpu_s.p50 && p.cpu_s.p50 <= p.cpu_s.max);
+}
+
+#[test]
+fn sweep_series_is_sorted_and_linear_in_n() {
+    let engine = Engine::discover().unwrap();
+    let mut runner = SweepRunner::new(&engine);
+    runner.reps = 2;
+    // limit to the two smallest points for test speed
+    runner.max_bytes = usize::MAX;
+    let names: Vec<String> = engine
+        .manifest
+        .layer_sweep("layer_fwd", "ours")
+        .iter()
+        .map(|(n, _)| (*n).clone())
+        .take(2)
+        .collect();
+    let pts: Vec<_> = names
+        .iter()
+        .map(|n| runner.run_artifact(n).unwrap())
+        .collect();
+    assert_eq!(pts.len(), 2);
+    assert!(pts[0].n < pts[1].n);
+    // the model (analytic) must scale linearly: 2× N → ≈2× time
+    let ratio = pts[1].model_total_s / pts[0].model_total_s;
+    assert!(ratio > 1.5 && ratio < 2.5, "model ratio {ratio}");
+}
+
+#[test]
+fn report_emitters_cover_points() {
+    let engine = Engine::discover().unwrap();
+    let mut runner = SweepRunner::new(&engine);
+    runner.reps = 1;
+    let p = runner.run_artifact("layer_ours_fwd_n1024_d128").unwrap();
+    let csv = rpt::sweep_csv(&[p.clone()]);
+    assert_eq!(csv.lines().count(), 2);
+    assert!(csv.contains("ours"));
+    let md = rpt::sweep_markdown("t", &[p]);
+    assert!(md.contains("| ours | 1024 | 128 | 128 |"));
+}
+
+#[test]
+fn fits_rejects_giant_quadratic_artifacts() {
+    let engine = Engine::discover().unwrap();
+    let mut runner = SweepRunner::new(&engine);
+    runner.max_bytes = 1 << 20; // 1 MB budget: nothing quadratic fits
+    assert!(!runner.fits("layer_softmax_fwd_n4096_d128"));
+    runner.max_bytes = usize::MAX;
+    assert!(runner.fits("layer_softmax_fwd_n4096_d128"));
+}
+
+#[test]
+fn table1_and_fig4_render() {
+    let m = TrafficModel::new(DeviceSpec::a6000());
+    let t1 = rpt::table1_markdown(&m);
+    assert!(t1.contains("Our LA"));
+    let f4 = rpt::fig4_markdown(&m, &[4096, 8192]);
+    assert!(f4.contains("ours"));
+}
+
+#[test]
+fn task_scorer_runs_on_fresh_init() {
+    let engine = Engine::discover().unwrap();
+    // build params via the init artifact (untrained — accuracy is near chance,
+    // the point is the scoring path end-to-end)
+    let init = engine.load("lm_tiny_ours_init").unwrap();
+    let seed = Tensor::scalar_i32(0).to_literal().unwrap();
+    let state = init.run_to_literals(&[seed]).unwrap();
+    let s = score_task(
+        &engine,
+        "lm_tiny_ours_logits",
+        &state,
+        TaskKind::Copy,
+        8,
+        0,
+    )
+    .unwrap();
+    assert!(s.positions > 0);
+    assert!(s.correct <= s.positions);
+    assert!(s.accuracy() >= 0.0 && s.accuracy() <= 1.0);
+}

@@ -1,0 +1,107 @@
+//! Integration: PJRT runtime over real AOT artifacts (requires `make artifacts`).
+
+use repro::runtime::{Engine, Tensor};
+
+fn engine() -> Engine {
+    Engine::discover().expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_discovers_and_has_core_artifacts() {
+    let e = engine();
+    assert_eq!(e.platform(), "cpu");
+    for name in ["quickstart_la_fwd", "quickstart_la_bwd", "quickstart_la_ref"] {
+        assert!(e.manifest.get(name).is_ok(), "missing {name}");
+    }
+    assert!(!e.manifest.by_kind("layer_fwd").is_empty());
+    assert!(!e.manifest.by_kind("lm_train_step").is_empty());
+}
+
+#[test]
+fn kernel_forward_matches_oracle_artifact() {
+    let e = engine();
+    let fwd = e.load("quickstart_la_fwd").unwrap();
+    let oracle = e.load("quickstart_la_ref").unwrap();
+    let shape = fwd.meta.inputs[0].shape.clone();
+    let mut q = Tensor::randn(shape.clone(), 11);
+    let mut k = Tensor::randn(shape.clone(), 12);
+    let v = Tensor::randn(shape.clone(), 13);
+    q.normalize_rows();
+    k.normalize_rows();
+    let a = fwd.run(&[q.clone(), k.clone(), v.clone()]).unwrap();
+    let b = oracle.run(&[q, k, v]).unwrap();
+    let err = a[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(b[0].as_f32().unwrap())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-4, "kernel vs oracle max err {err}");
+}
+
+#[test]
+fn backward_artifact_produces_finite_grads() {
+    let e = engine();
+    let bwd = e.load("quickstart_la_bwd").unwrap();
+    let shape = bwd.meta.inputs[0].shape.clone();
+    let mut q = Tensor::randn(shape.clone(), 1);
+    let mut k = Tensor::randn(shape.clone(), 2);
+    q.normalize_rows();
+    k.normalize_rows();
+    let v = Tensor::randn(shape.clone(), 3);
+    let go = Tensor::randn(shape.clone(), 4);
+    let grads = bwd.run(&[q, k, v, go]).unwrap();
+    assert_eq!(grads.len(), 3);
+    for g in &grads {
+        assert_eq!(g.shape(), shape.as_slice());
+        assert!(g.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let e = engine();
+    let fwd = e.load("quickstart_la_fwd").unwrap();
+    let bad = Tensor::randn(vec![1, 2, 3], 0);
+    let err = fwd.run(&[bad.clone(), bad.clone(), bad]);
+    assert!(err.is_err());
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let e = engine();
+    let fwd = e.load("quickstart_la_fwd").unwrap();
+    let shape = fwd.meta.inputs[0].shape.clone();
+    let t = Tensor::randn(shape, 0);
+    assert!(fwd.run(&[t]).is_err());
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let e = engine();
+    let a = e.load("quickstart_la_fwd").unwrap();
+    let b = e.load("quickstart_la_fwd").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn literal_roundtrip_through_tensor() {
+    let t = Tensor::randn(vec![3, 5, 7], 99);
+    let lit = t.to_literal().unwrap();
+    let back = Tensor::from_literal(&lit).unwrap();
+    assert_eq!(t, back);
+
+    let ti = Tensor::i32(vec![2, 2], vec![1, -2, 3, -4]).unwrap();
+    let lit = ti.to_literal().unwrap();
+    assert_eq!(Tensor::from_literal(&lit).unwrap(), ti);
+}
+
+#[test]
+fn io_byte_accounting_matches_manifest() {
+    let e = engine();
+    let fwd = e.load("quickstart_la_fwd").unwrap();
+    // 3 inputs of (4, 256, 64) f32
+    assert_eq!(fwd.input_bytes(), 3 * 4 * 256 * 64 * 4);
+    assert_eq!(fwd.output_bytes(), 4 * 256 * 64 * 4);
+}

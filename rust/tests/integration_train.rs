@@ -1,0 +1,114 @@
+//! Integration: the full training coordinator over the lm-tiny artifacts.
+
+use repro::coordinator::config::{DataSection, OutputSection, TrainSection};
+use repro::coordinator::{Checkpoint, RunConfig, Trainer};
+use repro::runtime::Engine;
+
+fn cfg(attn: &str, steps: usize, dir: &str) -> RunConfig {
+    RunConfig {
+        train: TrainSection {
+            preset: "tiny".into(),
+            attn: attn.into(),
+            steps,
+            eval_every: steps.max(2) / 2,
+            ckpt_every: 0,
+            seed: 0,
+        },
+        data: DataSection { corpus_bytes: 1 << 20, val_frac: 0.1 },
+        output: OutputSection { dir: dir.into() },
+    }
+}
+
+fn tmpdir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("repro_it_{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_string_lossy().into_owned()
+}
+
+#[test]
+fn training_reduces_loss_and_writes_metrics() {
+    let engine = Engine::discover().unwrap();
+    let dir = tmpdir("train");
+    let trainer = Trainer::new(&engine, cfg("ours", 12, &dir)).unwrap();
+    let outcome = trainer.run().unwrap();
+    assert!(outcome.final_loss.is_finite());
+    // loss must drop well below the ln(V)≈5.55 random baseline
+    assert!(outcome.final_loss < 5.4, "loss {}", outcome.final_loss);
+    assert!(outcome.final_val_loss.is_some());
+    assert!(outcome.tokens_per_s > 0.0);
+    assert!(outcome.run_dir.join("metrics.jsonl").exists());
+    assert!(outcome.run_dir.join("metrics.csv").exists());
+    assert!(outcome.run_dir.join("final.ckpt").exists());
+
+    // metrics are readable and strictly ordered by step
+    let log = repro::coordinator::MetricsLog::read_jsonl(
+        outcome.run_dir.join("metrics.jsonl"),
+    )
+    .unwrap();
+    assert_eq!(log.records().len(), 12);
+    for (i, r) in log.records().iter().enumerate() {
+        assert_eq!(r.step, i);
+    }
+    // first-step loss ≈ ln(256) for fresh init; final strictly lower
+    let first = log.records()[0].loss;
+    assert!(first > 5.0 && first < 6.2, "init loss {first}");
+    assert!(log.records().last().unwrap().loss < first);
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_training() {
+    let engine = Engine::discover().unwrap();
+    let dir = tmpdir("resume");
+    let trainer = Trainer::new(&engine, cfg("ours", 4, &dir)).unwrap();
+    let outcome = trainer.run().unwrap();
+    let ckpt = Checkpoint::load(outcome.run_dir.join("final.ckpt")).unwrap();
+    assert_eq!(ckpt.meta.artifact_tag, "lm_tiny_ours");
+    assert_eq!(ckpt.meta.step, 3);
+
+    // restore and take one more step — loss stays finite and close
+    let state = trainer.restore(&ckpt).unwrap();
+    let (_tok, ds) = trainer.build_dataset().unwrap();
+    let mut b = repro::data::Batcher::new(
+        &ds,
+        repro::data::Split::Train,
+        trainer.batch_size(),
+        1,
+    )
+    .unwrap();
+    let (loss, _new_state) = trainer
+        .step(state, &b.next_batch().unwrap(), 4)
+        .unwrap();
+    assert!(loss.is_finite());
+    assert!((loss - ckpt.meta.loss).abs() < 2.0, "resumed loss {loss} vs {}", ckpt.meta.loss);
+}
+
+#[test]
+fn restore_rejects_mismatched_tag() {
+    let engine = Engine::discover().unwrap();
+    let dir = tmpdir("mismatch");
+    let t_ours = Trainer::new(&engine, cfg("ours", 2, &dir)).unwrap();
+    let outcome = t_ours.run().unwrap();
+    let ckpt = Checkpoint::load(outcome.run_dir.join("final.ckpt")).unwrap();
+    let t_soft = Trainer::new(&engine, cfg("softmax", 2, &dir)).unwrap();
+    assert!(t_soft.restore(&ckpt).is_err());
+}
+
+#[test]
+fn deterministic_training_given_seed() {
+    let engine = Engine::discover().unwrap();
+    let d1 = tmpdir("det1");
+    let d2 = tmpdir("det2");
+    let o1 = Trainer::new(&engine, cfg("ours", 3, &d1)).unwrap().run().unwrap();
+    let o2 = Trainer::new(&engine, cfg("ours", 3, &d2)).unwrap().run().unwrap();
+    assert_eq!(o1.final_loss, o2.final_loss);
+}
+
+#[test]
+fn all_three_attention_variants_train() {
+    let engine = Engine::discover().unwrap();
+    for attn in ["ours", "gated", "softmax"] {
+        let dir = tmpdir(&format!("variant_{attn}"));
+        let outcome = Trainer::new(&engine, cfg(attn, 3, &dir)).unwrap().run().unwrap();
+        assert!(outcome.final_loss.is_finite(), "{attn} diverged");
+    }
+}

@@ -1,0 +1,227 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! proptest is unavailable offline, so this file uses a small in-file
+//! randomized-property harness driven by the repo's own SplitMix64: each
+//! property runs across hundreds of random cases with a deterministic seed,
+//! and failures report the case index for replay.
+
+use repro::bench::TimingStats;
+use repro::coordinator::schedule::CosineSchedule;
+use repro::coordinator::checkpoint::{Checkpoint, CheckpointMeta};
+use repro::data::rng::SplitMix64;
+use repro::data::{ByteTokenizer, PackedDataset, Split};
+use repro::runtime::Tensor;
+use repro::simulator::{DeviceSpec, Impl, TrafficModel};
+use repro::util::json::Json;
+
+/// Run `prop` for `cases` seeded cases; panic with the failing case index.
+fn forall(cases: u64, name: &str, mut prop: impl FnMut(&mut SplitMix64)) {
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(0xBADC0DE ^ case.wrapping_mul(0x9E3779B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            panic!("property {name} failed at case {case}: {e:?}");
+        }
+    }
+}
+
+fn random_ascii(rng: &mut SplitMix64, max_len: usize) -> String {
+    let len = rng.below(max_len + 1);
+    (0..len)
+        .map(|_| (32 + rng.below(95)) as u8 as char)
+        .collect()
+}
+
+#[test]
+fn prop_tokenizer_roundtrips_any_ascii() {
+    forall(200, "tokenizer_roundtrip", |rng| {
+        let train_text = random_ascii(rng, 400);
+        let vocab = 256 + rng.below(64);
+        let tok = ByteTokenizer::train(&train_text, vocab).unwrap();
+        let probe = random_ascii(rng, 200);
+        let ids = tok.encode(&probe);
+        assert_eq!(tok.decode(&ids).unwrap(), probe);
+        assert!(ids.iter().all(|&i| (i as usize) < vocab));
+    });
+}
+
+#[test]
+fn prop_dataset_split_partitions_rows() {
+    forall(100, "dataset_partition", |rng| {
+        let n_tokens = 200 + rng.below(4000);
+        let seq = 4 + rng.below(12);
+        let tokens: Vec<i32> = (0..n_tokens as i32).collect();
+        let Ok(ds) = PackedDataset::pack(&tokens, seq, 0.2, rng.next_u64()) else {
+            return; // too small is allowed to error
+        };
+        let row_len = seq + 1;
+        let expected_rows = n_tokens / row_len;
+        assert_eq!(ds.len(Split::Train) + ds.len(Split::Val), expected_rows);
+        // every row is a contiguous slice of the source stream
+        for row in ds.rows(Split::Train).iter().chain(ds.rows(Split::Val)) {
+            let start = row[0];
+            for (i, &t) in row.iter().enumerate() {
+                assert_eq!(t, start + i as i32);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_bounded_and_continuous() {
+    forall(100, "schedule_bounds", |rng| {
+        let warm = 1 + rng.below(50);
+        let total = warm + 1 + rng.below(500);
+        let s = CosineSchedule::paper_defaults(warm, total);
+        let mut prev = None;
+        for step in 0..total + 50 {
+            let lr = s.lr(step);
+            assert!(lr >= -1e-15 && lr <= s.lr_max + 1e-15, "lr {lr} out of bounds");
+            if let Some(p) = prev {
+                let jump = (lr - p as f64).abs();
+                // bounded by the warmup increment + the steepest cosine slope
+                let span = (total - warm).max(1) as f64;
+                let bound = s.lr_max / warm as f64
+                    + std::f64::consts::PI * (s.lr_max - s.lr_min) / (2.0 * span);
+                assert!(jump <= bound + 1e-9, "jump {jump} at {step}");
+            }
+            prev = Some(lr);
+        }
+        assert!((s.lr(total + 1000) - s.lr_min).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrips_random_states() {
+    let dir = std::env::temp_dir().join("repro_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(30, "checkpoint_roundtrip", |rng| {
+        let n_tensors = 1 + rng.below(6);
+        let state: Vec<Tensor> = (0..n_tensors)
+            .map(|i| {
+                let rank = rng.below(3);
+                let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(8)).collect();
+                if i % 3 == 0 {
+                    let n: usize = shape.iter().product();
+                    Tensor::i32(shape, (0..n as i32).collect()).unwrap()
+                } else {
+                    Tensor::randn(shape, rng.next_u64())
+                }
+            })
+            .collect();
+        let ck = Checkpoint {
+            meta: CheckpointMeta {
+                artifact_tag: format!("t{}", rng.below(100)),
+                step: rng.below(10_000),
+                loss: rng.next_f64() as f32,
+                seed: rng.next_u64(),
+            },
+            state,
+        };
+        let path = dir.join(format!("c{}.ckpt", rng.next_u64()));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.meta, ck.meta);
+        assert_eq!(back.state, ck.state);
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    fn random_json(rng: &mut SplitMix64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.next_f64() * 1e6).round() / 8.0),
+            3 => Json::Str(random_string(rng)),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    fn random_string(rng: &mut SplitMix64) -> String {
+        let choices = ["plain", "with \"quotes\"", "line\nbreak", "tab\there", "uni ↯ é"];
+        choices[rng.below(choices.len())].to_string()
+    }
+    forall(300, "json_roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(v, back, "text: {text}");
+    });
+}
+
+#[test]
+fn prop_timing_stats_ordering() {
+    forall(200, "timing_ordering", |rng| {
+        let n = 1 + rng.below(50);
+        let samples: Vec<f64> = (0..n).map(|_| rng.next_f64() * 10.0 + 1e-6).collect();
+        let s = TimingStats::from_samples(samples.clone()).unwrap();
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert!(s.min <= s.trimmed_mean && s.trimmed_mean <= s.max);
+        assert_eq!(s.reps, n);
+    });
+}
+
+#[test]
+fn prop_traffic_model_monotone_in_n_and_d() {
+    let m = TrafficModel::new(DeviceSpec::a6000());
+    forall(100, "traffic_monotone", |rng| {
+        let imp = Impl::la_impls()[rng.below(4)];
+        let bh = 1 + rng.below(64);
+        let n = 512 * (1 + rng.below(16));
+        let d = 32 * (1 + rng.below(8));
+        let r = m.report(imp, bh, n, d);
+        let r2n = m.report(imp, bh, n * 2, d);
+        let r2d = m.report(imp, bh, n, d * 2);
+        assert!(r2n.bytes > r.bytes);
+        assert!(r2n.total_s > r.total_s);
+        assert!(r2d.flops > r.flops);
+        assert!(r.move_ratio() > 0.0 && r.move_ratio() < 1.0);
+    });
+}
+
+#[test]
+fn prop_ours_always_lowest_traffic_among_la() {
+    let m = TrafficModel::new(DeviceSpec::a6000());
+    forall(100, "ours_lowest_traffic", |rng| {
+        let bh = 1 + rng.below(64);
+        let n = 1024 * (1 + rng.below(32));
+        let d = 32 * (1 + rng.below(8));
+        let ours = m.report(Impl::Ours, bh, n, d);
+        for imp in [Impl::Gated, Impl::Baseline, Impl::SpecDec] {
+            assert!(
+                m.report(imp, bh, n, d).bytes >= ours.bytes,
+                "{imp:?} below ours at n={n} d={d}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_covers_every_row_each_epoch() {
+    forall(50, "batcher_coverage", |rng| {
+        let tokens: Vec<i32> = (0..2_000).collect();
+        let seq = 4 + rng.below(8);
+        let ds = PackedDataset::pack(&tokens, seq, 0.1, rng.next_u64()).unwrap();
+        let batch = 1 + rng.below(4);
+        let mut b = repro::data::Batcher::new(&ds, Split::Train, batch, rng.next_u64()).unwrap();
+        let per_epoch = b.batches_per_epoch();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..per_epoch {
+            let t = b.next_batch().unwrap();
+            for row in t.as_i32().unwrap().chunks(seq + 1) {
+                seen.insert(row[0]);
+            }
+        }
+        // full batches cover at least per_epoch * batch distinct rows
+        assert!(seen.len() >= per_epoch * batch - batch + 1);
+    });
+}
