@@ -1,8 +1,8 @@
-//! Quickstart: load the AOT linear-attention kernel, run a forward and a
-//! forward+backward pass from Rust, and verify against the quadratic oracle
-//! artifact — the whole three-layer stack in ~60 lines.
+//! Quickstart: load the linear-attention kernel, run a forward and a
+//! forward+backward pass, and verify against the quadratic oracle artifact —
+//! the whole stack in ~60 lines. Runs hermetically on the native backend:
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use anyhow::Result;
 use repro::bench::report::fmt_time;
@@ -10,7 +10,7 @@ use repro::runtime::{Engine, Tensor};
 
 fn main() -> Result<()> {
     let engine = Engine::discover()?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("platform: {}", engine.platform());
 
     // quickstart artifacts are fixed at BH=4, N=256, D=64 (see aot.py)
     let fwd = engine.load("quickstart_la_fwd")?;
@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     q.normalize_rows(); // paper §3.3
     k.normalize_rows();
 
-    // --- forward: Pallas kernel vs direct Eq. 4 oracle ---------------------
+    // --- forward: chunkwise kernel vs direct Eq. 4 oracle ------------------
     let o_kernel = &fwd.run(&[q.clone(), k.clone(), v.clone()])?[0];
     let o_ref = &oracle.run(&[q.clone(), k.clone(), v.clone()])?[0];
     let max_err = o_kernel
@@ -51,11 +51,7 @@ fn main() -> Result<()> {
     }
 
     // --- quick timing -------------------------------------------------------
-    let lits: Vec<xla::Literal> = [&q, &k, &v]
-        .iter()
-        .map(|t| t.to_literal())
-        .collect::<Result<_>>()?;
-    let stats = repro::bench::measure(2, 10, || Ok(fwd.run_timed(&lits)?.1))?;
+    let stats = repro::bench::measure(2, 10, || Ok(fwd.run_timed(&[&q, &k, &v])?.1))?;
     println!(
         "forward kernel (BH=4, N=256, D=64): p50 {} (p95 {})",
         fmt_time(stats.p50),

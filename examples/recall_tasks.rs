@@ -45,15 +45,10 @@ fn main() -> Result<()> {
         eprintln!("  final loss {:.4}", outcome.final_loss);
 
         let ckpt = Checkpoint::load(outcome.run_dir.join("final.ckpt"))?;
-        let params: Vec<xla::Literal> = ckpt
-            .state
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
         let logits = format!("{}_logits", cfg.artifact_tag());
         let mut accs = Vec::new();
         for kind in TaskKind::all() {
-            let s = score_task(&engine, &logits, &params, kind, count, 0)?;
+            let s = score_task(&engine, &logits, &ckpt.state, kind, count, 0)?;
             accs.push(s.accuracy());
         }
         scored.push((attn.to_string(), accs));

@@ -3,8 +3,8 @@
 //! logging all three loss curves — the full three-layer stack exercised on a
 //! real training workload.
 //!
-//!     make artifacts && cargo run --release --example train_lm -- \
-//!         [--preset small] [--steps 60] [--attns ours,gated,softmax]
+//!     cargo run --release --example train_lm -- \
+//!         [--preset tiny] [--steps 60] [--attns ours,gated,softmax]
 //!
 //! Metrics land in runs/<tag>/metrics.{jsonl,csv}; compare with
 //! `repro report --runs runs`.
@@ -17,7 +17,7 @@ use repro::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    let preset = args.get_or("preset", "small").to_string();
+    let preset = args.get_or("preset", "tiny").to_string();
     let steps = args.get_usize("steps", 60)?;
     let attns: Vec<String> = args
         .get_or("attns", "ours,gated,softmax")

@@ -2,7 +2,6 @@
 //! measured wall-clock with the analytic traffic/memory model.
 
 use anyhow::Result;
-use xla::Literal;
 
 use crate::runtime::{Engine, Tensor};
 use crate::simulator::{DeviceSpec, Impl, TrafficModel};
@@ -19,7 +18,7 @@ pub struct SweepPoint {
     pub d: usize,
     /// Sequence chunk length of chunked implementations (0 = n/a).
     pub chunk: usize,
-    /// Measured CPU-PJRT execution time (trimmed mean, seconds).
+    /// Measured CPU execution time (whichever backend is active).
     pub cpu_s: TimingStats,
     /// Analytic A6000 model for the same point.
     pub model_total_s: f64,
@@ -53,26 +52,27 @@ impl<'e> SweepRunner<'e> {
 
     /// Deterministic inputs for a layer artifact: normalized q, k; plain v
     /// (and upstream gradient for fwdbwd artifacts).
-    fn inputs(&self, name: &str) -> Result<Vec<Literal>> {
+    fn inputs(&self, name: &str) -> Result<Vec<Tensor>> {
         let meta = self.engine.manifest.get(name)?;
-        let mut lits = Vec::with_capacity(meta.inputs.len());
+        let mut tensors = Vec::with_capacity(meta.inputs.len());
         for (i, spec) in meta.inputs.iter().enumerate() {
             let mut t = Tensor::randn(spec.shape.clone(), 0x5EED + i as u64);
             if i < 2 {
                 t.normalize_rows(); // q, k — paper §3.3
             }
-            lits.push(t.to_literal()?);
+            tensors.push(t);
         }
-        Ok(lits)
+        Ok(tensors)
     }
 
     /// Measure one artifact; `kind` is `layer_fwd` or `layer_fwdbwd`.
     pub fn run_artifact(&self, name: &str) -> Result<SweepPoint> {
         let exe = self.engine.load(name)?;
         let meta = exe.meta.clone();
-        let lits = self.inputs(name)?;
+        let inputs = self.inputs(name)?;
+        let refs: Vec<&Tensor> = inputs.iter().collect();
         let stats = measure(self.warmup, self.reps, || {
-            let (_out, secs) = exe.run_timed(&lits)?;
+            let (_out, secs) = exe.run_timed(&refs)?;
             Ok(secs)
         })?;
         let impl_name = meta.implementation().unwrap_or("?").to_string();

@@ -2,15 +2,15 @@
 //!
 //! Per step: pull a batch from the [`Batcher`], execute the train-step
 //! artifact (state ++ tokens ++ step → loss ++ state'), log metrics, and
-//! periodically evaluate / checkpoint.  The state stays as XLA literals
-//! between steps — no host re-materialization on the hot path.
+//! periodically evaluate / checkpoint. The state is a `Vec<Tensor>` that
+//! round-trips through the backend by reference — the native backend
+//! computes on it in place conceptually; a device backend may shadow it.
 
 use std::path::PathBuf;
 use std::rc::Rc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
-use xla::Literal;
 
 use crate::data::{Batcher, ByteTokenizer, CorpusConfig, CorpusGenerator, PackedDataset, Split};
 use crate::runtime::{Engine, Executable, Tensor};
@@ -121,9 +121,9 @@ impl<'e> Trainer<'e> {
     }
 
     /// Initialize the training state via the init artifact.
-    pub fn init_state(&self) -> Result<Vec<Literal>> {
-        let seed = Tensor::scalar_i32(self.cfg.train.seed as i32).to_literal()?;
-        self.init_exe.run_to_literals(&[seed])
+    pub fn init_state(&self) -> Result<Vec<Tensor>> {
+        let seed = Tensor::scalar_i32(self.cfg.train.seed as i32);
+        self.init_exe.run(&[seed])
     }
 
     /// Run the configured number of steps; writes metrics + checkpoints into
@@ -196,39 +196,41 @@ impl<'e> Trainer<'e> {
     /// Execute one optimizer step; returns (loss, new state).
     pub fn step(
         &self,
-        mut state: Vec<Literal>,
+        state: Vec<Tensor>,
         batch: &Tensor,
         step: usize,
-    ) -> Result<(f32, Vec<Literal>)> {
-        state.push(batch.to_literal()?);
-        state.push(Tensor::scalar_i32(step as i32).to_literal()?);
-        let mut out = self.step_exe.run_to_literals(&state)?;
-        if out.len() != 1 + state.len() - 2 {
-            bail!("train_step returned {} outputs", out.len());
+    ) -> Result<(f32, Vec<Tensor>)> {
+        let step_t = Tensor::scalar_i32(step as i32);
+        let mut args: Vec<&Tensor> = state.iter().collect();
+        args.push(batch);
+        args.push(&step_t);
+        let mut out = self.step_exe.run_refs(&args)?;
+        if out.len() != 1 + state.len() {
+            bail!(
+                "train_step returned {} outputs (expected {})",
+                out.len(),
+                1 + state.len()
+            );
         }
-        let loss_lit = out.remove(0);
-        let loss = Tensor::from_literal(&loss_lit)?.scalar()?;
+        let loss = out.remove(0).scalar()?;
         Ok((loss, out))
     }
 
     /// Evaluate held-out loss on one batch.
-    pub fn eval(&self, state: &[Literal], batch: &Tensor) -> Result<f32> {
-        let mut args: Vec<&Literal> = state[..self.n_param_arrays].iter().collect();
-        let batch_lit = batch.to_literal()?;
-        args.push(&batch_lit);
-        let out = self.eval_exe.run_literals_ref(&args)?;
+    pub fn eval(&self, state: &[Tensor], batch: &Tensor) -> Result<f32> {
+        let mut args: Vec<&Tensor> = state[..self.n_param_arrays].iter().collect();
+        args.push(batch);
+        let out = self.eval_exe.run_refs(&args)?;
         out[0].scalar()
     }
 
     fn save_checkpoint(
         &self,
-        state: &[Literal],
+        state: &[Tensor],
         step: usize,
         loss: f32,
         path: &PathBuf,
     ) -> Result<()> {
-        let tensors: Vec<Tensor> =
-            state.iter().map(Tensor::from_literal).collect::<Result<_>>()?;
         Checkpoint {
             meta: CheckpointMeta {
                 artifact_tag: self.cfg.artifact_tag(),
@@ -236,13 +238,13 @@ impl<'e> Trainer<'e> {
                 loss,
                 seed: self.cfg.train.seed,
             },
-            state: tensors,
+            state: state.to_vec(),
         }
         .save(path)
     }
 
-    /// Restore a checkpoint into literal state (resume support).
-    pub fn restore(&self, ckpt: &Checkpoint) -> Result<Vec<Literal>> {
+    /// Restore a checkpoint into trainer state (resume support).
+    pub fn restore(&self, ckpt: &Checkpoint) -> Result<Vec<Tensor>> {
         if ckpt.meta.artifact_tag != self.cfg.artifact_tag() {
             bail!(
                 "checkpoint is for {:?}, trainer is {:?}",
@@ -250,7 +252,7 @@ impl<'e> Trainer<'e> {
                 self.cfg.artifact_tag()
             );
         }
-        ckpt.state.iter().map(|t| t.to_literal()).collect()
+        Ok(ckpt.state.clone())
     }
 
     pub fn engine(&self) -> &Engine {

@@ -104,7 +104,8 @@ impl CorpusGenerator {
     fn markov_sentence(&self, rng: &mut SplitMix64) -> String {
         let len = 4 + rng.below(12);
         let mut out = String::new();
-        let mut w = rng.sample_cdf(&self.cdf);
+        // the Zipf cdf is strictly positive by construction (powf of ranks)
+        let mut w = rng.sample_cdf(&self.cdf).expect("zipf cdf is positive");
         for i in 0..len {
             if i > 0 {
                 out.push(' ');
@@ -114,7 +115,7 @@ impl CorpusGenerator {
             w = if rng.next_f64() < 0.5 {
                 self.successor[w]
             } else {
-                rng.sample_cdf(&self.cdf)
+                rng.sample_cdf(&self.cdf).expect("zipf cdf is positive")
             };
         }
         out.push('.');
@@ -150,7 +151,7 @@ impl CorpusGenerator {
         let mut out = String::with_capacity(self.cfg.target_bytes + 128);
         let mut sentences_in_par = 0usize;
         while out.len() < self.cfg.target_bytes {
-            let s = match rng.sample_cdf(&cdf) {
+            let s = match rng.sample_cdf(&cdf).expect("mixture weights must be positive") {
                 0 => self.markov_sentence(&mut rng),
                 1 => self.fact_sentence(&mut rng),
                 _ => self.arithmetic_snippet(&mut rng),

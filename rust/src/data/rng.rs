@@ -1,5 +1,7 @@
 //! Deterministic, dependency-free PRNGs for data generation and shuffling.
 
+use anyhow::{bail, Result};
+
 /// SplitMix64 — tiny, fast, well-distributed; fine for data synthesis.
 #[derive(Debug, Clone)]
 pub struct SplitMix64 {
@@ -24,20 +26,52 @@ impl SplitMix64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n) — exact, via rejection sampling.
+    ///
+    /// A bare `next_u64() % n` over-weights the first `2⁶⁴ mod n` residues;
+    /// negligible for tiny `n` but a real bias for large ranges. Draws are
+    /// rejected from the short final partial cycle instead, so every residue
+    /// is exactly equally likely. The rejection region is < 1/2 of the range
+    /// for any `n`, so the expected number of draws is < 2.
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        assert!(n > 0, "below(0) is meaningless");
+        let n64 = n as u64;
+        // 2^64 mod n, computed without overflowing u64
+        let rem = (u64::MAX % n64).wrapping_add(1) % n64;
+        if rem == 0 {
+            // n divides 2^64: every residue already appears equally often
+            return (self.next_u64() % n64) as usize;
+        }
+        // accept x ∈ [0, 2^64 − rem): the largest multiple of n below 2^64
+        let zone_end = u64::MAX - rem + 1;
+        loop {
+            let x = self.next_u64();
+            if x < zone_end {
+                return (x % n64) as usize;
+            }
+        }
     }
 
     /// Sample an index from cumulative weights (ascending, last = total).
-    pub fn sample_cdf(&mut self, cdf: &[f64]) -> usize {
-        let total = *cdf.last().expect("empty cdf");
+    ///
+    /// Errors on an empty CDF, non-finite weights (NaN/∞ used to panic via
+    /// `partial_cmp(..).unwrap()`), or a non-positive total (an all-zero CDF
+    /// used to silently return a biased index).
+    pub fn sample_cdf(&mut self, cdf: &[f64]) -> Result<usize> {
+        let Some(&total) = cdf.last() else {
+            bail!("sample_cdf: empty cdf");
+        };
+        if cdf.iter().any(|w| !w.is_finite()) {
+            bail!("sample_cdf: non-finite weight in cdf");
+        }
+        if total <= 0.0 {
+            bail!("sample_cdf: cdf total must be positive, got {total}");
+        }
         let x = self.next_f64() * total;
-        match cdf.binary_search_by(|p| p.partial_cmp(&x).unwrap()) {
+        Ok(match cdf.binary_search_by(|p| p.total_cmp(&x)) {
             Ok(i) => (i + 1).min(cdf.len() - 1),
             Err(i) => i.min(cdf.len() - 1),
-        }
+        })
     }
 
     /// Fisher–Yates shuffle.
@@ -76,6 +110,41 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(7) < 7);
         }
+        // power-of-two fast path
+        for _ in 0..1000 {
+            assert!(r.below(64) < 64);
+        }
+        assert_eq!(r.below(1), 0);
+    }
+
+    #[test]
+    fn below_is_unbiased_across_buckets() {
+        // distribution sanity: every residue of a non-power-of-two modulus
+        // lands within a few percent of uniform
+        let mut r = SplitMix64::new(0xD157);
+        let n = 7usize;
+        let draws = 70_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[r.below(n)] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let dev = (c as f64 - expect).abs() / expect;
+            assert!(dev < 0.05, "bucket {i}: {c} vs {expect} ({dev:.3})");
+        }
+    }
+
+    #[test]
+    fn below_rejects_the_biased_tail() {
+        // for a huge non-power-of-two n the partial final cycle is a sizable
+        // fraction of the range; rejection sampling must stay in range and
+        // still terminate quickly (acceptance = ⌊2⁶⁴/n⌋·n / 2⁶⁴ ≈ 3/4 here)
+        let n = (1usize << 62) + 3;
+        let mut r = SplitMix64::new(77);
+        for _ in 0..64 {
+            assert!(r.below(n) < n);
+        }
     }
 
     #[test]
@@ -83,8 +152,25 @@ mod tests {
         let mut r = SplitMix64::new(5);
         // weights 1, 3 → second bucket ~75%
         let cdf = [1.0, 4.0];
-        let hits = (0..10_000).filter(|_| r.sample_cdf(&cdf) == 1).count();
+        let hits = (0..10_000)
+            .filter(|_| r.sample_cdf(&cdf).unwrap() == 1)
+            .count();
         assert!((hits as f64 / 10_000.0 - 0.75).abs() < 0.03);
+    }
+
+    #[test]
+    fn cdf_rejects_nan_weights() {
+        let mut r = SplitMix64::new(1);
+        assert!(r.sample_cdf(&[1.0, f64::NAN, 3.0]).is_err());
+        assert!(r.sample_cdf(&[1.0, f64::INFINITY]).is_err());
+    }
+
+    #[test]
+    fn cdf_rejects_degenerate_totals() {
+        let mut r = SplitMix64::new(2);
+        assert!(r.sample_cdf(&[]).is_err());
+        assert!(r.sample_cdf(&[0.0, 0.0, 0.0]).is_err());
+        assert!(r.sample_cdf(&[-2.0, -1.0]).is_err());
     }
 
     #[test]

@@ -1,20 +1,27 @@
 //! Reproduction of *"Transformer Based Linear Attention with Optimized GPU
 //! Kernel Implementation"* (Gerami & Duraiswami, 2025).
 //!
-//! Three-layer architecture (see `DESIGN.md`):
-//! - **L1/L2** (build-time Python): Pallas linear-attention kernels and a JAX
-//!   transformer LM, AOT-lowered to HLO text under `artifacts/`.
-//! - **L3** (this crate): the coordinator — PJRT runtime, config system, data
-//!   pipeline, training loop, synthetic-task evaluation, GPU-traffic
-//!   simulator, and the benchmark harness that regenerates every table and
-//!   figure of the paper's evaluation section.
+//! Multi-backend architecture (see `rust/README.md` for the backend matrix):
+//! - **runtime** — the backend abstraction ([`runtime::Backend`] /
+//!   [`runtime::Executor`]) plus the [`runtime::Engine`] cache; callers are
+//!   backend-agnostic.
+//! - **native** (default) — dependency-free pure-Rust CPU implementations of
+//!   the paper's causal linear-attention kernels (state scan, chunkwise,
+//!   quadratic baselines) and a tiny trainable LM. Hermetic: builds and runs
+//!   with `anyhow` as the only dependency.
+//! - **pjrt** (cargo feature `pjrt`, off by default) — the original AOT path:
+//!   Pallas/JAX kernels lowered to HLO text by `python/compile/aot.py` and
+//!   executed through a CPU PJRT client.
 //!
-//! Python never runs on the request path: the `repro` binary is self-contained
-//! once `make artifacts` has produced the HLO modules.
+//! On top of the runtime sit the coordinator (config, training loop,
+//! checkpoints, metrics), the data pipeline, the synthetic-task evaluation
+//! suite, the GPU-traffic simulator, and the benchmark harness that
+//! regenerates the paper's tables and figures.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod native;
 pub mod runtime;
 pub mod simulator;
 pub mod tasks;

@@ -27,12 +27,12 @@ repro — linear-attention reproduction launcher
 USAGE: repro <subcommand> [flags]
 
 SUBCOMMANDS
-  train          --preset small --attn ours --steps 200 --out runs
+  train          --preset tiny --attn ours --steps 200 --out runs
                  [--config run.toml] [--seed 0] [--eval-every 25]
   bench-layer    --kind layer_fwd|layer_fwdbwd [--impls a,b,c] [--reps 5]
                  [--csv out.csv]
   bench-traffic  [--csv out.csv]
-  eval-tasks     --ckpt runs/lm_small_ours/final.ckpt [--count 64] [--seed 0]
+  eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   report         [--runs runs]
   inspect        [--filter substr]
 ";
@@ -60,7 +60,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         Some(p) => RunConfig::load(p)?,
         None => RunConfig {
             train: TrainSection {
-                preset: args.get_or("preset", "small").to_string(),
+                preset: args.get_or("preset", "tiny").to_string(),
                 attn: args.get_or("attn", "ours").to_string(),
                 steps: args.get_usize("steps", 200)?,
                 eval_every: args.get_usize("eval-every", 25)?,
@@ -149,17 +149,12 @@ fn cmd_eval_tasks(args: &Args) -> Result<()> {
     let engine = Engine::discover()?;
     let ck = Checkpoint::load(ckpt_path)?;
     let logits_artifact = format!("{}_logits", ck.meta.artifact_tag);
-    let params: Vec<xla::Literal> = ck
-        .state
-        .iter()
-        .map(|t| t.to_literal())
-        .collect::<Result<_>>()?;
     println!(
         "| task | accuracy | correct/positions | ckpt |",
     );
     println!("|---|---|---|---|");
     for kind in TaskKind::all() {
-        let s = score_task(&engine, &logits_artifact, &params, kind, count, seed)?;
+        let s = score_task(&engine, &logits_artifact, &ck.state, kind, count, seed)?;
         println!(
             "| {} | {:.1}% | {}/{} | {} @ step {} |",
             s.task,

@@ -1,0 +1,676 @@
+//! Pure-Rust CPU kernels for causal attention layers, on flat `f32` slices.
+//!
+//! All kernels operate on row-major `(BH, N, D)` buffers (`BH` = batch ×
+//! heads folded). Three algorithmic families, matching the paper's §4/§5
+//! evaluation set:
+//!
+//! - **state scan** (`la_scan_*`) — the O(N·D²) two-pass recurrence: a
+//!   forward scan over the running `D×D` state `S_t = γ·S_{t-1} + k_t vᵗ_t`
+//!   for the forward/`dq` pass, and a mirrored *reverse* scan
+//!   `R_t = q_t goᵗ_t + γ·R_{t+1}` for `dk`/`dv` — gradients are computed
+//!   analytically, never by taping the forward (the O(N·D²)-residency trap
+//!   the paper §4 eliminates). `γ = 1` is plain linear attention; `γ < 1`
+//!   is the gated/decayed variant.
+//! - **chunkwise** (`la_chunk_*`) — the inter/intra decomposition (Yang et
+//!   al. 2023): per chunk of length `C`, one `q_t·S` inter-chunk term plus a
+//!   local `C×C` causal quadratic intra-chunk term, then one state update.
+//!   Identical math to the scan, but the hot loops touch `O(C·D)` data —
+//!   the cache-friendly layout the GPU kernel tiles the same way.
+//! - **quadratic baselines** — `la_quadratic_*` materializes the masked
+//!   `(QKᵀ)V` product of the same softmax-free attention (the eager-baseline
+//!   reference the sweep compares against), and `softmax_*` is standard
+//!   causal softmax attention with a streaming row softmax.
+//!
+//! Gradients of the softmax-free forms, for `o_t = Σ_{s≤t} γ^{t-s}(q_t·k_s)
+//! v_s`:
+//!   `dq_t = S_t·go_t`, `dk_s = R_s·v_s`, `dv_s = Rᵗ_s·k_s`.
+
+/// Shape of one layer call; `dk`/`dv` may differ (the LM appends a
+/// normalizer channel to `v`).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerShape {
+    pub bh: usize,
+    pub n: usize,
+    pub dk: usize,
+    pub dv: usize,
+}
+
+impl LayerShape {
+    pub fn cube(bh: usize, n: usize, d: usize) -> Self {
+        Self { bh, n, dk: d, dv: d }
+    }
+}
+
+/// Causal linear attention, sequential state scan (decay `gamma`; 1.0 = none).
+pub fn la_scan_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, gamma: f32) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut o = vec![0.0f32; bh * n * dv];
+    let mut s = vec![0.0f32; dk * dv];
+    for b in 0..bh {
+        s.fill(0.0);
+        for t in 0..n {
+            let qr = &q[(b * n + t) * dk..][..dk];
+            let kr = &k[(b * n + t) * dk..][..dk];
+            let vr = &v[(b * n + t) * dv..][..dv];
+            if gamma != 1.0 {
+                for x in s.iter_mut() {
+                    *x *= gamma;
+                }
+            }
+            for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                let ki = kr[i];
+                for (sx, vx) in srow.iter_mut().zip(vr) {
+                    *sx += ki * vx;
+                }
+            }
+            let orow = &mut o[(b * n + t) * dv..][..dv];
+            for (i, srow) in s.chunks_exact(dv).enumerate() {
+                let qi = qr[i];
+                for (ox, sx) in orow.iter_mut().zip(srow) {
+                    *ox += qi * sx;
+                }
+            }
+        }
+    }
+    o
+}
+
+/// Backward of [`la_scan_fwd`]: analytical gradients via one forward state
+/// scan (for `dq`) and one reverse scan (for `dk`, `dv`).
+pub fn la_scan_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    sh: LayerShape,
+    gamma: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut dq = vec![0.0f32; bh * n * dk];
+    let mut dkk = vec![0.0f32; bh * n * dk];
+    let mut dvv = vec![0.0f32; bh * n * dv];
+    let mut s = vec![0.0f32; dk * dv];
+    let mut r = vec![0.0f32; dk * dv];
+    for b in 0..bh {
+        // pass 1 (forward): S_t, dq_t = S_t · go_t
+        s.fill(0.0);
+        for t in 0..n {
+            let kr = &k[(b * n + t) * dk..][..dk];
+            let vr = &v[(b * n + t) * dv..][..dv];
+            let gr = &go[(b * n + t) * dv..][..dv];
+            if gamma != 1.0 {
+                for x in s.iter_mut() {
+                    *x *= gamma;
+                }
+            }
+            for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                let ki = kr[i];
+                for (sx, vx) in srow.iter_mut().zip(vr) {
+                    *sx += ki * vx;
+                }
+            }
+            let dqr = &mut dq[(b * n + t) * dk..][..dk];
+            for (i, srow) in s.chunks_exact(dv).enumerate() {
+                let mut acc = 0.0f32;
+                for (sx, gx) in srow.iter().zip(gr) {
+                    acc += sx * gx;
+                }
+                dqr[i] = acc;
+            }
+        }
+        // pass 2 (reverse): R_t, dk_t = R_t · v_t, dv_t = Rᵗ_t · k_t
+        r.fill(0.0);
+        for t in (0..n).rev() {
+            let qr = &q[(b * n + t) * dk..][..dk];
+            let kr = &k[(b * n + t) * dk..][..dk];
+            let vr = &v[(b * n + t) * dv..][..dv];
+            let gr = &go[(b * n + t) * dv..][..dv];
+            if gamma != 1.0 {
+                for x in r.iter_mut() {
+                    *x *= gamma;
+                }
+            }
+            for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
+                let qi = qr[i];
+                for (rx, gx) in rrow.iter_mut().zip(gr) {
+                    *rx += qi * gx;
+                }
+            }
+            let dkr = &mut dkk[(b * n + t) * dk..][..dk];
+            let dvr = &mut dvv[(b * n + t) * dv..][..dv];
+            for (i, rrow) in r.chunks_exact(dv).enumerate() {
+                let mut acc = 0.0f32;
+                for (rx, vx) in rrow.iter().zip(vr.iter()) {
+                    acc += rx * vx;
+                }
+                dkr[i] = acc;
+                let ki = kr[i];
+                for (dx, rx) in dvr.iter_mut().zip(rrow) {
+                    *dx += ki * rx;
+                }
+            }
+        }
+    }
+    (dq, dkk, dvv)
+}
+
+/// Chunkwise causal linear attention (inter/intra decomposition, no decay).
+pub fn la_chunk_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, chunk: usize) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let c = chunk.max(1);
+    let mut o = vec![0.0f32; bh * n * dv];
+    let mut s = vec![0.0f32; dk * dv];
+    for b in 0..bh {
+        s.fill(0.0);
+        let mut c0 = 0;
+        while c0 < n {
+            let ce = (c0 + c).min(n);
+            for t in c0..ce {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let orow = &mut o[(b * n + t) * dv..][..dv];
+                // inter-chunk: q_t · S (state of all previous chunks)
+                for (i, srow) in s.chunks_exact(dv).enumerate() {
+                    let qi = qr[i];
+                    for (ox, sx) in orow.iter_mut().zip(srow) {
+                        *ox += qi * sx;
+                    }
+                }
+                // intra-chunk: local causal quadratic
+                for sidx in c0..=t {
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    let vr = &v[(b * n + sidx) * dv..][..dv];
+                    let mut a = 0.0f32;
+                    for (qx, kx) in qr.iter().zip(kr) {
+                        a += qx * kx;
+                    }
+                    for (ox, vx) in orow.iter_mut().zip(vr) {
+                        *ox += a * vx;
+                    }
+                }
+            }
+            // state update: S += Σ_chunk k_t ⊗ v_t
+            for t in c0..ce {
+                let kr = &k[(b * n + t) * dk..][..dk];
+                let vr = &v[(b * n + t) * dv..][..dv];
+                for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                    let ki = kr[i];
+                    for (sx, vx) in srow.iter_mut().zip(vr) {
+                        *sx += ki * vx;
+                    }
+                }
+            }
+            c0 = ce;
+        }
+    }
+    o
+}
+
+/// Backward of [`la_chunk_fwd`]: same inter/intra split, forward pass over
+/// chunks for `dq`, reverse pass for `dk`/`dv`.
+pub fn la_chunk_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    sh: LayerShape,
+    chunk: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let c = chunk.max(1);
+    let mut dq = vec![0.0f32; bh * n * dk];
+    let mut dkk = vec![0.0f32; bh * n * dk];
+    let mut dvv = vec![0.0f32; bh * n * dv];
+    let mut s = vec![0.0f32; dk * dv];
+    let mut r = vec![0.0f32; dk * dv];
+    for b in 0..bh {
+        // forward over chunks: dq_t = S_pre·go_t + Σ_{s≤t, same chunk} (go_t·v_s) k_s
+        s.fill(0.0);
+        let mut c0 = 0;
+        while c0 < n {
+            let ce = (c0 + c).min(n);
+            for t in c0..ce {
+                let gr = &go[(b * n + t) * dv..][..dv];
+                let dqr = &mut dq[(b * n + t) * dk..][..dk];
+                for (i, srow) in s.chunks_exact(dv).enumerate() {
+                    let mut acc = 0.0f32;
+                    for (sx, gx) in srow.iter().zip(gr) {
+                        acc += sx * gx;
+                    }
+                    dqr[i] = acc;
+                }
+                for sidx in c0..=t {
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    let vr = &v[(b * n + sidx) * dv..][..dv];
+                    let mut gv = 0.0f32;
+                    for (gx, vx) in gr.iter().zip(vr) {
+                        gv += gx * vx;
+                    }
+                    for (dx, kx) in dqr.iter_mut().zip(kr) {
+                        *dx += gv * kx;
+                    }
+                }
+            }
+            for t in c0..ce {
+                let kr = &k[(b * n + t) * dk..][..dk];
+                let vr = &v[(b * n + t) * dv..][..dv];
+                for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                    let ki = kr[i];
+                    for (sx, vx) in srow.iter_mut().zip(vr) {
+                        *sx += ki * vx;
+                    }
+                }
+            }
+            c0 = ce;
+        }
+        // reverse over chunks: dk/dv from R_post + intra terms
+        r.fill(0.0);
+        let n_chunks = (n + c - 1) / c;
+        for ci in (0..n_chunks).rev() {
+            let c0 = ci * c;
+            let ce = (c0 + c).min(n);
+            for t in c0..ce {
+                let kr = &k[(b * n + t) * dk..][..dk];
+                let vr = &v[(b * n + t) * dv..][..dv];
+                let dkr = &mut dkk[(b * n + t) * dk..][..dk];
+                let dvr = &mut dvv[(b * n + t) * dv..][..dv];
+                // inter: later chunks, via R_post
+                for (i, rrow) in r.chunks_exact(dv).enumerate() {
+                    let mut acc = 0.0f32;
+                    for (rx, vx) in rrow.iter().zip(vr.iter()) {
+                        acc += rx * vx;
+                    }
+                    dkr[i] = acc;
+                    let ki = kr[i];
+                    for (dx, rx) in dvr.iter_mut().zip(rrow) {
+                        *dx += ki * rx;
+                    }
+                }
+                // intra: s ≥ t within this chunk
+                for sidx in t..ce {
+                    let qr = &q[(b * n + sidx) * dk..][..dk];
+                    let gr = &go[(b * n + sidx) * dv..][..dv];
+                    let mut gv = 0.0f32;
+                    for (gx, vx) in gr.iter().zip(vr.iter()) {
+                        gv += gx * vx;
+                    }
+                    let mut a = 0.0f32;
+                    for (qx, kx) in qr.iter().zip(kr.iter()) {
+                        a += qx * kx;
+                    }
+                    for (dx, qx) in dkr.iter_mut().zip(qr) {
+                        *dx += gv * qx;
+                    }
+                    for (dx, gx) in dvr.iter_mut().zip(gr) {
+                        *dx += a * gx;
+                    }
+                }
+            }
+            for t in c0..ce {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let gr = &go[(b * n + t) * dv..][..dv];
+                for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
+                    let qi = qr[i];
+                    for (rx, gx) in rrow.iter_mut().zip(gr) {
+                        *rx += qi * gx;
+                    }
+                }
+            }
+        }
+    }
+    (dq, dkk, dvv)
+}
+
+/// Quadratic-time reference of the same softmax-free attention: the masked
+/// `(QKᵀ)V` product, materialized pairwise (the eager-baseline access
+/// pattern). Output is bit-comparable to the scan/chunk forms up to f32
+/// reassociation.
+pub fn la_quadratic_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut o = vec![0.0f32; bh * n * dv];
+    for b in 0..bh {
+        for t in 0..n {
+            let qr = &q[(b * n + t) * dk..][..dk];
+            let orow = &mut o[(b * n + t) * dv..][..dv];
+            for sidx in 0..=t {
+                let kr = &k[(b * n + sidx) * dk..][..dk];
+                let vr = &v[(b * n + sidx) * dv..][..dv];
+                let mut a = 0.0f32;
+                for (qx, kx) in qr.iter().zip(kr) {
+                    a += qx * kx;
+                }
+                for (ox, vx) in orow.iter_mut().zip(vr) {
+                    *ox += a * vx;
+                }
+            }
+        }
+    }
+    o
+}
+
+/// Backward of [`la_quadratic_fwd`], pairwise.
+pub fn la_quadratic_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    sh: LayerShape,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut dq = vec![0.0f32; bh * n * dk];
+    let mut dkk = vec![0.0f32; bh * n * dk];
+    let mut dvv = vec![0.0f32; bh * n * dv];
+    for b in 0..bh {
+        for t in 0..n {
+            let qr = &q[(b * n + t) * dk..][..dk];
+            let gr = &go[(b * n + t) * dv..][..dv];
+            for sidx in 0..=t {
+                let kr = &k[(b * n + sidx) * dk..][..dk];
+                let vr = &v[(b * n + sidx) * dv..][..dv];
+                let mut gv = 0.0f32;
+                for (gx, vx) in gr.iter().zip(vr) {
+                    gv += gx * vx;
+                }
+                let mut a = 0.0f32;
+                for (qx, kx) in qr.iter().zip(kr) {
+                    a += qx * kx;
+                }
+                {
+                    let dqr = &mut dq[(b * n + t) * dk..][..dk];
+                    for (dx, kx) in dqr.iter_mut().zip(kr) {
+                        *dx += gv * kx;
+                    }
+                }
+                {
+                    let dkr = &mut dkk[(b * n + sidx) * dk..][..dk];
+                    for (dx, qx) in dkr.iter_mut().zip(qr) {
+                        *dx += gv * qx;
+                    }
+                }
+                {
+                    let dvr = &mut dvv[(b * n + sidx) * dv..][..dv];
+                    for (dx, gx) in dvr.iter_mut().zip(gr) {
+                        *dx += a * gx;
+                    }
+                }
+            }
+        }
+    }
+    (dq, dkk, dvv)
+}
+
+/// Standard causal softmax attention with a streaming row softmax
+/// (scores scaled by `scale`, typically `1/sqrt(dk)`).
+pub fn softmax_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, scale: f32) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut o = vec![0.0f32; bh * n * dv];
+    let mut scores = vec![0.0f32; n];
+    for b in 0..bh {
+        for t in 0..n {
+            let qr = &q[(b * n + t) * dk..][..dk];
+            let mut m = f32::NEG_INFINITY;
+            for sidx in 0..=t {
+                let kr = &k[(b * n + sidx) * dk..][..dk];
+                let mut a = 0.0f32;
+                for (qx, kx) in qr.iter().zip(kr) {
+                    a += qx * kx;
+                }
+                let a = a * scale;
+                scores[sidx] = a;
+                m = m.max(a);
+            }
+            let mut z = 0.0f32;
+            for sc in scores[..=t].iter_mut() {
+                *sc = (*sc - m).exp();
+                z += *sc;
+            }
+            let inv = 1.0 / z;
+            let orow = &mut o[(b * n + t) * dv..][..dv];
+            for sidx in 0..=t {
+                let w = scores[sidx] * inv;
+                let vr = &v[(b * n + sidx) * dv..][..dv];
+                for (ox, vx) in orow.iter_mut().zip(vr) {
+                    *ox += w * vx;
+                }
+            }
+        }
+    }
+    o
+}
+
+/// Backward of [`softmax_fwd`]: recomputes each probability row, then applies
+/// the standard softmax-attention vjp.
+pub fn softmax_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    sh: LayerShape,
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut dq = vec![0.0f32; bh * n * dk];
+    let mut dkk = vec![0.0f32; bh * n * dk];
+    let mut dvv = vec![0.0f32; bh * n * dv];
+    let mut p = vec![0.0f32; n];
+    let mut g = vec![0.0f32; n];
+    for b in 0..bh {
+        for t in 0..n {
+            let qr = &q[(b * n + t) * dk..][..dk];
+            let gr = &go[(b * n + t) * dv..][..dv];
+            // recompute the probability row
+            let mut m = f32::NEG_INFINITY;
+            for sidx in 0..=t {
+                let kr = &k[(b * n + sidx) * dk..][..dk];
+                let mut a = 0.0f32;
+                for (qx, kx) in qr.iter().zip(kr) {
+                    a += qx * kx;
+                }
+                let a = a * scale;
+                p[sidx] = a;
+                m = m.max(a);
+            }
+            let mut z = 0.0f32;
+            for sc in p[..=t].iter_mut() {
+                *sc = (*sc - m).exp();
+                z += *sc;
+            }
+            let inv = 1.0 / z;
+            // g_s = go_t · v_s ; c = Σ p_s g_s
+            let mut csum = 0.0f32;
+            for sidx in 0..=t {
+                p[sidx] *= inv;
+                let vr = &v[(b * n + sidx) * dv..][..dv];
+                let mut gv = 0.0f32;
+                for (gx, vx) in gr.iter().zip(vr) {
+                    gv += gx * vx;
+                }
+                g[sidx] = gv;
+                csum += p[sidx] * gv;
+            }
+            // dv_s += p_s go_t ; dscore_s = p_s (g_s − c)
+            let dqr_start = (b * n + t) * dk;
+            for sidx in 0..=t {
+                let ds = p[sidx] * (g[sidx] - csum) * scale;
+                {
+                    let dvr = &mut dvv[(b * n + sidx) * dv..][..dv];
+                    let w = p[sidx];
+                    for (dx, gx) in dvr.iter_mut().zip(gr) {
+                        *dx += w * gx;
+                    }
+                }
+                let kr = &k[(b * n + sidx) * dk..][..dk];
+                {
+                    let dqr = &mut dq[dqr_start..][..dk];
+                    for (dx, kx) in dqr.iter_mut().zip(kr) {
+                        *dx += ds * kx;
+                    }
+                }
+                {
+                    let dkr = &mut dkk[(b * n + sidx) * dk..][..dk];
+                    for (dx, qx) in dkr.iter_mut().zip(qr) {
+                        *dx += ds * qx;
+                    }
+                }
+            }
+        }
+    }
+    (dq, dkk, dvv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+
+    fn randn(n: usize, seed: u64) -> Vec<f32> {
+        match Tensor::randn(vec![n], seed) {
+            Tensor::F32 { data, .. } => data,
+            _ => unreachable!(),
+        }
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn scan_chunk_quadratic_agree_on_forward() {
+        let sh = LayerShape::cube(2, 33, 8);
+        let q = randn(sh.bh * sh.n * sh.dk, 1);
+        let k = randn(sh.bh * sh.n * sh.dk, 2);
+        let v = randn(sh.bh * sh.n * sh.dv, 3);
+        let a = la_scan_fwd(&q, &k, &v, sh, 1.0);
+        let b = la_chunk_fwd(&q, &k, &v, sh, 7);
+        let c = la_quadratic_fwd(&q, &k, &v, sh);
+        assert!(max_abs_diff(&a, &c) < 1e-3, "scan vs quadratic {}", max_abs_diff(&a, &c));
+        assert!(max_abs_diff(&b, &c) < 1e-3, "chunk vs quadratic {}", max_abs_diff(&b, &c));
+    }
+
+    #[test]
+    fn scan_chunk_quadratic_agree_on_backward() {
+        let sh = LayerShape::cube(2, 21, 6);
+        let q = randn(sh.bh * sh.n * sh.dk, 4);
+        let k = randn(sh.bh * sh.n * sh.dk, 5);
+        let v = randn(sh.bh * sh.n * sh.dv, 6);
+        let go = randn(sh.bh * sh.n * sh.dv, 7);
+        let (aq, ak, av) = la_scan_bwd(&q, &k, &v, &go, sh, 1.0);
+        let (bq, bk, bv) = la_chunk_bwd(&q, &k, &v, &go, sh, 5);
+        let (cq, ck, cv) = la_quadratic_bwd(&q, &k, &v, &go, sh);
+        for (x, y) in [(&aq, &cq), (&ak, &ck), (&av, &cv), (&bq, &cq), (&bk, &ck), (&bv, &cv)] {
+            assert!(max_abs_diff(x, y) < 1e-3, "bwd mismatch {}", max_abs_diff(x, y));
+        }
+    }
+
+    #[test]
+    fn scan_gradients_match_finite_differences() {
+        // tiny shape so central differences are cheap and well-conditioned
+        let sh = LayerShape::cube(1, 5, 3);
+        let q = randn(sh.bh * sh.n * sh.dk, 10);
+        let k = randn(sh.bh * sh.n * sh.dk, 11);
+        let v = randn(sh.bh * sh.n * sh.dv, 12);
+        let go = randn(sh.bh * sh.n * sh.dv, 13);
+        let gamma = 0.9f32;
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            la_scan_fwd(q, k, v, sh, gamma)
+                .iter()
+                .zip(&go)
+                .map(|(o, g)| (*o as f64) * (*g as f64))
+                .sum()
+        };
+        let (dq, dk, dv) = la_scan_bwd(&q, &k, &v, &go, sh, gamma);
+        let eps = 1e-3f32;
+        for idx in [0usize, 4, 7, 13] {
+            for (buf, grad, which) in [
+                (q.clone(), &dq, 0),
+                (k.clone(), &dk, 1),
+                (v.clone(), &dv, 2),
+            ] {
+                let mut plus = buf.clone();
+                let mut minus = buf.clone();
+                plus[idx] += eps;
+                minus[idx] -= eps;
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    1 => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grad[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "which={which} idx={idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_convex_combinations() {
+        let sh = LayerShape::cube(1, 16, 4);
+        let q = randn(sh.bh * sh.n * sh.dk, 20);
+        let k = randn(sh.bh * sh.n * sh.dk, 21);
+        // v constant 1 → every output row must be exactly 1 (weights sum to 1)
+        let v = vec![1.0f32; sh.bh * sh.n * sh.dv];
+        let o = softmax_fwd(&q, &k, &v, sh, 0.5);
+        for x in &o {
+            assert!((x - 1.0).abs() < 1e-5, "row weight sum drifted: {x}");
+        }
+    }
+
+    #[test]
+    fn softmax_gradients_match_finite_differences() {
+        let sh = LayerShape::cube(1, 4, 3);
+        let q = randn(sh.bh * sh.n * sh.dk, 30);
+        let k = randn(sh.bh * sh.n * sh.dk, 31);
+        let v = randn(sh.bh * sh.n * sh.dv, 32);
+        let go = randn(sh.bh * sh.n * sh.dv, 33);
+        let scale = 0.7f32;
+        let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
+            softmax_fwd(q, k, v, sh, scale)
+                .iter()
+                .zip(&go)
+                .map(|(o, g)| (*o as f64) * (*g as f64))
+                .sum()
+        };
+        let (dq, dk, dv) = softmax_bwd(&q, &k, &v, &go, sh, scale);
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 8, 11] {
+            for which in 0..3 {
+                let (buf, grad) = match which {
+                    0 => (&q, &dq),
+                    1 => (&k, &dk),
+                    _ => (&v, &dv),
+                };
+                let mut plus = buf.clone();
+                let mut minus = buf.clone();
+                plus[idx] += eps;
+                minus[idx] -= eps;
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &k, &v), loss(&minus, &k, &v)),
+                    1 => (loss(&q, &plus, &v), loss(&q, &minus, &v)),
+                    _ => (loss(&q, &k, &plus), loss(&q, &k, &minus)),
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grad[idx];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "which={which} idx={idx}: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gated_scan_decays_old_context() {
+        // with strong decay, o_t is dominated by the most recent (k,v)
+        let sh = LayerShape::cube(1, 3, 2);
+        let q = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let k = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let v = vec![1.0, 1.0, 2.0, 2.0, 4.0, 4.0];
+        let o = la_scan_fwd(&q, &k, &v, sh, 0.5);
+        // t=2: 0.25·1 + 0.5·2 + 4 = 5.25
+        assert!((o[4] - 5.25).abs() < 1e-6, "o[4] {}", o[4]);
+        let o_plain = la_scan_fwd(&q, &k, &v, sh, 1.0);
+        assert!((o_plain[4] - 7.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,439 @@
+//! The native CPU backend: pure-Rust implementations of every artifact the
+//! runtime names, with zero external dependencies — no Python build step, no
+//! HLO artifacts, no FFI. This is the default backend and the reference
+//! implementation every accelerated path is diffed against.
+//!
+//! - [`kernels`] — the paper's causal linear-attention forward/backward
+//!   (state scan + chunkwise variants) and the quadratic baselines;
+//! - [`model`] — the tiny LM (train step / eval / logits / init) with a
+//!   hand-derived backward pass and in-tree Adam;
+//! - [`NativeBackend`] — the [`Backend`] impl: a code-built [`Manifest`]
+//!   mirroring the AOT artifact naming scheme (`layer_<impl>_<kind>_n<N>_d<D>`,
+//!   `lm_<preset>_<attn>_<op>`, `quickstart_la_*`) and per-artifact executors.
+
+pub mod kernels;
+pub mod model;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::backend::{Backend, Executor};
+use crate::runtime::{ArtifactMeta, IoSpec, Manifest, Tensor};
+use crate::util::json::Json;
+
+use kernels::LayerShape;
+use model::{AttnKind, LmConfig};
+
+/// Batch×heads used by every registered layer artifact.
+const LAYER_BH: usize = 4;
+/// Head dimension of the registered layer sweep.
+const LAYER_D: usize = 128;
+/// Chunk length of the chunkwise `ours` artifacts.
+const OURS_CHUNK: usize = 128;
+
+/// The dependency-free CPU backend.
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn platform(&self) -> String {
+        "cpu".to_string()
+    }
+
+    fn manifest(&self) -> Result<Manifest> {
+        Ok(build_manifest())
+    }
+
+    fn load(&self, name: &str, meta: &ArtifactMeta) -> Result<Box<dyn Executor>> {
+        match meta.kind.as_str() {
+            "layer_fwd" | "layer_fwdbwd" => {
+                let imp = match meta.implementation() {
+                    Some("ours") => LayerImpl::Chunk(meta.chunk.unwrap_or(OURS_CHUNK)),
+                    Some("ours_scan") => LayerImpl::Scan,
+                    Some("quadratic") => LayerImpl::Quadratic,
+                    Some("softmax") => LayerImpl::Softmax,
+                    other => bail!("no native kernel for impl {other:?} ({name})"),
+                };
+                let sh = LayerShape::cube(
+                    meta.bh.ok_or_else(|| anyhow!("{name}: missing bh"))?,
+                    meta.n.ok_or_else(|| anyhow!("{name}: missing n"))?,
+                    meta.d.ok_or_else(|| anyhow!("{name}: missing d"))?,
+                );
+                Ok(Box::new(LayerExec { imp, grad: meta.kind == "layer_fwdbwd", sh }))
+            }
+            "lm_train_step" | "lm_eval" | "lm_init" | "lm_logits" => {
+                if meta.preset.as_deref() != Some("tiny") {
+                    bail!("native backend only ships the `tiny` LM preset ({name})");
+                }
+                let attn = AttnKind::from_name(
+                    meta.attn.as_deref().ok_or_else(|| anyhow!("{name}: missing attn"))?,
+                )?;
+                let op = match meta.kind.as_str() {
+                    "lm_train_step" => LmOp::TrainStep,
+                    "lm_eval" => LmOp::Eval,
+                    "lm_init" => LmOp::Init,
+                    _ => LmOp::Logits,
+                };
+                Ok(Box::new(LmExec { cfg: LmConfig::tiny(attn), op }))
+            }
+            other => bail!("native backend cannot execute artifact kind {other:?} ({name})"),
+        }
+    }
+}
+
+// --- layer executors --------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum LayerImpl {
+    /// Chunkwise linear attention (the paper's kernel layout).
+    Chunk(usize),
+    /// Sequential state scan (same math, pure recurrence).
+    Scan,
+    /// Softmax-free quadratic reference (masked (QKᵀ)V).
+    Quadratic,
+    /// Standard causal softmax attention.
+    Softmax,
+}
+
+struct LayerExec {
+    imp: LayerImpl,
+    grad: bool,
+    sh: LayerShape,
+}
+
+impl Executor for LayerExec {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let want = if self.grad { 4 } else { 3 };
+        if inputs.len() != want {
+            bail!("layer kernel wants {want} inputs (q, k, v{}), got {}",
+                  if self.grad { ", grad_o" } else { "" }, inputs.len());
+        }
+        let sh = self.sh;
+        let numel = sh.bh * sh.n * sh.dk;
+        let mut bufs = Vec::with_capacity(want);
+        for (i, t) in inputs.iter().enumerate() {
+            let data = t.as_f32()?;
+            if data.len() != numel {
+                bail!("layer input #{i}: expected {numel} elements, got {}", data.len());
+            }
+            bufs.push(data);
+        }
+        let (q, k, v) = (bufs[0], bufs[1], bufs[2]);
+        let cube = vec![sh.bh, sh.n, sh.dk];
+        let scale = 1.0 / (sh.dk as f32).sqrt();
+        if !self.grad {
+            let o = match self.imp {
+                LayerImpl::Chunk(c) => kernels::la_chunk_fwd(q, k, v, sh, c),
+                LayerImpl::Scan => kernels::la_scan_fwd(q, k, v, sh, 1.0),
+                LayerImpl::Quadratic => kernels::la_quadratic_fwd(q, k, v, sh),
+                LayerImpl::Softmax => kernels::softmax_fwd(q, k, v, sh, scale),
+            };
+            Ok(vec![Tensor::f32(cube, o)?])
+        } else {
+            let go = bufs[3];
+            let (dq, dk, dv) = match self.imp {
+                LayerImpl::Chunk(c) => kernels::la_chunk_bwd(q, k, v, go, sh, c),
+                LayerImpl::Scan => kernels::la_scan_bwd(q, k, v, go, sh, 1.0),
+                LayerImpl::Quadratic => kernels::la_quadratic_bwd(q, k, v, go, sh),
+                LayerImpl::Softmax => kernels::softmax_bwd(q, k, v, go, sh, scale),
+            };
+            Ok(vec![
+                Tensor::f32(cube.clone(), dq)?,
+                Tensor::f32(cube.clone(), dk)?,
+                Tensor::f32(cube, dv)?,
+            ])
+        }
+    }
+}
+
+// --- LM executors -----------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum LmOp {
+    Init,
+    TrainStep,
+    Eval,
+    Logits,
+}
+
+struct LmExec {
+    cfg: LmConfig,
+    op: LmOp,
+}
+
+impl Executor for LmExec {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let np = self.cfg.n_params();
+        match self.op {
+            LmOp::Init => {
+                if inputs.len() != 1 {
+                    bail!("lm_init wants 1 input (seed), got {}", inputs.len());
+                }
+                let seed = model::scalar_i64(inputs[0])?;
+                Ok(self.cfg.init_state(seed as u64))
+            }
+            LmOp::TrainStep => {
+                if inputs.len() != 3 * np + 2 {
+                    bail!(
+                        "lm_train_step wants {} inputs (state ++ tokens ++ step), got {}",
+                        3 * np + 2,
+                        inputs.len()
+                    );
+                }
+                let state = &inputs[..3 * np];
+                let tokens = inputs[3 * np];
+                let step = model::scalar_i64(inputs[3 * np + 1])?;
+                model::train_step(&self.cfg, state, tokens, step)
+            }
+            LmOp::Eval => {
+                if inputs.len() != np + 1 {
+                    bail!("lm_eval wants {} inputs (params ++ tokens), got {}", np + 1, inputs.len());
+                }
+                let loss = model::eval_loss(&self.cfg, &inputs[..np], inputs[np])?;
+                Ok(vec![Tensor::scalar_f32(loss)])
+            }
+            LmOp::Logits => {
+                if inputs.len() != np + 1 {
+                    bail!("lm_logits wants {} inputs (params ++ tokens), got {}", np + 1, inputs.len());
+                }
+                Ok(vec![model::logits(&self.cfg, &inputs[..np], inputs[np])?])
+            }
+        }
+    }
+}
+
+// --- manifest construction --------------------------------------------------
+
+fn f32_spec(index: usize, shape: &[usize]) -> IoSpec {
+    IoSpec { index, dtype: "f32".to_string(), shape: shape.to_vec() }
+}
+
+fn i32_spec(index: usize, shape: &[usize]) -> IoSpec {
+    IoSpec { index, dtype: "i32".to_string(), shape: shape.to_vec() }
+}
+
+fn layer_meta(kind: &str, imp: &str, bh: usize, n: usize, d: usize, chunk: usize) -> ArtifactMeta {
+    let cube = [bh, n, d];
+    let grad = kind == "layer_fwdbwd";
+    let n_in = if grad { 4 } else { 3 };
+    let n_out = if grad { 3 } else { 1 };
+    ArtifactMeta {
+        file: format!("native://layer/{imp}/{kind}/n{n}_d{d}"),
+        hash: "native".to_string(),
+        kind: kind.to_string(),
+        impl_name: Some(imp.to_string()),
+        bh: Some(bh),
+        n: Some(n),
+        d: Some(d),
+        chunk: if chunk > 0 { Some(chunk) } else { None },
+        preset: None,
+        attn: None,
+        batch: None,
+        n_params: None,
+        n_param_arrays: None,
+        param_names: None,
+        model: None,
+        train: None,
+        inputs: (0..n_in).map(|i| f32_spec(i, &cube)).collect(),
+        outputs: (0..n_out).map(|i| f32_spec(i, &cube)).collect(),
+    }
+}
+
+fn lm_meta(cfg: &LmConfig, attn_name: &str, kind: &str) -> ArtifactMeta {
+    let shapes = cfg.param_shapes();
+    let np = shapes.len();
+    let state_shapes: Vec<Vec<usize>> = shapes
+        .iter()
+        .map(|(_, s)| s.clone())
+        .chain(shapes.iter().map(|(_, s)| s.clone()))
+        .chain(shapes.iter().map(|(_, s)| s.clone()))
+        .collect();
+    let train_tokens = [cfg.batch, cfg.n_ctx + 1];
+    let ctx_tokens = [cfg.batch, cfg.n_ctx];
+    let (inputs, outputs) = match kind {
+        "lm_train_step" => {
+            let mut ins: Vec<IoSpec> =
+                state_shapes.iter().enumerate().map(|(i, s)| f32_spec(i, s)).collect();
+            ins.push(i32_spec(3 * np, &train_tokens));
+            ins.push(i32_spec(3 * np + 1, &[]));
+            let mut outs = vec![f32_spec(0, &[])];
+            outs.extend(state_shapes.iter().enumerate().map(|(i, s)| f32_spec(i + 1, s)));
+            (ins, outs)
+        }
+        "lm_eval" => {
+            let mut ins: Vec<IoSpec> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, (_, s))| f32_spec(i, s))
+                .collect();
+            ins.push(i32_spec(np, &train_tokens));
+            (ins, vec![f32_spec(0, &[])])
+        }
+        "lm_init" => {
+            let outs: Vec<IoSpec> =
+                state_shapes.iter().enumerate().map(|(i, s)| f32_spec(i, s)).collect();
+            (vec![i32_spec(0, &[])], outs)
+        }
+        _ => {
+            // lm_logits
+            let mut ins: Vec<IoSpec> = shapes
+                .iter()
+                .enumerate()
+                .map(|(i, (_, s))| f32_spec(i, s))
+                .collect();
+            ins.push(i32_spec(np, &ctx_tokens));
+            (ins, vec![f32_spec(0, &[cfg.batch, cfg.n_ctx, cfg.vocab])])
+        }
+    };
+    let n_params_total: u64 = shapes.iter().map(|(_, s)| s.iter().product::<usize>() as u64).sum();
+    ArtifactMeta {
+        file: format!("native://lm/tiny/{attn_name}/{kind}"),
+        hash: "native".to_string(),
+        kind: kind.to_string(),
+        impl_name: None,
+        bh: None,
+        n: None,
+        d: None,
+        chunk: None,
+        preset: Some("tiny".to_string()),
+        attn: Some(attn_name.to_string()),
+        batch: Some(cfg.batch),
+        n_params: Some(n_params_total),
+        n_param_arrays: Some(np),
+        param_names: Some(shapes.iter().map(|(n, _)| n.to_string()).collect()),
+        model: Some(Json::obj(vec![
+            ("n_ctx", Json::num(cfg.n_ctx as f64)),
+            ("vocab_size", Json::num(cfg.vocab as f64)),
+            ("d_model", Json::num(cfg.d_model as f64)),
+            ("n_head", Json::num(1.0)),
+            ("attn", Json::str(attn_name)),
+        ])),
+        train: Some(Json::obj(vec![
+            ("lr_max", Json::num(cfg.lr_max)),
+            ("lr_min", Json::num(cfg.lr_min)),
+            ("warmup_steps", Json::num(cfg.warmup_steps as f64)),
+            ("total_steps", Json::num(cfg.total_steps as f64)),
+        ])),
+        inputs,
+        outputs,
+    }
+}
+
+/// The artifact registry of the native backend, mirroring the naming scheme
+/// of the AOT path so every caller works unmodified against either backend.
+pub fn build_manifest() -> Manifest {
+    let mut artifacts = std::collections::BTreeMap::new();
+
+    // quickstart trio: fixed BH=4, N=256, D=64
+    artifacts.insert(
+        "quickstart_la_fwd".to_string(),
+        layer_meta("layer_fwd", "ours", 4, 256, 64, 64),
+    );
+    artifacts.insert(
+        "quickstart_la_bwd".to_string(),
+        layer_meta("layer_fwdbwd", "ours", 4, 256, 64, 64),
+    );
+    artifacts.insert(
+        "quickstart_la_ref".to_string(),
+        layer_meta("layer_fwd", "quadratic", 4, 256, 64, 0),
+    );
+
+    // layer sweep: (impl, chunk, fwd Ns, fwdbwd Ns). N starts at 1024 (below
+    // that the analytic model's fixed launch overhead dominates and the
+    // linear-scaling series is meaningless); quadratic-time baselines stop
+    // earlier so a full sweep stays tractable on one core.
+    let sweeps: &[(&str, usize, &[usize], &[usize])] = &[
+        ("ours", OURS_CHUNK, &[1024, 2048, 4096, 8192], &[1024, 2048, 4096]),
+        ("ours_scan", 0, &[1024, 2048, 4096, 8192], &[1024, 2048, 4096]),
+        ("quadratic", 0, &[1024, 2048], &[1024, 2048]),
+        ("softmax", 0, &[1024, 2048, 4096], &[1024, 2048]),
+    ];
+    for &(imp, chunk, fwd_ns, bwd_ns) in sweeps {
+        for &n in fwd_ns {
+            artifacts.insert(
+                format!("layer_{imp}_fwd_n{n}_d{LAYER_D}"),
+                layer_meta("layer_fwd", imp, LAYER_BH, n, LAYER_D, chunk),
+            );
+        }
+        for &n in bwd_ns {
+            artifacts.insert(
+                format!("layer_{imp}_fwdbwd_n{n}_d{LAYER_D}"),
+                layer_meta("layer_fwdbwd", imp, LAYER_BH, n, LAYER_D, chunk),
+            );
+        }
+    }
+
+    // tiny LM, all three attention variants
+    for attn in ["ours", "gated", "softmax"] {
+        let cfg = LmConfig::tiny(AttnKind::from_name(attn).expect("static attn name"));
+        for kind in ["lm_train_step", "lm_eval", "lm_init", "lm_logits"] {
+            artifacts.insert(format!("lm_tiny_{attn}_{kind}"), lm_meta(&cfg, attn, kind));
+        }
+    }
+
+    Manifest {
+        version: 2,
+        jax: String::new(),
+        preset: "native".to_string(),
+        artifacts,
+        dir: std::path::PathBuf::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_has_core_artifact_families() {
+        let m = build_manifest();
+        for name in [
+            "quickstart_la_fwd",
+            "quickstart_la_bwd",
+            "quickstart_la_ref",
+            "layer_ours_fwd_n1024_d128",
+            "layer_quadratic_fwd_n1024_d128",
+            "layer_softmax_fwd_n4096_d128",
+            "lm_tiny_ours_train_step",
+            "lm_tiny_gated_eval",
+            "lm_tiny_softmax_init",
+            "lm_tiny_ours_logits",
+        ] {
+            assert!(m.get(name).is_ok(), "missing {name}");
+        }
+        assert!(!m.by_kind("layer_fwd").is_empty());
+        assert!(!m.by_kind("lm_train_step").is_empty());
+        // sweep series exclude quickstart_* and are (N, D)-sorted
+        let ours = m.layer_sweep("layer_fwd", "ours");
+        assert!(ours.len() >= 4);
+        assert!(ours.windows(2).all(|w| w[0].1.n <= w[1].1.n));
+        assert!(ours.iter().all(|(name, _)| !name.starts_with("quickstart")));
+    }
+
+    #[test]
+    fn lm_meta_matches_trainer_contract() {
+        let m = build_manifest();
+        let step = m.get("lm_tiny_ours_train_step").unwrap();
+        let np = step.n_param_arrays.unwrap();
+        assert_eq!(np, 8);
+        assert_eq!(step.batch, Some(8));
+        assert_eq!(step.model_field_usize("n_ctx"), Some(64));
+        assert_eq!(step.model_field_usize("vocab_size"), Some(256));
+        assert!(step.train_field_f64("lr_max").unwrap() > 0.0);
+        assert_eq!(step.inputs.len(), 3 * np + 2);
+        assert_eq!(step.outputs.len(), 3 * np + 1);
+        let init = m.get("lm_tiny_ours_init").unwrap();
+        assert_eq!(init.inputs.len(), 1);
+        assert_eq!(init.outputs.len(), 3 * np);
+    }
+}

@@ -1,0 +1,39 @@
+//! The backend abstraction: every execution engine (native CPU, PJRT, …)
+//! implements these two traits and the rest of the stack — coordinator,
+//! bench harness, task scorer, CLI — stays backend-agnostic.
+//!
+//! Contract:
+//! - a backend *names* its computations via a [`Manifest`] (the same schema
+//!   the AOT Python path emits as `artifacts/manifest.json`);
+//! - [`Backend::load`] binds one named artifact to an [`Executor`];
+//! - executors run on host [`Tensor`]s in, host tensors out. Device-resident
+//!   state (if any) is the backend's private business; the native backend has
+//!   none, so host tensors ARE the hot-path representation.
+
+use anyhow::Result;
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::Tensor;
+
+/// A loaded, ready-to-run computation (one artifact).
+pub trait Executor {
+    /// Execute on host tensors; inputs are borrowed, outputs are owned.
+    ///
+    /// Implementations must return at least one output tensor or an error —
+    /// callers rely on `out[0]` being addressable (the engine enforces this
+    /// with a descriptive error either way).
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// An execution engine: enumerates artifacts and instantiates executors.
+pub trait Backend {
+    /// Short platform tag (`"cpu"` for both the native and CPU-PJRT paths).
+    fn platform(&self) -> String;
+
+    /// Enumerate the artifacts this backend can execute.
+    fn manifest(&self) -> Result<Manifest>;
+
+    /// Instantiate (compile / bind) one artifact. `meta` is the manifest
+    /// entry for `name`, already validated to exist.
+    fn load(&self, name: &str, meta: &ArtifactMeta) -> Result<Box<dyn Executor>>;
+}

@@ -1,69 +1,57 @@
-//! The PJRT engine: one client, a cache of compiled executables.
+//! The engine: one backend, a cache of loaded executables.
+//!
+//! `Engine` is generic over [`Backend`] via dynamic dispatch — the per-call
+//! overhead is one vtable hop, irrelevant next to any kernel's work. The
+//! default backend is the dependency-free native CPU executor; the PJRT/XLA
+//! path compiles behind the off-by-default `pjrt` cargo feature and is
+//! selected at runtime with `REPRO_BACKEND=pjrt`.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{bail, Result};
 
+use super::backend::{Backend, Executor};
 use super::manifest::{ArtifactMeta, Manifest};
 use super::tensor::Tensor;
 
-/// A compiled artifact ready to execute.
+/// A loaded artifact ready to execute.
 pub struct Executable {
     pub name: String,
     pub meta: ArtifactMeta,
-    exe: PjRtLoadedExecutable,
+    exec: Box<dyn Executor>,
 }
 
 impl Executable {
-    /// Execute with host tensors; returns the decomposed output tuple.
-    ///
-    /// All artifacts are lowered with `return_tuple=True`, so PJRT hands back
-    /// a single tuple buffer which we sync to host and split.
+    /// Execute with host tensors, checking shapes against the manifest spec.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         self.check_inputs(inputs)?;
-        let lits: Vec<Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        self.run_literals(&lits)
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        self.run_refs(&refs)
     }
 
-    /// Execute with pre-converted literals (hot path: skips re-encoding
-    /// inputs that do not change between calls).
-    pub fn run_literals(&self, lits: &[Literal]) -> Result<Vec<Tensor>> {
-        let out = self.exe.execute::<Literal>(lits)?;
-        let tuple = out[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
+    /// Execute with borrowed tensors (hot path: the training state round-trips
+    /// without cloning; shape checks are skipped — the caller owns the
+    /// contract).
+    pub fn run_refs(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let out = self.exec.execute(inputs)?;
+        if out.is_empty() {
+            bail!("artifact {:?} returned no outputs", self.name);
+        }
+        Ok(out)
     }
 
-    /// Like [`Self::run_literals`] but borrowing the inputs (avoids cloning
-    /// large state literals when only a subset is passed).
-    pub fn run_literals_ref(&self, lits: &[&Literal]) -> Result<Vec<Tensor>> {
-        let out = self.exe.execute::<&Literal>(lits)?;
-        let tuple = out[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
-    }
-
-    /// Execute and return raw literals (hot path for the train loop: the
-    /// state literals round-trip without `Tensor` re-materialization).
-    pub fn run_to_literals(&self, lits: &[Literal]) -> Result<Vec<Literal>> {
-        let out = self.exe.execute::<Literal>(lits)?;
-        let tuple = out[0][0].to_literal_sync()?;
-        Ok(tuple.to_tuple()?)
-    }
-
-    /// Execute and time only the device execution + output sync.
-    pub fn run_timed(&self, lits: &[Literal]) -> Result<(Vec<Tensor>, f64)> {
+    /// Execute and time only the backend execution.
+    pub fn run_timed(&self, inputs: &[&Tensor]) -> Result<(Vec<Tensor>, f64)> {
         let t0 = Instant::now();
-        let out = self.exe.execute::<Literal>(lits)?;
-        let tuple = out[0][0].to_literal_sync()?;
+        let out = self.exec.execute(inputs)?;
         let secs = t0.elapsed().as_secs_f64();
-        let parts = tuple.to_tuple()?;
-        Ok((parts.iter().map(Tensor::from_literal).collect::<Result<_>>()?, secs))
+        if out.is_empty() {
+            bail!("artifact {:?} returned no outputs", self.name);
+        }
+        Ok((out, secs))
     }
 
     fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
@@ -100,59 +88,58 @@ impl Executable {
     }
 }
 
-/// PJRT client + manifest + executable cache.
+/// Backend + manifest + executable cache.
 ///
-/// Cheap to clone conceptually but owns FFI handles — share via `Rc` (the
-/// coordinator is single-threaded around the PJRT calls; XLA parallelizes
-/// internally).
+/// Owns the backend via `Box<dyn Backend>`; share the engine itself by
+/// reference (the coordinator is single-threaded around backend calls).
 pub struct Engine {
-    client: PjRtClient,
+    backend: Box<dyn Backend>,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<Executable>>>,
 }
 
 impl Engine {
-    /// Create a CPU-PJRT engine over a loaded manifest.
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()) })
+    /// Engine over an explicit backend instance.
+    pub fn with_backend(backend: Box<dyn Backend>) -> Result<Self> {
+        let manifest = backend.manifest()?;
+        Ok(Self { backend, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
-    /// Engine over the discovered `artifacts/` directory.
+    /// The dependency-free native CPU backend (always available).
+    pub fn native() -> Result<Self> {
+        Self::with_backend(Box::new(crate::native::NativeBackend::new()))
+    }
+
+    /// Select a backend from the environment: `REPRO_BACKEND=native` (the
+    /// default) or `REPRO_BACKEND=pjrt` (requires the `pjrt` cargo feature
+    /// and an `artifacts/` directory produced by `make artifacts`).
     pub fn discover() -> Result<Self> {
-        Self::new(Manifest::discover()?)
+        let which = std::env::var("REPRO_BACKEND").unwrap_or_else(|_| "native".to_string());
+        match which.as_str() {
+            "native" => Self::native(),
+            #[cfg(feature = "pjrt")]
+            "pjrt" => Self::with_backend(Box::new(super::pjrt::PjrtBackend::discover()?)),
+            other => bail!(
+                "backend {other:?} is not available in this build \
+                 (compiled backends: native{})",
+                if cfg!(feature = "pjrt") { ", pjrt" } else { "" }
+            ),
+        }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.platform()
     }
 
-    /// Load + compile an artifact (memoized).
+    /// Load an artifact (memoized).
     pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let meta = self.manifest.get(name)?.clone();
-        let path = self.manifest.hlo_path(name)?;
-        let proto = HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name:?}"))?;
-        let e = Rc::new(Executable { name: name.to_string(), meta, exe });
+        let exec = self.backend.load(name, &meta)?;
+        let e = Rc::new(Executable { name: name.to_string(), meta, exec });
         self.cache.borrow_mut().insert(name.to_string(), e.clone());
         Ok(e)
-    }
-
-    /// Compile-time of an artifact (for the §Perf log); bypasses the cache.
-    pub fn compile_time(&self, name: &str) -> Result<f64> {
-        let path = self.manifest.hlo_path(name)?;
-        let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(&path)?;
-        let comp = XlaComputation::from_proto(&proto);
-        let _exe = self.client.compile(&comp)?;
-        Ok(t0.elapsed().as_secs_f64())
     }
 }

@@ -1,17 +1,22 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute many.
+//! Multi-backend runtime: a [`Backend`] names artifacts and binds them to
+//! [`Executor`]s; the [`Engine`] caches loaded [`Executable`]s and the rest
+//! of the stack (coordinator, bench, tasks, CLI) is backend-agnostic.
 //!
-//! The interchange contract with the Python build path (`python/compile/aot.py`):
-//! - every computation is a file `artifacts/<name>.hlo.txt` (HLO **text** —
-//!   the xla crate's 0.5.1 extension rejects jax ≥ 0.5 serialized protos);
-//! - `artifacts/manifest.json` records per-artifact input/output specs and
-//!   metadata (kind, impl, N, D, model config, parameter names);
-//! - all computations are lowered with `return_tuple=True`, so execution
-//!   yields a single tuple literal that [`Executable::run`] decomposes.
+//! Backends:
+//! - **native** (default, always available) — `crate::native`, pure-Rust CPU
+//!   implementations of the paper's kernels and the tiny LM; zero external
+//!   artifacts, hermetic build.
+//! - **pjrt** (cargo feature `pjrt`, `REPRO_BACKEND=pjrt`) — compiles AOT
+//!   HLO-text artifacts produced by `python/compile/aot.py` via PJRT.
 
+pub mod backend;
 mod engine;
 mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 mod tensor;
 
+pub use backend::{Backend, Executor};
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactMeta, IoSpec, Manifest};
 pub use tensor::{DType, Tensor};

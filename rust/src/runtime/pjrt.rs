@@ -1,0 +1,116 @@
+//! PJRT/XLA backend — compiles AOT HLO-text artifacts and executes them via
+//! a CPU PJRT client. Gated behind the `pjrt` cargo feature (off by default):
+//! the `xla` crate needs a vendored libxla that the hermetic build image does
+//! not carry, so enabling the feature also requires uncommenting the `xla`
+//! dependency in `Cargo.toml`. See `rust/README.md` for the backend matrix.
+//!
+//! Interchange contract with the Python build path (`python/compile/aot.py`):
+//! - every computation is a file `artifacts/<name>.hlo.txt` (HLO **text** —
+//!   the xla crate's 0.5.1 extension rejects jax ≥ 0.5 serialized protos);
+//! - `artifacts/manifest.json` records per-artifact input/output specs;
+//! - all computations are lowered with `return_tuple=True`, so execution
+//!   yields a single tuple literal that the executor decomposes.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, Shape, XlaComputation};
+
+use super::backend::{Backend, Executor};
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::Tensor;
+
+fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        Tensor::F32 { data, .. } => Literal::vec1(data),
+        Tensor::I32 { data, .. } => Literal::vec1(data),
+    };
+    Ok(lit.reshape(&dims)?)
+}
+
+fn tensor_from_literal(lit: &Literal) -> Result<Tensor> {
+    let shape = lit.shape()?;
+    let arr = match &shape {
+        Shape::Array(a) => a,
+        other => bail!("expected array literal, got {other:?}"),
+    };
+    let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+    match arr.ty() {
+        ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+        ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+        other => bail!("unsupported element type {other:?}"),
+    }
+}
+
+/// One compiled HLO module.
+struct PjrtExecutor {
+    name: String,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executor for PjrtExecutor {
+    fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<Literal> =
+            inputs.iter().map(|t| tensor_to_literal(t)).collect::<Result<_>>()?;
+        let out = self.exe.execute::<Literal>(&lits)?;
+        // All artifacts are lowered with return_tuple=True: exactly one
+        // result buffer on one device. An artifact violating that contract
+        // must error, not panic (out[0][0] was previously indexed unchecked).
+        let tuple = out
+            .first()
+            .and_then(|per_device| per_device.first())
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact {:?} returned no output buffers (expected one tuple)",
+                    self.name
+                )
+            })?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.is_empty() {
+            bail!("artifact {:?} returned an empty output tuple", self.name);
+        }
+        parts.iter().map(tensor_from_literal).collect()
+    }
+}
+
+/// PJRT client over a discovered `artifacts/` directory.
+pub struct PjrtBackend {
+    client: PjRtClient,
+    manifest: Manifest,
+}
+
+impl PjrtBackend {
+    /// Backend over a loaded manifest.
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest })
+    }
+
+    /// Backend over the discovered `artifacts/` directory
+    /// (`$REPRO_ARTIFACTS`, else `./artifacts` walking up).
+    pub fn discover() -> Result<Self> {
+        Self::new(Manifest::discover()?)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn manifest(&self) -> Result<Manifest> {
+        Ok(self.manifest.clone())
+    }
+
+    fn load(&self, name: &str, _meta: &ArtifactMeta) -> Result<Box<dyn Executor>> {
+        let path = self.manifest.hlo_path(name)?;
+        let proto = HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        Ok(Box::new(PjrtExecutor { name: name.to_string(), exe }))
+    }
+}

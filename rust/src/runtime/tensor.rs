@@ -1,7 +1,8 @@
-//! Host-side tensor: the typed bridge between Rust data and XLA literals.
+//! Host-side tensor: the dense, row-major value type every backend consumes
+//! and produces. The native backend computes on these directly; the optional
+//! PJRT backend converts to/from `xla::Literal` at its boundary.
 
 use anyhow::{anyhow, bail, Result};
-use xla::{ElementType, Literal, Shape};
 
 /// Element type of a [`Tensor`] (the subset our artifacts use).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,7 +25,7 @@ impl DType {
     }
 }
 
-/// A dense host tensor (row-major), convertible to/from [`xla::Literal`].
+/// A dense host tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Tensor {
     F32 { shape: Vec<usize>, data: Vec<f32> },
@@ -113,26 +114,11 @@ impl Tensor {
         }
     }
 
-    pub fn to_literal(&self) -> Result<Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Tensor::F32 { data, .. } => Literal::vec1(data),
-            Tensor::I32 { data, .. } => Literal::vec1(data),
-        };
-        Ok(lit.reshape(&dims)?)
-    }
-
-    pub fn from_literal(lit: &Literal) -> Result<Self> {
-        let shape = lit.shape()?;
-        let arr = match &shape {
-            Shape::Array(a) => a,
-            other => bail!("expected array literal, got {other:?}"),
-        };
-        let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
-        match arr.ty() {
-            ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
-            ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
-            other => bail!("unsupported element type {other:?}"),
+    /// Mutable f32 view (native-backend parameter updates).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
         }
     }
 

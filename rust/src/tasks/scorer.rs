@@ -1,7 +1,6 @@
 //! Score a trained LM on the synthetic suite via the `lm_*_logits` artifact.
 
 use anyhow::{anyhow, bail, Result};
-use xla::Literal;
 
 use crate::runtime::{Engine, Tensor};
 
@@ -29,12 +28,12 @@ impl TaskScore {
 /// Run `examples` through the logits artifact in batches and count argmax
 /// hits at the answer positions.
 ///
-/// `params` are the first `n_param_arrays` literals of a training state (or a
+/// `params` are the first `n_param_arrays` tensors of a training state (or a
 /// checkpoint restored by the trainer).
 pub fn score_task(
     engine: &Engine,
     logits_artifact: &str,
-    params: &[Literal],
+    params: &[Tensor],
     kind: TaskKind,
     count: usize,
     seed: u64,
@@ -71,10 +70,9 @@ pub fn score_task(
             data.extend_from_slice(&ex.tokens);
         }
         let tokens = Tensor::i32(vec![batch, n_ctx], data)?;
-        let tokens_lit = tokens.to_literal()?;
-        let mut args: Vec<&Literal> = params[..nparam].iter().collect();
-        args.push(&tokens_lit);
-        let out = exe.run_literals_ref(&args)?;
+        let mut args: Vec<&Tensor> = params[..nparam].iter().collect();
+        args.push(&tokens);
+        let out = exe.run_refs(&args)?;
         let logits = out[0].as_f32()?;
         // logits: (batch, n_ctx, vocab); prediction for pos p reads row p-1
         for (bi, ex) in chunk.iter().enumerate() {

@@ -1,5 +1,5 @@
-//! Small in-tree utilities replacing external crates (the build is offline:
-//! only `xla` + `anyhow` are available — see Cargo.toml).
+//! Small in-tree utilities replacing external crates (the build is offline
+//! and hermetic: `anyhow` is the only dependency — see Cargo.toml).
 
 pub mod cli;
 pub mod json;

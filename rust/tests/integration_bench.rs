@@ -83,8 +83,7 @@ fn task_scorer_runs_on_fresh_init() {
     // build params via the init artifact (untrained — accuracy is near chance,
     // the point is the scoring path end-to-end)
     let init = engine.load("lm_tiny_ours_init").unwrap();
-    let seed = Tensor::scalar_i32(0).to_literal().unwrap();
-    let state = init.run_to_literals(&[seed]).unwrap();
+    let state = init.run(&[Tensor::scalar_i32(0)]).unwrap();
     let s = score_task(
         &engine,
         "lm_tiny_ours_logits",

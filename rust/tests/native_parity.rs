@@ -1,0 +1,128 @@
+//! Numerical parity of the native `ours` kernels (scan + chunkwise) against
+//! the quadratic softmax-free reference, and an end-to-end CLI smoke test of
+//! `repro train` on the tiny preset.
+
+use repro::native::kernels::{
+    la_chunk_bwd, la_chunk_fwd, la_quadratic_bwd, la_quadratic_fwd, la_scan_bwd, la_scan_fwd,
+    LayerShape,
+};
+use repro::runtime::Tensor;
+
+fn flat_randn(n: usize, seed: u64) -> Vec<f32> {
+    match Tensor::randn(vec![n], seed) {
+        Tensor::F32 { data, .. } => data,
+        _ => unreachable!(),
+    }
+}
+
+/// q/k drawn as unit rows (paper §3.3 normalization), v/go plain normal.
+fn layer_inputs(sh: LayerShape, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut q = Tensor::randn(vec![sh.bh, sh.n, sh.dk], seed);
+    let mut k = Tensor::randn(vec![sh.bh, sh.n, sh.dk], seed + 1);
+    q.normalize_rows();
+    k.normalize_rows();
+    let v = flat_randn(sh.bh * sh.n * sh.dv, seed + 2);
+    let go = flat_randn(sh.bh * sh.n * sh.dv, seed + 3);
+    let q = match q {
+        Tensor::F32 { data, .. } => data,
+        _ => unreachable!(),
+    };
+    let k = match k {
+        Tensor::F32 { data, .. } => data,
+        _ => unreachable!(),
+    };
+    (q, k, v, go)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+const PARITY_SHAPES: [(usize, usize); 2] = [(64, 16), (256, 32)];
+const TOL: f32 = 1e-4;
+
+#[test]
+fn ours_forward_matches_quadratic_reference() {
+    for (n, d) in PARITY_SHAPES {
+        let sh = LayerShape::cube(2, n, d);
+        let (q, k, v, _go) = layer_inputs(sh, 0xA0 + n as u64);
+        let reference = la_quadratic_fwd(&q, &k, &v, sh);
+        let scan = la_scan_fwd(&q, &k, &v, sh, 1.0);
+        let chunk = la_chunk_fwd(&q, &k, &v, sh, 64);
+        assert!(
+            max_abs_diff(&scan, &reference) < TOL,
+            "scan fwd (N={n}, D={d}): {}",
+            max_abs_diff(&scan, &reference)
+        );
+        assert!(
+            max_abs_diff(&chunk, &reference) < TOL,
+            "chunk fwd (N={n}, D={d}): {}",
+            max_abs_diff(&chunk, &reference)
+        );
+    }
+}
+
+#[test]
+fn ours_backward_matches_quadratic_reference() {
+    for (n, d) in PARITY_SHAPES {
+        let sh = LayerShape::cube(2, n, d);
+        let (q, k, v, go) = layer_inputs(sh, 0xB0 + n as u64);
+        let (rq, rk, rv) = la_quadratic_bwd(&q, &k, &v, &go, sh);
+        let (sq, sk, sv) = la_scan_bwd(&q, &k, &v, &go, sh, 1.0);
+        let (cq, ck, cv) = la_chunk_bwd(&q, &k, &v, &go, sh, 64);
+        for (name, got, want) in [
+            ("scan dq", &sq, &rq),
+            ("scan dk", &sk, &rk),
+            ("scan dv", &sv, &rv),
+            ("chunk dq", &cq, &rq),
+            ("chunk dk", &ck, &rk),
+            ("chunk dv", &cv, &rv),
+        ] {
+            assert!(
+                max_abs_diff(got, want) < TOL,
+                "{name} (N={n}, D={d}): {}",
+                max_abs_diff(got, want)
+            );
+        }
+    }
+}
+
+#[test]
+fn repro_train_cli_smoke_loss_is_finite_and_decreasing() {
+    let out_dir = std::env::temp_dir().join("repro_cli_smoke");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir).unwrap();
+
+    let status = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args([
+            "train",
+            "--preset",
+            "tiny",
+            "--attn",
+            "ours",
+            "--steps",
+            "5",
+            "--eval-every",
+            "0",
+            "--out",
+        ])
+        .arg(&out_dir)
+        .status()
+        .expect("repro binary must launch");
+    assert!(status.success(), "repro train exited with {status}");
+
+    let metrics = out_dir.join("lm_tiny_ours").join("metrics.jsonl");
+    let log = repro::coordinator::MetricsLog::read_jsonl(&metrics).unwrap();
+    let recs = log.records();
+    assert_eq!(recs.len(), 5);
+    for r in recs {
+        assert!(r.loss.is_finite(), "step {} loss {}", r.step, r.loss);
+    }
+    assert!(
+        recs.last().unwrap().loss < recs[0].loss,
+        "loss did not decrease: {} → {}",
+        recs[0].loss,
+        recs.last().unwrap().loss
+    );
+}
