@@ -1,8 +1,11 @@
 //! Benchmark harness: regenerate every table and figure of the paper's §5.
 //!
-//! - [`timing`] — warmup + trimmed-mean measurement of artifact execution;
+//! - [`timing`] — explicit warmup + trimmed-mean / percentile (p10/p50/p90)
+//!   measurement of artifact execution;
 //! - [`sweep`] — drive the per-(impl, N, D) layer artifacts (Figs 2-3, Table 1);
-//! - [`report`] — markdown/CSV emitters matching the paper's rows and series.
+//! - [`report`] — markdown/CSV emitters matching the paper's rows and series,
+//!   plus the `BENCH_native.json` perf-trajectory artifact (parallel/tiled
+//!   kernels vs the scalar single-thread reference — see `repro bench-native`).
 //!
 //! Memory columns are analytic (the [`crate::simulator`] model): a CPU host
 //! cannot observe GPU residency, but the per-implementation formulas are

@@ -4,6 +4,7 @@
 use std::fmt::Write as _;
 
 use crate::simulator::{Impl, TrafficModel, TrafficReport};
+use crate::util::json::Json;
 
 use super::sweep::SweepPoint;
 
@@ -31,12 +32,12 @@ pub fn fmt_bytes(b: f64) -> String {
 /// Fig-2/3 CSV: one row per measured point.
 pub fn sweep_csv(points: &[SweepPoint]) -> String {
     let mut out = String::from(
-        "impl,kind,bh,n,d,chunk,cpu_s_p50,cpu_s_trimmed,model_total_s,model_move_s,model_bytes,mem_bytes\n",
+        "impl,kind,bh,n,d,chunk,cpu_s_p50,cpu_s_p10,cpu_s_p90,cpu_s_trimmed,model_total_s,model_move_s,model_bytes,mem_bytes\n",
     );
     for p in points {
         let _ = writeln!(
             out,
-            "{},{},{},{},{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
+            "{},{},{},{},{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
             p.impl_name,
             p.kind,
             p.bh,
@@ -44,11 +45,82 @@ pub fn sweep_csv(points: &[SweepPoint]) -> String {
             p.d,
             p.chunk,
             p.cpu_s.p50,
+            p.cpu_s.p10,
+            p.cpu_s.p90,
             p.cpu_s.trimmed_mean,
             p.model_total_s,
             p.model_move_s,
             p.model_bytes,
             p.mem_bytes
+        );
+    }
+    out
+}
+
+/// Machine-readable perf trajectory artifact (`BENCH_native.json`): one entry
+/// per artifact measured on the parallel/tiled path, joined with the scalar
+/// single-thread reference baseline for the speedup column. Times are
+/// nanoseconds (median plus p10/p90 spread).
+pub fn bench_native_json(
+    parallel: &[SweepPoint],
+    scalar: &[SweepPoint],
+    threads: usize,
+    chunk: usize,
+) -> String {
+    let arts: Vec<Json> = parallel
+        .iter()
+        .map(|p| {
+            let mut fields = vec![
+                ("name", Json::str(p.name.clone())),
+                ("impl", Json::str(p.impl_name.clone())),
+                ("kind", Json::str(p.kind.clone())),
+                ("bh", Json::num(p.bh as f64)),
+                ("n", Json::num(p.n as f64)),
+                ("d", Json::num(p.d as f64)),
+                ("chunk", Json::num(p.chunk as f64)),
+                ("median_ns", Json::num(p.cpu_s.p50 * 1e9)),
+                ("p10_ns", Json::num(p.cpu_s.p10 * 1e9)),
+                ("p90_ns", Json::num(p.cpu_s.p90 * 1e9)),
+            ];
+            if let Some(s) = scalar.iter().find(|s| s.name == p.name) {
+                fields.push(("scalar_median_ns", Json::num(s.cpu_s.p50 * 1e9)));
+                if p.cpu_s.p50 > 0.0 {
+                    fields.push(("speedup_vs_scalar", Json::num(s.cpu_s.p50 / p.cpu_s.p50)));
+                }
+            }
+            Json::obj(fields)
+        })
+        .collect();
+    Json::obj(vec![
+        ("schema", Json::str("bench_native/v1")),
+        ("threads", Json::num(threads as f64)),
+        ("chunk", Json::num(chunk as f64)),
+        ("artifacts", Json::Arr(arts)),
+    ])
+    .to_string()
+}
+
+/// Human-readable companion of [`bench_native_json`].
+pub fn bench_native_markdown(parallel: &[SweepPoint], scalar: &[SweepPoint]) -> String {
+    let mut out = String::from(
+        "| artifact | scalar p50 | parallel p50 | speedup |\n|---|---|---|---|\n",
+    );
+    for p in parallel {
+        let base = scalar.iter().find(|s| s.name == p.name);
+        let (scalar_s, speedup) = match base {
+            Some(s) if p.cpu_s.p50 > 0.0 => {
+                (fmt_time(s.cpu_s.p50), format!("{:.2}×", s.cpu_s.p50 / p.cpu_s.p50))
+            }
+            Some(s) => (fmt_time(s.cpu_s.p50), "—".to_string()),
+            None => ("—".to_string(), "—".to_string()),
+        };
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} |",
+            p.name,
+            scalar_s,
+            fmt_time(p.cpu_s.p50),
+            speedup
         );
     }
     out
@@ -182,6 +254,40 @@ mod tests {
             assert!(t.contains(name), "missing {name}");
         }
         assert_eq!(t.lines().count(), 2 + 5);
+    }
+
+    #[test]
+    fn bench_native_json_joins_scalar_baseline() {
+        use crate::bench::TimingStats;
+        let point = |name: &str, secs: f64| SweepPoint {
+            name: name.to_string(),
+            impl_name: "ours".to_string(),
+            kind: "layer_fwd".to_string(),
+            bh: 4,
+            n: 1024,
+            d: 128,
+            chunk: 128,
+            cpu_s: TimingStats::from_samples(vec![secs, secs, secs]).unwrap(),
+            model_total_s: 1.0,
+            model_move_s: 0.5,
+            model_bytes: 1e6,
+            mem_bytes: 1e6,
+        };
+        let par = vec![point("layer_ours_fwd_n1024_d128", 0.010)];
+        let base = vec![point("layer_ours_fwd_n1024_d128", 0.040)];
+        let text = bench_native_json(&par, &base, 4, 128);
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v1"));
+        assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
+        let arts = v.get("artifacts").unwrap().as_arr().unwrap();
+        assert_eq!(arts.len(), 1);
+        let a = &arts[0];
+        assert_eq!(a.get("name").unwrap().as_str(), Some("layer_ours_fwd_n1024_d128"));
+        let speedup = a.get("speedup_vs_scalar").unwrap().as_f64().unwrap();
+        assert!((speedup - 4.0).abs() < 1e-6, "speedup {speedup}");
+        assert!((a.get("median_ns").unwrap().as_f64().unwrap() - 1e7).abs() < 1.0);
+        let md = bench_native_markdown(&par, &base);
+        assert!(md.contains("4.00×"), "markdown:\n{md}");
     }
 
     #[test]

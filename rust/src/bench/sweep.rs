@@ -11,6 +11,8 @@ use super::timing::{measure, TimingStats};
 /// One measured point of a Fig-2/3 series.
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
+    /// Artifact name the point was measured from.
+    pub name: String,
     pub impl_name: String,
     pub kind: String,
     pub bh: usize,
@@ -37,6 +39,9 @@ pub struct SweepRunner<'e> {
     /// Skip artifacts whose input+output footprint exceeds this many bytes
     /// (protects small hosts from the quadratic baselines at large N).
     pub max_bytes: usize,
+    /// Skip artifacts above this sequence length (`usize::MAX` = no cap);
+    /// lets CI smoke runs stay fast without a separate artifact set.
+    pub max_n: usize,
 }
 
 impl<'e> SweepRunner<'e> {
@@ -44,9 +49,10 @@ impl<'e> SweepRunner<'e> {
         Self {
             engine,
             model: TrafficModel::new(DeviceSpec::a6000()),
-            warmup: 1,
+            warmup: 2,
             reps: 5,
             max_bytes: 8 << 30,
+            max_n: usize::MAX,
         }
     }
 
@@ -86,6 +92,7 @@ impl<'e> SweepRunner<'e> {
         // backward ≈ 2× forward traffic (two scans) in the analytic model
         let bwd_scale = if meta.kind == "layer_fwdbwd" { 3.0 } else { 1.0 };
         Ok(SweepPoint {
+            name: name.to_string(),
             impl_name,
             kind: meta.kind.clone(),
             bh,
@@ -106,16 +113,24 @@ impl<'e> SweepRunner<'e> {
             .manifest
             .get(name)
             .map(|m| {
+                if m.n.unwrap_or(0) > self.max_n {
+                    return false;
+                }
                 let io: usize = m
                     .inputs
                     .iter()
                     .chain(m.outputs.iter())
                     .map(|s| s.size_bytes())
                     .sum();
-                // quadratic intermediates dominate the real footprint
+                // The native quadratic/softmax kernels are tile-blocked
+                // (O(64²) score tiles per worker) and never materialize an
+                // N×N buffer; charge one score row per sequence position as
+                // a conservative stand-in for per-worker scratch. Non-native
+                // backends (pjrt) may materialize more — revisit if a dense
+                // N×N HLO path is ever benched through this guard.
                 let intermediate = match (m.implementation(), m.n) {
                     (Some("quadratic" | "specdec" | "softmax"), Some(n)) => {
-                        m.bh.unwrap_or(1) * n * n * 4
+                        m.bh.unwrap_or(1) * n * 4
                     }
                     _ => 0,
                 };

@@ -6,7 +6,9 @@ pub struct TimingStats {
     pub reps: usize,
     pub mean: f64,
     pub trimmed_mean: f64,
+    pub p10: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p95: f64,
     pub min: f64,
     pub max: f64,
@@ -29,7 +31,9 @@ impl TimingStats {
             reps: n,
             mean,
             trimmed_mean: trimmed,
+            p10: pct(0.10),
             p50: pct(0.50),
+            p90: pct(0.90),
             p95: pct(0.95),
             min: samples[0],
             max: samples[n - 1],
@@ -46,7 +50,9 @@ impl TimingStats {
     }
 }
 
-/// Measure `f` with `warmup` throwaway calls and `reps` samples.
+/// Measure `f` with `warmup` explicit throwaway calls (cold caches, page
+/// faults, and lazy one-time setup land here, not in the samples) followed
+/// by `reps` recorded samples.
 pub fn measure<F: FnMut() -> anyhow::Result<f64>>(
     warmup: usize,
     reps: usize,
@@ -73,6 +79,10 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 100.0);
         assert_eq!(s.p50, 3.0);
+        // p10 rounds to the lowest sample, p90 to the highest of five
+        assert_eq!(s.p10, 1.0);
+        assert_eq!(s.p90, 100.0);
+        assert!(s.p10 <= s.p50 && s.p50 <= s.p90);
         assert!((s.mean - 22.0).abs() < 1e-9);
         // trimmed mean must be robust to the 100.0 outlier vs the raw mean
         assert!(s.trimmed_mean < s.mean);

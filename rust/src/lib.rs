@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! Reproduction of *"Transformer Based Linear Attention with Optimized GPU
 //! Kernel Implementation"* (Gerami & Duraiswami, 2025).
 //!
@@ -7,8 +8,11 @@
 //!   backend-agnostic.
 //! - **native** (default) — dependency-free pure-Rust CPU implementations of
 //!   the paper's causal linear-attention kernels (state scan, chunkwise,
-//!   quadratic baselines) and a tiny trainable LM. Hermetic: builds and runs
-//!   with `anyhow` as the only dependency.
+//!   quadratic baselines) and a tiny trainable LM, parallel across batch×heads
+//!   on a scoped `std::thread` pool (`RUST_PALLAS_THREADS`) and tiled through
+//!   cache-blocked GEMM microkernels (`--features simd` adds nightly
+//!   `core::simd` paths). Hermetic: builds and runs with `anyhow` as the only
+//!   dependency.
 //! - **pjrt** (cargo feature `pjrt`, off by default) — the original AOT path:
 //!   Pallas/JAX kernels lowered to HLO text by `python/compile/aot.py` and
 //!   executed through a CPU PJRT client.

@@ -4,6 +4,7 @@
 //! per-experiment index):
 //!   - `train`         Fig 5 learning curves (one run per attention impl)
 //!   - `bench-layer`   Figs 2-3 / Table 1 standalone-layer sweeps
+//!   - `bench-native`  parallel-vs-scalar kernel speedups → BENCH_native.json
 //!   - `bench-traffic` Fig 4 data-movement analysis (analytic A6000 model)
 //!   - `eval-tasks`    Table 2 synthetic reasoning suite
 //!   - `report`        summarize finished training runs
@@ -30,7 +31,12 @@ SUBCOMMANDS
   train          --preset tiny --attn ours --steps 200 --out runs
                  [--config run.toml] [--seed 0] [--eval-every 25]
   bench-layer    --kind layer_fwd|layer_fwdbwd [--impls a,b,c] [--reps 5]
-                 [--csv out.csv]
+                 [--warmup 2] [--csv out.csv]
+  bench-native   [--kinds layer_fwd,layer_fwdbwd] [--impls ours,ours_scan]
+                 [--reps 5] [--warmup 2] [--max-n 0] [--out BENCH_native.json]
+                 measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
+                 against the scalar single-thread reference and writes the
+                 machine-readable speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   report         [--runs runs]
@@ -42,6 +48,7 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("bench-layer") => cmd_bench_layer(&args),
+        Some("bench-native") => cmd_bench_native(&args),
         Some("bench-traffic") => cmd_bench_traffic(&args),
         Some("eval-tasks") => cmd_eval_tasks(&args),
         Some("report") => cmd_report(&args),
@@ -97,6 +104,7 @@ fn cmd_bench_layer(args: &Args) -> Result<()> {
     let engine = Engine::discover()?;
     let mut runner = SweepRunner::new(&engine);
     runner.reps = args.get_usize("reps", 5)?;
+    runner.warmup = args.get_usize("warmup", runner.warmup)?;
     let impl_list: Vec<String> = match args.get("impls") {
         Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
         None => ["ours", "ours_scan", "gated", "quadratic", "specdec", "flash", "softmax"]
@@ -114,6 +122,62 @@ fn cmd_bench_layer(args: &Args) -> Result<()> {
         std::fs::write(path, rpt::sweep_csv(&points))?;
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Measure every requested sweep artifact twice — once on the parallel/tiled
+/// kernels (pool from `RUST_PALLAS_THREADS`), once on the scalar
+/// single-thread reference — and write the joined speedup report as
+/// `BENCH_native.json`, so every perf PR leaves a trajectory artifact.
+fn cmd_bench_native(args: &Args) -> Result<()> {
+    use repro::native::pool::ThreadPool;
+    use repro::native::NativeBackend;
+
+    let out_path = args.get_or("out", "BENCH_native.json").to_string();
+    let reps = args.get_usize("reps", 5)?;
+    let warmup = args.get_usize("warmup", 2)?;
+    let max_n = args.get_usize("max-n", 0)?; // 0 = uncapped
+    let kinds: Vec<String> = args
+        .get_or("kinds", "layer_fwd")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let impls: Vec<String> = args
+        .get_or("impls", "ours,ours_scan")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    let threads = ThreadPool::from_env().threads();
+    let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
+    let ref_engine = Engine::with_backend(Box::new(NativeBackend::scalar_reference()))?;
+    let mut par_runner = SweepRunner::new(&par_engine);
+    let mut ref_runner = SweepRunner::new(&ref_engine);
+    for r in [&mut par_runner, &mut ref_runner] {
+        r.reps = reps;
+        r.warmup = warmup;
+        if max_n > 0 {
+            r.max_n = max_n;
+        }
+    }
+
+    let mut parallel = Vec::new();
+    let mut scalar = Vec::new();
+    for kind in &kinds {
+        for imp in &impls {
+            eprintln!("bench-native: {kind} / {imp} (threads={threads}) …");
+            parallel.extend(par_runner.run_series(kind, imp)?);
+            eprintln!("bench-native: {kind} / {imp} (scalar reference baseline) …");
+            scalar.extend(ref_runner.run_series(kind, imp)?);
+        }
+    }
+
+    println!("{}", rpt::bench_native_markdown(&parallel, &scalar));
+    let json = rpt::bench_native_json(&parallel, &scalar, threads, repro::native::ours_chunk());
+    std::fs::write(&out_path, &json)?;
+    eprintln!("wrote {out_path}");
     Ok(())
 }
 

@@ -1,7 +1,10 @@
-//! Pure-Rust CPU kernels for causal attention layers, on flat `f32` slices.
+//! Pure-Rust CPU kernels for causal attention layers, on flat `f32` slices —
+//! parallel across the folded batch×heads dimension and tiled through the
+//! [`gemm`](super::gemm) microkernels.
 //!
 //! All kernels operate on row-major `(BH, N, D)` buffers (`BH` = batch ×
-//! heads folded). Three algorithmic families, matching the paper's §4/§5
+//! heads folded) and take a [`ThreadPool`] handle threaded down from the
+//! executor. Three algorithmic families, matching the paper's §4/§5
 //! evaluation set:
 //!
 //! - **state scan** (`la_scan_*`) — the O(N·D²) two-pass recurrence: a
@@ -10,20 +13,41 @@
 //!   `R_t = q_t goᵗ_t + γ·R_{t+1}` for `dk`/`dv` — gradients are computed
 //!   analytically, never by taping the forward (the O(N·D²)-residency trap
 //!   the paper §4 eliminates). `γ = 1` is plain linear attention; `γ < 1`
-//!   is the gated/decayed variant.
+//!   is the gated/decayed variant. The scan is sequential in `t`, so it
+//!   parallelizes over `BH` only.
 //! - **chunkwise** (`la_chunk_*`) — the inter/intra decomposition (Yang et
-//!   al. 2023): per chunk of length `C`, one `q_t·S` inter-chunk term plus a
-//!   local `C×C` causal quadratic intra-chunk term, then one state update.
-//!   Identical math to the scan, but the hot loops touch `O(C·D)` data —
-//!   the cache-friendly layout the GPU kernel tiles the same way.
+//!   al. 2023), restructured into the two-phase form GPU kernels tile: phase
+//!   one materializes the per-chunk prefix states `S_i = Σ_{j<i} K_jᵀV_j`
+//!   (and, for the backward, the suffix states `R_i = Σ_{j>i} Q_jᵀGO_j`)
+//!   sequentially per `bh`; phase two computes every `(bh, chunk)` output
+//!   tile *independently* — one `Q·S` inter GEMM plus masked local `C×C`
+//!   intra GEMMs — so parallelism scales with `BH · N/C`, not just `BH`.
 //! - **quadratic baselines** — `la_quadratic_*` materializes the masked
-//!   `(QKᵀ)V` product of the same softmax-free attention (the eager-baseline
-//!   reference the sweep compares against), and `softmax_*` is standard
+//!   `(QKᵀ)V` product of the same softmax-free attention as blocked score
+//!   tiles (the eager-baseline access pattern), and `softmax_*` is standard
 //!   causal softmax attention with a streaming row softmax.
+//!
+//! The pre-optimization scalar single-thread kernels are preserved verbatim
+//! in [`reference`]: they are the parity oracle for the parallel paths *and*
+//! the baseline the `bench-native` speedup column is measured against.
 //!
 //! Gradients of the softmax-free forms, for `o_t = Σ_{s≤t} γ^{t-s}(q_t·k_s)
 //! v_s`:
 //!   `dq_t = S_t·go_t`, `dk_s = R_s·v_s`, `dv_s = Rᵗ_s·k_s`.
+
+use super::gemm;
+use super::pool::{SliceParts, ThreadPool};
+
+/// Row-block edge for the blocked quadratic baselines.
+const QUAD_BLOCK: usize = 64;
+
+/// Cap on the total f32 count materialized as per-chunk states (256 MB).
+/// Above it (tiny `RUST_PALLAS_CHUNK`, huge N·BH) the chunkwise kernels fall
+/// back to a running-state sweep — same tiled GEMM math, parallel over `bh`
+/// only, O(dk·dv) state per worker. Intra-chunk score tiles are blocked at
+/// `QUAD_BLOCK²` regardless of chunk length, so no `RUST_PALLAS_CHUNK`
+/// setting (small or huge) can exhaust host memory.
+const CHUNK_STATE_FLOATS_BUDGET: usize = 64 << 20;
 
 /// Shape of one layer call; `dk`/`dv` may differ (the LM appends a
 /// normalizer channel to `v`).
@@ -41,43 +65,79 @@ impl LayerShape {
     }
 }
 
-/// Causal linear attention, sequential state scan (decay `gamma`; 1.0 = none).
-pub fn la_scan_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, gamma: f32) -> Vec<f32> {
-    let LayerShape { bh, n, dk, dv } = sh;
-    let mut o = vec![0.0f32; bh * n * dv];
-    let mut s = vec![0.0f32; dk * dv];
-    for b in 0..bh {
-        s.fill(0.0);
-        for t in 0..n {
-            let qr = &q[(b * n + t) * dk..][..dk];
-            let kr = &k[(b * n + t) * dk..][..dk];
-            let vr = &v[(b * n + t) * dv..][..dv];
-            if gamma != 1.0 {
-                for x in s.iter_mut() {
-                    *x *= gamma;
-                }
-            }
-            for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
-                let ki = kr[i];
-                for (sx, vx) in srow.iter_mut().zip(vr) {
-                    *sx += ki * vx;
-                }
-            }
-            let orow = &mut o[(b * n + t) * dv..][..dv];
-            for (i, srow) in s.chunks_exact(dv).enumerate() {
-                let qi = qr[i];
-                for (ox, sx) in orow.iter_mut().zip(srow) {
-                    *ox += qi * sx;
-                }
-            }
+/// Zero the strictly-upper triangle (`col > row`) of a `rows×cols` tile —
+/// the causal mask applied to dense score tiles.
+fn zero_strict_upper(a: &mut [f32], rows: usize, cols: usize) {
+    for t in 0..rows.min(cols) {
+        for x in &mut a[t * cols + t + 1..(t + 1) * cols] {
+            *x = 0.0;
         }
     }
+}
+
+// --- state scan --------------------------------------------------------------
+
+/// Causal linear attention, sequential state scan (decay `gamma`; 1.0 = none).
+pub fn la_scan_fwd(
+    pool: &ThreadPool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: LayerShape,
+    gamma: f32,
+) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut o = vec![0.0f32; bh * n * dv];
+    pool.run_chunks(&mut o, n * dv, |b, ob| {
+        scan_fwd_one(
+            &q[b * n * dk..][..n * dk],
+            &k[b * n * dk..][..n * dk],
+            &v[b * n * dv..][..n * dv],
+            n,
+            dk,
+            dv,
+            gamma,
+            ob,
+        );
+    });
     o
+}
+
+#[allow(clippy::too_many_arguments)]
+fn scan_fwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    gamma: f32,
+    o: &mut [f32],
+) {
+    let mut s = vec![0.0f32; dk * dv];
+    for t in 0..n {
+        let qr = &q[t * dk..][..dk];
+        let kr = &k[t * dk..][..dk];
+        let vr = &v[t * dv..][..dv];
+        if gamma != 1.0 {
+            for x in s.iter_mut() {
+                *x *= gamma;
+            }
+        }
+        for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+            gemm::axpy(kr[i], vr, srow);
+        }
+        let orow = &mut o[t * dv..][..dv];
+        for (i, srow) in s.chunks_exact(dv).enumerate() {
+            gemm::axpy(qr[i], srow, orow);
+        }
+    }
 }
 
 /// Backward of [`la_scan_fwd`]: analytical gradients via one forward state
 /// scan (for `dq`) and one reverse scan (for `dk`, `dv`).
 pub fn la_scan_bwd(
+    pool: &ThreadPool,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -89,125 +149,328 @@ pub fn la_scan_bwd(
     let mut dq = vec![0.0f32; bh * n * dk];
     let mut dkk = vec![0.0f32; bh * n * dk];
     let mut dvv = vec![0.0f32; bh * n * dv];
-    let mut s = vec![0.0f32; dk * dv];
-    let mut r = vec![0.0f32; dk * dv];
-    for b in 0..bh {
-        // pass 1 (forward): S_t, dq_t = S_t · go_t
-        s.fill(0.0);
-        for t in 0..n {
-            let kr = &k[(b * n + t) * dk..][..dk];
-            let vr = &v[(b * n + t) * dv..][..dv];
-            let gr = &go[(b * n + t) * dv..][..dv];
-            if gamma != 1.0 {
-                for x in s.iter_mut() {
-                    *x *= gamma;
-                }
-            }
-            for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
-                let ki = kr[i];
-                for (sx, vx) in srow.iter_mut().zip(vr) {
-                    *sx += ki * vx;
-                }
-            }
-            let dqr = &mut dq[(b * n + t) * dk..][..dk];
-            for (i, srow) in s.chunks_exact(dv).enumerate() {
-                let mut acc = 0.0f32;
-                for (sx, gx) in srow.iter().zip(gr) {
-                    acc += sx * gx;
-                }
-                dqr[i] = acc;
-            }
-        }
-        // pass 2 (reverse): R_t, dk_t = R_t · v_t, dv_t = Rᵗ_t · k_t
-        r.fill(0.0);
-        for t in (0..n).rev() {
-            let qr = &q[(b * n + t) * dk..][..dk];
-            let kr = &k[(b * n + t) * dk..][..dk];
-            let vr = &v[(b * n + t) * dv..][..dv];
-            let gr = &go[(b * n + t) * dv..][..dv];
-            if gamma != 1.0 {
-                for x in r.iter_mut() {
-                    *x *= gamma;
-                }
-            }
-            for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
-                let qi = qr[i];
-                for (rx, gx) in rrow.iter_mut().zip(gr) {
-                    *rx += qi * gx;
-                }
-            }
-            let dkr = &mut dkk[(b * n + t) * dk..][..dk];
-            let dvr = &mut dvv[(b * n + t) * dv..][..dv];
-            for (i, rrow) in r.chunks_exact(dv).enumerate() {
-                let mut acc = 0.0f32;
-                for (rx, vx) in rrow.iter().zip(vr.iter()) {
-                    acc += rx * vx;
-                }
-                dkr[i] = acc;
-                let ki = kr[i];
-                for (dx, rx) in dvr.iter_mut().zip(rrow) {
-                    *dx += ki * rx;
-                }
-            }
-        }
-    }
+    pool.run_chunks3(&mut dq, n * dk, &mut dkk, n * dk, &mut dvv, n * dv, |b, dqb, dkb, dvb| {
+        scan_bwd_one(
+            &q[b * n * dk..][..n * dk],
+            &k[b * n * dk..][..n * dk],
+            &v[b * n * dv..][..n * dv],
+            &go[b * n * dv..][..n * dv],
+            n,
+            dk,
+            dv,
+            gamma,
+            dqb,
+            dkb,
+            dvb,
+        );
+    });
     (dq, dkk, dvv)
 }
 
-/// Chunkwise causal linear attention (inter/intra decomposition, no decay).
-pub fn la_chunk_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, chunk: usize) -> Vec<f32> {
-    let LayerShape { bh, n, dk, dv } = sh;
-    let c = chunk.max(1);
-    let mut o = vec![0.0f32; bh * n * dv];
+#[allow(clippy::too_many_arguments)]
+fn scan_bwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    gamma: f32,
+    dq: &mut [f32],
+    dkk: &mut [f32],
+    dvv: &mut [f32],
+) {
     let mut s = vec![0.0f32; dk * dv];
-    for b in 0..bh {
-        s.fill(0.0);
-        let mut c0 = 0;
-        while c0 < n {
-            let ce = (c0 + c).min(n);
-            for t in c0..ce {
-                let qr = &q[(b * n + t) * dk..][..dk];
-                let orow = &mut o[(b * n + t) * dv..][..dv];
-                // inter-chunk: q_t · S (state of all previous chunks)
-                for (i, srow) in s.chunks_exact(dv).enumerate() {
-                    let qi = qr[i];
-                    for (ox, sx) in orow.iter_mut().zip(srow) {
-                        *ox += qi * sx;
-                    }
-                }
-                // intra-chunk: local causal quadratic
-                for sidx in c0..=t {
-                    let kr = &k[(b * n + sidx) * dk..][..dk];
-                    let vr = &v[(b * n + sidx) * dv..][..dv];
-                    let mut a = 0.0f32;
-                    for (qx, kx) in qr.iter().zip(kr) {
-                        a += qx * kx;
-                    }
-                    for (ox, vx) in orow.iter_mut().zip(vr) {
-                        *ox += a * vx;
-                    }
-                }
+    let mut r = vec![0.0f32; dk * dv];
+    // pass 1 (forward): S_t, dq_t = S_t · go_t
+    for t in 0..n {
+        let kr = &k[t * dk..][..dk];
+        let vr = &v[t * dv..][..dv];
+        let gr = &go[t * dv..][..dv];
+        if gamma != 1.0 {
+            for x in s.iter_mut() {
+                *x *= gamma;
             }
-            // state update: S += Σ_chunk k_t ⊗ v_t
-            for t in c0..ce {
-                let kr = &k[(b * n + t) * dk..][..dk];
-                let vr = &v[(b * n + t) * dv..][..dv];
-                for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
-                    let ki = kr[i];
-                    for (sx, vx) in srow.iter_mut().zip(vr) {
-                        *sx += ki * vx;
-                    }
-                }
-            }
-            c0 = ce;
+        }
+        for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+            gemm::axpy(kr[i], vr, srow);
+        }
+        let dqr = &mut dq[t * dk..][..dk];
+        for (i, srow) in s.chunks_exact(dv).enumerate() {
+            dqr[i] = gemm::dot(srow, gr);
         }
     }
+    // pass 2 (reverse): R_t, dk_t = R_t · v_t, dv_t = Rᵗ_t · k_t
+    for t in (0..n).rev() {
+        let qr = &q[t * dk..][..dk];
+        let kr = &k[t * dk..][..dk];
+        let vr = &v[t * dv..][..dv];
+        let gr = &go[t * dv..][..dv];
+        if gamma != 1.0 {
+            for x in r.iter_mut() {
+                *x *= gamma;
+            }
+        }
+        for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
+            gemm::axpy(qr[i], gr, rrow);
+        }
+        let dkr = &mut dkk[t * dk..][..dk];
+        let dvr = &mut dvv[t * dv..][..dv];
+        for (i, rrow) in r.chunks_exact(dv).enumerate() {
+            dkr[i] = gemm::dot(rrow, vr);
+            gemm::axpy(kr[i], rrow, dvr);
+        }
+    }
+}
+
+// --- chunkwise ---------------------------------------------------------------
+
+/// Prefix chunk states: `st[i] = Σ_{j<i} K_jᵀ·V_j` for `i` in `0..nc`
+/// (`st[0] = 0`); each state is a `dk×dv` block of `st`.
+#[allow(clippy::too_many_arguments)]
+fn chunk_states_prefix(
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    c: usize,
+    nc: usize,
+    st: &mut [f32],
+) {
+    let sd = dk * dv;
+    for i in 1..nc {
+        let (head, tail) = st.split_at_mut(i * sd);
+        let prev = &head[(i - 1) * sd..];
+        let cur = &mut tail[..sd];
+        cur.copy_from_slice(prev);
+        let c0 = (i - 1) * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        gemm::gemm_tn(&k[c0 * dk..][..rows * dk], &v[c0 * dv..][..rows * dv], dk, rows, dv, cur);
+    }
+}
+
+/// Suffix chunk states: `st[i] = Σ_{j>i} Q_jᵀ·GO_j` (`st[nc-1] = 0`).
+#[allow(clippy::too_many_arguments)]
+fn chunk_states_suffix(
+    q: &[f32],
+    go: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    c: usize,
+    nc: usize,
+    st: &mut [f32],
+) {
+    let sd = dk * dv;
+    for i in (0..nc.saturating_sub(1)).rev() {
+        let (head, tail) = st.split_at_mut((i + 1) * sd);
+        let cur = &mut head[i * sd..];
+        let next = &tail[..sd];
+        cur.copy_from_slice(next);
+        let c0 = (i + 1) * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        gemm::gemm_tn(&q[c0 * dk..][..rows * dk], &go[c0 * dv..][..rows * dv], dk, rows, dv, cur);
+    }
+}
+
+/// One score tile of the masked `(QKᵀ)V` product: `ob += mask(Q·Kᵀ)·V`,
+/// where `masked` zeroes `key > query` pairs (the causal diagonal block).
+/// `att` is caller-provided scratch of at least `rows·cols` floats.
+#[allow(clippy::too_many_arguments)]
+fn quad_tile(
+    qb: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    rows: usize,
+    cols: usize,
+    dk: usize,
+    dv: usize,
+    masked: bool,
+    att: &mut [f32],
+    ob: &mut [f32],
+) {
+    let at = &mut att[..rows * cols];
+    at.fill(0.0);
+    gemm::gemm_nt(qb, kb, rows, dk, cols, at);
+    if masked {
+        zero_strict_upper(at, rows, cols);
+    }
+    gemm::gemm_nn(at, vb, rows, cols, dv, ob);
+}
+
+/// Masked causal `(QKᵀ)V` over one contiguous window, blocked at
+/// [`QUAD_BLOCK`] so the score tile stays O(`QUAD_BLOCK`²) for any window
+/// length — the shared intra-chunk forward body of the chunkwise kernels.
+fn quad_fwd_one(q: &[f32], k: &[f32], v: &[f32], n: usize, dk: usize, dv: usize, o: &mut [f32]) {
+    let nb = n.div_ceil(QUAD_BLOCK);
+    let mut att = vec![0.0f32; QUAD_BLOCK * QUAD_BLOCK];
+    for ti in 0..nb {
+        let t0 = ti * QUAD_BLOCK;
+        let te = (t0 + QUAD_BLOCK).min(n);
+        let rows = te - t0;
+        let qb = &q[t0 * dk..][..rows * dk];
+        let ob = &mut o[t0 * dv..][..rows * dv];
+        for si in 0..=ti {
+            let s0 = si * QUAD_BLOCK;
+            let se = (s0 + QUAD_BLOCK).min(n);
+            let cols = se - s0;
+            let kb = &k[s0 * dk..][..cols * dk];
+            let vb = &v[s0 * dv..][..cols * dv];
+            quad_tile(qb, kb, vb, rows, cols, dk, dv, si == ti, &mut att, ob);
+        }
+    }
+}
+
+/// One `bh` slice of the chunkwise forward with a single running state —
+/// the bounded-memory fallback (and the shape of the original algorithm,
+/// but with every product as a tiled GEMM).
+#[allow(clippy::too_many_arguments)]
+fn chunk_fwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    c: usize,
+    o: &mut [f32],
+) {
+    let mut s = vec![0.0f32; dk * dv];
+    let mut c0 = 0;
+    while c0 < n {
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[c0 * dk..][..rows * dk];
+        let kb = &k[c0 * dk..][..rows * dk];
+        let vb = &v[c0 * dv..][..rows * dv];
+        let ob = &mut o[c0 * dv..][..rows * dv];
+        gemm::gemm_nn(qb, &s, rows, dk, dv, ob);
+        quad_fwd_one(qb, kb, vb, rows, dk, dv, ob);
+        gemm::gemm_tn(kb, vb, dk, rows, dv, &mut s);
+        c0 = ce;
+    }
+}
+
+/// One `bh` slice of the chunkwise backward with running prefix/suffix
+/// states — the bounded-memory fallback of [`la_chunk_bwd`].
+#[allow(clippy::too_many_arguments)]
+fn chunk_bwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    c: usize,
+    dq: &mut [f32],
+    dkk: &mut [f32],
+    dvv: &mut [f32],
+) {
+    let sd = dk * dv;
+    // forward over chunks: running S drives dq (inter), plus masked intra
+    let mut s = vec![0.0f32; sd];
+    let mut c0 = 0;
+    while c0 < n {
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[c0 * dk..][..rows * dk];
+        let kb = &k[c0 * dk..][..rows * dk];
+        let vb = &v[c0 * dv..][..rows * dv];
+        let gob = &go[c0 * dv..][..rows * dv];
+        let dqb = &mut dq[c0 * dk..][..rows * dk];
+        gemm::gemm_nt(gob, &s, rows, dv, dk, dqb);
+        // all three intra terms are the blocked quadratic vjp over the window
+        let dkb = &mut dkk[c0 * dk..][..rows * dk];
+        let dvb = &mut dvv[c0 * dv..][..rows * dv];
+        quad_bwd_one(qb, kb, vb, gob, rows, dk, dv, dqb, dkb, dvb);
+        gemm::gemm_tn(kb, vb, dk, rows, dv, &mut s);
+        c0 = ce;
+    }
+    // reverse over chunks: running R drives the dk/dv inter terms
+    let mut r = vec![0.0f32; sd];
+    let nc = n.div_ceil(c);
+    for ci in (0..nc).rev() {
+        let c0 = ci * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[c0 * dk..][..rows * dk];
+        let kb = &k[c0 * dk..][..rows * dk];
+        let vb = &v[c0 * dv..][..rows * dv];
+        let gob = &go[c0 * dv..][..rows * dv];
+        let dkb = &mut dkk[c0 * dk..][..rows * dk];
+        let dvb = &mut dvv[c0 * dv..][..rows * dv];
+        gemm::gemm_nt(vb, &r, rows, dv, dk, dkb);
+        gemm::gemm_nn(kb, &r, rows, dk, dv, dvb);
+        // R gains this chunk only after it is processed (R = Σ over j > ci)
+        gemm::gemm_tn(qb, gob, dk, rows, dv, &mut r);
+    }
+}
+
+/// Chunkwise causal linear attention (inter/intra decomposition, no decay):
+/// per-chunk states first, then every `(bh, chunk)` output tile in parallel.
+pub fn la_chunk_fwd(
+    pool: &ThreadPool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: LayerShape,
+    chunk: usize,
+) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut o = vec![0.0f32; bh * n * dv];
+    if bh == 0 || n == 0 {
+        return o;
+    }
+    let c = chunk.max(1);
+    let nc = n.div_ceil(c);
+    let sd = dk * dv;
+    if bh.saturating_mul(nc).saturating_mul(sd) > CHUNK_STATE_FLOATS_BUDGET {
+        pool.run_chunks(&mut o, n * dv, |b, ob| {
+            let qb = &q[b * n * dk..][..n * dk];
+            let kb = &k[b * n * dk..][..n * dk];
+            let vb = &v[b * n * dv..][..n * dv];
+            chunk_fwd_one(qb, kb, vb, n, dk, dv, c, ob);
+        });
+        return o;
+    }
+    // phase 1: prefix states, sequential in chunk index, parallel over bh
+    let mut states = vec![0.0f32; bh * nc * sd];
+    pool.run_chunks(&mut states, nc * sd, |b, st| {
+        let (kb, vb) = (&k[b * n * dk..][..n * dk], &v[b * n * dv..][..n * dv]);
+        chunk_states_prefix(kb, vb, n, dk, dv, c, nc, st);
+    });
+    // phase 2: independent (bh, chunk) output tiles
+    let parts = SliceParts::new(&mut o);
+    pool.run(bh * nc, |task| {
+        let (b, ci) = (task / nc, task % nc);
+        let c0 = ci * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[(b * n + c0) * dk..][..rows * dk];
+        let kb = &k[(b * n + c0) * dk..][..rows * dk];
+        let vb = &v[(b * n + c0) * dv..][..rows * dv];
+        let st = &states[(b * nc + ci) * sd..][..sd];
+        // SAFETY: tile (b, ci) owns rows [c0, ce) of batch b exclusively.
+        let ob = unsafe { parts.window((b * n + c0) * dv, rows * dv) };
+        // inter-chunk: O += Q · S
+        gemm::gemm_nn(qb, st, rows, dk, dv, ob);
+        // intra-chunk: masked local quadratic, O += tril(Q·Kᵀ) · V,
+        // blocked at QUAD_BLOCK² regardless of chunk length
+        quad_fwd_one(qb, kb, vb, rows, dk, dv, ob);
+    });
     o
 }
 
-/// Backward of [`la_chunk_fwd`]: same inter/intra split, forward pass over
-/// chunks for `dq`, reverse pass for `dk`/`dv`.
+/// Backward of [`la_chunk_fwd`]: same inter/intra split; prefix states drive
+/// `dq`, suffix states drive `dk`/`dv`, and every `(bh, chunk)` gradient
+/// tile is independent once both state sets exist.
 pub fn la_chunk_bwd(
+    pool: &ThreadPool,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -216,139 +479,119 @@ pub fn la_chunk_bwd(
     chunk: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let LayerShape { bh, n, dk, dv } = sh;
-    let c = chunk.max(1);
     let mut dq = vec![0.0f32; bh * n * dk];
     let mut dkk = vec![0.0f32; bh * n * dk];
     let mut dvv = vec![0.0f32; bh * n * dv];
-    let mut s = vec![0.0f32; dk * dv];
-    let mut r = vec![0.0f32; dk * dv];
-    for b in 0..bh {
-        // forward over chunks: dq_t = S_pre·go_t + Σ_{s≤t, same chunk} (go_t·v_s) k_s
-        s.fill(0.0);
-        let mut c0 = 0;
-        while c0 < n {
-            let ce = (c0 + c).min(n);
-            for t in c0..ce {
-                let gr = &go[(b * n + t) * dv..][..dv];
-                let dqr = &mut dq[(b * n + t) * dk..][..dk];
-                for (i, srow) in s.chunks_exact(dv).enumerate() {
-                    let mut acc = 0.0f32;
-                    for (sx, gx) in srow.iter().zip(gr) {
-                        acc += sx * gx;
-                    }
-                    dqr[i] = acc;
-                }
-                for sidx in c0..=t {
-                    let kr = &k[(b * n + sidx) * dk..][..dk];
-                    let vr = &v[(b * n + sidx) * dv..][..dv];
-                    let mut gv = 0.0f32;
-                    for (gx, vx) in gr.iter().zip(vr) {
-                        gv += gx * vx;
-                    }
-                    for (dx, kx) in dqr.iter_mut().zip(kr) {
-                        *dx += gv * kx;
-                    }
-                }
-            }
-            for t in c0..ce {
-                let kr = &k[(b * n + t) * dk..][..dk];
-                let vr = &v[(b * n + t) * dv..][..dv];
-                for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
-                    let ki = kr[i];
-                    for (sx, vx) in srow.iter_mut().zip(vr) {
-                        *sx += ki * vx;
-                    }
-                }
-            }
-            c0 = ce;
-        }
-        // reverse over chunks: dk/dv from R_post + intra terms
-        r.fill(0.0);
-        let n_chunks = (n + c - 1) / c;
-        for ci in (0..n_chunks).rev() {
-            let c0 = ci * c;
-            let ce = (c0 + c).min(n);
-            for t in c0..ce {
-                let kr = &k[(b * n + t) * dk..][..dk];
-                let vr = &v[(b * n + t) * dv..][..dv];
-                let dkr = &mut dkk[(b * n + t) * dk..][..dk];
-                let dvr = &mut dvv[(b * n + t) * dv..][..dv];
-                // inter: later chunks, via R_post
-                for (i, rrow) in r.chunks_exact(dv).enumerate() {
-                    let mut acc = 0.0f32;
-                    for (rx, vx) in rrow.iter().zip(vr.iter()) {
-                        acc += rx * vx;
-                    }
-                    dkr[i] = acc;
-                    let ki = kr[i];
-                    for (dx, rx) in dvr.iter_mut().zip(rrow) {
-                        *dx += ki * rx;
-                    }
-                }
-                // intra: s ≥ t within this chunk
-                for sidx in t..ce {
-                    let qr = &q[(b * n + sidx) * dk..][..dk];
-                    let gr = &go[(b * n + sidx) * dv..][..dv];
-                    let mut gv = 0.0f32;
-                    for (gx, vx) in gr.iter().zip(vr.iter()) {
-                        gv += gx * vx;
-                    }
-                    let mut a = 0.0f32;
-                    for (qx, kx) in qr.iter().zip(kr.iter()) {
-                        a += qx * kx;
-                    }
-                    for (dx, qx) in dkr.iter_mut().zip(qr) {
-                        *dx += gv * qx;
-                    }
-                    for (dx, gx) in dvr.iter_mut().zip(gr) {
-                        *dx += a * gx;
-                    }
-                }
-            }
-            for t in c0..ce {
-                let qr = &q[(b * n + t) * dk..][..dk];
-                let gr = &go[(b * n + t) * dv..][..dv];
-                for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
-                    let qi = qr[i];
-                    for (rx, gx) in rrow.iter_mut().zip(gr) {
-                        *rx += qi * gx;
-                    }
-                }
-            }
-        }
+    if bh == 0 || n == 0 {
+        return (dq, dkk, dvv);
     }
+    let c = chunk.max(1);
+    let nc = n.div_ceil(c);
+    let sd = dk * dv;
+    if bh.saturating_mul(2 * nc).saturating_mul(sd) > CHUNK_STATE_FLOATS_BUDGET {
+        pool.run_chunks3(
+            &mut dq,
+            n * dk,
+            &mut dkk,
+            n * dk,
+            &mut dvv,
+            n * dv,
+            |b, dqb, dkb, dvb| {
+                let qb = &q[b * n * dk..][..n * dk];
+                let kb = &k[b * n * dk..][..n * dk];
+                let vb = &v[b * n * dv..][..n * dv];
+                let gob = &go[b * n * dv..][..n * dv];
+                chunk_bwd_one(qb, kb, vb, gob, n, dk, dv, c, dqb, dkb, dvb);
+            },
+        );
+        return (dq, dkk, dvv);
+    }
+    let mut s_states = vec![0.0f32; bh * nc * sd];
+    pool.run_chunks(&mut s_states, nc * sd, |b, st| {
+        let (kb, vb) = (&k[b * n * dk..][..n * dk], &v[b * n * dv..][..n * dv]);
+        chunk_states_prefix(kb, vb, n, dk, dv, c, nc, st);
+    });
+    let mut r_states = vec![0.0f32; bh * nc * sd];
+    pool.run_chunks(&mut r_states, nc * sd, |b, st| {
+        let (qb, gob) = (&q[b * n * dk..][..n * dk], &go[b * n * dv..][..n * dv]);
+        chunk_states_suffix(qb, gob, n, dk, dv, c, nc, st);
+    });
+    let dq_parts = SliceParts::new(&mut dq);
+    let dk_parts = SliceParts::new(&mut dkk);
+    let dv_parts = SliceParts::new(&mut dvv);
+    pool.run(bh * nc, |task| {
+        let (b, ci) = (task / nc, task % nc);
+        let c0 = ci * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[(b * n + c0) * dk..][..rows * dk];
+        let kb = &k[(b * n + c0) * dk..][..rows * dk];
+        let vb = &v[(b * n + c0) * dv..][..rows * dv];
+        let gob = &go[(b * n + c0) * dv..][..rows * dv];
+        let s = &s_states[(b * nc + ci) * sd..][..sd];
+        let r = &r_states[(b * nc + ci) * sd..][..sd];
+        // SAFETY: tile (b, ci) owns rows [c0, ce) of batch b in all three
+        // gradient buffers exclusively.
+        let dqb = unsafe { dq_parts.window((b * n + c0) * dk, rows * dk) };
+        let dkb = unsafe { dk_parts.window((b * n + c0) * dk, rows * dk) };
+        let dvb = unsafe { dv_parts.window((b * n + c0) * dv, rows * dv) };
+        // inter terms: dQ += GO·Sᵀ ; dK += V·Rᵀ ; dV += K·R
+        gemm::gemm_nt(gob, s, rows, dv, dk, dqb);
+        gemm::gemm_nt(vb, r, rows, dv, dk, dkb);
+        gemm::gemm_nn(kb, r, rows, dk, dv, dvb);
+        // intra terms: the blocked quadratic vjp over the chunk window
+        // (tril-masked G = GO·Vᵀ and A = Q·Kᵀ tiles, QUAD_BLOCK² memory)
+        quad_bwd_one(qb, kb, vb, gob, rows, dk, dv, dqb, dkb, dvb);
+    });
     (dq, dkk, dvv)
 }
 
+// --- quadratic baselines ------------------------------------------------------
+
 /// Quadratic-time reference of the same softmax-free attention: the masked
-/// `(QKᵀ)V` product, materialized pairwise (the eager-baseline access
-/// pattern). Output is bit-comparable to the scan/chunk forms up to f32
-/// reassociation.
-pub fn la_quadratic_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape) -> Vec<f32> {
+/// `(QKᵀ)V` product as blocked score tiles (the eager-baseline access
+/// pattern). Output is comparable to the scan/chunk forms up to f32
+/// reassociation. Row blocks are independent, so it parallelizes over
+/// `(bh, row block)`.
+pub fn la_quadratic_fwd(
+    pool: &ThreadPool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: LayerShape,
+) -> Vec<f32> {
     let LayerShape { bh, n, dk, dv } = sh;
     let mut o = vec![0.0f32; bh * n * dv];
-    for b in 0..bh {
-        for t in 0..n {
-            let qr = &q[(b * n + t) * dk..][..dk];
-            let orow = &mut o[(b * n + t) * dv..][..dv];
-            for sidx in 0..=t {
-                let kr = &k[(b * n + sidx) * dk..][..dk];
-                let vr = &v[(b * n + sidx) * dv..][..dv];
-                let mut a = 0.0f32;
-                for (qx, kx) in qr.iter().zip(kr) {
-                    a += qx * kx;
-                }
-                for (ox, vx) in orow.iter_mut().zip(vr) {
-                    *ox += a * vx;
-                }
-            }
-        }
+    if bh == 0 || n == 0 {
+        return o;
     }
+    let nb = n.div_ceil(QUAD_BLOCK);
+    let parts = SliceParts::new(&mut o);
+    pool.run(bh * nb, |task| {
+        let (b, ti) = (task / nb, task % nb);
+        let t0 = ti * QUAD_BLOCK;
+        let te = (t0 + QUAD_BLOCK).min(n);
+        let rows = te - t0;
+        let qb = &q[(b * n + t0) * dk..][..rows * dk];
+        // SAFETY: tile (b, ti) owns rows [t0, te) of batch b exclusively.
+        let ob = unsafe { parts.window((b * n + t0) * dv, rows * dv) };
+        let mut att = vec![0.0f32; rows * QUAD_BLOCK];
+        for si in 0..=ti {
+            let s0 = si * QUAD_BLOCK;
+            let se = (s0 + QUAD_BLOCK).min(n);
+            let cols = se - s0;
+            let kb = &k[(b * n + s0) * dk..][..cols * dk];
+            let vb = &v[(b * n + s0) * dv..][..cols * dv];
+            quad_tile(qb, kb, vb, rows, cols, dk, dv, si == ti, &mut att, ob);
+        }
+    });
     o
 }
 
-/// Backward of [`la_quadratic_fwd`], pairwise.
+/// Backward of [`la_quadratic_fwd`], blocked pairwise. `dk`/`dv` tiles are
+/// revisited by every later row block, so parallelism is over `bh` only.
 pub fn la_quadratic_bwd(
+    pool: &ThreadPool,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -359,87 +602,134 @@ pub fn la_quadratic_bwd(
     let mut dq = vec![0.0f32; bh * n * dk];
     let mut dkk = vec![0.0f32; bh * n * dk];
     let mut dvv = vec![0.0f32; bh * n * dv];
-    for b in 0..bh {
-        for t in 0..n {
-            let qr = &q[(b * n + t) * dk..][..dk];
-            let gr = &go[(b * n + t) * dv..][..dv];
-            for sidx in 0..=t {
-                let kr = &k[(b * n + sidx) * dk..][..dk];
-                let vr = &v[(b * n + sidx) * dv..][..dv];
-                let mut gv = 0.0f32;
-                for (gx, vx) in gr.iter().zip(vr) {
-                    gv += gx * vx;
-                }
-                let mut a = 0.0f32;
-                for (qx, kx) in qr.iter().zip(kr) {
-                    a += qx * kx;
-                }
-                {
-                    let dqr = &mut dq[(b * n + t) * dk..][..dk];
-                    for (dx, kx) in dqr.iter_mut().zip(kr) {
-                        *dx += gv * kx;
-                    }
-                }
-                {
-                    let dkr = &mut dkk[(b * n + sidx) * dk..][..dk];
-                    for (dx, qx) in dkr.iter_mut().zip(qr) {
-                        *dx += gv * qx;
-                    }
-                }
-                {
-                    let dvr = &mut dvv[(b * n + sidx) * dv..][..dv];
-                    for (dx, gx) in dvr.iter_mut().zip(gr) {
-                        *dx += a * gx;
-                    }
-                }
-            }
-        }
-    }
+    pool.run_chunks3(&mut dq, n * dk, &mut dkk, n * dk, &mut dvv, n * dv, |b, dqb, dkb, dvb| {
+        quad_bwd_one(
+            &q[b * n * dk..][..n * dk],
+            &k[b * n * dk..][..n * dk],
+            &v[b * n * dv..][..n * dv],
+            &go[b * n * dv..][..n * dv],
+            n,
+            dk,
+            dv,
+            dqb,
+            dkb,
+            dvb,
+        );
+    });
     (dq, dkk, dvv)
 }
 
-/// Standard causal softmax attention with a streaming row softmax
-/// (scores scaled by `scale`, typically `1/sqrt(dk)`).
-pub fn softmax_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, scale: f32) -> Vec<f32> {
-    let LayerShape { bh, n, dk, dv } = sh;
-    let mut o = vec![0.0f32; bh * n * dv];
-    let mut scores = vec![0.0f32; n];
-    for b in 0..bh {
-        for t in 0..n {
-            let qr = &q[(b * n + t) * dk..][..dk];
-            let mut m = f32::NEG_INFINITY;
-            for sidx in 0..=t {
-                let kr = &k[(b * n + sidx) * dk..][..dk];
-                let mut a = 0.0f32;
-                for (qx, kx) in qr.iter().zip(kr) {
-                    a += qx * kx;
-                }
-                let a = a * scale;
-                scores[sidx] = a;
-                m = m.max(a);
+#[allow(clippy::too_many_arguments)]
+fn quad_bwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    dq: &mut [f32],
+    dkk: &mut [f32],
+    dvv: &mut [f32],
+) {
+    let nb = n.div_ceil(QUAD_BLOCK);
+    let mut att = vec![0.0f32; QUAD_BLOCK * QUAD_BLOCK];
+    let mut g = vec![0.0f32; QUAD_BLOCK * QUAD_BLOCK];
+    for ti in 0..nb {
+        let t0 = ti * QUAD_BLOCK;
+        let te = (t0 + QUAD_BLOCK).min(n);
+        let rows = te - t0;
+        let qb = &q[t0 * dk..][..rows * dk];
+        let gob = &go[t0 * dv..][..rows * dv];
+        for si in 0..=ti {
+            let s0 = si * QUAD_BLOCK;
+            let se = (s0 + QUAD_BLOCK).min(n);
+            let cols = se - s0;
+            let kb = &k[s0 * dk..][..cols * dk];
+            let vb = &v[s0 * dv..][..cols * dv];
+            let at = &mut att[..rows * cols];
+            at.fill(0.0);
+            gemm::gemm_nt(qb, kb, rows, dk, cols, at);
+            let gt = &mut g[..rows * cols];
+            gt.fill(0.0);
+            gemm::gemm_nt(gob, vb, rows, dv, cols, gt);
+            if si == ti {
+                zero_strict_upper(at, rows, cols);
+                zero_strict_upper(gt, rows, cols);
             }
-            let mut z = 0.0f32;
-            for sc in scores[..=t].iter_mut() {
-                *sc = (*sc - m).exp();
-                z += *sc;
-            }
-            let inv = 1.0 / z;
-            let orow = &mut o[(b * n + t) * dv..][..dv];
-            for sidx in 0..=t {
-                let w = scores[sidx] * inv;
-                let vr = &v[(b * n + sidx) * dv..][..dv];
-                for (ox, vx) in orow.iter_mut().zip(vr) {
-                    *ox += w * vx;
-                }
-            }
+            gemm::gemm_nn(gt, kb, rows, cols, dk, &mut dq[t0 * dk..][..rows * dk]);
+            gemm::gemm_tn(gt, qb, cols, rows, dk, &mut dkk[s0 * dk..][..cols * dk]);
+            gemm::gemm_tn(at, gob, cols, rows, dv, &mut dvv[s0 * dv..][..cols * dv]);
         }
     }
+}
+
+// --- softmax baseline ---------------------------------------------------------
+
+/// Standard causal softmax attention with a streaming row softmax
+/// (scores scaled by `scale`, typically `1/sqrt(dk)`); parallel over `bh`.
+pub fn softmax_fwd(
+    pool: &ThreadPool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: LayerShape,
+    scale: f32,
+) -> Vec<f32> {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let mut o = vec![0.0f32; bh * n * dv];
+    pool.run_chunks(&mut o, n * dv, |b, ob| {
+        softmax_fwd_one(
+            &q[b * n * dk..][..n * dk],
+            &k[b * n * dk..][..n * dk],
+            &v[b * n * dv..][..n * dv],
+            n,
+            dk,
+            dv,
+            scale,
+            ob,
+        );
+    });
     o
 }
 
+#[allow(clippy::too_many_arguments)]
+fn softmax_fwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    scale: f32,
+    o: &mut [f32],
+) {
+    let mut scores = vec![0.0f32; n];
+    for t in 0..n {
+        let qr = &q[t * dk..][..dk];
+        let mut m = f32::NEG_INFINITY;
+        for sidx in 0..=t {
+            let a = gemm::dot(qr, &k[sidx * dk..][..dk]) * scale;
+            scores[sidx] = a;
+            m = m.max(a);
+        }
+        let mut z = 0.0f32;
+        for sc in scores[..=t].iter_mut() {
+            *sc = (*sc - m).exp();
+            z += *sc;
+        }
+        let inv = 1.0 / z;
+        let orow = &mut o[t * dv..][..dv];
+        for sidx in 0..=t {
+            gemm::axpy(scores[sidx] * inv, &v[sidx * dv..][..dv], orow);
+        }
+    }
+}
+
 /// Backward of [`softmax_fwd`]: recomputes each probability row, then applies
-/// the standard softmax-attention vjp.
+/// the standard softmax-attention vjp; parallel over `bh`.
 pub fn softmax_bwd(
+    pool: &ThreadPool,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -451,76 +741,549 @@ pub fn softmax_bwd(
     let mut dq = vec![0.0f32; bh * n * dk];
     let mut dkk = vec![0.0f32; bh * n * dk];
     let mut dvv = vec![0.0f32; bh * n * dv];
+    pool.run_chunks3(&mut dq, n * dk, &mut dkk, n * dk, &mut dvv, n * dv, |b, dqb, dkb, dvb| {
+        softmax_bwd_one(
+            &q[b * n * dk..][..n * dk],
+            &k[b * n * dk..][..n * dk],
+            &v[b * n * dv..][..n * dv],
+            &go[b * n * dv..][..n * dv],
+            n,
+            dk,
+            dv,
+            scale,
+            dqb,
+            dkb,
+            dvb,
+        );
+    });
+    (dq, dkk, dvv)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn softmax_bwd_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    go: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    scale: f32,
+    dq: &mut [f32],
+    dkk: &mut [f32],
+    dvv: &mut [f32],
+) {
     let mut p = vec![0.0f32; n];
     let mut g = vec![0.0f32; n];
-    for b in 0..bh {
-        for t in 0..n {
-            let qr = &q[(b * n + t) * dk..][..dk];
-            let gr = &go[(b * n + t) * dv..][..dv];
-            // recompute the probability row
-            let mut m = f32::NEG_INFINITY;
-            for sidx in 0..=t {
-                let kr = &k[(b * n + sidx) * dk..][..dk];
-                let mut a = 0.0f32;
-                for (qx, kx) in qr.iter().zip(kr) {
-                    a += qx * kx;
-                }
-                let a = a * scale;
-                p[sidx] = a;
-                m = m.max(a);
-            }
-            let mut z = 0.0f32;
-            for sc in p[..=t].iter_mut() {
-                *sc = (*sc - m).exp();
-                z += *sc;
-            }
-            let inv = 1.0 / z;
-            // g_s = go_t · v_s ; c = Σ p_s g_s
-            let mut csum = 0.0f32;
-            for sidx in 0..=t {
-                p[sidx] *= inv;
-                let vr = &v[(b * n + sidx) * dv..][..dv];
-                let mut gv = 0.0f32;
-                for (gx, vx) in gr.iter().zip(vr) {
-                    gv += gx * vx;
-                }
-                g[sidx] = gv;
-                csum += p[sidx] * gv;
-            }
-            // dv_s += p_s go_t ; dscore_s = p_s (g_s − c)
-            let dqr_start = (b * n + t) * dk;
-            for sidx in 0..=t {
-                let ds = p[sidx] * (g[sidx] - csum) * scale;
-                {
-                    let dvr = &mut dvv[(b * n + sidx) * dv..][..dv];
-                    let w = p[sidx];
-                    for (dx, gx) in dvr.iter_mut().zip(gr) {
-                        *dx += w * gx;
+    for t in 0..n {
+        let qr = &q[t * dk..][..dk];
+        let gr = &go[t * dv..][..dv];
+        // recompute the probability row
+        let mut m = f32::NEG_INFINITY;
+        for sidx in 0..=t {
+            let a = gemm::dot(qr, &k[sidx * dk..][..dk]) * scale;
+            p[sidx] = a;
+            m = m.max(a);
+        }
+        let mut z = 0.0f32;
+        for sc in p[..=t].iter_mut() {
+            *sc = (*sc - m).exp();
+            z += *sc;
+        }
+        let inv = 1.0 / z;
+        // g_s = go_t · v_s ; c = Σ p_s g_s
+        let mut csum = 0.0f32;
+        for sidx in 0..=t {
+            p[sidx] *= inv;
+            let gv = gemm::dot(gr, &v[sidx * dv..][..dv]);
+            g[sidx] = gv;
+            csum += p[sidx] * gv;
+        }
+        // dv_s += p_s go_t ; dscore_s = p_s (g_s − c)
+        for sidx in 0..=t {
+            let ds = p[sidx] * (g[sidx] - csum) * scale;
+            gemm::axpy(p[sidx], gr, &mut dvv[sidx * dv..][..dv]);
+            let kr = &k[sidx * dk..][..dk];
+            gemm::axpy(ds, kr, &mut dq[t * dk..][..dk]);
+            gemm::axpy(ds, qr, &mut dkk[sidx * dk..][..dk]);
+        }
+    }
+}
+
+// --- scalar reference ---------------------------------------------------------
+
+/// The pre-optimization kernels: scalar, single-threaded, loop-nest form —
+/// kept verbatim as the parity oracle for the parallel/tiled paths and as
+/// the `bench-native` speedup baseline. Do not optimize these.
+pub mod reference {
+    use super::LayerShape;
+
+    /// Causal linear attention, sequential state scan (decay `gamma`).
+    pub fn la_scan_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, gamma: f32) -> Vec<f32> {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let mut o = vec![0.0f32; bh * n * dv];
+        let mut s = vec![0.0f32; dk * dv];
+        for b in 0..bh {
+            s.fill(0.0);
+            for t in 0..n {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let kr = &k[(b * n + t) * dk..][..dk];
+                let vr = &v[(b * n + t) * dv..][..dv];
+                if gamma != 1.0 {
+                    for x in s.iter_mut() {
+                        *x *= gamma;
                     }
                 }
-                let kr = &k[(b * n + sidx) * dk..][..dk];
-                {
-                    let dqr = &mut dq[dqr_start..][..dk];
-                    for (dx, kx) in dqr.iter_mut().zip(kr) {
-                        *dx += ds * kx;
+                for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                    let ki = kr[i];
+                    for (sx, vx) in srow.iter_mut().zip(vr) {
+                        *sx += ki * vx;
                     }
                 }
-                {
-                    let dkr = &mut dkk[(b * n + sidx) * dk..][..dk];
-                    for (dx, qx) in dkr.iter_mut().zip(qr) {
-                        *dx += ds * qx;
+                let orow = &mut o[(b * n + t) * dv..][..dv];
+                for (i, srow) in s.chunks_exact(dv).enumerate() {
+                    let qi = qr[i];
+                    for (ox, sx) in orow.iter_mut().zip(srow) {
+                        *ox += qi * sx;
                     }
                 }
             }
         }
+        o
     }
-    (dq, dkk, dvv)
+
+    /// Backward of [`la_scan_fwd`].
+    pub fn la_scan_bwd(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        go: &[f32],
+        sh: LayerShape,
+        gamma: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let mut dq = vec![0.0f32; bh * n * dk];
+        let mut dkk = vec![0.0f32; bh * n * dk];
+        let mut dvv = vec![0.0f32; bh * n * dv];
+        let mut s = vec![0.0f32; dk * dv];
+        let mut r = vec![0.0f32; dk * dv];
+        for b in 0..bh {
+            s.fill(0.0);
+            for t in 0..n {
+                let kr = &k[(b * n + t) * dk..][..dk];
+                let vr = &v[(b * n + t) * dv..][..dv];
+                let gr = &go[(b * n + t) * dv..][..dv];
+                if gamma != 1.0 {
+                    for x in s.iter_mut() {
+                        *x *= gamma;
+                    }
+                }
+                for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                    let ki = kr[i];
+                    for (sx, vx) in srow.iter_mut().zip(vr) {
+                        *sx += ki * vx;
+                    }
+                }
+                let dqr = &mut dq[(b * n + t) * dk..][..dk];
+                for (i, srow) in s.chunks_exact(dv).enumerate() {
+                    let mut acc = 0.0f32;
+                    for (sx, gx) in srow.iter().zip(gr) {
+                        acc += sx * gx;
+                    }
+                    dqr[i] = acc;
+                }
+            }
+            r.fill(0.0);
+            for t in (0..n).rev() {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let kr = &k[(b * n + t) * dk..][..dk];
+                let vr = &v[(b * n + t) * dv..][..dv];
+                let gr = &go[(b * n + t) * dv..][..dv];
+                if gamma != 1.0 {
+                    for x in r.iter_mut() {
+                        *x *= gamma;
+                    }
+                }
+                for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
+                    let qi = qr[i];
+                    for (rx, gx) in rrow.iter_mut().zip(gr) {
+                        *rx += qi * gx;
+                    }
+                }
+                let dkr = &mut dkk[(b * n + t) * dk..][..dk];
+                let dvr = &mut dvv[(b * n + t) * dv..][..dv];
+                for (i, rrow) in r.chunks_exact(dv).enumerate() {
+                    let mut acc = 0.0f32;
+                    for (rx, vx) in rrow.iter().zip(vr.iter()) {
+                        acc += rx * vx;
+                    }
+                    dkr[i] = acc;
+                    let ki = kr[i];
+                    for (dx, rx) in dvr.iter_mut().zip(rrow) {
+                        *dx += ki * rx;
+                    }
+                }
+            }
+        }
+        (dq, dkk, dvv)
+    }
+
+    /// Chunkwise causal linear attention (single running state, scalar).
+    pub fn la_chunk_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, chunk: usize) -> Vec<f32> {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let c = chunk.max(1);
+        let mut o = vec![0.0f32; bh * n * dv];
+        let mut s = vec![0.0f32; dk * dv];
+        for b in 0..bh {
+            s.fill(0.0);
+            let mut c0 = 0;
+            while c0 < n {
+                let ce = (c0 + c).min(n);
+                for t in c0..ce {
+                    let qr = &q[(b * n + t) * dk..][..dk];
+                    let orow = &mut o[(b * n + t) * dv..][..dv];
+                    for (i, srow) in s.chunks_exact(dv).enumerate() {
+                        let qi = qr[i];
+                        for (ox, sx) in orow.iter_mut().zip(srow) {
+                            *ox += qi * sx;
+                        }
+                    }
+                    for sidx in c0..=t {
+                        let kr = &k[(b * n + sidx) * dk..][..dk];
+                        let vr = &v[(b * n + sidx) * dv..][..dv];
+                        let mut a = 0.0f32;
+                        for (qx, kx) in qr.iter().zip(kr) {
+                            a += qx * kx;
+                        }
+                        for (ox, vx) in orow.iter_mut().zip(vr) {
+                            *ox += a * vx;
+                        }
+                    }
+                }
+                for t in c0..ce {
+                    let kr = &k[(b * n + t) * dk..][..dk];
+                    let vr = &v[(b * n + t) * dv..][..dv];
+                    for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                        let ki = kr[i];
+                        for (sx, vx) in srow.iter_mut().zip(vr) {
+                            *sx += ki * vx;
+                        }
+                    }
+                }
+                c0 = ce;
+            }
+        }
+        o
+    }
+
+    /// Backward of [`la_chunk_fwd`].
+    pub fn la_chunk_bwd(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        go: &[f32],
+        sh: LayerShape,
+        chunk: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let c = chunk.max(1);
+        let mut dq = vec![0.0f32; bh * n * dk];
+        let mut dkk = vec![0.0f32; bh * n * dk];
+        let mut dvv = vec![0.0f32; bh * n * dv];
+        let mut s = vec![0.0f32; dk * dv];
+        let mut r = vec![0.0f32; dk * dv];
+        for b in 0..bh {
+            s.fill(0.0);
+            let mut c0 = 0;
+            while c0 < n {
+                let ce = (c0 + c).min(n);
+                for t in c0..ce {
+                    let gr = &go[(b * n + t) * dv..][..dv];
+                    let dqr = &mut dq[(b * n + t) * dk..][..dk];
+                    for (i, srow) in s.chunks_exact(dv).enumerate() {
+                        let mut acc = 0.0f32;
+                        for (sx, gx) in srow.iter().zip(gr) {
+                            acc += sx * gx;
+                        }
+                        dqr[i] = acc;
+                    }
+                    for sidx in c0..=t {
+                        let kr = &k[(b * n + sidx) * dk..][..dk];
+                        let vr = &v[(b * n + sidx) * dv..][..dv];
+                        let mut gv = 0.0f32;
+                        for (gx, vx) in gr.iter().zip(vr) {
+                            gv += gx * vx;
+                        }
+                        for (dx, kx) in dqr.iter_mut().zip(kr) {
+                            *dx += gv * kx;
+                        }
+                    }
+                }
+                for t in c0..ce {
+                    let kr = &k[(b * n + t) * dk..][..dk];
+                    let vr = &v[(b * n + t) * dv..][..dv];
+                    for (i, srow) in s.chunks_exact_mut(dv).enumerate() {
+                        let ki = kr[i];
+                        for (sx, vx) in srow.iter_mut().zip(vr) {
+                            *sx += ki * vx;
+                        }
+                    }
+                }
+                c0 = ce;
+            }
+            r.fill(0.0);
+            let n_chunks = n.div_ceil(c);
+            for ci in (0..n_chunks).rev() {
+                let c0 = ci * c;
+                let ce = (c0 + c).min(n);
+                for t in c0..ce {
+                    let kr = &k[(b * n + t) * dk..][..dk];
+                    let vr = &v[(b * n + t) * dv..][..dv];
+                    let dkr = &mut dkk[(b * n + t) * dk..][..dk];
+                    let dvr = &mut dvv[(b * n + t) * dv..][..dv];
+                    for (i, rrow) in r.chunks_exact(dv).enumerate() {
+                        let mut acc = 0.0f32;
+                        for (rx, vx) in rrow.iter().zip(vr.iter()) {
+                            acc += rx * vx;
+                        }
+                        dkr[i] = acc;
+                        let ki = kr[i];
+                        for (dx, rx) in dvr.iter_mut().zip(rrow) {
+                            *dx += ki * rx;
+                        }
+                    }
+                    for sidx in t..ce {
+                        let qr = &q[(b * n + sidx) * dk..][..dk];
+                        let gr = &go[(b * n + sidx) * dv..][..dv];
+                        let mut gv = 0.0f32;
+                        for (gx, vx) in gr.iter().zip(vr.iter()) {
+                            gv += gx * vx;
+                        }
+                        let mut a = 0.0f32;
+                        for (qx, kx) in qr.iter().zip(kr.iter()) {
+                            a += qx * kx;
+                        }
+                        for (dx, qx) in dkr.iter_mut().zip(qr) {
+                            *dx += gv * qx;
+                        }
+                        for (dx, gx) in dvr.iter_mut().zip(gr) {
+                            *dx += a * gx;
+                        }
+                    }
+                }
+                for t in c0..ce {
+                    let qr = &q[(b * n + t) * dk..][..dk];
+                    let gr = &go[(b * n + t) * dv..][..dv];
+                    for (i, rrow) in r.chunks_exact_mut(dv).enumerate() {
+                        let qi = qr[i];
+                        for (rx, gx) in rrow.iter_mut().zip(gr) {
+                            *rx += qi * gx;
+                        }
+                    }
+                }
+            }
+        }
+        (dq, dkk, dvv)
+    }
+
+    /// Pairwise masked `(QKᵀ)V` reference.
+    pub fn la_quadratic_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape) -> Vec<f32> {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let mut o = vec![0.0f32; bh * n * dv];
+        for b in 0..bh {
+            for t in 0..n {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let orow = &mut o[(b * n + t) * dv..][..dv];
+                for sidx in 0..=t {
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    let vr = &v[(b * n + sidx) * dv..][..dv];
+                    let mut a = 0.0f32;
+                    for (qx, kx) in qr.iter().zip(kr) {
+                        a += qx * kx;
+                    }
+                    for (ox, vx) in orow.iter_mut().zip(vr) {
+                        *ox += a * vx;
+                    }
+                }
+            }
+        }
+        o
+    }
+
+    /// Backward of [`la_quadratic_fwd`], pairwise.
+    pub fn la_quadratic_bwd(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        go: &[f32],
+        sh: LayerShape,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let mut dq = vec![0.0f32; bh * n * dk];
+        let mut dkk = vec![0.0f32; bh * n * dk];
+        let mut dvv = vec![0.0f32; bh * n * dv];
+        for b in 0..bh {
+            for t in 0..n {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let gr = &go[(b * n + t) * dv..][..dv];
+                for sidx in 0..=t {
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    let vr = &v[(b * n + sidx) * dv..][..dv];
+                    let mut gv = 0.0f32;
+                    for (gx, vx) in gr.iter().zip(vr) {
+                        gv += gx * vx;
+                    }
+                    let mut a = 0.0f32;
+                    for (qx, kx) in qr.iter().zip(kr) {
+                        a += qx * kx;
+                    }
+                    {
+                        let dqr = &mut dq[(b * n + t) * dk..][..dk];
+                        for (dx, kx) in dqr.iter_mut().zip(kr) {
+                            *dx += gv * kx;
+                        }
+                    }
+                    {
+                        let dkr = &mut dkk[(b * n + sidx) * dk..][..dk];
+                        for (dx, qx) in dkr.iter_mut().zip(qr) {
+                            *dx += gv * qx;
+                        }
+                    }
+                    {
+                        let dvr = &mut dvv[(b * n + sidx) * dv..][..dv];
+                        for (dx, gx) in dvr.iter_mut().zip(gr) {
+                            *dx += a * gx;
+                        }
+                    }
+                }
+            }
+        }
+        (dq, dkk, dvv)
+    }
+
+    /// Streaming causal softmax attention.
+    pub fn softmax_fwd(q: &[f32], k: &[f32], v: &[f32], sh: LayerShape, scale: f32) -> Vec<f32> {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let mut o = vec![0.0f32; bh * n * dv];
+        let mut scores = vec![0.0f32; n];
+        for b in 0..bh {
+            for t in 0..n {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let mut m = f32::NEG_INFINITY;
+                for sidx in 0..=t {
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    let mut a = 0.0f32;
+                    for (qx, kx) in qr.iter().zip(kr) {
+                        a += qx * kx;
+                    }
+                    let a = a * scale;
+                    scores[sidx] = a;
+                    m = m.max(a);
+                }
+                let mut z = 0.0f32;
+                for sc in scores[..=t].iter_mut() {
+                    *sc = (*sc - m).exp();
+                    z += *sc;
+                }
+                let inv = 1.0 / z;
+                let orow = &mut o[(b * n + t) * dv..][..dv];
+                for sidx in 0..=t {
+                    let w = scores[sidx] * inv;
+                    let vr = &v[(b * n + sidx) * dv..][..dv];
+                    for (ox, vx) in orow.iter_mut().zip(vr) {
+                        *ox += w * vx;
+                    }
+                }
+            }
+        }
+        o
+    }
+
+    /// Backward of [`softmax_fwd`].
+    pub fn softmax_bwd(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        go: &[f32],
+        sh: LayerShape,
+        scale: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let LayerShape { bh, n, dk, dv } = sh;
+        let mut dq = vec![0.0f32; bh * n * dk];
+        let mut dkk = vec![0.0f32; bh * n * dk];
+        let mut dvv = vec![0.0f32; bh * n * dv];
+        let mut p = vec![0.0f32; n];
+        let mut g = vec![0.0f32; n];
+        for b in 0..bh {
+            for t in 0..n {
+                let qr = &q[(b * n + t) * dk..][..dk];
+                let gr = &go[(b * n + t) * dv..][..dv];
+                let mut m = f32::NEG_INFINITY;
+                for sidx in 0..=t {
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    let mut a = 0.0f32;
+                    for (qx, kx) in qr.iter().zip(kr) {
+                        a += qx * kx;
+                    }
+                    let a = a * scale;
+                    p[sidx] = a;
+                    m = m.max(a);
+                }
+                let mut z = 0.0f32;
+                for sc in p[..=t].iter_mut() {
+                    *sc = (*sc - m).exp();
+                    z += *sc;
+                }
+                let inv = 1.0 / z;
+                let mut csum = 0.0f32;
+                for sidx in 0..=t {
+                    p[sidx] *= inv;
+                    let vr = &v[(b * n + sidx) * dv..][..dv];
+                    let mut gv = 0.0f32;
+                    for (gx, vx) in gr.iter().zip(vr) {
+                        gv += gx * vx;
+                    }
+                    g[sidx] = gv;
+                    csum += p[sidx] * gv;
+                }
+                let dqr_start = (b * n + t) * dk;
+                for sidx in 0..=t {
+                    let ds = p[sidx] * (g[sidx] - csum) * scale;
+                    {
+                        let dvr = &mut dvv[(b * n + sidx) * dv..][..dv];
+                        let w = p[sidx];
+                        for (dx, gx) in dvr.iter_mut().zip(gr) {
+                            *dx += w * gx;
+                        }
+                    }
+                    let kr = &k[(b * n + sidx) * dk..][..dk];
+                    {
+                        let dqr = &mut dq[dqr_start..][..dk];
+                        for (dx, kx) in dqr.iter_mut().zip(kr) {
+                            *dx += ds * kx;
+                        }
+                    }
+                    {
+                        let dkr = &mut dkk[(b * n + sidx) * dk..][..dk];
+                        for (dx, qx) in dkr.iter_mut().zip(qr) {
+                            *dx += ds * qx;
+                        }
+                    }
+                }
+            }
+        }
+        (dq, dkk, dvv)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::Tensor;
+
+    fn pool() -> ThreadPool {
+        ThreadPool::new(3)
+    }
 
     fn randn(n: usize, seed: u64) -> Vec<f32> {
         match Tensor::randn(vec![n], seed) {
@@ -539,9 +1302,9 @@ mod tests {
         let q = randn(sh.bh * sh.n * sh.dk, 1);
         let k = randn(sh.bh * sh.n * sh.dk, 2);
         let v = randn(sh.bh * sh.n * sh.dv, 3);
-        let a = la_scan_fwd(&q, &k, &v, sh, 1.0);
-        let b = la_chunk_fwd(&q, &k, &v, sh, 7);
-        let c = la_quadratic_fwd(&q, &k, &v, sh);
+        let a = la_scan_fwd(&pool(), &q, &k, &v, sh, 1.0);
+        let b = la_chunk_fwd(&pool(), &q, &k, &v, sh, 7);
+        let c = la_quadratic_fwd(&pool(), &q, &k, &v, sh);
         assert!(max_abs_diff(&a, &c) < 1e-3, "scan vs quadratic {}", max_abs_diff(&a, &c));
         assert!(max_abs_diff(&b, &c) < 1e-3, "chunk vs quadratic {}", max_abs_diff(&b, &c));
     }
@@ -553,12 +1316,82 @@ mod tests {
         let k = randn(sh.bh * sh.n * sh.dk, 5);
         let v = randn(sh.bh * sh.n * sh.dv, 6);
         let go = randn(sh.bh * sh.n * sh.dv, 7);
-        let (aq, ak, av) = la_scan_bwd(&q, &k, &v, &go, sh, 1.0);
-        let (bq, bk, bv) = la_chunk_bwd(&q, &k, &v, &go, sh, 5);
-        let (cq, ck, cv) = la_quadratic_bwd(&q, &k, &v, &go, sh);
+        let (aq, ak, av) = la_scan_bwd(&pool(), &q, &k, &v, &go, sh, 1.0);
+        let (bq, bk, bv) = la_chunk_bwd(&pool(), &q, &k, &v, &go, sh, 5);
+        let (cq, ck, cv) = la_quadratic_bwd(&pool(), &q, &k, &v, &go, sh);
         for (x, y) in [(&aq, &cq), (&ak, &ck), (&av, &cv), (&bq, &cq), (&bk, &ck), (&bv, &cv)] {
             assert!(max_abs_diff(x, y) < 1e-3, "bwd mismatch {}", max_abs_diff(x, y));
         }
+    }
+
+    #[test]
+    fn parallel_kernels_match_scalar_reference() {
+        // quick in-module guard at an awkward shape (ragged chunks and
+        // blocks); the full-size parity suite lives in tests/native_parallel.rs
+        let sh = LayerShape::cube(3, 70, 10);
+        let q = randn(sh.bh * sh.n * sh.dk, 40);
+        let k = randn(sh.bh * sh.n * sh.dk, 41);
+        let v = randn(sh.bh * sh.n * sh.dv, 42);
+        let go = randn(sh.bh * sh.n * sh.dv, 43);
+        let p = pool();
+        assert!(
+            max_abs_diff(
+                &la_chunk_fwd(&p, &q, &k, &v, sh, 16),
+                &reference::la_chunk_fwd(&q, &k, &v, sh, 16)
+            ) < 1e-3
+        );
+        let (pq, pk, pv) = la_chunk_bwd(&p, &q, &k, &v, &go, sh, 16);
+        let (rq, rk, rv) = reference::la_chunk_bwd(&q, &k, &v, &go, sh, 16);
+        for (x, y) in [(&pq, &rq), (&pk, &rk), (&pv, &rv)] {
+            assert!(max_abs_diff(x, y) < 1e-3, "chunk bwd vs reference {}", max_abs_diff(x, y));
+        }
+        assert!(
+            max_abs_diff(
+                &la_quadratic_fwd(&p, &q, &k, &v, sh),
+                &reference::la_quadratic_fwd(&q, &k, &v, sh)
+            ) < 1e-3
+        );
+    }
+
+    #[test]
+    fn chunk_running_state_fallback_matches_reference() {
+        // the bounded-memory path (chunk_fwd_one / chunk_bwd_one) is only
+        // reachable through the public API past the 256 MB state budget, so
+        // pin it directly against the scalar reference here
+        let sh = LayerShape::cube(1, 53, 9);
+        let q = randn(sh.n * sh.dk, 60);
+        let k = randn(sh.n * sh.dk, 61);
+        let v = randn(sh.n * sh.dv, 62);
+        let go = randn(sh.n * sh.dv, 63);
+        for c in [1usize, 8, 64] {
+            let mut o = vec![0.0f32; sh.n * sh.dv];
+            chunk_fwd_one(&q, &k, &v, sh.n, sh.dk, sh.dv, c, &mut o);
+            let o_ref = reference::la_chunk_fwd(&q, &k, &v, sh, c);
+            assert!(max_abs_diff(&o, &o_ref) < 1e-3, "fwd C={c}: {}", max_abs_diff(&o, &o_ref));
+
+            let mut dq = vec![0.0f32; sh.n * sh.dk];
+            let mut dkk = vec![0.0f32; sh.n * sh.dk];
+            let mut dvv = vec![0.0f32; sh.n * sh.dv];
+            chunk_bwd_one(&q, &k, &v, &go, sh.n, sh.dk, sh.dv, c, &mut dq, &mut dkk, &mut dvv);
+            let (rq, rk, rv) = reference::la_chunk_bwd(&q, &k, &v, &go, sh, c);
+            for (name, x, y) in [("dq", &dq, &rq), ("dk", &dkk, &rk), ("dv", &dvv, &rv)] {
+                assert!(max_abs_diff(x, y) < 1e-3, "{name} C={c}: {}", max_abs_diff(x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_return_empty() {
+        let p = pool();
+        let sh = LayerShape { bh: 2, n: 0, dk: 8, dv: 8 };
+        assert!(la_scan_fwd(&p, &[], &[], &[], sh, 1.0).is_empty());
+        assert!(la_chunk_fwd(&p, &[], &[], &[], sh, 16).is_empty());
+        assert!(la_quadratic_fwd(&p, &[], &[], &[], sh).is_empty());
+        assert!(softmax_fwd(&p, &[], &[], &[], sh, 1.0).is_empty());
+        let (dq, dk, dv) = la_scan_bwd(&p, &[], &[], &[], &[], sh, 1.0);
+        assert!(dq.is_empty() && dk.is_empty() && dv.is_empty());
+        let (dq, dk, dv) = la_chunk_bwd(&p, &[], &[], &[], &[], sh, 16);
+        assert!(dq.is_empty() && dk.is_empty() && dv.is_empty());
     }
 
     #[test]
@@ -570,14 +1403,15 @@ mod tests {
         let v = randn(sh.bh * sh.n * sh.dv, 12);
         let go = randn(sh.bh * sh.n * sh.dv, 13);
         let gamma = 0.9f32;
+        let p = pool();
         let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
-            la_scan_fwd(q, k, v, sh, gamma)
+            la_scan_fwd(&p, q, k, v, sh, gamma)
                 .iter()
                 .zip(&go)
                 .map(|(o, g)| (*o as f64) * (*g as f64))
                 .sum()
         };
-        let (dq, dk, dv) = la_scan_bwd(&q, &k, &v, &go, sh, gamma);
+        let (dq, dk, dv) = la_scan_bwd(&p, &q, &k, &v, &go, sh, gamma);
         let eps = 1e-3f32;
         for idx in [0usize, 4, 7, 13] {
             for (buf, grad, which) in [
@@ -611,7 +1445,7 @@ mod tests {
         let k = randn(sh.bh * sh.n * sh.dk, 21);
         // v constant 1 → every output row must be exactly 1 (weights sum to 1)
         let v = vec![1.0f32; sh.bh * sh.n * sh.dv];
-        let o = softmax_fwd(&q, &k, &v, sh, 0.5);
+        let o = softmax_fwd(&pool(), &q, &k, &v, sh, 0.5);
         for x in &o {
             assert!((x - 1.0).abs() < 1e-5, "row weight sum drifted: {x}");
         }
@@ -625,14 +1459,15 @@ mod tests {
         let v = randn(sh.bh * sh.n * sh.dv, 32);
         let go = randn(sh.bh * sh.n * sh.dv, 33);
         let scale = 0.7f32;
+        let p = pool();
         let loss = |q: &[f32], k: &[f32], v: &[f32]| -> f64 {
-            softmax_fwd(q, k, v, sh, scale)
+            softmax_fwd(&p, q, k, v, sh, scale)
                 .iter()
                 .zip(&go)
                 .map(|(o, g)| (*o as f64) * (*g as f64))
                 .sum()
         };
-        let (dq, dk, dv) = softmax_bwd(&q, &k, &v, &go, sh, scale);
+        let (dq, dk, dv) = softmax_bwd(&p, &q, &k, &v, &go, sh, scale);
         let eps = 1e-3f32;
         for idx in [0usize, 3, 8, 11] {
             for which in 0..3 {
@@ -667,10 +1502,10 @@ mod tests {
         let q = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
         let k = vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
         let v = vec![1.0, 1.0, 2.0, 2.0, 4.0, 4.0];
-        let o = la_scan_fwd(&q, &k, &v, sh, 0.5);
+        let o = la_scan_fwd(&pool(), &q, &k, &v, sh, 0.5);
         // t=2: 0.25·1 + 0.5·2 + 4 = 5.25
         assert!((o[4] - 5.25).abs() < 1e-6, "o[4] {}", o[4]);
-        let o_plain = la_scan_fwd(&q, &k, &v, sh, 1.0);
+        let o_plain = la_scan_fwd(&pool(), &q, &k, &v, sh, 1.0);
         assert!((o_plain[4] - 7.0).abs() < 1e-6);
     }
 }

@@ -4,15 +4,25 @@
 //! implementation every accelerated path is diffed against.
 //!
 //! - [`kernels`] — the paper's causal linear-attention forward/backward
-//!   (state scan + chunkwise variants) and the quadratic baselines;
+//!   (state scan + chunkwise variants) and the quadratic baselines, parallel
+//!   across B·H (and `(bh, chunk)` tiles) with the scalar originals kept in
+//!   [`kernels::reference`];
+//! - [`pool`] — the dependency-free scoped thread pool (`RUST_PALLAS_THREADS`)
+//!   every executor dispatches on;
+//! - [`gemm`] — the cache-blocked f32 matmul microkernels shared by the
+//!   chunkwise/quadratic kernels and the LM's linear layers;
 //! - [`model`] — the tiny LM (train step / eval / logits / init) with a
 //!   hand-derived backward pass and in-tree Adam;
 //! - [`NativeBackend`] — the [`Backend`] impl: a code-built [`Manifest`]
 //!   mirroring the AOT artifact naming scheme (`layer_<impl>_<kind>_n<N>_d<D>`,
 //!   `lm_<preset>_<attn>_<op>`, `quickstart_la_*`) and per-artifact executors.
+//!   The chunkwise sweep chunk length is `RUST_PALLAS_CHUNK` (default 128),
+//!   recorded in each artifact's manifest metadata.
 
+pub mod gemm;
 pub mod kernels;
 pub mod model;
+pub mod pool;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -22,20 +32,58 @@ use crate::util::json::Json;
 
 use kernels::LayerShape;
 use model::{AttnKind, LmConfig};
+use pool::ThreadPool;
 
 /// Batch×heads used by every registered layer artifact.
 const LAYER_BH: usize = 4;
 /// Head dimension of the registered layer sweep.
 const LAYER_D: usize = 128;
-/// Chunk length of the chunkwise `ours` artifacts.
+/// Default chunk length of the chunkwise `ours` artifacts.
 const OURS_CHUNK: usize = 128;
 
-/// The dependency-free CPU backend.
-pub struct NativeBackend;
+/// Chunk length of the chunkwise sweep artifacts: `RUST_PALLAS_CHUNK`
+/// (positive integer) or the built-in default of 128. Read at manifest build
+/// time so the sweep metadata records the value each run actually used —
+/// chunk-size sensitivity is benchmarked by re-running under different
+/// settings of the variable.
+pub fn ours_chunk() -> usize {
+    std::env::var("RUST_PALLAS_CHUNK")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(OURS_CHUNK)
+}
+
+/// The dependency-free CPU backend, carrying the worker pool every executor
+/// dispatches on.
+pub struct NativeBackend {
+    pool: ThreadPool,
+    /// Run the scalar single-thread reference kernels instead of the
+    /// parallel/tiled paths (the `bench-native` speedup baseline).
+    reference: bool,
+}
 
 impl NativeBackend {
+    /// Pool sized from `RUST_PALLAS_THREADS` (0/unset = all cores).
     pub fn new() -> Self {
-        NativeBackend
+        Self { pool: ThreadPool::from_env(), reference: false }
+    }
+
+    /// Backend over an explicit pool (tests, thread-count sweeps).
+    pub fn with_pool(pool: ThreadPool) -> Self {
+        Self { pool, reference: false }
+    }
+
+    /// The pre-optimization scalar kernels on one thread — the baseline the
+    /// `BENCH_native.json` speedup column is measured against. Serves the
+    /// `layer_*` artifact kinds only (loading an `lm_*` artifact errors: the
+    /// LM has no preserved scalar path).
+    pub fn scalar_reference() -> Self {
+        Self { pool: ThreadPool::new(1), reference: true }
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
     }
 }
 
@@ -58,7 +106,7 @@ impl Backend for NativeBackend {
         match meta.kind.as_str() {
             "layer_fwd" | "layer_fwdbwd" => {
                 let imp = match meta.implementation() {
-                    Some("ours") => LayerImpl::Chunk(meta.chunk.unwrap_or(OURS_CHUNK)),
+                    Some("ours") => LayerImpl::Chunk(meta.chunk.unwrap_or_else(ours_chunk)),
                     Some("ours_scan") => LayerImpl::Scan,
                     Some("quadratic") => LayerImpl::Quadratic,
                     Some("softmax") => LayerImpl::Softmax,
@@ -69,9 +117,21 @@ impl Backend for NativeBackend {
                     meta.n.ok_or_else(|| anyhow!("{name}: missing n"))?,
                     meta.d.ok_or_else(|| anyhow!("{name}: missing d"))?,
                 );
-                Ok(Box::new(LayerExec { imp, grad: meta.kind == "layer_fwdbwd", sh }))
+                Ok(Box::new(LayerExec {
+                    imp,
+                    grad: meta.kind == "layer_fwdbwd",
+                    sh,
+                    pool: self.pool,
+                    reference: self.reference,
+                }))
             }
             "lm_train_step" | "lm_eval" | "lm_init" | "lm_logits" => {
+                if self.reference {
+                    bail!(
+                        "the scalar-reference backend serves layer kernels only; \
+                         no scalar LM path is preserved ({name})"
+                    );
+                }
                 if meta.preset.as_deref() != Some("tiny") {
                     bail!("native backend only ships the `tiny` LM preset ({name})");
                 }
@@ -84,7 +144,7 @@ impl Backend for NativeBackend {
                     "lm_init" => LmOp::Init,
                     _ => LmOp::Logits,
                 };
-                Ok(Box::new(LmExec { cfg: LmConfig::tiny(attn), op }))
+                Ok(Box::new(LmExec { cfg: LmConfig::tiny(attn), op, pool: self.pool }))
             }
             other => bail!("native backend cannot execute artifact kind {other:?} ({name})"),
         }
@@ -109,6 +169,8 @@ struct LayerExec {
     imp: LayerImpl,
     grad: bool,
     sh: LayerShape,
+    pool: ThreadPool,
+    reference: bool,
 }
 
 impl Executor for LayerExec {
@@ -131,21 +193,40 @@ impl Executor for LayerExec {
         let (q, k, v) = (bufs[0], bufs[1], bufs[2]);
         let cube = vec![sh.bh, sh.n, sh.dk];
         let scale = 1.0 / (sh.dk as f32).sqrt();
+        let pool = &self.pool;
         if !self.grad {
-            let o = match self.imp {
-                LayerImpl::Chunk(c) => kernels::la_chunk_fwd(q, k, v, sh, c),
-                LayerImpl::Scan => kernels::la_scan_fwd(q, k, v, sh, 1.0),
-                LayerImpl::Quadratic => kernels::la_quadratic_fwd(q, k, v, sh),
-                LayerImpl::Softmax => kernels::softmax_fwd(q, k, v, sh, scale),
+            let o = if self.reference {
+                match self.imp {
+                    LayerImpl::Chunk(c) => kernels::reference::la_chunk_fwd(q, k, v, sh, c),
+                    LayerImpl::Scan => kernels::reference::la_scan_fwd(q, k, v, sh, 1.0),
+                    LayerImpl::Quadratic => kernels::reference::la_quadratic_fwd(q, k, v, sh),
+                    LayerImpl::Softmax => kernels::reference::softmax_fwd(q, k, v, sh, scale),
+                }
+            } else {
+                match self.imp {
+                    LayerImpl::Chunk(c) => kernels::la_chunk_fwd(pool, q, k, v, sh, c),
+                    LayerImpl::Scan => kernels::la_scan_fwd(pool, q, k, v, sh, 1.0),
+                    LayerImpl::Quadratic => kernels::la_quadratic_fwd(pool, q, k, v, sh),
+                    LayerImpl::Softmax => kernels::softmax_fwd(pool, q, k, v, sh, scale),
+                }
             };
             Ok(vec![Tensor::f32(cube, o)?])
         } else {
             let go = bufs[3];
-            let (dq, dk, dv) = match self.imp {
-                LayerImpl::Chunk(c) => kernels::la_chunk_bwd(q, k, v, go, sh, c),
-                LayerImpl::Scan => kernels::la_scan_bwd(q, k, v, go, sh, 1.0),
-                LayerImpl::Quadratic => kernels::la_quadratic_bwd(q, k, v, go, sh),
-                LayerImpl::Softmax => kernels::softmax_bwd(q, k, v, go, sh, scale),
+            let (dq, dk, dv) = if self.reference {
+                match self.imp {
+                    LayerImpl::Chunk(c) => kernels::reference::la_chunk_bwd(q, k, v, go, sh, c),
+                    LayerImpl::Scan => kernels::reference::la_scan_bwd(q, k, v, go, sh, 1.0),
+                    LayerImpl::Quadratic => kernels::reference::la_quadratic_bwd(q, k, v, go, sh),
+                    LayerImpl::Softmax => kernels::reference::softmax_bwd(q, k, v, go, sh, scale),
+                }
+            } else {
+                match self.imp {
+                    LayerImpl::Chunk(c) => kernels::la_chunk_bwd(pool, q, k, v, go, sh, c),
+                    LayerImpl::Scan => kernels::la_scan_bwd(pool, q, k, v, go, sh, 1.0),
+                    LayerImpl::Quadratic => kernels::la_quadratic_bwd(pool, q, k, v, go, sh),
+                    LayerImpl::Softmax => kernels::softmax_bwd(pool, q, k, v, go, sh, scale),
+                }
             };
             Ok(vec![
                 Tensor::f32(cube.clone(), dq)?,
@@ -169,6 +250,7 @@ enum LmOp {
 struct LmExec {
     cfg: LmConfig,
     op: LmOp,
+    pool: ThreadPool,
 }
 
 impl Executor for LmExec {
@@ -193,20 +275,20 @@ impl Executor for LmExec {
                 let state = &inputs[..3 * np];
                 let tokens = inputs[3 * np];
                 let step = model::scalar_i64(inputs[3 * np + 1])?;
-                model::train_step(&self.cfg, state, tokens, step)
+                model::train_step(&self.cfg, state, tokens, step, &self.pool)
             }
             LmOp::Eval => {
                 if inputs.len() != np + 1 {
                     bail!("lm_eval wants {} inputs (params ++ tokens), got {}", np + 1, inputs.len());
                 }
-                let loss = model::eval_loss(&self.cfg, &inputs[..np], inputs[np])?;
+                let loss = model::eval_loss(&self.cfg, &inputs[..np], inputs[np], &self.pool)?;
                 Ok(vec![Tensor::scalar_f32(loss)])
             }
             LmOp::Logits => {
                 if inputs.len() != np + 1 {
                     bail!("lm_logits wants {} inputs (params ++ tokens), got {}", np + 1, inputs.len());
                 }
-                Ok(vec![model::logits(&self.cfg, &inputs[..np], inputs[np])?])
+                Ok(vec![model::logits(&self.cfg, &inputs[..np], inputs[np], &self.pool)?])
             }
         }
     }
@@ -352,8 +434,9 @@ pub fn build_manifest() -> Manifest {
     // that the analytic model's fixed launch overhead dominates and the
     // linear-scaling series is meaningless); quadratic-time baselines stop
     // earlier so a full sweep stays tractable on one core.
+    let chunk = ours_chunk();
     let sweeps: &[(&str, usize, &[usize], &[usize])] = &[
-        ("ours", OURS_CHUNK, &[1024, 2048, 4096, 8192], &[1024, 2048, 4096]),
+        ("ours", chunk, &[1024, 2048, 4096, 8192], &[1024, 2048, 4096]),
         ("ours_scan", 0, &[1024, 2048, 4096, 8192], &[1024, 2048, 4096]),
         ("quadratic", 0, &[1024, 2048], &[1024, 2048]),
         ("softmax", 0, &[1024, 2048, 4096], &[1024, 2048]),
@@ -418,6 +501,17 @@ mod tests {
         assert!(ours.len() >= 4);
         assert!(ours.windows(2).all(|w| w[0].1.n <= w[1].1.n));
         assert!(ours.iter().all(|(name, _)| !name.starts_with("quickstart")));
+    }
+
+    #[test]
+    fn sweep_manifest_records_chunk_length() {
+        // no env override in the test process → the built-in default; the
+        // env-driven path shares the same parse (`ours_chunk`)
+        let m = build_manifest();
+        let ours = m.get("layer_ours_fwd_n1024_d128").unwrap();
+        assert_eq!(ours.chunk, Some(ours_chunk()));
+        let scan = m.get("layer_ours_scan_fwd_n1024_d128").unwrap();
+        assert_eq!(scan.chunk, None);
     }
 
     #[test]

@@ -21,7 +21,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::Tensor;
 
+use super::gemm;
 use super::kernels::{la_scan_bwd, la_scan_fwd, softmax_bwd, softmax_fwd, LayerShape};
+use super::pool::ThreadPool;
 
 /// Normalizer floor for the linear-attention denominator.
 const EPS: f32 = 1e-6;
@@ -167,55 +169,47 @@ impl<'a> P<'a> {
 }
 
 // --- dense helpers (row-major, accumulate into `out`) -----------------------
+//
+// Thin aliases over the tiled [`gemm`] microkernels, parallel across output
+// row stripes when the product is large enough to amortize a launch.
 
 /// out[r,j] += x[r,c] · w[c,j]
-fn matmul(x: &[f32], w: &[f32], rows: usize, cin: usize, cout: usize, out: &mut [f32]) {
-    for r in 0..rows {
-        let xr = &x[r * cin..][..cin];
-        let or = &mut out[r * cout..][..cout];
-        for (c, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w[c * cout..][..cout];
-            for (o, wv) in or.iter_mut().zip(wr) {
-                *o += xv * wv;
-            }
-        }
-    }
+fn matmul(
+    pool: &ThreadPool,
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    gemm::par_gemm_nn(pool, x, w, rows, cin, cout, out);
 }
 
 /// dx[r,c] += dout[r,j] · w[c,j]
-fn matmul_dx(dout: &[f32], w: &[f32], rows: usize, cin: usize, cout: usize, dx: &mut [f32]) {
-    for r in 0..rows {
-        let gr = &dout[r * cout..][..cout];
-        let dr = &mut dx[r * cin..][..cin];
-        for (c, d) in dr.iter_mut().enumerate() {
-            let wr = &w[c * cout..][..cout];
-            let mut acc = 0.0f32;
-            for (g, wv) in gr.iter().zip(wr) {
-                acc += g * wv;
-            }
-            *d += acc;
-        }
-    }
+fn matmul_dx(
+    pool: &ThreadPool,
+    dout: &[f32],
+    w: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    dx: &mut [f32],
+) {
+    gemm::par_gemm_nt(pool, dout, w, rows, cout, cin, dx);
 }
 
 /// dw[c,j] += x[r,c] · dout[r,j]
-fn matmul_dw(x: &[f32], dout: &[f32], rows: usize, cin: usize, cout: usize, dw: &mut [f32]) {
-    for r in 0..rows {
-        let xr = &x[r * cin..][..cin];
-        let gr = &dout[r * cout..][..cout];
-        for (c, &xv) in xr.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let dr = &mut dw[c * cout..][..cout];
-            for (d, g) in dr.iter_mut().zip(gr) {
-                *d += xv * g;
-            }
-        }
-    }
+fn matmul_dw(
+    pool: &ThreadPool,
+    x: &[f32],
+    dout: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    dw: &mut [f32],
+) {
+    gemm::par_gemm_tn(pool, x, dout, cin, rows, cout, dw);
 }
 
 fn elu1(x: f32) -> f32 {
@@ -260,7 +254,7 @@ fn attn_gamma(kind: AttnKind) -> f32 {
 }
 
 /// Forward pass over `x` (batch × n_ctx token ids) → (logits, cache).
-fn forward(cfg: &LmConfig, p: &P, x: &[i32]) -> Result<(Vec<f32>, Cache)> {
+fn forward(cfg: &LmConfig, p: &P, x: &[i32], pool: &ThreadPool) -> Result<(Vec<f32>, Cache)> {
     let (bsz, l, d, v) = (cfg.batch, cfg.n_ctx, cfg.d_model, cfg.vocab);
     let rows = bsz * l;
     if x.len() != rows {
@@ -281,15 +275,15 @@ fn forward(cfg: &LmConfig, p: &P, x: &[i32]) -> Result<(Vec<f32>, Cache)> {
     let mut qp = vec![0.0f32; rows * d];
     let mut kp = vec![0.0f32; rows * d];
     let mut vp = vec![0.0f32; rows * d];
-    matmul(&h0, p.wq, rows, d, d, &mut qp);
-    matmul(&h0, p.wk, rows, d, d, &mut kp);
-    matmul(&h0, p.wv, rows, d, d, &mut vp);
+    matmul(pool, &h0, p.wq, rows, d, d, &mut qp);
+    matmul(pool, &h0, p.wk, rows, d, d, &mut kp);
+    matmul(pool, &h0, p.wv, rows, d, d, &mut vp);
 
     let (a, fq, fk, vext, u) = match cfg.attn {
         AttnKind::Softmax => {
             let sh = LayerShape::cube(bsz, l, d);
             let scale = 1.0 / (d as f32).sqrt();
-            let a = softmax_fwd(&qp, &kp, &vp, sh, scale);
+            let a = softmax_fwd(pool, &qp, &kp, &vp, sh, scale);
             (a, Vec::new(), Vec::new(), Vec::new(), Vec::new())
         }
         kind => {
@@ -302,7 +296,7 @@ fn forward(cfg: &LmConfig, p: &P, x: &[i32]) -> Result<(Vec<f32>, Cache)> {
                 vext[r * (d + 1) + d] = 1.0;
             }
             let sh = LayerShape { bh: bsz, n: l, dk: d, dv: d + 1 };
-            let u = la_scan_fwd(&fq, &fk, &vext, sh, gamma);
+            let u = la_scan_fwd(pool, &fq, &fk, &vext, sh, gamma);
             let mut a = vec![0.0f32; rows * d];
             for r in 0..rows {
                 let ur = &u[r * (d + 1)..][..d + 1];
@@ -317,12 +311,12 @@ fn forward(cfg: &LmConfig, p: &P, x: &[i32]) -> Result<(Vec<f32>, Cache)> {
     };
 
     let mut h1 = h0.clone();
-    matmul(&a, p.wo, rows, d, d, &mut h1);
+    matmul(pool, &a, p.wo, rows, d, d, &mut h1);
     let mut logits = vec![0.0f32; rows * v];
     for r in 0..rows {
         logits[r * v..][..v].copy_from_slice(p.bu);
     }
-    matmul(&h1, p.wu, rows, d, v, &mut logits);
+    matmul(pool, &h1, p.wu, rows, d, v, &mut logits);
     Ok((logits, Cache { h0, qp, kp, vp, a, fq, fk, vext, u, h1 }))
 }
 
@@ -361,15 +355,25 @@ fn cross_entropy(
 }
 
 /// Forward + loss, no gradients (the `lm_*_eval` artifact body).
-pub fn eval_loss(cfg: &LmConfig, params: &[&Tensor], tokens: &Tensor) -> Result<f32> {
+pub fn eval_loss(
+    cfg: &LmConfig,
+    params: &[&Tensor],
+    tokens: &Tensor,
+    pool: &ThreadPool,
+) -> Result<f32> {
     let p = P::bind(cfg, params)?;
     let (x, y) = split_xy(cfg, tokens)?;
-    let (logits, _cache) = forward(cfg, &p, &x)?;
+    let (logits, _cache) = forward(cfg, &p, &x, pool)?;
     cross_entropy(&logits, &y, cfg.vocab, None)
 }
 
 /// Forward only, over full-context token rows (the `lm_*_logits` artifact).
-pub fn logits(cfg: &LmConfig, params: &[&Tensor], tokens: &Tensor) -> Result<Tensor> {
+pub fn logits(
+    cfg: &LmConfig,
+    params: &[&Tensor],
+    tokens: &Tensor,
+    pool: &ThreadPool,
+) -> Result<Tensor> {
     let p = P::bind(cfg, params)?;
     let x = tokens.as_i32()?;
     if tokens.shape() != [cfg.batch, cfg.n_ctx].as_slice() {
@@ -380,7 +384,7 @@ pub fn logits(cfg: &LmConfig, params: &[&Tensor], tokens: &Tensor) -> Result<Ten
             tokens.shape()
         );
     }
-    let (lg, _cache) = forward(cfg, &p, x)?;
+    let (lg, _cache) = forward(cfg, &p, x, pool)?;
     Tensor::f32(vec![cfg.batch, cfg.n_ctx, cfg.vocab], lg)
 }
 
@@ -408,10 +412,16 @@ fn split_xy(cfg: &LmConfig, tokens: &Tensor) -> Result<(Vec<i32>, Vec<i32>)> {
 }
 
 /// Loss + gradients for every parameter array (state order).
-fn loss_and_grads(cfg: &LmConfig, p: &P, x: &[i32], y: &[i32]) -> Result<(f32, Vec<Vec<f32>>)> {
+fn loss_and_grads(
+    cfg: &LmConfig,
+    p: &P,
+    x: &[i32],
+    y: &[i32],
+    pool: &ThreadPool,
+) -> Result<(f32, Vec<Vec<f32>>)> {
     let (bsz, l, d, v) = (cfg.batch, cfg.n_ctx, cfg.d_model, cfg.vocab);
     let rows = bsz * l;
-    let (logits, cache) = forward(cfg, p, x)?;
+    let (logits, cache) = forward(cfg, p, x, pool)?;
     let mut dlogits = vec![0.0f32; rows * v];
     let loss = cross_entropy(&logits, y, v, Some(&mut dlogits))?;
 
@@ -431,22 +441,22 @@ fn loss_and_grads(cfg: &LmConfig, p: &P, x: &[i32], y: &[i32]) -> Result<(f32, V
             *db += g;
         }
     }
-    matmul_dw(&cache.h1, &dlogits, rows, d, v, &mut d_wu);
+    matmul_dw(pool, &cache.h1, &dlogits, rows, d, v, &mut d_wu);
     let mut dh1 = vec![0.0f32; rows * d];
-    matmul_dx(&dlogits, p.wu, rows, d, v, &mut dh1);
+    matmul_dx(pool, &dlogits, p.wu, rows, d, v, &mut dh1);
 
     // h1 = h0 + a·wo
     let mut dh0 = dh1.clone();
-    matmul_dw(&cache.a, &dh1, rows, d, d, &mut d_wo);
+    matmul_dw(pool, &cache.a, &dh1, rows, d, d, &mut d_wo);
     let mut da = vec![0.0f32; rows * d];
-    matmul_dx(&dh1, p.wo, rows, d, d, &mut da);
+    matmul_dx(pool, &dh1, p.wo, rows, d, d, &mut da);
 
     // attention
     let (dqp, dkp, dvp) = match cfg.attn {
         AttnKind::Softmax => {
             let sh = LayerShape::cube(bsz, l, d);
             let scale = 1.0 / (d as f32).sqrt();
-            softmax_bwd(&cache.qp, &cache.kp, &cache.vp, &da, sh, scale)
+            softmax_bwd(pool, &cache.qp, &cache.kp, &cache.vp, &da, sh, scale)
         }
         kind => {
             let gamma = attn_gamma(kind);
@@ -466,7 +476,7 @@ fn loss_and_grads(cfg: &LmConfig, p: &P, x: &[i32], y: &[i32]) -> Result<(f32, V
             }
             let sh = LayerShape { bh: bsz, n: l, dk: d, dv: d + 1 };
             let (dfq, dfk, dvext) =
-                la_scan_bwd(&cache.fq, &cache.fk, &cache.vext, &du, sh, gamma);
+                la_scan_bwd(pool, &cache.fq, &cache.fk, &cache.vext, &du, sh, gamma);
             let mut dqp = vec![0.0f32; rows * d];
             let mut dkp = vec![0.0f32; rows * d];
             let mut dvp = vec![0.0f32; rows * d];
@@ -482,12 +492,12 @@ fn loss_and_grads(cfg: &LmConfig, p: &P, x: &[i32], y: &[i32]) -> Result<(f32, V
     };
 
     // q,k,v = h0 · w{q,k,v}
-    matmul_dw(&cache.h0, &dqp, rows, d, d, &mut d_wq);
-    matmul_dw(&cache.h0, &dkp, rows, d, d, &mut d_wk);
-    matmul_dw(&cache.h0, &dvp, rows, d, d, &mut d_wv);
-    matmul_dx(&dqp, p.wq, rows, d, d, &mut dh0);
-    matmul_dx(&dkp, p.wk, rows, d, d, &mut dh0);
-    matmul_dx(&dvp, p.wv, rows, d, d, &mut dh0);
+    matmul_dw(pool, &cache.h0, &dqp, rows, d, d, &mut d_wq);
+    matmul_dw(pool, &cache.h0, &dkp, rows, d, d, &mut d_wk);
+    matmul_dw(pool, &cache.h0, &dvp, rows, d, d, &mut d_wv);
+    matmul_dx(pool, &dqp, p.wq, rows, d, d, &mut dh0);
+    matmul_dx(pool, &dkp, p.wk, rows, d, d, &mut dh0);
+    matmul_dx(pool, &dvp, p.wv, rows, d, d, &mut dh0);
 
     // h0 = wte[x] + wpe
     for (r, &tok) in x.iter().enumerate() {
@@ -512,6 +522,7 @@ pub fn train_step(
     state: &[&Tensor],
     tokens: &Tensor,
     step: i64,
+    pool: &ThreadPool,
 ) -> Result<Vec<Tensor>> {
     let np = cfg.n_params();
     if state.len() != 3 * np {
@@ -519,7 +530,7 @@ pub fn train_step(
     }
     let p = P::bind(cfg, &state[..np])?;
     let (x, y) = split_xy(cfg, tokens)?;
-    let (loss, grads) = loss_and_grads(cfg, &p, &x, &y)?;
+    let (loss, grads) = loss_and_grads(cfg, &p, &x, &y, pool)?;
 
     let step = step.max(0) as usize;
     let lr = cfg.lr_at(step);
@@ -585,6 +596,10 @@ mod tests {
         state.iter().collect()
     }
 
+    fn pool() -> ThreadPool {
+        ThreadPool::new(2)
+    }
+
     fn tiny_tokens(cfg: &LmConfig, seed: u64) -> Tensor {
         let mut rng = crate::data::rng::SplitMix64::new(seed);
         let n = cfg.batch * (cfg.n_ctx + 1);
@@ -616,7 +631,7 @@ mod tests {
             let state = cfg.init_state(0);
             let toks = tiny_tokens(&cfg, 1);
             let s = refs(&state);
-            let loss = eval_loss(&cfg, &s[..cfg.n_params()], &toks).unwrap();
+            let loss = eval_loss(&cfg, &s[..cfg.n_params()], &toks, &pool()).unwrap();
             let uniform = (cfg.vocab as f32).ln();
             assert!(
                 (loss - uniform).abs() < 0.3,
@@ -643,7 +658,7 @@ mod tests {
             let mut last = f32::NAN;
             for step in 0..20 {
                 let s = refs(&state);
-                let out = train_step(&cfg, &s, &toks, step).unwrap();
+                let out = train_step(&cfg, &s, &toks, step, &pool()).unwrap();
                 let loss = out[0].scalar().unwrap();
                 assert!(loss.is_finite(), "{attn:?} step {step}");
                 if step == 0 {
@@ -669,7 +684,7 @@ mod tests {
             vec![5; cfg.batch * cfg.n_ctx],
         )
         .unwrap();
-        let lg = logits(&cfg, &s[..cfg.n_params()], &toks).unwrap();
+        let lg = logits(&cfg, &s[..cfg.n_params()], &toks, &pool()).unwrap();
         assert_eq!(lg.shape(), &[cfg.batch, cfg.n_ctx, cfg.vocab]);
         assert!(lg.as_f32().unwrap().iter().all(|x| x.is_finite()));
     }
@@ -691,6 +706,6 @@ mod tests {
         let mut data = vec![0i32; cfg.batch * (cfg.n_ctx + 1)];
         data[3] = cfg.vocab as i32; // one past the end
         let toks = Tensor::i32(vec![cfg.batch, cfg.n_ctx + 1], data).unwrap();
-        assert!(eval_loss(&cfg, &s[..cfg.n_params()], &toks).is_err());
+        assert!(eval_loss(&cfg, &s[..cfg.n_params()], &toks, &pool()).is_err());
     }
 }

@@ -1,0 +1,349 @@
+//! A tiny scoped thread pool — `std::thread` only, no rayon.
+//!
+//! Every native kernel is embarrassingly parallel across the folded
+//! batch×heads (`BH`) dimension (and, for the chunkwise form, across
+//! `(bh, chunk)` tiles once the per-chunk states are materialized). The pool
+//! turns that structure into wall-clock speedup with three primitives:
+//!
+//! - [`ThreadPool::run`] — indexed tasks drained from a shared atomic counter;
+//! - [`ThreadPool::run_chunks`] / [`ThreadPool::run_chunks3`] — safe
+//!   fixed-stride windows of one (or three) output buffers, distributed as
+//!   contiguous stripes;
+//! - [`ThreadPool::run_stripes`] — contiguous row-block partition for the
+//!   dense GEMM wrappers.
+//!
+//! Task decomposition is *independent of the worker count*: task `i` always
+//! performs the same arithmetic, so kernel results do not depend on
+//! `RUST_PALLAS_THREADS` — bitwise on the default build; within last-bit FMA
+//! rounding under `--features simd`, where stripe boundaries move rows
+//! between the fused and scalar tile paths (the invariance test pins 1e-5).
+//! Workers are spawned per call via [`std::thread::scope`]; at kernel
+//! granularity (≥ 100 µs of work per call) the ~10 µs spawn cost is noise,
+//! and scoped spawning keeps the pool free of `unsafe` lifetime erasure.
+
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Worker-count handle. Cheap to copy; holds no threads between calls.
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with an explicit worker count (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// Pool sized from `RUST_PALLAS_THREADS`; `0`, unset, or unparseable
+    /// means auto-detect ([`std::thread::available_parallelism`]).
+    pub fn from_env() -> Self {
+        let n = std::env::var("RUST_PALLAS_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .unwrap_or(0);
+        if n == 0 {
+            Self::new(Self::available())
+        } else {
+            Self::new(n)
+        }
+    }
+
+    /// Host parallelism (1 if undetectable).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// The process-wide pool, sized once from the environment.
+    pub fn global() -> &'static ThreadPool {
+        static POOL: OnceLock<ThreadPool> = OnceLock::new();
+        POOL.get_or_init(ThreadPool::from_env)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0) … f(tasks-1)`, drained from a shared counter across the
+    /// pool. Tasks must touch disjoint data (or only `&` data).
+    pub fn run<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let workers = self.threads.min(tasks);
+        if workers <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 1..workers {
+                s.spawn(|| drain(&next, tasks, &f));
+            }
+            drain(&next, tasks, &f);
+        });
+    }
+
+    /// Split `buf` into `buf.len() / chunk` consecutive windows of `chunk`
+    /// elements and run `f(window_index, window)` for each, in parallel.
+    /// `buf.len()` must be a multiple of `chunk`.
+    pub fn run_chunks<F>(&self, buf: &mut [f32], chunk: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        if buf.is_empty() {
+            return;
+        }
+        debug_assert!(chunk > 0 && buf.len() % chunk == 0);
+        let tasks = buf.len() / chunk;
+        let workers = self.threads.min(tasks);
+        if workers <= 1 {
+            for (i, w) in buf.chunks_mut(chunk).enumerate() {
+                f(i, w);
+            }
+            return;
+        }
+        let per = tasks.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (slab_i, slab) in buf.chunks_mut(per * chunk).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, w) in slab.chunks_mut(chunk).enumerate() {
+                        f(slab_i * per + j, w);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Three-buffer variant of [`run_chunks`](Self::run_chunks): window `i`
+    /// of each buffer is handed to the same task (the kernel backward passes
+    /// write `dq`/`dk`/`dv` for one `bh` slice together).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_chunks3<F>(
+        &self,
+        a: &mut [f32],
+        ca: usize,
+        b: &mut [f32],
+        cb: usize,
+        c: &mut [f32],
+        cc: usize,
+        f: F,
+    ) where
+        F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+    {
+        if a.is_empty() && b.is_empty() && c.is_empty() {
+            return;
+        }
+        // hard asserts: a silent length mismatch would skip trailing windows
+        assert!(ca > 0 && cb > 0 && cc > 0, "run_chunks3: zero stride");
+        let tasks = a.len() / ca;
+        assert!(
+            a.len() == tasks * ca && b.len() == tasks * cb && c.len() == tasks * cc,
+            "run_chunks3: buffers disagree on task count ({} / {} / {} windows)",
+            a.len() / ca,
+            b.len() / cb,
+            c.len() / cc,
+        );
+        let workers = self.threads.min(tasks);
+        if workers <= 1 {
+            for i in 0..tasks {
+                f(i, &mut a[i * ca..][..ca], &mut b[i * cb..][..cb], &mut c[i * cc..][..cc]);
+            }
+            return;
+        }
+        let per = tasks.div_ceil(workers);
+        std::thread::scope(|s| {
+            let mut ia = a.chunks_mut(per * ca);
+            let mut ib = b.chunks_mut(per * cb);
+            let mut ic = c.chunks_mut(per * cc);
+            let mut base = 0usize;
+            while let (Some(sa), Some(sb), Some(sc)) = (ia.next(), ib.next(), ic.next()) {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, ((wa, wb), wc)) in sa
+                        .chunks_mut(ca)
+                        .zip(sb.chunks_mut(cb))
+                        .zip(sc.chunks_mut(cc))
+                        .enumerate()
+                    {
+                        f(base + j, wa, wb, wc);
+                    }
+                });
+                base += per;
+            }
+        });
+    }
+
+    /// Partition `buf` (rows of `row` elements) into at most `threads`
+    /// contiguous row stripes and run `f(first_row, stripe)` per stripe —
+    /// the row-parallel GEMM entry point.
+    pub fn run_stripes<F>(&self, buf: &mut [f32], row: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        if buf.is_empty() {
+            return;
+        }
+        debug_assert!(row > 0 && buf.len() % row == 0);
+        let rows = buf.len() / row;
+        let workers = self.threads.min(rows);
+        if workers <= 1 {
+            if !buf.is_empty() {
+                f(0, buf);
+            }
+            return;
+        }
+        let per = rows.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (i, stripe) in buf.chunks_mut(per * row).enumerate() {
+                let f = &f;
+                s.spawn(move || f(i * per, stripe));
+            }
+        });
+    }
+}
+
+fn drain<F: Fn(usize) + Sync>(next: &AtomicUsize, tasks: usize, f: &F) {
+    loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= tasks {
+            return;
+        }
+        f(i);
+    }
+}
+
+/// Shared view over one mutable buffer for tasks that write disjoint windows
+/// at non-uniform offsets (the per-`(bh, chunk)` output tiles, whose last
+/// chunk may be ragged). The [`run_chunks`](ThreadPool::run_chunks) family
+/// covers the uniform-stride cases safely; this is the escape hatch.
+pub struct SliceParts<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _life: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: windows handed out by `window` are required (by its contract) to be
+// disjoint across concurrent tasks, so sharing the base pointer is sound.
+unsafe impl Send for SliceParts<'_> {}
+unsafe impl Sync for SliceParts<'_> {}
+
+impl<'a> SliceParts<'a> {
+    pub fn new(buf: &'a mut [f32]) -> Self {
+        Self { ptr: buf.as_mut_ptr(), len: buf.len(), _life: PhantomData }
+    }
+
+    /// Window `[offset, offset + len)` of the underlying buffer.
+    ///
+    /// # Safety
+    /// Concurrent callers must take non-overlapping windows. Bounds are
+    /// checked; disjointness is the caller's contract (one window per task
+    /// index, as in the kernel tilings).
+    pub unsafe fn window(&self, offset: usize, len: usize) -> &mut [f32] {
+        assert!(
+            offset.checked_add(len).is_some_and(|end| end <= self.len),
+            "SliceParts window [{offset}, {offset}+{len}) out of bounds (len {})",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn run_visits_every_task_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU32> = (0..37).map(|_| AtomicU32::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn run_chunks_covers_buffer_with_correct_indices() {
+        for threads in [1, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let mut buf = vec![0.0f32; 6 * 4];
+            pool.run_chunks(&mut buf, 4, |i, w| {
+                for x in w.iter_mut() {
+                    *x = i as f32 + 1.0;
+                }
+            });
+            for (i, x) in buf.iter().enumerate() {
+                assert_eq!(*x, (i / 4) as f32 + 1.0, "elem {i} (threads {threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks3_zips_windows_of_different_strides() {
+        let pool = ThreadPool::new(3);
+        let (ca, cb, cc) = (2, 3, 5);
+        let tasks = 7;
+        let mut a = vec![0.0f32; tasks * ca];
+        let mut b = vec![0.0f32; tasks * cb];
+        let mut c = vec![0.0f32; tasks * cc];
+        pool.run_chunks3(&mut a, ca, &mut b, cb, &mut c, cc, |i, wa, wb, wc| {
+            assert_eq!((wa.len(), wb.len(), wc.len()), (ca, cb, cc));
+            wa.fill(i as f32);
+            wb.fill(i as f32 + 0.25);
+            wc.fill(i as f32 + 0.5);
+        });
+        for i in 0..tasks {
+            assert!(a[i * ca..][..ca].iter().all(|&x| x == i as f32));
+            assert!(b[i * cb..][..cb].iter().all(|&x| x == i as f32 + 0.25));
+            assert!(c[i * cc..][..cc].iter().all(|&x| x == i as f32 + 0.5));
+        }
+    }
+
+    #[test]
+    fn run_stripes_partitions_rows() {
+        let pool = ThreadPool::new(3);
+        let mut buf = vec![0.0f32; 10 * 2];
+        pool.run_stripes(&mut buf, 2, |first_row, stripe| {
+            for (j, row) in stripe.chunks_mut(2).enumerate() {
+                row.fill((first_row + j) as f32);
+            }
+        });
+        for (r, row) in buf.chunks(2).enumerate() {
+            assert!(row.iter().all(|&x| x == r as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn slice_parts_disjoint_windows() {
+        let pool = ThreadPool::new(4);
+        let mut buf = vec![0.0f32; 23];
+        // ragged windows: 6, 6, 6, 5
+        let bounds = [(0usize, 6usize), (6, 6), (12, 6), (18, 5)];
+        let parts = SliceParts::new(&mut buf);
+        pool.run(bounds.len(), |i| {
+            let (off, len) = bounds[i];
+            let w = unsafe { parts.window(off, len) };
+            w.fill(i as f32 + 1.0);
+        });
+        assert!(buf[..6].iter().all(|&x| x == 1.0));
+        assert!(buf[18..].iter().all(|&x| x == 4.0));
+    }
+
+    #[test]
+    fn env_zero_means_auto() {
+        // Constructors only — reading the real env var here would race other
+        // tests; from_env parsing of "0"/garbage is covered by the clamp.
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        assert!(ThreadPool::available() >= 1);
+        assert!(ThreadPool::global().threads() >= 1);
+    }
+}

@@ -6,6 +6,7 @@ use repro::native::kernels::{
     la_chunk_bwd, la_chunk_fwd, la_quadratic_bwd, la_quadratic_fwd, la_scan_bwd, la_scan_fwd,
     LayerShape,
 };
+use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;
 
 fn flat_randn(n: usize, seed: u64) -> Vec<f32> {
@@ -44,12 +45,13 @@ const TOL: f32 = 1e-4;
 
 #[test]
 fn ours_forward_matches_quadratic_reference() {
+    let pool = ThreadPool::global();
     for (n, d) in PARITY_SHAPES {
         let sh = LayerShape::cube(2, n, d);
         let (q, k, v, _go) = layer_inputs(sh, 0xA0 + n as u64);
-        let reference = la_quadratic_fwd(&q, &k, &v, sh);
-        let scan = la_scan_fwd(&q, &k, &v, sh, 1.0);
-        let chunk = la_chunk_fwd(&q, &k, &v, sh, 64);
+        let reference = la_quadratic_fwd(pool, &q, &k, &v, sh);
+        let scan = la_scan_fwd(pool, &q, &k, &v, sh, 1.0);
+        let chunk = la_chunk_fwd(pool, &q, &k, &v, sh, 64);
         assert!(
             max_abs_diff(&scan, &reference) < TOL,
             "scan fwd (N={n}, D={d}): {}",
@@ -65,12 +67,13 @@ fn ours_forward_matches_quadratic_reference() {
 
 #[test]
 fn ours_backward_matches_quadratic_reference() {
+    let pool = ThreadPool::global();
     for (n, d) in PARITY_SHAPES {
         let sh = LayerShape::cube(2, n, d);
         let (q, k, v, go) = layer_inputs(sh, 0xB0 + n as u64);
-        let (rq, rk, rv) = la_quadratic_bwd(&q, &k, &v, &go, sh);
-        let (sq, sk, sv) = la_scan_bwd(&q, &k, &v, &go, sh, 1.0);
-        let (cq, ck, cv) = la_chunk_bwd(&q, &k, &v, &go, sh, 64);
+        let (rq, rk, rv) = la_quadratic_bwd(pool, &q, &k, &v, &go, sh);
+        let (sq, sk, sv) = la_scan_bwd(pool, &q, &k, &v, &go, sh, 1.0);
+        let (cq, ck, cv) = la_chunk_bwd(pool, &q, &k, &v, &go, sh, 64);
         for (name, got, want) in [
             ("scan dq", &sq, &rq),
             ("scan dk", &sk, &rk),
