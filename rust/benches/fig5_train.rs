@@ -1,58 +1,32 @@
-//! Fig 5 (bench form): per-step training wall-clock for each attention
-//! implementation on the tiny LM — the end-to-end speedup comparison.
+//! Fig 5 (bench form): per-step training wall-clock and loss movement for
+//! each attention implementation on both LM presets — the end-to-end
+//! comparison on the shallow (tiny) and deep (small) models, via the shared
+//! [`repro::bench::lm`] measurement helper and table emitter.
 //! (The full learning curves come from `examples/train_lm.rs`.)
 
 mod common;
 
-use std::time::Instant;
-
-use repro::coordinator::config::{DataSection, OutputSection, TrainSection};
-use repro::coordinator::{RunConfig, Trainer};
+use repro::bench::lm::{build_preset_dataset, measure_lm};
+use repro::bench::report::bench_lm_markdown;
 use repro::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::discover()?;
-    let steps = if common::quick_mode() { 4 } else { 10 };
-    println!("| attn | preset | step p50 | tok/s |");
-    println!("|---|---|---|---|");
-    for attn in ["ours", "gated", "softmax"] {
-        let cfg = RunConfig {
-            train: TrainSection {
-                preset: "tiny".into(),
-                attn: attn.into(),
-                steps,
-                eval_every: 0,
-                ckpt_every: 0,
-                seed: 0,
-            },
-            data: DataSection { corpus_bytes: 1 << 20, val_frac: 0.05 },
-            output: OutputSection { dir: "bench_out/fig5_runs".into() },
+    let mut points = Vec::new();
+    for preset in ["tiny", "small"] {
+        // the deep preset costs ~10× per step — fewer steps keep the bench bounded
+        let steps = match (preset, common::quick_mode()) {
+            ("tiny", true) => 4,
+            ("tiny", false) => 10,
+            (_, true) => 3,
+            (_, false) => 6,
         };
-        let trainer = Trainer::new(&engine, cfg)?;
-        let (_tok, ds) = trainer.build_dataset()?;
-        let mut batcher = repro::data::Batcher::new(
-            &ds,
-            repro::data::Split::Train,
-            trainer.batch_size(),
-            0,
-        )?;
-        let mut state = trainer.init_state()?;
-        let mut times = Vec::new();
-        for step in 0..steps {
-            let batch = batcher.next_batch()?;
-            let t0 = Instant::now();
-            let (_loss, new_state) = trainer.step(state, &batch, step)?;
-            times.push(t0.elapsed().as_secs_f64());
-            state = new_state;
+        let ds = build_preset_dataset(&engine, preset)?;
+        for attn in ["ours", "gated", "softmax"] {
+            eprintln!("fig5: {preset}/{attn} ({steps} steps) …");
+            points.push(measure_lm(&engine, preset, attn, steps, &ds)?);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let p50 = times[times.len() / 2];
-        let tokens = trainer.batch_size() * (trainer.seq_len() + 1);
-        println!(
-            "| {attn} | tiny | {:.1} ms | {:.0} |",
-            p50 * 1e3,
-            tokens as f64 / p50
-        );
     }
+    println!("{}", bench_lm_markdown(&points));
     Ok(())
 }

@@ -1,0 +1,87 @@
+//! End-to-end LM training measurement shared by `repro bench-native` and the
+//! fig5 bench harness: median per-step wall-clock plus the loss endpoints of
+//! a short run — the deep-model `ours` vs `softmax` cost/convergence
+//! comparison in one reusable piece.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::config::{DataSection, OutputSection, TrainSection};
+use crate::coordinator::{RunConfig, Trainer};
+use crate::data::{Batcher, PackedDataset, Split};
+use crate::runtime::Engine;
+
+use super::report::LmBenchPoint;
+
+/// Corpus size every LM bench trains on.
+pub const BENCH_CORPUS_BYTES: usize = 1 << 20;
+
+fn run_config(preset: &str, attn: &str, steps: usize) -> RunConfig {
+    RunConfig {
+        train: TrainSection {
+            preset: preset.to_string(),
+            attn: attn.to_string(),
+            steps,
+            eval_every: 0,
+            ckpt_every: 0,
+            seed: 0,
+        },
+        data: DataSection { corpus_bytes: BENCH_CORPUS_BYTES, val_frac: 0.05 },
+        output: OutputSection { dir: "bench_out/lm".to_string() },
+    }
+}
+
+/// Build the packed dataset for one preset once — it depends only on the
+/// preset's tokenizer contract and the seed, not on the attention variant,
+/// so benching `ours` vs `softmax` must not pay corpus generation (or, for
+/// BPE presets, merge training) twice.
+pub fn build_preset_dataset(engine: &Engine, preset: &str) -> Result<PackedDataset> {
+    let trainer = Trainer::new(engine, run_config(preset, "ours", 1))?;
+    let (_tok, ds) = trainer.build_dataset()?;
+    Ok(ds)
+}
+
+/// Time `steps` optimizer steps of one (preset, attn) pair on a prebuilt
+/// dataset; returns the measured point for reports.
+pub fn measure_lm(
+    engine: &Engine,
+    preset: &str,
+    attn: &str,
+    steps: usize,
+    ds: &PackedDataset,
+) -> Result<LmBenchPoint> {
+    ensure!(steps > 0, "measure_lm needs at least one step");
+    let trainer = Trainer::new(engine, run_config(preset, attn, steps))?;
+    eprintln!("  {}", trainer.model_summary());
+    let mut batcher = Batcher::new(ds, Split::Train, trainer.batch_size(), 0)?;
+    let mut state = trainer.init_state()?;
+    let mut times = Vec::with_capacity(steps);
+    let mut loss_first = f32::NAN;
+    let mut loss_last = f32::NAN;
+    for step in 0..steps {
+        let batch = batcher.next_batch()?;
+        let t0 = Instant::now();
+        let (loss, new_state) = trainer.step(state, &batch, step)?;
+        times.push(t0.elapsed().as_secs_f64());
+        state = new_state;
+        if step == 0 {
+            loss_first = loss;
+        }
+        loss_last = loss;
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(LmBenchPoint {
+        preset: preset.to_string(),
+        attn: attn.to_string(),
+        n_layer: trainer.model_field("n_layer").unwrap_or(1),
+        n_head: trainer.model_field("n_head").unwrap_or(1),
+        d_model: trainer.model_field("d_model").unwrap_or(0),
+        n_params: trainer.n_params(),
+        steps,
+        tokens_per_step: trainer.batch_size() * (trainer.seq_len() + 1),
+        step_s_p50: times[times.len() / 2],
+        loss_first,
+        loss_last,
+    })
+}

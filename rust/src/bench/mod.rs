@@ -3,6 +3,8 @@
 //! - [`timing`] — explicit warmup + trimmed-mean / percentile (p10/p50/p90)
 //!   measurement of artifact execution;
 //! - [`sweep`] — drive the per-(impl, N, D) layer artifacts (Figs 2-3, Table 1);
+//! - [`lm`] — end-to-end LM per-step training measurement (Fig 5 in bench
+//!   form, shared by `repro bench-native` and `benches/fig5_train`);
 //! - [`report`] — markdown/CSV emitters matching the paper's rows and series,
 //!   plus the `BENCH_native.json` perf-trajectory artifact (parallel/tiled
 //!   kernels vs the scalar single-thread reference — see `repro bench-native`).
@@ -11,6 +13,7 @@
 //! cannot observe GPU residency, but the per-implementation formulas are
 //! exact element counts of each algorithm's live buffers.
 
+pub mod lm;
 pub mod report;
 pub mod sweep;
 pub mod timing;

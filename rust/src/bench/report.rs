@@ -57,13 +57,34 @@ pub fn sweep_csv(points: &[SweepPoint]) -> String {
     out
 }
 
+/// One measured LM training point of the `bench-native` end-to-end section:
+/// per-step wall-clock plus the loss trajectory endpoints of a short run on
+/// one (preset, attn) pair — Fig 5 in bench form, on the deep model.
+#[derive(Debug, Clone)]
+pub struct LmBenchPoint {
+    pub preset: String,
+    pub attn: String,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    /// True scalar parameter count (from the artifact manifest).
+    pub n_params: u64,
+    pub steps: usize,
+    pub tokens_per_step: usize,
+    pub step_s_p50: f64,
+    pub loss_first: f32,
+    pub loss_last: f32,
+}
+
 /// Machine-readable perf trajectory artifact (`BENCH_native.json`): one entry
 /// per artifact measured on the parallel/tiled path, joined with the scalar
-/// single-thread reference baseline for the speedup column. Times are
-/// nanoseconds (median plus p10/p90 spread).
+/// single-thread reference baseline for the speedup column, plus the LM
+/// per-step section (`lm`). Times are nanoseconds (median plus p10/p90
+/// spread) for kernels, seconds for LM steps.
 pub fn bench_native_json(
     parallel: &[SweepPoint],
     scalar: &[SweepPoint],
+    lm: &[LmBenchPoint],
     threads: usize,
     chunk: usize,
 ) -> String {
@@ -91,13 +112,57 @@ pub fn bench_native_json(
             Json::obj(fields)
         })
         .collect();
+    let lm_arts: Vec<Json> = lm
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("preset", Json::str(p.preset.clone())),
+                ("attn", Json::str(p.attn.clone())),
+                ("n_layer", Json::num(p.n_layer as f64)),
+                ("n_head", Json::num(p.n_head as f64)),
+                ("d_model", Json::num(p.d_model as f64)),
+                ("n_params", Json::num(p.n_params as f64)),
+                ("steps", Json::num(p.steps as f64)),
+                ("tokens_per_step", Json::num(p.tokens_per_step as f64)),
+                ("step_s_p50", Json::num(p.step_s_p50)),
+                ("tokens_per_s", Json::num(p.tokens_per_step as f64 / p.step_s_p50.max(1e-12))),
+                ("loss_first", Json::num(p.loss_first as f64)),
+                ("loss_last", Json::num(p.loss_last as f64)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
-        ("schema", Json::str("bench_native/v1")),
+        ("schema", Json::str("bench_native/v2")),
         ("threads", Json::num(threads as f64)),
         ("chunk", Json::num(chunk as f64)),
         ("artifacts", Json::Arr(arts)),
+        ("lm", Json::Arr(lm_arts)),
     ])
     .to_string()
+}
+
+/// Human-readable companion of the LM section of [`bench_native_json`].
+pub fn bench_lm_markdown(lm: &[LmBenchPoint]) -> String {
+    let mut out = String::from(
+        "| preset | attn | layers×heads | params | step p50 | tok/s | loss (first→last) |\n\
+         |---|---|---|---|---|---|---|\n",
+    );
+    for p in lm {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {}×{} | {} | {} | {:.0} | {:.4} → {:.4} |",
+            p.preset,
+            p.attn,
+            p.n_layer,
+            p.n_head,
+            p.n_params,
+            fmt_time(p.step_s_p50),
+            p.tokens_per_step as f64 / p.step_s_p50.max(1e-12),
+            p.loss_first,
+            p.loss_last,
+        );
+    }
+    out
 }
 
 /// Human-readable companion of [`bench_native_json`].
@@ -275,9 +340,22 @@ mod tests {
         };
         let par = vec![point("layer_ours_fwd_n1024_d128", 0.010)];
         let base = vec![point("layer_ours_fwd_n1024_d128", 0.040)];
-        let text = bench_native_json(&par, &base, 4, 128);
+        let lm = vec![LmBenchPoint {
+            preset: "small".into(),
+            attn: "ours".into(),
+            n_layer: 4,
+            n_head: 4,
+            d_model: 128,
+            n_params: 934_016,
+            steps: 6,
+            tokens_per_step: 1032,
+            step_s_p50: 0.5,
+            loss_first: 6.2,
+            loss_last: 5.9,
+        }];
+        let text = bench_native_json(&par, &base, &lm, 4, 128);
         let v = Json::parse(&text).unwrap();
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v1"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v2"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
         let arts = v.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
@@ -286,8 +364,15 @@ mod tests {
         let speedup = a.get("speedup_vs_scalar").unwrap().as_f64().unwrap();
         assert!((speedup - 4.0).abs() < 1e-6, "speedup {speedup}");
         assert!((a.get("median_ns").unwrap().as_f64().unwrap() - 1e7).abs() < 1.0);
+        let lms = v.get("lm").unwrap().as_arr().unwrap();
+        assert_eq!(lms.len(), 1);
+        assert_eq!(lms[0].get("preset").unwrap().as_str(), Some("small"));
+        assert_eq!(lms[0].get("n_params").unwrap().as_usize(), Some(934_016));
+        assert!((lms[0].get("tokens_per_s").unwrap().as_f64().unwrap() - 2064.0).abs() < 1.0);
         let md = bench_native_markdown(&par, &base);
         assert!(md.contains("4.00×"), "markdown:\n{md}");
+        let lmd = bench_lm_markdown(&lm);
+        assert!(lmd.contains("small") && lmd.contains("4×4"), "lm markdown:\n{lmd}");
     }
 
     #[test]

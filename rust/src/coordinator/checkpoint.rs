@@ -16,6 +16,14 @@ use crate::runtime::Tensor;
 
 const MAGIC: &[u8; 8] = b"RPRCKPT1";
 
+/// Version of the *parameter layout* inside the state vector. v1 is the
+/// pre-refactor hand-unrolled single-layer model (8 flat arrays); v2 is the
+/// block-structured Transformer (layer-indexed arrays, LayerNorm + MLP
+/// parameters interleaved per block). Checkpoints written before the header
+/// existed parse as v1 — loading them into a v2 trainer is rejected, never
+/// silently misinterpreted.
+pub const PARAM_LAYOUT_VERSION: u32 = 2;
+
 /// Run metadata stored alongside the tensors.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheckpointMeta {
@@ -23,6 +31,8 @@ pub struct CheckpointMeta {
     pub step: usize,
     pub loss: f32,
     pub seed: u64,
+    /// Parameter-layout version the state vector was written under.
+    pub layout: u32,
 }
 
 impl CheckpointMeta {
@@ -34,6 +44,7 @@ impl CheckpointMeta {
             // u64 doesn't survive a JSON f64 round-trip above 2^53 — store
             // the seed as a decimal string (found by prop_coordinator).
             ("seed", Json::str(self.seed.to_string())),
+            ("layout", Json::num(self.layout as f64)),
         ])
     }
 
@@ -50,7 +61,25 @@ impl CheckpointMeta {
                 Json::Str(s) => s.parse().map_err(|_| anyhow!("bad seed"))?,
                 other => other.as_f64().ok_or_else(|| anyhow!("bad seed"))? as u64,
             },
+            // absent in checkpoints written before the versioned header
+            layout: v.get("layout").and_then(Json::as_usize).unwrap_or(1) as u32,
         })
+    }
+
+    /// Fails unless the checkpoint was written under the current parameter
+    /// layout — the guard every state-consuming path goes through.
+    pub fn require_current_layout(&self) -> Result<()> {
+        if self.layout != PARAM_LAYOUT_VERSION {
+            bail!(
+                "checkpoint {:?} uses parameter layout v{} but this build expects v{}; \
+                 pre-refactor checkpoints cannot be reinterpreted — re-train, or evaluate \
+                 with the binary that wrote them",
+                self.artifact_tag,
+                self.layout,
+                PARAM_LAYOUT_VERSION
+            );
+        }
+        Ok(())
     }
 }
 
@@ -166,6 +195,7 @@ mod tests {
                 step: 42,
                 loss: 3.25,
                 seed: 7,
+                layout: PARAM_LAYOUT_VERSION,
             },
             state: vec![
                 Tensor::randn(vec![4, 8], 1),
@@ -185,6 +215,21 @@ mod tests {
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back.meta, ck.meta);
         assert_eq!(back.state, ck.state);
+    }
+
+    #[test]
+    fn layout_guard_rejects_pre_refactor_checkpoints() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("old_layout.ckpt");
+        let mut ck = sample();
+        ck.meta.layout = 1; // what a pre-header checkpoint parses as
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.meta.layout, 1);
+        let err = back.meta.require_current_layout().unwrap_err().to_string();
+        assert!(err.contains("layout v1"), "unhelpful error: {err}");
+        assert!(sample().meta.require_current_layout().is_ok());
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::data::{Batcher, ByteTokenizer, CorpusConfig, CorpusGenerator, PackedDataset, Split};
 use crate::runtime::{Engine, Executable, Tensor};
 
-use super::checkpoint::{Checkpoint, CheckpointMeta};
+use super::checkpoint::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
 use super::config::RunConfig;
 use super::metrics::{MetricsLog, StepRecord};
 use super::schedule::CosineSchedule;
@@ -86,6 +86,37 @@ impl<'e> Trainer<'e> {
         self.step_exe.meta.model_field_usize("vocab_size").unwrap_or(256)
     }
 
+    /// True scalar parameter count baked into the artifact (0 if the
+    /// manifest predates the field).
+    pub fn n_params(&self) -> u64 {
+        self.step_exe.meta.n_params.unwrap_or(0)
+    }
+
+    pub fn n_param_arrays(&self) -> usize {
+        self.n_param_arrays
+    }
+
+    /// Model-section field of the train-step artifact (n_layer, n_head, …).
+    pub fn model_field(&self, key: &str) -> Option<usize> {
+        self.step_exe.meta.model_field_usize(key)
+    }
+
+    /// One-line model summary (parameter count, depth, heads) for startup
+    /// logs and bench manifests.
+    pub fn model_summary(&self) -> String {
+        let meta = &self.step_exe.meta;
+        format!(
+            "{}: {} params in {} arrays ({} layers × {} heads, d_model {}, vocab {})",
+            self.cfg.artifact_tag(),
+            self.n_params(),
+            self.n_param_arrays,
+            meta.model_field_usize("n_layer").unwrap_or(1),
+            meta.model_field_usize("n_head").unwrap_or(1),
+            meta.model_field_usize("d_model").unwrap_or(0),
+            self.vocab_size(),
+        )
+    }
+
     pub fn batch_size(&self) -> usize {
         self.batch
     }
@@ -129,6 +160,7 @@ impl<'e> Trainer<'e> {
     /// Run the configured number of steps; writes metrics + checkpoints into
     /// `<output.dir>/<tag>/`.
     pub fn run(&self) -> Result<TrainOutcome> {
+        eprintln!("model {}", self.model_summary());
         let (_tok, ds) = self.build_dataset()?;
         let mut batcher = Batcher::new(&ds, Split::Train, self.batch, self.cfg.train.seed)?;
         let mut val_batcher = Batcher::new(&ds, Split::Val, self.batch, self.cfg.train.seed)
@@ -237,13 +269,17 @@ impl<'e> Trainer<'e> {
                 step,
                 loss,
                 seed: self.cfg.train.seed,
+                layout: PARAM_LAYOUT_VERSION,
             },
             state: state.to_vec(),
         }
         .save(path)
     }
 
-    /// Restore a checkpoint into trainer state (resume support).
+    /// Restore a checkpoint into trainer state (resume support). Rejects
+    /// checkpoints from a different artifact, an older parameter layout, or
+    /// with state tensors that don't match the train-step contract — a
+    /// mismatched state must never be silently fed to the optimizer.
     pub fn restore(&self, ckpt: &Checkpoint) -> Result<Vec<Tensor>> {
         if ckpt.meta.artifact_tag != self.cfg.artifact_tag() {
             bail!(
@@ -251,6 +287,27 @@ impl<'e> Trainer<'e> {
                 ckpt.meta.artifact_tag,
                 self.cfg.artifact_tag()
             );
+        }
+        ckpt.meta.require_current_layout()?;
+        // the train-step artifact's leading inputs are exactly the state
+        let specs = &self.step_exe.meta.inputs;
+        let n_state = 3 * self.n_param_arrays;
+        if ckpt.state.len() != n_state {
+            bail!(
+                "checkpoint carries {} state arrays, artifact {:?} wants {}",
+                ckpt.state.len(),
+                self.cfg.artifact_tag(),
+                n_state
+            );
+        }
+        for (i, (t, spec)) in ckpt.state.iter().zip(specs).enumerate() {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "checkpoint state array {i} has shape {:?}, artifact wants {:?}",
+                    t.shape(),
+                    spec.shape
+                );
+            }
         }
         Ok(ckpt.state.clone())
     }

@@ -34,9 +34,12 @@ SUBCOMMANDS
                  [--warmup 2] [--csv out.csv]
   bench-native   [--kinds layer_fwd,layer_fwdbwd] [--impls ours,ours_scan]
                  [--reps 5] [--warmup 2] [--max-n 0] [--out BENCH_native.json]
+                 [--lm-presets tiny,small] [--lm-attns ours,softmax]
+                 [--lm-steps 6]
                  measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
-                 against the scalar single-thread reference and writes the
-                 machine-readable speedup artifact
+                 against the scalar single-thread reference, plus per-step
+                 LM training cost/loss for each (preset, attn) pair, and
+                 writes the machine-readable speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   report         [--runs runs]
@@ -127,7 +130,8 @@ fn cmd_bench_layer(args: &Args) -> Result<()> {
 
 /// Measure every requested sweep artifact twice — once on the parallel/tiled
 /// kernels (pool from `RUST_PALLAS_THREADS`), once on the scalar
-/// single-thread reference — and write the joined speedup report as
+/// single-thread reference — plus the LM per-step training cost of each
+/// requested (preset, attn) pair, and write the joined report as
 /// `BENCH_native.json`, so every perf PR leaves a trajectory artifact.
 fn cmd_bench_native(args: &Args) -> Result<()> {
     use repro::native::pool::ThreadPool;
@@ -137,20 +141,16 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     let reps = args.get_usize("reps", 5)?;
     let warmup = args.get_usize("warmup", 2)?;
     let max_n = args.get_usize("max-n", 0)?; // 0 = uncapped
-    let kinds: Vec<String> = args
-        .get_or("kinds", "layer_fwd")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
-    let impls: Vec<String> = args
-        .get_or("impls", "ours,ours_scan")
-        .split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect();
+    let split_list = |s: &str| -> Vec<String> {
+        s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect()
+    };
+    let kinds = split_list(args.get_or("kinds", "layer_fwd"));
+    let impls = split_list(args.get_or("impls", "ours,ours_scan"));
+    let lm_presets = split_list(args.get_or("lm-presets", "tiny,small"));
+    let lm_attns = split_list(args.get_or("lm-attns", "ours,softmax"));
+    let lm_steps = args.get_usize("lm-steps", 6)?;
 
-    let threads = ThreadPool::from_env().threads();
+    let threads = ThreadPool::env_threads();
     let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
     let ref_engine = Engine::with_backend(Box::new(NativeBackend::scalar_reference()))?;
     let mut par_runner = SweepRunner::new(&par_engine);
@@ -174,8 +174,36 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
         }
     }
 
+    let mut lm_points = Vec::new();
+    if lm_steps > 0 {
+        for preset in &lm_presets {
+            // corpus + (for BPE presets) merge training depend only on the
+            // preset — build once, share across the attention variants
+            let ds = repro::bench::lm::build_preset_dataset(&par_engine, preset)?;
+            for attn in &lm_attns {
+                eprintln!("bench-native: lm {preset}/{attn} ({lm_steps} steps) …");
+                lm_points.push(repro::bench::lm::measure_lm(
+                    &par_engine,
+                    preset,
+                    attn,
+                    lm_steps,
+                    &ds,
+                )?);
+            }
+        }
+    }
+
     println!("{}", rpt::bench_native_markdown(&parallel, &scalar));
-    let json = rpt::bench_native_json(&parallel, &scalar, threads, repro::native::ours_chunk());
+    if !lm_points.is_empty() {
+        println!("{}", rpt::bench_lm_markdown(&lm_points));
+    }
+    let json = rpt::bench_native_json(
+        &parallel,
+        &scalar,
+        &lm_points,
+        threads,
+        repro::native::ours_chunk(),
+    );
     std::fs::write(&out_path, &json)?;
     eprintln!("wrote {out_path}");
     Ok(())
@@ -212,6 +240,7 @@ fn cmd_eval_tasks(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0)?;
     let engine = Engine::discover()?;
     let ck = Checkpoint::load(ckpt_path)?;
+    ck.meta.require_current_layout()?;
     let logits_artifact = format!("{}_logits", ck.meta.artifact_tag);
     println!(
         "| task | accuracy | correct/positions | ckpt |",

@@ -7,12 +7,13 @@
 //!   (state scan + chunkwise variants) and the quadratic baselines, parallel
 //!   across B·H (and `(bh, chunk)` tiles) with the scalar originals kept in
 //!   [`kernels::reference`];
-//! - [`pool`] — the dependency-free scoped thread pool (`RUST_PALLAS_THREADS`)
-//!   every executor dispatches on;
+//! - [`pool`] — the dependency-free persistent worker pool
+//!   (`RUST_PALLAS_THREADS`) every executor dispatches on;
 //! - [`gemm`] — the cache-blocked f32 matmul microkernels shared by the
 //!   chunkwise/quadratic kernels and the LM's linear layers;
-//! - [`model`] — the tiny LM (train step / eval / logits / init) with a
-//!   hand-derived backward pass and in-tree Adam;
+//! - [`model`] — the block-structured Transformer LM (train step / eval /
+//!   logits / init; `tiny` and `small` presets) with a hand-derived backward
+//!   pass and in-tree Adam;
 //! - [`NativeBackend`] — the [`Backend`] impl: a code-built [`Manifest`]
 //!   mirroring the AOT artifact naming scheme (`layer_<impl>_<kind>_n<N>_d<D>`,
 //!   `lm_<preset>_<attn>_<op>`, `quickstart_la_*`) and per-artifact executors.
@@ -121,7 +122,7 @@ impl Backend for NativeBackend {
                     imp,
                     grad: meta.kind == "layer_fwdbwd",
                     sh,
-                    pool: self.pool,
+                    pool: self.pool.clone(),
                     reference: self.reference,
                 }))
             }
@@ -132,19 +133,19 @@ impl Backend for NativeBackend {
                          no scalar LM path is preserved ({name})"
                     );
                 }
-                if meta.preset.as_deref() != Some("tiny") {
-                    bail!("native backend only ships the `tiny` LM preset ({name})");
-                }
                 let attn = AttnKind::from_name(
                     meta.attn.as_deref().ok_or_else(|| anyhow!("{name}: missing attn"))?,
                 )?;
+                let preset =
+                    meta.preset.as_deref().ok_or_else(|| anyhow!("{name}: missing preset"))?;
+                let cfg = LmConfig::by_preset(preset, attn)?;
                 let op = match meta.kind.as_str() {
                     "lm_train_step" => LmOp::TrainStep,
                     "lm_eval" => LmOp::Eval,
                     "lm_init" => LmOp::Init,
                     _ => LmOp::Logits,
                 };
-                Ok(Box::new(LmExec { cfg: LmConfig::tiny(attn), op, pool: self.pool }))
+                Ok(Box::new(LmExec { cfg, op, pool: self.pool.clone() }))
             }
             other => bail!("native backend cannot execute artifact kind {other:?} ({name})"),
         }
@@ -255,7 +256,7 @@ struct LmExec {
 
 impl Executor for LmExec {
     fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let np = self.cfg.n_params();
+        let np = self.cfg.n_param_arrays();
         match self.op {
             LmOp::Init => {
                 if inputs.len() != 1 {
@@ -331,7 +332,7 @@ fn layer_meta(kind: &str, imp: &str, bh: usize, n: usize, d: usize, chunk: usize
     }
 }
 
-fn lm_meta(cfg: &LmConfig, attn_name: &str, kind: &str) -> ArtifactMeta {
+fn lm_meta(cfg: &LmConfig, preset: &str, attn_name: &str, kind: &str) -> ArtifactMeta {
     let shapes = cfg.param_shapes();
     let np = shapes.len();
     let state_shapes: Vec<Vec<usize>> = shapes
@@ -377,9 +378,8 @@ fn lm_meta(cfg: &LmConfig, attn_name: &str, kind: &str) -> ArtifactMeta {
             (ins, vec![f32_spec(0, &[cfg.batch, cfg.n_ctx, cfg.vocab])])
         }
     };
-    let n_params_total: u64 = shapes.iter().map(|(_, s)| s.iter().product::<usize>() as u64).sum();
     ArtifactMeta {
-        file: format!("native://lm/tiny/{attn_name}/{kind}"),
+        file: format!("native://lm/{preset}/{attn_name}/{kind}"),
         hash: "native".to_string(),
         kind: kind.to_string(),
         impl_name: None,
@@ -387,17 +387,19 @@ fn lm_meta(cfg: &LmConfig, attn_name: &str, kind: &str) -> ArtifactMeta {
         n: None,
         d: None,
         chunk: None,
-        preset: Some("tiny".to_string()),
+        preset: Some(preset.to_string()),
         attn: Some(attn_name.to_string()),
         batch: Some(cfg.batch),
-        n_params: Some(n_params_total),
+        n_params: Some(cfg.n_params()),
         n_param_arrays: Some(np),
-        param_names: Some(shapes.iter().map(|(n, _)| n.to_string()).collect()),
+        param_names: Some(shapes.iter().map(|(n, _)| n.clone()).collect()),
         model: Some(Json::obj(vec![
             ("n_ctx", Json::num(cfg.n_ctx as f64)),
             ("vocab_size", Json::num(cfg.vocab as f64)),
             ("d_model", Json::num(cfg.d_model as f64)),
-            ("n_head", Json::num(1.0)),
+            ("n_layer", Json::num(cfg.n_layer as f64)),
+            ("n_head", Json::num(cfg.n_head as f64)),
+            ("d_ff", Json::num(cfg.d_ff as f64)),
             ("attn", Json::str(attn_name)),
         ])),
         train: Some(Json::obj(vec![
@@ -456,11 +458,17 @@ pub fn build_manifest() -> Manifest {
         }
     }
 
-    // tiny LM, all three attention variants
-    for attn in ["ours", "gated", "softmax"] {
-        let cfg = LmConfig::tiny(AttnKind::from_name(attn).expect("static attn name"));
-        for kind in ["lm_train_step", "lm_eval", "lm_init", "lm_logits"] {
-            artifacts.insert(format!("lm_tiny_{attn}_{kind}"), lm_meta(&cfg, attn, kind));
+    // the LM presets, all three attention variants
+    for preset in LmConfig::preset_names() {
+        for attn in ["ours", "gated", "softmax"] {
+            let cfg = LmConfig::by_preset(preset, AttnKind::from_name(attn).expect("static"))
+                .expect("static preset name");
+            for kind in ["lm_train_step", "lm_eval", "lm_init", "lm_logits"] {
+                artifacts.insert(
+                    format!("lm_{preset}_{attn}_{kind}"),
+                    lm_meta(&cfg, preset, attn, kind),
+                );
+            }
         }
     }
 
@@ -491,6 +499,10 @@ mod tests {
             "lm_tiny_gated_eval",
             "lm_tiny_softmax_init",
             "lm_tiny_ours_logits",
+            "lm_small_ours_train_step",
+            "lm_small_gated_eval",
+            "lm_small_softmax_init",
+            "lm_small_ours_logits",
         ] {
             assert!(m.get(name).is_ok(), "missing {name}");
         }
@@ -517,17 +529,37 @@ mod tests {
     #[test]
     fn lm_meta_matches_trainer_contract() {
         let m = build_manifest();
+        let cfg = LmConfig::tiny(AttnKind::Ours);
         let step = m.get("lm_tiny_ours_train_step").unwrap();
         let np = step.n_param_arrays.unwrap();
-        assert_eq!(np, 8);
+        assert_eq!(np, cfg.n_param_arrays());
+        assert_eq!(step.n_params, Some(cfg.n_params()));
         assert_eq!(step.batch, Some(8));
         assert_eq!(step.model_field_usize("n_ctx"), Some(64));
         assert_eq!(step.model_field_usize("vocab_size"), Some(256));
+        assert_eq!(step.model_field_usize("n_layer"), Some(2));
+        assert_eq!(step.model_field_usize("n_head"), Some(2));
         assert!(step.train_field_f64("lr_max").unwrap() > 0.0);
         assert_eq!(step.inputs.len(), 3 * np + 2);
         assert_eq!(step.outputs.len(), 3 * np + 1);
         let init = m.get("lm_tiny_ours_init").unwrap();
         assert_eq!(init.inputs.len(), 1);
         assert_eq!(init.outputs.len(), 3 * np);
+    }
+
+    #[test]
+    fn lm_small_is_deep_and_multi_head() {
+        let m = build_manifest();
+        let cfg = LmConfig::small(AttnKind::Ours);
+        assert!(cfg.n_layer >= 4 && cfg.n_head >= 4);
+        assert!(cfg.vocab > 256, "small preset must exercise the BPE vocab");
+        let step = m.get("lm_small_ours_train_step").unwrap();
+        assert_eq!(step.n_param_arrays, Some(cfg.n_param_arrays()));
+        assert_eq!(step.n_params, Some(cfg.n_params()));
+        assert_eq!(step.model_field_usize("n_layer"), Some(cfg.n_layer));
+        assert_eq!(step.model_field_usize("n_head"), Some(cfg.n_head));
+        assert_eq!(step.model_field_usize("d_ff"), Some(cfg.d_ff));
+        // the deep model is ~1M params — an order of magnitude over tiny
+        assert!(cfg.n_params() > 500_000, "n_params {}", cfg.n_params());
     }
 }

@@ -1,21 +1,33 @@
-//! The native tiny language model: a one-block transformer with swappable
-//! attention (ours / gated / softmax), hand-derived backward pass, and an
-//! in-tree Adam optimizer — the `lm_*` artifact family, executed directly on
-//! host `f32` slices.
+//! The native language model: a block-structured pre-norm Transformer with a
+//! pluggable attention mixer (ours / gated / softmax), hand-derived backward
+//! pass, and an in-tree Adam optimizer — the `lm_*` artifact family, executed
+//! directly on host `f32` slices.
 //!
-//! Architecture (single head, head dim = d_model):
-//!   h0 = wte[x] + wpe            (token + position embedding)
-//!   q,k,v = h0·wq, h0·wk, h0·wv
-//!   a = attention(q, k, v)       (causal; variant per `AttnKind`)
-//!   h1 = h0 + a·wo               (residual)
-//!   logits = h1·wu + bu
-//! with mean cross-entropy over next-token targets.
+//! Architecture (`n_layer` blocks, `n_head` heads of dim `d_model/n_head`):
+//!   h = wte[x] + wpe                     (token + position embedding)
+//!   for each block:
+//!     h = h + MHA(LN₁(h))·wo             (pre-norm attention + residual)
+//!     h = h + GELU(LN₂(h)·w1 + b1)·w2 + b2   (pre-norm MLP + residual)
+//!   logits = LN_f(h)·wu + bu
+//! with mean cross-entropy over next-token targets. Only the attention mixer
+//! differs between artifact variants — the paper's end-to-end claim is that
+//! swapping softmax attention for the linear form preserves expressivity
+//! while cutting per-step cost, so everything around the mixer is shared.
 //!
-//! The `ours`/`gated` variants run the paper's linear-attention state scan
+//! Per block, the `rows × d_model` projections are split into `n_head`
+//! head-major `(B·H, L, hd)` buffers and dispatched through the same
+//! parallel kernels the standalone layer artifacts use: the `ours`/`gated`
+//! variants run the paper's linear-attention state scan
 //! (`kernels::la_scan_*`) over positive features `φ(x) = elu(x)+1`, with the
-//! normalizer computed by the standard ones-channel trick: `v` gains a
+//! normalizer computed by the standard ones-channel trick (`v` gains a
 //! constant-1 channel, so one scan yields both numerator and denominator and
-//! the backward pass reuses the same analytic two-pass kernel.
+//! the backward reuses the same analytic two-pass kernel); `softmax` runs
+//! the streaming causal softmax kernels at scale `1/√hd`.
+//!
+//! The pre-refactor single-layer, single-head, LayerNorm/MLP-free model is
+//! still expressible as [`LmConfig::legacy_tiny`] (`n_layer = 1`, `n_head =
+//! 1`, `d_ff = 0`, `layernorm = false`) — the regression test pins the
+//! refactor to its exact loss trajectory.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -29,6 +41,12 @@ use super::pool::ThreadPool;
 const EPS: f32 = 1e-6;
 /// Decay of the gated variant's state.
 const GATED_DECAY: f32 = 0.95;
+/// LayerNorm variance floor.
+const LN_EPS: f32 = 1e-5;
+/// √(2/π) — the GELU tanh-approximation constant.
+const GELU_C: f32 = 0.797_884_56;
+/// Cubic coefficient of the GELU tanh approximation.
+const GELU_CUBE: f32 = 0.044_715;
 
 /// Attention variant of one LM artifact family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,6 +73,15 @@ pub struct LmConfig {
     pub vocab: usize,
     pub n_ctx: usize,
     pub d_model: usize,
+    /// Number of Transformer blocks.
+    pub n_layer: usize,
+    /// Attention heads per block; `d_model` must divide evenly.
+    pub n_head: usize,
+    /// MLP hidden width; 0 drops the MLP sub-block (legacy architecture).
+    pub d_ff: usize,
+    /// Pre-norm LayerNorms around each sub-block plus a final LayerNorm;
+    /// false is the legacy architecture.
+    pub layernorm: bool,
     pub batch: usize,
     pub attn: AttnKind,
     pub lr_max: f64,
@@ -64,12 +91,59 @@ pub struct LmConfig {
 }
 
 impl LmConfig {
-    /// The `tiny` preset — small enough that a training step is ~10 MFLOP.
+    /// The `tiny` preset — 2 blocks × 2 heads, byte vocab; a training step
+    /// stays in the tens of MFLOPs so tests can afford dozens of them.
     pub fn tiny(attn: AttnKind) -> Self {
         Self {
             vocab: 256,
             n_ctx: 64,
             d_model: 64,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 128,
+            layernorm: true,
+            batch: 8,
+            attn,
+            lr_max: 1e-2,
+            lr_min: 1e-3,
+            warmup_steps: 3,
+            total_steps: 400,
+        }
+    }
+
+    /// The `small` preset — 4 blocks × 4 heads, wider residual stream, and a
+    /// BPE vocabulary above the byte range (exercises the trained
+    /// `ByteTokenizer` merges).
+    pub fn small(attn: AttnKind) -> Self {
+        Self {
+            vocab: 512,
+            n_ctx: 128,
+            d_model: 128,
+            n_layer: 4,
+            n_head: 4,
+            d_ff: 512,
+            layernorm: true,
+            batch: 8,
+            attn,
+            lr_max: 5e-3,
+            lr_min: 5e-4,
+            warmup_steps: 5,
+            total_steps: 1000,
+        }
+    }
+
+    /// The pre-refactor architecture: one block, one head, no LayerNorm, no
+    /// MLP. Kept so the block-structured code path can be regression-pinned
+    /// against the original hand-unrolled model.
+    pub fn legacy_tiny(attn: AttnKind) -> Self {
+        Self {
+            vocab: 256,
+            n_ctx: 64,
+            d_model: 64,
+            n_layer: 1,
+            n_head: 1,
+            d_ff: 0,
+            layernorm: false,
             batch: 8,
             attn,
             lr_max: 5e-2,
@@ -79,23 +153,113 @@ impl LmConfig {
         }
     }
 
-    /// Parameter arrays, in state order: `(name, shape)`.
-    pub fn param_shapes(&self) -> Vec<(&'static str, Vec<usize>)> {
-        let (v, l, d) = (self.vocab, self.n_ctx, self.d_model);
-        vec![
-            ("wte", vec![v, d]),
-            ("wpe", vec![l, d]),
-            ("wq", vec![d, d]),
-            ("wk", vec![d, d]),
-            ("wv", vec![d, d]),
-            ("wo", vec![d, d]),
-            ("wu", vec![d, v]),
-            ("bu", vec![v]),
-        ]
+    /// Preset lookup by manifest name.
+    pub fn by_preset(name: &str, attn: AttnKind) -> Result<Self> {
+        let cfg = match name {
+            "tiny" => Self::tiny(attn),
+            "small" => Self::small(attn),
+            other => bail!("unknown LM preset {other:?} (native ships tiny, small)"),
+        };
+        cfg.validate()?;
+        Ok(cfg)
     }
 
-    pub fn n_params(&self) -> usize {
-        self.param_shapes().len()
+    /// The presets registered in the native manifest.
+    pub fn preset_names() -> &'static [&'static str] {
+        &["tiny", "small"]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_layer == 0 {
+            bail!("n_layer must be ≥ 1");
+        }
+        if self.n_head == 0 || self.d_model % self.n_head != 0 {
+            bail!("n_head {} must divide d_model {}", self.n_head, self.d_model);
+        }
+        Ok(())
+    }
+
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_head
+    }
+
+    /// Parameter arrays, in state order: `(name, shape)`. Block parameters
+    /// are layer-indexed (`h3.wq`, `h3.ln2_g`, …); the walk order here is
+    /// the single source of truth for [`param_idx`](Self::param_idx), the
+    /// checkpoint layout, and the Adam state layout.
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let (v, l, d, f) = (self.vocab, self.n_ctx, self.d_model, self.d_ff);
+        let mut out: Vec<(String, Vec<usize>)> = Vec::new();
+        out.push(("wte".to_string(), vec![v, d]));
+        out.push(("wpe".to_string(), vec![l, d]));
+        for b in 0..self.n_layer {
+            if self.layernorm {
+                out.push((format!("h{b}.ln1_g"), vec![d]));
+                out.push((format!("h{b}.ln1_b"), vec![d]));
+            }
+            for w in ["wq", "wk", "wv", "wo"] {
+                out.push((format!("h{b}.{w}"), vec![d, d]));
+            }
+            if f > 0 {
+                if self.layernorm {
+                    out.push((format!("h{b}.ln2_g"), vec![d]));
+                    out.push((format!("h{b}.ln2_b"), vec![d]));
+                }
+                out.push((format!("h{b}.w1"), vec![d, f]));
+                out.push((format!("h{b}.b1"), vec![f]));
+                out.push((format!("h{b}.w2"), vec![f, d]));
+                out.push((format!("h{b}.b2"), vec![d]));
+            }
+        }
+        if self.layernorm {
+            out.push(("lnf_g".to_string(), vec![d]));
+            out.push(("lnf_b".to_string(), vec![d]));
+        }
+        out.push(("wu".to_string(), vec![d, v]));
+        out.push(("bu".to_string(), vec![v]));
+        out
+    }
+
+    /// Positions of each parameter array in the state vector; mirrors the
+    /// walk order of [`param_shapes`](Self::param_shapes).
+    fn param_idx(&self) -> ParamIdx {
+        let mut i = 0usize;
+        let mut take = |n: usize| {
+            let j = i;
+            i += n;
+            j
+        };
+        let wte = take(1);
+        let wpe = take(1);
+        let mut blocks = Vec::with_capacity(self.n_layer);
+        for _ in 0..self.n_layer {
+            let ln1 = self.layernorm.then(|| take(2));
+            let wq = take(4); // wq, wk, wv, wo
+            let (ln2, mlp) = if self.d_ff > 0 {
+                (self.layernorm.then(|| take(2)), Some(take(4))) // w1, b1, w2, b2
+            } else {
+                (None, None)
+            };
+            blocks.push(BlockIdx { ln1, wq, ln2, mlp });
+        }
+        let lnf = self.layernorm.then(|| take(2));
+        let wu = take(1);
+        let bu = take(1);
+        ParamIdx { wte, wpe, blocks, lnf, wu, bu, count: i }
+    }
+
+    /// Number of parameter *arrays* in the state layout.
+    pub fn n_param_arrays(&self) -> usize {
+        self.param_idx().count
+    }
+
+    /// True scalar parameter count (sum over all array elements).
+    pub fn n_params(&self) -> u64 {
+        self.param_shapes()
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>() as u64)
+            .sum()
     }
 
     /// Learning rate at a 0-based step: linear warmup then cosine decay.
@@ -109,22 +273,33 @@ impl LmConfig {
             as f32
     }
 
-    /// Fresh training state: params ++ adam_m ++ adam_v.
+    /// Fresh training state: params ++ adam_m ++ adam_v. Weights are
+    /// `randn × 0.02` seeded per array index; biases and LayerNorm shifts
+    /// start at zero, LayerNorm gains at one.
     pub fn init_state(&self, seed: u64) -> Vec<Tensor> {
         let shapes = self.param_shapes();
         let mut out = Vec::with_capacity(3 * shapes.len());
         for (i, (name, shape)) in shapes.iter().enumerate() {
-            if *name == "bu" {
-                out.push(Tensor::zeros(crate::runtime::DType::F32, shape.clone()));
-            } else {
-                let mut t = Tensor::randn(shape.clone(), seed ^ ((i as u64 + 1) * 0x9E3779B9));
-                if let Tensor::F32 { data, .. } = &mut t {
-                    for x in data.iter_mut() {
-                        *x *= 0.02;
-                    }
+            let last = name.rsplit('.').next().unwrap_or(name);
+            let t = match last {
+                "ln1_g" | "ln2_g" | "lnf_g" => {
+                    let n: usize = shape.iter().product();
+                    Tensor::f32(shape.clone(), vec![1.0f32; n]).expect("static shape")
                 }
-                out.push(t);
-            }
+                "ln1_b" | "ln2_b" | "lnf_b" | "b1" | "b2" | "bu" => {
+                    Tensor::zeros(crate::runtime::DType::F32, shape.clone())
+                }
+                _ => {
+                    let mut t = Tensor::randn(shape.clone(), seed ^ ((i as u64 + 1) * 0x9E3779B9));
+                    if let Tensor::F32 { data, .. } = &mut t {
+                        for x in data.iter_mut() {
+                            *x *= 0.02;
+                        }
+                    }
+                    t
+                }
+            };
+            out.push(t);
         }
         for (_, shape) in shapes.iter().chain(shapes.iter()) {
             out.push(Tensor::zeros(crate::runtime::DType::F32, shape.clone()));
@@ -133,45 +308,62 @@ impl LmConfig {
     }
 }
 
-/// Borrowed views of the 8 parameter arrays.
+/// Positions of one block's parameter arrays in the state vector.
+#[derive(Debug, Clone, Copy)]
+struct BlockIdx {
+    /// `ln1_g` position (`ln1_b` follows), when `layernorm`.
+    ln1: Option<usize>,
+    /// `wq` position; `wk`, `wv`, `wo` follow.
+    wq: usize,
+    /// `ln2_g` position (`ln2_b` follows), when `layernorm` and `d_ff > 0`.
+    ln2: Option<usize>,
+    /// `w1` position (`b1`, `w2`, `b2` follow), when `d_ff > 0`.
+    mlp: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+struct ParamIdx {
+    wte: usize,
+    wpe: usize,
+    blocks: Vec<BlockIdx>,
+    lnf: Option<usize>,
+    wu: usize,
+    bu: usize,
+    count: usize,
+}
+
+/// Borrowed views of every parameter array, shape-checked against the
+/// config's layout.
 struct P<'a> {
-    wte: &'a [f32],
-    wpe: &'a [f32],
-    wq: &'a [f32],
-    wk: &'a [f32],
-    wv: &'a [f32],
-    wo: &'a [f32],
-    wu: &'a [f32],
-    bu: &'a [f32],
+    arrs: Vec<&'a [f32]>,
+    idx: ParamIdx,
 }
 
 impl<'a> P<'a> {
     fn bind(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
-        if params.len() < cfg.n_params() {
-            bail!("expected {} parameter arrays, got {}", cfg.n_params(), params.len());
+        let shapes = cfg.param_shapes();
+        if params.len() < shapes.len() {
+            bail!("expected {} parameter arrays, got {}", shapes.len(), params.len());
         }
-        for ((name, shape), t) in cfg.param_shapes().iter().zip(params) {
+        let mut arrs = Vec::with_capacity(shapes.len());
+        for ((name, shape), t) in shapes.iter().zip(params) {
             if t.shape() != shape.as_slice() {
                 bail!("param {name}: expected shape {shape:?}, got {:?}", t.shape());
             }
+            arrs.push(t.as_f32()?);
         }
-        Ok(Self {
-            wte: params[0].as_f32()?,
-            wpe: params[1].as_f32()?,
-            wq: params[2].as_f32()?,
-            wk: params[3].as_f32()?,
-            wv: params[4].as_f32()?,
-            wo: params[5].as_f32()?,
-            wu: params[6].as_f32()?,
-            bu: params[7].as_f32()?,
-        })
+        Ok(Self { arrs, idx: cfg.param_idx() })
+    }
+
+    fn at(&self, i: usize) -> &'a [f32] {
+        self.arrs[i]
     }
 }
 
 // --- dense helpers (row-major, accumulate into `out`) -----------------------
 //
 // Thin aliases over the tiled [`gemm`] microkernels, parallel across output
-// row stripes when the product is large enough to amortize a launch.
+// row stripes when the product is large enough to amortize a dispatch.
 
 /// out[r,j] += x[r,c] · w[c,j]
 fn matmul(
@@ -212,6 +404,8 @@ fn matmul_dw(
     gemm::par_gemm_tn(pool, x, dout, cin, rows, cout, dw);
 }
 
+// --- elementwise nonlinearities ----------------------------------------------
+
 fn elu1(x: f32) -> f32 {
     if x > 0.0 {
         x + 1.0
@@ -228,23 +422,122 @@ fn elu1_grad(x: f32) -> f32 {
     }
 }
 
-// --- forward ----------------------------------------------------------------
-
-/// Everything the backward pass needs from the forward pass.
-struct Cache {
-    h0: Vec<f32>,
-    qp: Vec<f32>,
-    kp: Vec<f32>,
-    vp: Vec<f32>,
-    /// attention output (rows × d)
-    a: Vec<f32>,
-    /// linear-attention variants: φ(q), φ(k), extended v, raw scan output u
-    fq: Vec<f32>,
-    fk: Vec<f32>,
-    vext: Vec<f32>,
-    u: Vec<f32>,
-    h1: Vec<f32>,
+/// GELU, tanh approximation.
+fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_CUBE * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
 }
+
+fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_CUBE * x * x * x);
+    let t = u.tanh();
+    let du = GELU_C * (1.0 + 3.0 * GELU_CUBE * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * du
+}
+
+// --- LayerNorm ----------------------------------------------------------------
+
+/// Per-row mean / inverse stddev saved by the forward pass.
+struct LnCache {
+    mean: Vec<f32>,
+    rstd: Vec<f32>,
+}
+
+/// y[r] = g ⊙ (x[r] − mean)·rstd + b, per row of `d` features.
+fn ln_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec<f32>, LnCache) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut mean = vec![0.0f32; rows];
+    let mut rstd = vec![0.0f32; rows];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let xr = &x[r * d..][..d];
+        let m = xr.iter().sum::<f32>() * inv_d;
+        let var = xr.iter().map(|&v| (v - m) * (v - m)).sum::<f32>() * inv_d;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        mean[r] = m;
+        rstd[r] = rs;
+        let yr = &mut y[r * d..][..d];
+        for j in 0..d {
+            yr[j] = g[j] * ((xr[j] - m) * rs) + b[j];
+        }
+    }
+    (y, LnCache { mean, rstd })
+}
+
+/// Accumulates `dx += ∂L/∂x`, `dg += ∂L/∂g`, `db += ∂L/∂b` given the
+/// upstream gradient `dy` and the forward cache.
+#[allow(clippy::too_many_arguments)]
+fn ln_bwd(
+    x: &[f32],
+    g: &[f32],
+    cache: &LnCache,
+    dy: &[f32],
+    rows: usize,
+    d: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let xr = &x[r * d..][..d];
+        let dyr = &dy[r * d..][..d];
+        let (m, rs) = (cache.mean[r], cache.rstd[r]);
+        let mut s1 = 0.0f32; // Σ dxhat
+        let mut s2 = 0.0f32; // Σ dxhat·xhat
+        for j in 0..d {
+            let xhat = (xr[j] - m) * rs;
+            let dxhat = dyr[j] * g[j];
+            dg[j] += dyr[j] * xhat;
+            db[j] += dyr[j];
+            s1 += dxhat;
+            s2 += dxhat * xhat;
+        }
+        s1 *= inv_d;
+        s2 *= inv_d;
+        let dxr = &mut dx[r * d..][..d];
+        for j in 0..d {
+            let xhat = (xr[j] - m) * rs;
+            let dxhat = dyr[j] * g[j];
+            dxr[j] += rs * (dxhat - s1 - xhat * s2);
+        }
+    }
+}
+
+// --- multi-head reshapes --------------------------------------------------------
+
+/// Token-major `(B·L, H·hd)` → head-major `(B·H, L, hd)`.
+fn split_heads(x: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Vec<f32> {
+    let d = n_head * hd;
+    let mut out = vec![0.0f32; x.len()];
+    for b in 0..bsz {
+        for h in 0..n_head {
+            for t in 0..l {
+                let src = &x[((b * l + t) * d + h * hd)..][..hd];
+                out[((b * n_head + h) * l + t) * hd..][..hd].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Head-major `(B·H, L, hd)` → token-major `(B·L, H·hd)` (inverse of
+/// [`split_heads`]).
+fn merge_heads(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Vec<f32> {
+    let d = n_head * hd;
+    let mut out = vec![0.0f32; xh.len()];
+    for b in 0..bsz {
+        for h in 0..n_head {
+            for t in 0..l {
+                let src = &xh[(((b * n_head + h) * l + t) * hd)..][..hd];
+                out[(b * l + t) * d + h * hd..][..hd].copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+// --- forward ----------------------------------------------------------------
 
 fn attn_gamma(kind: AttnKind) -> f32 {
     match kind {
@@ -253,71 +546,218 @@ fn attn_gamma(kind: AttnKind) -> f32 {
     }
 }
 
+/// Per-variant tensors the attention backward needs (all head-major).
+enum AttnCache {
+    Softmax {
+        qh: Vec<f32>,
+        kh: Vec<f32>,
+        vh: Vec<f32>,
+    },
+    Linear {
+        /// pre-feature projections (for the elu′ chain)
+        qh: Vec<f32>,
+        kh: Vec<f32>,
+        /// φ(q), φ(k), extended v, raw scan output u
+        fq: Vec<f32>,
+        fk: Vec<f32>,
+        vext: Vec<f32>,
+        u: Vec<f32>,
+    },
+}
+
+/// Everything one block's backward pass needs from its forward pass.
+struct BlockCache {
+    /// block input (rows × d)
+    h_in: Vec<f32>,
+    ln1: Option<LnCache>,
+    /// attention sub-block input: LN₁(h_in), or h_in itself when !layernorm
+    x1: Vec<f32>,
+    att: AttnCache,
+    /// merged attention output (rows × d), pre-`wo`
+    a: Vec<f32>,
+    /// after the attention residual
+    h_mid: Vec<f32>,
+    ln2: Option<LnCache>,
+    /// MLP sub-block input (when `d_ff > 0`)
+    x2: Option<Vec<f32>>,
+    /// pre-GELU hidden (rows × d_ff)
+    m1: Option<Vec<f32>>,
+    /// post-GELU hidden
+    gact: Option<Vec<f32>>,
+}
+
+/// Full forward cache.
+struct Cache {
+    blocks: Vec<BlockCache>,
+    /// residual stream after the last block
+    h_last: Vec<f32>,
+    lnf: Option<LnCache>,
+    /// unembedding input: LN_f(h_last), or h_last when !layernorm
+    xf: Vec<f32>,
+}
+
+/// One block: pre-norm attention + residual, then pre-norm MLP + residual.
+/// Consumes the incoming residual stream and returns (h_out, cache).
+fn block_forward(
+    cfg: &LmConfig,
+    p: &P,
+    bi: &BlockIdx,
+    h_in: Vec<f32>,
+    pool: &ThreadPool,
+) -> (Vec<f32>, BlockCache) {
+    let (bsz, l, d) = (cfg.batch, cfg.n_ctx, cfg.d_model);
+    let (nh, hd) = (cfg.n_head, cfg.head_dim());
+    let rows = bsz * l;
+
+    let (x1, ln1) = match bi.ln1 {
+        Some(i) => {
+            let (y, c) = ln_fwd(&h_in, p.at(i), p.at(i + 1), rows, d);
+            (y, Some(c))
+        }
+        None => (h_in.clone(), None),
+    };
+
+    let mut qp = vec![0.0f32; rows * d];
+    let mut kp = vec![0.0f32; rows * d];
+    let mut vp = vec![0.0f32; rows * d];
+    matmul(pool, &x1, p.at(bi.wq), rows, d, d, &mut qp);
+    matmul(pool, &x1, p.at(bi.wq + 1), rows, d, d, &mut kp);
+    matmul(pool, &x1, p.at(bi.wq + 2), rows, d, d, &mut vp);
+
+    let qh = split_heads(&qp, bsz, l, nh, hd);
+    let kh = split_heads(&kp, bsz, l, nh, hd);
+    let vh = split_heads(&vp, bsz, l, nh, hd);
+    drop((qp, kp, vp));
+
+    let (ah, att) = match cfg.attn {
+        AttnKind::Softmax => {
+            let sh = LayerShape::cube(bsz * nh, l, hd);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let ah = softmax_fwd(pool, &qh, &kh, &vh, sh, scale);
+            (ah, AttnCache::Softmax { qh, kh, vh })
+        }
+        kind => {
+            let gamma = attn_gamma(kind);
+            let hrows = bsz * nh * l;
+            let fq: Vec<f32> = qh.iter().map(|&x| elu1(x)).collect();
+            let fk: Vec<f32> = kh.iter().map(|&x| elu1(x)).collect();
+            let mut vext = vec![0.0f32; hrows * (hd + 1)];
+            for r in 0..hrows {
+                vext[r * (hd + 1)..][..hd].copy_from_slice(&vh[r * hd..][..hd]);
+                vext[r * (hd + 1) + hd] = 1.0;
+            }
+            let sh = LayerShape { bh: bsz * nh, n: l, dk: hd, dv: hd + 1 };
+            let u = la_scan_fwd(pool, &fq, &fk, &vext, sh, gamma);
+            let mut ah = vec![0.0f32; hrows * hd];
+            for r in 0..hrows {
+                let ur = &u[r * (hd + 1)..][..hd + 1];
+                let z = ur[hd] + EPS;
+                let ar = &mut ah[r * hd..][..hd];
+                for (ax, ux) in ar.iter_mut().zip(ur) {
+                    *ax = ux / z;
+                }
+            }
+            (ah, AttnCache::Linear { qh, kh, fq, fk, vext, u })
+        }
+    };
+    let a = merge_heads(&ah, bsz, l, nh, hd);
+
+    let mut h_mid = h_in.clone();
+    matmul(pool, &a, p.at(bi.wq + 3), rows, d, d, &mut h_mid);
+
+    let (h_out, ln2, x2, m1, gact) = match bi.mlp {
+        Some(mi) => {
+            let f = cfg.d_ff;
+            let (x2, ln2) = match bi.ln2 {
+                Some(i) => {
+                    let (y, c) = ln_fwd(&h_mid, p.at(i), p.at(i + 1), rows, d);
+                    (y, Some(c))
+                }
+                None => (h_mid.clone(), None),
+            };
+            let b1 = p.at(mi + 1);
+            let mut m1 = vec![0.0f32; rows * f];
+            for r in 0..rows {
+                m1[r * f..][..f].copy_from_slice(b1);
+            }
+            matmul(pool, &x2, p.at(mi), rows, d, f, &mut m1);
+            let gact: Vec<f32> = m1.iter().map(|&x| gelu(x)).collect();
+            let b2 = p.at(mi + 3);
+            let mut h_out = h_mid.clone();
+            for r in 0..rows {
+                let hr = &mut h_out[r * d..][..d];
+                for (hx, bx) in hr.iter_mut().zip(b2) {
+                    *hx += bx;
+                }
+            }
+            matmul(pool, &gact, p.at(mi + 2), rows, f, d, &mut h_out);
+            (h_out, ln2, Some(x2), Some(m1), Some(gact))
+        }
+        None => (h_mid.clone(), None, None, None, None),
+    };
+
+    (
+        h_out,
+        BlockCache { h_in, ln1, x1, att, a, h_mid, ln2, x2, m1, gact },
+    )
+}
+
 /// Forward pass over `x` (batch × n_ctx token ids) → (logits, cache).
-fn forward(cfg: &LmConfig, p: &P, x: &[i32], pool: &ThreadPool) -> Result<(Vec<f32>, Cache)> {
+/// `keep_cache = false` (eval / logits paths, no backward) drops each
+/// block's activation cache as soon as the block completes, so peak memory
+/// stays one block deep instead of `n_layer` deep.
+fn forward(
+    cfg: &LmConfig,
+    p: &P,
+    x: &[i32],
+    pool: &ThreadPool,
+    keep_cache: bool,
+) -> Result<(Vec<f32>, Cache)> {
     let (bsz, l, d, v) = (cfg.batch, cfg.n_ctx, cfg.d_model, cfg.vocab);
     let rows = bsz * l;
     if x.len() != rows {
         bail!("expected {} tokens, got {}", rows, x.len());
     }
-    let mut h0 = vec![0.0f32; rows * d];
+    let wte = p.at(p.idx.wte);
+    let wpe = p.at(p.idx.wpe);
+    let mut h = vec![0.0f32; rows * d];
     for (r, &tok) in x.iter().enumerate() {
         if tok < 0 || tok as usize >= v {
             bail!("token id {tok} out of range [0, {v})");
         }
-        let te = &p.wte[tok as usize * d..][..d];
-        let pe = &p.wpe[(r % l) * d..][..d];
-        let hr = &mut h0[r * d..][..d];
-        for ((h, a), b) in hr.iter_mut().zip(te).zip(pe) {
-            *h = a + b;
+        let te = &wte[tok as usize * d..][..d];
+        let pe = &wpe[(r % l) * d..][..d];
+        let hr = &mut h[r * d..][..d];
+        for ((hx, a), b) in hr.iter_mut().zip(te).zip(pe) {
+            *hx = a + b;
         }
     }
-    let mut qp = vec![0.0f32; rows * d];
-    let mut kp = vec![0.0f32; rows * d];
-    let mut vp = vec![0.0f32; rows * d];
-    matmul(pool, &h0, p.wq, rows, d, d, &mut qp);
-    matmul(pool, &h0, p.wk, rows, d, d, &mut kp);
-    matmul(pool, &h0, p.wv, rows, d, d, &mut vp);
 
-    let (a, fq, fk, vext, u) = match cfg.attn {
-        AttnKind::Softmax => {
-            let sh = LayerShape::cube(bsz, l, d);
-            let scale = 1.0 / (d as f32).sqrt();
-            let a = softmax_fwd(pool, &qp, &kp, &vp, sh, scale);
-            (a, Vec::new(), Vec::new(), Vec::new(), Vec::new())
+    let mut blocks = Vec::with_capacity(if keep_cache { cfg.n_layer } else { 0 });
+    for bi in &p.idx.blocks {
+        let (h_next, bc) = block_forward(cfg, p, bi, h, pool);
+        h = h_next;
+        if keep_cache {
+            blocks.push(bc);
         }
-        kind => {
-            let gamma = attn_gamma(kind);
-            let fq: Vec<f32> = qp.iter().map(|&x| elu1(x)).collect();
-            let fk: Vec<f32> = kp.iter().map(|&x| elu1(x)).collect();
-            let mut vext = vec![0.0f32; rows * (d + 1)];
-            for r in 0..rows {
-                vext[r * (d + 1)..][..d].copy_from_slice(&vp[r * d..][..d]);
-                vext[r * (d + 1) + d] = 1.0;
-            }
-            let sh = LayerShape { bh: bsz, n: l, dk: d, dv: d + 1 };
-            let u = la_scan_fwd(pool, &fq, &fk, &vext, sh, gamma);
-            let mut a = vec![0.0f32; rows * d];
-            for r in 0..rows {
-                let ur = &u[r * (d + 1)..][..d + 1];
-                let z = ur[d] + EPS;
-                let ar = &mut a[r * d..][..d];
-                for (ax, ux) in ar.iter_mut().zip(ur) {
-                    *ax = ux / z;
-                }
-            }
-            (a, fq, fk, vext, u)
+    }
+    let h_last = h;
+
+    let (xf, lnf) = match p.idx.lnf {
+        Some(i) => {
+            let (y, c) = ln_fwd(&h_last, p.at(i), p.at(i + 1), rows, d);
+            (y, Some(c))
         }
+        None => (h_last.clone(), None),
     };
 
-    let mut h1 = h0.clone();
-    matmul(pool, &a, p.wo, rows, d, d, &mut h1);
+    let bu = p.at(p.idx.bu);
     let mut logits = vec![0.0f32; rows * v];
     for r in 0..rows {
-        logits[r * v..][..v].copy_from_slice(p.bu);
+        logits[r * v..][..v].copy_from_slice(bu);
     }
-    matmul(pool, &h1, p.wu, rows, d, v, &mut logits);
-    Ok((logits, Cache { h0, qp, kp, vp, a, fq, fk, vext, u, h1 }))
+    matmul(pool, &xf, p.at(p.idx.wu), rows, d, v, &mut logits);
+    Ok((logits, Cache { blocks, h_last, lnf, xf }))
 }
 
 /// Mean cross-entropy of `logits` against `y`; optionally fills `dlogits`
@@ -363,7 +803,7 @@ pub fn eval_loss(
 ) -> Result<f32> {
     let p = P::bind(cfg, params)?;
     let (x, y) = split_xy(cfg, tokens)?;
-    let (logits, _cache) = forward(cfg, &p, &x, pool)?;
+    let (logits, _cache) = forward(cfg, &p, &x, pool, false)?;
     cross_entropy(&logits, &y, cfg.vocab, None)
 }
 
@@ -384,7 +824,7 @@ pub fn logits(
             tokens.shape()
         );
     }
-    let (lg, _cache) = forward(cfg, &p, x, pool)?;
+    let (lg, _cache) = forward(cfg, &p, x, pool, false)?;
     Tensor::f32(vec![cfg.batch, cfg.n_ctx, cfg.vocab], lg)
 }
 
@@ -411,8 +851,184 @@ fn split_xy(cfg: &LmConfig, tokens: &Tensor) -> Result<(Vec<i32>, Vec<i32>)> {
     Ok((x, y))
 }
 
-/// Loss + gradients for every parameter array (state order).
-fn loss_and_grads(
+// --- backward -----------------------------------------------------------------
+
+/// Attention-mixer backward for one block: upstream head-major gradient
+/// `dah` → head-major `(dqh, dkh, dvh)`.
+fn attn_backward(
+    cfg: &LmConfig,
+    att: &AttnCache,
+    dah: &[f32],
+    pool: &ThreadPool,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (bsz, l) = (cfg.batch, cfg.n_ctx);
+    let (nh, hd) = (cfg.n_head, cfg.head_dim());
+    match att {
+        AttnCache::Softmax { qh, kh, vh } => {
+            let sh = LayerShape::cube(bsz * nh, l, hd);
+            let scale = 1.0 / (hd as f32).sqrt();
+            softmax_bwd(pool, qh, kh, vh, dah, sh, scale)
+        }
+        AttnCache::Linear { qh, kh, fq, fk, vext, u } => {
+            let gamma = attn_gamma(cfg.attn);
+            let hrows = bsz * nh * l;
+            // a = u[..hd] / z  with z = u[hd] + EPS
+            let mut du = vec![0.0f32; hrows * (hd + 1)];
+            for r in 0..hrows {
+                let ur = &u[r * (hd + 1)..][..hd + 1];
+                let z = ur[hd] + EPS;
+                let dar = &dah[r * hd..][..hd];
+                let dur = &mut du[r * (hd + 1)..][..hd + 1];
+                let mut dot = 0.0f32;
+                for j in 0..hd {
+                    dur[j] = dar[j] / z;
+                    dot += dar[j] * ur[j];
+                }
+                dur[hd] = -dot / (z * z);
+            }
+            let sh = LayerShape { bh: bsz * nh, n: l, dk: hd, dv: hd + 1 };
+            let (dfq, dfk, dvext) = la_scan_bwd(pool, fq, fk, vext, &du, sh, gamma);
+            let mut dqh = vec![0.0f32; hrows * hd];
+            let mut dkh = vec![0.0f32; hrows * hd];
+            let mut dvh = vec![0.0f32; hrows * hd];
+            for i in 0..hrows * hd {
+                dqh[i] = dfq[i] * elu1_grad(qh[i]);
+                dkh[i] = dfk[i] * elu1_grad(kh[i]);
+            }
+            for r in 0..hrows {
+                dvh[r * hd..][..hd].copy_from_slice(&dvext[r * (hd + 1)..][..hd]);
+            }
+            (dqh, dkh, dvh)
+        }
+    }
+}
+
+/// One block's backward: `dh` holds ∂L/∂h_out on entry and ∂L/∂h_in on
+/// exit; parameter gradients accumulate into `grads` (state order).
+#[allow(clippy::too_many_arguments)]
+fn block_backward(
+    cfg: &LmConfig,
+    p: &P,
+    bi: &BlockIdx,
+    bc: &BlockCache,
+    dh: &mut [f32],
+    grads: &mut [Vec<f32>],
+    pool: &ThreadPool,
+) {
+    let (bsz, l, d) = (cfg.batch, cfg.n_ctx, cfg.d_model);
+    let (nh, hd) = (cfg.n_head, cfg.head_dim());
+    let rows = bsz * l;
+
+    // MLP sub-block: h_out = h_mid + GELU(x2·w1 + b1)·w2 + b2
+    if let Some(mi) = bi.mlp {
+        let f = cfg.d_ff;
+        let (x2, m1, gact) = (
+            bc.x2.as_ref().expect("mlp cache"),
+            bc.m1.as_ref().expect("mlp cache"),
+            bc.gact.as_ref().expect("mlp cache"),
+        );
+        for r in 0..rows {
+            let dr = &dh[r * d..][..d];
+            for (db, g) in grads[mi + 3].iter_mut().zip(dr) {
+                *db += g;
+            }
+        }
+        matmul_dw(pool, gact, dh, rows, f, d, &mut grads[mi + 2]);
+        let mut dm1 = vec![0.0f32; rows * f];
+        matmul_dx(pool, dh, p.at(mi + 2), rows, f, d, &mut dm1);
+        for (dx, &m) in dm1.iter_mut().zip(m1.iter()) {
+            *dx *= gelu_grad(m);
+        }
+        for r in 0..rows {
+            let dr = &dm1[r * f..][..f];
+            for (db, g) in grads[mi + 1].iter_mut().zip(dr) {
+                *db += g;
+            }
+        }
+        matmul_dw(pool, x2, &dm1, rows, d, f, &mut grads[mi]);
+        match bi.ln2 {
+            Some(i) => {
+                let mut dx2 = vec![0.0f32; rows * d];
+                matmul_dx(pool, &dm1, p.at(mi), rows, d, f, &mut dx2);
+                let (dg, db) = grads_pair(grads, i);
+                ln_bwd(
+                    &bc.h_mid,
+                    p.at(i),
+                    bc.ln2.as_ref().expect("ln2 cache"),
+                    &dx2,
+                    rows,
+                    d,
+                    dh,
+                    dg,
+                    db,
+                );
+            }
+            None => matmul_dx(pool, &dm1, p.at(mi), rows, d, f, dh),
+        }
+    }
+
+    // attention sub-block: h_mid = h_in + MHA(x1)·wo
+    let mut da = vec![0.0f32; rows * d];
+    matmul_dw(pool, &bc.a, dh, rows, d, d, &mut grads[bi.wq + 3]);
+    matmul_dx(pool, dh, p.at(bi.wq + 3), rows, d, d, &mut da);
+    let dah = split_heads(&da, bsz, l, nh, hd);
+    let (dqh, dkh, dvh) = attn_backward(cfg, &bc.att, &dah, pool);
+    let dqp = merge_heads(&dqh, bsz, l, nh, hd);
+    let dkp = merge_heads(&dkh, bsz, l, nh, hd);
+    let dvp = merge_heads(&dvh, bsz, l, nh, hd);
+
+    matmul_dw(pool, &bc.x1, &dqp, rows, d, d, &mut grads[bi.wq]);
+    matmul_dw(pool, &bc.x1, &dkp, rows, d, d, &mut grads[bi.wq + 1]);
+    matmul_dw(pool, &bc.x1, &dvp, rows, d, d, &mut grads[bi.wq + 2]);
+    match bi.ln1 {
+        Some(i) => {
+            let mut dx1 = vec![0.0f32; rows * d];
+            matmul_dx(pool, &dqp, p.at(bi.wq), rows, d, d, &mut dx1);
+            matmul_dx(pool, &dkp, p.at(bi.wq + 1), rows, d, d, &mut dx1);
+            matmul_dx(pool, &dvp, p.at(bi.wq + 2), rows, d, d, &mut dx1);
+            let (dg, db) = grads_pair(grads, i);
+            ln_bwd(
+                &bc.h_in,
+                p.at(i),
+                bc.ln1.as_ref().expect("ln1 cache"),
+                &dx1,
+                rows,
+                d,
+                dh,
+                dg,
+                db,
+            );
+        }
+        None => {
+            // accumulate straight into dh — matches the pre-refactor
+            // single-buffer ordering bit-for-bit on the legacy preset
+            matmul_dx(pool, &dqp, p.at(bi.wq), rows, d, d, dh);
+            matmul_dx(pool, &dkp, p.at(bi.wq + 1), rows, d, d, dh);
+            matmul_dx(pool, &dvp, p.at(bi.wq + 2), rows, d, d, dh);
+        }
+    }
+}
+
+/// Two adjacent mutable gradient arrays (a LayerNorm's gain and shift).
+fn grads_pair(grads: &mut [Vec<f32>], i: usize) -> (&mut [f32], &mut [f32]) {
+    let (a, b) = grads[i..].split_at_mut(1);
+    (a[0].as_mut_slice(), b[0].as_mut_slice())
+}
+
+/// Loss + gradients for every parameter array (state order) — public so the
+/// finite-difference tests can check the analytic backward directly.
+pub fn loss_and_grads(
+    cfg: &LmConfig,
+    params: &[&Tensor],
+    tokens: &Tensor,
+    pool: &ThreadPool,
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    let p = P::bind(cfg, params)?;
+    let (x, y) = split_xy(cfg, tokens)?;
+    loss_and_grads_inner(cfg, &p, &x, &y, pool)
+}
+
+fn loss_and_grads_inner(
     cfg: &LmConfig,
     p: &P,
     x: &[i32],
@@ -421,87 +1037,60 @@ fn loss_and_grads(
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     let (bsz, l, d, v) = (cfg.batch, cfg.n_ctx, cfg.d_model, cfg.vocab);
     let rows = bsz * l;
-    let (logits, cache) = forward(cfg, p, x, pool)?;
+    let (logits, cache) = forward(cfg, p, x, pool, true)?;
     let mut dlogits = vec![0.0f32; rows * v];
     let loss = cross_entropy(&logits, y, v, Some(&mut dlogits))?;
 
-    let mut d_wte = vec![0.0f32; v * d];
-    let mut d_wpe = vec![0.0f32; l * d];
-    let mut d_wq = vec![0.0f32; d * d];
-    let mut d_wk = vec![0.0f32; d * d];
-    let mut d_wv = vec![0.0f32; d * d];
-    let mut d_wo = vec![0.0f32; d * d];
-    let mut d_wu = vec![0.0f32; d * v];
-    let mut d_bu = vec![0.0f32; v];
+    let shapes = cfg.param_shapes();
+    let mut grads: Vec<Vec<f32>> = shapes
+        .iter()
+        .map(|(_, s)| vec![0.0f32; s.iter().product()])
+        .collect();
+    let idx = p.idx.clone();
 
-    // logits = h1·wu + bu
+    // logits = xf·wu + bu
     for r in 0..rows {
         let dr = &dlogits[r * v..][..v];
-        for (db, g) in d_bu.iter_mut().zip(dr) {
+        for (db, g) in grads[idx.bu].iter_mut().zip(dr) {
             *db += g;
         }
     }
-    matmul_dw(pool, &cache.h1, &dlogits, rows, d, v, &mut d_wu);
-    let mut dh1 = vec![0.0f32; rows * d];
-    matmul_dx(pool, &dlogits, p.wu, rows, d, v, &mut dh1);
+    matmul_dw(pool, &cache.xf, &dlogits, rows, d, v, &mut grads[idx.wu]);
+    let mut dxf = vec![0.0f32; rows * d];
+    matmul_dx(pool, &dlogits, p.at(idx.wu), rows, d, v, &mut dxf);
 
-    // h1 = h0 + a·wo
-    let mut dh0 = dh1.clone();
-    matmul_dw(pool, &cache.a, &dh1, rows, d, d, &mut d_wo);
-    let mut da = vec![0.0f32; rows * d];
-    matmul_dx(pool, &dh1, p.wo, rows, d, d, &mut da);
-
-    // attention
-    let (dqp, dkp, dvp) = match cfg.attn {
-        AttnKind::Softmax => {
-            let sh = LayerShape::cube(bsz, l, d);
-            let scale = 1.0 / (d as f32).sqrt();
-            softmax_bwd(pool, &cache.qp, &cache.kp, &cache.vp, &da, sh, scale)
+    // final LayerNorm (or pass-through)
+    let mut dh = match idx.lnf {
+        Some(i) => {
+            let mut dhl = vec![0.0f32; rows * d];
+            let (dg, db) = grads_pair(&mut grads, i);
+            ln_bwd(
+                &cache.h_last,
+                p.at(i),
+                cache.lnf.as_ref().expect("lnf cache"),
+                &dxf,
+                rows,
+                d,
+                &mut dhl,
+                dg,
+                db,
+            );
+            dhl
         }
-        kind => {
-            let gamma = attn_gamma(kind);
-            // a = u[..d] / z  with z = u[d] + EPS
-            let mut du = vec![0.0f32; rows * (d + 1)];
-            for r in 0..rows {
-                let ur = &cache.u[r * (d + 1)..][..d + 1];
-                let z = ur[d] + EPS;
-                let dar = &da[r * d..][..d];
-                let dur = &mut du[r * (d + 1)..][..d + 1];
-                let mut dot = 0.0f32;
-                for j in 0..d {
-                    dur[j] = dar[j] / z;
-                    dot += dar[j] * ur[j];
-                }
-                dur[d] = -dot / (z * z);
-            }
-            let sh = LayerShape { bh: bsz, n: l, dk: d, dv: d + 1 };
-            let (dfq, dfk, dvext) =
-                la_scan_bwd(pool, &cache.fq, &cache.fk, &cache.vext, &du, sh, gamma);
-            let mut dqp = vec![0.0f32; rows * d];
-            let mut dkp = vec![0.0f32; rows * d];
-            let mut dvp = vec![0.0f32; rows * d];
-            for i in 0..rows * d {
-                dqp[i] = dfq[i] * elu1_grad(cache.qp[i]);
-                dkp[i] = dfk[i] * elu1_grad(cache.kp[i]);
-            }
-            for r in 0..rows {
-                dvp[r * d..][..d].copy_from_slice(&dvext[r * (d + 1)..][..d]);
-            }
-            (dqp, dkp, dvp)
-        }
+        None => dxf,
     };
 
-    // q,k,v = h0 · w{q,k,v}
-    matmul_dw(pool, &cache.h0, &dqp, rows, d, d, &mut d_wq);
-    matmul_dw(pool, &cache.h0, &dkp, rows, d, d, &mut d_wk);
-    matmul_dw(pool, &cache.h0, &dvp, rows, d, d, &mut d_wv);
-    matmul_dx(pool, &dqp, p.wq, rows, d, d, &mut dh0);
-    matmul_dx(pool, &dkp, p.wk, rows, d, d, &mut dh0);
-    matmul_dx(pool, &dvp, p.wv, rows, d, d, &mut dh0);
+    for (bi, bc) in idx.blocks.iter().zip(&cache.blocks).rev() {
+        block_backward(cfg, p, bi, bc, &mut dh, &mut grads, pool);
+    }
 
-    // h0 = wte[x] + wpe
+    // h = wte[x] + wpe
+    let (d_wte, d_wpe) = {
+        let (a, b) = grads.split_at_mut(idx.wpe);
+        (&mut a[idx.wte], &mut b[0])
+    };
     for (r, &tok) in x.iter().enumerate() {
-        let g = &dh0[r * d..][..d];
+        let g = &dh[r * d..][..d];
         let te = &mut d_wte[tok as usize * d..][..d];
         for (dx, gx) in te.iter_mut().zip(g) {
             *dx += gx;
@@ -512,7 +1101,7 @@ fn loss_and_grads(
         }
     }
 
-    Ok((loss, vec![d_wte, d_wpe, d_wq, d_wk, d_wv, d_wo, d_wu, d_bu]))
+    Ok((loss, grads))
 }
 
 /// One Adam step over the full state (the `lm_*_train_step` artifact body).
@@ -524,13 +1113,13 @@ pub fn train_step(
     step: i64,
     pool: &ThreadPool,
 ) -> Result<Vec<Tensor>> {
-    let np = cfg.n_params();
+    let np = cfg.n_param_arrays();
     if state.len() != 3 * np {
         bail!("train_step wants {} state arrays (params ++ m ++ v), got {}", 3 * np, state.len());
     }
     let p = P::bind(cfg, &state[..np])?;
     let (x, y) = split_xy(cfg, tokens)?;
-    let (loss, grads) = loss_and_grads(cfg, &p, &x, &y, pool)?;
+    let (loss, grads) = loss_and_grads_inner(cfg, &p, &x, &y, pool)?;
 
     let step = step.max(0) as usize;
     let lr = cfg.lr_at(step);
@@ -611,17 +1200,76 @@ mod tests {
     }
 
     #[test]
+    fn param_layout_is_consistent() {
+        for cfg in [
+            LmConfig::tiny(AttnKind::Ours),
+            LmConfig::small(AttnKind::Softmax),
+            LmConfig::legacy_tiny(AttnKind::Gated),
+        ] {
+            cfg.validate().unwrap();
+            let shapes = cfg.param_shapes();
+            let idx = cfg.param_idx();
+            assert_eq!(shapes.len(), idx.count);
+            assert_eq!(cfg.n_param_arrays(), shapes.len());
+            assert_eq!(shapes[idx.wte].0, "wte");
+            assert_eq!(shapes[idx.wpe].0, "wpe");
+            assert_eq!(shapes[idx.wu].0, "wu");
+            assert_eq!(shapes[idx.bu].0, "bu");
+            for (b, bi) in idx.blocks.iter().enumerate() {
+                assert_eq!(shapes[bi.wq].0, format!("h{b}.wq"));
+                assert_eq!(shapes[bi.wq + 3].0, format!("h{b}.wo"));
+                if let Some(i) = bi.ln1 {
+                    assert_eq!(shapes[i].0, format!("h{b}.ln1_g"));
+                    assert_eq!(shapes[i + 1].0, format!("h{b}.ln1_b"));
+                }
+                if let Some(mi) = bi.mlp {
+                    assert_eq!(shapes[mi].0, format!("h{b}.w1"));
+                    assert_eq!(shapes[mi + 3].0, format!("h{b}.b2"));
+                }
+            }
+            if let Some(i) = idx.lnf {
+                assert_eq!(shapes[i].0, "lnf_g");
+            }
+            // scalar count matches the sum of array sizes
+            let total: u64 =
+                shapes.iter().map(|(_, s)| s.iter().product::<usize>() as u64).sum();
+            assert_eq!(cfg.n_params(), total);
+        }
+    }
+
+    #[test]
+    fn legacy_layout_matches_pre_refactor_state_order() {
+        let cfg = LmConfig::legacy_tiny(AttnKind::Ours);
+        let names: Vec<String> =
+            cfg.param_shapes().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(
+            names,
+            ["wte", "wpe", "h0.wq", "h0.wk", "h0.wv", "h0.wo", "wu", "bu"]
+        );
+        assert_eq!(cfg.n_param_arrays(), 8);
+    }
+
+    #[test]
     fn init_state_shapes_and_determinism() {
         let cfg = LmConfig::tiny(AttnKind::Ours);
+        let np = cfg.n_param_arrays();
         let a = cfg.init_state(7);
         let b = cfg.init_state(7);
-        assert_eq!(a.len(), 24);
+        assert_eq!(a.len(), 3 * np);
         assert_eq!(a, b);
         let c = cfg.init_state(8);
         assert_ne!(a, c);
         for ((name, shape), t) in cfg.param_shapes().iter().zip(&a) {
             assert_eq!(t.shape(), shape.as_slice(), "{name}");
         }
+        // LayerNorm gains start at one, shifts and biases at zero
+        let idx = cfg.param_idx();
+        let ln1 = idx.blocks[0].ln1.unwrap();
+        assert!(a[ln1].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(a[ln1 + 1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        let mi = idx.blocks[0].mlp.unwrap();
+        assert!(a[mi + 1].as_f32().unwrap().iter().all(|&x| x == 0.0));
+        assert!(a[idx.bu].as_f32().unwrap().iter().all(|&x| x == 0.0));
     }
 
     #[test]
@@ -631,7 +1279,7 @@ mod tests {
             let state = cfg.init_state(0);
             let toks = tiny_tokens(&cfg, 1);
             let s = refs(&state);
-            let loss = eval_loss(&cfg, &s[..cfg.n_params()], &toks, &pool()).unwrap();
+            let loss = eval_loss(&cfg, &s[..cfg.n_param_arrays()], &toks, &pool()).unwrap();
             let uniform = (cfg.vocab as f32).ln();
             assert!(
                 (loss - uniform).abs() < 0.3,
@@ -684,9 +1332,38 @@ mod tests {
             vec![5; cfg.batch * cfg.n_ctx],
         )
         .unwrap();
-        let lg = logits(&cfg, &s[..cfg.n_params()], &toks, &pool()).unwrap();
+        let lg = logits(&cfg, &s[..cfg.n_param_arrays()], &toks, &pool()).unwrap();
         assert_eq!(lg.shape(), &[cfg.batch, cfg.n_ctx, cfg.vocab]);
         assert!(lg.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn split_merge_heads_roundtrip() {
+        let (bsz, l, nh, hd) = (2, 3, 4, 5);
+        let n = bsz * l * nh * hd;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let h = split_heads(&x, bsz, l, nh, hd);
+        let back = merge_heads(&h, bsz, l, nh, hd);
+        assert_eq!(back, x);
+        // H = 1 is the identity layout (the legacy preset's path)
+        let h1 = split_heads(&x, bsz, l, 1, nh * hd);
+        assert_eq!(h1, x);
+    }
+
+    #[test]
+    fn layernorm_normalizes_rows() {
+        let (rows, d) = (4, 16);
+        let x: Vec<f32> = (0..rows * d).map(|i| (i as f32 * 0.37).sin() * 3.0 + 1.0).collect();
+        let g = vec![1.0f32; d];
+        let b = vec![0.0f32; d];
+        let (y, _c) = ln_fwd(&x, &g, &b, rows, d);
+        for r in 0..rows {
+            let yr = &y[r * d..][..d];
+            let m: f32 = yr.iter().sum::<f32>() / d as f32;
+            let var: f32 = yr.iter().map(|&v| (v - m) * (v - m)).sum::<f32>() / d as f32;
+            assert!(m.abs() < 1e-4, "row {r} mean {m}");
+            assert!((var - 1.0).abs() < 1e-2, "row {r} var {var}");
+        }
     }
 
     #[test]
@@ -706,6 +1383,14 @@ mod tests {
         let mut data = vec![0i32; cfg.batch * (cfg.n_ctx + 1)];
         data[3] = cfg.vocab as i32; // one past the end
         let toks = Tensor::i32(vec![cfg.batch, cfg.n_ctx + 1], data).unwrap();
-        assert!(eval_loss(&cfg, &s[..cfg.n_params()], &toks, &pool()).is_err());
+        assert!(eval_loss(&cfg, &s[..cfg.n_param_arrays()], &toks, &pool()).is_err());
+    }
+
+    #[test]
+    fn rejects_indivisible_head_count() {
+        let mut cfg = LmConfig::tiny(AttnKind::Ours);
+        cfg.n_head = 3;
+        assert!(cfg.validate().is_err());
+        assert!(LmConfig::by_preset("huge", AttnKind::Ours).is_err());
     }
 }

@@ -1,4 +1,4 @@
-//! A tiny scoped thread pool — `std::thread` only, no rayon.
+//! A persistent worker pool — `std::thread` only, no rayon.
 //!
 //! Every native kernel is embarrassingly parallel across the folded
 //! batch×heads (`BH`) dimension (and, for the chunkwise form, across
@@ -7,47 +7,208 @@
 //!
 //! - [`ThreadPool::run`] — indexed tasks drained from a shared atomic counter;
 //! - [`ThreadPool::run_chunks`] / [`ThreadPool::run_chunks3`] — safe
-//!   fixed-stride windows of one (or three) output buffers, distributed as
-//!   contiguous stripes;
+//!   fixed-stride windows of one (or three) output buffers;
 //! - [`ThreadPool::run_stripes`] — contiguous row-block partition for the
 //!   dense GEMM wrappers.
+//!
+//! Workers are spawned **once**, at pool construction, and live for the
+//! pool's lifetime; each submission publishes one job (an erased
+//! `Fn(usize)`) that workers and the submitting thread drain together from
+//! an atomic counter. Amortizing thread creation matters for the LM training
+//! loop, which issues hundreds of small GEMMs per optimizer step — at ~10 µs
+//! per `std::thread::spawn`, the old scoped-spawn-per-call design spent more
+//! time creating threads than multiplying matrices on the tiny presets. A
+//! submission is now one mutex hand-off plus a condvar wake (~1 µs).
 //!
 //! Task decomposition is *independent of the worker count*: task `i` always
 //! performs the same arithmetic, so kernel results do not depend on
 //! `RUST_PALLAS_THREADS` — bitwise on the default build; within last-bit FMA
 //! rounding under `--features simd`, where stripe boundaries move rows
 //! between the fused and scalar tile paths (the invariance test pins 1e-5).
-//! Workers are spawned per call via [`std::thread::scope`]; at kernel
-//! granularity (≥ 100 µs of work per call) the ~10 µs spawn cost is noise,
-//! and scoped spawning keeps the pool free of `unsafe` lifetime erasure.
+//!
+//! Nested submissions (a task body calling back into a pool) execute inline
+//! on the calling worker: the pool runs one job at a time, so re-entering
+//! from inside a task would otherwise deadlock. No native kernel nests
+//! today — the guard keeps composition safe as callers evolve.
 
+use std::cell::Cell;
 use std::marker::PhantomData;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Worker-count handle. Cheap to copy; holds no threads between calls.
-#[derive(Debug, Clone, Copy)]
-pub struct ThreadPool {
+thread_local! {
+    /// Set while a pool worker (or a submitter draining its own job) is
+    /// inside a task body — nested `run` calls detect it and go inline.
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Type-erased pointer to the submission's `Fn(usize)`. Valid for the
+/// duration of the owning [`ThreadPool::run`] call: `run` does not return
+/// until every claimed task has finished, and tasks are only claimed while
+/// unfinished work remains.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (bound enforced at submission) and the
+// pointer is only dereferenced between job publication and completion, while
+// the submitter keeps the closure alive on its stack.
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+/// One published submission: the erased task body plus its claim/completion
+/// counters. Workers hold jobs via `Arc`, so a late-waking worker can never
+/// confuse an old job's closure with a new job's counters.
+struct Job {
+    f: RawTask,
+    tasks: usize,
+    next: AtomicUsize,
+    pending: AtomicUsize,
+    /// First task panic, carried back to the submitter (the scoped-spawn
+    /// predecessor propagated panics at scope exit; a hang would be worse).
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+impl Job {
+    /// Claim-and-run until the task counter is exhausted. The last finisher
+    /// wakes the submitter.
+    fn drain(&self, core: &Core) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                return;
+            }
+            // SAFETY: claimed index < tasks, so the submitter is still
+            // blocked in `run` and the closure is alive.
+            let result =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                    (*self.f.0)(i)
+                }));
+            if let Err(payload) = result {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+                // lock-then-notify pairs with the submitter's wait loop
+                let _guard = core.state.lock().unwrap();
+                core.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Publication slot shared between submitters and workers.
+struct Slot {
+    job: Option<Arc<Job>>,
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct Core {
     threads: usize,
+    state: Mutex<Slot>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Serializes submissions: the pool runs one job at a time.
+    submit: Mutex<()>,
+}
+
+impl Core {
+    fn worker(self: Arc<Self>) {
+        IN_POOL_TASK.with(|f| f.set(true));
+        let mut seen = 0u64;
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if st.shutdown {
+                        return;
+                    }
+                    if st.epoch != seen {
+                        seen = st.epoch;
+                        if let Some(j) = st.job.clone() {
+                            break j;
+                        }
+                    }
+                    st = self.work_cv.wait(st).unwrap();
+                }
+            };
+            job.drain(&self);
+        }
+    }
+}
+
+/// Owns the worker threads; dropped when the last [`ThreadPool`] clone goes
+/// away (workers hold only the [`Core`], so there is no keep-alive cycle).
+struct PoolOwner {
+    core: Arc<Core>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Drop for PoolOwner {
+    fn drop(&mut self) {
+        {
+            let mut st = self.core.state.lock().unwrap();
+            st.shutdown = true;
+            self.core.work_cv.notify_all();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cheap-to-clone handle to one persistent worker pool.
+#[derive(Clone)]
+pub struct ThreadPool {
+    inner: Arc<PoolOwner>,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads()).finish()
+    }
 }
 
 impl ThreadPool {
-    /// Pool with an explicit worker count (clamped to ≥ 1).
+    /// Pool with an explicit worker count (clamped to ≥ 1). Spawns
+    /// `threads - 1` persistent workers — the submitting thread is the
+    /// remaining executor, so a 1-thread pool runs everything inline.
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let core = Arc::new(Core {
+            threads,
+            state: Mutex::new(Slot { job: None, epoch: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        });
+        let handles = (1..threads)
+            .map(|_| {
+                let core = core.clone();
+                std::thread::spawn(move || core.worker())
+            })
+            .collect();
+        Self { inner: Arc::new(PoolOwner { core, handles: Mutex::new(handles) }) }
     }
 
     /// Pool sized from `RUST_PALLAS_THREADS`; `0`, unset, or unparseable
     /// means auto-detect ([`std::thread::available_parallelism`]).
     pub fn from_env() -> Self {
+        Self::new(Self::env_threads())
+    }
+
+    /// The worker count [`from_env`](Self::from_env) would use, without
+    /// spawning anything — for callers that only need the number.
+    pub fn env_threads() -> usize {
         let n = std::env::var("RUST_PALLAS_THREADS")
             .ok()
             .and_then(|s| s.trim().parse::<usize>().ok())
             .unwrap_or(0);
         if n == 0 {
-            Self::new(Self::available())
+            Self::available()
         } else {
-            Self::new(n)
+            n
         }
     }
 
@@ -63,29 +224,55 @@ impl ThreadPool {
     }
 
     pub fn threads(&self) -> usize {
-        self.threads
+        self.inner.core.threads
     }
 
     /// Run `f(0) … f(tasks-1)`, drained from a shared counter across the
-    /// pool. Tasks must touch disjoint data (or only `&` data).
+    /// pool. Tasks must touch disjoint data (or only `&` data). Runs inline
+    /// when the pool is size 1, the job is a single task, or the caller is
+    /// itself a pool task (nested submission).
     pub fn run<F>(&self, tasks: usize, f: F)
     where
         F: Fn(usize) + Sync,
     {
-        let workers = self.threads.min(tasks);
-        if workers <= 1 {
+        let workers = self.threads().min(tasks);
+        if workers <= 1 || IN_POOL_TASK.with(|t| t.get()) {
             for i in 0..tasks {
                 f(i);
             }
             return;
         }
-        let next = AtomicUsize::new(0);
-        std::thread::scope(|s| {
-            for _ in 1..workers {
-                s.spawn(|| drain(&next, tasks, &f));
-            }
-            drain(&next, tasks, &f);
+        let core = &self.inner.core;
+        let _submission = core.submit.lock().unwrap();
+        let erased: &(dyn Fn(usize) + Sync) = &f;
+        let job = Arc::new(Job {
+            f: RawTask(erased as *const _),
+            tasks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(tasks),
+            panic: Mutex::new(None),
         });
+        {
+            let mut st = core.state.lock().unwrap();
+            st.job = Some(job.clone());
+            st.epoch += 1;
+            core.work_cv.notify_all();
+        }
+        // the submitter is a full participant (and flags itself so that a
+        // nested submission from inside `f` goes inline instead of
+        // re-entering the single-job pool)
+        IN_POOL_TASK.with(|t| t.set(true));
+        job.drain(core);
+        IN_POOL_TASK.with(|t| t.set(false));
+        let mut st = core.state.lock().unwrap();
+        while job.pending.load(Ordering::Acquire) > 0 {
+            st = core.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        drop(st);
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
     }
 
     /// Split `buf` into `buf.len() / chunk` consecutive windows of `chunk`
@@ -100,23 +287,11 @@ impl ThreadPool {
         }
         debug_assert!(chunk > 0 && buf.len() % chunk == 0);
         let tasks = buf.len() / chunk;
-        let workers = self.threads.min(tasks);
-        if workers <= 1 {
-            for (i, w) in buf.chunks_mut(chunk).enumerate() {
-                f(i, w);
-            }
-            return;
-        }
-        let per = tasks.div_ceil(workers);
-        std::thread::scope(|s| {
-            for (slab_i, slab) in buf.chunks_mut(per * chunk).enumerate() {
-                let f = &f;
-                s.spawn(move || {
-                    for (j, w) in slab.chunks_mut(chunk).enumerate() {
-                        f(slab_i * per + j, w);
-                    }
-                });
-            }
+        let parts = SliceParts::new(buf);
+        self.run(tasks, |i| {
+            // SAFETY: one window per task index — disjoint by construction.
+            let w = unsafe { parts.window(i * chunk, chunk) };
+            f(i, w);
         });
     }
 
@@ -149,33 +324,13 @@ impl ThreadPool {
             b.len() / cb,
             c.len() / cc,
         );
-        let workers = self.threads.min(tasks);
-        if workers <= 1 {
-            for i in 0..tasks {
-                f(i, &mut a[i * ca..][..ca], &mut b[i * cb..][..cb], &mut c[i * cc..][..cc]);
-            }
-            return;
-        }
-        let per = tasks.div_ceil(workers);
-        std::thread::scope(|s| {
-            let mut ia = a.chunks_mut(per * ca);
-            let mut ib = b.chunks_mut(per * cb);
-            let mut ic = c.chunks_mut(per * cc);
-            let mut base = 0usize;
-            while let (Some(sa), Some(sb), Some(sc)) = (ia.next(), ib.next(), ic.next()) {
-                let f = &f;
-                s.spawn(move || {
-                    for (j, ((wa, wb), wc)) in sa
-                        .chunks_mut(ca)
-                        .zip(sb.chunks_mut(cb))
-                        .zip(sc.chunks_mut(cc))
-                        .enumerate()
-                    {
-                        f(base + j, wa, wb, wc);
-                    }
-                });
-                base += per;
-            }
+        let (pa, pb, pc) = (SliceParts::new(a), SliceParts::new(b), SliceParts::new(c));
+        self.run(tasks, |i| {
+            // SAFETY: one window of each buffer per task index — disjoint.
+            let (wa, wb, wc) = unsafe {
+                (pa.window(i * ca, ca), pb.window(i * cb, cb), pc.window(i * cc, cc))
+            };
+            f(i, wa, wb, wc);
         });
     }
 
@@ -191,30 +346,21 @@ impl ThreadPool {
         }
         debug_assert!(row > 0 && buf.len() % row == 0);
         let rows = buf.len() / row;
-        let workers = self.threads.min(rows);
+        let workers = self.threads().min(rows);
         if workers <= 1 {
-            if !buf.is_empty() {
-                f(0, buf);
-            }
+            f(0, buf);
             return;
         }
         let per = rows.div_ceil(workers);
-        std::thread::scope(|s| {
-            for (i, stripe) in buf.chunks_mut(per * row).enumerate() {
-                let f = &f;
-                s.spawn(move || f(i * per, stripe));
-            }
+        let stripes = rows.div_ceil(per);
+        let parts = SliceParts::new(buf);
+        self.run(stripes, |i| {
+            let r0 = i * per;
+            let nrows = per.min(rows - r0);
+            // SAFETY: stripe `i` covers rows [r0, r0+nrows) — disjoint.
+            let w = unsafe { parts.window(r0 * row, nrows * row) };
+            f(r0, w);
         });
-    }
-}
-
-fn drain<F: Fn(usize) + Sync>(next: &AtomicUsize, tasks: usize, f: &F) {
-    loop {
-        let i = next.fetch_add(1, Ordering::Relaxed);
-        if i >= tasks {
-            return;
-        }
-        f(i);
     }
 }
 
@@ -269,6 +415,67 @@ mod tests {
         for (i, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
         }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_submissions() {
+        // the persistent-worker property: one pool, many jobs, no leaks
+        let pool = ThreadPool::new(3);
+        for round in 0..200 {
+            let hits: Vec<AtomicU32> = (0..11).map(|_| AtomicU32::new(0)).collect();
+            pool.run(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "round {round} task {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn nested_submission_runs_inline() {
+        let pool = ThreadPool::new(4);
+        let outer: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+        let inner: Vec<AtomicU32> = (0..8 * 5).map(|_| AtomicU32::new(0)).collect();
+        pool.run(outer.len(), |i| {
+            outer[i].fetch_add(1, Ordering::Relaxed);
+            // would deadlock on a single-job pool without the inline guard
+            pool.run(5, |j| {
+                inner[i * 5 + j].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        for h in outer.iter().chain(inner.iter()) {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                assert!(i != 5, "deliberate task failure");
+            });
+        }));
+        assert!(result.is_err(), "task panic must reach the submitter");
+        // the pool is still functional for the next submission
+        let hits: Vec<AtomicU32> = (0..4).map(|_| AtomicU32::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn clones_share_the_same_workers() {
+        let pool = ThreadPool::new(4);
+        let alias = pool.clone();
+        assert_eq!(alias.threads(), 4);
+        let hits: Vec<AtomicU32> = (0..9).map(|_| AtomicU32::new(0)).collect();
+        alias.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
     #[test]

@@ -1,0 +1,141 @@
+//! Finite-difference check of the multi-layer analytic backward pass: for
+//! every `AttnKind`, perturb a strided sample of every parameter array and
+//! compare the central-difference slope against `model::loss_and_grads`.
+//!
+//! Shapes are kept tiny (the check is O(params × forward)); the step size
+//! and tolerance are set for f32 forwards — central differencing at
+//! `h = 5e-3` keeps truncation ~1e-3 relative while staying well above the
+//! ~1e-6 f32 evaluation noise.
+
+use repro::native::model::{self, AttnKind, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+
+const H: f32 = 5e-3;
+/// |numeric − analytic| must stay below ABS_TOL + REL_TOL·|numeric|.
+const ABS_TOL: f32 = 2e-3;
+const REL_TOL: f32 = 2e-2;
+/// Strided sample size per parameter array.
+const SAMPLES_PER_ARRAY: usize = 9;
+
+/// A deliberately awkward little config: multiple layers and heads, an MLP,
+/// LayerNorms, and a vocab that is not a power of two.
+fn deep_cfg(attn: AttnKind) -> LmConfig {
+    LmConfig {
+        vocab: 13,
+        n_ctx: 5,
+        d_model: 8,
+        n_layer: 2,
+        n_head: 2,
+        d_ff: 12,
+        layernorm: true,
+        batch: 2,
+        attn,
+        lr_max: 1e-2,
+        lr_min: 1e-3,
+        warmup_steps: 2,
+        total_steps: 10,
+    }
+}
+
+fn tokens_for(cfg: &LmConfig, seed: u64) -> Tensor {
+    let mut rng = repro::data::rng::SplitMix64::new(seed);
+    let n = cfg.batch * (cfg.n_ctx + 1);
+    Tensor::i32(
+        vec![cfg.batch, cfg.n_ctx + 1],
+        (0..n).map(|_| rng.below(cfg.vocab) as i32).collect(),
+    )
+    .unwrap()
+}
+
+/// Check every parameter array of `cfg` (strided entries) and return the
+/// worst (error, tolerance, label) triple.
+fn run_grad_check(cfg: &LmConfig, tag: &str) {
+    cfg.validate().unwrap();
+    let pool = ThreadPool::new(2);
+    let state = cfg.init_state(0xC0FFEE);
+    let np = cfg.n_param_arrays();
+    let toks = tokens_for(cfg, 42);
+
+    let refs: Vec<&Tensor> = state[..np].iter().collect();
+    let (_loss, grads) = model::loss_and_grads(cfg, &refs, &toks, &pool).unwrap();
+    assert_eq!(grads.len(), np, "{tag}: gradient count");
+
+    // mutable copy of the params we can poke entries of
+    let mut params: Vec<Tensor> = state[..np].to_vec();
+    let shapes = cfg.param_shapes();
+    let mut checked = 0usize;
+    for ai in 0..np {
+        let len = grads[ai].len();
+        let stride = (len / SAMPLES_PER_ARRAY).max(1);
+        let mut j = 0;
+        while j < len {
+            let eval_at = |params: &[Tensor]| -> f32 {
+                let refs: Vec<&Tensor> = params.iter().collect();
+                model::eval_loss(cfg, &refs, &toks, &pool).unwrap()
+            };
+            let orig = match &params[ai] {
+                Tensor::F32 { data, .. } => data[j],
+                _ => unreachable!("params are f32"),
+            };
+            let set = |params: &mut [Tensor], v: f32| {
+                if let Tensor::F32 { data, .. } = &mut params[ai] {
+                    data[j] = v;
+                }
+            };
+            set(&mut params, orig + H);
+            let lp = eval_at(&params);
+            set(&mut params, orig - H);
+            let lm = eval_at(&params);
+            set(&mut params, orig);
+            let numeric = (lp - lm) / (2.0 * H);
+            let analytic = grads[ai][j];
+            let tol = ABS_TOL + REL_TOL * numeric.abs();
+            assert!(
+                (numeric - analytic).abs() < tol,
+                "{tag}: {}[{j}] numeric {numeric} vs analytic {analytic} (tol {tol})",
+                shapes[ai].0
+            );
+            checked += 1;
+            j += stride;
+        }
+    }
+    assert!(checked >= np * 2, "{tag}: only {checked} entries checked");
+}
+
+#[test]
+fn grad_check_ours_deep() {
+    run_grad_check(&deep_cfg(AttnKind::Ours), "ours");
+}
+
+#[test]
+fn grad_check_gated_deep() {
+    run_grad_check(&deep_cfg(AttnKind::Gated), "gated");
+}
+
+#[test]
+fn grad_check_softmax_deep() {
+    run_grad_check(&deep_cfg(AttnKind::Softmax), "softmax");
+}
+
+/// The legacy architecture exercises the no-LayerNorm / no-MLP backward
+/// branches (gradients accumulate straight into the residual stream).
+#[test]
+fn grad_check_legacy_architecture() {
+    let cfg = LmConfig {
+        vocab: 13,
+        n_ctx: 5,
+        d_model: 8,
+        n_layer: 1,
+        n_head: 1,
+        d_ff: 0,
+        layernorm: false,
+        batch: 2,
+        attn: AttnKind::Ours,
+        lr_max: 1e-2,
+        lr_min: 1e-3,
+        warmup_steps: 2,
+        total_steps: 10,
+    };
+    run_grad_check(&cfg, "legacy");
+}

@@ -112,3 +112,73 @@ fn all_three_attention_variants_train() {
         assert!(outcome.final_loss.is_finite(), "{attn} diverged");
     }
 }
+
+/// The deep preset end-to-end through the Trainer: BPE vocab 512, 4 layers ×
+/// 4 heads, checkpoints with the current layout header. Kept to 2 steps and
+/// one attention variant — the debug-profile step is ~100× a tiny step; the
+/// per-variant coverage lives in `lm_small_artifacts_step_for_every_attn`.
+#[test]
+fn lm_small_trains_end_to_end() {
+    let engine = Engine::discover().unwrap();
+    let dir = tmpdir("small");
+    let run_cfg = RunConfig {
+        train: TrainSection {
+            preset: "small".into(),
+            attn: "ours".into(),
+            steps: 2,
+            eval_every: 0,
+            ckpt_every: 0,
+            seed: 0,
+        },
+        data: DataSection { corpus_bytes: 130_000, val_frac: 0.1 },
+        output: OutputSection { dir },
+    };
+    let trainer = Trainer::new(&engine, run_cfg).unwrap();
+    assert_eq!(trainer.vocab_size(), 512);
+    assert!(trainer.n_params() > 500_000, "n_params {}", trainer.n_params());
+    assert_eq!(trainer.model_field("n_layer"), Some(4));
+    assert_eq!(trainer.model_field("n_head"), Some(4));
+    let outcome = trainer.run().unwrap();
+    assert!(outcome.final_loss.is_finite());
+    // fresh 512-vocab model starts near ln(512) ≈ 6.24
+    assert!(outcome.final_loss < 7.0, "loss {}", outcome.final_loss);
+    let ckpt = Checkpoint::load(outcome.run_dir.join("final.ckpt")).unwrap();
+    assert_eq!(ckpt.meta.artifact_tag, "lm_small_ours");
+    assert!(ckpt.meta.require_current_layout().is_ok());
+    assert!(trainer.restore(&ckpt).is_ok());
+}
+
+/// Every attention variant of the deep preset executes one optimizer step
+/// through the artifact interface (init → train_step) and yields a sane
+/// fresh-model loss.
+#[test]
+fn lm_small_artifacts_step_for_every_attn() {
+    use repro::runtime::Tensor;
+    let engine = Engine::discover().unwrap();
+    for attn in ["ours", "gated", "softmax"] {
+        let init = engine.load(&format!("lm_small_{attn}_init")).unwrap();
+        let state = init.run(&[Tensor::scalar_i32(7)]).unwrap();
+        let step_exe = engine.load(&format!("lm_small_{attn}_train_step")).unwrap();
+        let batch = step_exe.meta.batch.unwrap();
+        let n_ctx = step_exe.meta.model_field_usize("n_ctx").unwrap();
+        let vocab = step_exe.meta.model_field_usize("vocab_size").unwrap();
+        let n = batch * (n_ctx + 1);
+        let toks = Tensor::i32(
+            vec![batch, n_ctx + 1],
+            (0..n).map(|i| (i % 311) as i32).collect(),
+        )
+        .unwrap();
+        let step_t = Tensor::scalar_i32(0);
+        let mut args: Vec<&Tensor> = state.iter().collect();
+        args.push(&toks);
+        args.push(&step_t);
+        let out = step_exe.run_refs(&args).unwrap();
+        assert_eq!(out.len(), 1 + state.len(), "{attn}");
+        let loss = out[0].scalar().unwrap();
+        let uniform = (vocab as f32).ln();
+        assert!(
+            (loss - uniform).abs() < 0.5,
+            "{attn}: fresh deep-model loss {loss} vs ln(V) {uniform}"
+        );
+    }
+}

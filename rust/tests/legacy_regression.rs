@@ -1,0 +1,407 @@
+//! Regression pin: the block-structured model, configured as
+//! [`LmConfig::legacy_tiny`] (1 layer, 1 head, no LayerNorm, no MLP), must
+//! reproduce the pre-refactor hand-unrolled model's loss trajectory and
+//! parameter updates exactly.
+//!
+//! The oracle below is the pre-refactor `model.rs` forward/backward/Adam,
+//! carried over verbatim (modulo plumbing) from commit a351c70 so the
+//! comparison survives even though the original code path is gone. Both
+//! sides share the same kernels, GEMM wrappers, and init, so the
+//! trajectories must agree to f32 round-off (the block path adds only
+//! layout-identity head reshapes).
+
+use repro::native::gemm;
+use repro::native::kernels::{la_scan_bwd, la_scan_fwd, softmax_bwd, softmax_fwd, LayerShape};
+use repro::native::model::{self, AttnKind, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+
+const EPS: f32 = 1e-6;
+const GATED_DECAY: f32 = 0.95;
+
+// --- the pre-refactor single-layer model, kept as the oracle -----------------
+
+struct OldParams {
+    wte: Vec<f32>,
+    wpe: Vec<f32>,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    wu: Vec<f32>,
+    bu: Vec<f32>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul(
+    pool: &ThreadPool,
+    x: &[f32],
+    w: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    gemm::par_gemm_nn(pool, x, w, rows, cin, cout, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_dx(
+    pool: &ThreadPool,
+    dout: &[f32],
+    w: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    dx: &mut [f32],
+) {
+    gemm::par_gemm_nt(pool, dout, w, rows, cout, cin, dx);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn matmul_dw(
+    pool: &ThreadPool,
+    x: &[f32],
+    dout: &[f32],
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    dw: &mut [f32],
+) {
+    gemm::par_gemm_tn(pool, x, dout, cin, rows, cout, dw);
+}
+
+fn elu1(x: f32) -> f32 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp()
+    }
+}
+
+fn elu1_grad(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else {
+        x.exp()
+    }
+}
+
+struct OldCache {
+    h0: Vec<f32>,
+    qp: Vec<f32>,
+    kp: Vec<f32>,
+    vp: Vec<f32>,
+    a: Vec<f32>,
+    fq: Vec<f32>,
+    fk: Vec<f32>,
+    vext: Vec<f32>,
+    u: Vec<f32>,
+    h1: Vec<f32>,
+}
+
+fn attn_gamma(kind: AttnKind) -> f32 {
+    match kind {
+        AttnKind::Gated => GATED_DECAY,
+        _ => 1.0,
+    }
+}
+
+fn old_forward(
+    cfg: &LmConfig,
+    p: &OldParams,
+    x: &[i32],
+    pool: &ThreadPool,
+) -> (Vec<f32>, OldCache) {
+    let (bsz, l, d, v) = (cfg.batch, cfg.n_ctx, cfg.d_model, cfg.vocab);
+    let rows = bsz * l;
+    let mut h0 = vec![0.0f32; rows * d];
+    for (r, &tok) in x.iter().enumerate() {
+        let te = &p.wte[tok as usize * d..][..d];
+        let pe = &p.wpe[(r % l) * d..][..d];
+        let hr = &mut h0[r * d..][..d];
+        for ((h, a), b) in hr.iter_mut().zip(te).zip(pe) {
+            *h = a + b;
+        }
+    }
+    let mut qp = vec![0.0f32; rows * d];
+    let mut kp = vec![0.0f32; rows * d];
+    let mut vp = vec![0.0f32; rows * d];
+    matmul(pool, &h0, &p.wq, rows, d, d, &mut qp);
+    matmul(pool, &h0, &p.wk, rows, d, d, &mut kp);
+    matmul(pool, &h0, &p.wv, rows, d, d, &mut vp);
+
+    let (a, fq, fk, vext, u) = match cfg.attn {
+        AttnKind::Softmax => {
+            let sh = LayerShape::cube(bsz, l, d);
+            let scale = 1.0 / (d as f32).sqrt();
+            let a = softmax_fwd(pool, &qp, &kp, &vp, sh, scale);
+            (a, Vec::new(), Vec::new(), Vec::new(), Vec::new())
+        }
+        kind => {
+            let gamma = attn_gamma(kind);
+            let fq: Vec<f32> = qp.iter().map(|&x| elu1(x)).collect();
+            let fk: Vec<f32> = kp.iter().map(|&x| elu1(x)).collect();
+            let mut vext = vec![0.0f32; rows * (d + 1)];
+            for r in 0..rows {
+                vext[r * (d + 1)..][..d].copy_from_slice(&vp[r * d..][..d]);
+                vext[r * (d + 1) + d] = 1.0;
+            }
+            let sh = LayerShape { bh: bsz, n: l, dk: d, dv: d + 1 };
+            let u = la_scan_fwd(pool, &fq, &fk, &vext, sh, gamma);
+            let mut a = vec![0.0f32; rows * d];
+            for r in 0..rows {
+                let ur = &u[r * (d + 1)..][..d + 1];
+                let z = ur[d] + EPS;
+                let ar = &mut a[r * d..][..d];
+                for (ax, ux) in ar.iter_mut().zip(ur) {
+                    *ax = ux / z;
+                }
+            }
+            (a, fq, fk, vext, u)
+        }
+    };
+
+    let mut h1 = h0.clone();
+    matmul(pool, &a, &p.wo, rows, d, d, &mut h1);
+    let mut logits = vec![0.0f32; rows * v];
+    for r in 0..rows {
+        logits[r * v..][..v].copy_from_slice(&p.bu);
+    }
+    matmul(pool, &h1, &p.wu, rows, d, v, &mut logits);
+    (logits, OldCache { h0, qp, kp, vp, a, fq, fk, vext, u, h1 })
+}
+
+fn old_cross_entropy(logits: &[f32], y: &[i32], vocab: usize, dlogits: &mut [f32]) -> f32 {
+    let rows = y.len();
+    let inv_rows = 1.0 / rows as f32;
+    let mut loss = 0.0f64;
+    for (r, &target) in y.iter().enumerate() {
+        let lr = &logits[r * vocab..][..vocab];
+        let m = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &x in lr {
+            z += (x - m).exp();
+        }
+        loss += (m as f64) + (z as f64).ln() - lr[target as usize] as f64;
+        let dr = &mut dlogits[r * vocab..][..vocab];
+        let inv_z = 1.0 / z;
+        for (dx, &x) in dr.iter_mut().zip(lr) {
+            *dx = (x - m).exp() * inv_z * inv_rows;
+        }
+        dr[target as usize] -= inv_rows;
+    }
+    (loss / rows as f64) as f32
+}
+
+fn old_loss_and_grads(
+    cfg: &LmConfig,
+    p: &OldParams,
+    x: &[i32],
+    y: &[i32],
+    pool: &ThreadPool,
+) -> (f32, Vec<Vec<f32>>) {
+    let (bsz, l, d, v) = (cfg.batch, cfg.n_ctx, cfg.d_model, cfg.vocab);
+    let rows = bsz * l;
+    let (logits, cache) = old_forward(cfg, p, x, pool);
+    let mut dlogits = vec![0.0f32; rows * v];
+    let loss = old_cross_entropy(&logits, y, v, &mut dlogits);
+
+    let mut d_wte = vec![0.0f32; v * d];
+    let mut d_wpe = vec![0.0f32; l * d];
+    let mut d_wq = vec![0.0f32; d * d];
+    let mut d_wk = vec![0.0f32; d * d];
+    let mut d_wv = vec![0.0f32; d * d];
+    let mut d_wo = vec![0.0f32; d * d];
+    let mut d_wu = vec![0.0f32; d * v];
+    let mut d_bu = vec![0.0f32; v];
+
+    for r in 0..rows {
+        let dr = &dlogits[r * v..][..v];
+        for (db, g) in d_bu.iter_mut().zip(dr) {
+            *db += g;
+        }
+    }
+    matmul_dw(pool, &cache.h1, &dlogits, rows, d, v, &mut d_wu);
+    let mut dh1 = vec![0.0f32; rows * d];
+    matmul_dx(pool, &dlogits, &p.wu, rows, d, v, &mut dh1);
+
+    let mut dh0 = dh1.clone();
+    matmul_dw(pool, &cache.a, &dh1, rows, d, d, &mut d_wo);
+    let mut da = vec![0.0f32; rows * d];
+    matmul_dx(pool, &dh1, &p.wo, rows, d, d, &mut da);
+
+    let (dqp, dkp, dvp) = match cfg.attn {
+        AttnKind::Softmax => {
+            let sh = LayerShape::cube(bsz, l, d);
+            let scale = 1.0 / (d as f32).sqrt();
+            softmax_bwd(pool, &cache.qp, &cache.kp, &cache.vp, &da, sh, scale)
+        }
+        kind => {
+            let gamma = attn_gamma(kind);
+            let mut du = vec![0.0f32; rows * (d + 1)];
+            for r in 0..rows {
+                let ur = &cache.u[r * (d + 1)..][..d + 1];
+                let z = ur[d] + EPS;
+                let dar = &da[r * d..][..d];
+                let dur = &mut du[r * (d + 1)..][..d + 1];
+                let mut dot = 0.0f32;
+                for j in 0..d {
+                    dur[j] = dar[j] / z;
+                    dot += dar[j] * ur[j];
+                }
+                dur[d] = -dot / (z * z);
+            }
+            let sh = LayerShape { bh: bsz, n: l, dk: d, dv: d + 1 };
+            let (dfq, dfk, dvext) =
+                la_scan_bwd(pool, &cache.fq, &cache.fk, &cache.vext, &du, sh, gamma);
+            let mut dqp = vec![0.0f32; rows * d];
+            let mut dkp = vec![0.0f32; rows * d];
+            let mut dvp = vec![0.0f32; rows * d];
+            for i in 0..rows * d {
+                dqp[i] = dfq[i] * elu1_grad(cache.qp[i]);
+                dkp[i] = dfk[i] * elu1_grad(cache.kp[i]);
+            }
+            for r in 0..rows {
+                dvp[r * d..][..d].copy_from_slice(&dvext[r * (d + 1)..][..d]);
+            }
+            (dqp, dkp, dvp)
+        }
+    };
+
+    matmul_dw(pool, &cache.h0, &dqp, rows, d, d, &mut d_wq);
+    matmul_dw(pool, &cache.h0, &dkp, rows, d, d, &mut d_wk);
+    matmul_dw(pool, &cache.h0, &dvp, rows, d, d, &mut d_wv);
+    matmul_dx(pool, &dqp, &p.wq, rows, d, d, &mut dh0);
+    matmul_dx(pool, &dkp, &p.wk, rows, d, d, &mut dh0);
+    matmul_dx(pool, &dvp, &p.wv, rows, d, d, &mut dh0);
+
+    for (r, &tok) in x.iter().enumerate() {
+        let g = &dh0[r * d..][..d];
+        let te = &mut d_wte[tok as usize * d..][..d];
+        for (dx, gx) in te.iter_mut().zip(g) {
+            *dx += gx;
+        }
+        let pe = &mut d_wpe[(r % l) * d..][..d];
+        for (dx, gx) in pe.iter_mut().zip(g) {
+            *dx += gx;
+        }
+    }
+
+    (loss, vec![d_wte, d_wpe, d_wq, d_wk, d_wv, d_wo, d_wu, d_bu])
+}
+
+/// One Adam step on a flat `Vec<Vec<f32>>` state, matching the in-model
+/// optimizer constant-for-constant.
+#[allow(clippy::too_many_arguments)]
+fn old_train_step(
+    cfg: &LmConfig,
+    params: &mut [Vec<f32>],
+    m: &mut [Vec<f32>],
+    v: &mut [Vec<f32>],
+    x: &[i32],
+    y: &[i32],
+    step: usize,
+    pool: &ThreadPool,
+) -> f32 {
+    let p = OldParams {
+        wte: params[0].clone(),
+        wpe: params[1].clone(),
+        wq: params[2].clone(),
+        wk: params[3].clone(),
+        wv: params[4].clone(),
+        wo: params[5].clone(),
+        wu: params[6].clone(),
+        bu: params[7].clone(),
+    };
+    let (loss, grads) = old_loss_and_grads(cfg, &p, x, y, pool);
+    let lr = cfg.lr_at(step);
+    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+    let t1 = (step + 1) as i32;
+    let bc1 = 1.0 - b1.powi(t1);
+    let bc2 = 1.0 - b2.powi(t1);
+    for i in 0..8 {
+        for j in 0..grads[i].len() {
+            let g = grads[i][j];
+            let m_new = b1 * m[i][j] + (1.0 - b1) * g;
+            let v_new = b2 * v[i][j] + (1.0 - b2) * g * g;
+            let mh = m_new / bc1;
+            let vh = v_new / bc2;
+            params[i][j] -= lr * mh / (vh.sqrt() + eps);
+            m[i][j] = m_new;
+            v[i][j] = v_new;
+        }
+    }
+    loss
+}
+
+// --- the comparison -----------------------------------------------------------
+
+fn tensor_data(t: &Tensor) -> Vec<f32> {
+    match t {
+        Tensor::F32 { data, .. } => data.clone(),
+        _ => panic!("expected f32 tensor"),
+    }
+}
+
+/// Structured batch (a short token cycle) — the same shape the historic
+/// overfit test used, so the trajectory moves quickly and meaningfully.
+fn cycle_tokens(cfg: &LmConfig) -> (Tensor, Vec<i32>, Vec<i32>) {
+    let n = cfg.batch * (cfg.n_ctx + 1);
+    let flat: Vec<i32> = (0..n).map(|i| (i % 17) as i32).collect();
+    let toks = Tensor::i32(vec![cfg.batch, cfg.n_ctx + 1], flat.clone()).unwrap();
+    let row = cfg.n_ctx + 1;
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for b in 0..cfg.batch {
+        let r = &flat[b * row..][..row];
+        x.extend_from_slice(&r[..cfg.n_ctx]);
+        y.extend_from_slice(&r[1..]);
+    }
+    (toks, x, y)
+}
+
+#[test]
+fn legacy_preset_matches_pre_refactor_trajectory() {
+    const STEPS: usize = 8;
+    const TOL: f32 = 1e-4;
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::legacy_tiny(attn);
+        assert_eq!(cfg.n_param_arrays(), 8, "legacy layout changed");
+        let pool = ThreadPool::new(2);
+        let (toks, x, y) = cycle_tokens(&cfg);
+
+        // oracle state: plain vectors, seeded by the same init
+        let init = cfg.init_state(3);
+        let mut old_p: Vec<Vec<f32>> = init[..8].iter().map(tensor_data).collect();
+        let mut old_m: Vec<Vec<f32>> = init[8..16].iter().map(tensor_data).collect();
+        let mut old_v: Vec<Vec<f32>> = init[16..24].iter().map(tensor_data).collect();
+
+        // refactored state: driven through the public train_step
+        let mut state = cfg.init_state(3);
+
+        for step in 0..STEPS {
+            let old_loss =
+                old_train_step(&cfg, &mut old_p, &mut old_m, &mut old_v, &x, &y, step, &pool);
+            let refs: Vec<&Tensor> = state.iter().collect();
+            let out = model::train_step(&cfg, &refs, &toks, step as i64, &pool).unwrap();
+            let new_loss = out[0].scalar().unwrap();
+            assert!(
+                (old_loss - new_loss).abs() < TOL,
+                "{attn:?} step {step}: oracle loss {old_loss} vs refactored {new_loss}"
+            );
+            state = out[1..].to_vec();
+        }
+
+        // final parameters agree array-by-array
+        for (i, old) in old_p.iter().enumerate() {
+            let new = tensor_data(&state[i]);
+            let worst = old
+                .iter()
+                .zip(&new)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(worst < TOL, "{attn:?} param array {i}: max abs diff {worst}");
+        }
+    }
+}

@@ -117,6 +117,7 @@ fn prop_checkpoint_roundtrips_random_states() {
                 step: rng.below(10_000),
                 loss: rng.next_f64() as f32,
                 seed: rng.next_u64(),
+                layout: 1 + rng.below(3) as u32,
             },
             state,
         };
