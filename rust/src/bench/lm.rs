@@ -1,7 +1,10 @@
 //! End-to-end LM training measurement shared by `repro bench-native` and the
 //! fig5 bench harness: median per-step wall-clock plus the loss endpoints of
 //! a short run — the deep-model `ours` vs `softmax` cost/convergence
-//! comparison in one reusable piece.
+//! comparison in one reusable piece. Every point is measured twice, through
+//! the in-place (owned-state) step and the preserved rebuild step, so the
+//! allocator win of the mutable-state optimizer is a recorded artifact; the
+//! [`measure_adamw`] microbench isolates the optimizer update itself.
 
 use std::time::Instant;
 
@@ -10,9 +13,12 @@ use anyhow::{ensure, Result};
 use crate::coordinator::config::{DataSection, OutputSection, TrainSection};
 use crate::coordinator::{RunConfig, Trainer};
 use crate::data::{Batcher, PackedDataset, Split};
-use crate::runtime::Engine;
+use crate::native::model::{self, AttnKind, LmConfig};
+use crate::native::pool::ThreadPool;
+use crate::runtime::{Engine, Tensor};
 
-use super::report::LmBenchPoint;
+use super::report::{LmBenchPoint, OptBenchPoint};
+use super::timing::TimingStats;
 
 /// Corpus size every LM bench trains on.
 pub const BENCH_CORPUS_BYTES: usize = 1 << 20;
@@ -42,8 +48,16 @@ pub fn build_preset_dataset(engine: &Engine, preset: &str) -> Result<PackedDatas
     Ok(ds)
 }
 
+/// p50 of a sample vector (NaN-tolerant: total order, no panic).
+fn p50(mut times: Vec<f64>) -> f64 {
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
 /// Time `steps` optimizer steps of one (preset, attn) pair on a prebuilt
-/// dataset; returns the measured point for reports.
+/// dataset — once through the preserved rebuild step (the allocation-heavy
+/// baseline), once through the in-place owned-state step — and return the
+/// measured point for reports. Both runs see the identical batch sequence.
 pub fn measure_lm(
     engine: &Engine,
     preset: &str,
@@ -52,25 +66,40 @@ pub fn measure_lm(
     ds: &PackedDataset,
 ) -> Result<LmBenchPoint> {
     ensure!(steps > 0, "measure_lm needs at least one step");
+    ensure!(steps > 0, "measure_lm needs at least one step");
     let trainer = Trainer::new(engine, run_config(preset, attn, steps))?;
     eprintln!("  {}", trainer.model_summary());
     let mut batcher = Batcher::new(ds, Split::Train, trainer.batch_size(), 0)?;
+    let batches: Vec<Tensor> =
+        (0..steps).map(|_| batcher.next_batch()).collect::<Result<_>>()?;
+
+    // rebuild baseline: fresh state tensors allocated every step
+    let mut state = trainer.init_state()?;
+    let mut times_rebuild = Vec::with_capacity(steps);
+    for (step, batch) in batches.iter().enumerate() {
+        let t0 = Instant::now();
+        let (_m, new_state) = trainer.step_rebuild(state, batch, step)?;
+        times_rebuild.push(t0.elapsed().as_secs_f64());
+        state = new_state;
+    }
+
+    // in-place: the state buffers are mutated, zero per-step state allocation
     let mut state = trainer.init_state()?;
     let mut times = Vec::with_capacity(steps);
     let mut loss_first = f32::NAN;
     let mut loss_last = f32::NAN;
-    for step in 0..steps {
-        let batch = batcher.next_batch()?;
+    let mut grad_norm_last = f32::NAN;
+    for (step, batch) in batches.iter().enumerate() {
         let t0 = Instant::now();
-        let (loss, new_state) = trainer.step(state, &batch, step)?;
+        let m = trainer.step(&mut state, batch, step)?;
         times.push(t0.elapsed().as_secs_f64());
-        state = new_state;
         if step == 0 {
-            loss_first = loss;
+            loss_first = m.loss;
         }
-        loss_last = loss;
+        loss_last = m.loss;
+        grad_norm_last = m.grad_norm;
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
     Ok(LmBenchPoint {
         preset: preset.to_string(),
         attn: attn.to_string(),
@@ -80,8 +109,74 @@ pub fn measure_lm(
         n_params: trainer.n_params(),
         steps,
         tokens_per_step: trainer.batch_size() * (trainer.seq_len() + 1),
-        step_s_p50: times[times.len() / 2],
+        step_s_p50: p50(times),
+        step_s_p50_rebuild: p50(times_rebuild),
+        weight_decay: trainer.train_field("weight_decay").unwrap_or(0.0),
+        clip_norm: trainer.train_field("clip_norm").unwrap_or(0.0),
+        grad_norm_last,
         loss_first,
         loss_last,
+    })
+}
+
+/// Microbench the AdamW state update alone (no forward/backward): fixed
+/// synthetic gradients against the same initial state, `reps` repetitions of
+/// the fused in-place route vs the preserved rebuild route. This isolates
+/// exactly what the owned-state refactor removed — the per-step allocation
+/// and re-materialization of `3·np` state tensors.
+pub fn measure_adamw(
+    preset: &str,
+    attn: &str,
+    reps: usize,
+    warmup: usize,
+) -> Result<OptBenchPoint> {
+    ensure!(reps > 0, "measure_adamw needs at least one rep");
+    let cfg = LmConfig::by_preset(preset, AttnKind::from_name(attn)?)?;
+    let pool = ThreadPool::from_env();
+    let grads: Vec<Vec<f32>> = cfg
+        .param_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, (_, shape))| {
+            let t = Tensor::randn(shape.clone(), 0xADA7 + i as u64);
+            t.as_f32().map(|d| d.to_vec())
+        })
+        .collect::<Result<_>>()?;
+
+    // in-place: one state, mutated every rep
+    let mut state = cfg.init_state(0);
+    let mut t_inplace = Vec::with_capacity(reps);
+    for rep in 0..warmup + reps {
+        let t0 = Instant::now();
+        model::adamw_update_mut(&cfg, &mut state, &grads, rep, &pool)?;
+        if rep >= warmup {
+            t_inplace.push(t0.elapsed().as_secs_f64());
+        }
+    }
+
+    // rebuild: every rep allocates the full replacement state
+    let mut state = cfg.init_state(0);
+    let mut t_rebuild = Vec::with_capacity(reps);
+    for rep in 0..warmup + reps {
+        let refs: Vec<&Tensor> = state.iter().collect();
+        let t0 = Instant::now();
+        let (_norm, new_state) = model::adamw_update_rebuild(&cfg, &refs, &grads, rep)?;
+        if rep >= warmup {
+            t_rebuild.push(t0.elapsed().as_secs_f64());
+        }
+        drop(refs);
+        state = new_state;
+    }
+
+    let inplace = TimingStats::from_samples(t_inplace)
+        .ok_or_else(|| anyhow::anyhow!("no in-place samples"))?;
+    let rebuild = TimingStats::from_samples(t_rebuild)
+        .ok_or_else(|| anyhow::anyhow!("no rebuild samples"))?;
+    Ok(OptBenchPoint {
+        preset: preset.to_string(),
+        n_params: cfg.n_params(),
+        n_param_arrays: cfg.n_param_arrays(),
+        inplace_s_p50: inplace.p50,
+        rebuild_s_p50: rebuild.p50,
     })
 }

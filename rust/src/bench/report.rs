@@ -71,20 +71,63 @@ pub struct LmBenchPoint {
     pub n_params: u64,
     pub steps: usize,
     pub tokens_per_step: usize,
+    /// p50 per-step wall-clock through the in-place (owned-state) route.
     pub step_s_p50: f64,
+    /// p50 per-step wall-clock through the preserved rebuild route.
+    pub step_s_p50_rebuild: f64,
+    /// AdamW knobs baked into the artifact.
+    pub weight_decay: f64,
+    pub clip_norm: f64,
+    /// Pre-clip global gradient norm at the final measured step.
+    pub grad_norm_last: f32,
     pub loss_first: f32,
     pub loss_last: f32,
+}
+
+impl LmBenchPoint {
+    /// Full-step speedup of the in-place route over the rebuild route.
+    pub fn speedup_inplace(&self) -> f64 {
+        if self.step_s_p50 > 0.0 {
+            self.step_s_p50_rebuild / self.step_s_p50
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One measured point of the AdamW-update microbench: the optimizer state
+/// update alone (fixed gradients, no forward/backward), in-place vs the
+/// preserved rebuild — the direct evidence for the owned-state refactor.
+#[derive(Debug, Clone)]
+pub struct OptBenchPoint {
+    pub preset: String,
+    pub n_params: u64,
+    pub n_param_arrays: usize,
+    pub inplace_s_p50: f64,
+    pub rebuild_s_p50: f64,
+}
+
+impl OptBenchPoint {
+    pub fn speedup_inplace(&self) -> f64 {
+        if self.inplace_s_p50 > 0.0 {
+            self.rebuild_s_p50 / self.inplace_s_p50
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Machine-readable perf trajectory artifact (`BENCH_native.json`): one entry
 /// per artifact measured on the parallel/tiled path, joined with the scalar
 /// single-thread reference baseline for the speedup column, plus the LM
-/// per-step section (`lm`). Times are nanoseconds (median plus p10/p90
-/// spread) for kernels, seconds for LM steps.
+/// per-step section (`lm`, in-place vs rebuild) and the AdamW-update
+/// microbench (`opt`). Times are nanoseconds (median plus p10/p90 spread)
+/// for kernels, seconds for LM/optimizer steps.
 pub fn bench_native_json(
     parallel: &[SweepPoint],
     scalar: &[SweepPoint],
     lm: &[LmBenchPoint],
+    opt: &[OptBenchPoint],
     threads: usize,
     chunk: usize,
 ) -> String {
@@ -125,38 +168,84 @@ pub fn bench_native_json(
                 ("steps", Json::num(p.steps as f64)),
                 ("tokens_per_step", Json::num(p.tokens_per_step as f64)),
                 ("step_s_p50", Json::num(p.step_s_p50)),
+                ("step_s_p50_rebuild", Json::num(p.step_s_p50_rebuild)),
+                ("speedup_inplace", Json::num(p.speedup_inplace())),
+                ("weight_decay", Json::num(p.weight_decay)),
+                ("clip_norm", Json::num(p.clip_norm)),
+                (
+                    "grad_norm_last",
+                    if p.grad_norm_last.is_finite() {
+                        Json::num(p.grad_norm_last as f64)
+                    } else {
+                        Json::Null
+                    },
+                ),
                 ("tokens_per_s", Json::num(p.tokens_per_step as f64 / p.step_s_p50.max(1e-12))),
                 ("loss_first", Json::num(p.loss_first as f64)),
                 ("loss_last", Json::num(p.loss_last as f64)),
             ])
         })
         .collect();
+    let opt_arts: Vec<Json> = opt
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("preset", Json::str(p.preset.clone())),
+                ("n_params", Json::num(p.n_params as f64)),
+                ("n_param_arrays", Json::num(p.n_param_arrays as f64)),
+                ("inplace_s_p50", Json::num(p.inplace_s_p50)),
+                ("rebuild_s_p50", Json::num(p.rebuild_s_p50)),
+                ("speedup_inplace", Json::num(p.speedup_inplace())),
+            ])
+        })
+        .collect();
     Json::obj(vec![
-        ("schema", Json::str("bench_native/v2")),
+        ("schema", Json::str("bench_native/v3")),
         ("threads", Json::num(threads as f64)),
         ("chunk", Json::num(chunk as f64)),
         ("artifacts", Json::Arr(arts)),
         ("lm", Json::Arr(lm_arts)),
+        ("opt", Json::Arr(opt_arts)),
     ])
     .to_string()
+}
+
+/// Human-readable companion of the AdamW-update microbench (`opt` section).
+pub fn bench_opt_markdown(opt: &[OptBenchPoint]) -> String {
+    let mut out = String::from(
+        "| preset | params | rebuild p50 | in-place p50 | speedup |\n|---|---|---|---|---|\n",
+    );
+    for p in opt {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {:.2}× |",
+            p.preset,
+            p.n_params,
+            fmt_time(p.rebuild_s_p50),
+            fmt_time(p.inplace_s_p50),
+            p.speedup_inplace(),
+        );
+    }
+    out
 }
 
 /// Human-readable companion of the LM section of [`bench_native_json`].
 pub fn bench_lm_markdown(lm: &[LmBenchPoint]) -> String {
     let mut out = String::from(
-        "| preset | attn | layers×heads | params | step p50 | tok/s | loss (first→last) |\n\
-         |---|---|---|---|---|---|---|\n",
+        "| preset | attn | layers×heads | params | step p50 | vs rebuild | tok/s | loss (first→last) |\n\
+         |---|---|---|---|---|---|---|---|\n",
     );
     for p in lm {
         let _ = writeln!(
             out,
-            "| {} | {} | {}×{} | {} | {} | {:.0} | {:.4} → {:.4} |",
+            "| {} | {} | {}×{} | {} | {} | {:.2}× | {:.0} | {:.4} → {:.4} |",
             p.preset,
             p.attn,
             p.n_layer,
             p.n_head,
             p.n_params,
             fmt_time(p.step_s_p50),
+            p.speedup_inplace(),
             p.tokens_per_step as f64 / p.step_s_p50.max(1e-12),
             p.loss_first,
             p.loss_last,
@@ -350,12 +439,23 @@ mod tests {
             steps: 6,
             tokens_per_step: 1032,
             step_s_p50: 0.5,
+            step_s_p50_rebuild: 0.6,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            grad_norm_last: 2.5,
             loss_first: 6.2,
             loss_last: 5.9,
         }];
-        let text = bench_native_json(&par, &base, &lm, 4, 128);
+        let opt = vec![OptBenchPoint {
+            preset: "small".into(),
+            n_params: 934_016,
+            n_param_arrays: 38,
+            inplace_s_p50: 0.002,
+            rebuild_s_p50: 0.005,
+        }];
+        let text = bench_native_json(&par, &base, &lm, &opt, 4, 128);
         let v = Json::parse(&text).unwrap();
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v2"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v3"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
         let arts = v.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
@@ -369,10 +469,44 @@ mod tests {
         assert_eq!(lms[0].get("preset").unwrap().as_str(), Some("small"));
         assert_eq!(lms[0].get("n_params").unwrap().as_usize(), Some(934_016));
         assert!((lms[0].get("tokens_per_s").unwrap().as_f64().unwrap() - 2064.0).abs() < 1.0);
+        assert!((lms[0].get("speedup_inplace").unwrap().as_f64().unwrap() - 1.2).abs() < 1e-9);
+        assert_eq!(lms[0].get("weight_decay").unwrap().as_f64(), Some(0.01));
+        assert_eq!(lms[0].get("clip_norm").unwrap().as_f64(), Some(1.0));
+        let opts = v.get("opt").unwrap().as_arr().unwrap();
+        assert_eq!(opts.len(), 1);
+        assert!((opts[0].get("speedup_inplace").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
         let md = bench_native_markdown(&par, &base);
         assert!(md.contains("4.00×"), "markdown:\n{md}");
         let lmd = bench_lm_markdown(&lm);
         assert!(lmd.contains("small") && lmd.contains("4×4"), "lm markdown:\n{lmd}");
+        assert!(lmd.contains("1.20×"), "lm markdown missing speedup:\n{lmd}");
+        let omd = bench_opt_markdown(&opt);
+        assert!(omd.contains("2.50×"), "opt markdown:\n{omd}");
+    }
+
+    #[test]
+    fn non_finite_grad_norm_emits_valid_json() {
+        let lm = vec![LmBenchPoint {
+            preset: "tiny".into(),
+            attn: "ours".into(),
+            n_layer: 2,
+            n_head: 2,
+            d_model: 64,
+            n_params: 104_000,
+            steps: 1,
+            tokens_per_step: 520,
+            step_s_p50: 0.1,
+            step_s_p50_rebuild: 0.1,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            grad_norm_last: f32::NAN,
+            loss_first: 5.5,
+            loss_last: 5.5,
+        }];
+        let text = bench_native_json(&[], &[], &lm, &[], 1, 128);
+        let v = Json::parse(&text).unwrap();
+        let lms = v.get("lm").unwrap().as_arr().unwrap();
+        assert_eq!(lms[0].get("grad_norm_last"), Some(&Json::Null));
     }
 
     #[test]

@@ -4,6 +4,10 @@
 #[derive(Debug, Clone, Copy)]
 pub struct TimingStats {
     pub reps: usize,
+    /// Non-finite samples (NaN/∞) filtered out before the statistics were
+    /// computed — nonzero flags a corrupted measurement, it must not abort
+    /// the whole sweep.
+    pub dropped: usize,
     pub mean: f64,
     pub trimmed_mean: f64,
     pub p10: f64,
@@ -16,10 +20,14 @@ pub struct TimingStats {
 
 impl TimingStats {
     pub fn from_samples(mut samples: Vec<f64>) -> Option<Self> {
+        let raw = samples.len();
+        samples.retain(|x| x.is_finite());
+        let dropped = raw - samples.len();
         if samples.is_empty() {
             return None;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total order — a NaN slipping past the filter must never panic here
+        samples.sort_by(f64::total_cmp);
         let n = samples.len();
         let mean = samples.iter().sum::<f64>() / n as f64;
         // drop top/bottom ≥10% (at least one sample each side when n ≥ 3)
@@ -29,6 +37,7 @@ impl TimingStats {
         let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
         Some(Self {
             reps: n,
+            dropped,
             mean,
             trimmed_mean: trimmed,
             p10: pct(0.10),
@@ -91,6 +100,21 @@ mod tests {
     #[test]
     fn empty_is_none() {
         assert!(TimingStats::from_samples(vec![]).is_none());
+    }
+
+    #[test]
+    fn non_finite_samples_are_filtered_not_fatal() {
+        // a NaN in the middle used to abort the whole sweep via
+        // sort_by(partial_cmp().unwrap())
+        let s = TimingStats::from_samples(vec![2.0, f64::NAN, 1.0, f64::INFINITY, 3.0]).unwrap();
+        assert_eq!(s.reps, 3);
+        assert_eq!(s.dropped, 2);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.mean.is_finite() && s.trimmed_mean.is_finite());
+        // all-non-finite collapses to None instead of panicking
+        assert!(TimingStats::from_samples(vec![f64::NAN, f64::NAN]).is_none());
     }
 
     #[test]

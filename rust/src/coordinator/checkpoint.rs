@@ -40,7 +40,16 @@ impl CheckpointMeta {
         Json::obj(vec![
             ("artifact_tag", Json::str(self.artifact_tag.clone())),
             ("step", Json::num(self.step as f64)),
-            ("loss", Json::num(self.loss as f64)),
+            // a non-finite loss (e.g. a zero-step run that never measured
+            // one) must not poison the JSON trailer — NaN is not JSON
+            (
+                "loss",
+                if self.loss.is_finite() {
+                    Json::num(self.loss as f64)
+                } else {
+                    Json::Null
+                },
+            ),
             // u64 doesn't survive a JSON f64 round-trip above 2^53 — store
             // the seed as a decimal string (found by prop_coordinator).
             ("seed", Json::str(self.seed.to_string())),
@@ -56,7 +65,10 @@ impl CheckpointMeta {
                 .ok_or_else(|| anyhow!("bad artifact_tag"))?
                 .to_string(),
             step: v.req("step")?.as_usize().ok_or_else(|| anyhow!("bad step"))?,
-            loss: v.req("loss")?.as_f64().ok_or_else(|| anyhow!("bad loss"))? as f32,
+            loss: match v.req("loss")? {
+                Json::Null => f32::NAN,
+                other => other.as_f64().ok_or_else(|| anyhow!("bad loss"))? as f32,
+            },
             seed: match v.req("seed")? {
                 Json::Str(s) => s.parse().map_err(|_| anyhow!("bad seed"))?,
                 other => other.as_f64().ok_or_else(|| anyhow!("bad seed"))? as u64,
@@ -92,6 +104,13 @@ pub struct Checkpoint {
 
 impl Checkpoint {
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        Self::write(path, &self.meta, &self.state)
+    }
+
+    /// Serialize a training state directly from borrows — the trainer
+    /// checkpoints its live (in-place-updated) state without cloning the
+    /// full `params ++ m ++ v` vector first.
+    pub fn write(path: impl AsRef<Path>, meta: &CheckpointMeta, state: &[Tensor]) -> Result<()> {
         let tmp = path.as_ref().with_extension("tmp");
         {
             let mut f = std::io::BufWriter::new(
@@ -99,8 +118,8 @@ impl Checkpoint {
                     .with_context(|| format!("creating {tmp:?}"))?,
             );
             f.write_all(MAGIC)?;
-            f.write_all(&(self.state.len() as u32).to_le_bytes())?;
-            for t in &self.state {
+            f.write_all(&(state.len() as u32).to_le_bytes())?;
+            for t in state {
                 let (tag, bytes): (u8, Vec<u8>) = match t {
                     Tensor::F32 { data, .. } => {
                         (0, data.iter().flat_map(|v| v.to_le_bytes()).collect())
@@ -116,7 +135,7 @@ impl Checkpoint {
                 }
                 f.write_all(&bytes)?;
             }
-            let meta = self.meta.to_json().to_string().into_bytes();
+            let meta = meta.to_json().to_string().into_bytes();
             f.write_all(&(meta.len() as u64).to_le_bytes())?;
             f.write_all(&meta)?;
         }
@@ -230,6 +249,32 @@ mod tests {
         let err = back.meta.require_current_layout().unwrap_err().to_string();
         assert!(err.contains("layout v1"), "unhelpful error: {err}");
         assert!(sample().meta.require_current_layout().is_ok());
+    }
+
+    #[test]
+    fn non_finite_loss_survives_roundtrip_as_nan() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("nan_loss.ckpt");
+        let mut ck = sample();
+        ck.meta.loss = f32::NAN;
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert!(back.meta.loss.is_nan());
+        assert_eq!(back.meta.step, ck.meta.step);
+        assert_eq!(back.state, ck.state);
+    }
+
+    #[test]
+    fn borrowed_write_matches_owned_save() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample();
+        let p1 = dir.join("owned.ckpt");
+        let p2 = dir.join("borrowed.ckpt");
+        ck.save(&p1).unwrap();
+        Checkpoint::write(&p2, &ck.meta, &ck.state).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
     }
 
     #[test]

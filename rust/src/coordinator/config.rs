@@ -26,7 +26,8 @@ pub struct TrainSection {
 /// `[data]` section.
 #[derive(Debug, Clone)]
 pub struct DataSection {
-    /// Corpus size in bytes to synthesize.
+    /// Corpus size in bytes to synthesize; 0 = auto (the preset-scaled hint
+    /// from the artifact manifest — bigger presets generate bigger corpora).
     pub corpus_bytes: usize,
     /// Validation fraction.
     pub val_frac: f64,
@@ -34,7 +35,7 @@ pub struct DataSection {
 
 impl Default for DataSection {
     fn default() -> Self {
-        Self { corpus_bytes: 2 << 20, val_frac: 0.05 }
+        Self { corpus_bytes: 0, val_frac: 0.05 }
     }
 }
 
@@ -114,9 +115,8 @@ impl RunConfig {
         if !ATTNS.contains(&self.train.attn.as_str()) {
             bail!("train.attn must be one of {ATTNS:?}, got {:?}", self.train.attn);
         }
-        if self.train.steps == 0 {
-            bail!("train.steps must be positive");
-        }
+        // steps == 0 is legal: the run saves the freshly-initialized state
+        // and exits (useful for producing an init checkpoint)
         if !(0.0..1.0).contains(&self.data.val_frac) {
             bail!("data.val_frac must be in [0, 1)");
         }
@@ -164,9 +164,10 @@ mod tests {
     }
 
     #[test]
-    fn rejects_zero_steps() {
-        let bad = SAMPLE.replace("steps = 200", "steps = 0");
-        assert!(RunConfig::from_toml(&bad).is_err());
+    fn zero_steps_is_a_valid_init_only_run() {
+        let zero = SAMPLE.replace("steps = 200", "steps = 0");
+        let c = RunConfig::from_toml(&zero).unwrap();
+        assert_eq!(c.train.steps, 0);
     }
 
     #[test]
@@ -175,5 +176,7 @@ mod tests {
         let c = RunConfig::from_toml(min).unwrap();
         assert_eq!(c.output.dir, "runs");
         assert_eq!(c.train.eval_every, 50);
+        // corpus size defaults to auto (preset-scaled)
+        assert_eq!(c.data.corpus_bytes, 0);
     }
 }

@@ -22,6 +22,9 @@ pub struct StepRecord {
     pub tokens: usize,
     /// Validation loss, when measured at this step.
     pub val_loss: Option<f32>,
+    /// Pre-clip global gradient norm, when the artifact reports one (absent
+    /// in logs written before the AdamW refactor).
+    pub grad_norm: Option<f32>,
 }
 
 impl StepRecord {
@@ -36,6 +39,10 @@ impl StepRecord {
         ];
         if let Some(v) = self.val_loss {
             pairs.push(("val_loss", Json::num(v as f64)));
+        }
+        if let Some(g) = self.grad_norm {
+            // guard the JSONL against a non-finite norm from a diverged step
+            pairs.push(("grad_norm", if g.is_finite() { Json::num(g as f64) } else { Json::Null }));
         }
         Json::obj(pairs)
     }
@@ -52,6 +59,7 @@ impl StepRecord {
             lr: num("lr")?,
             tokens: num("tokens")? as usize,
             val_loss: v.get("val_loss").and_then(Json::as_f64).map(|x| x as f32),
+            grad_norm: v.get("grad_norm").and_then(Json::as_f64).map(|x| x as f32),
         })
     }
 }
@@ -108,14 +116,19 @@ impl MetricsLog {
         Ok(())
     }
 
-    /// Write the Fig-5 CSV: step,wall_s,loss,val_loss,lr.
+    /// Write the Fig-5 CSV: step,wall_s,loss,val_loss,lr,tokens,grad_norm.
     pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
         let mut f = std::fs::File::create(path.as_ref())
             .with_context(|| format!("creating {:?}", path.as_ref()))?;
-        writeln!(f, "step,wall_s,loss,val_loss,lr,tokens")?;
+        writeln!(f, "step,wall_s,loss,val_loss,lr,tokens,grad_norm")?;
         for r in &self.records {
             let val = r.val_loss.map(|v| v.to_string()).unwrap_or_default();
-            writeln!(f, "{},{:.3},{},{},{:.6e},{}", r.step, r.wall_s, r.loss, val, r.lr, r.tokens)?;
+            let gn = r.grad_norm.map(|g| g.to_string()).unwrap_or_default();
+            writeln!(
+                f,
+                "{},{:.3},{},{},{:.6e},{},{}",
+                r.step, r.wall_s, r.loss, val, r.lr, r.tokens, gn
+            )?;
         }
         Ok(())
     }
@@ -145,6 +158,7 @@ mod tests {
             lr: 1e-3,
             tokens: 1024,
             val_loss: if step % 2 == 0 { Some(loss + 0.1) } else { None },
+            grad_norm: Some(0.5),
         }
     }
 
@@ -175,6 +189,16 @@ mod tests {
         assert_eq!(back.records()[1].loss, 4.0);
         assert_eq!(back.records()[0].val_loss, None);
         assert_eq!(back.records()[1].val_loss, Some(4.1));
+        assert_eq!(back.records()[0].grad_norm, Some(0.5));
+    }
+
+    #[test]
+    fn non_finite_grad_norm_keeps_jsonl_parseable() {
+        let mut r = rec(1, 5.0);
+        r.grad_norm = Some(f32::INFINITY);
+        let line = r.to_json().to_string();
+        let back = StepRecord::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.grad_norm, None);
     }
 
     #[test]

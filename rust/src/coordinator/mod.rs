@@ -16,4 +16,4 @@ pub use checkpoint::{Checkpoint, PARAM_LAYOUT_VERSION};
 pub use config::{RunConfig, TrainSection};
 pub use metrics::{MetricsLog, StepRecord};
 pub use schedule::CosineSchedule;
-pub use trainer::{TrainOutcome, Trainer};
+pub use trainer::{StepMetrics, TrainOutcome, Trainer};

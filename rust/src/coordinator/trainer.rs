@@ -1,10 +1,13 @@
 //! The training loop: drive the `lm_*` artifacts from Rust.
 //!
 //! Per step: pull a batch from the [`Batcher`], execute the train-step
-//! artifact (state ++ tokens ++ step → loss ++ state'), log metrics, and
-//! periodically evaluate / checkpoint. The state is a `Vec<Tensor>` that
-//! round-trips through the backend by reference — the native backend
-//! computes on it in place conceptually; a device backend may shadow it.
+//! artifact through the **owned-state** route
+//! ([`Executable::run_owned`]: state is mutated in place, the step returns
+//! loss + pre-clip grad norm), log metrics, and periodically evaluate /
+//! checkpoint. On the native backend the `params ++ m ++ v` buffers are
+//! updated with zero per-step state allocation; other backends transparently
+//! fall back to execute-and-write-back. Checkpoints serialize straight from
+//! borrows of the live state ([`Checkpoint::write`]), never from a clone.
 
 use std::path::PathBuf;
 use std::rc::Rc;
@@ -19,6 +22,15 @@ use super::checkpoint::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
 use super::config::RunConfig;
 use super::metrics::{MetricsLog, StepRecord};
 use super::schedule::CosineSchedule;
+
+/// Metrics reported by one optimizer step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepMetrics {
+    pub loss: f32,
+    /// Global gradient norm *before* clipping — the divergence early-warning
+    /// signal the run logs alongside the loss.
+    pub grad_norm: f32,
+}
 
 /// Result summary of a training run.
 #[derive(Debug)]
@@ -125,11 +137,29 @@ impl<'e> Trainer<'e> {
         self.seq_len
     }
 
+    /// Train-section field of the train-step artifact (weight_decay,
+    /// clip_norm, corpus_bytes, …).
+    pub fn train_field(&self, key: &str) -> Option<f64> {
+        self.step_exe.meta.train_field_f64(key)
+    }
+
+    /// Corpus size this run trains on: the run config's explicit
+    /// `data.corpus_bytes`, or — when left on auto (0) — the preset-scaled
+    /// hint baked into the artifact manifest.
+    pub fn corpus_bytes(&self) -> usize {
+        if self.cfg.data.corpus_bytes > 0 {
+            return self.cfg.data.corpus_bytes;
+        }
+        self.train_field("corpus_bytes")
+            .map(|b| b as usize)
+            .unwrap_or(crate::data::DEFAULT_CORPUS_BYTES)
+    }
+
     /// Build the synthetic dataset matching this model's tokenizer contract.
     pub fn build_dataset(&self) -> Result<(ByteTokenizer, PackedDataset)> {
         let corpus = CorpusGenerator::new(CorpusConfig {
             seed: self.cfg.train.seed,
-            target_bytes: self.cfg.data.corpus_bytes,
+            target_bytes: self.corpus_bytes(),
             ..Default::default()
         })
         .generate();
@@ -179,10 +209,9 @@ impl<'e> Trainer<'e> {
         for step in 0..self.cfg.train.steps {
             let t_step = Instant::now();
             let batch = batcher.next_batch()?;
-            let (loss, new_state) = self.step(state, &batch, step)?;
-            state = new_state;
-            last_loss = loss;
-            if !loss.is_finite() {
+            let m = self.step(&mut state, &batch, step)?;
+            last_loss = m.loss;
+            if !m.loss.is_finite() {
                 bail!("loss diverged (non-finite) at step {step}");
             }
 
@@ -195,22 +224,24 @@ impl<'e> Trainer<'e> {
             }
             log.push(StepRecord {
                 step,
-                loss,
+                loss: m.loss,
                 wall_s: t_start.elapsed().as_secs_f64(),
                 step_s: t_step.elapsed().as_secs_f64(),
                 lr: self.schedule.lr(step),
                 tokens: tokens_per_step,
                 val_loss: if do_eval { last_val } else { None },
+                grad_norm: Some(m.grad_norm),
             });
 
             if self.cfg.train.ckpt_every > 0 && (step + 1) % self.cfg.train.ckpt_every == 0 {
-                self.save_checkpoint(&state, step, loss,
+                self.save_checkpoint(&state, step, m.loss,
                                      &run_dir.join(format!("step{:06}.ckpt", step + 1)))?;
             }
         }
 
         let wall = t_start.elapsed().as_secs_f64();
-        self.save_checkpoint(&state, self.cfg.train.steps - 1, last_loss,
+        // a zero-step run still writes the initial state (step stays 0)
+        self.save_checkpoint(&state, self.cfg.train.steps.saturating_sub(1), last_loss,
                              &run_dir.join("final.ckpt"))?;
         log.write_jsonl(run_dir.join("metrics.jsonl"))?;
         log.write_csv(run_dir.join("metrics.csv"))?;
@@ -225,27 +256,50 @@ impl<'e> Trainer<'e> {
         })
     }
 
-    /// Execute one optimizer step; returns (loss, new state).
+    /// Execute one optimizer step through the owned-state route: `state` is
+    /// updated in place (no per-step state reallocation on the native
+    /// backend); returns the step metrics.
     pub fn step(
+        &self,
+        state: &mut [Tensor],
+        batch: &Tensor,
+        step: usize,
+    ) -> Result<StepMetrics> {
+        let step_t = Tensor::scalar_i32(step as i32);
+        let out = self.step_exe.run_owned(state, &[batch, &step_t])?;
+        if out.len() != 2 {
+            bail!(
+                "train_step returned {} auxiliary outputs (expected loss + grad_norm)",
+                out.len()
+            );
+        }
+        Ok(StepMetrics { loss: out[0].scalar()?, grad_norm: out[1].scalar()? })
+    }
+
+    /// The preserved rebuild route: same step, but the backend returns a
+    /// freshly-allocated state vector. Kept as the in-place path's parity
+    /// oracle and the `bench-native` speedup baseline.
+    pub fn step_rebuild(
         &self,
         state: Vec<Tensor>,
         batch: &Tensor,
         step: usize,
-    ) -> Result<(f32, Vec<Tensor>)> {
+    ) -> Result<(StepMetrics, Vec<Tensor>)> {
         let step_t = Tensor::scalar_i32(step as i32);
         let mut args: Vec<&Tensor> = state.iter().collect();
         args.push(batch);
         args.push(&step_t);
         let mut out = self.step_exe.run_refs(&args)?;
-        if out.len() != 1 + state.len() {
+        if out.len() != 2 + state.len() {
             bail!(
                 "train_step returned {} outputs (expected {})",
                 out.len(),
-                1 + state.len()
+                2 + state.len()
             );
         }
         let loss = out.remove(0).scalar()?;
-        Ok((loss, out))
+        let grad_norm = out.remove(0).scalar()?;
+        Ok((StepMetrics { loss, grad_norm }, out))
     }
 
     /// Evaluate held-out loss on one batch.
@@ -263,17 +317,19 @@ impl<'e> Trainer<'e> {
         loss: f32,
         path: &PathBuf,
     ) -> Result<()> {
-        Checkpoint {
-            meta: CheckpointMeta {
+        // serialize straight from the borrowed live state — no full-state
+        // clone per checkpoint
+        Checkpoint::write(
+            path,
+            &CheckpointMeta {
                 artifact_tag: self.cfg.artifact_tag(),
                 step,
                 loss,
                 seed: self.cfg.train.seed,
                 layout: PARAM_LAYOUT_VERSION,
             },
-            state: state.to_vec(),
-        }
-        .save(path)
+            state,
+        )
     }
 
     /// Restore a checkpoint into trainer state (resume support). Rejects

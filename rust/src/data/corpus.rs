@@ -11,6 +11,11 @@
 
 use super::rng::SplitMix64;
 
+/// Base synthetic-corpus size in bytes — the unit the LM presets scale from
+/// (`LmConfig::corpus_bytes_hint`) and the trainer's fallback when an
+/// artifact manifest carries no `corpus_bytes` field.
+pub const DEFAULT_CORPUS_BYTES: usize = 2 << 20;
+
 /// Corpus synthesis parameters.
 #[derive(Debug, Clone)]
 pub struct CorpusConfig {
@@ -29,7 +34,7 @@ impl Default for CorpusConfig {
     fn default() -> Self {
         Self {
             seed: 0,
-            target_bytes: 2 << 20,
+            target_bytes: DEFAULT_CORPUS_BYTES,
             vocab_words: 512,
             zipf_s: 1.1,
             mix: (0.6, 0.3, 0.1),

@@ -14,6 +14,6 @@ pub mod rng;
 pub mod tokenizer;
 
 pub use batcher::Batcher;
-pub use corpus::{CorpusConfig, CorpusGenerator};
+pub use corpus::{CorpusConfig, CorpusGenerator, DEFAULT_CORPUS_BYTES};
 pub use dataset::{PackedDataset, Split};
 pub use tokenizer::ByteTokenizer;

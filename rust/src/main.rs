@@ -28,18 +28,21 @@ repro — linear-attention reproduction launcher
 USAGE: repro <subcommand> [flags]
 
 SUBCOMMANDS
-  train          --preset tiny --attn ours --steps 200 --out runs
+  train          --preset tiny|small|medium --attn ours --steps 200 --out runs
                  [--config run.toml] [--seed 0] [--eval-every 25]
+                 [--corpus-bytes 0]  (0 = auto, scaled to the preset)
   bench-layer    --kind layer_fwd|layer_fwdbwd [--impls a,b,c] [--reps 5]
                  [--warmup 2] [--csv out.csv]
   bench-native   [--kinds layer_fwd,layer_fwdbwd] [--impls ours,ours_scan]
                  [--reps 5] [--warmup 2] [--max-n 0] [--out BENCH_native.json]
                  [--lm-presets tiny,small] [--lm-attns ours,softmax]
-                 [--lm-steps 6]
+                 [--lm-steps 6] [--opt-reps 20]
                  measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
-                 against the scalar single-thread reference, plus per-step
-                 LM training cost/loss for each (preset, attn) pair, and
-                 writes the machine-readable speedup artifact
+                 against the scalar single-thread reference, per-step LM
+                 training cost/loss for each (preset, attn) pair through
+                 both the in-place and the preserved rebuild optimizer
+                 routes, the AdamW-update microbench (in-place vs rebuild),
+                 and writes the machine-readable speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   report         [--runs runs]
@@ -77,7 +80,10 @@ fn cmd_train(args: &Args) -> Result<()> {
                 ckpt_every: args.get_usize("ckpt-every", 0)?,
                 seed: args.get_u64("seed", 0)?,
             },
-            data: DataSection::default(),
+            data: DataSection {
+                corpus_bytes: args.get_usize("corpus-bytes", 0)?,
+                ..DataSection::default()
+            },
             output: OutputSection { dir: args.get_or("out", "runs").to_string() },
         },
     };
@@ -149,6 +155,7 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     let lm_presets = split_list(args.get_or("lm-presets", "tiny,small"));
     let lm_attns = split_list(args.get_or("lm-attns", "ours,softmax"));
     let lm_steps = args.get_usize("lm-steps", 6)?;
+    let opt_reps = args.get_usize("opt-reps", 20)?;
 
     let threads = ThreadPool::env_threads();
     let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
@@ -193,14 +200,29 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
         }
     }
 
+    // AdamW-update microbench: the in-place-vs-rebuild optimizer speedup,
+    // isolated from the forward/backward cost
+    let mut opt_points = Vec::new();
+    if opt_reps > 0 {
+        for preset in &lm_presets {
+            let attn = lm_attns.first().map(String::as_str).unwrap_or("ours");
+            eprintln!("bench-native: adamw {preset} ({opt_reps} reps, in-place vs rebuild) …");
+            opt_points.push(repro::bench::lm::measure_adamw(preset, attn, opt_reps, warmup)?);
+        }
+    }
+
     println!("{}", rpt::bench_native_markdown(&parallel, &scalar));
     if !lm_points.is_empty() {
         println!("{}", rpt::bench_lm_markdown(&lm_points));
+    }
+    if !opt_points.is_empty() {
+        println!("{}", rpt::bench_opt_markdown(&opt_points));
     }
     let json = rpt::bench_native_json(
         &parallel,
         &scalar,
         &lm_points,
+        &opt_points,
         threads,
         repro::native::ours_chunk(),
     );

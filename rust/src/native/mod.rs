@@ -12,8 +12,9 @@
 //! - [`gemm`] — the cache-blocked f32 matmul microkernels shared by the
 //!   chunkwise/quadratic kernels and the LM's linear layers;
 //! - [`model`] — the block-structured Transformer LM (train step / eval /
-//!   logits / init; `tiny` and `small` presets) with a hand-derived backward
-//!   pass and in-tree Adam;
+//!   logits / init; `tiny`, `small` and `medium` presets) with a
+//!   hand-derived backward pass and in-tree AdamW (in-place mutable-state
+//!   route plus the preserved rebuild baseline);
 //! - [`NativeBackend`] — the [`Backend`] impl: a code-built [`Manifest`]
 //!   mirroring the AOT artifact naming scheme (`layer_<impl>_<kind>_n<N>_d<D>`,
 //!   `lm_<preset>_<attn>_<op>`, `quickstart_la_*`) and per-artifact executors.
@@ -255,6 +256,32 @@ struct LmExec {
 }
 
 impl Executor for LmExec {
+    /// The owned-state hot path: `lm_train_step` runs the fused in-place
+    /// AdamW step, mutating the `params ++ m ++ v` buffers directly instead
+    /// of reallocating `3·np` tensors per call. Other LM ops carry no
+    /// mutable state and reject the route.
+    fn execute_mut(&self, state: &mut [Tensor], inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let np = self.cfg.n_param_arrays();
+        match self.op {
+            LmOp::TrainStep => {
+                if state.len() != 3 * np || inputs.len() != 2 {
+                    bail!(
+                        "lm_train_step (owned) wants {} state arrays + 2 inputs \
+                         (tokens, step), got {} + {}",
+                        3 * np,
+                        state.len(),
+                        inputs.len()
+                    );
+                }
+                let step = model::scalar_i64(inputs[1])?;
+                let (loss, grad_norm) =
+                    model::train_step_mut(&self.cfg, state, inputs[0], step, &self.pool)?;
+                Ok(vec![Tensor::scalar_f32(loss), Tensor::scalar_f32(grad_norm)])
+            }
+            _ => bail!("execute_mut is only supported for lm_train_step artifacts"),
+        }
+    }
+
     fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let np = self.cfg.n_param_arrays();
         match self.op {
@@ -349,8 +376,9 @@ fn lm_meta(cfg: &LmConfig, preset: &str, attn_name: &str, kind: &str) -> Artifac
                 state_shapes.iter().enumerate().map(|(i, s)| f32_spec(i, s)).collect();
             ins.push(i32_spec(3 * np, &train_tokens));
             ins.push(i32_spec(3 * np + 1, &[]));
-            let mut outs = vec![f32_spec(0, &[])];
-            outs.extend(state_shapes.iter().enumerate().map(|(i, s)| f32_spec(i + 1, s)));
+            // outputs: loss, pre-clip grad norm, then the refreshed state
+            let mut outs = vec![f32_spec(0, &[]), f32_spec(1, &[])];
+            outs.extend(state_shapes.iter().enumerate().map(|(i, s)| f32_spec(i + 2, s)));
             (ins, outs)
         }
         "lm_eval" => {
@@ -407,6 +435,9 @@ fn lm_meta(cfg: &LmConfig, preset: &str, attn_name: &str, kind: &str) -> Artifac
             ("lr_min", Json::num(cfg.lr_min)),
             ("warmup_steps", Json::num(cfg.warmup_steps as f64)),
             ("total_steps", Json::num(cfg.total_steps as f64)),
+            ("weight_decay", Json::num(cfg.weight_decay)),
+            ("clip_norm", Json::num(cfg.clip_norm)),
+            ("corpus_bytes", Json::num(cfg.corpus_bytes_hint() as f64)),
         ])),
         inputs,
         outputs,
@@ -503,6 +534,10 @@ mod tests {
             "lm_small_gated_eval",
             "lm_small_softmax_init",
             "lm_small_ours_logits",
+            "lm_medium_ours_train_step",
+            "lm_medium_gated_eval",
+            "lm_medium_softmax_init",
+            "lm_medium_ours_logits",
         ] {
             assert!(m.get(name).is_ok(), "missing {name}");
         }
@@ -540,11 +575,34 @@ mod tests {
         assert_eq!(step.model_field_usize("n_layer"), Some(2));
         assert_eq!(step.model_field_usize("n_head"), Some(2));
         assert!(step.train_field_f64("lr_max").unwrap() > 0.0);
+        assert_eq!(step.train_field_f64("weight_decay"), Some(cfg.weight_decay));
+        assert_eq!(step.train_field_f64("clip_norm"), Some(cfg.clip_norm));
+        assert_eq!(
+            step.train_field_f64("corpus_bytes"),
+            Some(cfg.corpus_bytes_hint() as f64)
+        );
         assert_eq!(step.inputs.len(), 3 * np + 2);
-        assert_eq!(step.outputs.len(), 3 * np + 1);
+        // outputs: loss + grad_norm + refreshed state
+        assert_eq!(step.outputs.len(), 3 * np + 2);
         let init = m.get("lm_tiny_ours_init").unwrap();
         assert_eq!(init.inputs.len(), 1);
         assert_eq!(init.outputs.len(), 3 * np);
+    }
+
+    #[test]
+    fn lm_medium_is_registered_with_larger_corpus() {
+        let m = build_manifest();
+        let cfg = LmConfig::medium(AttnKind::Ours);
+        let step = m.get("lm_medium_ours_train_step").unwrap();
+        assert_eq!(step.n_params, Some(cfg.n_params()));
+        assert_eq!(step.model_field_usize("n_layer"), Some(8));
+        assert_eq!(step.model_field_usize("n_head"), Some(8));
+        assert_eq!(step.model_field_usize("d_model"), Some(256));
+        let small = m.get("lm_small_ours_train_step").unwrap();
+        assert!(
+            step.train_field_f64("corpus_bytes").unwrap()
+                > small.train_field_f64("corpus_bytes").unwrap()
+        );
     }
 
     #[test]

@@ -1,7 +1,19 @@
 //! The native language model: a block-structured pre-norm Transformer with a
 //! pluggable attention mixer (ours / gated / softmax), hand-derived backward
-//! pass, and an in-tree Adam optimizer — the `lm_*` artifact family, executed
-//! directly on host `f32` slices.
+//! pass, and an in-tree AdamW optimizer — the `lm_*` artifact family,
+//! executed directly on host `f32` slices.
+//!
+//! The optimizer ships two routes over the same per-element arithmetic
+//! ([`adamw_elem`]): the hot path is [`train_step_mut`], which mutates the
+//! `params ++ m ++ v` state buffers in place (fused m/v/param loop,
+//! parallelized over the pool one parameter array per task), and the
+//! preserved baseline is [`train_step`], which rebuilds the full state as
+//! freshly-allocated tensors every call — kept as the parity oracle and the
+//! `bench-native` speedup reference. Both apply global grad-norm clipping
+//! (`clip_norm`, 0 disables) before the moment update and decoupled weight
+//! decay (`weight_decay`, applied to ≥2-D parameter arrays only, never to
+//! the Adam moments), and both report the *pre-clip* gradient norm as a
+//! training metric.
 //!
 //! Architecture (`n_layer` blocks, `n_head` heads of dim `d_model/n_head`):
 //!   h = wte[x] + wpe                     (token + position embedding)
@@ -88,6 +100,13 @@ pub struct LmConfig {
     pub lr_min: f64,
     pub warmup_steps: usize,
     pub total_steps: usize,
+    /// Decoupled AdamW weight decay, applied to ≥2-D parameter arrays only
+    /// (weights and embeddings; never biases, LayerNorm affines, or the
+    /// Adam moments). 0 disables.
+    pub weight_decay: f64,
+    /// Global gradient-norm clip threshold; gradients are rescaled when the
+    /// global L2 norm exceeds it. 0 disables.
+    pub clip_norm: f64,
 }
 
 impl LmConfig {
@@ -108,6 +127,8 @@ impl LmConfig {
             lr_min: 1e-3,
             warmup_steps: 3,
             total_steps: 400,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
         }
     }
 
@@ -129,12 +150,38 @@ impl LmConfig {
             lr_min: 5e-4,
             warmup_steps: 5,
             total_steps: 1000,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+        }
+    }
+
+    /// The `medium` preset — 8 blocks × 8 heads on a 256-wide residual
+    /// stream (~6.6M params), trained on a corpus four times the small
+    /// preset's (see [`corpus_bytes_hint`](Self::corpus_bytes_hint)).
+    pub fn medium(attn: AttnKind) -> Self {
+        Self {
+            vocab: 512,
+            n_ctx: 128,
+            d_model: 256,
+            n_layer: 8,
+            n_head: 8,
+            d_ff: 1024,
+            layernorm: true,
+            batch: 8,
+            attn,
+            lr_max: 3e-3,
+            lr_min: 3e-4,
+            warmup_steps: 20,
+            total_steps: 2000,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
         }
     }
 
     /// The pre-refactor architecture: one block, one head, no LayerNorm, no
-    /// MLP. Kept so the block-structured code path can be regression-pinned
-    /// against the original hand-unrolled model.
+    /// MLP, plain Adam (no decay, no clipping). Kept so the block-structured
+    /// code path can be regression-pinned against the original hand-unrolled
+    /// model.
     pub fn legacy_tiny(attn: AttnKind) -> Self {
         Self {
             vocab: 256,
@@ -150,6 +197,8 @@ impl LmConfig {
             lr_min: 5e-3,
             warmup_steps: 3,
             total_steps: 400,
+            weight_decay: 0.0,
+            clip_norm: 0.0,
         }
     }
 
@@ -158,7 +207,8 @@ impl LmConfig {
         let cfg = match name {
             "tiny" => Self::tiny(attn),
             "small" => Self::small(attn),
-            other => bail!("unknown LM preset {other:?} (native ships tiny, small)"),
+            "medium" => Self::medium(attn),
+            other => bail!("unknown LM preset {other:?} (native ships tiny, small, medium)"),
         };
         cfg.validate()?;
         Ok(cfg)
@@ -166,7 +216,20 @@ impl LmConfig {
 
     /// The presets registered in the native manifest.
     pub fn preset_names() -> &'static [&'static str] {
-        &["tiny", "small"]
+        &["tiny", "small", "medium"]
+    }
+
+    /// Default synthetic-corpus size (bytes) for training this preset —
+    /// bigger models want more data. Recorded in the artifact manifest's
+    /// train section; the trainer uses it when the run config leaves
+    /// `data.corpus_bytes` on auto (0).
+    pub fn corpus_bytes_hint(&self) -> usize {
+        // scale with capacity: ~6.6M-param medium gets 4× the 2 MiB base
+        if self.n_params() > 2_000_000 {
+            4 * crate::data::DEFAULT_CORPUS_BYTES
+        } else {
+            crate::data::DEFAULT_CORPUS_BYTES
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -1104,8 +1167,209 @@ fn loss_and_grads_inner(
     Ok((loss, grads))
 }
 
-/// One Adam step over the full state (the `lm_*_train_step` artifact body).
-/// `state` is params ++ m ++ v; returns `[loss] ++ new state`.
+// --- AdamW --------------------------------------------------------------------
+
+/// AdamW hyper-parameters resolved for one 0-based step.
+#[derive(Debug, Clone, Copy)]
+struct AdamHp {
+    lr: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+    /// Bias corrections `1 − βᵗ`.
+    bc1: f32,
+    bc2: f32,
+    wd: f32,
+    clip: f32,
+}
+
+impl LmConfig {
+    fn adam_hp(&self, step: usize) -> AdamHp {
+        let (b1, b2) = (0.9f32, 0.999f32);
+        let t1 = (step + 1) as i32;
+        AdamHp {
+            lr: self.lr_at(step),
+            b1,
+            b2,
+            eps: 1e-8,
+            bc1: 1.0 - b1.powi(t1),
+            bc2: 1.0 - b2.powi(t1),
+            wd: self.weight_decay as f32,
+            clip: self.clip_norm as f32,
+        }
+    }
+}
+
+/// Global L2 norm over all gradient arrays. Deterministic regardless of the
+/// pool size: per-array sums accumulate in f64 in state order.
+pub fn grad_global_norm(grads: &[Vec<f32>]) -> f32 {
+    let mut total = 0.0f64;
+    for g in grads {
+        total += g.iter().map(|&x| x as f64 * x as f64).sum::<f64>();
+    }
+    total.sqrt() as f32
+}
+
+/// Gradient rescale factor for global-norm clipping (1.0 when disabled or
+/// under the threshold).
+fn clip_scale(hp: &AdamHp, norm: f32) -> f32 {
+    if hp.clip > 0.0 && norm > hp.clip {
+        hp.clip / norm
+    } else {
+        1.0
+    }
+}
+
+/// One element of the AdamW update: `(p, m, v) × g → (p', m', v')`. The
+/// single source of the arithmetic — the in-place and rebuild routes both
+/// inline this, which is what makes their outputs bit-exact against each
+/// other (and, at `wd = 0`, value-identical to the pre-AdamW Adam step).
+#[inline(always)]
+fn adamw_elem(p: f32, m: f32, v: f32, g: f32, hp: &AdamHp, wd: f32) -> (f32, f32, f32) {
+    let m_new = hp.b1 * m + (1.0 - hp.b1) * g;
+    let v_new = hp.b2 * v + (1.0 - hp.b2) * g * g;
+    let mh = m_new / hp.bc1;
+    let vh = v_new / hp.bc2;
+    // decoupled decay: pulls on the parameter directly, never through m/v
+    let p_new = p - hp.lr * mh / (vh.sqrt() + hp.eps) - hp.lr * wd * p;
+    (p_new, m_new, v_new)
+}
+
+/// Whether weight decay applies to parameter array `i` (matrices and
+/// embeddings decay; biases and LayerNorm affines do not).
+fn decays(shape: &[usize]) -> bool {
+    shape.len() >= 2
+}
+
+/// Raw per-array `(param, m, v)` views of one training state, so the pool
+/// can update disjoint arrays concurrently. Same contract as
+/// [`super::pool::SliceParts`]: task `i` touches exactly triple `i`.
+struct StateViews {
+    arrs: Vec<(*mut f32, *mut f32, *mut f32, usize)>,
+}
+
+// SAFETY: each (p, m, v, len) triple aliases a distinct set of tensors, and
+// the parallel update hands triple `i` to task `i` only, while the borrow of
+// the state slice is held by the caller for the whole update.
+unsafe impl Send for StateViews {}
+unsafe impl Sync for StateViews {}
+
+/// Fused in-place AdamW update over `state = params ++ m ++ v`: clips by
+/// global norm, then updates moments and parameters buffer-by-buffer with no
+/// allocation, one parameter array per pool task. Returns the **pre-clip**
+/// gradient norm (the logged metric).
+pub fn adamw_update_mut(
+    cfg: &LmConfig,
+    state: &mut [Tensor],
+    grads: &[Vec<f32>],
+    step: usize,
+    pool: &ThreadPool,
+) -> Result<f32> {
+    let np = cfg.n_param_arrays();
+    if state.len() != 3 * np {
+        bail!("adamw_update_mut wants {} state arrays (params ++ m ++ v), got {}", 3 * np, state.len());
+    }
+    if grads.len() != np {
+        bail!("adamw_update_mut wants {np} gradient arrays, got {}", grads.len());
+    }
+    let shapes = cfg.param_shapes();
+    let hp = cfg.adam_hp(step);
+    let norm = grad_global_norm(grads);
+    let scale = clip_scale(&hp, norm);
+
+    let (ps, rest) = state.split_at_mut(np);
+    let (ms, vs) = rest.split_at_mut(np);
+    let mut views = StateViews { arrs: Vec::with_capacity(np) };
+    for i in 0..np {
+        let pw = ps[i].as_f32_mut()?;
+        let n = pw.len();
+        let pw = pw.as_mut_ptr();
+        let mw = ms[i].as_f32_mut()?;
+        let vw = vs[i].as_f32_mut()?;
+        if n != grads[i].len() || mw.len() != n || vw.len() != n {
+            bail!("state array {} has inconsistent length", shapes[i].0);
+        }
+        views.arrs.push((pw, mw.as_mut_ptr(), vw.as_mut_ptr(), n));
+    }
+    let views = &views;
+    pool.run(np, |i| {
+        let (pp, mp, vp, n) = views.arrs[i];
+        // SAFETY: triple `i` is visited by task `i` only; the pointers stay
+        // valid for the duration of `run` (state is mutably borrowed above).
+        let (pw, mw, vw) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(pp, n),
+                std::slice::from_raw_parts_mut(mp, n),
+                std::slice::from_raw_parts_mut(vp, n),
+            )
+        };
+        let g = &grads[i];
+        let wd = if decays(&shapes[i].1) { hp.wd } else { 0.0 };
+        for j in 0..n {
+            let (p2, m2, v2) = adamw_elem(pw[j], mw[j], vw[j], g[j] * scale, &hp, wd);
+            pw[j] = p2;
+            mw[j] = m2;
+            vw[j] = v2;
+        }
+    });
+    Ok(norm)
+}
+
+/// The preserved rebuild AdamW step: same arithmetic as
+/// [`adamw_update_mut`], but every output array is a freshly-allocated
+/// `Vec`+`Tensor` (the pre-optimization allocation pattern). Kept as the
+/// bit-exact parity oracle and the `bench-native` in-place speedup baseline.
+/// Returns `(pre-clip grad norm, new state)`.
+pub fn adamw_update_rebuild(
+    cfg: &LmConfig,
+    state: &[&Tensor],
+    grads: &[Vec<f32>],
+    step: usize,
+) -> Result<(f32, Vec<Tensor>)> {
+    let np = cfg.n_param_arrays();
+    if state.len() < 3 * np {
+        bail!("adamw_update_rebuild wants {} state arrays, got {}", 3 * np, state.len());
+    }
+    let shapes = cfg.param_shapes();
+    let hp = cfg.adam_hp(step);
+    let norm = grad_global_norm(grads);
+    let scale = clip_scale(&hp, norm);
+
+    let mut new_params = Vec::with_capacity(np);
+    let mut new_m = Vec::with_capacity(np);
+    let mut new_v = Vec::with_capacity(np);
+    for i in 0..np {
+        let pw = state[i].as_f32()?;
+        let mw = state[np + i].as_f32()?;
+        let vw = state[2 * np + i].as_f32()?;
+        let g = &grads[i];
+        if pw.len() != g.len() || mw.len() != g.len() || vw.len() != g.len() {
+            bail!("state array {} has inconsistent length", shapes[i].0);
+        }
+        let wd = if decays(&shapes[i].1) { hp.wd } else { 0.0 };
+        let mut p2 = Vec::with_capacity(g.len());
+        let mut m2 = Vec::with_capacity(g.len());
+        let mut v2 = Vec::with_capacity(g.len());
+        for j in 0..g.len() {
+            let (pj, mj, vj) = adamw_elem(pw[j], mw[j], vw[j], g[j] * scale, &hp, wd);
+            p2.push(pj);
+            m2.push(mj);
+            v2.push(vj);
+        }
+        new_params.push(Tensor::f32(shapes[i].1.clone(), p2)?);
+        new_m.push(Tensor::f32(shapes[i].1.clone(), m2)?);
+        new_v.push(Tensor::f32(shapes[i].1.clone(), v2)?);
+    }
+    let mut out = Vec::with_capacity(3 * np);
+    out.extend(new_params);
+    out.extend(new_m);
+    out.extend(new_v);
+    Ok((norm, out))
+}
+
+/// One AdamW step over the full state via the **rebuild** route (the
+/// borrowed-input `lm_*_train_step` artifact body). `state` is
+/// params ++ m ++ v; returns `[loss, grad_norm] ++ new state`.
 pub fn train_step(
     cfg: &LmConfig,
     state: &[&Tensor],
@@ -1120,49 +1384,37 @@ pub fn train_step(
     let p = P::bind(cfg, &state[..np])?;
     let (x, y) = split_xy(cfg, tokens)?;
     let (loss, grads) = loss_and_grads_inner(cfg, &p, &x, &y, pool)?;
+    let (norm, new_state) = adamw_update_rebuild(cfg, state, &grads, step.max(0) as usize)?;
 
-    let step = step.max(0) as usize;
-    let lr = cfg.lr_at(step);
-    let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
-    let t1 = (step + 1) as i32;
-    let bc1 = 1.0 - b1.powi(t1);
-    let bc2 = 1.0 - b2.powi(t1);
-
-    let shapes = cfg.param_shapes();
-    let mut new_params = Vec::with_capacity(np);
-    let mut new_m = Vec::with_capacity(np);
-    let mut new_v = Vec::with_capacity(np);
-    for i in 0..np {
-        let pw = state[i].as_f32()?;
-        let mw = state[np + i].as_f32()?;
-        let vw = state[2 * np + i].as_f32()?;
-        let g = &grads[i];
-        if pw.len() != g.len() || mw.len() != g.len() || vw.len() != g.len() {
-            bail!("state array {} has inconsistent length", shapes[i].0);
-        }
-        let mut p2 = Vec::with_capacity(g.len());
-        let mut m2 = Vec::with_capacity(g.len());
-        let mut v2 = Vec::with_capacity(g.len());
-        for j in 0..g.len() {
-            let m_new = b1 * mw[j] + (1.0 - b1) * g[j];
-            let v_new = b2 * vw[j] + (1.0 - b2) * g[j] * g[j];
-            let mh = m_new / bc1;
-            let vh = v_new / bc2;
-            p2.push(pw[j] - lr * mh / (vh.sqrt() + eps));
-            m2.push(m_new);
-            v2.push(v_new);
-        }
-        new_params.push(Tensor::f32(shapes[i].1.clone(), p2)?);
-        new_m.push(Tensor::f32(shapes[i].1.clone(), m2)?);
-        new_v.push(Tensor::f32(shapes[i].1.clone(), v2)?);
-    }
-
-    let mut out = Vec::with_capacity(1 + 3 * np);
+    let mut out = Vec::with_capacity(2 + 3 * np);
     out.push(Tensor::scalar_f32(loss));
-    out.extend(new_params);
-    out.extend(new_m);
-    out.extend(new_v);
+    out.push(Tensor::scalar_f32(norm));
+    out.extend(new_state);
     Ok(out)
+}
+
+/// One AdamW step that mutates `state` (params ++ m ++ v) **in place** —
+/// the steady-state training loop allocates no state tensors at all.
+/// Returns `(loss, pre-clip grad norm)`.
+pub fn train_step_mut(
+    cfg: &LmConfig,
+    state: &mut [Tensor],
+    tokens: &Tensor,
+    step: i64,
+    pool: &ThreadPool,
+) -> Result<(f32, f32)> {
+    let np = cfg.n_param_arrays();
+    if state.len() != 3 * np {
+        bail!("train_step_mut wants {} state arrays (params ++ m ++ v), got {}", 3 * np, state.len());
+    }
+    let (x, y) = split_xy(cfg, tokens)?;
+    let (loss, grads) = {
+        let refs: Vec<&Tensor> = state[..np].iter().collect();
+        let p = P::bind(cfg, &refs)?;
+        loss_and_grads_inner(cfg, &p, &x, &y, pool)?
+    };
+    let norm = adamw_update_mut(cfg, state, &grads, step.max(0) as usize, pool)?;
+    Ok((loss, norm))
 }
 
 /// Scalar from a rank-0/rank-1 tensor (seeds, step counters).
@@ -1204,6 +1456,7 @@ mod tests {
         for cfg in [
             LmConfig::tiny(AttnKind::Ours),
             LmConfig::small(AttnKind::Softmax),
+            LmConfig::medium(AttnKind::Ours),
             LmConfig::legacy_tiny(AttnKind::Gated),
         ] {
             cfg.validate().unwrap();
@@ -1309,11 +1562,12 @@ mod tests {
                 let out = train_step(&cfg, &s, &toks, step, &pool()).unwrap();
                 let loss = out[0].scalar().unwrap();
                 assert!(loss.is_finite(), "{attn:?} step {step}");
+                assert!(out[1].scalar().unwrap().is_finite(), "{attn:?} grad norm, step {step}");
                 if step == 0 {
                     first = loss;
                 }
                 last = loss;
-                state = out[1..].to_vec();
+                state = out[2..].to_vec();
             }
             assert!(
                 last < first - 0.3,
@@ -1384,6 +1638,23 @@ mod tests {
         data[3] = cfg.vocab as i32; // one past the end
         let toks = Tensor::i32(vec![cfg.batch, cfg.n_ctx + 1], data).unwrap();
         assert!(eval_loss(&cfg, &s[..cfg.n_param_arrays()], &toks, &pool()).is_err());
+    }
+
+    #[test]
+    fn medium_preset_is_deep_and_scales_corpus() {
+        let cfg = LmConfig::medium(AttnKind::Ours);
+        cfg.validate().unwrap();
+        assert!(cfg.n_layer >= 8 && cfg.n_head >= 8 && cfg.d_model >= 256);
+        assert!(cfg.n_params() > 2_000_000, "n_params {}", cfg.n_params());
+        assert!(
+            cfg.corpus_bytes_hint() > LmConfig::small(AttnKind::Ours).corpus_bytes_hint(),
+            "medium must train on a larger corpus"
+        );
+        assert!(cfg.weight_decay > 0.0 && cfg.clip_norm > 0.0);
+        // legacy stays plain Adam so its pinned trajectory is untouched
+        let legacy = LmConfig::legacy_tiny(AttnKind::Ours);
+        assert_eq!(legacy.weight_decay, 0.0);
+        assert_eq!(legacy.clip_norm, 0.0);
     }
 
     #[test]

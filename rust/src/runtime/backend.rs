@@ -10,7 +10,7 @@
 //!   state (if any) is the backend's private business; the native backend has
 //!   none, so host tensors ARE the hot-path representation.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::manifest::{ArtifactMeta, Manifest};
 use super::tensor::Tensor;
@@ -23,6 +23,84 @@ pub trait Executor {
     /// callers rely on `out[0]` being addressable (the engine enforces this
     /// with a descriptive error either way).
     fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute with owned, mutable state: `state` holds the artifact's
+    /// leading inputs and is updated **in place**; `inputs` are the trailing
+    /// non-state inputs (tokens, step counters, …). Returns only the
+    /// auxiliary outputs (loss, metrics, …).
+    ///
+    /// Contract: the artifact's outputs are `aux ++ state'` with
+    /// `state'.len() == state.len()`. The default implementation routes
+    /// through [`execute`](Self::execute) and writes the returned state back
+    /// over `state` — correct for any backend, but still paying the full
+    /// reallocation. Backends that can mutate host buffers directly (the
+    /// native CPU path) override this to skip the per-step state rebuild.
+    fn execute_mut(&self, state: &mut [Tensor], inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let mut refs: Vec<&Tensor> = state.iter().collect();
+        refs.extend_from_slice(inputs);
+        let mut out = self.execute(&refs)?;
+        if out.len() < state.len() {
+            bail!(
+                "execute_mut fallback: artifact returned {} outputs, fewer than the {} \
+                 state arrays it must refresh",
+                out.len(),
+                state.len()
+            );
+        }
+        let aux = out.len() - state.len();
+        for (slot, t) in state.iter_mut().zip(out.drain(aux..)) {
+            *slot = t;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy executor with the `aux ++ state'` output contract: takes
+    /// `state ++ [delta]`, returns `[count] ++ (state + delta)`.
+    struct AddDelta;
+
+    impl Executor for AddDelta {
+        fn execute(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+            let (state, delta) = inputs.split_at(inputs.len() - 1);
+            let d = delta[0].scalar()?;
+            let mut out = vec![Tensor::scalar_f32(state.len() as f32)];
+            for t in state {
+                let data = t.as_f32()?.iter().map(|&x| x + d).collect();
+                out.push(Tensor::f32(t.shape().to_vec(), data)?);
+            }
+            Ok(out)
+        }
+    }
+
+    #[test]
+    fn execute_mut_fallback_writes_state_back() {
+        let mut state = vec![
+            Tensor::f32(vec![2], vec![1.0, 2.0]).unwrap(),
+            Tensor::f32(vec![1], vec![10.0]).unwrap(),
+        ];
+        let delta = Tensor::scalar_f32(0.5);
+        let aux = AddDelta.execute_mut(&mut state, &[&delta]).unwrap();
+        assert_eq!(aux.len(), 1);
+        assert_eq!(aux[0].scalar().unwrap(), 2.0);
+        assert_eq!(state[0].as_f32().unwrap(), &[1.5, 2.5]);
+        assert_eq!(state[1].as_f32().unwrap(), &[10.5]);
+    }
+
+    #[test]
+    fn execute_mut_fallback_rejects_short_output() {
+        struct TooFew;
+        impl Executor for TooFew {
+            fn execute(&self, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+                Ok(vec![Tensor::scalar_f32(0.0)])
+            }
+        }
+        let mut state = vec![Tensor::scalar_f32(1.0), Tensor::scalar_f32(2.0)];
+        assert!(TooFew.execute_mut(&mut state, &[]).is_err());
+    }
 }
 
 /// An execution engine: enumerates artifacts and instantiates executors.

@@ -43,6 +43,20 @@ impl Executable {
         Ok(out)
     }
 
+    /// Execute with owned, mutable leading state (the training hot path):
+    /// the backend updates `state` in place — the native executor mutates
+    /// the buffers directly with zero state reallocation; other backends
+    /// fall back to execute-and-write-back. `aux_inputs` are the trailing
+    /// non-state inputs; returns the auxiliary outputs (loss, metrics, …),
+    /// of which there must be at least one.
+    pub fn run_owned(&self, state: &mut [Tensor], aux_inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let out = self.exec.execute_mut(state, aux_inputs)?;
+        if out.is_empty() {
+            bail!("artifact {:?} returned no auxiliary outputs", self.name);
+        }
+        Ok(out)
+    }
+
     /// Execute and time only the backend execution.
     pub fn run_timed(&self, inputs: &[&Tensor]) -> Result<(Vec<Tensor>, f64)> {
         let t0 = Instant::now();

@@ -79,10 +79,13 @@ pub fn score_task(
             score.examples += 1;
             for &p in &ex.answer_pos {
                 let row = &logits[(bi * n_ctx + (p - 1)) * vocab..][..vocab];
+                // total_cmp never panics on NaN; a diverged model (non-finite
+                // winner) predicts -1 and simply scores the position wrong
                 let argmax = row
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .filter(|(_, v)| v.is_finite())
                     .map(|(i, _)| i as i32)
                     .unwrap_or(-1);
                 score.positions += 1;

@@ -53,6 +53,29 @@ fn training_reduces_loss_and_writes_metrics() {
     let first = log.records()[0].loss;
     assert!(first > 5.0 && first < 6.2, "init loss {first}");
     assert!(log.records().last().unwrap().loss < first);
+    // every step logged a finite pre-clip grad norm
+    for r in log.records() {
+        let gn = r.grad_norm.expect("grad_norm logged");
+        assert!(gn.is_finite() && gn > 0.0, "step {}: grad_norm {gn}", r.step);
+    }
+}
+
+/// Regression: `steps = 0` used to underflow `steps - 1` at the final
+/// checkpoint; it must now save the freshly-initialized state cleanly.
+#[test]
+fn zero_step_run_saves_initial_state() {
+    let engine = Engine::discover().unwrap();
+    let dir = tmpdir("zerostep");
+    let trainer = Trainer::new(&engine, cfg("ours", 0, &dir)).unwrap();
+    let outcome = trainer.run().unwrap();
+    assert_eq!(outcome.steps, 0);
+    assert!(outcome.final_loss.is_nan(), "no step ran, no loss measured");
+    let ckpt = Checkpoint::load(outcome.run_dir.join("final.ckpt")).unwrap();
+    assert_eq!(ckpt.meta.step, 0);
+    assert!(ckpt.meta.loss.is_nan());
+    // the saved state is exactly the init-artifact output, restorable as-is
+    assert_eq!(ckpt.state, trainer.init_state().unwrap());
+    assert!(trainer.restore(&ckpt).is_ok());
 }
 
 #[test]
@@ -65,8 +88,8 @@ fn checkpoint_roundtrip_resumes_training() {
     assert_eq!(ckpt.meta.artifact_tag, "lm_tiny_ours");
     assert_eq!(ckpt.meta.step, 3);
 
-    // restore and take one more step — loss stays finite and close
-    let state = trainer.restore(&ckpt).unwrap();
+    // restore and take one more in-place step — loss stays finite and close
+    let mut state = trainer.restore(&ckpt).unwrap();
     let (_tok, ds) = trainer.build_dataset().unwrap();
     let mut b = repro::data::Batcher::new(
         &ds,
@@ -75,11 +98,17 @@ fn checkpoint_roundtrip_resumes_training() {
         1,
     )
     .unwrap();
-    let (loss, _new_state) = trainer
-        .step(state, &b.next_batch().unwrap(), 4)
+    let m = trainer
+        .step(&mut state, &b.next_batch().unwrap(), 4)
         .unwrap();
-    assert!(loss.is_finite());
-    assert!((loss - ckpt.meta.loss).abs() < 2.0, "resumed loss {loss} vs {}", ckpt.meta.loss);
+    assert!(m.loss.is_finite());
+    assert!(m.grad_norm.is_finite() && m.grad_norm > 0.0, "grad norm {}", m.grad_norm);
+    assert!(
+        (m.loss - ckpt.meta.loss).abs() < 2.0,
+        "resumed loss {} vs {}",
+        m.loss,
+        ckpt.meta.loss
+    );
 }
 
 #[test]
@@ -173,7 +202,9 @@ fn lm_small_artifacts_step_for_every_attn() {
         args.push(&toks);
         args.push(&step_t);
         let out = step_exe.run_refs(&args).unwrap();
-        assert_eq!(out.len(), 1 + state.len(), "{attn}");
+        // outputs: loss + grad_norm + refreshed state
+        assert_eq!(out.len(), 2 + state.len(), "{attn}");
+        assert!(out[1].scalar().unwrap().is_finite(), "{attn} grad norm");
         let loss = out[0].scalar().unwrap();
         let uniform = (vocab as f32).ln();
         assert!(

@@ -390,7 +390,9 @@ fn legacy_preset_matches_pre_refactor_trajectory() {
                 (old_loss - new_loss).abs() < TOL,
                 "{attn:?} step {step}: oracle loss {old_loss} vs refactored {new_loss}"
             );
-            state = out[1..].to_vec();
+            // out = [loss, grad_norm] ++ state' (the legacy preset runs with
+            // weight_decay = clip_norm = 0, so the trajectory is unchanged)
+            state = out[2..].to_vec();
         }
 
         // final parameters agree array-by-array

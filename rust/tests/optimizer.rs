@@ -1,0 +1,196 @@
+//! AdamW optimizer tests: bit-exact parity of the in-place (owned-state)
+//! step against the preserved rebuild step, global grad-norm clipping, and
+//! decoupled weight decay.
+
+use repro::native::model::{self, AttnKind, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+
+fn pool() -> ThreadPool {
+    ThreadPool::new(4)
+}
+
+fn cycle_tokens(cfg: &LmConfig) -> Tensor {
+    let n = cfg.batch * (cfg.n_ctx + 1);
+    Tensor::i32(
+        vec![cfg.batch, cfg.n_ctx + 1],
+        (0..n).map(|i| (i % 17) as i32).collect(),
+    )
+    .unwrap()
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.as_f32().unwrap().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Synthetic constant gradients matching the config's parameter shapes.
+fn const_grads(cfg: &LmConfig, value: f32) -> Vec<Vec<f32>> {
+    cfg.param_shapes()
+        .iter()
+        .map(|(_, s)| vec![value; s.iter().product()])
+        .collect()
+}
+
+/// The tentpole invariant: several in-place AdamW steps reproduce the
+/// preserved rebuild implementation bit for bit — losses, grad norms, and
+/// every params/m/v buffer — with weight decay and clipping active.
+#[test]
+fn inplace_step_is_bit_exact_against_rebuild() {
+    const STEPS: usize = 5;
+    for attn in [AttnKind::Ours, AttnKind::Softmax] {
+        let mut cfg = LmConfig::tiny(attn);
+        // tighten the clip so the test exercises the rescale branch too
+        cfg.clip_norm = 0.5;
+        assert!(cfg.weight_decay > 0.0, "decay must be active for the parity to mean anything");
+        let toks = cycle_tokens(&cfg);
+        let pool = pool();
+
+        let mut rebuilt = cfg.init_state(3);
+        let mut inplace = cfg.init_state(3);
+        for step in 0..STEPS {
+            let refs: Vec<&Tensor> = rebuilt.iter().collect();
+            let out = model::train_step(&cfg, &refs, &toks, step as i64, &pool).unwrap();
+            let (loss_rb, norm_rb) = (out[0].scalar().unwrap(), out[1].scalar().unwrap());
+            drop(refs);
+            rebuilt = out[2..].to_vec();
+
+            let (loss_ip, norm_ip) =
+                model::train_step_mut(&cfg, &mut inplace, &toks, step as i64, &pool).unwrap();
+
+            assert_eq!(
+                loss_rb.to_bits(),
+                loss_ip.to_bits(),
+                "{attn:?} step {step}: loss diverged ({loss_rb} vs {loss_ip})"
+            );
+            assert_eq!(
+                norm_rb.to_bits(),
+                norm_ip.to_bits(),
+                "{attn:?} step {step}: grad norm diverged"
+            );
+            assert_eq!(rebuilt.len(), inplace.len());
+            for (i, (a, b)) in rebuilt.iter().zip(&inplace).enumerate() {
+                assert_eq!(bits(a), bits(b), "{attn:?} step {step}: state array {i} diverged");
+            }
+        }
+    }
+}
+
+/// Clipping: a synthetic huge gradient is rescaled to the clip threshold
+/// before entering the moments — starting from zero moments, the post-step
+/// global norm of `m` is exactly `(1 − β₁) · clip_norm`; the *reported*
+/// norm stays pre-clip.
+#[test]
+fn global_norm_clipping_bounds_the_update() {
+    let mut cfg = LmConfig::tiny(AttnKind::Ours);
+    cfg.clip_norm = 1.0;
+    cfg.weight_decay = 0.0;
+    let mut state = cfg.init_state(0);
+    let np = cfg.n_param_arrays();
+    let grads = const_grads(&cfg, 1000.0);
+
+    let reported = model::adamw_update_mut(&cfg, &mut state, &grads, 0, &pool()).unwrap();
+    let expected = model::grad_global_norm(&grads);
+    assert!(
+        (reported - expected).abs() / expected < 1e-6,
+        "reported norm must be pre-clip ({reported} vs {expected})"
+    );
+    assert!(reported > cfg.clip_norm as f32 * 100.0, "gradient must be huge for this test");
+
+    // ‖m‖ = (1 − β₁) · ‖g_clipped‖ = 0.1 · clip_norm
+    let m_sq: f64 = state[np..2 * np]
+        .iter()
+        .map(|t| t.as_f32().unwrap().iter().map(|&x| x as f64 * x as f64).sum::<f64>())
+        .sum();
+    let m_norm = m_sq.sqrt();
+    assert!(
+        (m_norm - 0.1 * cfg.clip_norm).abs() < 1e-4,
+        "post-clip moment norm {m_norm}, want {}",
+        0.1 * cfg.clip_norm
+    );
+    for t in &state[..np] {
+        assert!(t.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+}
+
+/// `clip_norm = 0` disables clipping entirely: the moments absorb the raw
+/// gradient.
+#[test]
+fn zero_clip_norm_disables_clipping() {
+    let mut cfg = LmConfig::tiny(AttnKind::Ours);
+    cfg.clip_norm = 0.0;
+    cfg.weight_decay = 0.0;
+    let mut state = cfg.init_state(0);
+    let np = cfg.n_param_arrays();
+    let grads = const_grads(&cfg, 2.0);
+    let norm = model::adamw_update_mut(&cfg, &mut state, &grads, 0, &pool()).unwrap();
+    let m_sq: f64 = state[np..2 * np]
+        .iter()
+        .map(|t| t.as_f32().unwrap().iter().map(|&x| x as f64 * x as f64).sum::<f64>())
+        .sum();
+    let m_norm = m_sq.sqrt() as f32;
+    assert!(
+        (m_norm - 0.1 * norm).abs() / (0.1 * norm) < 1e-5,
+        "moments must hold the unclipped gradient ({m_norm} vs {})",
+        0.1 * norm
+    );
+}
+
+/// Decoupled weight decay: with zero gradients, the moments stay exactly
+/// zero while ≥2-D parameters shrink by `lr·wd` — and 1-D parameters
+/// (biases, LayerNorm affines) are never decayed.
+#[test]
+fn weight_decay_is_decoupled_from_the_moments() {
+    let mut cfg = LmConfig::tiny(AttnKind::Ours);
+    cfg.weight_decay = 0.5;
+    cfg.clip_norm = 0.0;
+    let state0 = cfg.init_state(1);
+    let mut state = state0.clone();
+    let np = cfg.n_param_arrays();
+    let grads = const_grads(&cfg, 0.0);
+
+    let norm = model::adamw_update_mut(&cfg, &mut state, &grads, 0, &pool()).unwrap();
+    assert_eq!(norm, 0.0);
+
+    let shapes = cfg.param_shapes();
+    let lr_wd = cfg.lr_at(0) * cfg.weight_decay as f32;
+    for i in 0..np {
+        let before = state0[i].as_f32().unwrap();
+        let after = state[i].as_f32().unwrap();
+        let (name, shape) = &shapes[i];
+        if shape.len() >= 2 {
+            // p' = p·(1 − lr·wd), applied directly to the parameter
+            for (j, (&b, &a)) in before.iter().zip(after).enumerate() {
+                let want = b - lr_wd * b;
+                assert!(
+                    (a - want).abs() <= 1e-7 + want.abs() * 1e-6,
+                    "{name}[{j}]: decayed {b} → {a}, want {want}"
+                );
+            }
+        } else {
+            assert_eq!(before, after, "{name}: 1-D params must not decay");
+        }
+    }
+    // moments never see the decay (they only integrate gradients, here zero)
+    for (i, t) in state[np..].iter().enumerate() {
+        assert!(
+            t.as_f32().unwrap().iter().all(|&x| x == 0.0),
+            "moment array {i} picked up weight decay"
+        );
+    }
+}
+
+/// The in-place update is invariant to the pool's thread count (tasks are
+/// partitioned per parameter array, arithmetic is element-local).
+#[test]
+fn inplace_update_is_thread_count_invariant() {
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    let grads = const_grads(&cfg, 0.01);
+    let mut s1 = cfg.init_state(9);
+    let mut s4 = cfg.init_state(9);
+    let n1 = model::adamw_update_mut(&cfg, &mut s1, &grads, 0, &ThreadPool::new(1)).unwrap();
+    let n4 = model::adamw_update_mut(&cfg, &mut s4, &grads, 0, &ThreadPool::new(4)).unwrap();
+    assert_eq!(n1.to_bits(), n4.to_bits());
+    for (a, b) in s1.iter().zip(&s4) {
+        assert_eq!(bits(a), bits(b));
+    }
+}
