@@ -17,7 +17,9 @@ use crate::native::model::{self, AttnKind, LmConfig};
 use crate::native::pool::ThreadPool;
 use crate::runtime::{Engine, Tensor};
 
-use super::report::{LmBenchPoint, OptBenchPoint};
+use crate::infer::DecodeState;
+
+use super::report::{DecodeBenchPoint, LmBenchPoint, OptBenchPoint};
 use super::timing::TimingStats;
 
 /// Corpus size every LM bench trains on.
@@ -116,6 +118,77 @@ pub fn measure_lm(
         grad_norm_last,
         loss_first,
         loss_last,
+    })
+}
+
+/// Measure autoregressive decoding of one (preset, attn) pair: `tokens`
+/// tokens (capped at the context window) through the **recurrent**
+/// incremental path (`DecodeState` + `logits_step`, the prefix is never
+/// re-scanned), against the **full-recompute** baseline where every token
+/// replays the entire prefix through a fresh state (via the prefill fast
+/// path, so the baseline is the strongest stateless decoder, not a straw
+/// man). Also records the per-token cost of the first vs second
+/// half of the recurrent run and the attention-state byte endpoints: flat
+/// cost and constant state for `ours`/`gated`, linearly growing KV-cache
+/// state for `softmax` — the paper's decode-memory claim as a measured
+/// artifact. Weights are freshly initialized (decode cost is
+/// data-independent).
+pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeBenchPoint> {
+    ensure!(tokens >= 4, "measure_decode needs at least 4 tokens");
+    let cfg = LmConfig::by_preset(preset, AttnKind::from_name(attn)?)?;
+    let pool = ThreadPool::from_env();
+    let state = cfg.init_state(0);
+    let np = cfg.n_param_arrays();
+    let params: Vec<&Tensor> = state[..np].iter().collect();
+    // bind once — the per-token cost under measurement is the step, not
+    // parameter-layout validation
+    let bound = model::DecodeModel::bind(&cfg, &params)?;
+    let t_total = tokens.min(cfg.n_ctx);
+    let toks: Vec<i32> = (0..t_total).map(|i| (i % cfg.vocab) as i32).collect();
+
+    // recurrent: one state advanced token by token
+    let mut st = DecodeState::new(&cfg, 1)?;
+    let mut step_s = Vec::with_capacity(t_total);
+    let mut state_bytes_first = 0usize;
+    for (t, &tok) in toks.iter().enumerate() {
+        let t0 = Instant::now();
+        bound.logits_step(&[tok], &mut st, &pool)?;
+        step_s.push(t0.elapsed().as_secs_f64());
+        if t == 0 {
+            state_bytes_first = st.state_bytes();
+        }
+    }
+    let state_bytes_last = st.state_bytes();
+    let recurrent_s: f64 = step_s.iter().sum();
+    let half = t_total / 2;
+    let (first, second) = step_s.split_at(half);
+
+    // full recompute: producing token t replays tokens 0..t from scratch.
+    // The replayed prefix goes through the prefill fast path (state only,
+    // no unembedding) with a single logits step at the end — the best a
+    // stateless decoder could do, so the recurrent speedup is not inflated
+    // by charging the baseline t redundant unembedding GEMMs
+    let t0 = Instant::now();
+    for t in 0..t_total {
+        let mut st = DecodeState::new(&cfg, 1)?;
+        for &tok in &toks[..t] {
+            bound.prefill_step(&[tok], &mut st, &pool)?;
+        }
+        bound.logits_step(&[toks[t]], &mut st, &pool)?;
+    }
+    let recompute_s = t0.elapsed().as_secs_f64();
+
+    Ok(DecodeBenchPoint {
+        preset: preset.to_string(),
+        attn: attn.to_string(),
+        n_params: cfg.n_params(),
+        tokens: t_total,
+        recurrent_tok_s: t_total as f64 / recurrent_s.max(1e-12),
+        recompute_tok_s: t_total as f64 / recompute_s.max(1e-12),
+        step_s_p50_first_half: p50(first.to_vec()),
+        step_s_p50_second_half: p50(second.to_vec()),
+        state_bytes_first,
+        state_bytes_last,
     })
 }
 

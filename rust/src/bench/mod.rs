@@ -4,7 +4,9 @@
 //!   measurement of artifact execution;
 //! - [`sweep`] — drive the per-(impl, N, D) layer artifacts (Figs 2-3, Table 1);
 //! - [`lm`] — end-to-end LM per-step training measurement (Fig 5 in bench
-//!   form, shared by `repro bench-native` and `benches/fig5_train`);
+//!   form, shared by `repro bench-native` and `benches/fig5_train`), the
+//!   AdamW-update microbench, and the autoregressive-decode measurement
+//!   (recurrent incremental state vs full prefix recompute);
 //! - [`report`] — markdown/CSV emitters matching the paper's rows and series,
 //!   plus the `BENCH_native.json` perf-trajectory artifact (parallel/tiled
 //!   kernels vs the scalar single-thread reference — see `repro bench-native`).

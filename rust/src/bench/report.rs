@@ -117,17 +117,69 @@ impl OptBenchPoint {
     }
 }
 
+/// One measured point of the `decode` section: autoregressive decoding of
+/// `tokens` tokens through the incremental [`DecodeState`] path (recurrent:
+/// the prefix is never re-scanned) vs the full-recompute baseline (every
+/// token replays the whole prefix through a fresh state — what a
+/// stateless decoder would pay). The per-token cost split between the first
+/// and second half of the run plus the state-bytes endpoints are the
+/// flat-cost / constant-memory evidence for the linear variants, against
+/// softmax's linearly growing KV cache.
+#[derive(Debug, Clone)]
+pub struct DecodeBenchPoint {
+    pub preset: String,
+    pub attn: String,
+    pub n_params: u64,
+    /// Tokens decoded (capped at the preset's context window).
+    pub tokens: usize,
+    /// Tokens/s through the recurrent incremental path.
+    pub recurrent_tok_s: f64,
+    /// Tokens/s when every token replays the prefix from scratch.
+    pub recompute_tok_s: f64,
+    /// p50 per-token seconds over the first half of the recurrent run.
+    pub step_s_p50_first_half: f64,
+    /// p50 per-token seconds over the second half (≈ first half ⇒ flat).
+    pub step_s_p50_second_half: f64,
+    /// Attention-state bytes after the first token…
+    pub state_bytes_first: usize,
+    /// …and after the last: equal for `ours`/`gated`, ≈ `tokens ×` first
+    /// for `softmax`.
+    pub state_bytes_last: usize,
+}
+
+impl DecodeBenchPoint {
+    /// Recurrent-vs-recompute decode speedup.
+    pub fn speedup_recurrent(&self) -> f64 {
+        if self.recompute_tok_s > 0.0 {
+            self.recurrent_tok_s / self.recompute_tok_s
+        } else {
+            0.0
+        }
+    }
+
+    /// State growth over the run (1.0 = constant).
+    pub fn state_growth(&self) -> f64 {
+        if self.state_bytes_first > 0 {
+            self.state_bytes_last as f64 / self.state_bytes_first as f64
+        } else {
+            0.0
+        }
+    }
+}
+
 /// Machine-readable perf trajectory artifact (`BENCH_native.json`): one entry
 /// per artifact measured on the parallel/tiled path, joined with the scalar
 /// single-thread reference baseline for the speedup column, plus the LM
-/// per-step section (`lm`, in-place vs rebuild) and the AdamW-update
-/// microbench (`opt`). Times are nanoseconds (median plus p10/p90 spread)
-/// for kernels, seconds for LM/optimizer steps.
+/// per-step section (`lm`, in-place vs rebuild), the AdamW-update
+/// microbench (`opt`), and the autoregressive decoding section (`decode`,
+/// recurrent vs full-recompute). Times are nanoseconds (median plus p10/p90
+/// spread) for kernels, seconds for LM/optimizer steps.
 pub fn bench_native_json(
     parallel: &[SweepPoint],
     scalar: &[SweepPoint],
     lm: &[LmBenchPoint],
     opt: &[OptBenchPoint],
+    decode: &[DecodeBenchPoint],
     threads: usize,
     chunk: usize,
 ) -> String {
@@ -199,15 +251,63 @@ pub fn bench_native_json(
             ])
         })
         .collect();
+    let decode_arts: Vec<Json> = decode
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("preset", Json::str(p.preset.clone())),
+                ("attn", Json::str(p.attn.clone())),
+                ("n_params", Json::num(p.n_params as f64)),
+                ("tokens", Json::num(p.tokens as f64)),
+                ("recurrent_tok_s", Json::num(p.recurrent_tok_s)),
+                ("recompute_tok_s", Json::num(p.recompute_tok_s)),
+                ("speedup_recurrent", Json::num(p.speedup_recurrent())),
+                ("step_s_p50_first_half", Json::num(p.step_s_p50_first_half)),
+                ("step_s_p50_second_half", Json::num(p.step_s_p50_second_half)),
+                ("state_bytes_first", Json::num(p.state_bytes_first as f64)),
+                ("state_bytes_last", Json::num(p.state_bytes_last as f64)),
+                ("state_growth", Json::num(p.state_growth())),
+            ])
+        })
+        .collect();
     Json::obj(vec![
-        ("schema", Json::str("bench_native/v3")),
+        ("schema", Json::str("bench_native/v4")),
         ("threads", Json::num(threads as f64)),
         ("chunk", Json::num(chunk as f64)),
         ("artifacts", Json::Arr(arts)),
         ("lm", Json::Arr(lm_arts)),
         ("opt", Json::Arr(opt_arts)),
+        ("decode", Json::Arr(decode_arts)),
     ])
     .to_string()
+}
+
+/// Human-readable companion of the `decode` section: recurrent decode rate,
+/// the recompute baseline, per-token flatness, and the state footprint
+/// endpoints.
+pub fn bench_decode_markdown(decode: &[DecodeBenchPoint]) -> String {
+    let mut out = String::from(
+        "| preset | attn | tokens | recurrent tok/s | recompute tok/s | speedup | \
+         tok cost 1st→2nd half | state 1st→last |\n|---|---|---|---|---|---|---|---|\n",
+    );
+    for p in decode {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {:.0} | {:.0} | {:.1}× | {} → {} | {} → {} ({:.1}×) |",
+            p.preset,
+            p.attn,
+            p.tokens,
+            p.recurrent_tok_s,
+            p.recompute_tok_s,
+            p.speedup_recurrent(),
+            fmt_time(p.step_s_p50_first_half),
+            fmt_time(p.step_s_p50_second_half),
+            fmt_bytes(p.state_bytes_first as f64),
+            fmt_bytes(p.state_bytes_last as f64),
+            p.state_growth(),
+        );
+    }
+    out
 }
 
 /// Human-readable companion of the AdamW-update microbench (`opt` section).
@@ -453,9 +553,21 @@ mod tests {
             inplace_s_p50: 0.002,
             rebuild_s_p50: 0.005,
         }];
-        let text = bench_native_json(&par, &base, &lm, &opt, 4, 128);
+        let decode = vec![DecodeBenchPoint {
+            preset: "small".into(),
+            attn: "ours".into(),
+            n_params: 934_016,
+            tokens: 64,
+            recurrent_tok_s: 4000.0,
+            recompute_tok_s: 400.0,
+            step_s_p50_first_half: 2.5e-4,
+            step_s_p50_second_half: 2.5e-4,
+            state_bytes_first: 69_632,
+            state_bytes_last: 69_632,
+        }];
+        let text = bench_native_json(&par, &base, &lm, &opt, &decode, 4, 128);
         let v = Json::parse(&text).unwrap();
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v3"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v4"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
         let arts = v.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
@@ -475,6 +587,13 @@ mod tests {
         let opts = v.get("opt").unwrap().as_arr().unwrap();
         assert_eq!(opts.len(), 1);
         assert!((opts[0].get("speedup_inplace").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        let dec = v.get("decode").unwrap().as_arr().unwrap();
+        assert_eq!(dec.len(), 1);
+        assert_eq!(dec[0].get("tokens").unwrap().as_usize(), Some(64));
+        assert!((dec[0].get("speedup_recurrent").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
+        assert!((dec[0].get("state_growth").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        let dmd = bench_decode_markdown(&decode);
+        assert!(dmd.contains("10.0×") && dmd.contains("1.0×"), "decode markdown:\n{dmd}");
         let md = bench_native_markdown(&par, &base);
         assert!(md.contains("4.00×"), "markdown:\n{md}");
         let lmd = bench_lm_markdown(&lm);
@@ -503,7 +622,7 @@ mod tests {
             loss_first: 5.5,
             loss_last: 5.5,
         }];
-        let text = bench_native_json(&[], &[], &lm, &[], 1, 128);
+        let text = bench_native_json(&[], &[], &lm, &[], &[], 1, 128);
         let v = Json::parse(&text).unwrap();
         let lms = v.get("lm").unwrap().as_arr().unwrap();
         assert_eq!(lms[0].get("grad_norm_last"), Some(&Json::Null));

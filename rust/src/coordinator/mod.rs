@@ -12,7 +12,7 @@ pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
-pub use checkpoint::{Checkpoint, PARAM_LAYOUT_VERSION};
+pub use checkpoint::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
 pub use config::{RunConfig, TrainSection};
 pub use metrics::{MetricsLog, StepRecord};
 pub use schedule::CosineSchedule;

@@ -164,17 +164,13 @@ impl<'e> Trainer<'e> {
         })
         .generate();
         let vocab = self.vocab_size();
-        let tokenizer = if vocab <= 256 {
-            ByteTokenizer::bytes_only()
-        } else {
-            // train merges on a slice — enough signal, much faster
-            let slice_end = corpus
-                .char_indices()
-                .nth(100_000)
-                .map(|(i, _)| i)
-                .unwrap_or(corpus.len());
-            ByteTokenizer::train(&corpus[..slice_end], vocab)?
-        };
+        // the canonical seed-keyed construction, shared with the inference
+        // path: merges always train on the same fixed-size corpus prefix
+        // regardless of this run's `corpus_bytes`, so the tokenizer a
+        // checkpoint implies is reconstructible from (vocab, seed) alone —
+        // a run with a custom corpus size must not silently produce a
+        // tokenizer that `generate`/`serve` cannot rebuild
+        let tokenizer = ByteTokenizer::for_artifact(vocab, self.cfg.train.seed)?;
         let tokens = tokenizer.encode(&corpus);
         let ds = PackedDataset::pack(&tokens, self.seq_len, self.cfg.data.val_frac,
                                      self.cfg.train.seed)?;

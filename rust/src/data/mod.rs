@@ -16,4 +16,4 @@ pub mod tokenizer;
 pub use batcher::Batcher;
 pub use corpus::{CorpusConfig, CorpusGenerator, DEFAULT_CORPUS_BYTES};
 pub use dataset::{PackedDataset, Split};
-pub use tokenizer::ByteTokenizer;
+pub use tokenizer::{merge_train_slice, ByteTokenizer, DecodeStream, MERGE_TRAIN_CHARS};

@@ -10,6 +10,26 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use super::corpus::{CorpusConfig, CorpusGenerator};
+
+/// Characters of corpus the BPE merges are trained on. The trainer and the
+/// inference path both slice the (deterministic, seed-keyed) synthetic
+/// corpus at this boundary before training merges, so a checkpoint's
+/// tokenizer can be reconstructed exactly from its seed — checkpoints never
+/// serialize the tokenizer.
+pub const MERGE_TRAIN_CHARS: usize = 100_000;
+
+/// The corpus prefix merges are trained on (first [`MERGE_TRAIN_CHARS`]
+/// characters) — shared by the trainer and [`ByteTokenizer::for_artifact`].
+pub fn merge_train_slice(corpus: &str) -> &str {
+    let end = corpus
+        .char_indices()
+        .nth(MERGE_TRAIN_CHARS)
+        .map(|(i, _)| i)
+        .unwrap_or(corpus.len());
+    &corpus[..end]
+}
+
 /// Byte tokenizer + optional bigram merges up to `vocab_size`.
 #[derive(Debug, Clone)]
 pub struct ByteTokenizer {
@@ -23,6 +43,32 @@ impl ByteTokenizer {
     /// Pure byte tokenizer (vocab 256), no merges.
     pub fn bytes_only() -> Self {
         Self { vocab_size: 256, merges: vec![], merge_lookup: HashMap::new() }
+    }
+
+    /// Reconstruct the tokenizer a training run built for an artifact with
+    /// this `vocab_size` and run `seed` — byte-level below 257, otherwise
+    /// BPE merges trained on the same corpus prefix the trainer used. The
+    /// corpus generator emits an identical stream prefix regardless of the
+    /// target size, so only [`MERGE_TRAIN_CHARS`] + slack bytes are
+    /// synthesized here, not the full training corpus.
+    ///
+    /// Caveat: checkpoints written *before* the trainer adopted this
+    /// canonical construction, by runs that set a custom corpus smaller
+    /// than the merge-training slice (`--corpus-bytes` below ~100 KB on a
+    /// BPE preset), trained their merges on that smaller corpus; they are
+    /// not reconstructible (the checkpoint does not record the corpus
+    /// size) and must be retrained to be served.
+    pub fn for_artifact(vocab_size: usize, seed: u64) -> Result<Self> {
+        if vocab_size <= 256 {
+            return Ok(Self::bytes_only());
+        }
+        let corpus = CorpusGenerator::new(CorpusConfig {
+            seed,
+            target_bytes: MERGE_TRAIN_CHARS + 4096,
+            ..Default::default()
+        })
+        .generate();
+        Self::train(merge_train_slice(&corpus), vocab_size)
     }
 
     /// Train merges on `text` until the vocabulary reaches `vocab_size`.
@@ -119,6 +165,88 @@ impl ByteTokenizer {
         self.push_bytes(r, out)?;
         Ok(())
     }
+
+    /// Streaming decoder over this tokenizer — see [`DecodeStream`].
+    pub fn decode_stream(&self) -> DecodeStream<'_> {
+        DecodeStream { tok: self, buf: Vec::new() }
+    }
+}
+
+/// Incremental, UTF-8-safe token decoding for generation.
+///
+/// [`ByteTokenizer::decode`] is all-or-nothing, but byte-level BPE emits
+/// *bytes*, and a multi-byte UTF-8 scalar can straddle a token boundary
+/// mid-generation. `DecodeStream` buffers bytes across [`push`](Self::push)
+/// calls and only releases complete UTF-8 sequences: an incomplete trailing
+/// sequence (at most 3 bytes — a prefix of one scalar) stays buffered
+/// instead of erroring, and bytes that can never complete a valid sequence
+/// are replaced with U+FFFD, so a streaming consumer always receives valid
+/// UTF-8 and the concatenation of all pushes (+ [`finish`](Self::finish))
+/// equals the batch `decode` of the same ids.
+pub struct DecodeStream<'a> {
+    tok: &'a ByteTokenizer,
+    buf: Vec<u8>,
+}
+
+impl DecodeStream<'_> {
+    /// Feed one token id; returns the text that became decodable (possibly
+    /// empty). Errors only on an out-of-vocabulary id.
+    pub fn push(&mut self, id: i32) -> Result<String> {
+        if id < 0 {
+            bail!("token id {id} out of vocabulary");
+        }
+        self.tok.push_bytes(id as u32, &mut self.buf)?;
+        Ok(self.drain())
+    }
+
+    /// Bytes still buffered (a partial multi-byte sequence), if any.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Flush whatever remains, replacing an unfinished trailing sequence
+    /// with U+FFFD (end-of-generation can legitimately cut a scalar short).
+    pub fn finish(mut self) -> String {
+        let mut out = self.drain();
+        if !self.buf.is_empty() {
+            out.push_str(&String::from_utf8_lossy(&self.buf));
+            self.buf.clear();
+        }
+        out
+    }
+
+    /// Release every complete UTF-8 sequence from the front of the buffer,
+    /// keeping only an incomplete trailing prefix.
+    fn drain(&mut self) -> String {
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.buf) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.buf.clear();
+                    return out;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.buf[..valid]).expect("validated"));
+                    match e.error_len() {
+                        // incomplete trailing sequence: keep it buffered for
+                        // the next push
+                        None => {
+                            self.buf.drain(..valid);
+                            return out;
+                        }
+                        // bytes that can never start/continue a valid
+                        // sequence: replace and keep scanning
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            self.buf.drain(..valid + bad);
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -179,5 +307,91 @@ mod tests {
     fn decode_rejects_oov() {
         let t = ByteTokenizer::bytes_only();
         assert!(t.decode(&[300]).is_err());
+    }
+
+    #[test]
+    fn decode_stream_roundtrips_multibyte_pushed_one_id_at_a_time() {
+        let t = ByteTokenizer::bytes_only();
+        // 2-, 3-, and 4-byte scalars: every intermediate push leaves a
+        // partial sequence buffered instead of erroring
+        let s = "héllo → wörld 🌍 末尾";
+        let ids = t.encode(s);
+        let mut stream = t.decode_stream();
+        let mut out = String::new();
+        let mut saw_pending = false;
+        for &id in &ids {
+            out.push_str(&stream.push(id).unwrap());
+            saw_pending |= stream.pending() > 0;
+        }
+        out.push_str(&stream.finish());
+        assert_eq!(out, s);
+        assert!(saw_pending, "multi-byte input never straddled a push");
+    }
+
+    #[test]
+    fn decode_stream_matches_batch_decode_with_merges() {
+        let text = "the cat sat on the mat. the cat sat on the mat. déjà vu déjà vu";
+        let t = ByteTokenizer::train(text, 300).unwrap();
+        let ids = t.encode(text);
+        let mut stream = t.decode_stream();
+        let mut out = String::new();
+        for &id in &ids {
+            out.push_str(&stream.push(id).unwrap());
+        }
+        out.push_str(&stream.finish());
+        assert_eq!(out, t.decode(&ids).unwrap());
+        assert_eq!(out, text);
+    }
+
+    #[test]
+    fn decode_stream_flushes_truncated_scalar_as_replacement() {
+        let t = ByteTokenizer::bytes_only();
+        let euro = "€".as_bytes(); // 3 bytes
+        let mut stream = t.decode_stream();
+        assert_eq!(stream.push(euro[0] as i32).unwrap(), "");
+        assert_eq!(stream.push(euro[1] as i32).unwrap(), "");
+        assert_eq!(stream.pending(), 2);
+        // generation stops mid-scalar: finish() must not error — the
+        // truncated sequence collapses to one replacement char (lossy
+        // decoding replaces each maximal ill-formed subpart)
+        assert_eq!(stream.finish(), "\u{FFFD}");
+    }
+
+    #[test]
+    fn decode_stream_replaces_invalid_bytes_and_recovers() {
+        let t = ByteTokenizer::bytes_only();
+        let mut stream = t.decode_stream();
+        // 0xFF can never start a sequence; the following ASCII must survive
+        let mut out = stream.push(0xFF).unwrap();
+        out.push_str(&stream.push(b'o' as i32).unwrap());
+        out.push_str(&stream.push(b'k' as i32).unwrap());
+        assert_eq!(out, "\u{FFFD}ok");
+        assert_eq!(stream.pending(), 0);
+    }
+
+    #[test]
+    fn decode_stream_rejects_oov_ids() {
+        let t = ByteTokenizer::bytes_only();
+        let mut stream = t.decode_stream();
+        assert!(stream.push(-1).is_err());
+        assert!(stream.push(300).is_err());
+    }
+
+    #[test]
+    fn for_artifact_bytes_below_257() {
+        let t = ByteTokenizer::for_artifact(256, 0).unwrap();
+        assert_eq!(t.n_merges(), 0);
+        let s = "plain bytes";
+        assert_eq!(t.decode(&t.encode(s)).unwrap(), s);
+    }
+
+    #[test]
+    fn merge_train_slice_is_char_bounded() {
+        let short = "tiny";
+        assert_eq!(merge_train_slice(short), short);
+        let long: String = "é".repeat(MERGE_TRAIN_CHARS + 10);
+        let slice = merge_train_slice(&long);
+        assert_eq!(slice.chars().count(), MERGE_TRAIN_CHARS);
+        assert!(long.is_char_boundary(slice.len()));
     }
 }

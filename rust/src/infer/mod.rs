@@ -1,0 +1,37 @@
+//! Inference subsystem: O(1)-state recurrent decoding, batched generation,
+//! and a warm `serve` mode.
+//!
+//! Training demonstrates the paper's *parallel-form* claim (chunkwise linear
+//! attention trains as fast as softmax); this module demonstrates the
+//! *recurrent-form* claim — "Transformers are RNNs" (Katharopoulos et al.):
+//! at decode time the `ours`/`gated` mixers carry a **constant-size state**
+//! per layer and head (the running `S = Σ γ^{t-s} k_s vᵀ_s` matrix plus the
+//! normalizer channel, O(hd²) floats), updated in O(hd²) per token without
+//! ever re-scanning the prefix, while the `softmax` baseline must keep a KV
+//! cache that grows linearly with the generated length. Both families decode
+//! through the same incremental API ([`DecodeState`] +
+//! [`model::logits_step`](crate::native::model::logits_step)), so their
+//! state footprints and per-token costs are directly comparable — the
+//! CPU-measurable analog of the paper's inference memory claim.
+//!
+//! - [`state`] — the per-layer, per-head [`DecodeState`] (recurrent matrix
+//!   for the linear variants, growing KV cache for softmax) with a
+//!   `state_bytes()` footprint probe;
+//! - [`sampler`] — seedable greedy / temperature / top-k sampling with the
+//!   non-finite-hardening the task scorer uses (`total_cmp`, NaN never wins);
+//! - [`session`] — [`ModelSession`]: checkpoint → ready-to-decode model
+//!   (tokenizer rebuilt deterministically from the checkpoint seed), batched
+//!   [`generate`](ModelSession::generate);
+//! - [`serve`] — the long-lived JSONL request/response loop behind
+//!   `repro serve`, keeping model + tokenizer + thread pool warm across
+//!   requests.
+
+pub mod sampler;
+pub mod serve;
+pub mod session;
+pub mod state;
+
+pub use sampler::{SampleMode, Sampler};
+pub use serve::{serve_loop, ServeStats};
+pub use session::{GenOutcome, GenRequest, ModelSession};
+pub use state::{AttnState, DecodeState};

@@ -1,0 +1,194 @@
+//! Seedable token sampling over one logits row: greedy argmax, temperature
+//! softmax, and top-k — hardened against non-finite logits.
+//!
+//! A diverged model can emit NaN/∞ logits mid-generation; following the
+//! task scorer's `total_cmp` pattern, a non-finite logit never panics and
+//! never wins: greedy ignores non-finite entries, and the softmax modes give
+//! them zero probability mass. Sampling draws come from the same
+//! [`SplitMix64`] stream the data pipeline uses, so a fixed seed yields an
+//! identical token sequence on any thread count.
+
+use anyhow::{bail, Result};
+
+use crate::data::rng::SplitMix64;
+
+/// How the next token is chosen from a logits row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SampleMode {
+    /// Deterministic argmax (ties break toward the lowest token id).
+    Greedy,
+    /// Temperature-scaled softmax over the `k` highest logits; `k = 0` or
+    /// `k ≥ vocab` degrades to the full softmax (no truncation).
+    TopK { k: usize, temperature: f32 },
+}
+
+impl SampleMode {
+    /// Parse the CLI/serve surface: `greedy`, or `sample` with knobs.
+    pub fn from_flags(mode: &str, temperature: f32, top_k: usize) -> Result<Self> {
+        match mode {
+            "greedy" => Ok(SampleMode::Greedy),
+            "sample" => Ok(SampleMode::TopK { k: top_k, temperature }),
+            other => bail!("unknown sampling mode {other:?} (expected greedy|sample)"),
+        }
+    }
+}
+
+/// A seeded sampler: mode + private RNG stream.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    mode: SampleMode,
+    rng: SplitMix64,
+}
+
+impl Sampler {
+    pub fn new(mode: SampleMode, seed: u64) -> Result<Self> {
+        if let SampleMode::TopK { temperature, .. } = mode {
+            if !temperature.is_finite() || temperature <= 0.0 {
+                bail!("sampling temperature must be finite and > 0, got {temperature}");
+            }
+        }
+        Ok(Self { mode, rng: SplitMix64::new(seed) })
+    }
+
+    pub fn mode(&self) -> SampleMode {
+        self.mode
+    }
+
+    /// Choose the next token id from one logits row. Errors (never panics)
+    /// when every logit is non-finite — a diverged model, surfaced clearly.
+    pub fn sample(&mut self, logits: &[f32]) -> Result<usize> {
+        match self.mode {
+            SampleMode::Greedy => greedy(logits),
+            SampleMode::TopK { k, temperature } => self.top_k(logits, k, temperature),
+        }
+    }
+
+    fn top_k(&mut self, logits: &[f32], k: usize, temperature: f32) -> Result<usize> {
+        let mut finite: Vec<(usize, f32)> = logits
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| x.is_finite())
+            .map(|(i, &x)| (i, x))
+            .collect();
+        if finite.is_empty() {
+            bail!("cannot sample: all {} logits are non-finite", logits.len());
+        }
+        if k > 0 && k < finite.len() {
+            // highest logit first; ties break toward the lowest token id so
+            // truncation is deterministic
+            finite.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+            finite.truncate(k);
+        }
+        let m = finite.iter().map(|&(_, x)| x).fold(f32::NEG_INFINITY, f32::max);
+        let mut cdf = Vec::with_capacity(finite.len());
+        let mut acc = 0.0f64;
+        for &(_, x) in &finite {
+            acc += (((x - m) / temperature) as f64).exp();
+            cdf.push(acc);
+        }
+        let pick = self.rng.sample_cdf(&cdf)?;
+        Ok(finite[pick].0)
+    }
+}
+
+/// Argmax with `total_cmp` over the finite entries only.
+fn greedy(logits: &[f32]) -> Result<usize> {
+    logits
+        .iter()
+        .enumerate()
+        .filter(|(_, x)| x.is_finite())
+        .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+        .map(|(i, _)| i)
+        .ok_or_else(|| {
+            anyhow::anyhow!("cannot sample: all {} logits are non-finite", logits.len())
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax_and_ignores_non_finite() {
+        let mut s = Sampler::new(SampleMode::Greedy, 0).unwrap();
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0]).unwrap(), 1);
+        // NaN/∞ never win, even when "larger"
+        assert_eq!(s.sample(&[0.1, f32::INFINITY, f32::NAN, 0.3]).unwrap(), 3);
+        assert_eq!(s.sample(&[f32::NAN, 5.0, f32::NAN]).unwrap(), 1);
+    }
+
+    #[test]
+    fn greedy_ties_break_to_lowest_id() {
+        let mut s = Sampler::new(SampleMode::Greedy, 0).unwrap();
+        assert_eq!(s.sample(&[1.0, 3.0, 3.0, 0.0]).unwrap(), 1);
+    }
+
+    #[test]
+    fn all_non_finite_is_an_error_not_a_panic() {
+        for mode in [SampleMode::Greedy, SampleMode::TopK { k: 2, temperature: 1.0 }] {
+            let mut s = Sampler::new(mode, 0).unwrap();
+            assert!(s.sample(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]).is_err());
+        }
+    }
+
+    #[test]
+    fn non_finite_logits_get_zero_mass_when_sampling() {
+        let mut s = Sampler::new(SampleMode::TopK { k: 0, temperature: 1.0 }, 7).unwrap();
+        for _ in 0..200 {
+            let pick = s.sample(&[f32::NAN, 1.0, f32::INFINITY, 1.0]).unwrap();
+            assert!(pick == 1 || pick == 3, "non-finite logit won: {pick}");
+        }
+    }
+
+    #[test]
+    fn top_k_at_or_above_vocab_matches_full_softmax() {
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 7) % 5) as f32 * 0.3).collect();
+        let mut full = Sampler::new(SampleMode::TopK { k: 0, temperature: 0.8 }, 42).unwrap();
+        let mut at = Sampler::new(SampleMode::TopK { k: 16, temperature: 0.8 }, 42).unwrap();
+        let mut above = Sampler::new(SampleMode::TopK { k: 99, temperature: 0.8 }, 42).unwrap();
+        for _ in 0..100 {
+            let want = full.sample(&logits).unwrap();
+            assert_eq!(at.sample(&logits).unwrap(), want);
+            assert_eq!(above.sample(&logits).unwrap(), want);
+        }
+    }
+
+    #[test]
+    fn top_k_truncates_to_the_k_best() {
+        let logits = [0.0, 10.0, 9.0, -5.0, 8.0];
+        let mut s = Sampler::new(SampleMode::TopK { k: 3, temperature: 1.0 }, 3).unwrap();
+        for _ in 0..200 {
+            let pick = s.sample(&logits).unwrap();
+            assert!([1, 2, 4].contains(&pick), "picked outside top-3: {pick}");
+        }
+    }
+
+    #[test]
+    fn fixed_seed_is_reproducible() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mode = SampleMode::TopK { k: 8, temperature: 1.2 };
+        let a: Vec<usize> = {
+            let mut s = Sampler::new(mode, 9).unwrap();
+            (0..50).map(|_| s.sample(&logits).unwrap()).collect()
+        };
+        let b: Vec<usize> = {
+            let mut s = Sampler::new(mode, 9).unwrap();
+            (0..50).map(|_| s.sample(&logits).unwrap()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<usize> = {
+            let mut s = Sampler::new(mode, 10).unwrap();
+            (0..50).map(|_| s.sample(&logits).unwrap()).collect()
+        };
+        assert_ne!(a, c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn rejects_bad_temperature() {
+        for t in [0.0, -1.0, f32::NAN, f32::INFINITY] {
+            assert!(Sampler::new(SampleMode::TopK { k: 0, temperature: t }, 0).is_err());
+        }
+        assert!(SampleMode::from_flags("beam", 1.0, 0).is_err());
+        assert_eq!(SampleMode::from_flags("greedy", 1.0, 0).unwrap(), SampleMode::Greedy);
+    }
+}

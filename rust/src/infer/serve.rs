@@ -1,0 +1,180 @@
+//! Warm serve mode: a long-lived JSONL request/response loop over
+//! stdin/stdout.
+//!
+//! One JSON object per input line, one JSON object per output line; the
+//! model, tokenizer, and thread pool stay loaded across requests (loading —
+//! checkpoint deserialization plus BPE merge reconstruction — is paid once,
+//! not per call). EOF exits cleanly with a session summary on stderr; a
+//! malformed line or a failed generation answers `{"ok": false, "error":
+//! …}` and the loop continues.
+//!
+//! Request schema (all fields but `prompt` optional; `seed` may be a plain
+//! number or — for values above 2⁵³, which don't survive a JSON f64
+//! round-trip — a decimal string, the checkpoint-trailer convention):
+//! ```json
+//! {"id": 1, "prompt": "the ", "max_new": 32, "mode": "greedy",
+//!  "temperature": 1.0, "top_k": 0, "seed": 0, "samples": 1}
+//! ```
+//! Response (`id` echoed verbatim):
+//! ```json
+//! {"id": 1, "ok": true, "text": "…", "texts": ["…"], "prompt_tokens": 2,
+//!  "new_tokens": 32, "prefill_ms": 0.8, "decode_ms": 11.2,
+//!  "tokens_per_s": 2857.1, "state_bytes": 69632}
+//! ```
+
+use std::io::{BufRead, Write};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::sampler::SampleMode;
+use super::session::{GenRequest, ModelSession};
+
+/// End-of-loop summary (also logged to stderr by the CLI).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub errors: usize,
+}
+
+/// Build a [`GenRequest`] from one parsed request object.
+fn build_request(v: &Json, default_max_new: usize) -> Result<GenRequest> {
+    let prompt = v
+        .req("prompt")?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("\"prompt\" must be a string"))?
+        .to_string();
+    let max_new = match v.get("max_new") {
+        None => default_max_new,
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("\"max_new\" must be a non-negative integer"))?,
+    };
+    let mode_name = match v.get("mode") {
+        None => "greedy",
+        Some(x) => x
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("\"mode\" must be a string (greedy|sample)"))?,
+    };
+    let temperature = match v.get("temperature") {
+        None => 1.0,
+        Some(x) => x
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("\"temperature\" must be a number"))? as f32,
+    };
+    let top_k = match v.get("top_k") {
+        None => 0,
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("\"top_k\" must be a non-negative integer"))?,
+    };
+    // seeds above 2^53 don't survive a JSON f64 round-trip — accept the
+    // checkpoint convention (decimal string) alongside plain numbers, and
+    // reject numbers past the exactly-representable range instead of
+    // silently rounding them (reproducibility would break without a signal)
+    const SEED_F64_MAX: f64 = 9_007_199_254_740_992.0; // 2^53
+    let seed = match v.get("seed") {
+        None => 0,
+        Some(Json::Str(s)) => s.parse().map_err(|_| {
+            anyhow::anyhow!("\"seed\" must be a non-negative integer (number or decimal string)")
+        })?,
+        Some(x) => x
+            .as_f64()
+            .filter(|s| *s >= 0.0 && s.fract() == 0.0 && *s <= SEED_F64_MAX)
+            .map(|s| s as u64)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "\"seed\" must be a non-negative integer ≤ 2^53 as a number; send larger \
+                     seeds as a decimal string"
+                )
+            })?,
+    };
+    let samples = match v.get("samples") {
+        None => 1,
+        Some(x) => x
+            .as_usize()
+            .filter(|&s| s >= 1)
+            .ok_or_else(|| anyhow::anyhow!("\"samples\" must be an integer ≥ 1"))?,
+    };
+    let mode = SampleMode::from_flags(mode_name, temperature, top_k)?;
+    Ok(GenRequest { prompt, max_new, mode, seed, samples })
+}
+
+fn error_response(id: Json, err: &anyhow::Error) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(format!("{err:#}"))),
+    ])
+}
+
+/// Drive the request/response loop until EOF. Generic over the streams so
+/// tests can run it against in-memory buffers.
+pub fn serve_loop(
+    session: &ModelSession,
+    input: impl BufRead,
+    mut output: impl Write,
+    default_max_new: usize,
+) -> Result<ServeStats> {
+    let mut stats = ServeStats::default();
+    for line in input.lines() {
+        let line = line.context("reading request line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        stats.requests += 1;
+        let response = match Json::parse(&line).context("malformed JSON request") {
+            Err(e) => {
+                stats.errors += 1;
+                error_response(Json::Null, &e)
+            }
+            Ok(v) => {
+                // the id is echoed even when field validation fails below —
+                // clients correlate responses to in-flight requests by it
+                let id = v.get("id").cloned().unwrap_or(Json::Null);
+                match build_request(&v, default_max_new)
+                    .and_then(|req| session.generate(&req))
+                {
+                    Err(e) => {
+                        stats.errors += 1;
+                        error_response(id, &e)
+                    }
+                    Ok(out) => {
+                        eprintln!(
+                            "serve: {} prompt={}t new={}t prefill {:.1} ms decode {:.1} ms \
+                             ({:.0} tok/s, state {} B)",
+                            session.meta().artifact_tag,
+                            out.prompt_tokens,
+                            out.new_tokens,
+                            out.prefill_s * 1e3,
+                            out.decode_s * 1e3,
+                            out.tokens_per_s(),
+                            out.state_bytes,
+                        );
+                        Json::obj(vec![
+                            ("id", id),
+                            ("ok", Json::Bool(true)),
+                            ("text", Json::str(out.texts[0].clone())),
+                            (
+                                "texts",
+                                Json::Arr(
+                                    out.texts.iter().map(|t| Json::str(t.clone())).collect(),
+                                ),
+                            ),
+                            ("prompt_tokens", Json::num(out.prompt_tokens as f64)),
+                            ("new_tokens", Json::num(out.new_tokens as f64)),
+                            ("prefill_ms", Json::num(out.prefill_s * 1e3)),
+                            ("decode_ms", Json::num(out.decode_s * 1e3)),
+                            ("tokens_per_s", Json::num(out.tokens_per_s())),
+                            ("state_bytes", Json::num(out.state_bytes as f64)),
+                        ])
+                    }
+                }
+            }
+        };
+        writeln!(output, "{}", response.to_string())?;
+        output.flush()?;
+    }
+    Ok(stats)
+}

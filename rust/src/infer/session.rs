@@ -1,0 +1,282 @@
+//! Checkpoint → ready-to-decode model: load + validate a saved training
+//! state, rebuild the tokenizer deterministically from the checkpoint seed,
+//! and run batched recurrent generation.
+//!
+//! A [`ModelSession`] owns everything `generate`/`serve` need warm across
+//! calls: the parameter tensors (the Adam moments are dropped at load — the
+//! decoder only needs the first `np` arrays), the reconstructed
+//! [`ByteTokenizer`], and the worker [`ThreadPool`]. Loading is hardened:
+//! a missing file, a pre-refactor layout-v1 checkpoint, an unrecognized
+//! artifact tag, or a state vector that doesn't match the preset/attn
+//! contract all fail with a clear error before any decoding starts.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{Checkpoint, CheckpointMeta};
+use crate::data::ByteTokenizer;
+use crate::native::model::{self, AttnKind, LmConfig};
+use crate::native::pool::ThreadPool;
+use crate::runtime::Tensor;
+
+use super::sampler::{SampleMode, Sampler};
+use super::state::DecodeState;
+
+/// Upper bound on concurrent samples per generation — a batch size, not a
+/// throughput knob; one request must not be able to allocate an unbounded
+/// set of per-layer decode states.
+pub const MAX_SAMPLES: usize = 64;
+
+/// One generation request (shared by the CLI and the serve loop).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: String,
+    /// New tokens to generate (clamped to the remaining context window).
+    pub max_new: usize,
+    pub mode: SampleMode,
+    /// Sampler seed — a fixed seed yields identical output.
+    pub seed: u64,
+    /// Concurrent samples decoded in one batch (all from the same prompt;
+    /// each draws its own tokens from the shared sampler stream).
+    pub samples: usize,
+}
+
+impl Default for GenRequest {
+    fn default() -> Self {
+        Self {
+            prompt: String::new(),
+            max_new: 64,
+            mode: SampleMode::Greedy,
+            seed: 0,
+            samples: 1,
+        }
+    }
+}
+
+/// What one generation produced, with the latency split the serve loop
+/// reports per request.
+#[derive(Debug, Clone)]
+pub struct GenOutcome {
+    /// Decoded text per sample (prompt not included).
+    pub texts: Vec<String>,
+    /// Generated token ids per sample.
+    pub token_ids: Vec<Vec<i32>>,
+    pub prompt_tokens: usize,
+    /// New tokens generated per sample (after context-window clamping).
+    pub new_tokens: usize,
+    /// Wall-clock of consuming the prompt through the recurrent state.
+    pub prefill_s: f64,
+    /// Wall-clock of the generation loop (steps + sampling + detokenizing).
+    pub decode_s: f64,
+    /// Attention-state footprint at the end of decoding: constant in the
+    /// generated length for `ours`/`gated`, linearly growing for `softmax`.
+    pub state_bytes: usize,
+}
+
+impl GenOutcome {
+    /// Generated tokens per second across the batch (decode phase only).
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            (self.new_tokens * self.texts.len()) as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A loaded checkpoint kept warm for repeated generation calls.
+pub struct ModelSession {
+    cfg: LmConfig,
+    meta: CheckpointMeta,
+    /// The first `n_param_arrays` tensors of the checkpoint state.
+    params: Vec<Tensor>,
+    tokenizer: ByteTokenizer,
+    pool: ThreadPool,
+}
+
+/// `lm_<preset>_<attn>` → (preset, attn); the inverse of
+/// [`RunConfig::artifact_tag`](crate::coordinator::RunConfig::artifact_tag).
+fn parse_artifact_tag(tag: &str) -> Result<(String, String)> {
+    let rest = tag.strip_prefix("lm_").ok_or_else(|| {
+        anyhow::anyhow!(
+            "checkpoint artifact tag {tag:?} is not an LM tag (expected lm_<preset>_<attn>)"
+        )
+    })?;
+    let (preset, attn) = rest.rsplit_once('_').ok_or_else(|| {
+        anyhow::anyhow!(
+            "checkpoint artifact tag {tag:?} is not an LM tag (expected lm_<preset>_<attn>)"
+        )
+    })?;
+    Ok((preset.to_string(), attn.to_string()))
+}
+
+impl ModelSession {
+    /// Load a checkpoint with a pool sized from `RUST_PALLAS_THREADS`.
+    pub fn load(ckpt_path: impl AsRef<Path>) -> Result<Self> {
+        Self::load_with_pool(ckpt_path, ThreadPool::from_env())
+    }
+
+    /// Load a checkpoint onto an explicit pool (tests, thread sweeps).
+    pub fn load_with_pool(ckpt_path: impl AsRef<Path>, pool: ThreadPool) -> Result<Self> {
+        let path = ckpt_path.as_ref();
+        let ck = Checkpoint::load(path)
+            .with_context(|| format!("loading checkpoint {}", path.display()))?;
+        ck.meta.require_current_layout()?;
+        let (preset, attn) = parse_artifact_tag(&ck.meta.artifact_tag)?;
+        let cfg = LmConfig::by_preset(&preset, AttnKind::from_name(&attn)?)
+            .with_context(|| format!("resolving checkpoint artifact {:?}", ck.meta.artifact_tag))?;
+        let np = cfg.n_param_arrays();
+        if ck.state.len() != 3 * np {
+            bail!(
+                "checkpoint {:?} carries {} state arrays but preset {preset:?}/{attn:?} \
+                 wants {} (params ++ m ++ v) — the state does not match its tag",
+                ck.meta.artifact_tag,
+                ck.state.len(),
+                3 * np
+            );
+        }
+        for ((name, shape), t) in cfg.param_shapes().iter().zip(&ck.state) {
+            if t.shape() != shape.as_slice() {
+                bail!(
+                    "checkpoint {:?}: param {name} has shape {:?} but preset \
+                     {preset:?}/{attn:?} wants {shape:?} — the state does not match its tag",
+                    ck.meta.artifact_tag,
+                    t.shape()
+                );
+            }
+        }
+        // tokenizer last: it is the expensive part (BPE merge training) and
+        // must not mask a bad checkpoint
+        let tokenizer = ByteTokenizer::for_artifact(cfg.vocab, ck.meta.seed)?;
+        let mut state = ck.state;
+        state.truncate(np); // the Adam moments are dead weight at decode time
+        Ok(Self { cfg, meta: ck.meta, params: state, tokenizer, pool })
+    }
+
+    pub fn cfg(&self) -> &LmConfig {
+        &self.cfg
+    }
+
+    pub fn meta(&self) -> &CheckpointMeta {
+        &self.meta
+    }
+
+    pub fn tokenizer(&self) -> &ByteTokenizer {
+        &self.tokenizer
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// One-line summary for startup logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} @ step {} ({} params, {} layers × {} heads, n_ctx {}, vocab {})",
+            self.meta.artifact_tag,
+            self.meta.step,
+            self.cfg.n_params(),
+            self.cfg.n_layer,
+            self.cfg.n_head,
+            self.cfg.n_ctx,
+            self.cfg.vocab,
+        )
+    }
+
+    /// Run one batched generation: prefill the prompt through the recurrent
+    /// state (never re-scanning it), then sample `max_new` tokens per
+    /// sample. The prompt is truncated to the last `n_ctx − 1` tokens and
+    /// `max_new` is clamped to the remaining window.
+    pub fn generate(&self, req: &GenRequest) -> Result<GenOutcome> {
+        if req.samples == 0 || req.samples > MAX_SAMPLES {
+            // the cap keeps one request from allocating an unbounded batch
+            // of decode states — a malicious/typo'd `samples` must answer
+            // with an error, not abort a warm serve process
+            bail!("samples must be in [1, {MAX_SAMPLES}], got {}", req.samples);
+        }
+        let mut ids = self.tokenizer.encode(&req.prompt);
+        if ids.len() > self.cfg.n_ctx - 1 {
+            ids.drain(..ids.len() - (self.cfg.n_ctx - 1));
+        }
+        if ids.is_empty() {
+            bail!("prompt encodes to zero tokens — provide a non-empty prompt");
+        }
+        let max_new = req.max_new.min(self.cfg.n_ctx - ids.len());
+        let mut sampler = Sampler::new(req.mode, req.seed)?;
+        // bind + shape-check the parameters once; the loop below issues one
+        // step per token and must not re-validate the layout every call
+        let params: Vec<&Tensor> = self.params.iter().collect();
+        let bound = model::DecodeModel::bind(&self.cfg, &params)?;
+        let n_seq = req.samples;
+        let mut st = DecodeState::new(&self.cfg, n_seq)?;
+
+        let t0 = Instant::now();
+        // every prompt token but the last only advances the state — the
+        // unembedding GEMM is skipped until logits are actually needed
+        for &tok in &ids[..ids.len() - 1] {
+            bound.prefill_step(&vec![tok; n_seq], &mut st, &self.pool)?;
+        }
+        let last = *ids.last().expect("non-empty prompt");
+        let mut logits = bound.logits_step(&vec![last; n_seq], &mut st, &self.pool)?;
+        let prefill_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let v = self.cfg.vocab;
+        // BPE merge training can saturate below the artifact vocabulary
+        // (no bigram frequent enough), leaving ids in [256 + n_merges,
+        // vocab) that the model can score but the tokenizer cannot decode —
+        // sample only over the decodable prefix so generation never aborts
+        // on an undecodable id
+        let decodable = v.min(256 + self.tokenizer.n_merges());
+        let mut token_ids: Vec<Vec<i32>> = vec![Vec::with_capacity(max_new); n_seq];
+        let mut streams: Vec<_> = (0..n_seq).map(|_| self.tokenizer.decode_stream()).collect();
+        let mut texts = vec![String::new(); n_seq];
+        for step in 0..max_new {
+            let mut next = Vec::with_capacity(n_seq);
+            for (row, out) in token_ids.iter_mut().enumerate() {
+                let tok = sampler.sample(&logits[row * v..][..decodable])? as i32;
+                out.push(tok);
+                texts[row].push_str(&streams[row].push(tok)?);
+                next.push(tok);
+            }
+            if step + 1 < max_new {
+                logits = bound.logits_step(&next, &mut st, &self.pool)?;
+            }
+        }
+        for (text, stream) in texts.iter_mut().zip(streams) {
+            text.push_str(&stream.finish());
+        }
+        let decode_s = t1.elapsed().as_secs_f64();
+
+        Ok(GenOutcome {
+            texts,
+            token_ids,
+            prompt_tokens: ids.len(),
+            new_tokens: max_new,
+            prefill_s,
+            decode_s,
+            state_bytes: st.state_bytes(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_lm_tags() {
+        assert_eq!(
+            parse_artifact_tag("lm_tiny_ours").unwrap(),
+            ("tiny".to_string(), "ours".to_string())
+        );
+        assert_eq!(
+            parse_artifact_tag("lm_medium_softmax").unwrap(),
+            ("medium".to_string(), "softmax".to_string())
+        );
+        assert!(parse_artifact_tag("layer_ours_fwd").is_err());
+        assert!(parse_artifact_tag("lm_onlyonepart").is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Decode-time attention state: the recurrent matrix of the linear variants
+//! vs the growing KV cache of the softmax baseline, behind one type.
+//!
+//! One [`DecodeState`] tracks `n_seq` concurrent sequences through every
+//! layer of one model. Per layer the state is an [`AttnState`]:
+//!
+//! - **`Linear`** (`ours` / `gated`): for each `(seq, head)` pair, the
+//!   running `hd × (hd+1)` matrix `S_t = γ·S_{t-1} + φ(k_t)·[v_t, 1]ᵀ` — the
+//!   value columns plus the ones-channel normalizer row the training-time
+//!   scan uses. The footprint is **constant in the decoded length**:
+//!   O(n_seq · H · hd²) floats, full stop.
+//! - **`Softmax`**: the per-token key/value cache, appended each step —
+//!   O(n_seq · H · hd · t) floats after `t` tokens, the linearly-growing
+//!   baseline the paper's memory comparison is made against.
+//!
+//! The buffers are written by
+//! [`model::logits_step`](crate::native::model::logits_step) (the
+//! incremental one-token forward); this module owns layout, construction,
+//! and the [`state_bytes`](DecodeState::state_bytes) probe the decode bench
+//! reports.
+
+use anyhow::{bail, Result};
+
+use crate::native::model::{attn_gamma, AttnKind, LmConfig};
+
+/// Attention state of one layer (all `(seq, head)` pairs folded).
+#[derive(Debug, Clone)]
+pub enum AttnState {
+    /// Running linear-attention state: `n_seq · n_head` blocks of
+    /// `hd × (hd+1)` (value columns ++ normalizer column), decayed by
+    /// `gamma` each step (1.0 = undecayed `ours`).
+    Linear { s: Vec<f32>, gamma: f32 },
+    /// Growing KV cache: each step appends one `n_seq · n_head · hd` block
+    /// to both `k` and `v` (token-major: block `t` holds every `(seq,
+    /// head)` row of token `t`).
+    Softmax { k: Vec<f32>, v: Vec<f32> },
+}
+
+impl AttnState {
+    fn new(kind: AttnKind, n_seq: usize, n_head: usize, hd: usize) -> Self {
+        match kind {
+            AttnKind::Softmax => AttnState::Softmax { k: Vec::new(), v: Vec::new() },
+            kind => AttnState::Linear {
+                s: vec![0.0f32; n_seq * n_head * hd * (hd + 1)],
+                gamma: attn_gamma(kind),
+            },
+        }
+    }
+
+    /// Bytes currently held by this layer's attention state.
+    fn bytes(&self) -> usize {
+        match self {
+            AttnState::Linear { s, .. } => std::mem::size_of_val(s.as_slice()),
+            AttnState::Softmax { k, v } => {
+                std::mem::size_of_val(k.as_slice()) + std::mem::size_of_val(v.as_slice())
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        match self {
+            AttnState::Linear { s, .. } => s.iter_mut().for_each(|x| *x = 0.0),
+            AttnState::Softmax { k, v } => {
+                k.clear();
+                v.clear();
+            }
+        }
+    }
+}
+
+/// Incremental decoding state for `n_seq` concurrent sequences: one
+/// [`AttnState`] per layer plus the shared position cursor. All sequences in
+/// the batch advance in lockstep (one token each per
+/// [`logits_step`](crate::native::model::logits_step) call).
+#[derive(Debug, Clone)]
+pub struct DecodeState {
+    layers: Vec<AttnState>,
+    n_seq: usize,
+    n_head: usize,
+    head_dim: usize,
+    n_ctx: usize,
+    attn: AttnKind,
+    pos: usize,
+}
+
+impl DecodeState {
+    /// Fresh state (position 0) for `n_seq` concurrent sequences of `cfg`'s
+    /// architecture.
+    pub fn new(cfg: &LmConfig, n_seq: usize) -> Result<Self> {
+        cfg.validate()?;
+        if n_seq == 0 {
+            bail!("DecodeState needs at least one sequence");
+        }
+        let hd = cfg.head_dim();
+        let layers = (0..cfg.n_layer)
+            .map(|_| AttnState::new(cfg.attn, n_seq, cfg.n_head, hd))
+            .collect();
+        Ok(Self {
+            layers,
+            n_seq,
+            n_head: cfg.n_head,
+            head_dim: hd,
+            n_ctx: cfg.n_ctx,
+            attn: cfg.attn,
+            pos: 0,
+        })
+    }
+
+    /// Guard every incremental-forward call goes through: the state must
+    /// have been built for exactly this architecture.
+    pub fn check(&self, cfg: &LmConfig) -> Result<()> {
+        if self.layers.len() != cfg.n_layer
+            || self.n_head != cfg.n_head
+            || self.head_dim != cfg.head_dim()
+            || self.n_ctx != cfg.n_ctx
+            || self.attn != cfg.attn
+        {
+            bail!(
+                "DecodeState was built for a different architecture \
+                 ({} layers × {} heads, hd {}, n_ctx {}, {:?}) than the model \
+                 ({} layers × {} heads, hd {}, n_ctx {}, {:?})",
+                self.layers.len(),
+                self.n_head,
+                self.head_dim,
+                self.n_ctx,
+                self.attn,
+                cfg.n_layer,
+                cfg.n_head,
+                cfg.head_dim(),
+                cfg.n_ctx,
+                cfg.attn,
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of concurrent sequences this state tracks.
+    pub fn n_seq(&self) -> usize {
+        self.n_seq
+    }
+
+    /// Tokens consumed so far (the position the *next* token will occupy).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Positions still available before the context window is exhausted.
+    pub fn remaining(&self) -> usize {
+        self.n_ctx.saturating_sub(self.pos)
+    }
+
+    /// Mutable access to one layer's attention state (the incremental
+    /// forward's write path).
+    pub(crate) fn layer_mut(&mut self, layer: usize) -> &mut AttnState {
+        &mut self.layers[layer]
+    }
+
+    /// Advance the position cursor after one successful token step.
+    pub(crate) fn advance(&mut self) {
+        self.pos += 1;
+    }
+
+    /// Total bytes held by the attention states across all layers — the
+    /// decode-memory figure the bench compares across AttnKinds: constant
+    /// for the linear variants, growing linearly in `pos` for softmax.
+    pub fn state_bytes(&self) -> usize {
+        self.layers.iter().map(AttnState::bytes).sum()
+    }
+
+    /// Rewind to position 0, dropping all accumulated context (buffers are
+    /// kept allocated for reuse).
+    pub fn reset(&mut self) {
+        for l in &mut self.layers {
+            l.reset();
+        }
+        self.pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_state_is_preallocated_and_constant_size() {
+        for attn in [AttnKind::Ours, AttnKind::Gated] {
+            let cfg = LmConfig::tiny(attn);
+            let st = DecodeState::new(&cfg, 3).unwrap();
+            let hd = cfg.head_dim();
+            let expect = cfg.n_layer * 3 * cfg.n_head * hd * (hd + 1) * 4;
+            assert_eq!(st.state_bytes(), expect);
+            assert_eq!(st.pos(), 0);
+            assert_eq!(st.remaining(), cfg.n_ctx);
+        }
+    }
+
+    #[test]
+    fn softmax_state_starts_empty() {
+        let cfg = LmConfig::tiny(AttnKind::Softmax);
+        let st = DecodeState::new(&cfg, 2).unwrap();
+        assert_eq!(st.state_bytes(), 0);
+    }
+
+    #[test]
+    fn check_rejects_architecture_mismatch() {
+        let tiny = LmConfig::tiny(AttnKind::Ours);
+        let small = LmConfig::small(AttnKind::Ours);
+        let gated = LmConfig::tiny(AttnKind::Gated);
+        let st = DecodeState::new(&tiny, 1).unwrap();
+        assert!(st.check(&tiny).is_ok());
+        assert!(st.check(&small).is_err());
+        assert!(st.check(&gated).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_sequences() {
+        let cfg = LmConfig::tiny(AttnKind::Ours);
+        assert!(DecodeState::new(&cfg, 0).is_err());
+    }
+
+    #[test]
+    fn reset_rewinds_and_clears() {
+        let cfg = LmConfig::tiny(AttnKind::Softmax);
+        let mut st = DecodeState::new(&cfg, 1).unwrap();
+        if let AttnState::Softmax { k, v } = st.layer_mut(0) {
+            k.extend_from_slice(&[1.0; 8]);
+            v.extend_from_slice(&[2.0; 8]);
+        }
+        st.advance();
+        assert!(st.state_bytes() > 0);
+        st.reset();
+        assert_eq!(st.pos(), 0);
+        assert_eq!(st.state_bytes(), 0);
+    }
+}

@@ -18,13 +18,16 @@
 //!   executed through a CPU PJRT client.
 //!
 //! On top of the runtime sit the coordinator (config, training loop,
-//! checkpoints, metrics), the data pipeline, the synthetic-task evaluation
-//! suite, the GPU-traffic simulator, and the benchmark harness that
-//! regenerates the paper's tables and figures.
+//! checkpoints, metrics), the data pipeline, the inference subsystem
+//! (O(1)-state recurrent decoding, batched generation, and the warm `serve`
+//! mode), the synthetic-task evaluation suite, the GPU-traffic simulator,
+//! and the benchmark harness that regenerates the paper's tables and
+//! figures.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod infer;
 pub mod native;
 pub mod runtime;
 pub mod simulator;

@@ -7,6 +7,9 @@
 //!   - `bench-native`  parallel-vs-scalar kernel speedups → BENCH_native.json
 //!   - `bench-traffic` Fig 4 data-movement analysis (analytic A6000 model)
 //!   - `eval-tasks`    Table 2 synthetic reasoning suite
+//!   - `generate`      autoregressive decoding from a checkpoint (recurrent
+//!                     O(1)-state for ours/gated, KV cache for softmax)
+//!   - `serve`         warm JSONL request/response loop over stdin/stdout
 //!   - `report`        summarize finished training runs
 //!   - `inspect`       list available artifacts
 
@@ -36,15 +39,28 @@ SUBCOMMANDS
   bench-native   [--kinds layer_fwd,layer_fwdbwd] [--impls ours,ours_scan]
                  [--reps 5] [--warmup 2] [--max-n 0] [--out BENCH_native.json]
                  [--lm-presets tiny,small] [--lm-attns ours,softmax]
-                 [--lm-steps 6] [--opt-reps 20]
+                 [--lm-steps 6] [--opt-reps 20] [--decode-tokens 64]
                  measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
                  against the scalar single-thread reference, per-step LM
                  training cost/loss for each (preset, attn) pair through
                  both the in-place and the preserved rebuild optimizer
                  routes, the AdamW-update microbench (in-place vs rebuild),
-                 and writes the machine-readable speedup artifact
+                 the decode section (recurrent vs full-recompute tokens/s
+                 plus state bytes; 0 disables), and writes the
+                 machine-readable speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
+  generate       --ckpt runs/lm_tiny_ours/final.ckpt [--prompt \"the \"]
+                 [--max-new 64] [--mode greedy|sample] [--temperature 1.0]
+                 [--top-k 0] [--seed 0] [--samples 1]
+                 decodes through the constant-size recurrent state
+                 (ours/gated) or the growing KV cache (softmax); stats on
+                 stderr, text on stdout
+  serve          --ckpt runs/lm_tiny_ours/final.ckpt [--max-new 64]
+                 long-lived JSONL loop: one request object per stdin line
+                 ({\"prompt\": ..., \"max_new\": ..., \"mode\": ...}), one
+                 response per stdout line; model/tokenizer/pool stay warm
+                 across requests; EOF exits cleanly
   report         [--runs runs]
   inspect        [--filter substr]
 ";
@@ -57,6 +73,8 @@ fn main() -> Result<()> {
         Some("bench-native") => cmd_bench_native(&args),
         Some("bench-traffic") => cmd_bench_traffic(&args),
         Some("eval-tasks") => cmd_eval_tasks(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("report") => cmd_report(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("run-artifact") => cmd_run_artifact(&args),
@@ -156,6 +174,7 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     let lm_attns = split_list(args.get_or("lm-attns", "ours,softmax"));
     let lm_steps = args.get_usize("lm-steps", 6)?;
     let opt_reps = args.get_usize("opt-reps", 20)?;
+    let decode_tokens = args.get_usize("decode-tokens", 64)?;
 
     let threads = ThreadPool::env_threads();
     let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
@@ -211,6 +230,22 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
         }
     }
 
+    // decode section: recurrent vs full-recompute autoregressive decoding
+    // (the inference-side memory/latency claim, per preset × attn)
+    let mut decode_points = Vec::new();
+    if decode_tokens > 0 {
+        for preset in &lm_presets {
+            for attn in &lm_attns {
+                eprintln!("bench-native: decode {preset}/{attn} ({decode_tokens} tokens) …");
+                decode_points.push(repro::bench::lm::measure_decode(
+                    preset,
+                    attn,
+                    decode_tokens,
+                )?);
+            }
+        }
+    }
+
     println!("{}", rpt::bench_native_markdown(&parallel, &scalar));
     if !lm_points.is_empty() {
         println!("{}", rpt::bench_lm_markdown(&lm_points));
@@ -218,11 +253,15 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     if !opt_points.is_empty() {
         println!("{}", rpt::bench_opt_markdown(&opt_points));
     }
+    if !decode_points.is_empty() {
+        println!("{}", rpt::bench_decode_markdown(&decode_points));
+    }
     let json = rpt::bench_native_json(
         &parallel,
         &scalar,
         &lm_points,
         &opt_points,
+        &decode_points,
         threads,
         repro::native::ours_chunk(),
     );
@@ -280,6 +319,74 @@ fn cmd_eval_tasks(args: &Args) -> Result<()> {
             ck.meta.step
         );
     }
+    Ok(())
+}
+
+/// Autoregressive decoding from a checkpoint: the recurrent constant-size
+/// state for `ours`/`gated`, the growing KV cache for `softmax`. Generated
+/// text goes to stdout (one sample per `---`-separated block), stats to
+/// stderr.
+fn cmd_generate(args: &Args) -> Result<()> {
+    use repro::infer::{GenRequest, ModelSession, SampleMode};
+
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt is required"))?;
+    let session = ModelSession::load(ckpt)?;
+    eprintln!("loaded {}", session.summary());
+    let mode = SampleMode::from_flags(
+        args.get_or("mode", "greedy"),
+        args.get_or("temperature", "1.0")
+            .parse::<f32>()
+            .map_err(|_| anyhow!("--temperature expects a number"))?,
+        args.get_usize("top-k", 0)?,
+    )?;
+    let req = GenRequest {
+        prompt: args.get_or("prompt", "the ").to_string(),
+        max_new: args.get_usize("max-new", 64)?,
+        mode,
+        seed: args.get_u64("seed", 0)?,
+        samples: args.get_usize("samples", 1)?,
+    };
+    let out = session.generate(&req)?;
+    for (i, text) in out.texts.iter().enumerate() {
+        if i > 0 {
+            println!("---");
+        }
+        println!("{text}");
+    }
+    eprintln!(
+        "generated {} × {} tokens from a {}-token prompt: prefill {:.1} ms, decode {:.1} ms \
+         ({:.0} tok/s), attention state {} B ({})",
+        out.texts.len(),
+        out.new_tokens,
+        out.prompt_tokens,
+        out.prefill_s * 1e3,
+        out.decode_s * 1e3,
+        out.tokens_per_s(),
+        out.state_bytes,
+        match session.cfg().attn {
+            repro::native::model::AttnKind::Softmax => "KV cache, grows with length",
+            _ => "recurrent, constant in length",
+        },
+    );
+    Ok(())
+}
+
+/// Warm serve mode: keep the loaded model, tokenizer, and thread pool
+/// resident, answering JSONL requests on stdin until EOF.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use repro::infer::{serve_loop, ModelSession};
+
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt is required"))?;
+    let default_max_new = args.get_usize("max-new", 64)?;
+    let session = ModelSession::load(ckpt)?;
+    eprintln!("serving {} (JSONL on stdin, EOF to exit)", session.summary());
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let stats = serve_loop(&session, stdin.lock(), stdout.lock(), default_max_new)?;
+    eprintln!(
+        "serve: exiting after {} request(s), {} error(s)",
+        stats.requests, stats.errors
+    );
     Ok(())
 }
 

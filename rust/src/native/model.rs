@@ -43,6 +43,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::infer::state::{AttnState, DecodeState};
 use crate::runtime::Tensor;
 
 use super::gemm;
@@ -602,7 +603,7 @@ fn merge_heads(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Ve
 
 // --- forward ----------------------------------------------------------------
 
-fn attn_gamma(kind: AttnKind) -> f32 {
+pub(crate) fn attn_gamma(kind: AttnKind) -> f32 {
     match kind {
         AttnKind::Gated => GATED_DECAY,
         _ => 1.0,
@@ -889,6 +890,270 @@ pub fn logits(
     }
     let (lg, _cache) = forward(cfg, &p, x, pool, false)?;
     Tensor::f32(vec![cfg.batch, cfg.n_ctx, cfg.vocab], lg)
+}
+
+// --- incremental (decode-time) forward ----------------------------------------
+
+/// One-token incremental forward over `n_seq` concurrent sequences: consumes
+/// one token id per sequence, updates the per-layer [`DecodeState`] (the
+/// O(hd²) recurrent matrix for `ours`/`gated`, the appended KV cache for
+/// `softmax`), and returns the `n_seq × vocab` next-token logits.
+///
+/// The arithmetic mirrors the full-context [`forward`] step-for-step — same
+/// GEMM microkernels for the projections/MLP/unembedding, same per-token
+/// state-scan update order as [`la_scan_fwd`]'s inner loop, same streaming
+/// row softmax as [`softmax_fwd`] — so feeding a sequence token-by-token
+/// reproduces the full-context logits (the decode-parity tests pin this for
+/// every `AttnKind`). Cost per token is O(1) in the consumed prefix for the
+/// linear variants and O(pos) for softmax; the prefix is never re-scanned.
+pub fn logits_step(
+    cfg: &LmConfig,
+    params: &[&Tensor],
+    tokens: &[i32],
+    st: &mut DecodeState,
+    pool: &ThreadPool,
+) -> Result<Vec<f32>> {
+    DecodeModel::bind(cfg, params)?.logits_step(tokens, st, pool)
+}
+
+/// [`logits_step`] without the final LayerNorm + unembedding GEMM — the
+/// prompt-prefill fast path: every prompt token but the last only needs to
+/// advance the decode state, and the `ns × d × vocab` unembedding is the
+/// single largest matmul of a step.
+pub fn prefill_step(
+    cfg: &LmConfig,
+    params: &[&Tensor],
+    tokens: &[i32],
+    st: &mut DecodeState,
+    pool: &ThreadPool,
+) -> Result<()> {
+    DecodeModel::bind(cfg, params)?.prefill_step(tokens, st, pool)
+}
+
+/// Parameter views bound and shape-checked **once** for a decode session.
+/// The free [`logits_step`]/[`prefill_step`] functions rebind per call —
+/// fine for tests and one-shot use, but a generation loop issues one call
+/// per token, and re-walking the parameter layout (name `String`s, shape
+/// validation) every token is pure overhead. Bind once, step many times.
+pub struct DecodeModel<'a> {
+    cfg: LmConfig,
+    p: P<'a>,
+}
+
+impl<'a> DecodeModel<'a> {
+    pub fn bind(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
+        Ok(Self { cfg: *cfg, p: P::bind(cfg, params)? })
+    }
+
+    /// One incremental step producing next-token logits (`n_seq × vocab`).
+    pub fn logits_step(
+        &self,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+    ) -> Result<Vec<f32>> {
+        Ok(self.step(tokens, st, pool, true)?.expect("logits requested"))
+    }
+
+    /// One incremental step that only advances the state (no unembedding).
+    pub fn prefill_step(
+        &self,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+    ) -> Result<()> {
+        self.step(tokens, st, pool, false).map(|_| ())
+    }
+
+    /// Shared one-token step: embed, run every block through the decode
+    /// state, then (optionally) unembed.
+    fn step(
+        &self,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+        compute_logits: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let (cfg, p) = (&self.cfg, &self.p);
+        st.check(cfg)?;
+        let ns = st.n_seq();
+        if tokens.len() != ns {
+            bail!("logits_step wants {} token ids (one per sequence), got {}", ns, tokens.len());
+        }
+        let pos = st.pos();
+        let (d, v) = (cfg.d_model, cfg.vocab);
+        if pos >= cfg.n_ctx {
+            bail!(
+                "context window exhausted: position {pos} ≥ n_ctx {} — reset the DecodeState",
+                cfg.n_ctx
+            );
+        }
+
+        // h = wte[tok] + wpe[pos]
+        let wte = p.at(p.idx.wte);
+        let wpe = &p.at(p.idx.wpe)[pos * d..][..d];
+        let mut h = vec![0.0f32; ns * d];
+        for (r, &tok) in tokens.iter().enumerate() {
+            if tok < 0 || tok as usize >= v {
+                bail!("token id {tok} out of range [0, {v})");
+            }
+            let te = &wte[tok as usize * d..][..d];
+            let hr = &mut h[r * d..][..d];
+            for ((hx, a), b) in hr.iter_mut().zip(te).zip(wpe) {
+                *hx = a + b;
+            }
+        }
+
+        for (li, bi) in p.idx.blocks.iter().enumerate() {
+            block_step(cfg, p, bi, &mut h, st.layer_mut(li), ns, pos, pool);
+        }
+        st.advance();
+
+        if !compute_logits {
+            return Ok(None);
+        }
+        let xf = match p.idx.lnf {
+            Some(i) => ln_fwd(&h, p.at(i), p.at(i + 1), ns, d).0,
+            None => h,
+        };
+        let bu = p.at(p.idx.bu);
+        let mut logits = vec![0.0f32; ns * v];
+        for r in 0..ns {
+            logits[r * v..][..v].copy_from_slice(bu);
+        }
+        matmul(pool, &xf, p.at(p.idx.wu), ns, d, v, &mut logits);
+        Ok(Some(logits))
+    }
+}
+
+/// One block of the incremental forward: pre-norm attention step (through
+/// the layer's [`AttnState`]) + residual, then the pre-norm MLP + residual.
+#[allow(clippy::too_many_arguments)]
+fn block_step(
+    cfg: &LmConfig,
+    p: &P,
+    bi: &BlockIdx,
+    h: &mut [f32],
+    ls: &mut AttnState,
+    ns: usize,
+    pos: usize,
+    pool: &ThreadPool,
+) {
+    let d = cfg.d_model;
+    let (nh, hd) = (cfg.n_head, cfg.head_dim());
+    let n_sh = ns * nh;
+
+    let x1 = match bi.ln1 {
+        Some(i) => ln_fwd(h, p.at(i), p.at(i + 1), ns, d).0,
+        None => h.to_vec(),
+    };
+    let mut qp = vec![0.0f32; ns * d];
+    let mut kp = vec![0.0f32; ns * d];
+    let mut vp = vec![0.0f32; ns * d];
+    matmul(pool, &x1, p.at(bi.wq), ns, d, d, &mut qp);
+    matmul(pool, &x1, p.at(bi.wq + 1), ns, d, d, &mut kp);
+    matmul(pool, &x1, p.at(bi.wq + 2), ns, d, d, &mut vp);
+    let qh = split_heads(&qp, ns, 1, nh, hd);
+    let kh = split_heads(&kp, ns, 1, nh, hd);
+    let vh = split_heads(&vp, ns, 1, nh, hd);
+
+    let mut ah = vec![0.0f32; n_sh * hd];
+    match ls {
+        AttnState::Linear { s, gamma } => {
+            // φ(q), φ(k), [v, 1] for every (seq, head) row of this token
+            let fq: Vec<f32> = qh.iter().map(|&x| elu1(x)).collect();
+            let fk: Vec<f32> = kh.iter().map(|&x| elu1(x)).collect();
+            let mut vext = vec![0.0f32; n_sh * (hd + 1)];
+            for r in 0..n_sh {
+                vext[r * (hd + 1)..][..hd].copy_from_slice(&vh[r * hd..][..hd]);
+                vext[r * (hd + 1) + hd] = 1.0;
+            }
+            let gamma = *gamma;
+            let sd = hd * (hd + 1);
+            // one (seq, head) state block per pool task — disjoint windows
+            let sp = super::pool::SliceParts::new(s);
+            let ap = super::pool::SliceParts::new(&mut ah);
+            pool.run(n_sh, |i| {
+                // SAFETY: task `i` touches windows `i` of `s`/`ah` only.
+                let (sw, aw) =
+                    unsafe { (sp.window(i * sd, sd), ap.window(i * hd, hd)) };
+                let fqr = &fq[i * hd..][..hd];
+                let fkr = &fk[i * hd..][..hd];
+                let vr = &vext[i * (hd + 1)..][..hd + 1];
+                // S ← γ·S + φ(k)·[v, 1]ᵀ   (same order as the training scan)
+                if gamma != 1.0 {
+                    for x in sw.iter_mut() {
+                        *x *= gamma;
+                    }
+                }
+                let mut u = vec![0.0f32; hd + 1];
+                for (row, srow) in sw.chunks_exact_mut(hd + 1).enumerate() {
+                    gemm::axpy(fkr[row], vr, srow);
+                }
+                // u = Sᵀ·φ(q), then divide by the normalizer channel
+                for (row, srow) in sw.chunks_exact(hd + 1).enumerate() {
+                    gemm::axpy(fqr[row], srow, &mut u);
+                }
+                let z = u[hd] + EPS;
+                for (ax, ux) in aw.iter_mut().zip(&u[..hd]) {
+                    *ax = ux / z;
+                }
+            });
+        }
+        AttnState::Softmax { k, v } => {
+            k.extend_from_slice(&kh);
+            v.extend_from_slice(&vh);
+            let (kc, vc) = (&*k, &*v);
+            let scale = 1.0 / (hd as f32).sqrt();
+            // streaming causal softmax over the cached prefix, one
+            // (seq, head) row per pool task — identical accumulation order
+            // to softmax_fwd's row `pos`
+            pool.run_chunks(&mut ah, hd, |sh, out| {
+                let qr = &qh[sh * hd..][..hd];
+                let mut scores = vec![0.0f32; pos + 1];
+                let mut m = f32::NEG_INFINITY;
+                for (t, sc) in scores.iter_mut().enumerate() {
+                    let a = gemm::dot(qr, &kc[(t * n_sh + sh) * hd..][..hd]) * scale;
+                    *sc = a;
+                    m = m.max(a);
+                }
+                let mut z = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - m).exp();
+                    z += *sc;
+                }
+                let inv = 1.0 / z;
+                for (t, sc) in scores.iter().enumerate() {
+                    gemm::axpy(sc * inv, &vc[(t * n_sh + sh) * hd..][..hd], out);
+                }
+            });
+        }
+    }
+    let a = merge_heads(&ah, ns, 1, nh, hd);
+    matmul(pool, &a, p.at(bi.wq + 3), ns, d, d, h);
+
+    if let Some(mi) = bi.mlp {
+        let f = cfg.d_ff;
+        let x2 = match bi.ln2 {
+            Some(i) => ln_fwd(h, p.at(i), p.at(i + 1), ns, d).0,
+            None => h.to_vec(),
+        };
+        let b1 = p.at(mi + 1);
+        let mut m1 = vec![0.0f32; ns * f];
+        for r in 0..ns {
+            m1[r * f..][..f].copy_from_slice(b1);
+        }
+        matmul(pool, &x2, p.at(mi), ns, d, f, &mut m1);
+        let gact: Vec<f32> = m1.iter().map(|&x| gelu(x)).collect();
+        let b2 = p.at(mi + 3);
+        for r in 0..ns {
+            let hr = &mut h[r * d..][..d];
+            for (hx, bx) in hr.iter_mut().zip(b2) {
+                *hx += bx;
+            }
+        }
+        matmul(pool, &gact, p.at(mi + 2), ns, f, d, h);
+    }
 }
 
 /// Split a `(batch, n_ctx+1)` token tensor into model inputs and next-token

@@ -1,0 +1,384 @@
+//! Inference-subsystem integration tests: incremental-decode parity against
+//! the full-context forward for every `AttnKind`, thread-count-invariant
+//! greedy generation, the recurrent-vs-KV-cache state-footprint contract,
+//! and checkpoint-load hardening for `generate`/`serve`.
+
+use std::io::Cursor;
+
+use repro::coordinator::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
+use repro::data::rng::SplitMix64;
+use repro::infer::{serve_loop, DecodeState, GenRequest, ModelSession, SampleMode};
+use repro::native::model::{self, AttnKind, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+use repro::util::json::Json;
+
+/// Incremental-vs-full tolerance: the step path shares the GEMM microkernels
+/// and per-token accumulation order with the full forward, so differences
+/// are last-bit rounding from row-count-dependent tiling at most.
+const TOL: f32 = 2e-3;
+
+fn param_state(cfg: &LmConfig, seed: u64) -> Vec<Tensor> {
+    let mut state = cfg.init_state(seed);
+    state.truncate(cfg.n_param_arrays());
+    state
+}
+
+fn random_tokens(cfg: &LmConfig, seed: u64) -> Vec<i32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..cfg.batch * cfg.n_ctx).map(|_| rng.below(cfg.vocab) as i32).collect()
+}
+
+/// Token-by-token `logits_step` must reproduce the full-context `logits`
+/// path at every position, for every mixer family, with the step batched
+/// over `cfg.batch` concurrent sequences.
+#[test]
+fn incremental_decode_matches_full_context_logits() {
+    for preset in ["tiny", "small"] {
+        for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+            let cfg = LmConfig::by_preset(preset, attn).unwrap();
+            let params = param_state(&cfg, 11);
+            let refs: Vec<&Tensor> = params.iter().collect();
+            let pool = ThreadPool::new(4);
+            let toks = random_tokens(&cfg, 7);
+
+            let full = model::logits(
+                &cfg,
+                &refs,
+                &Tensor::i32(vec![cfg.batch, cfg.n_ctx], toks.clone()).unwrap(),
+                &pool,
+            )
+            .unwrap();
+            let full = full.as_f32().unwrap();
+
+            let mut st = DecodeState::new(&cfg, cfg.batch).unwrap();
+            let v = cfg.vocab;
+            // tiny walks its whole window (and checks exhaustion below);
+            // the deeper preset caps the incremental sweep to keep the
+            // debug-profile test time in check — the recurrence is fully
+            // exercised well before 48 steps
+            let t_check = if preset == "tiny" { cfg.n_ctx } else { cfg.n_ctx.min(48) };
+            for t in 0..t_check {
+                // column t of the (batch, n_ctx) token matrix
+                let col: Vec<i32> =
+                    (0..cfg.batch).map(|b| toks[b * cfg.n_ctx + t]).collect();
+                let step = model::logits_step(&cfg, &refs, &col, &mut st, &pool).unwrap();
+                for b in 0..cfg.batch {
+                    let want = &full[(b * cfg.n_ctx + t) * v..][..v];
+                    let got = &step[b * v..][..v];
+                    let d = got
+                        .iter()
+                        .zip(want)
+                        .map(|(x, y)| (x - y).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(
+                        d < TOL,
+                        "{preset}/{attn:?}: step logits diverge at t={t} b={b} (max {d})"
+                    );
+                    assert!(got.iter().all(|x| x.is_finite()), "{preset}/{attn:?} t={t}");
+                }
+            }
+            assert_eq!(st.pos(), t_check);
+            if t_check == cfg.n_ctx {
+                // the window is exhausted — stepping again must error, not panic
+                assert!(model::logits_step(&cfg, &refs, &vec![0; cfg.batch], &mut st, &pool)
+                    .is_err());
+            }
+        }
+    }
+}
+
+/// The prefill fast path (no unembedding) must advance the state exactly
+/// like the logits-producing step: logits after a prefix consumed via
+/// `prefill_step` equal logits after the same prefix via `logits_step`.
+#[test]
+fn prefill_step_advances_state_identically() {
+    let pool = ThreadPool::new(2);
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let params = param_state(&cfg, 9);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let prefix: Vec<i32> = (0..6usize).map(|i| ((i * 31) % cfg.vocab) as i32).collect();
+
+        let mut fast = DecodeState::new(&cfg, 1).unwrap();
+        for &tok in &prefix[..prefix.len() - 1] {
+            model::prefill_step(&cfg, &refs, &[tok], &mut fast, &pool).unwrap();
+        }
+        let a = model::logits_step(&cfg, &refs, &[prefix[5]], &mut fast, &pool).unwrap();
+
+        let mut slow = DecodeState::new(&cfg, 1).unwrap();
+        let mut b = Vec::new();
+        for &tok in &prefix {
+            b = model::logits_step(&cfg, &refs, &[tok], &mut slow, &pool).unwrap();
+        }
+        assert_eq!(a, b, "{attn:?}: prefill path diverged from the logits path");
+        assert_eq!(fast.pos(), slow.pos());
+        assert_eq!(fast.state_bytes(), slow.state_bytes());
+    }
+}
+
+/// Greedy decoding from the same state must emit identical token ids on a
+/// 1-thread and a many-thread pool (the pool's task decomposition is
+/// worker-count independent).
+#[test]
+fn greedy_generation_is_thread_count_invariant() {
+    for attn in [AttnKind::Ours, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let params = param_state(&cfg, 3);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let run = |threads: usize| -> Vec<i32> {
+            let pool = ThreadPool::new(threads);
+            let mut st = DecodeState::new(&cfg, 1).unwrap();
+            let mut out = Vec::new();
+            let mut tok = 1i32;
+            for _ in 0..24 {
+                let logits = model::logits_step(&cfg, &refs, &[tok], &mut st, &pool).unwrap();
+                tok = logits
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, x)| x.is_finite())
+                    .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+                    .map(|(i, _)| i as i32)
+                    .unwrap();
+                out.push(tok);
+            }
+            out
+        };
+        assert_eq!(run(1), run(4), "{attn:?}: greedy decode depends on thread count");
+    }
+}
+
+/// The memory contract the paper's inference claim rests on: the linear
+/// variants decode with a state that never grows, softmax's KV cache grows
+/// linearly in the decoded length.
+#[test]
+fn state_bytes_constant_for_linear_growing_for_softmax() {
+    let pool = ThreadPool::new(2);
+    let steps = 16;
+    let mut footprints = std::collections::HashMap::new();
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let params = param_state(&cfg, 5);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut st = DecodeState::new(&cfg, 2).unwrap();
+        let mut bytes = Vec::new();
+        for t in 0..steps {
+            model::logits_step(&cfg, &refs, &[(t % 7) as i32, (t % 5) as i32], &mut st, &pool)
+                .unwrap();
+            bytes.push(st.state_bytes());
+        }
+        footprints.insert(format!("{attn:?}"), bytes);
+    }
+    for kind in ["Ours", "Gated"] {
+        let b = &footprints[kind];
+        assert!(b.iter().all(|&x| x == b[0] && x > 0), "{kind}: state grew: {b:?}");
+    }
+    let sm = &footprints["Softmax"];
+    assert_eq!(sm[0] * steps, sm[steps - 1], "softmax KV cache must grow linearly: {sm:?}");
+    assert!(sm.windows(2).all(|w| w[1] > w[0]), "softmax KV cache must grow every step");
+}
+
+fn write_ckpt(dir: &std::path::Path, name: &str, tag: &str, layout: u32, cfg: &LmConfig) {
+    let meta = CheckpointMeta {
+        artifact_tag: tag.to_string(),
+        step: 1,
+        loss: 1.5,
+        seed: 0,
+        layout,
+    };
+    Checkpoint::write(dir.join(name), &meta, &cfg.init_state(0)).unwrap();
+}
+
+/// The full error chain a failed load produces (ModelSession is not Debug,
+/// so `unwrap_err` is unavailable).
+fn load_err(path: std::path::PathBuf) -> String {
+    match ModelSession::load(&path) {
+        Ok(_) => panic!("expected {path:?} to fail to load"),
+        Err(e) => format!("{e:#}"),
+    }
+}
+
+#[test]
+fn checkpoint_load_hardening() {
+    let dir = std::env::temp_dir().join("repro_infer_hardening");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tiny = LmConfig::tiny(AttnKind::Ours);
+
+    // missing file: a clear error, not a panic
+    let err = load_err(dir.join("nope.ckpt"));
+    assert!(err.contains("nope.ckpt"), "unhelpful error: {err}");
+
+    // pre-refactor layout-v1 checkpoint: rejected by the layout guard
+    write_ckpt(&dir, "v1.ckpt", "lm_tiny_ours", 1, &tiny);
+    let err = load_err(dir.join("v1.ckpt"));
+    assert!(err.contains("layout v1"), "unhelpful error: {err}");
+
+    // a tag that is not an LM artifact
+    write_ckpt(&dir, "tag.ckpt", "layer_ours_fwd", PARAM_LAYOUT_VERSION, &tiny);
+    let err = load_err(dir.join("tag.ckpt"));
+    assert!(err.contains("not an LM tag"), "unhelpful error: {err}");
+
+    // an unknown preset inside an otherwise well-formed tag
+    write_ckpt(&dir, "preset.ckpt", "lm_huge_ours", PARAM_LAYOUT_VERSION, &tiny);
+    let err = load_err(dir.join("preset.ckpt"));
+    assert!(err.contains("unknown LM preset"), "unhelpful error: {err}");
+
+    // tag/state mismatch: a small tag over tiny-shaped state must not load
+    write_ckpt(&dir, "mismatch.ckpt", "lm_small_ours", PARAM_LAYOUT_VERSION, &tiny);
+    let err = load_err(dir.join("mismatch.ckpt"));
+    assert!(err.contains("does not match its tag"), "unhelpful error: {err}");
+}
+
+#[test]
+fn generate_is_deterministic_and_respects_the_window() {
+    let dir = std::env::temp_dir().join("repro_infer_generate");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    write_ckpt(&dir, "ok.ckpt", "lm_tiny_ours", PARAM_LAYOUT_VERSION, &cfg);
+
+    let session = ModelSession::load(dir.join("ok.ckpt")).unwrap();
+    let req = GenRequest {
+        prompt: "the ".to_string(),
+        max_new: 16,
+        mode: SampleMode::TopK { k: 8, temperature: 1.0 },
+        seed: 42,
+        samples: 2,
+    };
+    let a = session.generate(&req).unwrap();
+    assert_eq!(a.texts.len(), 2);
+    assert_eq!(a.new_tokens, 16);
+    assert_eq!(a.prompt_tokens, 4);
+    assert!(a.state_bytes > 0);
+
+    // fixed seed ⇒ identical output, across a fresh session
+    let b = ModelSession::load(dir.join("ok.ckpt")).unwrap().generate(&req).unwrap();
+    assert_eq!(a.token_ids, b.token_ids);
+    assert_eq!(a.texts, b.texts);
+
+    // a prompt longer than the window is truncated; max_new is clamped
+    let long = GenRequest {
+        prompt: "x".repeat(200),
+        max_new: 50,
+        mode: SampleMode::Greedy,
+        seed: 0,
+        samples: 1,
+    };
+    let out = session.generate(&long).unwrap();
+    assert_eq!(out.prompt_tokens, cfg.n_ctx - 1);
+    assert_eq!(out.new_tokens, 1);
+
+    // an empty prompt is a clear error
+    let empty = GenRequest { prompt: String::new(), ..GenRequest::default() };
+    assert!(session.generate(&empty).is_err());
+}
+
+#[test]
+fn serve_loop_answers_requests_and_survives_garbage() {
+    let dir = std::env::temp_dir().join("repro_infer_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    write_ckpt(&dir, "ok.ckpt", "lm_tiny_ours", PARAM_LAYOUT_VERSION, &cfg);
+    let session = ModelSession::load(dir.join("ok.ckpt")).unwrap();
+
+    let input = concat!(
+        "{\"id\": 1, \"prompt\": \"the \", \"max_new\": 4}\n",
+        "\n",
+        "{\"id\": 2, \"prompt\": \"a \", \"max_new\": 4, \"mode\": \"sample\", \
+         \"top_k\": 8, \"seed\": \"18446744073709551615\"}\n",
+        "this is not json\n",
+        "{\"id\": 4, \"prompt\": \"b \", \"max_new\": 2, \"samples\": 2}\n",
+        "{\"id\": 5, \"prompt\": 3}\n",
+        "{\"id\": 6, \"prompt\": \"c \", \"samples\": 100000000}\n",
+        "{\"id\": 7, \"prompt\": \"d \", \"temperature\": \"0.9\"}\n",
+    );
+    let mut out = Vec::new();
+    let stats = serve_loop(&session, Cursor::new(input), &mut out, 64).unwrap();
+    assert_eq!(stats.requests, 7);
+    assert_eq!(stats.errors, 4);
+
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines.len(), 7);
+    let r1 = Json::parse(lines[0]).unwrap();
+    assert_eq!(r1.get("id").and_then(Json::as_usize), Some(1));
+    assert_eq!(r1.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(r1.get("new_tokens").and_then(Json::as_usize), Some(4));
+    assert!(r1.get("text").and_then(Json::as_str).is_some());
+    assert!(r1.get("tokens_per_s").and_then(Json::as_f64).is_some());
+    assert!(r1.get("state_bytes").and_then(Json::as_usize).unwrap() > 0);
+
+    let bad = Json::parse(lines[2]).unwrap();
+    assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(bad.get("error").and_then(Json::as_str).is_some());
+
+    // a u64 seed above 2^53, passed as a decimal string, is accepted
+    let r2 = Json::parse(lines[1]).unwrap();
+    assert_eq!(r2.get("ok").and_then(Json::as_bool), Some(true));
+
+    let r4 = Json::parse(lines[3]).unwrap();
+    assert_eq!(r4.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(r4.get("texts").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+
+    // valid JSON with a bad field still echoes the request id
+    let r5 = Json::parse(lines[4]).unwrap();
+    assert_eq!(r5.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(r5.get("id").and_then(Json::as_usize), Some(5));
+    assert!(r5.get("error").and_then(Json::as_str).unwrap().contains("prompt"));
+
+    // an absurd batch size answers an error (never aborts the warm server)
+    let r6 = Json::parse(lines[5]).unwrap();
+    assert_eq!(r6.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(r6.get("id").and_then(Json::as_usize), Some(6));
+    assert!(r6.get("error").and_then(Json::as_str).unwrap().contains("samples"));
+
+    // wrong-typed sampling knobs are rejected, not silently defaulted
+    let r7 = Json::parse(lines[6]).unwrap();
+    assert_eq!(r7.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(r7.get("id").and_then(Json::as_usize), Some(7));
+    assert!(r7.get("error").and_then(Json::as_str).unwrap().contains("temperature"));
+
+    // identical greedy requests must produce identical responses (warm
+    // session state does not leak between requests)
+    let rerun = "{\"id\": 1, \"prompt\": \"the \", \"max_new\": 4}\n";
+    let mut out2 = Vec::new();
+    serve_loop(&session, Cursor::new(rerun), &mut out2, 64).unwrap();
+    let a = Json::parse(std::str::from_utf8(&out2).unwrap().trim()).unwrap();
+    assert_eq!(
+        a.get("text").and_then(Json::as_str),
+        r1.get("text").and_then(Json::as_str)
+    );
+}
+
+/// The tokenizer a checkpoint implies must be reconstructible from
+/// `(vocab, seed)` alone — exactly what the trainer built. The trainer and
+/// inference now share `ByteTokenizer::for_artifact`, so the merge table
+/// depends only on (vocab, seed) — never on this run's `corpus_bytes` (a
+/// custom-corpus run used to silently imply an unreconstructible
+/// tokenizer). This pins for_artifact against the historical slice-of-the-
+/// training-corpus construction on the default corpus size.
+#[test]
+fn artifact_tokenizer_matches_trainer_construction() {
+    use repro::data::{merge_train_slice, ByteTokenizer, CorpusConfig, CorpusGenerator};
+
+    // the pre-fix trainer construction: full preset-sized corpus, merges on
+    // the 100k-char slice — must coincide with the seed-keyed canonical form
+    let corpus = CorpusGenerator::new(CorpusConfig {
+        seed: 0,
+        target_bytes: 1 << 20,
+        ..Default::default()
+    })
+    .generate();
+    let trainer_tok = ByteTokenizer::train(merge_train_slice(&corpus), 512).unwrap();
+
+    // what both the trainer and inference do now
+    let infer_tok = ByteTokenizer::for_artifact(512, 0).unwrap();
+
+    assert_eq!(infer_tok.n_merges(), trainer_tok.n_merges());
+    let sample = "the ancient harbor of bekoto3 is vasoli. 12 + 7 = 19.";
+    assert_eq!(infer_tok.encode(sample), trainer_tok.encode(sample));
+    assert_eq!(infer_tok.decode(&infer_tok.encode(sample)).unwrap(), sample);
+
+    // and it is corpus-size independent by construction: two calls agree
+    // regardless of any run-level corpus override
+    let again = ByteTokenizer::for_artifact(512, 0).unwrap();
+    assert_eq!(again.encode(sample), infer_tok.encode(sample));
+}
