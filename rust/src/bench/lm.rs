@@ -146,13 +146,15 @@ pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeB
     let t_total = tokens.min(cfg.n_ctx);
     let toks: Vec<i32> = (0..t_total).map(|i| (i % cfg.vocab) as i32).collect();
 
-    // recurrent: one state advanced token by token
+    // recurrent: one state advanced token by token, reusing one scratch so
+    // the measured per-token cost is arithmetic, not allocator traffic
     let mut st = DecodeState::new(&cfg, 1)?;
+    let mut sc = model::DecodeScratch::new();
     let mut step_s = Vec::with_capacity(t_total);
     let mut state_bytes_first = 0usize;
     for (t, &tok) in toks.iter().enumerate() {
         let t0 = Instant::now();
-        bound.logits_step(&[tok], &mut st, &pool)?;
+        bound.logits_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
         step_s.push(t0.elapsed().as_secs_f64());
         if t == 0 {
             state_bytes_first = st.state_bytes();
@@ -172,9 +174,9 @@ pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeB
     for t in 0..t_total {
         let mut st = DecodeState::new(&cfg, 1)?;
         for &tok in &toks[..t] {
-            bound.prefill_step(&[tok], &mut st, &pool)?;
+            bound.prefill_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
         }
-        bound.logits_step(&[toks[t]], &mut st, &pool)?;
+        bound.logits_step_scratch(&[toks[t]], &mut st, &pool, &mut sc)?;
     }
     let recompute_s = t0.elapsed().as_secs_f64();
 

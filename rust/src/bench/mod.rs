@@ -15,6 +15,8 @@
 //! cannot observe GPU residency, but the per-implementation formulas are
 //! exact element counts of each algorithm's live buffers.
 
+#![forbid(unsafe_code)]
+
 pub mod lm;
 pub mod report;
 pub mod sweep;

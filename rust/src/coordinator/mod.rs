@@ -6,6 +6,8 @@
 //! schedule bookkeeping, checkpointing, and metrics emission (JSONL + CSV for
 //! the Fig-5 learning curves).
 
+#![forbid(unsafe_code)]
+
 pub mod checkpoint;
 pub mod config;
 pub mod metrics;

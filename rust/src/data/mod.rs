@@ -7,6 +7,8 @@
 //! structure.  DESIGN.md §Substitutions records why this preserves the
 //! learning-curve comparison the paper makes.
 
+#![forbid(unsafe_code)]
+
 pub mod batcher;
 pub mod corpus;
 pub mod dataset;

@@ -26,6 +26,8 @@
 //!   `repro serve`, keeping model + tokenizer + thread pool warm across
 //!   requests.
 
+#![forbid(unsafe_code)]
+
 pub mod sampler;
 pub mod serve;
 pub mod session;

@@ -211,15 +211,24 @@ impl ModelSession {
         let bound = model::DecodeModel::bind(&self.cfg, &params)?;
         let n_seq = req.samples;
         let mut st = DecodeState::new(&self.cfg, n_seq)?;
+        // one set of per-token work buffers for the whole generation — after
+        // the first step every token decodes without allocating
+        let mut sc = model::DecodeScratch::new();
+        let mut tok_row = vec![0i32; n_seq];
 
         let t0 = Instant::now();
         // every prompt token but the last only advances the state — the
         // unembedding GEMM is skipped until logits are actually needed
         for &tok in &ids[..ids.len() - 1] {
-            bound.prefill_step(&vec![tok; n_seq], &mut st, &self.pool)?;
+            tok_row.fill(tok);
+            bound.prefill_step_scratch(&tok_row, &mut st, &self.pool, &mut sc)?;
         }
         let last = *ids.last().expect("non-empty prompt");
-        let mut logits = bound.logits_step(&vec![last; n_seq], &mut st, &self.pool)?;
+        tok_row.fill(last);
+        // the scratch's logits view dies at the next step — keep a copy the
+        // sampler reads while the scratch is reused
+        let mut logits: Vec<f32> = Vec::new();
+        logits.extend_from_slice(bound.logits_step_scratch(&tok_row, &mut st, &self.pool, &mut sc)?);
         let prefill_s = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
@@ -234,15 +243,17 @@ impl ModelSession {
         let mut streams: Vec<_> = (0..n_seq).map(|_| self.tokenizer.decode_stream()).collect();
         let mut texts = vec![String::new(); n_seq];
         for step in 0..max_new {
-            let mut next = Vec::with_capacity(n_seq);
             for (row, out) in token_ids.iter_mut().enumerate() {
                 let tok = sampler.sample(&logits[row * v..][..decodable])? as i32;
                 out.push(tok);
                 texts[row].push_str(&streams[row].push(tok)?);
-                next.push(tok);
+                tok_row[row] = tok;
             }
             if step + 1 < max_new {
-                logits = bound.logits_step(&next, &mut st, &self.pool)?;
+                logits.clear();
+                logits.extend_from_slice(bound.logits_step_scratch(
+                    &tok_row, &mut st, &self.pool, &mut sc,
+                )?);
             }
         }
         for (text, stream) in texts.iter_mut().zip(streams) {

@@ -37,9 +37,17 @@ pub enum AttnState {
 }
 
 impl AttnState {
-    fn new(kind: AttnKind, n_seq: usize, n_head: usize, hd: usize) -> Self {
+    fn new(kind: AttnKind, n_seq: usize, n_head: usize, hd: usize, n_ctx: usize) -> Self {
         match kind {
-            AttnKind::Softmax => AttnState::Softmax { k: Vec::new(), v: Vec::new() },
+            // Reserve the full-window KV cache up front: the per-token
+            // `extend_from_slice` in `block_step` then never reallocates, so
+            // softmax decode is allocation-free per step too (the cache
+            // *length* still grows linearly — `state_bytes` reports length,
+            // not capacity, and the memory comparison stands).
+            AttnKind::Softmax => AttnState::Softmax {
+                k: Vec::with_capacity(n_seq * n_head * hd * n_ctx),
+                v: Vec::with_capacity(n_seq * n_head * hd * n_ctx),
+            },
             kind => AttnState::Linear {
                 s: vec![0.0f32; n_seq * n_head * hd * (hd + 1)],
                 gamma: attn_gamma(kind),
@@ -93,7 +101,7 @@ impl DecodeState {
         }
         let hd = cfg.head_dim();
         let layers = (0..cfg.n_layer)
-            .map(|_| AttnState::new(cfg.attn, n_seq, cfg.n_head, hd))
+            .map(|_| AttnState::new(cfg.attn, n_seq, cfg.n_head, hd, cfg.n_ctx))
             .collect();
         Ok(Self {
             layers,

@@ -1,4 +1,9 @@
 #![cfg_attr(feature = "simd", feature(portable_simd))]
+// Verification layer (see rust/README.md "Verification"): every unsafe
+// operation inside an `unsafe fn` still needs its own `unsafe { }` block with
+// a written SAFETY argument, and `cargo run -p xtask -- lint` enforces that
+// unsafe code appears only under `native/` (and `util/alloc_gate.rs`).
+#![deny(unsafe_op_in_unsafe_fn)]
 //! Reproduction of *"Transformer Based Linear Attention with Optimized GPU
 //! Kernel Implementation"* (Gerami & Duraiswami, 2025).
 //!

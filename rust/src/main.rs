@@ -13,6 +13,8 @@
 //!   - `report`        summarize finished training runs
 //!   - `inspect`       list available artifacts
 
+#![forbid(unsafe_code)]
+
 use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Result};

@@ -40,6 +40,7 @@ pub const PAR_MIN_FLOPS: usize = 1 << 17;
 // --- dot / axpy primitives --------------------------------------------------
 
 /// Dot product with eight parallel accumulators (one vector lane).
+// deny_alloc
 #[cfg(not(feature = "simd"))]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
@@ -60,6 +61,7 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 }
 
 /// Dot product, `f32x8` + FMA.
+// deny_alloc
 #[cfg(feature = "simd")]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     use std::simd::f32x8;
@@ -81,6 +83,7 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 }
 
 /// `y += alpha · x`.
+// deny_alloc
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     for (yv, xv) in y.iter_mut().zip(x) {
@@ -91,6 +94,7 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 // --- gemm_nn ----------------------------------------------------------------
 
 /// `out[m×n] += a[m×k] · b[k×n]`, row-major, accumulating.
+// deny_alloc
 pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
     let mut i0 = 0;
@@ -190,6 +194,7 @@ fn tile_nn_edge(
 
 /// `out[m×n] += a[m×k] · b[n×k]ᵀ` — row-row dot products; each `a` row stays
 /// hot in L1 across all `n` columns.
+// deny_alloc
 pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert!(a.len() >= m * k && b.len() >= n * k && out.len() >= m * n);
     for i in 0..m {
@@ -205,6 +210,7 @@ pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
 
 /// `out[m×n] += a[k×m]ᵀ · b[k×n]` — rank-1 accumulation over the shared `k`
 /// rows; both tile loads are contiguous.
+// deny_alloc
 pub fn gemm_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     gemm_tn_rows(a, b, m, k, n, 0, m, out);
 }

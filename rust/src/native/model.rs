@@ -528,6 +528,24 @@ fn ln_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec<f32>, 
     (y, LnCache { mean, rstd })
 }
 
+/// [`ln_fwd`] into a caller-held buffer, without building the backward
+/// cache — the decode path's allocation-free variant.
+// deny_alloc
+fn ln_fwd_into(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), rows * d);
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let xr = &x[r * d..][..d];
+        let m = xr.iter().sum::<f32>() * inv_d;
+        let var = xr.iter().map(|&v| (v - m) * (v - m)).sum::<f32>() * inv_d;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        let yr = &mut y[r * d..][..d];
+        for j in 0..d {
+            yr[j] = g[j] * ((xr[j] - m) * rs) + b[j];
+        }
+    }
+}
+
 /// Accumulates `dx += ∂L/∂x`, `dg += ∂L/∂g`, `db += ∂L/∂b` given the
 /// upstream gradient `dy` and the forward cache.
 #[allow(clippy::too_many_arguments)]
@@ -572,8 +590,16 @@ fn ln_bwd(
 
 /// Token-major `(B·L, H·hd)` → head-major `(B·H, L, hd)`.
 fn split_heads(x: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Vec<f32> {
-    let d = n_head * hd;
     let mut out = vec![0.0f32; x.len()];
+    split_heads_into(x, bsz, l, n_head, hd, &mut out);
+    out
+}
+
+/// [`split_heads`] into a caller-held buffer (fully overwritten).
+// deny_alloc
+fn split_heads_into(x: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    let d = n_head * hd;
     for b in 0..bsz {
         for h in 0..n_head {
             for t in 0..l {
@@ -582,14 +608,21 @@ fn split_heads(x: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Vec
             }
         }
     }
-    out
 }
 
 /// Head-major `(B·H, L, hd)` → token-major `(B·L, H·hd)` (inverse of
 /// [`split_heads`]).
 fn merge_heads(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Vec<f32> {
-    let d = n_head * hd;
     let mut out = vec![0.0f32; xh.len()];
+    merge_heads_into(xh, bsz, l, n_head, hd, &mut out);
+    out
+}
+
+/// [`merge_heads`] into a caller-held buffer (fully overwritten).
+// deny_alloc
+fn merge_heads_into(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), xh.len());
+    let d = n_head * hd;
     for b in 0..bsz {
         for h in 0..n_head {
             for t in 0..l {
@@ -598,7 +631,6 @@ fn merge_heads(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Ve
             }
         }
     }
-    out
 }
 
 // --- forward ----------------------------------------------------------------
@@ -930,6 +962,84 @@ pub fn prefill_step(
     DecodeModel::bind(cfg, params)?.prefill_step(tokens, st, pool)
 }
 
+/// Caller-held per-token work buffers for the incremental decode step.
+///
+/// Every intermediate `block_step`/`step` once allocated fresh per token
+/// now lives here and is resized once, then reused: after the first token
+/// of a session the steady-state decode performs **zero** allocations on
+/// the stepping thread for the linear attention variants (the softmax
+/// variant additionally appends to the KV cache, which
+/// [`AttnState`] pre-reserves to `n_ctx`). `tests/alloc_gate.rs` pins this
+/// with the counting global allocator; the budget there is the contract.
+///
+/// Buffers are plain `Vec<f32>`s sized by [`DecodeScratch::ensure`] at the
+/// top of each step, so one scratch can serve configs of different sizes
+/// (it grows to the largest seen). All contents are dead between steps —
+/// only capacity is carried.
+#[derive(Default)]
+pub struct DecodeScratch {
+    /// Residual stream (`ns × d`); taken out of the struct during a step so
+    /// `block_step` can borrow it mutably alongside the other buffers.
+    h: Vec<f32>,
+    x1: Vec<f32>,
+    qp: Vec<f32>,
+    kp: Vec<f32>,
+    vp: Vec<f32>,
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    fq: Vec<f32>,
+    fk: Vec<f32>,
+    vext: Vec<f32>,
+    /// Per-(seq, head) `Sᵀ·φ(q)` accumulators, one `hd+1` window per task.
+    u: Vec<f32>,
+    ah: Vec<f32>,
+    a: Vec<f32>,
+    x2: Vec<f32>,
+    m1: Vec<f32>,
+    gact: Vec<f32>,
+    /// Softmax-variant attention scores, one `n_ctx` window per (seq, head).
+    scores: Vec<f32>,
+    xf: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to the sizes this `(cfg, n_seq)` step needs.
+    /// `Vec::resize` only reallocates when the target exceeds capacity, so
+    /// in steady state this is a handful of length stores.
+    fn ensure(&mut self, cfg: &LmConfig, ns: usize) {
+        let d = cfg.d_model;
+        let (nh, hd) = (cfg.n_head, cfg.head_dim());
+        let n_sh = ns * nh;
+        let f = cfg.d_ff;
+        self.h.resize(ns * d, 0.0);
+        self.x1.resize(ns * d, 0.0);
+        self.qp.resize(ns * d, 0.0);
+        self.kp.resize(ns * d, 0.0);
+        self.vp.resize(ns * d, 0.0);
+        self.qh.resize(ns * d, 0.0);
+        self.kh.resize(ns * d, 0.0);
+        self.vh.resize(ns * d, 0.0);
+        self.fq.resize(ns * d, 0.0);
+        self.fk.resize(ns * d, 0.0);
+        self.vext.resize(n_sh * (hd + 1), 0.0);
+        self.u.resize(n_sh * (hd + 1), 0.0);
+        self.ah.resize(n_sh * hd, 0.0);
+        self.a.resize(ns * d, 0.0);
+        self.x2.resize(ns * d, 0.0);
+        self.m1.resize(ns * f, 0.0);
+        self.gact.resize(ns * f, 0.0);
+        self.scores.resize(n_sh * cfg.n_ctx, 0.0);
+        self.xf.resize(ns * d, 0.0);
+        self.logits.resize(ns * cfg.vocab, 0.0);
+    }
+}
+
 /// Parameter views bound and shape-checked **once** for a decode session.
 /// The free [`logits_step`]/[`prefill_step`] functions rebind per call —
 /// fine for tests and one-shot use, but a generation loop issues one call
@@ -946,13 +1056,18 @@ impl<'a> DecodeModel<'a> {
     }
 
     /// One incremental step producing next-token logits (`n_seq × vocab`).
+    ///
+    /// Convenience form that pays one fresh [`DecodeScratch`] + `to_vec`
+    /// per call; generation loops should hold a scratch and use
+    /// [`logits_step_scratch`](Self::logits_step_scratch).
     pub fn logits_step(
         &self,
         tokens: &[i32],
         st: &mut DecodeState,
         pool: &ThreadPool,
     ) -> Result<Vec<f32>> {
-        Ok(self.step(tokens, st, pool, true)?.expect("logits requested"))
+        let mut sc = DecodeScratch::new();
+        Ok(self.logits_step_scratch(tokens, st, pool, &mut sc)?.to_vec())
     }
 
     /// One incremental step that only advances the state (no unembedding).
@@ -962,18 +1077,44 @@ impl<'a> DecodeModel<'a> {
         st: &mut DecodeState,
         pool: &ThreadPool,
     ) -> Result<()> {
-        self.step(tokens, st, pool, false).map(|_| ())
+        let mut sc = DecodeScratch::new();
+        self.prefill_step_scratch(tokens, st, pool, &mut sc)
     }
 
-    /// Shared one-token step: embed, run every block through the decode
-    /// state, then (optionally) unembed.
-    fn step(
+    /// [`logits_step`](Self::logits_step) writing into caller-held scratch.
+    /// The returned logits view (`ns × vocab`) borrows the scratch and is
+    /// valid until the next step reuses it.
+    pub fn logits_step_scratch<'s>(
         &self,
         tokens: &[i32],
         st: &mut DecodeState,
         pool: &ThreadPool,
+        sc: &'s mut DecodeScratch,
+    ) -> Result<&'s [f32]> {
+        Ok(self.step_with(tokens, st, pool, sc, true)?.expect("logits requested"))
+    }
+
+    /// [`prefill_step`](Self::prefill_step) with caller-held scratch.
+    pub fn prefill_step_scratch(
+        &self,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+        sc: &mut DecodeScratch,
+    ) -> Result<()> {
+        self.step_with(tokens, st, pool, sc, false).map(|_| ())
+    }
+
+    /// Shared one-token step: embed, run every block through the decode
+    /// state, then (optionally) unembed. All intermediates live in `sc`.
+    fn step_with<'s>(
+        &self,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+        sc: &'s mut DecodeScratch,
         compute_logits: bool,
-    ) -> Result<Option<Vec<f32>>> {
+    ) -> Result<Option<&'s [f32]>> {
         let (cfg, p) = (&self.cfg, &self.p);
         st.check(cfg)?;
         let ns = st.n_seq();
@@ -988,13 +1129,17 @@ impl<'a> DecodeModel<'a> {
                 cfg.n_ctx
             );
         }
+        sc.ensure(cfg, ns);
 
-        // h = wte[tok] + wpe[pos]
+        // h = wte[tok] + wpe[pos]. The residual buffer is moved out of the
+        // scratch for the duration of the step so `block_step` can mutate it
+        // alongside the other scratch fields (put back before returning).
+        let mut h = std::mem::take(&mut sc.h);
         let wte = p.at(p.idx.wte);
         let wpe = &p.at(p.idx.wpe)[pos * d..][..d];
-        let mut h = vec![0.0f32; ns * d];
         for (r, &tok) in tokens.iter().enumerate() {
             if tok < 0 || tok as usize >= v {
+                sc.h = h;
                 bail!("token id {tok} out of range [0, {v})");
             }
             let te = &wte[tok as usize * d..][..d];
@@ -1005,29 +1150,36 @@ impl<'a> DecodeModel<'a> {
         }
 
         for (li, bi) in p.idx.blocks.iter().enumerate() {
-            block_step(cfg, p, bi, &mut h, st.layer_mut(li), ns, pos, pool);
+            block_step(cfg, p, bi, &mut h, st.layer_mut(li), ns, pos, pool, sc);
         }
         st.advance();
 
         if !compute_logits {
+            sc.h = h;
             return Ok(None);
         }
-        let xf = match p.idx.lnf {
-            Some(i) => ln_fwd(&h, p.at(i), p.at(i + 1), ns, d).0,
-            None => h,
-        };
-        let bu = p.at(p.idx.bu);
-        let mut logits = vec![0.0f32; ns * v];
-        for r in 0..ns {
-            logits[r * v..][..v].copy_from_slice(bu);
+        match p.idx.lnf {
+            Some(i) => ln_fwd_into(&h, p.at(i), p.at(i + 1), ns, d, &mut sc.xf),
+            None => sc.xf.copy_from_slice(&h),
         }
-        matmul(pool, &xf, p.at(p.idx.wu), ns, d, v, &mut logits);
-        Ok(Some(logits))
+        sc.h = h;
+        let bu = p.at(p.idx.bu);
+        for r in 0..ns {
+            sc.logits[r * v..][..v].copy_from_slice(bu);
+        }
+        matmul(pool, &sc.xf, p.at(p.idx.wu), ns, d, v, &mut sc.logits);
+        Ok(Some(&sc.logits))
     }
 }
 
 /// One block of the incremental forward: pre-norm attention step (through
 /// the layer's [`AttnState`]) + residual, then the pre-norm MLP + residual.
+///
+/// Allocation-free on the stepping thread: every intermediate lives in the
+/// caller's [`DecodeScratch`] (the softmax KV append draws on capacity
+/// pre-reserved by [`AttnState`]). `tests/alloc_gate.rs` gates this; keep
+/// new temporaries in the scratch.
+// deny_alloc
 #[allow(clippy::too_many_arguments)]
 fn block_step(
     cfg: &LmConfig,
@@ -1038,45 +1190,54 @@ fn block_step(
     ns: usize,
     pos: usize,
     pool: &ThreadPool,
+    sc: &mut DecodeScratch,
 ) {
     let d = cfg.d_model;
     let (nh, hd) = (cfg.n_head, cfg.head_dim());
     let n_sh = ns * nh;
 
-    let x1 = match bi.ln1 {
-        Some(i) => ln_fwd(h, p.at(i), p.at(i + 1), ns, d).0,
-        None => h.to_vec(),
-    };
-    let mut qp = vec![0.0f32; ns * d];
-    let mut kp = vec![0.0f32; ns * d];
-    let mut vp = vec![0.0f32; ns * d];
-    matmul(pool, &x1, p.at(bi.wq), ns, d, d, &mut qp);
-    matmul(pool, &x1, p.at(bi.wq + 1), ns, d, d, &mut kp);
-    matmul(pool, &x1, p.at(bi.wq + 2), ns, d, d, &mut vp);
-    let qh = split_heads(&qp, ns, 1, nh, hd);
-    let kh = split_heads(&kp, ns, 1, nh, hd);
-    let vh = split_heads(&vp, ns, 1, nh, hd);
+    match bi.ln1 {
+        Some(i) => ln_fwd_into(h, p.at(i), p.at(i + 1), ns, d, &mut sc.x1),
+        None => sc.x1.copy_from_slice(h),
+    }
+    // matmul accumulates into its output: clear the projection buffers
+    sc.qp.fill(0.0);
+    sc.kp.fill(0.0);
+    sc.vp.fill(0.0);
+    matmul(pool, &sc.x1, p.at(bi.wq), ns, d, d, &mut sc.qp);
+    matmul(pool, &sc.x1, p.at(bi.wq + 1), ns, d, d, &mut sc.kp);
+    matmul(pool, &sc.x1, p.at(bi.wq + 2), ns, d, d, &mut sc.vp);
+    split_heads_into(&sc.qp, ns, 1, nh, hd, &mut sc.qh);
+    split_heads_into(&sc.kp, ns, 1, nh, hd, &mut sc.kh);
+    split_heads_into(&sc.vp, ns, 1, nh, hd, &mut sc.vh);
 
-    let mut ah = vec![0.0f32; n_sh * hd];
+    sc.ah.fill(0.0);
     match ls {
         AttnState::Linear { s, gamma } => {
             // φ(q), φ(k), [v, 1] for every (seq, head) row of this token
-            let fq: Vec<f32> = qh.iter().map(|&x| elu1(x)).collect();
-            let fk: Vec<f32> = kh.iter().map(|&x| elu1(x)).collect();
-            let mut vext = vec![0.0f32; n_sh * (hd + 1)];
-            for r in 0..n_sh {
-                vext[r * (hd + 1)..][..hd].copy_from_slice(&vh[r * hd..][..hd]);
-                vext[r * (hd + 1) + hd] = 1.0;
+            for (o, &x) in sc.fq.iter_mut().zip(sc.qh.iter()) {
+                *o = elu1(x);
             }
+            for (o, &x) in sc.fk.iter_mut().zip(sc.kh.iter()) {
+                *o = elu1(x);
+            }
+            for r in 0..n_sh {
+                sc.vext[r * (hd + 1)..][..hd].copy_from_slice(&sc.vh[r * hd..][..hd]);
+                sc.vext[r * (hd + 1) + hd] = 1.0;
+            }
+            sc.u.fill(0.0);
+            let (fq, fk, vext) = (&sc.fq[..], &sc.fk[..], &sc.vext[..]);
             let gamma = *gamma;
             let sd = hd * (hd + 1);
             // one (seq, head) state block per pool task — disjoint windows
             let sp = super::pool::SliceParts::new(s);
-            let ap = super::pool::SliceParts::new(&mut ah);
+            let ap = super::pool::SliceParts::new(&mut sc.ah);
+            let up = super::pool::SliceParts::new(&mut sc.u);
             pool.run(n_sh, |i| {
-                // SAFETY: task `i` touches windows `i` of `s`/`ah` only.
-                let (sw, aw) =
-                    unsafe { (sp.window(i * sd, sd), ap.window(i * hd, hd)) };
+                // SAFETY: task `i` touches windows `i` of `s`/`ah`/`u` only.
+                let (sw, aw, uw) = unsafe {
+                    (sp.window(i * sd, sd), ap.window(i * hd, hd), up.window(i * (hd + 1), hd + 1))
+                };
                 let fqr = &fq[i * hd..][..hd];
                 let fkr = &fk[i * hd..][..hd];
                 let vr = &vext[i * (hd + 1)..][..hd + 1];
@@ -1086,31 +1247,35 @@ fn block_step(
                         *x *= gamma;
                     }
                 }
-                let mut u = vec![0.0f32; hd + 1];
                 for (row, srow) in sw.chunks_exact_mut(hd + 1).enumerate() {
                     gemm::axpy(fkr[row], vr, srow);
                 }
                 // u = Sᵀ·φ(q), then divide by the normalizer channel
                 for (row, srow) in sw.chunks_exact(hd + 1).enumerate() {
-                    gemm::axpy(fqr[row], srow, &mut u);
+                    gemm::axpy(fqr[row], srow, uw);
                 }
-                let z = u[hd] + EPS;
-                for (ax, ux) in aw.iter_mut().zip(&u[..hd]) {
+                let z = uw[hd] + EPS;
+                for (ax, ux) in aw.iter_mut().zip(&uw[..hd]) {
                     *ax = ux / z;
                 }
             });
         }
         AttnState::Softmax { k, v } => {
-            k.extend_from_slice(&kh);
-            v.extend_from_slice(&vh);
+            k.extend_from_slice(&sc.kh);
+            v.extend_from_slice(&sc.vh);
             let (kc, vc) = (&*k, &*v);
             let scale = 1.0 / (hd as f32).sqrt();
+            let qh = &sc.qh[..];
+            let nctx = cfg.n_ctx;
+            let scp = super::pool::SliceParts::new(&mut sc.scores);
             // streaming causal softmax over the cached prefix, one
             // (seq, head) row per pool task — identical accumulation order
             // to softmax_fwd's row `pos`
-            pool.run_chunks(&mut ah, hd, |sh, out| {
+            pool.run_chunks(&mut sc.ah, hd, |sh, out| {
                 let qr = &qh[sh * hd..][..hd];
-                let mut scores = vec![0.0f32; pos + 1];
+                // SAFETY: task `sh` touches scores window `sh` only (rows
+                // are `nctx` apart; `pos + 1 ≤ nctx`).
+                let scores = unsafe { scp.window(sh * nctx, pos + 1) };
                 let mut m = f32::NEG_INFINITY;
                 for (t, sc) in scores.iter_mut().enumerate() {
                     let a = gemm::dot(qr, &kc[(t * n_sh + sh) * hd..][..hd]) * scale;
@@ -1129,22 +1294,23 @@ fn block_step(
             });
         }
     }
-    let a = merge_heads(&ah, ns, 1, nh, hd);
-    matmul(pool, &a, p.at(bi.wq + 3), ns, d, d, h);
+    merge_heads_into(&sc.ah, ns, 1, nh, hd, &mut sc.a);
+    matmul(pool, &sc.a, p.at(bi.wq + 3), ns, d, d, h);
 
     if let Some(mi) = bi.mlp {
         let f = cfg.d_ff;
-        let x2 = match bi.ln2 {
-            Some(i) => ln_fwd(h, p.at(i), p.at(i + 1), ns, d).0,
-            None => h.to_vec(),
-        };
-        let b1 = p.at(mi + 1);
-        let mut m1 = vec![0.0f32; ns * f];
-        for r in 0..ns {
-            m1[r * f..][..f].copy_from_slice(b1);
+        match bi.ln2 {
+            Some(i) => ln_fwd_into(h, p.at(i), p.at(i + 1), ns, d, &mut sc.x2),
+            None => sc.x2.copy_from_slice(h),
         }
-        matmul(pool, &x2, p.at(mi), ns, d, f, &mut m1);
-        let gact: Vec<f32> = m1.iter().map(|&x| gelu(x)).collect();
+        let b1 = p.at(mi + 1);
+        for r in 0..ns {
+            sc.m1[r * f..][..f].copy_from_slice(b1);
+        }
+        matmul(pool, &sc.x2, p.at(mi), ns, d, f, &mut sc.m1);
+        for (o, &x) in sc.gact.iter_mut().zip(sc.m1.iter()) {
+            *o = gelu(x);
+        }
         let b2 = p.at(mi + 3);
         for r in 0..ns {
             let hr = &mut h[r * d..][..d];
@@ -1152,7 +1318,7 @@ fn block_step(
                 *hx += bx;
             }
         }
-        matmul(pool, &gact, p.at(mi + 2), ns, f, d, h);
+        matmul(pool, &sc.gact, p.at(mi + 2), ns, f, d, h);
     }
 }
 
@@ -1509,26 +1675,67 @@ fn decays(shape: &[usize]) -> bool {
 /// Raw per-array `(param, m, v)` views of one training state, so the pool
 /// can update disjoint arrays concurrently. Same contract as
 /// [`super::pool::SliceParts`]: task `i` touches exactly triple `i`.
-struct StateViews {
-    arrs: Vec<(*mut f32, *mut f32, *mut f32, usize)>,
+/// Borrows the scratch's pointer list; the lifetime ties it to the
+/// `state` borrow the pointers were derived from.
+struct StateViews<'a> {
+    arrs: &'a [(*mut f32, *mut f32, *mut f32, usize)],
 }
 
 // SAFETY: each (p, m, v, len) triple aliases a distinct set of tensors, and
 // the parallel update hands triple `i` to task `i` only, while the borrow of
 // the state slice is held by the caller for the whole update.
-unsafe impl Send for StateViews {}
-unsafe impl Sync for StateViews {}
+unsafe impl Send for StateViews<'_> {}
+unsafe impl Sync for StateViews<'_> {}
+
+/// Reusable buffers for [`adamw_update_mut_scratch`]: the per-array decay
+/// flags (computed once from the config's shapes — the only call-site of
+/// the allocating `param_shapes()`) and the pointer-triple list the pool
+/// tasks index. After the first update with a given config, the update is
+/// **strictly allocation-free** — `tests/alloc_gate.rs` asserts zero
+/// allocation events on the stepping thread with a 1-thread pool.
+///
+/// A scratch is per-config: it caches decay flags by array count, so reuse
+/// it across steps of one run, not across models.
+#[derive(Default)]
+pub struct AdamwScratch {
+    decay: Vec<bool>,
+    arrs: Vec<(*mut f32, *mut f32, *mut f32, usize)>,
+}
+
+impl AdamwScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// Fused in-place AdamW update over `state = params ++ m ++ v`: clips by
 /// global norm, then updates moments and parameters buffer-by-buffer with no
 /// allocation, one parameter array per pool task. Returns the **pre-clip**
 /// gradient norm (the logged metric).
+///
+/// Convenience form paying one fresh [`AdamwScratch`] (two small `Vec`s +
+/// the `param_shapes()` walk) per call; training loops should hold a
+/// scratch and use [`adamw_update_mut_scratch`].
 pub fn adamw_update_mut(
     cfg: &LmConfig,
     state: &mut [Tensor],
     grads: &[Vec<f32>],
     step: usize,
     pool: &ThreadPool,
+) -> Result<f32> {
+    let mut sc = AdamwScratch::new();
+    adamw_update_mut_scratch(cfg, state, grads, step, pool, &mut sc)
+}
+
+/// [`adamw_update_mut`] with caller-held scratch: zero allocations per step
+/// once the scratch is warm (see [`AdamwScratch`]).
+pub fn adamw_update_mut_scratch(
+    cfg: &LmConfig,
+    state: &mut [Tensor],
+    grads: &[Vec<f32>],
+    step: usize,
+    pool: &ThreadPool,
+    sc: &mut AdamwScratch,
 ) -> Result<f32> {
     let np = cfg.n_param_arrays();
     if state.len() != 3 * np {
@@ -1537,14 +1744,19 @@ pub fn adamw_update_mut(
     if grads.len() != np {
         bail!("adamw_update_mut wants {np} gradient arrays, got {}", grads.len());
     }
-    let shapes = cfg.param_shapes();
+    if sc.decay.len() != np {
+        // one-time (per config) — the only allocating path in this update
+        sc.decay.clear();
+        sc.decay.extend(cfg.param_shapes().iter().map(|(_, s)| decays(s)));
+        sc.arrs.reserve(np);
+    }
     let hp = cfg.adam_hp(step);
     let norm = grad_global_norm(grads);
     let scale = clip_scale(&hp, norm);
 
     let (ps, rest) = state.split_at_mut(np);
     let (ms, vs) = rest.split_at_mut(np);
-    let mut views = StateViews { arrs: Vec::with_capacity(np) };
+    sc.arrs.clear();
     for i in 0..np {
         let pw = ps[i].as_f32_mut()?;
         let n = pw.len();
@@ -1552,10 +1764,12 @@ pub fn adamw_update_mut(
         let mw = ms[i].as_f32_mut()?;
         let vw = vs[i].as_f32_mut()?;
         if n != grads[i].len() || mw.len() != n || vw.len() != n {
-            bail!("state array {} has inconsistent length", shapes[i].0);
+            bail!("state array {i} has inconsistent length");
         }
-        views.arrs.push((pw, mw.as_mut_ptr(), vw.as_mut_ptr(), n));
+        sc.arrs.push((pw, mw.as_mut_ptr(), vw.as_mut_ptr(), n));
     }
+    let decay = &sc.decay[..];
+    let views = StateViews { arrs: &sc.arrs };
     let views = &views;
     pool.run(np, |i| {
         let (pp, mp, vp, n) = views.arrs[i];
@@ -1569,7 +1783,7 @@ pub fn adamw_update_mut(
             )
         };
         let g = &grads[i];
-        let wd = if decays(&shapes[i].1) { hp.wd } else { 0.0 };
+        let wd = if decay[i] { hp.wd } else { 0.0 };
         for j in 0..n {
             let (p2, m2, v2) = adamw_elem(pw[j], mw[j], vw[j], g[j] * scale, &hp, wd);
             pw[j] = p2;

@@ -30,16 +30,62 @@
 //! on the calling worker: the pool runs one job at a time, so re-entering
 //! from inside a task would otherwise deadlock. No native kernel nests
 //! today — the guard keeps composition safe as callers evolve.
+//!
+//! ## Verification
+//!
+//! The job-completion protocol is machine-checked three ways (see the
+//! "Verification" section of `rust/README.md`):
+//!
+//! - **Loom** (`--features loom`, needs the commented-out `loom`
+//!   dev-dependency): every synchronization primitive below resolves through
+//!   the [`sync`] shim to `loom::sync`/`loom::thread`, and
+//!   `tests/loom_pool.rs` exhaustively explores the submit/drain/completion
+//!   interleavings, including the weak-memory reorderings the orderings
+//!   documented inline must survive.
+//! - **Always-on protocol model**: `tests/pool_model.rs` re-states the
+//!   claim/countdown protocol as a [`crate::util::modelcheck`] model and
+//!   explores *all* sequentially-consistent interleavings on every
+//!   `cargo test` run — no lost or double-claimed tasks, no deadlock, panic
+//!   payloads always delivered.
+//! - **ThreadSanitizer / Miri CI lanes** run the real pool under the
+//!   `native_parallel`/`optimizer`/`infer` suites.
 
 use std::cell::Cell;
 use std::marker::PhantomData;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use sync::atomic::{AtomicUsize, Ordering};
+use sync::{Arc, Condvar, Mutex};
+
+#[cfg(not(feature = "loom"))]
+use std::sync::OnceLock;
+
+/// Synchronization shim: `loom`'s model-checked primitives under
+/// `--features loom`, the real `std` ones otherwise. Everything the pool
+/// synchronizes through **must** come from here so the loom models exercise
+/// the exact shipped protocol.
+pub(crate) mod sync {
+    #[cfg(not(feature = "loom"))]
+    pub(crate) use std::sync::{atomic, Arc, Condvar, Mutex};
+    #[cfg(not(feature = "loom"))]
+    pub(crate) use std::thread;
+
+    #[cfg(feature = "loom")]
+    pub(crate) use loom::sync::{atomic, Arc, Condvar, Mutex};
+    #[cfg(feature = "loom")]
+    pub(crate) use loom::thread;
+}
+
+#[cfg(not(feature = "loom"))]
 thread_local! {
     /// Set while a pool worker (or a submitter draining its own job) is
     /// inside a task body — nested `run` calls detect it and go inline.
     static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+#[cfg(feature = "loom")]
+loom::thread_local! {
+    /// Loom-modeled twin of the `std` declaration above.
+    static IN_POOL_TASK: Cell<bool> = Cell::new(false);
 }
 
 /// Type-erased pointer to the submission's `Fn(usize)`. Valid for the
@@ -72,6 +118,14 @@ impl Job {
     /// wakes the submitter.
     fn drain(&self, core: &Core) {
         loop {
+            // Ordering audit (tested by the loom models): `Relaxed` is
+            // sufficient for `next` because a fetch_add's read-modify-write
+            // atomicity alone guarantees each index is claimed at most once,
+            // and the claim itself carries no data — the closure pointer was
+            // published to this thread under the `state` mutex (a
+            // happens-before edge at job pickup), and task *results* travel
+            // through `pending`'s AcqRel/Acquire pair below, never through
+            // `next`.
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.tasks {
                 return;
@@ -88,8 +142,17 @@ impl Job {
                     *slot = Some(payload);
                 }
             }
+            // `AcqRel` is load-bearing: the Release half publishes this
+            // task's buffer writes into `pending`'s modification order, and
+            // because every decrement is a read-modify-write, the chain of
+            // fetch_subs forms one release sequence — the submitter's single
+            // Acquire load of 0 therefore synchronizes with *every* finished
+            // task, not just the last one. (Relaxed here is the canonical
+            // bug the loom lane exists to catch.)
             if self.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-                // lock-then-notify pairs with the submitter's wait loop
+                // lock-then-notify pairs with the submitter's wait loop: the
+                // submitter only blocks while holding `state`, so the wake
+                // cannot slip between its pending check and the wait
                 let _guard = core.state.lock().unwrap();
                 core.done_cv.notify_all();
             }
@@ -142,7 +205,7 @@ impl Core {
 /// away (workers hold only the [`Core`], so there is no keep-alive cycle).
 struct PoolOwner {
     core: Arc<Core>,
-    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    handles: Mutex<Vec<sync::thread::JoinHandle<()>>>,
 }
 
 impl Drop for PoolOwner {
@@ -186,7 +249,7 @@ impl ThreadPool {
         let handles = (1..threads)
             .map(|_| {
                 let core = core.clone();
-                std::thread::spawn(move || core.worker())
+                sync::thread::spawn(move || core.worker())
             })
             .collect();
         Self { inner: Arc::new(PoolOwner { core, handles: Mutex::new(handles) }) }
@@ -217,7 +280,10 @@ impl ThreadPool {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 
-    /// The process-wide pool, sized once from the environment.
+    /// The process-wide pool, sized once from the environment. (Not
+    /// available under the loom model build: loom threads only exist inside
+    /// a `loom::model` run, so a `'static` pool cannot outlive one.)
+    #[cfg(not(feature = "loom"))]
     pub fn global() -> &'static ThreadPool {
         static POOL: OnceLock<ThreadPool> = OnceLock::new();
         POOL.get_or_init(ThreadPool::from_env)
@@ -265,6 +331,10 @@ impl ThreadPool {
         job.drain(core);
         IN_POOL_TASK.with(|t| t.set(false));
         let mut st = core.state.lock().unwrap();
+        // Acquire pairs with every worker's AcqRel fetch_sub above: observing
+        // 0 synchronizes with the whole decrement chain, so all task writes
+        // are visible before `run` returns — which is why callers (and the
+        // unit tests below) may read task outputs with plain loads afterwards.
         while job.pending.load(Ordering::Acquire) > 0 {
             st = core.done_cv.wait(st).unwrap();
         }
@@ -396,11 +466,22 @@ impl<'a> SliceParts<'a> {
             "SliceParts window [{offset}, {offset}+{len}) out of bounds (len {})",
             self.len
         );
-        std::slice::from_raw_parts_mut(self.ptr.add(offset), len)
+        // SAFETY: the range is in bounds (asserted above) and the caller
+        // guarantees no other live window overlaps it.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(offset), len) }
     }
 }
 
-#[cfg(test)]
+// Not compiled under the loom feature: these tests drive real OS threads
+// outside a `loom::model` run (the loom twins live in `tests/loom_pool.rs`).
+//
+// The `Relaxed` loads/stores on the `hits`/`outer`/`inner` counters below are
+// deliberate and sufficient: `pool.run` only returns after its Acquire load
+// of `pending == 0`, which synchronizes with every task's AcqRel decrement —
+// the asserting reads therefore happen-after all task writes and need no
+// ordering of their own. (Audited alongside the pool's own orderings; the
+// TSan CI lane runs these tests under `-Zsanitizer=thread`.)
+#[cfg(all(test, not(feature = "loom")))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU32;
@@ -420,8 +501,10 @@ mod tests {
     #[test]
     fn pool_is_reusable_across_many_submissions() {
         // the persistent-worker property: one pool, many jobs, no leaks
+        // (size-reduced under Miri, where every round costs interpreter time)
+        let rounds = if cfg!(miri) { 10 } else { 200 };
         let pool = ThreadPool::new(3);
-        for round in 0..200 {
+        for round in 0..rounds {
             let hits: Vec<AtomicU32> = (0..11).map(|_| AtomicU32::new(0)).collect();
             pool.run(hits.len(), |i| {
                 hits[i].fetch_add(1, Ordering::Relaxed);
@@ -464,6 +547,66 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn panic_mid_batch_still_runs_every_other_task() {
+        // a panicking task must not swallow its batch siblings: the drain
+        // loop keeps claiming past a failed task, so every other index runs
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicU32> = (0..16).map(|_| AtomicU32::new(0)).collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+                assert!(i != 3, "deliberate task failure");
+            });
+        }));
+        assert!(result.is_err(), "the panic must reach the submitter");
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} must have run exactly once");
+        }
+    }
+
+    #[test]
+    fn panic_in_nested_submission_propagates_without_deadlock() {
+        // the nested (inlined) path: a panic raised inside an inner `run`
+        // unwinds through the outer task body, is caught by the outer drain,
+        // and reaches the outer submitter — with no worker left waiting
+        let pool = ThreadPool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(6, |i| {
+                pool.run(4, |j| {
+                    assert!(!(i == 2 && j == 1), "deliberate nested failure");
+                });
+            });
+        }));
+        assert!(result.is_err(), "the nested panic must reach the outer submitter");
+        // every worker survives for the next submission
+        let hits: Vec<AtomicU32> = (0..8).map(|_| AtomicU32::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn first_panic_wins_when_several_tasks_fail() {
+        // the panic slot keeps one payload; the run must still terminate and
+        // deliver a payload when many tasks fail at once
+        let pool = ThreadPool::new(4);
+        for _ in 0..if cfg!(miri) { 3 } else { 20 } {
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(8, |i| {
+                    panic!("task {i} failed");
+                });
+            }));
+            let payload = result.expect_err("some payload must be delivered");
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "<non-string payload>".to_string());
+            assert!(msg.contains("failed"), "unexpected payload {msg:?}");
+        }
     }
 
     #[test]
@@ -538,6 +681,8 @@ mod tests {
         let parts = SliceParts::new(&mut buf);
         pool.run(bounds.len(), |i| {
             let (off, len) = bounds[i];
+            // SAFETY: the `bounds` windows are non-overlapping by
+            // construction and task `i` takes window `i` only.
             let w = unsafe { parts.window(off, len) };
             w.fill(i as f32 + 1.0);
         });

@@ -9,6 +9,8 @@
 //! - **pjrt** (cargo feature `pjrt`, `REPRO_BACKEND=pjrt`) — compiles AOT
 //!   HLO-text artifacts produced by `python/compile/aot.py` via PJRT.
 
+#![forbid(unsafe_code)]
+
 pub mod backend;
 mod engine;
 mod manifest;

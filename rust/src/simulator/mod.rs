@@ -11,6 +11,8 @@
 //! simple; what it preserves is the *ordering and rough factors* between
 //! implementations, which is the figure's claim.
 
+#![forbid(unsafe_code)]
+
 pub mod device;
 pub mod traffic;
 pub mod vmem;

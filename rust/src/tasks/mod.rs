@@ -8,6 +8,8 @@
 //! positions; the scorer runs the `lm_*_logits` artifact and counts argmax
 //! hits, i.e. 0-shot exact match.
 
+#![forbid(unsafe_code)]
+
 pub mod scorer;
 pub mod suite;
 

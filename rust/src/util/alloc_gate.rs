@@ -1,0 +1,258 @@
+//! A counting `#[global_allocator]` wrapper: the allocation gate.
+//!
+//! PR 4's in-place optimizer and this PR's decode scratch reuse both claim
+//! "zero steady-state allocations". Prose claims rot; this module turns them
+//! into failing tests. Built with `--features alloc-gate`, the crate installs
+//! [`CountingAlloc`] as the global allocator, which delegates every call to
+//! [`System`] and bumps two sets of counters:
+//!
+//! - **thread-local** (`const`-initialized `Cell`s, so reading them never
+//!   allocates or takes a lock) — what [`measure`] and the gate macros use.
+//!   Counting per thread keeps the numbers deterministic: a gated region run
+//!   with a 1-thread [`Pool`](crate::native::pool::Pool) executes entirely on
+//!   the calling thread, so background noise from other test threads can't
+//!   flake the assertion.
+//! - **global** (`AtomicU64`, Relaxed — they are statistics, not
+//!   synchronization) — for coarse whole-process reporting.
+//!
+//! The gate macros [`assert_no_alloc!`](crate::assert_no_alloc) and
+//! [`alloc_budget!`](crate::alloc_budget) wrap a block and assert on the
+//! thread-local delta. Without the `alloc-gate` feature the macros still
+//! *run* the block (so gated call sites cost nothing in production builds)
+//! but skip the assertion, because no counting allocator is installed and
+//! the delta would be a meaningless zero. The real proof lives in
+//! `tests/alloc_gate.rs`, which is compiled only under the feature:
+//!
+//! ```text
+//! cargo test --features alloc-gate --test alloc_gate
+//! ```
+//!
+//! This module necessarily contains `unsafe` (implementing [`GlobalAlloc`])
+//! and is, with `native/`, one of the two places the `xtask lint`
+//! unsafe-location invariant allows it.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Whether the counting allocator is installed as `#[global_allocator]`.
+/// The gate macros skip their assertions when this is false.
+pub const fn is_active() -> bool {
+    cfg!(feature = "alloc-gate")
+}
+
+// Global (whole-process) tallies. Relaxed: these are monotone statistics
+// read for reporting only; no memory is published through them.
+static TOTAL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+static TOTAL_BYTES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    // `const` initializers: reading/writing these never triggers lazy
+    // initialization, and `Cell<u64>` has no destructor to register — so the
+    // counting paths themselves perform no allocation and cannot recurse.
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static TL_BYTES_ALLOC: Cell<u64> = const { Cell::new(0) };
+    static TL_BYTES_DEALLOC: Cell<u64> = const { Cell::new(0) };
+}
+
+#[inline]
+fn record_alloc(bytes: usize) {
+    TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    TOTAL_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    // `try_with`: the allocator can be called during thread teardown after
+    // TLS destruction; an allocator must never panic, so drop the sample.
+    let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    let _ = TL_BYTES_ALLOC.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+#[inline]
+fn record_dealloc(bytes: usize) {
+    let _ = TL_BYTES_DEALLOC.try_with(|c| c.set(c.get() + bytes as u64));
+}
+
+/// A [`GlobalAlloc`] that counts and then delegates to [`System`].
+pub struct CountingAlloc;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+
+// SAFETY: every method delegates directly to `System`, which upholds the
+// `GlobalAlloc` contract; the counting side effects touch only `Cell`s and
+// relaxed atomics — no allocation, no panics (`try_with`), no reentrancy.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record_alloc(layout.size());
+        // SAFETY: `layout` is forwarded unchanged; the caller upholds the
+        // `alloc` preconditions (non-zero size).
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record_alloc(layout.size());
+        // SAFETY: as in `alloc`; same layout, same caller contract.
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        record_dealloc(layout.size());
+        // SAFETY: the caller guarantees `ptr` was allocated by this
+        // allocator with `layout`; we allocated it via `System`.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A realloc is one allocation event plus a size transfer: count the
+        // new block as allocated and the old one as freed, so `net_bytes`
+        // stays truthful for grow-in-place as well.
+        record_alloc(new_size);
+        record_dealloc(layout.size());
+        // SAFETY: the caller guarantees `ptr`/`layout` describe a live block
+        // from this allocator and `new_size > 0`; delegated unchanged.
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[cfg(feature = "alloc-gate")]
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Point-in-time reading of the *current thread's* counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    allocs: u64,
+    bytes_alloc: u64,
+    bytes_dealloc: u64,
+}
+
+/// What happened (on this thread) between two snapshots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocDelta {
+    /// Allocation events (`alloc`, `alloc_zeroed`, and `realloc` each count
+    /// as one).
+    pub allocs: u64,
+    /// Bytes requested by those events.
+    pub bytes_allocated: u64,
+    /// Bytes released (`dealloc` plus the old block of each `realloc`).
+    pub bytes_deallocated: u64,
+}
+
+impl AllocDelta {
+    /// Bytes retained by the region: allocated minus deallocated. Zero for a
+    /// region that churns temporaries but keeps nothing; the number the
+    /// "net-zero retained" train-step gate pins.
+    pub fn net_bytes(&self) -> i64 {
+        self.bytes_allocated as i64 - self.bytes_deallocated as i64
+    }
+}
+
+/// Read the current thread's counters. Always available (returns zeros when
+/// the feature — and hence the counting allocator — is off).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        allocs: TL_ALLOCS.with(|c| c.get()),
+        bytes_alloc: TL_BYTES_ALLOC.with(|c| c.get()),
+        bytes_dealloc: TL_BYTES_DEALLOC.with(|c| c.get()),
+    }
+}
+
+/// Whole-process totals `(allocation_events, bytes)` since start.
+pub fn global_totals() -> (u64, u64) {
+    (TOTAL_ALLOCS.load(Ordering::Relaxed), TOTAL_BYTES.load(Ordering::Relaxed))
+}
+
+/// Run `f` and return its result together with the thread-local
+/// [`AllocDelta`] it incurred. Only counts allocations made by the calling
+/// thread — run gated regions with a 1-thread `Pool` so all work stays here.
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, AllocDelta) {
+    let before = snapshot();
+    let r = f();
+    let after = snapshot();
+    (
+        r,
+        AllocDelta {
+            allocs: after.allocs - before.allocs,
+            bytes_allocated: after.bytes_alloc - before.bytes_alloc,
+            bytes_deallocated: after.bytes_dealloc - before.bytes_dealloc,
+        },
+    )
+}
+
+/// Assert a block performs **zero** allocation events on this thread.
+///
+/// Evaluates to the block's value. Without the `alloc-gate` feature the
+/// block still runs but the assertion is skipped (no counting allocator is
+/// installed, so the delta would be vacuously zero anyway).
+#[macro_export]
+macro_rules! assert_no_alloc {
+    ($label:expr, $body:expr) => {{
+        let (__gate_r, __gate_d) = $crate::util::alloc_gate::measure(|| $body);
+        if $crate::util::alloc_gate::is_active() {
+            assert!(
+                __gate_d.allocs == 0,
+                "{}: expected zero allocations, got {} events / {} bytes",
+                $label,
+                __gate_d.allocs,
+                __gate_d.bytes_allocated
+            );
+        }
+        __gate_r
+    }};
+}
+
+/// Assert a block stays within an allocation-event budget on this thread.
+///
+/// `alloc_budget!("label", max_allocs = N, { ... })` evaluates to the
+/// block's value; assertion skipped without the `alloc-gate` feature.
+#[macro_export]
+macro_rules! alloc_budget {
+    ($label:expr, max_allocs = $max:expr, $body:expr) => {{
+        let (__gate_r, __gate_d) = $crate::util::alloc_gate::measure(|| $body);
+        if $crate::util::alloc_gate::is_active() {
+            assert!(
+                __gate_d.allocs <= $max,
+                "{}: allocation budget exceeded: {} events > {} allowed ({} bytes)",
+                $label,
+                __gate_d.allocs,
+                $max,
+                __gate_d.bytes_allocated
+            );
+        }
+        __gate_r
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_a_vec_when_counting() {
+        let (v, d) = measure(|| vec![0u8; 4096]);
+        assert_eq!(v.len(), 4096);
+        if is_active() {
+            assert!(d.allocs >= 1, "a fresh Vec must be counted: {d:?}");
+            assert!(d.bytes_allocated >= 4096, "bytes under-counted: {d:?}");
+        } else {
+            assert_eq!(d.allocs, 0, "no counting allocator installed");
+        }
+    }
+
+    #[test]
+    fn net_bytes_is_zero_for_a_dropped_temporary() {
+        let ((), d) = measure(|| {
+            let tmp = vec![0u8; 1024];
+            drop(tmp);
+        });
+        if is_active() {
+            assert_eq!(d.net_bytes(), 0, "allocate-then-drop must net out: {d:?}");
+        }
+    }
+
+    #[test]
+    fn gate_macros_pass_through_values() {
+        // With the feature off this checks pass-through; with it on, it also
+        // checks that pure arithmetic really does not allocate.
+        let x = assert_no_alloc!("arith", { 21 * 2 });
+        assert_eq!(x, 42);
+        let y = alloc_budget!("one vec", max_allocs = 8, { vec![1u8, 2, 3].len() });
+        assert_eq!(y, 3);
+    }
+}

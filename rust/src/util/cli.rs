@@ -1,5 +1,7 @@
 //! Tiny CLI argument helper: `prog <subcommand> [--flag value] [--switch]`.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};

@@ -2,6 +2,8 @@
 //! metrics JSONL files.  Full RFC 8259 value grammar, UTF-8 strings with the
 //! standard escapes, f64 numbers.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -1,6 +1,8 @@
 //! Small in-tree utilities replacing external crates (the build is offline
 //! and hermetic: `anyhow` is the only dependency — see Cargo.toml).
 
+pub mod alloc_gate;
 pub mod cli;
 pub mod json;
+pub mod modelcheck;
 pub mod tomlmini;

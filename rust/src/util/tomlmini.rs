@@ -3,6 +3,8 @@
 //! `#` comments.  No arrays-of-tables, no multi-line strings — the run
 //! config doesn't need them.
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};

@@ -1,0 +1,148 @@
+//! Allocation-gate tests: the counting global allocator turns the repo's
+//! "zero steady-state allocation" prose into assertions.
+//!
+//! Compiled only with `--features alloc-gate` (which installs
+//! `util::alloc_gate::CountingAlloc` as `#[global_allocator]`):
+//!
+//! ```text
+//! cargo test --features alloc-gate --test alloc_gate
+//! ```
+//!
+//! Counters are thread-local, so every gated region runs on a **1-thread
+//! pool** (the pool runs such jobs inline on the calling thread — nothing
+//! escapes the counter, and no other test thread can flake the numbers).
+//!
+//! What is pinned, honestly:
+//! - `adamw_update_mut_scratch` with a warm [`AdamwScratch`] is **strictly
+//!   allocation-free** — the PR 4 claim, now machine-checked.
+//! - one-token decode (`logits_step_scratch`) with a warm [`DecodeScratch`]
+//!   is **strictly allocation-free** for every `AttnKind` — linear variants
+//!   by scratch reuse, softmax additionally via the `n_ctx`-reserved KV
+//!   cache.
+//! - `train_step_mut` cannot be literally zero-alloc (the forward/backward
+//!   activations are per-step temporaries by design), so it is pinned to
+//!   **net-zero retained bytes** and a **constant per-step allocation
+//!   count** — any leak or accidental per-step growth moves one of the two.
+
+#![cfg(feature = "alloc-gate")]
+
+use repro::infer::DecodeState;
+use repro::native::model::{self, AdamwScratch, AttnKind, DecodeScratch, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+use repro::util::alloc_gate::measure;
+use repro::{alloc_budget, assert_no_alloc};
+
+fn cycle_tokens(cfg: &LmConfig) -> Tensor {
+    let n = cfg.batch * (cfg.n_ctx + 1);
+    Tensor::i32(vec![cfg.batch, cfg.n_ctx + 1], (0..n).map(|i| (i % 23) as i32).collect()).unwrap()
+}
+
+/// Synthetic non-constant gradients matching the config's parameter shapes.
+fn grads(cfg: &LmConfig) -> Vec<Vec<f32>> {
+    cfg.param_shapes()
+        .iter()
+        .map(|(_, s)| {
+            (0..s.iter().product::<usize>()).map(|j| ((j % 13) as f32 - 6.0) * 1e-3).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn adamw_update_mut_scratch_is_allocation_free_when_warm() {
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    let mut state = cfg.init_state(0);
+    let g = grads(&cfg);
+    let pool = ThreadPool::new(1);
+    let mut sc = AdamwScratch::new();
+    // warm-up: fills the decay flags and the pointer-list capacity
+    model::adamw_update_mut_scratch(&cfg, &mut state, &g, 0, &pool, &mut sc).unwrap();
+
+    for step in 1..4 {
+        let norm = assert_no_alloc!("adamw_update_mut_scratch (warm)", {
+            model::adamw_update_mut_scratch(&cfg, &mut state, &g, step, &pool, &mut sc).unwrap()
+        });
+        assert!(norm.is_finite() && norm > 0.0);
+    }
+}
+
+#[test]
+fn decode_step_is_allocation_free_when_warm_for_every_attn_kind() {
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let mut state = cfg.init_state(1);
+        state.truncate(cfg.n_param_arrays());
+        let params: Vec<&Tensor> = state.iter().collect();
+        let pool = ThreadPool::new(1);
+        let bound = model::DecodeModel::bind(&cfg, &params).unwrap();
+        let mut st = DecodeState::new(&cfg, 2).unwrap();
+        let mut sc = DecodeScratch::new();
+        // warm-up token: grows every scratch buffer to its steady size
+        bound.logits_step_scratch(&[1, 2], &mut st, &pool, &mut sc).unwrap();
+
+        for t in 0..4 {
+            let tok = [(3 + t) as i32, (5 + t) as i32];
+            // the satellite contract: a warm per-token decode step performs
+            // ZERO allocation events — the budget is exactly zero, and
+            // `alloc_budget!` here is the gate new decode code must pass
+            // (the logits view borrows the scratch, so check it in place)
+            let finite = alloc_budget!(format!("logits_step_scratch (warm, {attn:?})"), max_allocs = 0, {
+                let logits = bound.logits_step_scratch(&tok, &mut st, &pool, &mut sc).unwrap();
+                logits.len() == 2 * cfg.vocab && logits.iter().all(|x| x.is_finite())
+            });
+            assert!(finite, "bad logits from the gated step ({attn:?})");
+        }
+
+        // prefill (the logits-free fast path) must be gated too
+        assert_no_alloc!(format!("prefill_step_scratch (warm, {attn:?})"), {
+            bound.prefill_step_scratch(&[1, 1], &mut st, &pool, &mut sc).unwrap()
+        });
+    }
+}
+
+#[test]
+fn train_step_mut_retains_nothing_and_has_constant_alloc_count() {
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    let mut state = cfg.init_state(2);
+    let tokens = cycle_tokens(&cfg);
+    let pool = ThreadPool::new(1);
+    // warm-up: first step pays one-time lazy init (pool state, tensors)
+    model::train_step_mut(&cfg, &mut state, &tokens, 0, &pool).unwrap();
+
+    let (_, d1) = measure(|| model::train_step_mut(&cfg, &mut state, &tokens, 1, &pool).unwrap());
+    let (_, d2) = measure(|| model::train_step_mut(&cfg, &mut state, &tokens, 2, &pool).unwrap());
+
+    // every forward/backward temporary must be returned to the allocator —
+    // a warm in-place step retains zero bytes
+    assert_eq!(d1.net_bytes(), 0, "step 1 retained bytes: {d1:?}");
+    assert_eq!(d2.net_bytes(), 0, "step 2 retained bytes: {d2:?}");
+    // and the per-step allocation count is flat: any accidental
+    // per-step growth (caching, logging, leaked scratch) breaks equality
+    assert_eq!(d1.allocs, d2.allocs, "alloc count drifted: {d1:?} vs {d2:?}");
+    assert!(d1.allocs > 0, "a train step legitimately allocates activations");
+}
+
+#[test]
+fn softmax_kv_cache_reservation_survives_a_full_window() {
+    // decode a full context window: with the up-front KV reservation the
+    // softmax cache must never reallocate, so *every* warm token is free
+    let cfg = LmConfig::tiny(AttnKind::Softmax);
+    let mut state = cfg.init_state(3);
+    state.truncate(cfg.n_param_arrays());
+    let params: Vec<&Tensor> = state.iter().collect();
+    let pool = ThreadPool::new(1);
+    let bound = model::DecodeModel::bind(&cfg, &params).unwrap();
+    let mut st = DecodeState::new(&cfg, 1).unwrap();
+    let mut sc = DecodeScratch::new();
+    bound.logits_step_scratch(&[0], &mut st, &pool, &mut sc).unwrap();
+
+    let ((), d) = measure(|| {
+        for t in 1..cfg.n_ctx {
+            bound.logits_step_scratch(&[(t % cfg.vocab) as i32], &mut st, &pool, &mut sc).unwrap();
+        }
+    });
+    assert_eq!(
+        d.allocs, 0,
+        "softmax decode allocated across a full window (KV reservation lost?): {d:?}"
+    );
+}

@@ -7,6 +7,10 @@
 //! `h = 5e-3` keeps truncation ~1e-3 relative while staying well above the
 //! ~1e-6 f32 evaluation noise.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::native::model::{self, AttnKind, LmConfig};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;

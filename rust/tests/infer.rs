@@ -3,6 +3,10 @@
 //! greedy generation, the recurrent-vs-KV-cache state-footprint contract,
 //! and checkpoint-load hardening for `generate`/`serve`.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use std::io::Cursor;
 
 use repro::coordinator::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};

@@ -1,6 +1,10 @@
 //! Integration: sweep runner + report emitters over the smallest artifacts,
 //! and the task scorer over a freshly-initialized model.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::bench::{report as rpt, SweepRunner};
 use repro::runtime::{Engine, Tensor};
 use repro::simulator::{DeviceSpec, TrafficModel};

@@ -1,5 +1,9 @@
 //! Integration: the engine + native backend over the built-in artifact set.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::runtime::{Engine, Tensor};
 
 fn engine() -> Engine {

@@ -1,5 +1,9 @@
 //! Integration: the full training coordinator over the lm-tiny artifacts.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::coordinator::config::{DataSection, OutputSection, TrainSection};
 use repro::coordinator::{Checkpoint, RunConfig, Trainer};
 use repro::runtime::Engine;

@@ -10,6 +10,10 @@
 //! trajectories must agree to f32 round-off (the block path adds only
 //! layout-identity head reshapes).
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::native::gemm;
 use repro::native::kernels::{la_scan_bwd, la_scan_fwd, softmax_bwd, softmax_fwd, LayerShape};
 use repro::native::model::{self, AttnKind, LmConfig};

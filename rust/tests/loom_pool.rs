@@ -1,0 +1,124 @@
+//! Loom model-checking of the thread-pool job-completion protocol.
+//!
+//! Compiled only with `--features loom`, which (a) swaps every
+//! synchronization primitive inside `native::pool` to `loom::sync` via its
+//! `sync` shim, and (b) requires the commented-out `loom` dev-dependency in
+//! `rust/Cargo.toml` to be enabled:
+//!
+//! ```text
+//! sed -i 's|^# loom = |loom = |' rust/Cargo.toml
+//! LOOM_MAX_PREEMPTIONS=2 cargo test --release --features loom --test loom_pool
+//! ```
+//!
+//! What loom adds over `tests/pool_model.rs` (the always-on SC model): weak
+//! memory. Loom explores the C11 orderings the pool actually writes —
+//! these tests fail if `pending`'s `AcqRel` decrement chain or the
+//! submitter's `Acquire` completion load is weakened to `Relaxed`, because
+//! the non-atomic task writes below go through `loom::cell::UnsafeCell`,
+//! which reports any access not ordered by a happens-before edge.
+//!
+//! Panic *propagation* is deliberately not modeled here: a real unwind
+//! inside a loom model aborts the exploration, so those paths are covered
+//! by the `std`-build tests in `native/pool.rs` and the SC model instead.
+
+#![cfg(feature = "loom")]
+
+use loom::cell::UnsafeCell;
+use repro::native::pool::ThreadPool;
+
+/// Shared output buffer written non-atomically by pool tasks, exactly like
+/// the kernels' `SliceParts` windows — loom tracks every access and fails
+/// the model if two threads touch a cell without a happens-before edge.
+struct Cells {
+    slots: Vec<UnsafeCell<usize>>,
+}
+
+// SAFETY: each pool task writes only its own index (disjoint cells), and the
+// submitter reads only after `run` returns; the pool's completion protocol
+// must order those accesses — proving that is the entire point of the model.
+unsafe impl Sync for Cells {}
+
+impl Cells {
+    fn new(n: usize) -> Self {
+        Self { slots: (0..n).map(|_| UnsafeCell::new(0)).collect() }
+    }
+
+    fn put(&self, i: usize, v: usize) {
+        // SAFETY: task `i` is the only writer of slot `i` while the job runs.
+        self.slots[i].with_mut(|p| unsafe { *p = v });
+    }
+
+    fn get(&self, i: usize) -> usize {
+        // SAFETY: called by the submitter after `run` returned; the
+        // completion Acquire must make this race-free (loom checks).
+        self.slots[i].with(|p| unsafe { *p })
+    }
+}
+
+/// Two tasks drained by a worker and the submitter together: every
+/// interleaving must complete both tasks exactly once, and the task writes
+/// must be visible to the submitter without extra synchronization.
+#[test]
+fn run_completes_all_tasks_and_publishes_their_writes() {
+    loom::model(|| {
+        let pool = ThreadPool::new(2);
+        let out = Cells::new(2);
+        pool.run(2, |i| out.put(i, i + 10));
+        for i in 0..2 {
+            assert_eq!(out.get(i), i + 10, "task {i} write lost");
+        }
+        drop(pool); // worker shutdown handshake is part of the model
+    });
+}
+
+/// Two back-to-back submissions on one pool: the epoch bump must hand the
+/// second job to a worker that may still be waking from the first, and the
+/// second job's writes must overwrite the first's.
+#[test]
+fn pool_reuse_keeps_jobs_separate() {
+    loom::model(|| {
+        let pool = ThreadPool::new(2);
+        let out = Cells::new(2);
+        pool.run(2, |i| out.put(i, 1));
+        pool.run(2, |i| out.put(i, out.get(i) + 1));
+        for i in 0..2 {
+            assert_eq!(out.get(i), 2, "slot {i} saw a stale job");
+        }
+    });
+}
+
+/// A task that re-enters the pool must run the nested job inline on the
+/// calling thread (the pool runs one job at a time — re-submitting would
+/// deadlock). The nested writes land in disjoint cells of the same buffer.
+#[test]
+fn nested_submission_runs_inline_without_deadlock() {
+    loom::model(|| {
+        let pool = ThreadPool::new(2);
+        let out = Cells::new(4);
+        let p2 = pool.clone();
+        pool.run(2, |i| {
+            // nested run: IN_POOL_TASK is set, so this must stay inline
+            p2.run(2, |j| out.put(i * 2 + j, 7));
+        });
+        for i in 0..4 {
+            assert_eq!(out.get(i), 7, "nested task {i} missing");
+        }
+    });
+}
+
+/// Degenerate shapes run fully inline — no worker interaction at all, so
+/// the model is trivial, but it pins the inline fast paths under the same
+/// instrumented build.
+#[test]
+fn single_thread_and_single_task_shapes_run_inline() {
+    loom::model(|| {
+        let out = Cells::new(3);
+        ThreadPool::new(1).run(3, |i| out.put(i, i));
+        for i in 0..3 {
+            assert_eq!(out.get(i), i);
+        }
+        let pool = ThreadPool::new(2);
+        pool.run(1, |i| out.put(i, 99)); // single task: inline, no publish
+        assert_eq!(out.get(0), 99);
+    });
+}

@@ -1,0 +1,193 @@
+//! Size-reduced parity suite for the Miri and ThreadSanitizer CI lanes.
+//!
+//! Miri interprets MIR ~2 orders of magnitude slower than native code, so
+//! the heavyweight integration tests are `#![cfg(not(miri))]`-gated and this
+//! file is the sanctioned entry point:
+//!
+//! ```text
+//! cargo +nightly miri test --test miri_parity
+//! ```
+//!
+//! Every family of `unsafe` in the crate is driven here through real
+//! multi-thread pool submissions, at shapes shrunk under `cfg!(miri)`:
+//!
+//! - the kernel families (scan / chunkwise / quadratic / softmax) — their
+//!   parallel paths write through `SliceParts` raw-pointer windows;
+//! - the in-place AdamW update — `StateViews` aliased parameter pointers;
+//! - the decode hot path — `DecodeScratch` reuse plus its windowed stores.
+//!
+//! The checks are *parity* checks (independent implementations agreeing),
+//! not just smoke: if a window overlaps or a store is torn, the numbers
+//! disagree even when the UB happens not to crash.
+
+use repro::infer::DecodeState;
+use repro::native::kernels::{
+    la_chunk_bwd, la_chunk_fwd, la_quadratic_bwd, la_quadratic_fwd, la_scan_bwd, la_scan_fwd,
+    softmax_bwd, softmax_fwd, LayerShape,
+};
+use repro::native::model::{self, AttnKind, DecodeScratch, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+
+/// Layer shape: tiny under Miri, small-but-parallel otherwise (both spill
+/// across several pool tasks so the windowed writes genuinely interleave).
+fn shape() -> (LayerShape, usize) {
+    if cfg!(miri) {
+        (LayerShape::cube(2, 8, 4), 4) // (shape, chunk)
+    } else {
+        (LayerShape::cube(2, 32, 8), 8)
+    }
+}
+
+/// LM config: the `tiny` preset natively, shrunk far below it under Miri.
+fn lm_cfg(attn: AttnKind) -> LmConfig {
+    let mut cfg = LmConfig::tiny(attn);
+    if cfg!(miri) {
+        cfg.vocab = 31;
+        cfg.n_ctx = 8;
+        cfg.d_model = 8;
+        cfg.n_layer = 1;
+        cfg.n_head = 2;
+        cfg.d_ff = 16;
+        cfg.batch = 2;
+    }
+    cfg
+}
+
+fn flat_randn(n: usize, seed: u64) -> Vec<f32> {
+    match Tensor::randn(vec![n], seed) {
+        Tensor::F32 { data, .. } => data,
+        _ => unreachable!(),
+    }
+}
+
+fn layer_inputs(sh: LayerShape, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut q = Tensor::randn(vec![sh.bh, sh.n, sh.dk], seed);
+    let mut k = Tensor::randn(vec![sh.bh, sh.n, sh.dk], seed + 1);
+    q.normalize_rows();
+    k.normalize_rows();
+    let v = flat_randn(sh.bh * sh.n * sh.dv, seed + 2);
+    let go = flat_randn(sh.bh * sh.n * sh.dv, seed + 3);
+    let (Tensor::F32 { data: q, .. }, Tensor::F32 { data: k, .. }) = (q, k) else {
+        unreachable!()
+    };
+    (q, k, v, go)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+const TOL: f32 = 1e-4;
+
+#[test]
+fn linear_kernel_families_agree_under_the_interpreter() {
+    let (sh, chunk) = shape();
+    let pool = ThreadPool::new(2);
+    let (q, k, v, go) = layer_inputs(sh, 0xC1);
+
+    let reference = la_quadratic_fwd(&pool, &q, &k, &v, sh);
+    let scan = la_scan_fwd(&pool, &q, &k, &v, sh, 1.0);
+    let chunked = la_chunk_fwd(&pool, &q, &k, &v, sh, chunk);
+    assert!(max_abs_diff(&scan, &reference) < TOL, "scan fwd diverged");
+    assert!(max_abs_diff(&chunked, &reference) < TOL, "chunk fwd diverged");
+
+    let (rq, rk, rv) = la_quadratic_bwd(&pool, &q, &k, &v, &go, sh);
+    let (sq, sk, sv) = la_scan_bwd(&pool, &q, &k, &v, &go, sh, 1.0);
+    let (cq, ck, cv) = la_chunk_bwd(&pool, &q, &k, &v, &go, sh, chunk);
+    for (name, got, want) in [
+        ("scan dq", &sq, &rq),
+        ("scan dk", &sk, &rk),
+        ("scan dv", &sv, &rv),
+        ("chunk dq", &cq, &rq),
+        ("chunk dk", &ck, &rk),
+        ("chunk dv", &cv, &rv),
+    ] {
+        assert!(max_abs_diff(got, want) < TOL, "{name} diverged");
+    }
+}
+
+#[test]
+fn softmax_kernel_is_causal_and_finite_under_the_interpreter() {
+    let (sh, _) = shape();
+    let pool = ThreadPool::new(2);
+    let (q, k, v, go) = layer_inputs(sh, 0xC7);
+    let scale = 1.0 / (sh.dk as f32).sqrt();
+
+    let o = softmax_fwd(&pool, &q, &k, &v, sh, scale);
+    assert_eq!(o.len(), sh.bh * sh.n * sh.dv);
+    assert!(o.iter().all(|x| x.is_finite()));
+    // causality: row 0 attends only to itself, so it IS v's row 0
+    for b in 0..sh.bh {
+        let got = &o[b * sh.n * sh.dv..][..sh.dv];
+        let want = &v[b * sh.n * sh.dv..][..sh.dv];
+        assert!(max_abs_diff(got, want) < TOL, "softmax row 0 of bh {b} is not v[0]");
+    }
+
+    let (dq, dk, dv) = softmax_bwd(&pool, &q, &k, &v, &go, sh, scale);
+    assert_eq!(dq.len(), q.len());
+    assert_eq!(dk.len(), k.len());
+    assert_eq!(dv.len(), v.len());
+    assert!(dq.iter().chain(&dk).chain(&dv).all(|x| x.is_finite()));
+    // causality in the backward: dv's LAST row gets gradient only from the
+    // last query row, with weight softmax(last)·go(last) — finite + nonzero
+    let last = &dv[(sh.bh * sh.n - 1) * sh.dv..];
+    assert!(last.iter().any(|x| *x != 0.0), "dv last row unexpectedly all-zero");
+}
+
+#[test]
+fn in_place_adamw_matches_itself_across_scratch_reuse() {
+    let cfg = lm_cfg(AttnKind::Ours);
+    let g: Vec<Vec<f32>> = cfg
+        .param_shapes()
+        .iter()
+        .map(|(_, s)| {
+            (0..s.iter().product::<usize>()).map(|j| ((j % 7) as f32 - 3.0) * 1e-3).collect()
+        })
+        .collect();
+    let pool = ThreadPool::new(2);
+
+    // route A: fresh scratch every step (the convenience wrapper)
+    let mut sa = cfg.init_state(11);
+    let mut norms_a = Vec::new();
+    for step in 0..3 {
+        norms_a.push(model::adamw_update_mut(&cfg, &mut sa, &g, step, &pool).unwrap());
+    }
+    // route B: one warm scratch across steps (the training-loop path)
+    let mut sb = cfg.init_state(11);
+    let mut sc = model::AdamwScratch::new();
+    for (step, na) in norms_a.iter().enumerate() {
+        let nb = model::adamw_update_mut_scratch(&cfg, &mut sb, &g, step, &pool, &mut sc).unwrap();
+        assert_eq!(*na, nb, "grad norm diverged at step {step}");
+    }
+    for (a, b) in sa.iter().zip(sb.iter()) {
+        let (Tensor::F32 { data: da, .. }, Tensor::F32 { data: db, .. }) = (a, b) else {
+            panic!("non-f32 state array")
+        };
+        assert_eq!(da, db, "scratch reuse changed the update");
+    }
+}
+
+#[test]
+fn decode_scratch_reuse_matches_the_fresh_scratch_path() {
+    for attn in [AttnKind::Ours, AttnKind::Softmax] {
+        let cfg = lm_cfg(attn);
+        let mut state = cfg.init_state(5);
+        state.truncate(cfg.n_param_arrays());
+        let params: Vec<&Tensor> = state.iter().collect();
+        let pool = ThreadPool::new(2);
+        let bound = model::DecodeModel::bind(&cfg, &params).unwrap();
+
+        let mut st_a = DecodeState::new(&cfg, 2).unwrap();
+        let mut st_b = DecodeState::new(&cfg, 2).unwrap();
+        let mut sc = DecodeScratch::new();
+        let steps = if cfg!(miri) { 3 } else { 8 };
+        for t in 0..steps {
+            let toks = [(t % cfg.vocab) as i32, ((t + 2) % cfg.vocab) as i32];
+            let fresh = bound.logits_step(&toks, &mut st_a, &pool).unwrap();
+            let reused = bound.logits_step_scratch(&toks, &mut st_b, &pool, &mut sc).unwrap();
+            assert_eq!(fresh.as_slice(), reused, "token {t} ({attn:?}): scratch reuse diverged");
+        }
+    }
+}

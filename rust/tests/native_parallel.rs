@@ -5,6 +5,10 @@
 //! invariance: the task decomposition is fixed, so results must not depend
 //! on how many workers execute it.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::native::gemm;
 use repro::native::kernels::{self, reference, LayerShape};
 use repro::native::pool::ThreadPool;

@@ -2,6 +2,10 @@
 //! the quadratic softmax-free reference, and an end-to-end CLI smoke test of
 //! `repro train` on the tiny preset.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::native::kernels::{
     la_chunk_bwd, la_chunk_fwd, la_quadratic_bwd, la_quadratic_fwd, la_scan_bwd, la_scan_fwd,
     LayerShape,

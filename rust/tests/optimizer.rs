@@ -2,6 +2,10 @@
 //! step against the preserved rebuild step, global grad-norm clipping, and
 //! decoupled weight decay.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::native::model::{self, AttnKind, LmConfig};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;

@@ -1,0 +1,282 @@
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+#![forbid(unsafe_code)]
+//! Exhaustive interleaving model of `native::pool`'s job protocol, checked
+//! with the dependency-free explorer in `util::modelcheck` on every
+//! `cargo test` run.
+//!
+//! The real pool (see `native/pool.rs`) distributes a batch of `n` tasks by:
+//!
+//! 1. every draining thread (workers *and* the submitter) claiming indices
+//!    with an atomic `next.fetch_add(1)` until the counter passes `n`;
+//! 2. running the claimed task, recording the *first* panic payload in a
+//!    shared slot;
+//! 3. decrementing a `pending` countdown **after** the task body finishes;
+//! 4. the submitter waiting for `pending == 0` before taking the panic slot
+//!    and returning.
+//!
+//! Each of those is one atomic step here, and `explore` walks every
+//! interleaving of two workers plus the submitter over three tasks (two of
+//! which "panic"). The invariants encode exactly the guarantees the pool's
+//! ordering comments claim:
+//!
+//! - no task runs twice (the `fetch_add` claim is unique);
+//! - `pending` never goes negative;
+//! - **once the submitter has observed `pending == 0`, every task has
+//!   executed** — the Acquire-load/AcqRel-countdown contract;
+//! - the terminal state delivers exactly one of the recorded panics.
+//!
+//! Two deliberately broken variants — decrementing `pending` *before*
+//! running the task, and splitting the claim into a non-atomic read +
+//! increment — must be caught, proving the checker has teeth. Weak-memory
+//! reorderings are out of scope here; they belong to `tests/loom_pool.rs`
+//! (`--features loom`) and the TSan CI lane.
+
+use repro::util::modelcheck::{explore, ThreadSpec};
+
+const NTASKS: usize = 3;
+/// Tasks 1 and 2 panic; the slot must keep whichever got there first.
+const PANICKY: [bool; NTASKS] = [false, true, true];
+/// Thread ids: 0, 1 = workers; 2 = submitter.
+const SUBMITTER: usize = 2;
+
+// Program-counter values (per draining thread):
+const PC_CLAIM: u8 = 0; //   atomically claim an index (read + increment)
+const PC_EXEC: u8 = 1; //    run the claimed task
+const PC_DEC: u8 = 2; //     decrement `pending`
+const PC_WAIT: u8 = 3; //    submitter only: wait for `pending == 0`
+const PC_DONE: u8 = 4; //    terminated
+// Broken-claim variant only:
+const PC_INC: u8 = 5; //     second half of a torn (non-atomic) claim
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Pool {
+    /// How many times each task body ran.
+    executed: [u8; NTASKS],
+    /// The shared claim counter.
+    next: u8,
+    /// The completion countdown (signed so underflow is observable).
+    pending: i8,
+    /// First panic payload recorded (task index), if any.
+    panic_slot: Option<u8>,
+    /// Payload the submitter took after the wait.
+    delivered: Option<u8>,
+    pc: [u8; 3],
+    /// Claimed task index, per thread.
+    reg: [u8; 3],
+}
+
+fn init() -> Pool {
+    Pool {
+        executed: [0; NTASKS],
+        next: 0,
+        pending: NTASKS as i8,
+        panic_slot: None,
+        delivered: None,
+        pc: [PC_CLAIM, PC_CLAIM, PC_CLAIM],
+        reg: [0; 3],
+    }
+}
+
+fn done(s: &Pool, tid: usize) -> bool {
+    s.pc[tid] == PC_DONE
+}
+
+/// The submitter's `pending` wait is the only blocking point: it is modeled
+/// as "not runnable until the predicate holds", exactly like the real
+/// Acquire spin / condvar wait.
+fn runnable(s: &Pool, tid: usize) -> bool {
+    s.pc[tid] != PC_WAIT || s.pending == 0
+}
+
+/// Steps shared by all variants: execute, decrement, wait.
+/// Returns true if it handled the pc.
+fn common_step(s: &mut Pool, tid: usize) -> bool {
+    match s.pc[tid] {
+        PC_EXEC => {
+            let i = s.reg[tid] as usize;
+            s.executed[i] += 1;
+            if PANICKY[i] && s.panic_slot.is_none() {
+                s.panic_slot = Some(i as u8);
+            }
+            s.pc[tid] = PC_DEC;
+            true
+        }
+        PC_DEC => {
+            s.pending -= 1;
+            s.pc[tid] = PC_CLAIM;
+            true
+        }
+        PC_WAIT => {
+            // Only reachable when `pending == 0` (see `runnable`): take the
+            // panic payload and return, as `Pool::run` does.
+            s.delivered = s.panic_slot.take();
+            s.pc[tid] = PC_DONE;
+            true
+        }
+        _ => false,
+    }
+}
+
+fn after_claims_exhausted(s: &mut Pool, tid: usize) {
+    // Workers go back to sleep on the job condvar (done for this batch);
+    // the submitter falls through to the completion wait.
+    s.pc[tid] = if tid == SUBMITTER { PC_WAIT } else { PC_DONE };
+}
+
+/// Faithful model: the claim is one indivisible read-modify-write
+/// (`next.fetch_add(1, Relaxed)`).
+fn correct_step(s: &mut Pool, tid: usize) {
+    if common_step(s, tid) {
+        return;
+    }
+    debug_assert_eq!(s.pc[tid], PC_CLAIM);
+    let i = s.next;
+    s.next += 1;
+    if (i as usize) < NTASKS {
+        s.reg[tid] = i;
+        s.pc[tid] = PC_EXEC;
+    } else {
+        after_claims_exhausted(s, tid);
+    }
+}
+
+/// Seeded bug #1: the countdown is decremented BEFORE the task body runs.
+/// The submitter can then observe `pending == 0` while a claimed task has
+/// not executed yet — the exact bug the AcqRel-after-work ordering exists
+/// to prevent.
+fn early_countdown_step(s: &mut Pool, tid: usize) {
+    match s.pc[tid] {
+        PC_CLAIM => {
+            let i = s.next;
+            s.next += 1;
+            if (i as usize) < NTASKS {
+                s.reg[tid] = i;
+                s.pc[tid] = PC_DEC;
+            } else {
+                after_claims_exhausted(s, tid);
+            }
+        }
+        PC_DEC => {
+            s.pending -= 1;
+            s.pc[tid] = PC_EXEC;
+        }
+        PC_EXEC => {
+            let i = s.reg[tid] as usize;
+            s.executed[i] += 1;
+            if PANICKY[i] && s.panic_slot.is_none() {
+                s.panic_slot = Some(i as u8);
+            }
+            s.pc[tid] = PC_CLAIM;
+        }
+        _ => {
+            let handled = common_step(s, tid);
+            debug_assert!(handled);
+        }
+    }
+}
+
+/// Seeded bug #2: the claim is torn into a plain read followed by a plain
+/// increment (what `next` being a non-atomic would allow). Two threads can
+/// read the same index and run the same task twice.
+fn torn_claim_step(s: &mut Pool, tid: usize) {
+    match s.pc[tid] {
+        PC_CLAIM => {
+            s.reg[tid] = s.next;
+            s.pc[tid] = PC_INC;
+        }
+        PC_INC => {
+            s.next = s.reg[tid] + 1;
+            if (s.reg[tid] as usize) < NTASKS {
+                s.pc[tid] = PC_EXEC;
+            } else {
+                after_claims_exhausted(s, tid);
+            }
+        }
+        _ => {
+            let handled = common_step(s, tid);
+            debug_assert!(handled);
+        }
+    }
+}
+
+fn threads(step: fn(&mut Pool, usize)) -> Vec<ThreadSpec<Pool>> {
+    vec![
+        ThreadSpec { name: "worker-0", done, runnable, step },
+        ThreadSpec { name: "worker-1", done, runnable, step },
+        ThreadSpec { name: "submitter", done, runnable, step },
+    ]
+}
+
+fn invariant(s: &Pool) -> Result<(), String> {
+    for (i, &n) in s.executed.iter().enumerate() {
+        if n > 1 {
+            return Err(format!("task {i} executed {n} times"));
+        }
+    }
+    if s.pending < 0 {
+        return Err(format!("pending underflowed to {}", s.pending));
+    }
+    // The load-bearing contract: once the submitter is past its completion
+    // wait, every task body must have run to completion.
+    if s.pc[SUBMITTER] == PC_DONE {
+        for (i, &n) in s.executed.iter().enumerate() {
+            if n != 1 {
+                return Err(format!(
+                    "submitter returned but task {i} executed {n} times (early completion)"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn terminal(s: &Pool) -> Result<(), String> {
+    if s.executed != [1; NTASKS] {
+        return Err(format!("executed counts {:?}, want all 1", s.executed));
+    }
+    if s.pending != 0 {
+        return Err(format!("pending ended at {}", s.pending));
+    }
+    match s.delivered {
+        Some(i) if PANICKY[i as usize] => {}
+        other => return Err(format!("delivered panic payload {other:?}, want a panicky task")),
+    }
+    if s.panic_slot.is_some() {
+        return Err("panic slot not drained by the submitter".to_string());
+    }
+    Ok(())
+}
+
+const MAX_STATES: usize = 200_000;
+
+#[test]
+fn pool_protocol_has_no_bad_interleaving() {
+    let cov = explore(init(), &threads(correct_step), invariant, terminal, MAX_STATES)
+        .expect("the claim/countdown/panic protocol must hold under every interleaving");
+    // Sanity: the exploration actually did work — three threads over three
+    // tasks have well over a hundred distinct states.
+    assert!(cov.states > 100, "suspiciously small state space: {:?}", cov);
+    assert!(cov.terminals >= 1, "no terminal state reached: {:?}", cov);
+}
+
+#[test]
+fn checker_catches_countdown_before_execution() {
+    let err = explore(init(), &threads(early_countdown_step), invariant, terminal, MAX_STATES)
+        .expect_err("decrementing pending before the task body must be caught");
+    assert!(
+        err.contains("early completion"),
+        "expected the early-completion invariant to trip, got: {err}"
+    );
+}
+
+#[test]
+fn checker_catches_a_torn_claim() {
+    let err = explore(init(), &threads(torn_claim_step), invariant, terminal, MAX_STATES)
+        .expect_err("a non-atomic claim counter must be caught");
+    assert!(
+        err.contains("executed") || err.contains("underflowed"),
+        "expected a double-execution or underflow, got: {err}"
+    );
+}

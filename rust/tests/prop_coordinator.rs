@@ -5,6 +5,10 @@
 //! property runs across hundreds of random cases with a deterministic seed,
 //! and failures report the case index for replay.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::bench::TimingStats;
 use repro::coordinator::schedule::CosineSchedule;
 use repro::coordinator::checkpoint::{Checkpoint, CheckpointMeta};

@@ -3,6 +3,10 @@
 //! generated corpora, id-range containment, and merge determinism across
 //! corpus seeds.
 
+// Too slow under the Miri interpreter (and process-spawning tests cannot
+// run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
+#![cfg(not(miri))]
+
 use repro::data::{ByteTokenizer, CorpusConfig, CorpusGenerator};
 
 const VOCAB: usize = 512;
