@@ -121,8 +121,21 @@ pub fn measure_lm(
     })
 }
 
-/// Measure autoregressive decoding of one (preset, attn) pair: `tokens`
-/// tokens (capped at the context window) through the **recurrent**
+/// Bound on the mean next-token NLL drift a quantized decode may show
+/// against its f32 oracle before [`measure_decode`] fails the run. Reduced
+/// precision must buy memory/speed, not a silently different model.
+pub const DECODE_QUALITY_GATE_NATS: f64 = 0.5;
+
+/// Next-token negative log-likelihood of one logit row (log-softmax in f64
+/// so the gate compares model quality, not summation noise).
+fn nll(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let lse = m + logits.iter().map(|&x| (x as f64 - m).exp()).sum::<f64>().ln();
+    lse - logits[target] as f64
+}
+
+/// Measure autoregressive decoding of one (preset, attn, precision) triple:
+/// `tokens` tokens (capped at the context window) through the **recurrent**
 /// incremental path (`DecodeState` + `logits_step`, the prefix is never
 /// re-scanned), against the **full-recompute** baseline where every token
 /// replays the entire prefix through a fresh state (via the prefill fast
@@ -133,29 +146,51 @@ pub fn measure_lm(
 /// state for `softmax` — the paper's decode-memory claim as a measured
 /// artifact. Weights are freshly initialized (decode cost is
 /// data-independent).
-pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeBenchPoint> {
+///
+/// For `bf16`/`int8` the weights are quantized on the fly, the decode state
+/// is stored at the same precision, and an untimed f32 oracle replays the
+/// same token walk: the point records the worst per-logit divergence and
+/// the mean next-token NLL delta, gated by [`DECODE_QUALITY_GATE_NATS`].
+pub fn measure_decode(
+    preset: &str,
+    attn: &str,
+    tokens: usize,
+    precision: &str,
+) -> Result<DecodeBenchPoint> {
     ensure!(tokens >= 4, "measure_decode needs at least 4 tokens");
     let cfg = LmConfig::by_preset(preset, AttnKind::from_name(attn)?)?;
+    let prec = model::Precision::from_name(precision)?;
     let pool = ThreadPool::from_env();
     let state = cfg.init_state(0);
     let np = cfg.n_param_arrays();
     let params: Vec<&Tensor> = state[..np].iter().collect();
     // bind once — the per-token cost under measurement is the step, not
-    // parameter-layout validation
-    let bound = model::DecodeModel::bind(&cfg, &params)?;
+    // parameter-layout validation (or, for the quantized points,
+    // quantization itself)
+    let qm;
+    let (bound, run_cfg, param_bytes) = if prec.is_quantized() {
+        qm = model::QuantModel::from_params(&cfg, &params, prec)?;
+        (model::DecodeModel::bind_quantized(&qm)?, *qm.cfg(), qm.param_bytes())
+    } else {
+        let bytes = params.iter().map(|t| t.shape().iter().product::<usize>() * 4).sum();
+        (model::DecodeModel::bind(&cfg, &params)?, cfg, bytes)
+    };
     let t_total = tokens.min(cfg.n_ctx);
     let toks: Vec<i32> = (0..t_total).map(|i| (i % cfg.vocab) as i32).collect();
 
     // recurrent: one state advanced token by token, reusing one scratch so
-    // the measured per-token cost is arithmetic, not allocator traffic
-    let mut st = DecodeState::new(&cfg, 1)?;
+    // the measured per-token cost is arithmetic, not allocator traffic; the
+    // logits copy for the fidelity probe happens outside the timer
+    let mut st = DecodeState::new(&run_cfg, 1)?;
     let mut sc = model::DecodeScratch::new();
     let mut step_s = Vec::with_capacity(t_total);
+    let mut run_logits: Vec<f32> = Vec::with_capacity(t_total * cfg.vocab);
     let mut state_bytes_first = 0usize;
     for (t, &tok) in toks.iter().enumerate() {
         let t0 = Instant::now();
-        bound.logits_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
+        let l = bound.logits_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
         step_s.push(t0.elapsed().as_secs_f64());
+        run_logits.extend_from_slice(l);
         if t == 0 {
             state_bytes_first = st.state_bytes();
         }
@@ -165,6 +200,41 @@ pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeB
     let half = t_total / 2;
     let (first, second) = step_s.split_at(half);
 
+    // untimed f32 oracle over the same walk: worst per-logit divergence and
+    // mean next-token NLL drift of the quantized run (both 0 for f32 — the
+    // f32 decode path is bit-identical to the oracle)
+    let (mut logit_maxabs, mut nll_delta) = (0.0f64, 0.0f64);
+    if prec.is_quantized() {
+        let oracle = model::DecodeModel::bind(&cfg, &params)?;
+        let mut st_f = DecodeState::new(&cfg, 1)?;
+        let mut sc_f = model::DecodeScratch::new();
+        let v = cfg.vocab;
+        let (mut nll_run, mut nll_f32, mut scored) = (0.0f64, 0.0f64, 0usize);
+        for (t, &tok) in toks.iter().enumerate() {
+            let lf = oracle.logits_step_scratch(&[tok], &mut st_f, &pool, &mut sc_f)?;
+            let lr = &run_logits[t * v..][..v];
+            for (a, b) in lf.iter().zip(lr) {
+                logit_maxabs = logit_maxabs.max((a - b).abs() as f64);
+            }
+            if t + 1 < toks.len() {
+                let target = toks[t + 1] as usize;
+                nll_run += nll(lr, target);
+                nll_f32 += nll(lf, target);
+                scored += 1;
+            }
+        }
+        if scored > 0 {
+            nll_delta = (nll_run - nll_f32) / scored as f64;
+        }
+        ensure!(
+            nll_delta.abs() <= DECODE_QUALITY_GATE_NATS,
+            "quantized decode quality gate: |Δnll| {:.4} nats > {} for \
+             {preset}/{attn}/{precision}",
+            nll_delta,
+            DECODE_QUALITY_GATE_NATS
+        );
+    }
+
     // full recompute: producing token t replays tokens 0..t from scratch.
     // The replayed prefix goes through the prefill fast path (state only,
     // no unembedding) with a single logits step at the end — the best a
@@ -172,7 +242,7 @@ pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeB
     // by charging the baseline t redundant unembedding GEMMs
     let t0 = Instant::now();
     for t in 0..t_total {
-        let mut st = DecodeState::new(&cfg, 1)?;
+        let mut st = DecodeState::new(&run_cfg, 1)?;
         for &tok in &toks[..t] {
             bound.prefill_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
         }
@@ -183,7 +253,9 @@ pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeB
     Ok(DecodeBenchPoint {
         preset: preset.to_string(),
         attn: attn.to_string(),
+        precision: prec.name().to_string(),
         n_params: cfg.n_params(),
+        param_bytes,
         tokens: t_total,
         recurrent_tok_s: t_total as f64 / recurrent_s.max(1e-12),
         recompute_tok_s: t_total as f64 / recompute_s.max(1e-12),
@@ -191,6 +263,8 @@ pub fn measure_decode(preset: &str, attn: &str, tokens: usize) -> Result<DecodeB
         step_s_p50_second_half: p50(second.to_vec()),
         state_bytes_first,
         state_bytes_last,
+        logit_maxabs_vs_f32: logit_maxabs,
+        nll_delta_vs_f32: nll_delta,
     })
 }
 

@@ -129,7 +129,11 @@ impl OptBenchPoint {
 pub struct DecodeBenchPoint {
     pub preset: String,
     pub attn: String,
+    /// Storage precision of weights + decode state (`f32`/`bf16`/`int8`).
+    pub precision: String,
     pub n_params: u64,
+    /// True stored parameter bytes at this precision (data + int8 scales).
+    pub param_bytes: usize,
     /// Tokens decoded (capped at the preset's context window).
     pub tokens: usize,
     /// Tokens/s through the recurrent incremental path.
@@ -145,6 +149,11 @@ pub struct DecodeBenchPoint {
     /// …and after the last: equal for `ours`/`gated`, ≈ `tokens ×` first
     /// for `softmax`.
     pub state_bytes_last: usize,
+    /// Worst per-logit |quantized − f32| across the run (0 for f32).
+    pub logit_maxabs_vs_f32: f64,
+    /// Mean next-token NLL drift vs the f32 oracle, in nats (0 for f32);
+    /// bounded by the bench's quality gate.
+    pub nll_delta_vs_f32: f64,
 }
 
 impl DecodeBenchPoint {
@@ -257,7 +266,9 @@ pub fn bench_native_json(
             Json::obj(vec![
                 ("preset", Json::str(p.preset.clone())),
                 ("attn", Json::str(p.attn.clone())),
+                ("precision", Json::str(p.precision.clone())),
                 ("n_params", Json::num(p.n_params as f64)),
+                ("param_bytes", Json::num(p.param_bytes as f64)),
                 ("tokens", Json::num(p.tokens as f64)),
                 ("recurrent_tok_s", Json::num(p.recurrent_tok_s)),
                 ("recompute_tok_s", Json::num(p.recompute_tok_s)),
@@ -267,11 +278,13 @@ pub fn bench_native_json(
                 ("state_bytes_first", Json::num(p.state_bytes_first as f64)),
                 ("state_bytes_last", Json::num(p.state_bytes_last as f64)),
                 ("state_growth", Json::num(p.state_growth())),
+                ("logit_maxabs_vs_f32", Json::num(p.logit_maxabs_vs_f32)),
+                ("nll_delta_vs_f32", Json::num(p.nll_delta_vs_f32)),
             ])
         })
         .collect();
     Json::obj(vec![
-        ("schema", Json::str("bench_native/v4")),
+        ("schema", Json::str("bench_native/v5")),
         ("threads", Json::num(threads as f64)),
         ("chunk", Json::num(chunk as f64)),
         ("artifacts", Json::Arr(arts)),
@@ -283,19 +296,21 @@ pub fn bench_native_json(
 }
 
 /// Human-readable companion of the `decode` section: recurrent decode rate,
-/// the recompute baseline, per-token flatness, and the state footprint
-/// endpoints.
+/// the recompute baseline, per-token flatness, the state footprint
+/// endpoints, and the quantized-vs-f32 quality drift.
 pub fn bench_decode_markdown(decode: &[DecodeBenchPoint]) -> String {
     let mut out = String::from(
-        "| preset | attn | tokens | recurrent tok/s | recompute tok/s | speedup | \
-         tok cost 1st→2nd half | state 1st→last |\n|---|---|---|---|---|---|---|---|\n",
+        "| preset | attn | prec | tokens | recurrent tok/s | recompute tok/s | speedup | \
+         tok cost 1st→2nd half | state 1st→last | params | Δnll vs f32 |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for p in decode {
         let _ = writeln!(
             out,
-            "| {} | {} | {} | {:.0} | {:.0} | {:.1}× | {} → {} | {} → {} ({:.1}×) |",
+            "| {} | {} | {} | {} | {:.0} | {:.0} | {:.1}× | {} → {} | {} → {} ({:.1}×) | {} | {:.4} |",
             p.preset,
             p.attn,
+            p.precision,
             p.tokens,
             p.recurrent_tok_s,
             p.recompute_tok_s,
@@ -305,6 +320,8 @@ pub fn bench_decode_markdown(decode: &[DecodeBenchPoint]) -> String {
             fmt_bytes(p.state_bytes_first as f64),
             fmt_bytes(p.state_bytes_last as f64),
             p.state_growth(),
+            fmt_bytes(p.param_bytes as f64),
+            p.nll_delta_vs_f32,
         );
     }
     out
@@ -556,7 +573,9 @@ mod tests {
         let decode = vec![DecodeBenchPoint {
             preset: "small".into(),
             attn: "ours".into(),
+            precision: "int8".into(),
             n_params: 934_016,
+            param_bytes: 1_100_000,
             tokens: 64,
             recurrent_tok_s: 4000.0,
             recompute_tok_s: 400.0,
@@ -564,10 +583,12 @@ mod tests {
             step_s_p50_second_half: 2.5e-4,
             state_bytes_first: 69_632,
             state_bytes_last: 69_632,
+            logit_maxabs_vs_f32: 0.03,
+            nll_delta_vs_f32: 0.0015,
         }];
         let text = bench_native_json(&par, &base, &lm, &opt, &decode, 4, 128);
         let v = Json::parse(&text).unwrap();
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v4"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v5"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
         let arts = v.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
@@ -592,8 +613,12 @@ mod tests {
         assert_eq!(dec[0].get("tokens").unwrap().as_usize(), Some(64));
         assert!((dec[0].get("speedup_recurrent").unwrap().as_f64().unwrap() - 10.0).abs() < 1e-9);
         assert!((dec[0].get("state_growth").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-9);
+        assert_eq!(dec[0].get("precision").unwrap().as_str(), Some("int8"));
+        assert_eq!(dec[0].get("param_bytes").unwrap().as_usize(), Some(1_100_000));
+        assert_eq!(dec[0].get("nll_delta_vs_f32").unwrap().as_f64(), Some(0.0015));
         let dmd = bench_decode_markdown(&decode);
         assert!(dmd.contains("10.0×") && dmd.contains("1.0×"), "decode markdown:\n{dmd}");
+        assert!(dmd.contains("int8") && dmd.contains("0.0015"), "decode markdown:\n{dmd}");
         let md = bench_native_markdown(&par, &base);
         assert!(md.contains("4.00×"), "markdown:\n{md}");
         let lmd = bench_lm_markdown(&lm);

@@ -2,8 +2,15 @@
 //!
 //! Format (little-endian, version-tagged):
 //!   magic "RPRCKPT1" | u32 n_tensors | per tensor:
-//!     u8 dtype (0=f32, 1=i32) | u32 rank | u64 dims[rank] | raw data
+//!     u8 dtype | u32 rank | u64 dims[rank] | raw data
 //! followed by a JSON trailer (u64 length + bytes) carrying run metadata.
+//!
+//! Dtype tags: 0 = f32, 1 = i32 (both raw LE words). Layout-v3 quantized
+//! checkpoints additionally use 2 = bf16 (u16 LE per element) and
+//! 3 = int8 (u64 n_rows | f32 scales[n_rows] LE | raw i8 data) — the raw
+//! section of a tag-3 tensor is *not* `numel · 4` bytes, which is exactly
+//! why a v2 reader hitting one fails loudly on the unknown tag instead of
+//! misparsing the stream.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -12,6 +19,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
+use crate::native::quant::{Precision, QuantBuf};
 use crate::runtime::Tensor;
 
 const MAGIC: &[u8; 8] = b"RPRCKPT1";
@@ -23,6 +31,14 @@ const MAGIC: &[u8; 8] = b"RPRCKPT1";
 /// existed parse as v1 — loading them into a v2 trainer is rejected, never
 /// silently misinterpreted.
 pub const PARAM_LAYOUT_VERSION: u32 = 2;
+
+/// Layout of a *quantized, decode-only* checkpoint (`repro quantize`
+/// output): the v2 parameter walk, params only (no optimizer moments), with
+/// the GEMM-dominant weights stored bf16/int8 (tags 2/3). Only
+/// [`QuantCheckpoint::load`] accepts it; the trainer-facing
+/// [`Checkpoint::load`] rejects the quantized tags with a pointer here, and
+/// pre-v3 readers reject them as unknown dtypes.
+pub const QUANT_PARAM_LAYOUT_VERSION: u32 = 3;
 
 /// Run metadata stored alongside the tensors.
 #[derive(Debug, Clone, PartialEq)]
@@ -179,6 +195,11 @@ impl Checkpoint {
                         .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                         .collect(),
                 )?,
+                t @ (2 | 3) => bail!(
+                    "tensor uses quantized dtype tag {t}: this is a layout-v3 \
+                     decode-only checkpoint (`repro quantize` output) — load it \
+                     through the inference session, not the full-precision path"
+                ),
                 other => bail!("unknown dtype tag {other}"),
             };
             state.push(t);
@@ -188,6 +209,213 @@ impl Checkpoint {
         f.read_exact(&mut meta_raw)?;
         let meta = CheckpointMeta::from_json(&Json::parse(std::str::from_utf8(&meta_raw)?)?)?;
         Ok(Self { meta, state })
+    }
+}
+
+/// A quantized, decode-only parameter checkpoint (layout v3): the
+/// [`PARAM_LAYOUT_VERSION`] parameter walk with the GEMM-dominant weights
+/// stored at a reduced [`Precision`]. Carries no optimizer moments — it
+/// cannot resume training, only decode.
+#[derive(Debug)]
+pub struct QuantCheckpoint {
+    /// Run metadata (`meta.layout == QUANT_PARAM_LAYOUT_VERSION`).
+    pub meta: CheckpointMeta,
+    /// Storage precision the quantized arrays were written at.
+    pub precision: Precision,
+    /// `(shape, data)` per parameter, in the model's parameter-walk order.
+    pub arrays: Vec<(Vec<usize>, QuantBuf)>,
+}
+
+impl QuantCheckpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let tmp = path.as_ref().with_extension("tmp");
+        {
+            let mut f = std::io::BufWriter::new(
+                std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?,
+            );
+            f.write_all(MAGIC)?;
+            f.write_all(&(self.arrays.len() as u32).to_le_bytes())?;
+            let mut dtypes = Vec::with_capacity(self.arrays.len());
+            for (shape, buf) in &self.arrays {
+                let numel: usize = shape.iter().product();
+                if buf.len() != numel {
+                    bail!("quantized array: shape {shape:?} vs {} elements", buf.len());
+                }
+                let tag: u8 = match buf {
+                    QuantBuf::F32(_) => 0,
+                    QuantBuf::Bf16(_) => 2,
+                    QuantBuf::Int8 { .. } => 3,
+                };
+                dtypes.push(Json::str(match tag {
+                    0 => "f32",
+                    2 => "bf16",
+                    _ => "int8",
+                }));
+                f.write_all(&[tag])?;
+                f.write_all(&(shape.len() as u32).to_le_bytes())?;
+                for &d in shape {
+                    f.write_all(&(d as u64).to_le_bytes())?;
+                }
+                match buf {
+                    QuantBuf::F32(d) => {
+                        for v in d {
+                            f.write_all(&v.to_le_bytes())?;
+                        }
+                    }
+                    QuantBuf::Bf16(d) => {
+                        for v in d {
+                            f.write_all(&v.to_le_bytes())?;
+                        }
+                    }
+                    QuantBuf::Int8 { q, scales, row } => {
+                        if scales.len() * *row != q.len() {
+                            bail!(
+                                "int8 array: {} scales × row {} vs {} codes",
+                                scales.len(),
+                                row,
+                                q.len()
+                            );
+                        }
+                        f.write_all(&(scales.len() as u64).to_le_bytes())?;
+                        for s in scales {
+                            f.write_all(&s.to_le_bytes())?;
+                        }
+                        // i8 → u8 is a bit-preserving cast
+                        for &c in q {
+                            f.write_all(&[c as u8])?;
+                        }
+                    }
+                }
+            }
+            let mut meta = self.meta.clone();
+            meta.layout = QUANT_PARAM_LAYOUT_VERSION;
+            let trailer = match meta.to_json() {
+                Json::Obj(mut m) => {
+                    m.insert("precision".to_string(), Json::str(self.precision.name()));
+                    m.insert("dtypes".to_string(), Json::Arr(dtypes));
+                    Json::Obj(m)
+                }
+                other => other,
+            };
+            let trailer = trailer.to_string().into_bytes();
+            f.write_all(&(trailer.len() as u64).to_le_bytes())?;
+            f.write_all(&trailer)?;
+        }
+        std::fs::rename(&tmp, path.as_ref())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path.as_ref())
+                .with_context(|| format!("opening {:?}", path.as_ref()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a repro checkpoint (bad magic)");
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut arrays = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut tag = [0u8; 1];
+            f.read_exact(&mut tag)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let buf = match tag[0] {
+                0 => {
+                    let mut raw = vec![0u8; numel * 4];
+                    f.read_exact(&mut raw)?;
+                    QuantBuf::F32(
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                2 => {
+                    let mut raw = vec![0u8; numel * 2];
+                    f.read_exact(&mut raw)?;
+                    QuantBuf::Bf16(
+                        raw.chunks_exact(2)
+                            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                3 => {
+                    let n_rows = read_u64(&mut f)? as usize;
+                    if n_rows == 0 || numel % n_rows != 0 {
+                        bail!("int8 tensor: {n_rows} rows do not divide {numel} elements");
+                    }
+                    let row = numel / n_rows;
+                    let mut sraw = vec![0u8; n_rows * 4];
+                    f.read_exact(&mut sraw)?;
+                    let scales = sraw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    let mut raw = vec![0u8; numel];
+                    f.read_exact(&mut raw)?;
+                    QuantBuf::Int8 {
+                        q: raw.iter().map(|&b| b as i8).collect(),
+                        scales,
+                        row,
+                    }
+                }
+                1 => bail!("quantized checkpoints never carry i32 tensors"),
+                other => bail!("unknown dtype tag {other}"),
+            };
+            arrays.push((shape, buf));
+        }
+        let meta_len = read_u64(&mut f)? as usize;
+        let mut meta_raw = vec![0u8; meta_len];
+        f.read_exact(&mut meta_raw)?;
+        let trailer = Json::parse(std::str::from_utf8(&meta_raw)?)?;
+        let meta = CheckpointMeta::from_json(&trailer)?;
+        if meta.layout != QUANT_PARAM_LAYOUT_VERSION {
+            bail!(
+                "checkpoint {:?} uses parameter layout v{}, not the quantized v{} — \
+                 load it through the full-precision path",
+                meta.artifact_tag,
+                meta.layout,
+                QUANT_PARAM_LAYOUT_VERSION
+            );
+        }
+        let precision = Precision::from_name(
+            trailer
+                .req("precision")?
+                .as_str()
+                .ok_or_else(|| anyhow!("bad precision"))?,
+        )?;
+        Ok(Self { meta, precision, arrays })
+    }
+}
+
+/// Either kind of checkpoint a path may hold, for loaders (the inference
+/// session) that accept both.
+#[derive(Debug)]
+pub enum LoadedCheckpoint {
+    Full(Checkpoint),
+    Quantized(QuantCheckpoint),
+}
+
+/// Load a checkpoint of either layout. The full-precision reader runs
+/// first (the common case; it fails fast on a quantized checkpoint's first
+/// tag-2/3 tensor), then the quantized reader. On a file neither accepts,
+/// the full reader's error is returned — it carries the
+/// bad-magic/unknown-tag diagnosis.
+pub fn load_any(path: impl AsRef<Path>) -> Result<LoadedCheckpoint> {
+    let path = path.as_ref();
+    match Checkpoint::load(path) {
+        Ok(c) => Ok(LoadedCheckpoint::Full(c)),
+        Err(full_err) => match QuantCheckpoint::load(path) {
+            Ok(q) => Ok(LoadedCheckpoint::Quantized(q)),
+            Err(_) => Err(full_err),
+        },
     }
 }
 
@@ -284,5 +512,73 @@ mod tests {
         let p = dir.join("bad.ckpt");
         std::fs::write(&p, b"definitely not a checkpoint").unwrap();
         assert!(Checkpoint::load(&p).is_err());
+        assert!(load_any(&p).is_err());
+    }
+
+    fn quant_sample() -> QuantCheckpoint {
+        let w = [0.5f32, -1.25, 3.0, 0.0, 2.0, -0.125];
+        QuantCheckpoint {
+            meta: CheckpointMeta {
+                artifact_tag: "lm_tiny_ours".into(),
+                step: 42,
+                loss: 3.25,
+                seed: 7,
+                layout: QUANT_PARAM_LAYOUT_VERSION,
+            },
+            precision: Precision::Int8,
+            arrays: vec![
+                (vec![4], QuantBuf::F32(vec![1.0, -2.0, 0.5, 4.0])),
+                (vec![2, 3], QuantBuf::from_f32(&w, 3, Precision::Int8)),
+                (vec![3, 2], QuantBuf::from_f32(&w, 2, Precision::Bf16)),
+            ],
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("quant.ckpt");
+        let ck = quant_sample();
+        ck.save(&p).unwrap();
+        let back = QuantCheckpoint::load(&p).unwrap();
+        assert_eq!(back.meta.artifact_tag, ck.meta.artifact_tag);
+        assert_eq!(back.meta.layout, QUANT_PARAM_LAYOUT_VERSION);
+        assert_eq!(back.precision, Precision::Int8);
+        assert_eq!(back.arrays, ck.arrays);
+    }
+
+    #[test]
+    fn full_reader_rejects_quantized_with_a_pointer() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("quant_reject.ckpt");
+        quant_sample().save(&p).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("quantize"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn quant_reader_rejects_full_checkpoints() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("full_reject.ckpt");
+        sample().save(&p).unwrap();
+        assert!(QuantCheckpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn load_any_tells_the_layouts_apart() {
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let pf = dir.join("any_full.ckpt");
+        let pq = dir.join("any_quant.ckpt");
+        sample().save(&pf).unwrap();
+        quant_sample().save(&pq).unwrap();
+        assert!(matches!(load_any(&pf).unwrap(), LoadedCheckpoint::Full(_)));
+        match load_any(&pq).unwrap() {
+            LoadedCheckpoint::Quantized(q) => assert_eq!(q.precision, Precision::Int8),
+            other => panic!("expected quantized, got {other:?}"),
+        }
     }
 }

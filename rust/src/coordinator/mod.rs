@@ -14,7 +14,10 @@ pub mod metrics;
 pub mod schedule;
 pub mod trainer;
 
-pub use checkpoint::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
+pub use checkpoint::{
+    load_any, Checkpoint, CheckpointMeta, LoadedCheckpoint, QuantCheckpoint,
+    PARAM_LAYOUT_VERSION, QUANT_PARAM_LAYOUT_VERSION,
+};
 pub use config::{RunConfig, TrainSection};
 pub use metrics::{MetricsLog, StepRecord};
 pub use schedule::CosineSchedule;

@@ -35,5 +35,5 @@ pub mod state;
 
 pub use sampler::{SampleMode, Sampler};
 pub use serve::{serve_loop, ServeStats};
-pub use session::{GenOutcome, GenRequest, ModelSession};
+pub use session::{quantize_checkpoint, GenOutcome, GenRequest, ModelSession, QuantizeOutcome};
 pub use state::{AttnState, DecodeState};

@@ -15,9 +15,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{Checkpoint, CheckpointMeta};
+use crate::coordinator::{load_any, CheckpointMeta, LoadedCheckpoint, QuantCheckpoint};
 use crate::data::ByteTokenizer;
-use crate::native::model::{self, AttnKind, LmConfig};
+use crate::native::model::{self, AttnKind, LmConfig, Precision, QuantModel};
 use crate::native::pool::ThreadPool;
 use crate::runtime::Tensor;
 
@@ -86,12 +86,20 @@ impl GenOutcome {
     }
 }
 
+/// The parameter set a session decodes with: full-precision tensors from a
+/// training checkpoint, or a quantized [`QuantModel`] from a layout-v3
+/// `repro quantize` artifact.
+enum SessionParams {
+    /// The first `n_param_arrays` tensors of the checkpoint state.
+    F32(Vec<Tensor>),
+    Quant(QuantModel),
+}
+
 /// A loaded checkpoint kept warm for repeated generation calls.
 pub struct ModelSession {
     cfg: LmConfig,
     meta: CheckpointMeta,
-    /// The first `n_param_arrays` tensors of the checkpoint state.
-    params: Vec<Tensor>,
+    params: SessionParams,
     tokenizer: ByteTokenizer,
     pool: ThreadPool,
 }
@@ -119,10 +127,19 @@ impl ModelSession {
     }
 
     /// Load a checkpoint onto an explicit pool (tests, thread sweeps).
+    /// Accepts both full-precision training checkpoints (layout v2) and
+    /// quantized decode-only ones (layout v3); `cfg().precision` reports
+    /// which storage the session decodes with.
     pub fn load_with_pool(ckpt_path: impl AsRef<Path>, pool: ThreadPool) -> Result<Self> {
         let path = ckpt_path.as_ref();
-        let ck = Checkpoint::load(path)
+        let loaded = load_any(path)
             .with_context(|| format!("loading checkpoint {}", path.display()))?;
+        let ck = match loaded {
+            LoadedCheckpoint::Quantized(qck) => {
+                return Self::from_quant_checkpoint(qck, pool);
+            }
+            LoadedCheckpoint::Full(ck) => ck,
+        };
         ck.meta.require_current_layout()?;
         let (preset, attn) = parse_artifact_tag(&ck.meta.artifact_tag)?;
         let cfg = LmConfig::by_preset(&preset, AttnKind::from_name(&attn)?)
@@ -152,7 +169,41 @@ impl ModelSession {
         let tokenizer = ByteTokenizer::for_artifact(cfg.vocab, ck.meta.seed)?;
         let mut state = ck.state;
         state.truncate(np); // the Adam moments are dead weight at decode time
-        Ok(Self { cfg, meta: ck.meta, params: state, tokenizer, pool })
+        Ok(Self { cfg, meta: ck.meta, params: SessionParams::F32(state), tokenizer, pool })
+    }
+
+    /// Session from a layout-v3 quantized checkpoint: same tag → preset
+    /// resolution and shape contract as the full path, then the quantized
+    /// arrays are validated into a [`QuantModel`] whose config (with
+    /// `precision` set) drives state construction and binding.
+    fn from_quant_checkpoint(qck: QuantCheckpoint, pool: ThreadPool) -> Result<Self> {
+        let (preset, attn) = parse_artifact_tag(&qck.meta.artifact_tag)?;
+        let cfg = LmConfig::by_preset(&preset, AttnKind::from_name(&attn)?)
+            .with_context(|| format!("resolving checkpoint artifact {:?}", qck.meta.artifact_tag))?;
+        let shapes = cfg.param_shapes();
+        if qck.arrays.len() != shapes.len() {
+            bail!(
+                "quantized checkpoint {:?} carries {} arrays but preset \
+                 {preset:?}/{attn:?} wants {} — the state does not match its tag",
+                qck.meta.artifact_tag,
+                qck.arrays.len(),
+                shapes.len()
+            );
+        }
+        for ((name, shape), (got, _)) in shapes.iter().zip(&qck.arrays) {
+            if got != shape {
+                bail!(
+                    "quantized checkpoint {:?}: param {name} has shape {got:?} but preset \
+                     {preset:?}/{attn:?} wants {shape:?} — the state does not match its tag",
+                    qck.meta.artifact_tag
+                );
+            }
+        }
+        let arrs = qck.arrays.into_iter().map(|(_, b)| b).collect();
+        let qm = QuantModel::from_arrays(&cfg, qck.precision, arrs)?;
+        let cfg = *qm.cfg();
+        let tokenizer = ByteTokenizer::for_artifact(cfg.vocab, qck.meta.seed)?;
+        Ok(Self { cfg, meta: qck.meta, params: SessionParams::Quant(qm), tokenizer, pool })
     }
 
     pub fn cfg(&self) -> &LmConfig {
@@ -174,7 +225,7 @@ impl ModelSession {
     /// One-line summary for startup logs.
     pub fn summary(&self) -> String {
         format!(
-            "{} @ step {} ({} params, {} layers × {} heads, n_ctx {}, vocab {})",
+            "{} @ step {} ({} params, {} layers × {} heads, n_ctx {}, vocab {}, {})",
             self.meta.artifact_tag,
             self.meta.step,
             self.cfg.n_params(),
@@ -182,6 +233,7 @@ impl ModelSession {
             self.cfg.n_head,
             self.cfg.n_ctx,
             self.cfg.vocab,
+            self.cfg.precision,
         )
     }
 
@@ -207,8 +259,14 @@ impl ModelSession {
         let mut sampler = Sampler::new(req.mode, req.seed)?;
         // bind + shape-check the parameters once; the loop below issues one
         // step per token and must not re-validate the layout every call
-        let params: Vec<&Tensor> = self.params.iter().collect();
-        let bound = model::DecodeModel::bind(&self.cfg, &params)?;
+        let params: Vec<&Tensor>;
+        let bound = match &self.params {
+            SessionParams::F32(p) => {
+                params = p.iter().collect();
+                model::DecodeModel::bind(&self.cfg, &params)?
+            }
+            SessionParams::Quant(qm) => model::DecodeModel::bind_quantized(qm)?,
+        };
         let n_seq = req.samples;
         let mut st = DecodeState::new(&self.cfg, n_seq)?;
         // one set of per-token work buffers for the whole generation — after
@@ -271,6 +329,85 @@ impl ModelSession {
             state_bytes: st.state_bytes(),
         })
     }
+}
+
+/// What `repro quantize` measures: the size shrink and a decode-fidelity
+/// probe of the quantized parameters against their f32 source.
+#[derive(Debug, Clone)]
+pub struct QuantizeOutcome {
+    pub precision: Precision,
+    /// Parameter bytes of the f32 source (params only, moments excluded).
+    pub f32_param_bytes: usize,
+    /// True stored parameter bytes after quantization (data + scales).
+    pub quant_param_bytes: usize,
+    /// Probe steps actually compared (0 = probe skipped).
+    pub check_tokens: usize,
+    /// Max |quantized − f32| over every logit of every probe step.
+    pub logit_max_abs_diff: f32,
+}
+
+/// Convert a full-precision training checkpoint into a layout-v3 quantized
+/// decode-only checkpoint, probing decode fidelity on the way: both
+/// parameter sets step through the same deterministic token walk (each with
+/// its own state and scratch) and the worst per-logit divergence is
+/// reported. Threshold enforcement is the caller's call — the CLI gates on
+/// `--max-logit-diff`, tests on their own bounds.
+pub fn quantize_checkpoint(
+    input: impl AsRef<Path>,
+    output: impl AsRef<Path>,
+    precision: Precision,
+    check_tokens: usize,
+) -> Result<QuantizeOutcome> {
+    let sess = ModelSession::load(input.as_ref())?;
+    let params = match &sess.params {
+        SessionParams::F32(p) => p,
+        SessionParams::Quant(_) => bail!(
+            "checkpoint {} is already quantized — quantize from the f32 training checkpoint",
+            input.as_ref().display()
+        ),
+    };
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let qm = QuantModel::from_params(&sess.cfg, &refs, precision)?;
+    let f32_param_bytes: usize =
+        params.iter().map(|t| t.shape().iter().product::<usize>() * 4).sum();
+
+    let mut logit_max_abs_diff = 0.0f32;
+    let steps = check_tokens.min(sess.cfg.n_ctx);
+    if steps > 0 {
+        let f32_model = model::DecodeModel::bind(&sess.cfg, &refs)?;
+        let q_model = model::DecodeModel::bind_quantized(&qm)?;
+        let mut st_f = DecodeState::new(&sess.cfg, 1)?;
+        let mut st_q = DecodeState::new(qm.cfg(), 1)?;
+        let mut sc_f = model::DecodeScratch::new();
+        let mut sc_q = model::DecodeScratch::new();
+        for i in 0..steps {
+            let tok = [((i * 31 + 7) % sess.cfg.vocab) as i32];
+            let lf = f32_model.logits_step_scratch(&tok, &mut st_f, &sess.pool, &mut sc_f)?;
+            let lq = q_model.logits_step_scratch(&tok, &mut st_q, &sess.pool, &mut sc_q)?;
+            for (a, b) in lf.iter().zip(lq) {
+                logit_max_abs_diff = logit_max_abs_diff.max((a - b).abs());
+            }
+        }
+    }
+
+    let arrays = sess
+        .cfg
+        .param_shapes()
+        .iter()
+        .zip(qm.arrays())
+        .map(|((_, shape), buf)| (shape.clone(), buf.clone()))
+        .collect();
+    let qck = QuantCheckpoint { meta: sess.meta.clone(), precision, arrays };
+    qck.save(output.as_ref())
+        .with_context(|| format!("writing quantized checkpoint {}", output.as_ref().display()))?;
+
+    Ok(QuantizeOutcome {
+        precision,
+        f32_param_bytes,
+        quant_param_bytes: qm.param_bytes(),
+        check_tokens: steps,
+        logit_max_abs_diff,
+    })
 }
 
 #[cfg(test)]

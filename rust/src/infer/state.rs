@@ -8,10 +8,16 @@
 //!   running `hd × (hd+1)` matrix `S_t = γ·S_{t-1} + φ(k_t)·[v_t, 1]ᵀ` — the
 //!   value columns plus the ones-channel normalizer row the training-time
 //!   scan uses. The footprint is **constant in the decoded length**:
-//!   O(n_seq · H · hd²) floats, full stop.
+//!   O(n_seq · H · hd²) elements, full stop.
 //! - **`Softmax`**: the per-token key/value cache, appended each step —
-//!   O(n_seq · H · hd · t) floats after `t` tokens, the linearly-growing
+//!   O(n_seq · H · hd · t) elements after `t` tokens, the linearly-growing
 //!   baseline the paper's memory comparison is made against.
+//!
+//! Both live in a [`QuantBuf`] at `cfg.precision`, so the decode state can
+//! be stored in bf16 (2 B/elem) or int8 (1 B/elem + one f32 scale per row)
+//! while the scan itself always accumulates in f32;
+//! [`state_bytes`](DecodeState::state_bytes) reports the true quantized
+//! footprint.
 //!
 //! The buffers are written by
 //! [`model::logits_step`](crate::native::model::logits_step) (the
@@ -21,53 +27,62 @@
 
 use anyhow::{bail, Result};
 
-use crate::native::model::{attn_gamma, AttnKind, LmConfig};
+use crate::native::model::{attn_gamma, AttnKind, LmConfig, Precision};
+use crate::native::quant::QuantBuf;
 
 /// Attention state of one layer (all `(seq, head)` pairs folded).
 #[derive(Debug, Clone)]
 pub enum AttnState {
     /// Running linear-attention state: `n_seq · n_head` blocks of
     /// `hd × (hd+1)` (value columns ++ normalizer column), decayed by
-    /// `gamma` each step (1.0 = undecayed `ours`).
-    Linear { s: Vec<f32>, gamma: f32 },
+    /// `gamma` each step (1.0 = undecayed `ours`). Int8 storage quantizes
+    /// per state row (`hd + 1` elements each).
+    Linear { s: QuantBuf, gamma: f32 },
     /// Growing KV cache: each step appends one `n_seq · n_head · hd` block
     /// to both `k` and `v` (token-major: block `t` holds every `(seq,
-    /// head)` row of token `t`).
-    Softmax { k: Vec<f32>, v: Vec<f32> },
+    /// head)` row of token `t`). Int8 storage quantizes per cached head row
+    /// (`hd` elements each).
+    Softmax { k: QuantBuf, v: QuantBuf },
 }
 
 impl AttnState {
-    fn new(kind: AttnKind, n_seq: usize, n_head: usize, hd: usize, n_ctx: usize) -> Self {
+    fn new(
+        kind: AttnKind,
+        prec: Precision,
+        n_seq: usize,
+        n_head: usize,
+        hd: usize,
+        n_ctx: usize,
+    ) -> Self {
         match kind {
             // Reserve the full-window KV cache up front: the per-token
-            // `extend_from_slice` in `block_step` then never reallocates, so
+            // `append_rows` in `block_step` then never reallocates, so
             // softmax decode is allocation-free per step too (the cache
             // *length* still grows linearly — `state_bytes` reports length,
             // not capacity, and the memory comparison stands).
             AttnKind::Softmax => AttnState::Softmax {
-                k: Vec::with_capacity(n_seq * n_head * hd * n_ctx),
-                v: Vec::with_capacity(n_seq * n_head * hd * n_ctx),
+                k: QuantBuf::reserved(prec, n_seq * n_head * hd * n_ctx, hd),
+                v: QuantBuf::reserved(prec, n_seq * n_head * hd * n_ctx, hd),
             },
             kind => AttnState::Linear {
-                s: vec![0.0f32; n_seq * n_head * hd * (hd + 1)],
+                s: QuantBuf::zeros(prec, n_seq * n_head * hd * (hd + 1), hd + 1),
                 gamma: attn_gamma(kind),
             },
         }
     }
 
-    /// Bytes currently held by this layer's attention state.
+    /// Bytes currently held by this layer's attention state (true stored
+    /// footprint: quantized data plus any per-row scale vectors).
     fn bytes(&self) -> usize {
         match self {
-            AttnState::Linear { s, .. } => std::mem::size_of_val(s.as_slice()),
-            AttnState::Softmax { k, v } => {
-                std::mem::size_of_val(k.as_slice()) + std::mem::size_of_val(v.as_slice())
-            }
+            AttnState::Linear { s, .. } => s.bytes(),
+            AttnState::Softmax { k, v } => k.bytes() + v.bytes(),
         }
     }
 
     fn reset(&mut self) {
         match self {
-            AttnState::Linear { s, .. } => s.iter_mut().for_each(|x| *x = 0.0),
+            AttnState::Linear { s, .. } => s.fill_zero(),
             AttnState::Softmax { k, v } => {
                 k.clear();
                 v.clear();
@@ -88,12 +103,13 @@ pub struct DecodeState {
     head_dim: usize,
     n_ctx: usize,
     attn: AttnKind,
+    precision: Precision,
     pos: usize,
 }
 
 impl DecodeState {
     /// Fresh state (position 0) for `n_seq` concurrent sequences of `cfg`'s
-    /// architecture.
+    /// architecture, stored at `cfg.precision`.
     pub fn new(cfg: &LmConfig, n_seq: usize) -> Result<Self> {
         cfg.validate()?;
         if n_seq == 0 {
@@ -101,7 +117,7 @@ impl DecodeState {
         }
         let hd = cfg.head_dim();
         let layers = (0..cfg.n_layer)
-            .map(|_| AttnState::new(cfg.attn, n_seq, cfg.n_head, hd, cfg.n_ctx))
+            .map(|_| AttnState::new(cfg.attn, cfg.precision, n_seq, cfg.n_head, hd, cfg.n_ctx))
             .collect();
         Ok(Self {
             layers,
@@ -110,33 +126,39 @@ impl DecodeState {
             head_dim: hd,
             n_ctx: cfg.n_ctx,
             attn: cfg.attn,
+            precision: cfg.precision,
             pos: 0,
         })
     }
 
     /// Guard every incremental-forward call goes through: the state must
-    /// have been built for exactly this architecture.
+    /// have been built for exactly this architecture (and storage
+    /// precision — a bf16 state fed to an f32-bound model would silently
+    /// decode garbage otherwise).
     pub fn check(&self, cfg: &LmConfig) -> Result<()> {
         if self.layers.len() != cfg.n_layer
             || self.n_head != cfg.n_head
             || self.head_dim != cfg.head_dim()
             || self.n_ctx != cfg.n_ctx
             || self.attn != cfg.attn
+            || self.precision != cfg.precision
         {
             bail!(
                 "DecodeState was built for a different architecture \
-                 ({} layers × {} heads, hd {}, n_ctx {}, {:?}) than the model \
-                 ({} layers × {} heads, hd {}, n_ctx {}, {:?})",
+                 ({} layers × {} heads, hd {}, n_ctx {}, {:?}, {}) than the model \
+                 ({} layers × {} heads, hd {}, n_ctx {}, {:?}, {})",
                 self.layers.len(),
                 self.n_head,
                 self.head_dim,
                 self.n_ctx,
                 self.attn,
+                self.precision,
                 cfg.n_layer,
                 cfg.n_head,
                 cfg.head_dim(),
                 cfg.n_ctx,
                 cfg.attn,
+                cfg.precision,
             );
         }
         Ok(())
@@ -157,6 +179,11 @@ impl DecodeState {
         self.n_ctx.saturating_sub(self.pos)
     }
 
+    /// Storage precision the attention states were built with.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     /// Mutable access to one layer's attention state (the incremental
     /// forward's write path).
     pub(crate) fn layer_mut(&mut self, layer: usize) -> &mut AttnState {
@@ -169,8 +196,9 @@ impl DecodeState {
     }
 
     /// Total bytes held by the attention states across all layers — the
-    /// decode-memory figure the bench compares across AttnKinds: constant
-    /// for the linear variants, growing linearly in `pos` for softmax.
+    /// decode-memory figure the bench compares across AttnKinds and
+    /// precisions: constant for the linear variants, growing linearly in
+    /// `pos` for softmax, and shrunk by bf16/int8 storage.
     pub fn state_bytes(&self) -> usize {
         self.layers.iter().map(AttnState::bytes).sum()
     }
@@ -203,6 +231,24 @@ mod tests {
     }
 
     #[test]
+    fn quantized_linear_state_shrinks_the_footprint() {
+        let mut cfg = LmConfig::tiny(AttnKind::Ours);
+        let f32_bytes = DecodeState::new(&cfg, 2).unwrap().state_bytes();
+
+        cfg.precision = Precision::Bf16;
+        let bf16_bytes = DecodeState::new(&cfg, 2).unwrap().state_bytes();
+        assert_eq!(bf16_bytes * 2, f32_bytes);
+
+        cfg.precision = Precision::Int8;
+        let int8_bytes = DecodeState::new(&cfg, 2).unwrap().state_bytes();
+        // 1 byte per element + one f32 scale per (hd+1)-element row
+        let hd = cfg.head_dim();
+        let elems = cfg.n_layer * 2 * cfg.n_head * hd * (hd + 1);
+        assert_eq!(int8_bytes, elems + (elems / (hd + 1)) * 4);
+        assert!(int8_bytes * 2 < f32_bytes);
+    }
+
+    #[test]
     fn softmax_state_starts_empty() {
         let cfg = LmConfig::tiny(AttnKind::Softmax);
         let st = DecodeState::new(&cfg, 2).unwrap();
@@ -221,6 +267,20 @@ mod tests {
     }
 
     #[test]
+    fn check_rejects_precision_mismatch() {
+        let cfg = LmConfig::tiny(AttnKind::Ours);
+        let mut q = cfg;
+        q.precision = Precision::Int8;
+        let st = DecodeState::new(&cfg, 1).unwrap();
+        assert!(st.check(&cfg).is_ok());
+        assert!(st.check(&q).is_err());
+        let stq = DecodeState::new(&q, 1).unwrap();
+        assert_eq!(stq.precision(), Precision::Int8);
+        assert!(stq.check(&q).is_ok());
+        assert!(stq.check(&cfg).is_err());
+    }
+
+    #[test]
     fn rejects_zero_sequences() {
         let cfg = LmConfig::tiny(AttnKind::Ours);
         assert!(DecodeState::new(&cfg, 0).is_err());
@@ -231,8 +291,8 @@ mod tests {
         let cfg = LmConfig::tiny(AttnKind::Softmax);
         let mut st = DecodeState::new(&cfg, 1).unwrap();
         if let AttnState::Softmax { k, v } = st.layer_mut(0) {
-            k.extend_from_slice(&[1.0; 8]);
-            v.extend_from_slice(&[2.0; 8]);
+            k.append_rows(&[1.0; 8]);
+            v.append_rows(&[2.0; 8]);
         }
         st.advance();
         assert!(st.state_bytes() > 0);

@@ -9,6 +9,8 @@
 //!   - `eval-tasks`    Table 2 synthetic reasoning suite
 //!   - `generate`      autoregressive decoding from a checkpoint (recurrent
 //!                     O(1)-state for ours/gated, KV cache for softmax)
+//!   - `quantize`      convert an f32 training checkpoint to a bf16/int8
+//!                     decode-only checkpoint (layout v3)
 //!   - `serve`         warm JSONL request/response loop over stdin/stdout
 //!   - `report`        summarize finished training runs
 //!   - `inspect`       list available artifacts
@@ -42,14 +44,16 @@ SUBCOMMANDS
                  [--reps 5] [--warmup 2] [--max-n 0] [--out BENCH_native.json]
                  [--lm-presets tiny,small] [--lm-attns ours,softmax]
                  [--lm-steps 6] [--opt-reps 20] [--decode-tokens 64]
+                 [--decode-precisions f32,bf16,int8]
                  measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
                  against the scalar single-thread reference, per-step LM
                  training cost/loss for each (preset, attn) pair through
                  both the in-place and the preserved rebuild optimizer
                  routes, the AdamW-update microbench (in-place vs rebuild),
-                 the decode section (recurrent vs full-recompute tokens/s
-                 plus state bytes; 0 disables), and writes the
-                 machine-readable speedup artifact
+                 the decode section (recurrent vs full-recompute tokens/s,
+                 state/param bytes, and quantized-vs-f32 quality drift per
+                 precision; 0 disables), and writes the machine-readable
+                 speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   generate       --ckpt runs/lm_tiny_ours/final.ckpt [--prompt \"the \"]
@@ -57,7 +61,15 @@ SUBCOMMANDS
                  [--top-k 0] [--seed 0] [--samples 1]
                  decodes through the constant-size recurrent state
                  (ours/gated) or the growing KV cache (softmax); stats on
-                 stderr, text on stdout
+                 stderr, text on stdout; accepts f32 and quantized
+                 checkpoints alike
+  quantize       --ckpt runs/lm_tiny_ours/final.ckpt --out q.ckpt
+                 [--precision int8|bf16] [--check-tokens 32]
+                 [--max-logit-diff 0.5]
+                 converts an f32 training checkpoint into a decode-only
+                 layout-v3 checkpoint (GEMM-dominant weights quantized,
+                 optimizer moments dropped), probes per-token logit drift
+                 against the f32 source, and fails if it exceeds the bound
   serve          --ckpt runs/lm_tiny_ours/final.ckpt [--max-new 64]
                  long-lived JSONL loop: one request object per stdin line
                  ({\"prompt\": ..., \"max_new\": ..., \"mode\": ...}), one
@@ -76,6 +88,7 @@ fn main() -> Result<()> {
         Some("bench-traffic") => cmd_bench_traffic(&args),
         Some("eval-tasks") => cmd_eval_tasks(&args),
         Some("generate") => cmd_generate(&args),
+        Some("quantize") => cmd_quantize(&args),
         Some("serve") => cmd_serve(&args),
         Some("report") => cmd_report(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -177,6 +190,7 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     let lm_steps = args.get_usize("lm-steps", 6)?;
     let opt_reps = args.get_usize("opt-reps", 20)?;
     let decode_tokens = args.get_usize("decode-tokens", 64)?;
+    let decode_precisions = split_list(args.get_or("decode-precisions", "f32,bf16,int8"));
 
     let threads = ThreadPool::env_threads();
     let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
@@ -233,17 +247,24 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     }
 
     // decode section: recurrent vs full-recompute autoregressive decoding
-    // (the inference-side memory/latency claim, per preset × attn)
+    // (the inference-side memory/latency claim, per preset × attn ×
+    // storage precision — quantized points carry their f32-oracle drift)
     let mut decode_points = Vec::new();
     if decode_tokens > 0 {
         for preset in &lm_presets {
             for attn in &lm_attns {
-                eprintln!("bench-native: decode {preset}/{attn} ({decode_tokens} tokens) …");
-                decode_points.push(repro::bench::lm::measure_decode(
-                    preset,
-                    attn,
-                    decode_tokens,
-                )?);
+                for precision in &decode_precisions {
+                    eprintln!(
+                        "bench-native: decode {preset}/{attn}/{precision} \
+                         ({decode_tokens} tokens) …"
+                    );
+                    decode_points.push(repro::bench::lm::measure_decode(
+                        preset,
+                        attn,
+                        decode_tokens,
+                        precision,
+                    )?);
+                }
             }
         }
     }
@@ -370,6 +391,47 @@ fn cmd_generate(args: &Args) -> Result<()> {
             _ => "recurrent, constant in length",
         },
     );
+    Ok(())
+}
+
+/// Offline checkpoint quantization: f32 training checkpoint in, layout-v3
+/// decode-only checkpoint out, with a fidelity probe gating the conversion.
+fn cmd_quantize(args: &Args) -> Result<()> {
+    use repro::infer::quantize_checkpoint;
+    use repro::native::model::Precision;
+
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt is required"))?;
+    let out = args.get("out").ok_or_else(|| anyhow!("--out is required"))?;
+    let precision = Precision::from_name(args.get_or("precision", "int8"))?;
+    if !precision.is_quantized() {
+        bail!("--precision must be bf16 or int8 (f32 is what the input already is)");
+    }
+    let check_tokens = args.get_usize("check-tokens", 32)?;
+    let max_logit_diff = args
+        .get_or("max-logit-diff", "0.5")
+        .parse::<f32>()
+        .map_err(|_| anyhow!("--max-logit-diff expects a number"))?;
+    let outcome = quantize_checkpoint(ckpt, out, precision, check_tokens)?;
+    eprintln!(
+        "quantized {ckpt} → {out} ({}): params {} B → {} B ({:.2}×), \
+         max |logit drift| {:.4} over {} probe tokens",
+        outcome.precision,
+        outcome.f32_param_bytes,
+        outcome.quant_param_bytes,
+        outcome.f32_param_bytes as f64 / outcome.quant_param_bytes.max(1) as f64,
+        outcome.logit_max_abs_diff,
+        outcome.check_tokens,
+    );
+    if outcome.check_tokens > 0 && !(outcome.logit_max_abs_diff <= max_logit_diff) {
+        // remove the artifact: a failed gate must not leave a checkpoint
+        // that looks valid on disk
+        let _ = std::fs::remove_file(out);
+        bail!(
+            "quantization drift gate failed: max |logit diff| {:.4} > {max_logit_diff} — \
+             try bf16, or raise --max-logit-diff if the loss is acceptable",
+            outcome.logit_max_abs_diff
+        );
+    }
     Ok(())
 }
 

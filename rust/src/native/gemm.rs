@@ -28,6 +28,7 @@
 //! the same loop shapes autovectorizing.
 
 use super::pool::ThreadPool;
+use super::quant;
 
 /// Microkernel tile height (output rows held in flight).
 pub const MR: usize = 8;
@@ -88,6 +89,72 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
     for (yv, xv) in y.iter_mut().zip(x) {
         *yv += alpha * xv;
+    }
+}
+
+// --- quantized dot / axpy (bf16 + int8 inputs, f32 accumulation) -------------
+//
+// The decode KV cache stores K/V rows in bf16 or int8; these widen each
+// element to f32 on load and accumulate in f32, so only the bytes at rest
+// shrink. Same eight-accumulator shape as `dot` so the stable build
+// autovectorizes identically.
+
+/// Dot of an f32 query row against a bf16-coded row.
+// deny_alloc
+pub fn dot_bf16(x: &[f32], y: &[u16]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = x.len() / 8;
+    for c in 0..chunks {
+        let xs = &x[c * 8..][..8];
+        let ys = &y[c * 8..][..8];
+        for l in 0..8 {
+            acc[l] += xs[l] * quant::bf16_to_f32(ys[l]);
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..x.len() {
+        s += x[i] * quant::bf16_to_f32(y[i]);
+    }
+    s
+}
+
+/// Dot of an f32 row against raw int8 codes — the caller multiplies the
+/// result by the row's scale once, outside the loop.
+// deny_alloc
+pub fn dot_i8(x: &[f32], y: &[i8]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = x.len() / 8;
+    for c in 0..chunks {
+        let xs = &x[c * 8..][..8];
+        let ys = &y[c * 8..][..8];
+        for l in 0..8 {
+            acc[l] += xs[l] * ys[l] as f32;
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..x.len() {
+        s += x[i] * y[i] as f32;
+    }
+    s
+}
+
+/// `y += alpha · bf16(x)`.
+// deny_alloc
+pub fn axpy_bf16(alpha: f32, x: &[u16], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * quant::bf16_to_f32(xv);
+    }
+}
+
+/// `y += alpha · x` for int8 codes (`alpha` carries the row scale).
+// deny_alloc
+pub fn axpy_i8(alpha: f32, x: &[i8], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv as f32;
     }
 }
 
@@ -319,6 +386,340 @@ pub fn par_gemm_tn(
     });
 }
 
+// --- quantized gemm_nn (bf16 / int8 B operand, f32 accumulation) -------------
+//
+// The decode hot path (`logits_step`) is `x[rows×k] · W[k×n]` with tiny
+// `rows` (one token per sequence) and all the traffic in `W` — exactly the
+// operand these variants store in bf16 or per-row-scaled int8. The tile
+// structure is the same 8×8 register kernel as `gemm_nn`: per `p` the B-row
+// slice is widened once into an f32 lane, then broadcast-FMA'd into the f32
+// accumulators; for int8 the per-row scale folds into the broadcast side
+// (`a[i][p] · scale[p]`), so the inner loop stays a pure widen-multiply-add.
+// `gemm_nn_bf16_ref` / `gemm_nn_i8_ref` are the scalar parity oracles.
+
+/// `out[m×n] += a[m×k] · bf16(b)[k×n]`, accumulating in f32.
+// deny_alloc
+pub fn gemm_nn_bf16(a: &[f32], b: &[u16], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    let mut i0 = 0;
+    while i0 < m {
+        let mh = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let nh = (n - j0).min(NR);
+            if mh == MR && nh == NR {
+                tile_nn_bf16_full(a, b, k, n, i0, j0, out);
+            } else {
+                tile_nn_bf16_edge(a, b, k, n, i0, j0, mh, nh, out);
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// Full `MR×NR` tile: widen one bf16 B-row slice to an f32 lane per `p`.
+#[cfg(not(feature = "simd"))]
+#[inline]
+#[allow(clippy::needless_range_loop)]
+fn tile_nn_bf16_full(a: &[f32], b: &[u16], k: usize, n: usize, i0: usize, j0: usize, out: &mut [f32]) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..][..NR];
+        let mut bw = [0.0f32; NR];
+        for jj in 0..NR {
+            bw[jj] = quant::bf16_to_f32(brow[jj]);
+        }
+        for ii in 0..MR {
+            let av = a[(i0 + ii) * k + p];
+            for jj in 0..NR {
+                acc[ii][jj] += av * bw[jj];
+            }
+        }
+    }
+    for ii in 0..MR {
+        let orow = &mut out[(i0 + ii) * n + j0..][..NR];
+        for jj in 0..NR {
+            orow[jj] += acc[ii][jj];
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+#[allow(clippy::needless_range_loop)]
+fn tile_nn_bf16_full(a: &[f32], b: &[u16], k: usize, n: usize, i0: usize, j0: usize, out: &mut [f32]) {
+    use std::simd::f32x8;
+    use std::simd::StdFloat;
+    let mut acc = [f32x8::splat(0.0); MR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..][..NR];
+        let mut bw = [0.0f32; NR];
+        for jj in 0..NR {
+            bw[jj] = quant::bf16_to_f32(brow[jj]);
+        }
+        let bv = f32x8::from_array(bw);
+        for ii in 0..MR {
+            let av = f32x8::splat(a[(i0 + ii) * k + p]);
+            acc[ii] = av.mul_add(bv, acc[ii]);
+        }
+    }
+    for ii in 0..MR {
+        let orow = &mut out[(i0 + ii) * n + j0..][..NR];
+        let cur = f32x8::from_slice(orow) + acc[ii];
+        cur.copy_to_slice(orow);
+    }
+}
+
+/// Edge tile of [`gemm_nn_bf16`] (`mh ≤ MR`, `nh ≤ NR` at runtime).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tile_nn_bf16_edge(
+    a: &[f32],
+    b: &[u16],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    mh: usize,
+    nh: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [0.0f32; MR * NR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..][..nh];
+        for ii in 0..mh {
+            let av = a[(i0 + ii) * k + p];
+            let arow = &mut acc[ii * NR..][..nh];
+            for (c, &bv) in arow.iter_mut().zip(brow) {
+                *c += av * quant::bf16_to_f32(bv);
+            }
+        }
+    }
+    for ii in 0..mh {
+        let orow = &mut out[(i0 + ii) * n + j0..][..nh];
+        for (o, c) in orow.iter_mut().zip(&acc[ii * NR..][..nh]) {
+            *o += c;
+        }
+    }
+}
+
+/// `out[m×n] += a[m×k] · (i8(b) ⊙ scales)[k×n]`: `b` holds int8 codes row-
+/// scaled by `scales[p]` (one f32 per B row, `scales.len() ≥ k`), accumulated
+/// in f32. The scale folds into the broadcast `a` element, so the inner loop
+/// is a pure widen-multiply-add.
+// deny_alloc
+pub fn gemm_nn_i8(
+    a: &[f32],
+    b: &[i8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    debug_assert!(scales.len() >= k);
+    let mut i0 = 0;
+    while i0 < m {
+        let mh = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let nh = (n - j0).min(NR);
+            if mh == MR && nh == NR {
+                tile_nn_i8_full(a, b, scales, k, n, i0, j0, out);
+            } else {
+                tile_nn_i8_edge(a, b, scales, k, n, i0, j0, mh, nh, out);
+            }
+            j0 += NR;
+        }
+        i0 += MR;
+    }
+}
+
+/// Full `MR×NR` tile: per `p`, scale-folded broadcast × widened i8 B-row.
+#[cfg(not(feature = "simd"))]
+#[inline]
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+fn tile_nn_i8_full(
+    a: &[f32],
+    b: &[i8],
+    scales: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..][..NR];
+        let mut bw = [0.0f32; NR];
+        for jj in 0..NR {
+            bw[jj] = brow[jj] as f32;
+        }
+        let s = scales[p];
+        for ii in 0..MR {
+            let av = a[(i0 + ii) * k + p] * s;
+            for jj in 0..NR {
+                acc[ii][jj] += av * bw[jj];
+            }
+        }
+    }
+    for ii in 0..MR {
+        let orow = &mut out[(i0 + ii) * n + j0..][..NR];
+        for jj in 0..NR {
+            orow[jj] += acc[ii][jj];
+        }
+    }
+}
+
+#[cfg(feature = "simd")]
+#[inline]
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+fn tile_nn_i8_full(
+    a: &[f32],
+    b: &[i8],
+    scales: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    out: &mut [f32],
+) {
+    use std::simd::f32x8;
+    use std::simd::StdFloat;
+    let mut acc = [f32x8::splat(0.0); MR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..][..NR];
+        let mut bw = [0.0f32; NR];
+        for jj in 0..NR {
+            bw[jj] = brow[jj] as f32;
+        }
+        let bv = f32x8::from_array(bw);
+        let s = scales[p];
+        for ii in 0..MR {
+            let av = f32x8::splat(a[(i0 + ii) * k + p] * s);
+            acc[ii] = av.mul_add(bv, acc[ii]);
+        }
+    }
+    for ii in 0..MR {
+        let orow = &mut out[(i0 + ii) * n + j0..][..NR];
+        let cur = f32x8::from_slice(orow) + acc[ii];
+        cur.copy_to_slice(orow);
+    }
+}
+
+/// Edge tile of [`gemm_nn_i8`] (`mh ≤ MR`, `nh ≤ NR` at runtime).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn tile_nn_i8_edge(
+    a: &[f32],
+    b: &[i8],
+    scales: &[f32],
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+    mh: usize,
+    nh: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [0.0f32; MR * NR];
+    for p in 0..k {
+        let brow = &b[p * n + j0..][..nh];
+        let s = scales[p];
+        for ii in 0..mh {
+            let av = a[(i0 + ii) * k + p] * s;
+            let arow = &mut acc[ii * NR..][..nh];
+            for (c, &bv) in arow.iter_mut().zip(brow) {
+                *c += av * bv as f32;
+            }
+        }
+    }
+    for ii in 0..mh {
+        let orow = &mut out[(i0 + ii) * n + j0..][..nh];
+        for (o, c) in orow.iter_mut().zip(&acc[ii * NR..][..nh]) {
+            *o += c;
+        }
+    }
+}
+
+/// Scalar reference twin of [`gemm_nn_bf16`] — the naive triple loop, kept
+/// (non-test) as the parity oracle the tiled kernel is tested against.
+pub fn gemm_nn_bf16_ref(a: &[f32], b: &[u16], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            for j in 0..n {
+                out[i * n + j] += av * quant::bf16_to_f32(b[p * n + j]);
+            }
+        }
+    }
+}
+
+/// Scalar reference twin of [`gemm_nn_i8`].
+pub fn gemm_nn_i8_ref(
+    a: &[f32],
+    b: &[i8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && out.len() >= m * n);
+    debug_assert!(scales.len() >= k);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] * scales[p];
+            for j in 0..n {
+                out[i * n + j] += av * b[p * n + j] as f32;
+            }
+        }
+    }
+}
+
+/// [`gemm_nn_bf16`] with output rows striped across the pool.
+pub fn par_gemm_nn_bf16(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[u16],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if pool.threads() <= 1 || m * k * n < PAR_MIN_FLOPS {
+        return gemm_nn_bf16(a, b, m, k, n, out);
+    }
+    pool.run_stripes(&mut out[..m * n], n, |r0, slab| {
+        let rows = slab.len() / n;
+        gemm_nn_bf16(&a[r0 * k..][..rows * k], b, rows, k, n, slab);
+    });
+}
+
+/// [`gemm_nn_i8`] with output rows striped across the pool.
+pub fn par_gemm_nn_i8(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[i8],
+    scales: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    if pool.threads() <= 1 || m * k * n < PAR_MIN_FLOPS {
+        return gemm_nn_i8(a, b, scales, m, k, n, out);
+    }
+    pool.run_stripes(&mut out[..m * n], n, |r0, slab| {
+        let rows = slab.len() / n;
+        gemm_nn_i8(&a[r0 * k..][..rows * k], b, scales, rows, k, n, slab);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -450,6 +851,125 @@ mod tests {
         axpy(2.5, &x, &mut z);
         for i in 0..z.len() {
             assert!((z[i] - (y[i] + 2.5 * x[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bf16_nn_matches_scalar_reference_incl_edges() {
+        for (m, k, n) in [(1, 1, 1), (8, 8, 8), (13, 7, 9), (33, 20, 17), (16, 64, 24)] {
+            let a = randn(m * k, 21);
+            let bq: Vec<u16> =
+                randn(k * n, 22).iter().map(|&x| quant::f32_to_bf16(x)).collect();
+            let init = randn(m * n, 23); // accumulate onto non-zero init
+            let mut out = init.clone();
+            let mut want = init.clone();
+            gemm_nn_bf16(&a, &bq, m, k, n, &mut out);
+            gemm_nn_bf16_ref(&a, &bq, m, k, n, &mut want);
+            assert!(max_abs_diff(&out, &want) < 1e-4, "bf16 nn {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn i8_nn_matches_scalar_reference_incl_edges() {
+        for (m, k, n) in [(1, 1, 1), (8, 8, 8), (13, 7, 9), (33, 20, 17), (16, 64, 24)] {
+            let a = randn(m * k, 24);
+            let bf = randn(k * n, 25);
+            let mut bq = vec![0i8; k * n];
+            let mut scales = vec![0.0f32; k];
+            for p in 0..k {
+                scales[p] = quant::quantize_row_i8(&bf[p * n..][..n], &mut bq[p * n..][..n]);
+            }
+            let init = randn(m * n, 26);
+            let mut out = init.clone();
+            let mut want = init.clone();
+            gemm_nn_i8(&a, &bq, &scales, m, k, n, &mut out);
+            gemm_nn_i8_ref(&a, &bq, &scales, m, k, n, &mut want);
+            assert!(max_abs_diff(&out, &want) < 1e-4, "i8 nn {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn quantized_nn_tracks_the_f32_product_within_format_error() {
+        // not a bit-parity check (that is vs the _ref twins) — a sanity bound
+        // that the stored formats stay close to the f32 product
+        let (m, k, n) = (5, 40, 24);
+        let a = randn(m * k, 27);
+        let bf = randn(k * n, 28);
+        let mut f32_out = vec![0.0f32; m * n];
+        gemm_nn(&a, &bf, m, k, n, &mut f32_out);
+
+        let bq16: Vec<u16> = bf.iter().map(|&x| quant::f32_to_bf16(x)).collect();
+        let mut b16_out = vec![0.0f32; m * n];
+        gemm_nn_bf16(&a, &bq16, m, k, n, &mut b16_out);
+        // bf16 keeps 8 mantissa bits: ~0.4% relative per element
+        assert!(max_abs_diff(&f32_out, &b16_out) < 0.05 * k as f32 / 8.0);
+
+        let mut bq8 = vec![0i8; k * n];
+        let mut scales = vec![0.0f32; k];
+        for p in 0..k {
+            scales[p] = quant::quantize_row_i8(&bf[p * n..][..n], &mut bq8[p * n..][..n]);
+        }
+        let mut b8_out = vec![0.0f32; m * n];
+        gemm_nn_i8(&a, &bq8, &scales, m, k, n, &mut b8_out);
+        let max_scale = scales.iter().fold(0.0f32, |mx, &s| if s > mx { s } else { mx });
+        // per-element error ≤ scale/2, |a| is O(1) randn: bound by k·scale
+        assert!(max_abs_diff(&f32_out, &b8_out) < k as f32 * max_scale);
+    }
+
+    #[test]
+    fn quantized_parallel_wrappers_match_single_thread() {
+        let (m, k, n) = (65, 48, 33);
+        let a = randn(m * k, 29);
+        let bf = randn(k * n, 30);
+        let bq16: Vec<u16> = bf.iter().map(|&x| quant::f32_to_bf16(x)).collect();
+        let mut bq8 = vec![0i8; k * n];
+        let mut scales = vec![0.0f32; k];
+        for p in 0..k {
+            scales[p] = quant::quantize_row_i8(&bf[p * n..][..n], &mut bq8[p * n..][..n]);
+        }
+        let pool = ThreadPool::new(4);
+        let mut seq = vec![0.0f32; m * n];
+        let mut par = vec![0.0f32; m * n];
+        gemm_nn_bf16(&a, &bq16, m, k, n, &mut seq);
+        pool.run_stripes(&mut par, n, |r0, slab| {
+            let rows = slab.len() / n;
+            gemm_nn_bf16(&a[r0 * k..][..rows * k], &bq16, rows, k, n, slab);
+        });
+        assert!(max_abs_diff(&seq, &par) < 1e-5, "bf16 par");
+
+        let mut seq = vec![0.0f32; m * n];
+        let mut par = vec![0.0f32; m * n];
+        gemm_nn_i8(&a, &bq8, &scales, m, k, n, &mut seq);
+        pool.run_stripes(&mut par, n, |r0, slab| {
+            let rows = slab.len() / n;
+            gemm_nn_i8(&a[r0 * k..][..rows * k], &bq8, &scales, rows, k, n, slab);
+        });
+        assert!(max_abs_diff(&seq, &par) < 1e-5, "i8 par");
+    }
+
+    #[test]
+    fn quantized_dot_and_axpy_match_widened_f32() {
+        let x = randn(37, 31);
+        let y = randn(37, 32);
+        let y16: Vec<u16> = y.iter().map(|&v| quant::f32_to_bf16(v)).collect();
+        let y_wide: Vec<f32> = y16.iter().map(|&b| quant::bf16_to_f32(b)).collect();
+        let want: f32 = x.iter().zip(&y_wide).map(|(a, b)| a * b).sum();
+        assert!((dot_bf16(&x, &y16) - want).abs() < 1e-4 * (1.0 + want.abs()));
+        let mut z = vec![0.0f32; 37];
+        axpy_bf16(1.5, &y16, &mut z);
+        for i in 0..z.len() {
+            assert!((z[i] - 1.5 * y_wide[i]).abs() < 1e-6);
+        }
+
+        let mut q = vec![0i8; 37];
+        let scale = quant::quantize_row_i8(&y, &mut q);
+        let q_wide: Vec<f32> = q.iter().map(|&v| v as f32).collect();
+        let want: f32 = x.iter().zip(&q_wide).map(|(a, b)| a * b).sum();
+        assert!((dot_i8(&x, &q) - want).abs() < 1e-3 * (1.0 + want.abs()));
+        let mut z = vec![0.0f32; 37];
+        axpy_i8(scale, &q, &mut z);
+        for i in 0..z.len() {
+            assert!((z[i] - scale * q_wide[i]).abs() < 1e-6);
         }
     }
 }

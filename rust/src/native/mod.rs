@@ -25,6 +25,7 @@ pub mod gemm;
 pub mod kernels;
 pub mod model;
 pub mod pool;
+pub mod quant;
 
 use anyhow::{anyhow, bail, Result};
 

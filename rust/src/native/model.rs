@@ -49,6 +49,9 @@ use crate::runtime::Tensor;
 use super::gemm;
 use super::kernels::{la_scan_bwd, la_scan_fwd, softmax_bwd, softmax_fwd, LayerShape};
 use super::pool::ThreadPool;
+use super::quant::{self, QuantBuf};
+
+pub use super::quant::Precision;
 
 /// Normalizer floor for the linear-attention denominator.
 const EPS: f32 = 1e-6;
@@ -108,6 +111,12 @@ pub struct LmConfig {
     /// Global gradient-norm clip threshold; gradients are rescaled when the
     /// global L2 norm exceeds it. 0 disables.
     pub clip_norm: f64,
+    /// Storage precision of the *decode* path: the GEMM-dominant weight
+    /// blocks (attention projections, MLP, unembedding) and the per-session
+    /// decode state (recurrent `S` matrices / KV cache). Training always
+    /// runs f32; embeddings, LayerNorm affines and biases stay f32 at every
+    /// setting. Compute accumulates in f32 regardless.
+    pub precision: Precision,
 }
 
 impl LmConfig {
@@ -130,6 +139,7 @@ impl LmConfig {
             total_steps: 400,
             weight_decay: 0.01,
             clip_norm: 1.0,
+            precision: Precision::F32,
         }
     }
 
@@ -153,6 +163,7 @@ impl LmConfig {
             total_steps: 1000,
             weight_decay: 0.01,
             clip_norm: 1.0,
+            precision: Precision::F32,
         }
     }
 
@@ -176,6 +187,7 @@ impl LmConfig {
             total_steps: 2000,
             weight_decay: 0.01,
             clip_norm: 1.0,
+            precision: Precision::F32,
         }
     }
 
@@ -200,6 +212,7 @@ impl LmConfig {
             total_steps: 400,
             weight_decay: 0.0,
             clip_norm: 0.0,
+            precision: Precision::F32,
         }
     }
 
@@ -424,6 +437,189 @@ impl<'a> P<'a> {
     }
 }
 
+// --- decode-side parameter views (any storage precision) ---------------------
+
+/// One decode parameter array at its storage precision. The f32 variant is
+/// a plain borrow (the bit-exact baseline path); the quantized variants
+/// borrow a [`QuantModel`] block and are consumed by the widening GEMM
+/// microkernels.
+#[derive(Clone, Copy)]
+pub(crate) enum WView<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    Int8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+/// Decode twin of [`P`]: the same shape-checked, bind-once parameter walk,
+/// but each array is a [`WView`] so the GEMM-dominant weights can live in
+/// bf16/int8. Embeddings, LayerNorm affines and biases are always f32 (the
+/// construction paths guarantee it), which is what [`Self::at`] relies on.
+struct DecodeP<'a> {
+    arrs: Vec<WView<'a>>,
+    idx: ParamIdx,
+}
+
+impl<'a> DecodeP<'a> {
+    /// All-f32 views over full-precision tensors — identical binding (and
+    /// identical downstream arithmetic) to the pre-quantization decode path.
+    fn from_f32(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
+        let p = P::bind(cfg, params)?;
+        Ok(Self { arrs: p.arrs.iter().map(|a| WView::F32(a)).collect(), idx: p.idx })
+    }
+
+    /// Views over a quantized parameter set (shape/row-checked per array).
+    fn from_quant(cfg: &LmConfig, qm: &'a QuantModel) -> Result<Self> {
+        let shapes = cfg.param_shapes();
+        if qm.arrs.len() != shapes.len() {
+            bail!("expected {} parameter arrays, got {}", shapes.len(), qm.arrs.len());
+        }
+        let mut arrs = Vec::with_capacity(shapes.len());
+        for ((name, shape), buf) in shapes.iter().zip(&qm.arrs) {
+            let numel: usize = shape.iter().product();
+            if buf.len() != numel {
+                bail!("param {name}: expected {numel} elements, got {}", buf.len());
+            }
+            arrs.push(match buf {
+                QuantBuf::F32(d) => WView::F32(d),
+                QuantBuf::Bf16(d) => {
+                    if !quantized_weight(name) {
+                        bail!("param {name} must stay f32 (got bf16)");
+                    }
+                    WView::Bf16(d)
+                }
+                QuantBuf::Int8 { q, scales, row } => {
+                    if !quantized_weight(name) {
+                        bail!("param {name} must stay f32 (got int8)");
+                    }
+                    let want_row = *shape.last().unwrap_or(&1);
+                    if *row != want_row {
+                        bail!("param {name}: int8 row {row} != last dim {want_row}");
+                    }
+                    WView::Int8 { q, scales }
+                }
+            });
+        }
+        Ok(Self { arrs, idx: cfg.param_idx() })
+    }
+
+    /// The f32 slice of a parameter that is always stored full-precision
+    /// (embeddings, LayerNorm affines, biases).
+    fn at(&self, i: usize) -> &'a [f32] {
+        match self.arrs[i] {
+            WView::F32(d) => d,
+            // construction rejects quantized storage for these arrays
+            _ => unreachable!("non-f32 storage for an always-f32 parameter"),
+        }
+    }
+
+    /// The storage-precision view of a (possibly quantized) weight block.
+    fn w(&self, i: usize) -> WView<'a> {
+        self.arrs[i]
+    }
+}
+
+/// True for the parameter arrays the [`Precision`] knob quantizes: the
+/// GEMM-dominant weights of the decode hot path (attention projections, MLP
+/// matrices, unembedding). Embeddings (row-gather, negligible traffic),
+/// LayerNorm affines and biases stay f32.
+fn quantized_weight(name: &str) -> bool {
+    let last = name.rsplit('.').next().unwrap_or(name);
+    matches!(last, "wq" | "wk" | "wv" | "wo" | "w1" | "w2" | "wu")
+}
+
+/// The full parameter set of one LM at a storage [`Precision`]: quantized
+/// blocks for the decode-dominant weights, f32 for everything else. This is
+/// what a layout-v3 checkpoint stores and what [`DecodeModel::bind_quantized`]
+/// binds — the owning counterpart of the borrowed [`WView`]s.
+#[derive(Debug, Clone)]
+pub struct QuantModel {
+    cfg: LmConfig,
+    arrs: Vec<QuantBuf>,
+}
+
+impl QuantModel {
+    /// Quantize a full-precision parameter set offline (`repro quantize`,
+    /// the bench's on-the-fly comparison points). `cfg.precision` of the
+    /// stored config is forced to `precision` so downstream state
+    /// construction agrees with the weights.
+    pub fn from_params(cfg: &LmConfig, params: &[&Tensor], precision: Precision) -> Result<Self> {
+        let shapes = cfg.param_shapes();
+        if params.len() < shapes.len() {
+            bail!("expected {} parameter arrays, got {}", shapes.len(), params.len());
+        }
+        let mut arrs = Vec::with_capacity(shapes.len());
+        for ((name, shape), t) in shapes.iter().zip(params) {
+            if t.shape() != shape.as_slice() {
+                bail!("param {name}: expected shape {shape:?}, got {:?}", t.shape());
+            }
+            let data = t.as_f32()?;
+            let row = *shape.last().unwrap_or(&1);
+            let buf = if quantized_weight(name) {
+                QuantBuf::from_f32(data, row, precision)
+            } else {
+                QuantBuf::F32(data.to_vec())
+            };
+            arrs.push(buf);
+        }
+        let mut cfg = *cfg;
+        cfg.precision = precision;
+        Ok(Self { cfg, arrs })
+    }
+
+    /// Rebuild from deserialized arrays (the layout-v3 checkpoint load
+    /// path). Array order is the [`LmConfig::param_shapes`] walk; every
+    /// array is length- and storage-checked.
+    pub fn from_arrays(cfg: &LmConfig, precision: Precision, arrs: Vec<QuantBuf>) -> Result<Self> {
+        let mut cfg = *cfg;
+        cfg.precision = precision;
+        let shapes = cfg.param_shapes();
+        if arrs.len() != shapes.len() {
+            bail!("expected {} parameter arrays, got {}", shapes.len(), arrs.len());
+        }
+        for ((name, shape), buf) in shapes.iter().zip(&arrs) {
+            let numel: usize = shape.iter().product();
+            if buf.len() != numel {
+                bail!("param {name}: expected {numel} elements, got {}", buf.len());
+            }
+            if quantized_weight(name) {
+                if buf.precision() != precision {
+                    bail!(
+                        "param {name}: stored as {}, checkpoint precision is {}",
+                        buf.precision(),
+                        precision
+                    );
+                }
+            } else if buf.precision() != Precision::F32 {
+                bail!("param {name} must stay f32 (got {})", buf.precision());
+            }
+        }
+        let qm = Self { cfg, arrs };
+        // reuse the view construction for the remaining structural checks
+        DecodeP::from_quant(&qm.cfg, &qm)?;
+        Ok(qm)
+    }
+
+    /// The model config, with `precision` set to this parameter set's
+    /// storage precision.
+    pub fn cfg(&self) -> &LmConfig {
+        &self.cfg
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.cfg.precision
+    }
+
+    /// True stored parameter footprint in bytes (data + scale vectors).
+    pub fn param_bytes(&self) -> usize {
+        self.arrs.iter().map(|b| b.bytes()).sum()
+    }
+
+    /// The stored arrays, in [`LmConfig::param_shapes`] walk order.
+    pub fn arrays(&self) -> &[QuantBuf] {
+        &self.arrs
+    }
+}
+
 // --- dense helpers (row-major, accumulate into `out`) -----------------------
 //
 // Thin aliases over the tiled [`gemm`] microkernels, parallel across output
@@ -440,6 +636,28 @@ fn matmul(
     out: &mut [f32],
 ) {
     gemm::par_gemm_nn(pool, x, w, rows, cin, cout, out);
+}
+
+/// out[r,j] += x[r,c] · w[c,j] with `w` at its storage precision. The f32
+/// arm is the same call as [`matmul`] — bit-exact with the pre-quantization
+/// path — while the bf16/int8 arms widen to f32 accumulators inside the
+/// tiled microkernels.
+fn matmul_q(
+    pool: &ThreadPool,
+    x: &[f32],
+    w: WView<'_>,
+    rows: usize,
+    cin: usize,
+    cout: usize,
+    out: &mut [f32],
+) {
+    match w {
+        WView::F32(w) => gemm::par_gemm_nn(pool, x, w, rows, cin, cout, out),
+        WView::Bf16(w) => gemm::par_gemm_nn_bf16(pool, x, w, rows, cin, cout, out),
+        WView::Int8 { q, scales } => {
+            gemm::par_gemm_nn_i8(pool, x, q, scales, rows, cin, cout, out)
+        }
+    }
 }
 
 /// dx[r,c] += dout[r,j] · w[c,j]
@@ -1000,6 +1218,9 @@ pub struct DecodeScratch {
     gact: Vec<f32>,
     /// Softmax-variant attention scores, one `n_ctx` window per (seq, head).
     scores: Vec<f32>,
+    /// f32 staging for quantized linear-attention state: one `hd·(hd+1)`
+    /// window per (seq, head) task, dequantized in, requantized out.
+    sdeq: Vec<f32>,
     xf: Vec<f32>,
     logits: Vec<f32>,
 }
@@ -1035,6 +1256,7 @@ impl DecodeScratch {
         self.m1.resize(ns * f, 0.0);
         self.gact.resize(ns * f, 0.0);
         self.scores.resize(n_sh * cfg.n_ctx, 0.0);
+        self.sdeq.resize(n_sh * hd * (hd + 1), 0.0);
         self.xf.resize(ns * d, 0.0);
         self.logits.resize(ns * cfg.vocab, 0.0);
     }
@@ -1047,12 +1269,19 @@ impl DecodeScratch {
 /// validation) every token is pure overhead. Bind once, step many times.
 pub struct DecodeModel<'a> {
     cfg: LmConfig,
-    p: P<'a>,
+    p: DecodeP<'a>,
 }
 
 impl<'a> DecodeModel<'a> {
     pub fn bind(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
-        Ok(Self { cfg: *cfg, p: P::bind(cfg, params)? })
+        Ok(Self { cfg: *cfg, p: DecodeP::from_f32(cfg, params)? })
+    }
+
+    /// Bind a quantized parameter set. The session config comes from the
+    /// [`QuantModel`] itself so `cfg.precision` always matches the weights
+    /// (and the [`DecodeState`]s built from it).
+    pub fn bind_quantized(qm: &'a QuantModel) -> Result<Self> {
+        Ok(Self { cfg: qm.cfg, p: DecodeP::from_quant(&qm.cfg, qm)? })
     }
 
     /// One incremental step producing next-token logits (`n_seq × vocab`).
@@ -1167,7 +1396,7 @@ impl<'a> DecodeModel<'a> {
         for r in 0..ns {
             sc.logits[r * v..][..v].copy_from_slice(bu);
         }
-        matmul(pool, &sc.xf, p.at(p.idx.wu), ns, d, v, &mut sc.logits);
+        matmul_q(pool, &sc.xf, p.w(p.idx.wu), ns, d, v, &mut sc.logits);
         Ok(Some(&sc.logits))
     }
 }
@@ -1183,7 +1412,7 @@ impl<'a> DecodeModel<'a> {
 #[allow(clippy::too_many_arguments)]
 fn block_step(
     cfg: &LmConfig,
-    p: &P,
+    p: &DecodeP,
     bi: &BlockIdx,
     h: &mut [f32],
     ls: &mut AttnState,
@@ -1204,9 +1433,9 @@ fn block_step(
     sc.qp.fill(0.0);
     sc.kp.fill(0.0);
     sc.vp.fill(0.0);
-    matmul(pool, &sc.x1, p.at(bi.wq), ns, d, d, &mut sc.qp);
-    matmul(pool, &sc.x1, p.at(bi.wq + 1), ns, d, d, &mut sc.kp);
-    matmul(pool, &sc.x1, p.at(bi.wq + 2), ns, d, d, &mut sc.vp);
+    matmul_q(pool, &sc.x1, p.w(bi.wq), ns, d, d, &mut sc.qp);
+    matmul_q(pool, &sc.x1, p.w(bi.wq + 1), ns, d, d, &mut sc.kp);
+    matmul_q(pool, &sc.x1, p.w(bi.wq + 2), ns, d, d, &mut sc.vp);
     split_heads_into(&sc.qp, ns, 1, nh, hd, &mut sc.qh);
     split_heads_into(&sc.kp, ns, 1, nh, hd, &mut sc.kh);
     split_heads_into(&sc.vp, ns, 1, nh, hd, &mut sc.vh);
@@ -1229,40 +1458,117 @@ fn block_step(
             let (fq, fk, vext) = (&sc.fq[..], &sc.fk[..], &sc.vext[..]);
             let gamma = *gamma;
             let sd = hd * (hd + 1);
-            // one (seq, head) state block per pool task — disjoint windows
-            let sp = super::pool::SliceParts::new(s);
             let ap = super::pool::SliceParts::new(&mut sc.ah);
             let up = super::pool::SliceParts::new(&mut sc.u);
-            pool.run(n_sh, |i| {
-                // SAFETY: task `i` touches windows `i` of `s`/`ah`/`u` only.
-                let (sw, aw, uw) = unsafe {
-                    (sp.window(i * sd, sd), ap.window(i * hd, hd), up.window(i * (hd + 1), hd + 1))
-                };
-                let fqr = &fq[i * hd..][..hd];
-                let fkr = &fk[i * hd..][..hd];
-                let vr = &vext[i * (hd + 1)..][..hd + 1];
-                // S ← γ·S + φ(k)·[v, 1]ᵀ   (same order as the training scan)
-                if gamma != 1.0 {
-                    for x in sw.iter_mut() {
-                        *x *= gamma;
-                    }
+            // one (seq, head) state block per pool task — disjoint windows.
+            // The f32 arm runs the scan on the stored state directly
+            // (statement-identical to the pre-quantization path); the
+            // bf16/int8 arms dequantize the block into its `sdeq` window,
+            // run the same f32 scan, then requantize in place.
+            match s {
+                QuantBuf::F32(data) => {
+                    let sp = super::pool::SliceParts::new(data);
+                    pool.run(n_sh, |i| {
+                        // SAFETY: task `i` touches windows `i` of
+                        // `s`/`ah`/`u` only.
+                        let (sw, aw, uw) = unsafe {
+                            (
+                                sp.window(i * sd, sd),
+                                ap.window(i * hd, hd),
+                                up.window(i * (hd + 1), hd + 1),
+                            )
+                        };
+                        linear_state_task(
+                            sw,
+                            &fq[i * hd..][..hd],
+                            &fk[i * hd..][..hd],
+                            &vext[i * (hd + 1)..][..hd + 1],
+                            aw,
+                            uw,
+                            gamma,
+                            hd,
+                        );
+                    });
                 }
-                for (row, srow) in sw.chunks_exact_mut(hd + 1).enumerate() {
-                    gemm::axpy(fkr[row], vr, srow);
+                QuantBuf::Bf16(data) => {
+                    let sp = super::pool::SliceParts::new(data);
+                    let dp = super::pool::SliceParts::new(&mut sc.sdeq);
+                    pool.run(n_sh, |i| {
+                        // SAFETY: task `i` touches windows `i` of
+                        // `s`/`sdeq`/`ah`/`u` only.
+                        let (sw, dw, aw, uw) = unsafe {
+                            (
+                                sp.window(i * sd, sd),
+                                dp.window(i * sd, sd),
+                                ap.window(i * hd, hd),
+                                up.window(i * (hd + 1), hd + 1),
+                            )
+                        };
+                        for (o, &b) in dw.iter_mut().zip(sw.iter()) {
+                            *o = quant::bf16_to_f32(b);
+                        }
+                        linear_state_task(
+                            dw,
+                            &fq[i * hd..][..hd],
+                            &fk[i * hd..][..hd],
+                            &vext[i * (hd + 1)..][..hd + 1],
+                            aw,
+                            uw,
+                            gamma,
+                            hd,
+                        );
+                        for (o, &x) in sw.iter_mut().zip(dw.iter()) {
+                            *o = quant::f32_to_bf16(x);
+                        }
+                    });
                 }
-                // u = Sᵀ·φ(q), then divide by the normalizer channel
-                for (row, srow) in sw.chunks_exact(hd + 1).enumerate() {
-                    gemm::axpy(fqr[row], srow, uw);
+                QuantBuf::Int8 { q, scales, .. } => {
+                    let sp = super::pool::SliceParts::new(q);
+                    let scl = super::pool::SliceParts::new(scales);
+                    let dp = super::pool::SliceParts::new(&mut sc.sdeq);
+                    pool.run(n_sh, |i| {
+                        // SAFETY: task `i` touches windows `i` of
+                        // `s`/`scales`/`sdeq`/`ah`/`u` only.
+                        let (sw, scw, dw, aw, uw) = unsafe {
+                            (
+                                sp.window(i * sd, sd),
+                                scl.window(i * hd, hd),
+                                dp.window(i * sd, sd),
+                                ap.window(i * hd, hd),
+                                up.window(i * (hd + 1), hd + 1),
+                            )
+                        };
+                        for (r, (qrow, drow)) in sw
+                            .chunks_exact(hd + 1)
+                            .zip(dw.chunks_exact_mut(hd + 1))
+                            .enumerate()
+                        {
+                            quant::dequantize_row_i8(qrow, scw[r], drow);
+                        }
+                        linear_state_task(
+                            dw,
+                            &fq[i * hd..][..hd],
+                            &fk[i * hd..][..hd],
+                            &vext[i * (hd + 1)..][..hd + 1],
+                            aw,
+                            uw,
+                            gamma,
+                            hd,
+                        );
+                        for (r, (qrow, drow)) in sw
+                            .chunks_exact_mut(hd + 1)
+                            .zip(dw.chunks_exact(hd + 1))
+                            .enumerate()
+                        {
+                            scw[r] = quant::quantize_row_i8(drow, qrow);
+                        }
+                    });
                 }
-                let z = uw[hd] + EPS;
-                for (ax, ux) in aw.iter_mut().zip(&uw[..hd]) {
-                    *ax = ux / z;
-                }
-            });
+            }
         }
         AttnState::Softmax { k, v } => {
-            k.extend_from_slice(&sc.kh);
-            v.extend_from_slice(&sc.vh);
+            k.append_rows(&sc.kh);
+            v.append_rows(&sc.vh);
             let (kc, vc) = (&*k, &*v);
             let scale = 1.0 / (hd as f32).sqrt();
             let qh = &sc.qh[..];
@@ -1270,7 +1576,9 @@ fn block_step(
             let scp = super::pool::SliceParts::new(&mut sc.scores);
             // streaming causal softmax over the cached prefix, one
             // (seq, head) row per pool task — identical accumulation order
-            // to softmax_fwd's row `pos`
+            // to softmax_fwd's row `pos`. Cache rows are read through
+            // [`QuantBuf::row_dot`]/[`QuantBuf::row_axpy`], whose f32 arms
+            // are the same `gemm::dot`/`gemm::axpy` calls as before.
             pool.run_chunks(&mut sc.ah, hd, |sh, out| {
                 let qr = &qh[sh * hd..][..hd];
                 // SAFETY: task `sh` touches scores window `sh` only (rows
@@ -1278,7 +1586,7 @@ fn block_step(
                 let scores = unsafe { scp.window(sh * nctx, pos + 1) };
                 let mut m = f32::NEG_INFINITY;
                 for (t, sc) in scores.iter_mut().enumerate() {
-                    let a = gemm::dot(qr, &kc[(t * n_sh + sh) * hd..][..hd]) * scale;
+                    let a = kc.row_dot(t * n_sh + sh, hd, qr) * scale;
                     *sc = a;
                     m = m.max(a);
                 }
@@ -1289,13 +1597,13 @@ fn block_step(
                 }
                 let inv = 1.0 / z;
                 for (t, sc) in scores.iter().enumerate() {
-                    gemm::axpy(sc * inv, &vc[(t * n_sh + sh) * hd..][..hd], out);
+                    vc.row_axpy(t * n_sh + sh, hd, sc * inv, out);
                 }
             });
         }
     }
     merge_heads_into(&sc.ah, ns, 1, nh, hd, &mut sc.a);
-    matmul(pool, &sc.a, p.at(bi.wq + 3), ns, d, d, h);
+    matmul_q(pool, &sc.a, p.w(bi.wq + 3), ns, d, d, h);
 
     if let Some(mi) = bi.mlp {
         let f = cfg.d_ff;
@@ -1307,7 +1615,7 @@ fn block_step(
         for r in 0..ns {
             sc.m1[r * f..][..f].copy_from_slice(b1);
         }
-        matmul(pool, &sc.x2, p.at(mi), ns, d, f, &mut sc.m1);
+        matmul_q(pool, &sc.x2, p.w(mi), ns, d, f, &mut sc.m1);
         for (o, &x) in sc.gact.iter_mut().zip(sc.m1.iter()) {
             *o = gelu(x);
         }
@@ -1318,7 +1626,45 @@ fn block_step(
                 *hx += bx;
             }
         }
-        matmul(pool, &sc.gact, p.at(mi + 2), ns, f, d, h);
+        matmul_q(pool, &sc.gact, p.w(mi + 2), ns, f, d, h);
+    }
+}
+
+/// The per-(seq, head) linear-attention scan on one f32 state block:
+/// `S ← γ·S + φ(k)·[v, 1]ᵀ`, then `u = Sᵀ·φ(q)` and the normalizer divide.
+/// Extracted from `block_step` verbatim so every storage precision runs the
+/// exact same arithmetic — the f32 state path stays bit-identical to the
+/// pre-quantization code, and the bf16/int8 paths run it on their
+/// dequantized staging windows.
+// deny_alloc
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn linear_state_task(
+    sw: &mut [f32],
+    fqr: &[f32],
+    fkr: &[f32],
+    vr: &[f32],
+    aw: &mut [f32],
+    uw: &mut [f32],
+    gamma: f32,
+    hd: usize,
+) {
+    // S ← γ·S + φ(k)·[v, 1]ᵀ   (same order as the training scan)
+    if gamma != 1.0 {
+        for x in sw.iter_mut() {
+            *x *= gamma;
+        }
+    }
+    for (row, srow) in sw.chunks_exact_mut(hd + 1).enumerate() {
+        gemm::axpy(fkr[row], vr, srow);
+    }
+    // u = Sᵀ·φ(q), then divide by the normalizer channel
+    for (row, srow) in sw.chunks_exact(hd + 1).enumerate() {
+        gemm::axpy(fqr[row], srow, uw);
+    }
+    let z = uw[hd] + EPS;
+    for (ax, ux) in aw.iter_mut().zip(&uw[..hd]) {
+        *ax = ux / z;
     }
 }
 

@@ -438,19 +438,24 @@ impl ThreadPool {
 /// at non-uniform offsets (the per-`(bh, chunk)` output tiles, whose last
 /// chunk may be ragged). The [`run_chunks`](ThreadPool::run_chunks) family
 /// covers the uniform-stride cases safely; this is the escape hatch.
-pub struct SliceParts<'a> {
-    ptr: *mut f32,
+///
+/// Generic over the element type (default `f32`) so the quantized decode
+/// state — `u16` bf16 codes, `i8` int8 codes, their f32 scale vectors — can
+/// be windowed per `(seq, head)` task exactly like the f32 buffers.
+pub struct SliceParts<'a, T = f32> {
+    ptr: *mut T,
     len: usize,
-    _life: PhantomData<&'a mut [f32]>,
+    _life: PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: windows handed out by `window` are required (by its contract) to be
-// disjoint across concurrent tasks, so sharing the base pointer is sound.
-unsafe impl Send for SliceParts<'_> {}
-unsafe impl Sync for SliceParts<'_> {}
+// disjoint across concurrent tasks, so sharing the base pointer is sound;
+// `T: Send` because windows (`&mut [T]`) cross thread boundaries.
+unsafe impl<T: Send> Send for SliceParts<'_, T> {}
+unsafe impl<T: Send> Sync for SliceParts<'_, T> {}
 
-impl<'a> SliceParts<'a> {
-    pub fn new(buf: &'a mut [f32]) -> Self {
+impl<'a, T> SliceParts<'a, T> {
+    pub fn new(buf: &'a mut [T]) -> Self {
         Self { ptr: buf.as_mut_ptr(), len: buf.len(), _life: PhantomData }
     }
 
@@ -460,7 +465,7 @@ impl<'a> SliceParts<'a> {
     /// Concurrent callers must take non-overlapping windows. Bounds are
     /// checked; disjointness is the caller's contract (one window per task
     /// index, as in the kernel tilings).
-    pub unsafe fn window(&self, offset: usize, len: usize) -> &mut [f32] {
+    pub unsafe fn window(&self, offset: usize, len: usize) -> &mut [T] {
         assert!(
             offset.checked_add(len).is_some_and(|end| end <= self.len),
             "SliceParts window [{offset}, {offset}+{len}) out of bounds (len {})",

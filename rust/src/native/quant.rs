@@ -1,0 +1,502 @@
+//! Low-precision storage primitives: bf16 and per-row-scaled int8.
+//!
+//! CPU decode is memory-bandwidth bound, so bytes moved per token — not
+//! multiply-adds — set the tok/s ceiling (the source paper's 3.6× memory
+//! reduction is the precedent). This module owns the storage formats; the
+//! compute stays f32 end to end:
+//!
+//! - **bf16** — the upper 16 bits of an f32 (same exponent range, 8-bit
+//!   mantissa). Conversion *to* bf16 rounds to nearest-even; conversion back
+//!   is exact (a shift), so a round-trip through bf16 is lossless for every
+//!   value bf16 can represent.
+//! - **int8, per-row scales** — each row of `row` elements is scaled by
+//!   `scale = max_abs / 127` and rounded to `i8`; dequantization error is at
+//!   most `scale / 2` per element. Rows that are all zero (or all
+//!   non-finite) get `scale = 0` and dequantize to zeros — no division by
+//!   zero, no NaN scales.
+//!
+//! [`QuantBuf`] is the uniform container the decode state
+//! (`infer/state.rs`), the quantized parameter blocks (`native/model.rs`)
+//! and the layout-v3 checkpoints (`coordinator/checkpoint.rs`) all store:
+//! one enum over the three formats, with `bytes()` reporting the *true*
+//! footprint (data + scale vectors) so `state_bytes()` stays honest.
+//!
+//! The GEMM microkernels that consume these formats (widening to f32
+//! accumulators) live in [`super::gemm`]; everything here is scalar and
+//! allocation-free on the hot paths (marked for, and enforced by, the
+//! deny-alloc rule of `cargo run -p xtask -- lint`).
+
+use anyhow::{bail, Result};
+
+/// Storage precision for model parameters and decode state.
+///
+/// Compute always accumulates in f32; this selects how the bytes at rest are
+/// encoded. Plumbed from `LmConfig` through the decode path, the checkpoint
+/// layout (v3) and the bench schema (v5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage — the bit-exact baseline path.
+    F32,
+    /// bfloat16 storage (upper half of f32), f32 accumulation.
+    Bf16,
+    /// int8 storage with one f32 scale per row, f32 accumulation.
+    Int8,
+}
+
+impl Precision {
+    /// Canonical lowercase name (CLI flag / bench column / checkpoint meta).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Parse a canonical name (as produced by [`Self::name`]).
+    pub fn from_name(s: &str) -> Result<Self> {
+        match s.trim() {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            "int8" => Ok(Precision::Int8),
+            other => bail!("unknown precision {other:?} (expected f32, bf16, or int8)"),
+        }
+    }
+
+    /// True for the reduced-precision formats (anything but f32).
+    pub fn is_quantized(self) -> bool {
+        !matches!(self, Precision::F32)
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// --- scalar conversion primitives -------------------------------------------
+
+/// f32 → bf16 with round-to-nearest-even; NaN is quieted (payload kept
+/// non-zero) so it stays NaN after truncation.
+// deny_alloc
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // force a quiet NaN: truncation alone could zero the payload and
+        // turn NaN into infinity
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest, ties to even: add 0x7fff + (lsb of the kept part);
+    // finite values that overflow bf16's mantissa carry into the exponent,
+    // which is exactly RNE overflow-to-infinity
+    let round = ((bits >> 16) & 1) + 0x7fff;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bf16 → f32 — exact (bf16 is a prefix of the f32 encoding).
+// deny_alloc
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Quantize one row to i8 in place, returning the row's f32 scale.
+///
+/// `scale = max_abs / 127` over the row's *finite* values; each element is
+/// `round(x / scale)` clamped to `[-127, 127]`. Degenerate rows (empty,
+/// all-zero, or without any finite value) get scale 0 and all-zero codes —
+/// they dequantize to exact zeros. Non-finite elements never panic: NaN
+/// encodes to 0, ±inf saturates to ±127.
+// deny_alloc
+pub fn quantize_row_i8(row: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), q.len());
+    let mut max_abs = 0.0f32;
+    for &x in row {
+        let a = x.abs();
+        if a.is_finite() && a > max_abs {
+            max_abs = a;
+        }
+    }
+    if max_abs == 0.0 {
+        for o in q.iter_mut() {
+            *o = 0;
+        }
+        return 0.0;
+    }
+    let inv = 127.0 / max_abs;
+    for (o, &x) in q.iter_mut().zip(row) {
+        // clamp keeps the code in [-127, 127] (symmetric, so the error bound
+        // holds at both ends); NaN.clamp is NaN, and `NaN as i8` is 0
+        *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    max_abs / 127.0
+}
+
+/// Dequantize one i8 row (`out[i] = q[i] * scale`).
+// deny_alloc
+pub fn dequantize_row_i8(q: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(q.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(q) {
+        *o = v as f32 * scale;
+    }
+}
+
+// --- QuantBuf ----------------------------------------------------------------
+
+/// One flat buffer stored at a chosen [`Precision`].
+///
+/// The int8 variant carries one f32 scale per `row` contiguous elements
+/// (rows of a weight matrix, rows of the KV cache, rows of the recurrent `S`
+/// state). The enum is deliberately transparent (public fields) so the
+/// checkpoint serializer and the decode state can match on it directly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QuantBuf {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    Int8 { q: Vec<i8>, scales: Vec<f32>, row: usize },
+}
+
+impl QuantBuf {
+    /// Zero-filled buffer of `len` logical elements. `row` is the int8 scale
+    /// granularity (must divide `len`); ignored for f32/bf16.
+    pub fn zeros(prec: Precision, len: usize, row: usize) -> Self {
+        match prec {
+            Precision::F32 => QuantBuf::F32(vec![0.0; len]),
+            Precision::Bf16 => QuantBuf::Bf16(vec![0; len]),
+            Precision::Int8 => {
+                assert!(row > 0 && len % row == 0, "int8 zeros: row {row} must divide len {len}");
+                QuantBuf::Int8 { q: vec![0; len], scales: vec![0.0; len / row], row }
+            }
+        }
+    }
+
+    /// Empty buffer with capacity for `cap` logical elements reserved up
+    /// front — the KV-cache constructor (growth via [`Self::append_rows`]
+    /// then stays allocation-free until `cap` is exceeded).
+    pub fn reserved(prec: Precision, cap: usize, row: usize) -> Self {
+        match prec {
+            Precision::F32 => QuantBuf::F32(Vec::with_capacity(cap)),
+            Precision::Bf16 => QuantBuf::Bf16(Vec::with_capacity(cap)),
+            Precision::Int8 => {
+                assert!(row > 0, "int8 reserved: zero row");
+                QuantBuf::Int8 {
+                    q: Vec::with_capacity(cap),
+                    scales: Vec::with_capacity(cap.div_ceil(row)),
+                    row,
+                }
+            }
+        }
+    }
+
+    /// Quantize an f32 slice (`row` = int8 scale granularity, must divide
+    /// `data.len()`; ignored for f32/bf16).
+    pub fn from_f32(data: &[f32], row: usize, prec: Precision) -> Self {
+        match prec {
+            Precision::F32 => QuantBuf::F32(data.to_vec()),
+            Precision::Bf16 => QuantBuf::Bf16(data.iter().map(|&x| f32_to_bf16(x)).collect()),
+            Precision::Int8 => {
+                assert!(
+                    row > 0 && data.len() % row == 0,
+                    "int8 from_f32: row {row} must divide len {}",
+                    data.len()
+                );
+                let mut q = vec![0i8; data.len()];
+                let mut scales = vec![0.0f32; data.len() / row];
+                for (r, chunk) in data.chunks_exact(row).enumerate() {
+                    scales[r] = quantize_row_i8(chunk, &mut q[r * row..][..row]);
+                }
+                QuantBuf::Int8 { q, scales, row }
+            }
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            QuantBuf::F32(_) => Precision::F32,
+            QuantBuf::Bf16(_) => Precision::Bf16,
+            QuantBuf::Int8 { .. } => Precision::Int8,
+        }
+    }
+
+    /// Logical element count.
+    pub fn len(&self) -> usize {
+        match self {
+            QuantBuf::F32(d) => d.len(),
+            QuantBuf::Bf16(d) => d.len(),
+            QuantBuf::Int8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True stored footprint in bytes: element data plus (for int8) the
+    /// per-row scale vector. This is what `state_bytes()` reports.
+    pub fn bytes(&self) -> usize {
+        match self {
+            QuantBuf::F32(d) => std::mem::size_of_val(d.as_slice()),
+            QuantBuf::Bf16(d) => std::mem::size_of_val(d.as_slice()),
+            QuantBuf::Int8 { q, scales, .. } => {
+                std::mem::size_of_val(q.as_slice()) + std::mem::size_of_val(scales.as_slice())
+            }
+        }
+    }
+
+    /// Decode the whole buffer into `out` (`out.len() == self.len()`).
+    // deny_alloc
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        match self {
+            QuantBuf::F32(d) => out.copy_from_slice(d),
+            QuantBuf::Bf16(d) => {
+                for (o, &b) in out.iter_mut().zip(d) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+            QuantBuf::Int8 { q, scales, row } => {
+                for (r, chunk) in q.chunks_exact(*row).enumerate() {
+                    dequantize_row_i8(chunk, scales[r], &mut out[r * row..][..*row]);
+                }
+            }
+        }
+    }
+
+    /// Append whole rows (quantizing as needed). `src.len()` must be a
+    /// multiple of the int8 `row`; for f32/bf16 any length is a "row".
+    /// Allocation-free while the reserved capacity lasts.
+    // deny_alloc
+    pub fn append_rows(&mut self, src: &[f32]) {
+        match self {
+            QuantBuf::F32(d) => d.extend_from_slice(src),
+            QuantBuf::Bf16(d) => {
+                for &x in src {
+                    d.push(f32_to_bf16(x));
+                }
+            }
+            QuantBuf::Int8 { q, scales, row } => {
+                debug_assert!(src.len() % *row == 0, "append_rows: partial int8 row");
+                for chunk in src.chunks_exact(*row) {
+                    let start = q.len();
+                    q.resize(start + *row, 0);
+                    let s = quantize_row_i8(chunk, &mut q[start..]);
+                    scales.push(s);
+                }
+            }
+        }
+    }
+
+    /// Dot of `x` against stored row `r` (rows of `rowlen` elements). The
+    /// int8 scale is applied once, after the integer-code dot.
+    // deny_alloc
+    pub fn row_dot(&self, r: usize, rowlen: usize, x: &[f32]) -> f32 {
+        match self {
+            QuantBuf::F32(d) => super::gemm::dot(x, &d[r * rowlen..][..rowlen]),
+            QuantBuf::Bf16(d) => super::gemm::dot_bf16(x, &d[r * rowlen..][..rowlen]),
+            QuantBuf::Int8 { q, scales, row } => {
+                debug_assert_eq!(*row, rowlen);
+                super::gemm::dot_i8(x, &q[r * rowlen..][..rowlen]) * scales[r]
+            }
+        }
+    }
+
+    /// `y += alpha · row_r` for stored row `r` of `rowlen` elements.
+    // deny_alloc
+    pub fn row_axpy(&self, r: usize, rowlen: usize, alpha: f32, y: &mut [f32]) {
+        match self {
+            QuantBuf::F32(d) => super::gemm::axpy(alpha, &d[r * rowlen..][..rowlen], y),
+            QuantBuf::Bf16(d) => super::gemm::axpy_bf16(alpha, &d[r * rowlen..][..rowlen], y),
+            QuantBuf::Int8 { q, scales, row } => {
+                debug_assert_eq!(*row, rowlen);
+                super::gemm::axpy_i8(alpha * scales[r], &q[r * rowlen..][..rowlen], y);
+            }
+        }
+    }
+
+    /// Drop all elements, keeping the reserved capacity (KV-cache rewind).
+    pub fn clear(&mut self) {
+        match self {
+            QuantBuf::F32(d) => d.clear(),
+            QuantBuf::Bf16(d) => d.clear(),
+            QuantBuf::Int8 { q, scales, .. } => {
+                q.clear();
+                scales.clear();
+            }
+        }
+    }
+
+    /// Overwrite every element (and scale) with zero, keeping the length —
+    /// the recurrent-state rewind (zero codes × zero scales decode to 0.0).
+    pub fn fill_zero(&mut self) {
+        match self {
+            QuantBuf::F32(d) => d.fill(0.0),
+            QuantBuf::Bf16(d) => d.fill(0),
+            QuantBuf::Int8 { q, scales, .. } => {
+                q.fill(0);
+                scales.fill(0.0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_round_trip_is_exact_for_representable_values() {
+        // values whose mantissa fits in 8 bits survive f32→bf16→f32 exactly
+        for &x in &[
+            0.0f32, -0.0, 1.0, -1.0, 0.5, -2.0, 1.5, 0.0078125, 256.0, -1024.0, 3.875,
+            f32::INFINITY, f32::NEG_INFINITY, 1.0e-38, 3.3895314e38,
+        ] {
+            let rt = bf16_to_f32(f32_to_bf16(x));
+            assert_eq!(rt.to_bits(), x.to_bits(), "round-trip of {x}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 sits exactly halfway between bf16(1.0) and the next
+        // representable value; ties go to the even mantissa (here: 1.0)
+        let halfway = f32::from_bits(0x3f80_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(halfway)), 1.0);
+        // just above the tie rounds up
+        let above = f32::from_bits(0x3f80_8001);
+        assert_eq!(bf16_to_f32(f32_to_bf16(above)), f32::from_bits(0x3f81_0000));
+        // a tie with an odd even-side rounds away to the even neighbour
+        let tie_odd = f32::from_bits(0x3f81_8000);
+        assert_eq!(bf16_to_f32(f32_to_bf16(tie_odd)), f32::from_bits(0x3f82_0000));
+    }
+
+    #[test]
+    fn bf16_nan_stays_nan() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // a NaN whose payload lives only in the truncated bits must not
+        // collapse to infinity
+        let sneaky = f32::from_bits(0x7f80_0001);
+        assert!(sneaky.is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(sneaky)).is_nan());
+    }
+
+    #[test]
+    fn int8_row_error_is_bounded_by_half_scale() {
+        // deterministic pseudo-random row
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let row: Vec<f32> = (0..257)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((x >> 40) as f32 / (1u64 << 24) as f32 - 0.5) * 8.0
+            })
+            .collect();
+        let mut q = vec![0i8; row.len()];
+        let scale = quantize_row_i8(&row, &mut q);
+        assert!(scale > 0.0);
+        let mut deq = vec![0.0f32; row.len()];
+        dequantize_row_i8(&q, scale, &mut deq);
+        // max abs error ≤ scale/2 (tiny fp slop allowance on the bound)
+        let bound = scale * 0.5 * (1.0 + 1e-5);
+        for (i, (&a, &b)) in row.iter().zip(&deq).enumerate() {
+            assert!((a - b).abs() <= bound, "elem {i}: |{a} - {b}| > {bound}");
+        }
+        // the extremes must reach full code range
+        assert!(q.iter().any(|&v| v == 127 || v == -127));
+    }
+
+    #[test]
+    fn int8_degenerate_rows_do_not_panic_or_divide_by_zero() {
+        // all-zero row: scale 0, zero codes, exact zero dequant
+        let mut q = [1i8; 5];
+        let s = quantize_row_i8(&[0.0; 5], &mut q);
+        assert_eq!(s, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+        let mut out = [1.0f32; 5];
+        dequantize_row_i8(&q, s, &mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
+
+        // empty row
+        let s = quantize_row_i8(&[], &mut []);
+        assert_eq!(s, 0.0);
+
+        // single element round-trips to itself exactly (code ±127)
+        let mut q1 = [0i8; 1];
+        let s1 = quantize_row_i8(&[-3.25], &mut q1);
+        assert_eq!(q1[0], -127);
+        assert_eq!(q1[0] as f32 * s1, -3.25);
+
+        // non-finite elements: NaN → 0, ±inf saturates, scale from the
+        // finite values only — and a row with no finite values is scale 0
+        let mut q4 = [0i8; 4];
+        let s4 = quantize_row_i8(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.0], &mut q4);
+        assert!(s4.is_finite() && s4 > 0.0);
+        assert_eq!(q4, [0, 127, -127, 127]);
+        let mut qn = [9i8; 2];
+        let sn = quantize_row_i8(&[f32::NAN, f32::INFINITY], &mut qn);
+        assert_eq!(sn, 0.0);
+        assert_eq!(qn, [0, 0]);
+    }
+
+    #[test]
+    fn precision_names_round_trip() {
+        for p in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            assert_eq!(Precision::from_name(p.name()).unwrap(), p);
+        }
+        assert!(Precision::from_name("fp64").is_err());
+        assert!(Precision::F32.name() == "f32" && !Precision::F32.is_quantized());
+        assert!(Precision::Int8.is_quantized() && Precision::Bf16.is_quantized());
+    }
+
+    #[test]
+    fn quantbuf_footprint_and_round_trip() {
+        let data: Vec<f32> = (0..64).map(|i| (i as f32 - 31.5) * 0.1).collect();
+        let f = QuantBuf::from_f32(&data, 8, Precision::F32);
+        let b = QuantBuf::from_f32(&data, 8, Precision::Bf16);
+        let i = QuantBuf::from_f32(&data, 8, Precision::Int8);
+        assert_eq!((f.len(), b.len(), i.len()), (64, 64, 64));
+        assert_eq!(f.bytes(), 256);
+        assert_eq!(b.bytes(), 128);
+        assert_eq!(i.bytes(), 64 + 8 * 4); // codes + one f32 scale per row
+        let mut out = vec![0.0f32; 64];
+        f.dequantize_into(&mut out);
+        assert_eq!(out, data);
+        i.dequantize_into(&mut out);
+        let QuantBuf::Int8 { scales, .. } = &i else { unreachable!() };
+        let max_scale = scales.iter().fold(0.0f32, |m, &s| if s > m { s } else { m });
+        for (a, b) in data.iter().zip(&out) {
+            assert!((a - b).abs() <= max_scale * 0.5 * (1.0 + 1e-5));
+        }
+    }
+
+    #[test]
+    fn quantbuf_append_rows_and_row_ops() {
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut buf = QuantBuf::reserved(prec, 32, 4);
+            buf.append_rows(&[1.0, 2.0, 3.0, 4.0]);
+            buf.append_rows(&[-4.0, 0.5, 0.25, 1.0]);
+            assert_eq!(buf.len(), 8);
+            let x = [1.0f32, -1.0, 2.0, 0.5];
+            let want0 = 1.0 - 2.0 + 6.0 + 2.0;
+            let got = buf.row_dot(0, 4, &x);
+            assert!((got - want0).abs() < 0.1, "{prec}: {got} vs {want0}");
+            let mut y = [0.0f32; 4];
+            buf.row_axpy(1, 4, 2.0, &mut y);
+            assert!((y[0] + 8.0).abs() < 0.1, "{prec}");
+            buf.clear();
+            assert!(buf.is_empty());
+        }
+    }
+
+    #[test]
+    fn quantbuf_fill_zero_rewinds_state() {
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.3 - 1.0).collect();
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut buf = QuantBuf::from_f32(&data, 3, prec);
+            buf.fill_zero();
+            assert_eq!(buf.len(), 12);
+            let mut out = vec![9.0f32; 12];
+            buf.dequantize_into(&mut out);
+            assert!(out.iter().all(|&v| v == 0.0), "{prec}");
+        }
+    }
+}

@@ -27,7 +27,7 @@
 #![cfg(feature = "alloc-gate")]
 
 use repro::infer::DecodeState;
-use repro::native::model::{self, AdamwScratch, AttnKind, DecodeScratch, LmConfig};
+use repro::native::model::{self, AdamwScratch, AttnKind, DecodeScratch, LmConfig, Precision};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;
 use repro::util::alloc_gate::measure;
@@ -97,6 +97,43 @@ fn decode_step_is_allocation_free_when_warm_for_every_attn_kind() {
         assert_no_alloc!(format!("prefill_step_scratch (warm, {attn:?})"), {
             bound.prefill_step_scratch(&[1, 1], &mut st, &pool, &mut sc).unwrap()
         });
+    }
+}
+
+#[test]
+fn quantized_decode_step_is_allocation_free_when_warm() {
+    // the low-precision satellite contract: a warm decode step through
+    // bf16/int8 weights AND bf16/int8 recurrent state (dequantize → f32
+    // scan → requantize, all in the `sdeq` scratch window) performs the
+    // same ZERO allocation events as the f32 path
+    for prec in [Precision::Bf16, Precision::Int8] {
+        for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+            let cfg = LmConfig::tiny(attn);
+            let mut state = cfg.init_state(7);
+            state.truncate(cfg.n_param_arrays());
+            let params: Vec<&Tensor> = state.iter().collect();
+            let pool = ThreadPool::new(1);
+            let qm = model::QuantModel::from_params(&cfg, &params, prec).unwrap();
+            let bound = model::DecodeModel::bind_quantized(&qm).unwrap();
+            let mut st = DecodeState::new(qm.cfg(), 2).unwrap();
+            let mut sc = DecodeScratch::new();
+            // warm-up token: grows every scratch buffer (incl. `sdeq`)
+            bound.logits_step_scratch(&[1, 2], &mut st, &pool, &mut sc).unwrap();
+
+            for t in 0..4 {
+                let tok = [(3 + t) as i32, (5 + t) as i32];
+                let finite = alloc_budget!(
+                    format!("logits_step_scratch (warm, {attn:?}, {prec})"),
+                    max_allocs = 0,
+                    {
+                        let logits =
+                            bound.logits_step_scratch(&tok, &mut st, &pool, &mut sc).unwrap();
+                        logits.len() == 2 * cfg.vocab && logits.iter().all(|x| x.is_finite())
+                    }
+                );
+                assert!(finite, "bad logits from the gated quantized step ({attn:?}, {prec})");
+            }
+        }
     }
 }
 

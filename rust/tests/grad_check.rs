@@ -11,7 +11,7 @@
 // run there at all) -- the Miri lane drives tests/miri_parity.rs instead.
 #![cfg(not(miri))]
 
-use repro::native::model::{self, AttnKind, LmConfig};
+use repro::native::model::{self, AttnKind, LmConfig, Precision};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;
 
@@ -39,6 +39,9 @@ fn deep_cfg(attn: AttnKind) -> LmConfig {
         lr_min: 1e-3,
         warmup_steps: 2,
         total_steps: 10,
+        weight_decay: 0.0,
+        clip_norm: 0.0,
+        precision: Precision::F32,
     }
 }
 
@@ -140,6 +143,9 @@ fn grad_check_legacy_architecture() {
         lr_min: 1e-3,
         warmup_steps: 2,
         total_steps: 10,
+        weight_decay: 0.0,
+        clip_norm: 0.0,
+        precision: Precision::F32,
     };
     run_grad_check(&cfg, "legacy");
 }

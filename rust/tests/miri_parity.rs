@@ -25,7 +25,7 @@ use repro::native::kernels::{
     la_chunk_bwd, la_chunk_fwd, la_quadratic_bwd, la_quadratic_fwd, la_scan_bwd, la_scan_fwd,
     softmax_bwd, softmax_fwd, LayerShape,
 };
-use repro::native::model::{self, AttnKind, DecodeScratch, LmConfig};
+use repro::native::model::{self, AttnKind, DecodeScratch, LmConfig, Precision};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;
 
@@ -188,6 +188,60 @@ fn decode_scratch_reuse_matches_the_fresh_scratch_path() {
             let fresh = bound.logits_step(&toks, &mut st_a, &pool).unwrap();
             let reused = bound.logits_step_scratch(&toks, &mut st_b, &pool, &mut sc).unwrap();
             assert_eq!(fresh.as_slice(), reused, "token {t} ({attn:?}): scratch reuse diverged");
+        }
+    }
+}
+
+/// The quantized decode path drives fresh `unsafe` families (bf16/int8 GEMM
+/// microkernel tails, the dequantize → f32 scan → requantize state windows)
+/// through real pool submissions, so it gets its own size-reduced parity
+/// case. Three claims:
+/// - an f32-precision [`model::QuantModel`] is **bit-exact** vs direct
+///   parameter binding (the storage indirection is free);
+/// - bf16/int8 logits track the f32 oracle within a loose rounding bound —
+///   a torn window or overlapping store produces garbage far outside it;
+/// - quantized fresh-state vs scratch-reuse decode agree **exactly**
+///   (requantization is deterministic).
+#[test]
+fn quantized_decode_tracks_the_f32_oracle_under_the_interpreter() {
+    for attn in [AttnKind::Ours, AttnKind::Softmax] {
+        let cfg = lm_cfg(attn);
+        let mut state = cfg.init_state(9);
+        state.truncate(cfg.n_param_arrays());
+        let params: Vec<&Tensor> = state.iter().collect();
+        let pool = ThreadPool::new(2);
+        let oracle = model::DecodeModel::bind(&cfg, &params).unwrap();
+
+        for (prec, tol) in [(Precision::F32, 0.0f32), (Precision::Bf16, 0.75), (Precision::Int8, 0.75)]
+        {
+            let qm = model::QuantModel::from_params(&cfg, &params, prec).unwrap();
+            let bound = model::DecodeModel::bind_quantized(&qm).unwrap();
+            let mut st_o = DecodeState::new(&cfg, 2).unwrap();
+            let mut st_a = DecodeState::new(qm.cfg(), 2).unwrap();
+            let mut st_b = DecodeState::new(qm.cfg(), 2).unwrap();
+            let mut sc = DecodeScratch::new();
+            let steps = if cfg!(miri) { 3 } else { 8 };
+            for t in 0..steps {
+                let toks = [(t % cfg.vocab) as i32, ((t + 2) % cfg.vocab) as i32];
+                let want = oracle.logits_step(&toks, &mut st_o, &pool).unwrap();
+                let fresh = bound.logits_step(&toks, &mut st_a, &pool).unwrap();
+                let reused = bound.logits_step_scratch(&toks, &mut st_b, &pool, &mut sc).unwrap();
+                assert_eq!(
+                    fresh.as_slice(),
+                    reused,
+                    "token {t} ({attn:?}, {prec}): quantized scratch reuse diverged"
+                );
+                assert!(fresh.iter().all(|x| x.is_finite()), "token {t} ({attn:?}, {prec})");
+                let d = max_abs_diff(&fresh, &want);
+                if prec == Precision::F32 {
+                    assert_eq!(
+                        fresh, want,
+                        "token {t} ({attn:?}): f32 QuantModel storage is not bit-exact"
+                    );
+                } else {
+                    assert!(d < tol, "token {t} ({attn:?}, {prec}): drift {d} vs f32 oracle");
+                }
+            }
         }
     }
 }

@@ -1,0 +1,137 @@
+//! End-to-end tests of the low-precision path: quantize a full-precision
+//! checkpoint on disk, load the layout-v3 artifact through the ordinary
+//! inference session, and decode from it.
+//!
+//! The numeric primitives have unit tests in `native::quant`, and the
+//! kernel/state parity lives in `tests/miri_parity.rs`; this file covers the
+//! seams between them — `quantize_checkpoint` → `ModelSession::load` →
+//! `generate`, plus the footprint claims the bench report makes.
+
+// Heavier than a unit test and file-system bound — not a Miri target.
+#![cfg(not(miri))]
+
+use repro::coordinator::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
+use repro::infer::{quantize_checkpoint, GenRequest, ModelSession, SampleMode};
+use repro::native::model::{AttnKind, LmConfig, Precision};
+
+fn write_f32_ckpt(dir: &std::path::Path, name: &str, cfg: &LmConfig, seed: u64) {
+    let meta = CheckpointMeta {
+        artifact_tag: "lm_tiny_ours".to_string(),
+        step: 1,
+        loss: 1.5,
+        seed,
+        layout: PARAM_LAYOUT_VERSION,
+    };
+    Checkpoint::write(dir.join(name), &meta, &cfg.init_state(seed)).unwrap();
+}
+
+fn greedy(prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest {
+        prompt: prompt.to_string(),
+        max_new,
+        mode: SampleMode::Greedy,
+        seed: 0,
+        samples: 1,
+    }
+}
+
+#[test]
+fn quantize_load_generate_roundtrip() {
+    let dir = std::env::temp_dir().join("repro_quant_roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    write_f32_ckpt(&dir, "f32.ckpt", &cfg, 11);
+
+    let f32_sess = ModelSession::load(dir.join("f32.ckpt")).unwrap();
+    let f32_out = f32_sess.generate(&greedy("the ", 12)).unwrap();
+
+    for prec in [Precision::Bf16, Precision::Int8] {
+        let qpath = dir.join(format!("{prec}.ckpt"));
+        let outcome =
+            quantize_checkpoint(dir.join("f32.ckpt"), &qpath, prec, 8).unwrap();
+        assert_eq!(outcome.precision, prec);
+        assert_eq!(outcome.check_tokens, 8);
+        assert!(
+            outcome.logit_max_abs_diff.is_finite() && outcome.logit_max_abs_diff >= 0.0,
+            "probe diff: {}",
+            outcome.logit_max_abs_diff
+        );
+        assert!(
+            outcome.quant_param_bytes < outcome.f32_param_bytes,
+            "{prec}: {} !< {}",
+            outcome.quant_param_bytes,
+            outcome.f32_param_bytes
+        );
+        if prec == Precision::Int8 {
+            // the headline claim: ≥2× parameter-byte reduction (the GEMM
+            // weights shrink 4×; embeddings/norms/biases stay f32)
+            assert!(
+                outcome.quant_param_bytes * 2 <= outcome.f32_param_bytes,
+                "int8 shrink below 2×: {} vs {}",
+                outcome.quant_param_bytes,
+                outcome.f32_param_bytes
+            );
+        }
+
+        // the quantized artifact loads through the SAME session entry point
+        let sess = ModelSession::load(&qpath).unwrap();
+        assert!(
+            sess.summary().contains(prec.name()),
+            "summary hides the precision: {}",
+            sess.summary()
+        );
+        let a = sess.generate(&greedy("the ", 12)).unwrap();
+        assert_eq!(a.new_tokens, 12);
+        assert_eq!(a.texts.len(), 1);
+        assert!(!a.texts[0].is_empty());
+
+        // deterministic across a fresh load of the same artifact
+        let b = ModelSession::load(&qpath).unwrap().generate(&greedy("the ", 12)).unwrap();
+        assert_eq!(a.token_ids, b.token_ids);
+        assert_eq!(a.texts, b.texts);
+
+        // the decode-state footprint must shrink too (linear attention:
+        // int8 carries ~1 byte/entry + per-row scales vs 4 bytes/entry)
+        if prec == Precision::Int8 {
+            assert!(
+                a.state_bytes * 2 < f32_out.state_bytes,
+                "int8 state {} vs f32 state {}",
+                a.state_bytes,
+                f32_out.state_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn quantizing_a_quantized_checkpoint_is_rejected() {
+    let dir = std::env::temp_dir().join("repro_quant_requant");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    write_f32_ckpt(&dir, "f32.ckpt", &cfg, 3);
+
+    let q = dir.join("int8.ckpt");
+    quantize_checkpoint(dir.join("f32.ckpt"), &q, Precision::Int8, 0).unwrap();
+    let err = quantize_checkpoint(&q, dir.join("int8_again.ckpt"), Precision::Int8, 0)
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("quantiz"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn probe_skip_still_quantizes() {
+    // `check_tokens = 0` skips the logit probe entirely but must still
+    // produce a loadable artifact
+    let dir = std::env::temp_dir().join("repro_quant_noprobe");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    write_f32_ckpt(&dir, "f32.ckpt", &cfg, 5);
+
+    let q = dir.join("bf16.ckpt");
+    let outcome = quantize_checkpoint(dir.join("f32.ckpt"), &q, Precision::Bf16, 0).unwrap();
+    assert_eq!(outcome.check_tokens, 0);
+    assert_eq!(outcome.logit_max_abs_diff, 0.0);
+    let sess = ModelSession::load(&q).unwrap();
+    assert_eq!(sess.generate(&greedy("a ", 4)).unwrap().new_tokens, 4);
+}
