@@ -19,7 +19,7 @@ use crate::runtime::{Engine, Tensor};
 
 use crate::infer::DecodeState;
 
-use super::report::{DecodeBenchPoint, LmBenchPoint, OptBenchPoint};
+use super::report::{DecodeBenchPoint, LmBenchPoint, OptBenchPoint, PrefillBenchPoint};
 use super::timing::TimingStats;
 
 /// Corpus size every LM bench trains on.
@@ -236,15 +236,17 @@ pub fn measure_decode(
     }
 
     // full recompute: producing token t replays tokens 0..t from scratch.
-    // The replayed prefix goes through the prefill fast path (state only,
-    // no unembedding) with a single logits step at the end — the best a
-    // stateless decoder could do, so the recurrent speedup is not inflated
-    // by charging the baseline t redundant unembedding GEMMs
+    // The replayed prefix goes through the chunked prefill fast path (one
+    // chunkwise pass per layer, state only, no unembedding) with a single
+    // logits step at the end — the best a stateless decoder could do, so
+    // the recurrent speedup is not inflated by charging the baseline t
+    // token-by-token replays or t redundant unembedding GEMMs
+    let mut psc = model::PrefillScratch::new();
     let t0 = Instant::now();
     for t in 0..t_total {
         let mut st = DecodeState::new(&run_cfg, 1)?;
-        for &tok in &toks[..t] {
-            bound.prefill_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
+        if t > 0 {
+            bound.prefill_chunked(&toks[..t], &mut st, &pool, &mut psc)?;
         }
         bound.logits_step_scratch(&[toks[t]], &mut st, &pool, &mut sc)?;
     }
@@ -265,6 +267,144 @@ pub fn measure_decode(
         state_bytes_last,
         logit_maxabs_vs_f32: logit_maxabs,
         nll_delta_vs_f32: nll_delta,
+    })
+}
+
+/// Teacher-forced tail length the quantized chunked-prefill quality gate
+/// scores (and the extra window [`measure_prefill`] reserves past the
+/// prompt).
+const PREFILL_NLL_TAIL: usize = 32;
+
+/// Measure prompt ingestion of one (preset, attn, precision, prompt length)
+/// point through both prefill routes: the **chunked** fast path (the whole
+/// prompt in one chunkwise pass per layer) against the **serial**
+/// token-by-token oracle. Both end with the same first-logits step, so
+/// `ttft_ms` is true time-to-first-token. Weights are freshly initialized
+/// (prefill cost is data-independent) and `n_ctx` is widened to the prompt —
+/// the presets' training windows stop far short of the 512–16k-token
+/// prompts this section sweeps.
+///
+/// For `bf16`/`int8` an untimed f32 oracle chunk-prefills the same prompt
+/// and both models score the same teacher-forced tail; the mean next-token
+/// NLL drift is gated by [`DECODE_QUALITY_GATE_NATS`] — reduced precision
+/// must buy prefill speed, not a silently different model.
+pub fn measure_prefill(
+    preset: &str,
+    attn: &str,
+    prompt_len: usize,
+    precision: &str,
+    chunk: usize,
+    reps: usize,
+) -> Result<PrefillBenchPoint> {
+    ensure!(prompt_len >= 2, "measure_prefill needs at least 2 prompt tokens");
+    ensure!(reps > 0, "measure_prefill needs at least one rep");
+    let mut cfg = LmConfig::by_preset(preset, AttnKind::from_name(attn)?)?;
+    // widen the window before init_state — wpe rows are sized from n_ctx
+    cfg.n_ctx = cfg.n_ctx.max(prompt_len + PREFILL_NLL_TAIL + 1);
+    let prec = model::Precision::from_name(precision)?;
+    let pool = ThreadPool::from_env();
+    let state = cfg.init_state(0);
+    let np = cfg.n_param_arrays();
+    let params: Vec<&Tensor> = state[..np].iter().collect();
+    let qm;
+    let (bound, run_cfg) = if prec.is_quantized() {
+        qm = model::QuantModel::from_params(&cfg, &params, prec)?;
+        (model::DecodeModel::bind_quantized(&qm)?, *qm.cfg())
+    } else {
+        (model::DecodeModel::bind(&cfg, &params)?, cfg)
+    };
+    let chunk_used = if chunk > 0 { chunk } else { crate::native::ours_chunk() };
+    let toks: Vec<i32> = (0..prompt_len + PREFILL_NLL_TAIL)
+        .map(|i| ((i * 31 + 7) % cfg.vocab) as i32)
+        .collect();
+    // the first prompt_len − 1 tokens are ingested state-only; the last
+    // prompt token produces the first logits (the TTFT endpoint)
+    let l = prompt_len - 1;
+
+    let mut sc = model::DecodeScratch::new();
+    let mut psc = model::PrefillScratch::new();
+
+    // chunked fast path: p50 over reps (the first rep also pays scratch
+    // sizing, which p50 absorbs for reps ≥ 2)
+    let mut chunked_prefill = Vec::with_capacity(reps);
+    let mut chunked_ttft = Vec::with_capacity(reps);
+    let mut chunked_logits = Vec::new();
+    for rep in 0..reps {
+        let mut st = DecodeState::new(&run_cfg, 1)?;
+        let t0 = Instant::now();
+        bound.prefill_chunked_with(chunk_used, &toks[..l], &mut st, &pool, &mut psc)?;
+        chunked_prefill.push(t0.elapsed().as_secs_f64());
+        let lg = bound.logits_step_scratch(&[toks[l]], &mut st, &pool, &mut sc)?;
+        chunked_ttft.push(t0.elapsed().as_secs_f64());
+        if rep == 0 {
+            chunked_logits = lg.to_vec();
+        }
+    }
+
+    // serial oracle: the identical prompt token by token
+    let mut serial_prefill = Vec::with_capacity(reps);
+    let mut serial_logits = Vec::new();
+    for rep in 0..reps {
+        let mut st = DecodeState::new(&run_cfg, 1)?;
+        let t0 = Instant::now();
+        for &tok in &toks[..l] {
+            bound.prefill_step_scratch(&[tok], &mut st, &pool, &mut sc)?;
+        }
+        serial_prefill.push(t0.elapsed().as_secs_f64());
+        let lg = bound.logits_step_scratch(&[toks[l]], &mut st, &pool, &mut sc)?;
+        if rep == 0 {
+            serial_logits = lg.to_vec();
+        }
+    }
+
+    let logit_maxabs_vs_serial = chunked_logits
+        .iter()
+        .zip(&serial_logits)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0f64, f64::max);
+
+    let mut nll_delta_vs_f32 = 0.0f64;
+    if prec.is_quantized() {
+        let oracle = model::DecodeModel::bind(&cfg, &params)?;
+        let mut st_q = DecodeState::new(&run_cfg, 1)?;
+        let mut st_f = DecodeState::new(&cfg, 1)?;
+        let mut psc_f = model::PrefillScratch::new();
+        let mut sc_f = model::DecodeScratch::new();
+        bound.prefill_chunked_with(chunk_used, &toks[..l], &mut st_q, &pool, &mut psc)?;
+        oracle.prefill_chunked_with(chunk_used, &toks[..l], &mut st_f, &pool, &mut psc_f)?;
+        let (mut nq, mut nf, mut scored) = (0.0f64, 0.0f64, 0usize);
+        for t in l..l + PREFILL_NLL_TAIL {
+            let target = toks[t + 1] as usize;
+            let lq = bound.logits_step_scratch(&[toks[t]], &mut st_q, &pool, &mut sc)?;
+            nq += nll(lq, target);
+            let lf = oracle.logits_step_scratch(&[toks[t]], &mut st_f, &pool, &mut sc_f)?;
+            nf += nll(lf, target);
+            scored += 1;
+        }
+        nll_delta_vs_f32 = (nq - nf) / scored as f64;
+        ensure!(
+            nll_delta_vs_f32.abs() <= DECODE_QUALITY_GATE_NATS,
+            "quantized chunked-prefill quality gate: |Δnll| {:.4} nats > {} for \
+             {preset}/{attn}/{precision} @ {prompt_len} tokens",
+            nll_delta_vs_f32,
+            DECODE_QUALITY_GATE_NATS
+        );
+    }
+
+    let prefill_s = p50(chunked_prefill);
+    let serial_s = p50(serial_prefill);
+    Ok(PrefillBenchPoint {
+        preset: preset.to_string(),
+        attn: attn.to_string(),
+        precision: prec.name().to_string(),
+        prompt_tokens: prompt_len,
+        chunk: chunk_used,
+        ttft_ms: p50(chunked_ttft) * 1e3,
+        prefill_tok_s: l as f64 / prefill_s.max(1e-12),
+        serial_tok_s: l as f64 / serial_s.max(1e-12),
+        speedup_vs_serial: serial_s / prefill_s.max(1e-12),
+        logit_maxabs_vs_serial,
+        nll_delta_vs_f32,
     })
 }
 

@@ -176,19 +176,52 @@ impl DecodeBenchPoint {
     }
 }
 
+/// One measured point of the `prefill` section: prompt ingestion through
+/// the **chunked** fast path (the whole prompt in one chunkwise-kernel pass
+/// per layer) vs the **serial** token-by-token oracle, both ending with the
+/// first-logits step so `ttft_ms` is true time-to-first-token. Quantized
+/// points carry their NLL drift against an f32 oracle over a teacher-forced
+/// tail, gated by the bench's quality bound.
+#[derive(Debug, Clone)]
+pub struct PrefillBenchPoint {
+    pub preset: String,
+    pub attn: String,
+    /// Storage precision of weights + decode state (`f32`/`bf16`/`int8`).
+    pub precision: String,
+    /// Prompt length ingested (the last token produces the first logits).
+    pub prompt_tokens: usize,
+    /// Chunk length the chunked route ran with.
+    pub chunk: usize,
+    /// p50 time-to-first-token through the chunked route, milliseconds.
+    pub ttft_ms: f64,
+    /// Prompt tokens/s through the chunked route (prefill phase alone).
+    pub prefill_tok_s: f64,
+    /// Prompt tokens/s through the serial token-by-token route.
+    pub serial_tok_s: f64,
+    /// Chunked-over-serial prefill speedup (p50 over p50).
+    pub speedup_vs_serial: f64,
+    /// Worst per-logit |chunked − serial| on the first-logits step.
+    pub logit_maxabs_vs_serial: f64,
+    /// Mean next-token NLL drift vs the f32 oracle, nats (0 for f32).
+    pub nll_delta_vs_f32: f64,
+}
+
 /// Machine-readable perf trajectory artifact (`BENCH_native.json`): one entry
 /// per artifact measured on the parallel/tiled path, joined with the scalar
 /// single-thread reference baseline for the speedup column, plus the LM
 /// per-step section (`lm`, in-place vs rebuild), the AdamW-update
-/// microbench (`opt`), and the autoregressive decoding section (`decode`,
-/// recurrent vs full-recompute). Times are nanoseconds (median plus p10/p90
-/// spread) for kernels, seconds for LM/optimizer steps.
+/// microbench (`opt`), the autoregressive decoding section (`decode`,
+/// recurrent vs full-recompute), and the prompt-ingestion section
+/// (`prefill`, chunked vs serial with TTFT). Times are nanoseconds (median
+/// plus p10/p90 spread) for kernels, seconds for LM/optimizer steps.
+#[allow(clippy::too_many_arguments)]
 pub fn bench_native_json(
     parallel: &[SweepPoint],
     scalar: &[SweepPoint],
     lm: &[LmBenchPoint],
     opt: &[OptBenchPoint],
     decode: &[DecodeBenchPoint],
+    prefill: &[PrefillBenchPoint],
     threads: usize,
     chunk: usize,
 ) -> String {
@@ -283,16 +316,61 @@ pub fn bench_native_json(
             ])
         })
         .collect();
+    let prefill_arts: Vec<Json> = prefill
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("preset", Json::str(p.preset.clone())),
+                ("attn", Json::str(p.attn.clone())),
+                ("precision", Json::str(p.precision.clone())),
+                ("prompt_tokens", Json::num(p.prompt_tokens as f64)),
+                ("chunk", Json::num(p.chunk as f64)),
+                ("ttft_ms", Json::num(p.ttft_ms)),
+                ("prefill_tok_s", Json::num(p.prefill_tok_s)),
+                ("serial_tok_s", Json::num(p.serial_tok_s)),
+                ("speedup_vs_serial", Json::num(p.speedup_vs_serial)),
+                ("logit_maxabs_vs_serial", Json::num(p.logit_maxabs_vs_serial)),
+                ("nll_delta_vs_f32", Json::num(p.nll_delta_vs_f32)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
-        ("schema", Json::str("bench_native/v5")),
+        ("schema", Json::str("bench_native/v6")),
         ("threads", Json::num(threads as f64)),
         ("chunk", Json::num(chunk as f64)),
         ("artifacts", Json::Arr(arts)),
         ("lm", Json::Arr(lm_arts)),
         ("opt", Json::Arr(opt_arts)),
         ("decode", Json::Arr(decode_arts)),
+        ("prefill", Json::Arr(prefill_arts)),
     ])
     .to_string()
+}
+
+/// Human-readable companion of the `prefill` section: chunked prompt
+/// ingestion rate, TTFT, and the speedup over the serial oracle.
+pub fn bench_prefill_markdown(prefill: &[PrefillBenchPoint]) -> String {
+    let mut out = String::from(
+        "| preset | attn | prec | prompt | chunk | ttft | chunked tok/s | serial tok/s | \
+         speedup | Δnll vs f32 |\n|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for p in prefill {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {:.0} | {:.0} | {:.2}× | {:.4} |",
+            p.preset,
+            p.attn,
+            p.precision,
+            p.prompt_tokens,
+            p.chunk,
+            fmt_time(p.ttft_ms / 1e3),
+            p.prefill_tok_s,
+            p.serial_tok_s,
+            p.speedup_vs_serial,
+            p.nll_delta_vs_f32,
+        );
+    }
+    out
 }
 
 /// Human-readable companion of the `decode` section: recurrent decode rate,
@@ -586,9 +664,22 @@ mod tests {
             logit_maxabs_vs_f32: 0.03,
             nll_delta_vs_f32: 0.0015,
         }];
-        let text = bench_native_json(&par, &base, &lm, &opt, &decode, 4, 128);
+        let prefill = vec![PrefillBenchPoint {
+            preset: "small".into(),
+            attn: "ours".into(),
+            precision: "f32".into(),
+            prompt_tokens: 4096,
+            chunk: 128,
+            ttft_ms: 120.0,
+            prefill_tok_s: 34_000.0,
+            serial_tok_s: 8_500.0,
+            speedup_vs_serial: 4.0,
+            logit_maxabs_vs_serial: 1.5e-4,
+            nll_delta_vs_f32: 0.0,
+        }];
+        let text = bench_native_json(&par, &base, &lm, &opt, &decode, &prefill, 4, 128);
         let v = Json::parse(&text).unwrap();
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v5"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v6"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
         let arts = v.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
@@ -616,6 +707,16 @@ mod tests {
         assert_eq!(dec[0].get("precision").unwrap().as_str(), Some("int8"));
         assert_eq!(dec[0].get("param_bytes").unwrap().as_usize(), Some(1_100_000));
         assert_eq!(dec[0].get("nll_delta_vs_f32").unwrap().as_f64(), Some(0.0015));
+        let pre = v.get("prefill").unwrap().as_arr().unwrap();
+        assert_eq!(pre.len(), 1);
+        assert_eq!(pre[0].get("prompt_tokens").unwrap().as_usize(), Some(4096));
+        assert_eq!(pre[0].get("chunk").unwrap().as_usize(), Some(128));
+        assert_eq!(pre[0].get("ttft_ms").unwrap().as_f64(), Some(120.0));
+        assert_eq!(pre[0].get("prefill_tok_s").unwrap().as_f64(), Some(34_000.0));
+        assert!((pre[0].get("speedup_vs_serial").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        let pmd = bench_prefill_markdown(&prefill);
+        assert!(pmd.contains("4096") && pmd.contains("4.00×"), "prefill markdown:\n{pmd}");
+        assert!(pmd.contains("120.00 ms"), "prefill markdown missing ttft:\n{pmd}");
         let dmd = bench_decode_markdown(&decode);
         assert!(dmd.contains("10.0×") && dmd.contains("1.0×"), "decode markdown:\n{dmd}");
         assert!(dmd.contains("int8") && dmd.contains("0.0015"), "decode markdown:\n{dmd}");
@@ -647,7 +748,7 @@ mod tests {
             loss_first: 5.5,
             loss_last: 5.5,
         }];
-        let text = bench_native_json(&[], &[], &lm, &[], &[], 1, 128);
+        let text = bench_native_json(&[], &[], &lm, &[], &[], &[], 1, 128);
         let v = Json::parse(&text).unwrap();
         let lms = v.get("lm").unwrap().as_arr().unwrap();
         assert_eq!(lms[0].get("grad_norm_last"), Some(&Json::Null));

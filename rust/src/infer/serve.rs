@@ -10,16 +10,22 @@
 //!
 //! Request schema (all fields but `prompt` optional; `seed` may be a plain
 //! number or — for values above 2⁵³, which don't survive a JSON f64
-//! round-trip — a decimal string, the checkpoint-trailer convention):
+//! round-trip — a decimal string, the checkpoint-trailer convention;
+//! `serial_prefill: true` forces the token-by-token prompt route instead of
+//! the default chunked fast path):
 //! ```json
 //! {"id": 1, "prompt": "the ", "max_new": 32, "mode": "greedy",
-//!  "temperature": 1.0, "top_k": 0, "seed": 0, "samples": 1}
+//!  "temperature": 1.0, "top_k": 0, "seed": 0, "samples": 1,
+//!  "serial_prefill": false}
 //! ```
-//! Response (`id` echoed verbatim):
+//! Response (`id` echoed verbatim; `ttft_ms` is time-to-first-token —
+//! prompt ingestion through the first sampled token — and `prefill_tok_s`
+//! is prompt tokens per second of the prefill phase alone):
 //! ```json
 //! {"id": 1, "ok": true, "text": "…", "texts": ["…"], "prompt_tokens": 2,
-//!  "new_tokens": 32, "prefill_ms": 0.8, "decode_ms": 11.2,
-//!  "tokens_per_s": 2857.1, "state_bytes": 69632}
+//!  "new_tokens": 32, "prefill_ms": 0.8, "ttft_ms": 1.1,
+//!  "prefill_tok_s": 2500.0, "decode_ms": 11.2, "tokens_per_s": 2857.1,
+//!  "state_bytes": 69632}
 //! ```
 
 use std::io::{BufRead, Write};
@@ -97,8 +103,14 @@ fn build_request(v: &Json, default_max_new: usize) -> Result<GenRequest> {
             .filter(|&s| s >= 1)
             .ok_or_else(|| anyhow::anyhow!("\"samples\" must be an integer ≥ 1"))?,
     };
+    let serial_prefill = match v.get("serial_prefill") {
+        None => false,
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| anyhow::anyhow!("\"serial_prefill\" must be a boolean"))?,
+    };
     let mode = SampleMode::from_flags(mode_name, temperature, top_k)?;
-    Ok(GenRequest { prompt, max_new, mode, seed, samples })
+    Ok(GenRequest { prompt, max_new, mode, seed, samples, serial_prefill })
 }
 
 fn error_response(id: Json, err: &anyhow::Error) -> Json {
@@ -142,12 +154,14 @@ pub fn serve_loop(
                     }
                     Ok(out) => {
                         eprintln!(
-                            "serve: {} prompt={}t new={}t prefill {:.1} ms decode {:.1} ms \
-                             ({:.0} tok/s, state {} B)",
+                            "serve: {} prompt={}t new={}t prefill {:.1} ms ({:.0} tok/s) \
+                             ttft {:.1} ms decode {:.1} ms ({:.0} tok/s, state {} B)",
                             session.meta().artifact_tag,
                             out.prompt_tokens,
                             out.new_tokens,
                             out.prefill_s * 1e3,
+                            out.prefill_tok_s(),
+                            out.ttft_s * 1e3,
                             out.decode_s * 1e3,
                             out.tokens_per_s(),
                             out.state_bytes,
@@ -165,6 +179,8 @@ pub fn serve_loop(
                             ("prompt_tokens", Json::num(out.prompt_tokens as f64)),
                             ("new_tokens", Json::num(out.new_tokens as f64)),
                             ("prefill_ms", Json::num(out.prefill_s * 1e3)),
+                            ("ttft_ms", Json::num(out.ttft_s * 1e3)),
+                            ("prefill_tok_s", Json::num(out.prefill_tok_s())),
                             ("decode_ms", Json::num(out.decode_s * 1e3)),
                             ("tokens_per_s", Json::num(out.tokens_per_s())),
                             ("state_bytes", Json::num(out.state_bytes as f64)),

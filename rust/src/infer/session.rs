@@ -41,6 +41,10 @@ pub struct GenRequest {
     /// Concurrent samples decoded in one batch (all from the same prompt;
     /// each draws its own tokens from the shared sampler stream).
     pub samples: usize,
+    /// Force the token-by-token prefill route (the parity oracle) instead
+    /// of the chunked fast path. Off by default; the serve smoke and the
+    /// parity tests flip it to compare the two routes.
+    pub serial_prefill: bool,
 }
 
 impl Default for GenRequest {
@@ -51,6 +55,7 @@ impl Default for GenRequest {
             mode: SampleMode::Greedy,
             seed: 0,
             samples: 1,
+            serial_prefill: false,
         }
     }
 }
@@ -68,6 +73,10 @@ pub struct GenOutcome {
     pub new_tokens: usize,
     /// Wall-clock of consuming the prompt through the recurrent state.
     pub prefill_s: f64,
+    /// Time to first token: request start → the first new token sampled
+    /// (prefill + first-token logits + the sample itself). Falls back to
+    /// `prefill_s` when `max_new` clamps to zero.
+    pub ttft_s: f64,
     /// Wall-clock of the generation loop (steps + sampling + detokenizing).
     pub decode_s: f64,
     /// Attention-state footprint at the end of decoding: constant in the
@@ -80,6 +89,15 @@ impl GenOutcome {
     pub fn tokens_per_s(&self) -> f64 {
         if self.decode_s > 0.0 {
             (self.new_tokens * self.texts.len()) as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Prompt tokens ingested per second (prefill phase only).
+    pub fn prefill_tok_s(&self) -> f64 {
+        if self.prefill_s > 0.0 {
+            self.prompt_tokens as f64 / self.prefill_s
         } else {
             0.0
         }
@@ -276,10 +294,24 @@ impl ModelSession {
 
         let t0 = Instant::now();
         // every prompt token but the last only advances the state — the
-        // unembedding GEMM is skipped until logits are actually needed
-        for &tok in &ids[..ids.len() - 1] {
-            tok_row.fill(tok);
-            bound.prefill_step_scratch(&tok_row, &mut st, &self.pool, &mut sc)?;
+        // unembedding GEMM is skipped until logits are actually needed. The
+        // default route consumes the whole prompt in one chunkwise pass per
+        // layer; `serial_prefill` keeps the token-by-token oracle reachable.
+        if ids.len() > 1 {
+            if req.serial_prefill {
+                for &tok in &ids[..ids.len() - 1] {
+                    tok_row.fill(tok);
+                    bound.prefill_step_scratch(&tok_row, &mut st, &self.pool, &mut sc)?;
+                }
+            } else {
+                let l = ids.len() - 1;
+                let mut prompt = Vec::with_capacity(n_seq * l);
+                for _ in 0..n_seq {
+                    prompt.extend_from_slice(&ids[..l]);
+                }
+                let mut psc = model::PrefillScratch::new();
+                bound.prefill_chunked(&prompt, &mut st, &self.pool, &mut psc)?;
+            }
         }
         let last = *ids.last().expect("non-empty prompt");
         tok_row.fill(last);
@@ -288,6 +320,7 @@ impl ModelSession {
         let mut logits: Vec<f32> = Vec::new();
         logits.extend_from_slice(bound.logits_step_scratch(&tok_row, &mut st, &self.pool, &mut sc)?);
         let prefill_s = t0.elapsed().as_secs_f64();
+        let mut ttft_s = prefill_s;
 
         let t1 = Instant::now();
         let v = self.cfg.vocab;
@@ -307,6 +340,9 @@ impl ModelSession {
                 texts[row].push_str(&streams[row].push(tok)?);
                 tok_row[row] = tok;
             }
+            if step == 0 {
+                ttft_s = t0.elapsed().as_secs_f64();
+            }
             if step + 1 < max_new {
                 logits.clear();
                 logits.extend_from_slice(bound.logits_step_scratch(
@@ -325,6 +361,7 @@ impl ModelSession {
             prompt_tokens: ids.len(),
             new_tokens: max_new,
             prefill_s,
+            ttft_s,
             decode_s,
             state_bytes: st.state_bytes(),
         })

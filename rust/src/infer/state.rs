@@ -195,6 +195,12 @@ impl DecodeState {
         self.pos += 1;
     }
 
+    /// Advance the position cursor by a whole prompt window — the chunked
+    /// prefill's single jump after consuming `n` tokens in one pass.
+    pub(crate) fn advance_by(&mut self, n: usize) {
+        self.pos += n;
+    }
+
     /// Total bytes held by the attention states across all layers — the
     /// decode-memory figure the bench compares across AttnKinds and
     /// precisions: constant for the linear variants, growing linearly in

@@ -45,6 +45,10 @@ SUBCOMMANDS
                  [--lm-presets tiny,small] [--lm-attns ours,softmax]
                  [--lm-steps 6] [--opt-reps 20] [--decode-tokens 64]
                  [--decode-precisions f32,bf16,int8]
+                 [--prefill-lens 512,4096] [--prefill-presets tiny]
+                 [--prefill-attns ours,gated,softmax]
+                 [--prefill-precisions f32] [--prefill-reps 3]
+                 [--prefill-chunk 0]  (0 = RUST_PALLAS_CHUNK)
                  measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
                  against the scalar single-thread reference, per-step LM
                  training cost/loss for each (preset, attn) pair through
@@ -52,17 +56,29 @@ SUBCOMMANDS
                  routes, the AdamW-update microbench (in-place vs rebuild),
                  the decode section (recurrent vs full-recompute tokens/s,
                  state/param bytes, and quantized-vs-f32 quality drift per
-                 precision; 0 disables), and writes the machine-readable
+                 precision; 0 disables), the prefill section (chunked vs
+                 serial prompt ingestion with TTFT per prompt length; empty
+                 --prefill-lens disables), and writes the machine-readable
                  speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   generate       --ckpt runs/lm_tiny_ours/final.ckpt [--prompt \"the \"]
                  [--max-new 64] [--mode greedy|sample] [--temperature 1.0]
-                 [--top-k 0] [--seed 0] [--samples 1]
+                 [--top-k 0] [--seed 0] [--samples 1] [--serial-prefill]
                  decodes through the constant-size recurrent state
-                 (ours/gated) or the growing KV cache (softmax); stats on
-                 stderr, text on stdout; accepts f32 and quantized
-                 checkpoints alike
+                 (ours/gated) or the growing KV cache (softmax); the prompt
+                 is ingested through the chunked prefill fast path unless
+                 --serial-prefill forces the token-by-token oracle; stats
+                 (incl. ttft) on stderr, text on stdout; accepts f32 and
+                 quantized checkpoints alike
+  prefill-check  [--preset tiny] [--attn ours] [--prompt-len 2048]
+                 [--precision f32] [--chunk 0] [--max-new 16] [--seed 0]
+                 [--max-logit-diff 0.5]
+                 parity gate for the two prefill routes on seeded weights
+                 (no checkpoint needed; n_ctx is widened to the prompt):
+                 ingests one deterministic prompt chunked AND serially,
+                 greedily continues both, prints one JSON line with timings
+                 and exits nonzero if the routes diverge
   quantize       --ckpt runs/lm_tiny_ours/final.ckpt --out q.ckpt
                  [--precision int8|bf16] [--check-tokens 32]
                  [--max-logit-diff 0.5]
@@ -88,6 +104,7 @@ fn main() -> Result<()> {
         Some("bench-traffic") => cmd_bench_traffic(&args),
         Some("eval-tasks") => cmd_eval_tasks(&args),
         Some("generate") => cmd_generate(&args),
+        Some("prefill-check") => cmd_prefill_check(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("serve") => cmd_serve(&args),
         Some("report") => cmd_report(&args),
@@ -191,6 +208,18 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     let opt_reps = args.get_usize("opt-reps", 20)?;
     let decode_tokens = args.get_usize("decode-tokens", 64)?;
     let decode_precisions = split_list(args.get_or("decode-precisions", "f32,bf16,int8"));
+    let prefill_lens: Vec<usize> = split_list(args.get_or("prefill-lens", "512,4096"))
+        .iter()
+        .map(|s| s.parse().map_err(|_| anyhow!("--prefill-lens expects integers, got {s:?}")))
+        .collect::<Result<Vec<usize>>>()?
+        .into_iter()
+        .filter(|&l| l > 0)
+        .collect();
+    let prefill_presets = split_list(args.get_or("prefill-presets", "tiny"));
+    let prefill_attns = split_list(args.get_or("prefill-attns", "ours,gated,softmax"));
+    let prefill_precisions = split_list(args.get_or("prefill-precisions", "f32"));
+    let prefill_reps = args.get_usize("prefill-reps", 3)?;
+    let prefill_chunk = args.get_usize("prefill-chunk", 0)?; // 0 = RUST_PALLAS_CHUNK
 
     let threads = ThreadPool::env_threads();
     let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
@@ -269,6 +298,33 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
         }
     }
 
+    // prefill section: chunked vs serial prompt ingestion with TTFT (the
+    // long-prompt time-to-first-token claim, per preset × attn × precision ×
+    // prompt length; an empty --prefill-lens disables)
+    let mut prefill_points = Vec::new();
+    if prefill_reps > 0 {
+        for preset in &prefill_presets {
+            for attn in &prefill_attns {
+                for precision in &prefill_precisions {
+                    for &len in &prefill_lens {
+                        eprintln!(
+                            "bench-native: prefill {preset}/{attn}/{precision} \
+                             ({len}-token prompt, chunked vs serial) …"
+                        );
+                        prefill_points.push(repro::bench::lm::measure_prefill(
+                            preset,
+                            attn,
+                            len,
+                            precision,
+                            prefill_chunk,
+                            prefill_reps,
+                        )?);
+                    }
+                }
+            }
+        }
+    }
+
     println!("{}", rpt::bench_native_markdown(&parallel, &scalar));
     if !lm_points.is_empty() {
         println!("{}", rpt::bench_lm_markdown(&lm_points));
@@ -279,12 +335,16 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     if !decode_points.is_empty() {
         println!("{}", rpt::bench_decode_markdown(&decode_points));
     }
+    if !prefill_points.is_empty() {
+        println!("{}", rpt::bench_prefill_markdown(&prefill_points));
+    }
     let json = rpt::bench_native_json(
         &parallel,
         &scalar,
         &lm_points,
         &opt_points,
         &decode_points,
+        &prefill_points,
         threads,
         repro::native::ours_chunk(),
     );
@@ -368,6 +428,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         mode,
         seed: args.get_u64("seed", 0)?,
         samples: args.get_usize("samples", 1)?,
+        serial_prefill: args.has("serial-prefill"),
     };
     let out = session.generate(&req)?;
     for (i, text) in out.texts.iter().enumerate() {
@@ -377,12 +438,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
         println!("{text}");
     }
     eprintln!(
-        "generated {} × {} tokens from a {}-token prompt: prefill {:.1} ms, decode {:.1} ms \
-         ({:.0} tok/s), attention state {} B ({})",
+        "generated {} × {} tokens from a {}-token prompt: prefill {:.1} ms ({:.0} tok/s, \
+         {}), ttft {:.1} ms, decode {:.1} ms ({:.0} tok/s), attention state {} B ({})",
         out.texts.len(),
         out.new_tokens,
         out.prompt_tokens,
         out.prefill_s * 1e3,
+        out.prefill_tok_s(),
+        if args.has("serial-prefill") { "serial route" } else { "chunked route" },
+        out.ttft_s * 1e3,
         out.decode_s * 1e3,
         out.tokens_per_s(),
         out.state_bytes,
@@ -391,6 +455,149 @@ fn cmd_generate(args: &Args) -> Result<()> {
             _ => "recurrent, constant in length",
         },
     );
+    Ok(())
+}
+
+/// Prefill-route parity check: ingest one long deterministic prompt through
+/// both prefill routes — token-by-token `prefill_step` (the oracle) and the
+/// chunked fast path — from seeded parameters, then continue greedily and
+/// compare. Exits nonzero on divergence, so CI can gate the chunked route
+/// on arbitrarily long prompts without training a wide-context checkpoint.
+fn cmd_prefill_check(args: &Args) -> Result<()> {
+    use std::time::Instant;
+
+    use repro::infer::DecodeState;
+    use repro::native::model::{self, AttnKind, LmConfig, Precision, QuantModel};
+    use repro::native::pool::ThreadPool;
+    use repro::runtime::Tensor;
+    use repro::util::json::Json;
+
+    let preset = args.get_or("preset", "tiny");
+    let attn = AttnKind::from_name(args.get_or("attn", "ours"))?;
+    let prompt_len = args.get_usize("prompt-len", 2048)?;
+    if prompt_len < 2 {
+        bail!("--prompt-len must be at least 2");
+    }
+    let max_new = args.get_usize("max-new", 16)?.max(1);
+    let chunk = args.get_usize("chunk", 0)?; // 0 = RUST_PALLAS_CHUNK default
+    let precision = Precision::from_name(args.get_or("precision", "f32"))?;
+    let seed = args.get_u64("seed", 0)?;
+    let max_logit_diff = args
+        .get_or("max-logit-diff", "0.5")
+        .parse::<f32>()
+        .map_err(|_| anyhow!("--max-logit-diff expects a number"))?;
+
+    let mut cfg = LmConfig::by_preset(preset, attn)?;
+    // the presets cap n_ctx well below long-prompt territory — widen the
+    // window before init_state (wpe rows are sized from n_ctx)
+    cfg.n_ctx = cfg.n_ctx.max(prompt_len + max_new + 1);
+    let mut params = cfg.init_state(seed);
+    params.truncate(cfg.n_param_arrays());
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let pool = ThreadPool::from_env();
+
+    let qm;
+    let run_cfg;
+    let bound = if precision.is_quantized() {
+        qm = QuantModel::from_params(&cfg, &refs, precision)?;
+        run_cfg = *qm.cfg();
+        model::DecodeModel::bind_quantized(&qm)?
+    } else {
+        run_cfg = cfg;
+        model::DecodeModel::bind(&cfg, &refs)?
+    };
+
+    let toks: Vec<i32> =
+        (0..prompt_len).map(|i| ((i * 31 + 7) % run_cfg.vocab) as i32).collect();
+    let greedy = |logits: &[f32]| -> i32 {
+        logits
+            .iter()
+            .enumerate()
+            .filter(|(_, x)| x.is_finite())
+            .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i as i32)
+            .expect("all logits non-finite")
+    };
+    let mut sc = model::DecodeScratch::new();
+
+    // serial oracle: one prefill_step per prompt token
+    let mut st_s = DecodeState::new(&run_cfg, 1)?;
+    let t0 = Instant::now();
+    for &t in &toks[..prompt_len - 1] {
+        bound.prefill_step_scratch(&[t], &mut st_s, &pool, &mut sc)?;
+    }
+    let serial_prefill_s = t0.elapsed().as_secs_f64();
+    let logits_s =
+        bound.logits_step_scratch(&[toks[prompt_len - 1]], &mut st_s, &pool, &mut sc)?.to_vec();
+    let serial_ttft_s = t0.elapsed().as_secs_f64();
+    let mut gen_s = Vec::with_capacity(max_new);
+    let mut cur = greedy(&logits_s);
+    for _ in 0..max_new {
+        gen_s.push(cur);
+        cur = greedy(bound.logits_step_scratch(&[cur], &mut st_s, &pool, &mut sc)?);
+    }
+
+    // chunked fast path: the whole prompt in one pass per layer
+    let mut psc = model::PrefillScratch::new();
+    let mut st_c = DecodeState::new(&run_cfg, 1)?;
+    let t1 = Instant::now();
+    if chunk > 0 {
+        bound.prefill_chunked_with(chunk, &toks[..prompt_len - 1], &mut st_c, &pool, &mut psc)?;
+    } else {
+        bound.prefill_chunked(&toks[..prompt_len - 1], &mut st_c, &pool, &mut psc)?;
+    }
+    let chunked_prefill_s = t1.elapsed().as_secs_f64();
+    let logits_c =
+        bound.logits_step_scratch(&[toks[prompt_len - 1]], &mut st_c, &pool, &mut sc)?.to_vec();
+    let chunked_ttft_s = t1.elapsed().as_secs_f64();
+    let mut gen_c = Vec::with_capacity(max_new);
+    let mut cur = greedy(&logits_c);
+    for _ in 0..max_new {
+        gen_c.push(cur);
+        cur = greedy(bound.logits_step_scratch(&[cur], &mut st_c, &pool, &mut sc)?);
+    }
+
+    let logit_diff = logits_s
+        .iter()
+        .zip(&logits_c)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    // greedy-token equality is the hard gate at f32 (reassociation noise is
+    // orders of magnitude below any realistic argmax margin); quantized
+    // states legitimately differ — one requantization per layer instead of
+    // per token — so there only the logit bound applies
+    let tokens_match = gen_s == gen_c;
+    let ok = logit_diff <= max_logit_diff && (tokens_match || precision.is_quantized());
+    let denom = (prompt_len - 1).max(1) as f64;
+    let used_chunk = if chunk > 0 { chunk } else { repro::native::ours_chunk() };
+    println!(
+        "{}",
+        Json::obj(vec![
+            ("ok", Json::Bool(ok)),
+            ("preset", Json::str(preset.to_string())),
+            ("attn", Json::str(format!("{attn:?}").to_lowercase())),
+            ("precision", Json::str(run_cfg.precision.to_string())),
+            ("prompt_tokens", Json::num(prompt_len as f64)),
+            ("chunk", Json::num(used_chunk as f64)),
+            ("tokens_match", Json::Bool(tokens_match)),
+            ("logit_max_abs_diff", Json::num(logit_diff as f64)),
+            ("serial_prefill_ms", Json::num(serial_prefill_s * 1e3)),
+            ("serial_ttft_ms", Json::num(serial_ttft_s * 1e3)),
+            ("serial_tok_s", Json::num(denom / serial_prefill_s.max(1e-12))),
+            ("chunked_prefill_ms", Json::num(chunked_prefill_s * 1e3)),
+            ("chunked_ttft_ms", Json::num(chunked_ttft_s * 1e3)),
+            ("chunked_tok_s", Json::num(denom / chunked_prefill_s.max(1e-12))),
+            ("speedup_vs_serial", Json::num(serial_prefill_s / chunked_prefill_s.max(1e-12))),
+        ])
+        .to_string()
+    );
+    if !ok {
+        bail!(
+            "prefill routes diverged for {preset}/{attn:?}/{}: tokens_match={tokens_match}, \
+             max |logit diff| {logit_diff:.4} (bound {max_logit_diff})",
+            run_cfg.precision
+        );
+    }
     Ok(())
 }
 

@@ -466,6 +466,324 @@ pub fn la_chunk_fwd(
     o
 }
 
+/// Chunkwise causal linear attention **with state carry** — the prefill
+/// form of [`la_chunk_fwd`]: the scan starts from a caller-provided
+/// per-`bh` state `s` (`bh` blocks of `dk·dv` — the recurrent decode state
+/// after the tokens already consumed) and the end-of-window state is
+/// written back into `s`, so a decode loop can continue exactly where the
+/// chunked pass left off. `o` is fully overwritten.
+///
+/// `gamma < 1` is the gated variant; the decay folds into the chunk
+/// decomposition in closed form:
+/// - inter: local row `t` of a chunk sees the chunk-entry state through
+///   `γ^{t+1}` (the state decays once per token, including its own);
+/// - intra: pair `(t, i)` (key `i ≤` query `t`) keeps weight `γ^{t-i}`;
+/// - state recurrence: `S ← γ^{rows}·S + Σ_i γ^{rows-1-i}·k_i·v_iᵀ` — the
+///   closed form of `rows` steps of `S ← γ·S + k·vᵀ`.
+///
+/// Matches the sequential scan up to f32 reassociation (GEMM-reordered
+/// sums); `gamma = 1` with a zero carry is exactly [`la_chunk_fwd`]'s math.
+#[allow(clippy::too_many_arguments)]
+pub fn la_chunk_fwd_carry(
+    pool: &ThreadPool,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    sh: LayerShape,
+    chunk: usize,
+    gamma: f32,
+    s: &mut [f32],
+    o: &mut [f32],
+) {
+    let LayerShape { bh, n, dk, dv } = sh;
+    let sd = dk * dv;
+    debug_assert!(s.len() >= bh * sd && o.len() >= bh * n * dv);
+    o[..bh * n * dv].fill(0.0);
+    if bh == 0 || n == 0 {
+        return;
+    }
+    let c = chunk.max(1);
+    let nc = n.div_ceil(c);
+    if bh.saturating_mul(nc).saturating_mul(sd) > CHUNK_STATE_FLOATS_BUDGET {
+        // bounded-memory fallback: one running state per bh, tiled GEMMs
+        let sp = SliceParts::new(s);
+        pool.run_chunks(&mut o[..bh * n * dv], n * dv, |b, ob| {
+            // SAFETY: task `b` touches carry block `b` only.
+            let sb = unsafe { sp.window(b * sd, sd) };
+            chunk_fwd_carry_one(
+                &q[b * n * dk..][..n * dk],
+                &k[b * n * dk..][..n * dk],
+                &v[b * n * dv..][..n * dv],
+                n,
+                dk,
+                dv,
+                c,
+                gamma,
+                sb,
+                ob,
+            );
+        });
+        return;
+    }
+    // phase 1: chunk-entry states seeded from the carry (and the final
+    // state back into `s`) — sequential per bh, parallel across bh
+    let mut states = vec![0.0f32; bh * nc * sd];
+    {
+        let sp = SliceParts::new(s);
+        pool.run_chunks(&mut states, nc * sd, |b, stw| {
+            // SAFETY: task `b` touches carry block `b` only.
+            let sb = unsafe { sp.window(b * sd, sd) };
+            chunk_states_prefix_carry(
+                &k[b * n * dk..][..n * dk],
+                &v[b * n * dv..][..n * dv],
+                n,
+                dk,
+                dv,
+                c,
+                nc,
+                gamma,
+                sb,
+                stw,
+            );
+        });
+    }
+    // phase 2: independent (bh, chunk) output tiles
+    let parts = SliceParts::new(o);
+    pool.run(bh * nc, |task| {
+        let (b, ci) = (task / nc, task % nc);
+        let c0 = ci * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[(b * n + c0) * dk..][..rows * dk];
+        let kb = &k[(b * n + c0) * dk..][..rows * dk];
+        let vb = &v[(b * n + c0) * dv..][..rows * dv];
+        let st = &states[(b * nc + ci) * sd..][..sd];
+        // SAFETY: tile (b, ci) owns rows [c0, ce) of batch b exclusively.
+        let ob = unsafe { parts.window((b * n + c0) * dv, rows * dv) };
+        // inter-chunk: O += Q · S_entry, row t decayed by γ^{t+1}
+        gemm::gemm_nn(qb, st, rows, dk, dv, ob);
+        if gamma != 1.0 {
+            scale_rows_geometric(ob, rows, dv, gamma);
+        }
+        // intra-chunk: masked (and decayed) local quadratic
+        if gamma == 1.0 {
+            quad_fwd_one(qb, kb, vb, rows, dk, dv, ob);
+        } else {
+            quad_fwd_decayed_one(qb, kb, vb, rows, dk, dv, gamma, ob);
+        }
+    });
+}
+
+/// One `bh` slice of the carry forward with a single running state — the
+/// bounded-memory fallback of [`la_chunk_fwd_carry`].
+#[allow(clippy::too_many_arguments)]
+fn chunk_fwd_carry_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    c: usize,
+    gamma: f32,
+    s: &mut [f32],
+    o: &mut [f32],
+) {
+    let mut kdec = vec![0.0f32; if gamma != 1.0 { c * dk } else { 0 }];
+    let mut c0 = 0;
+    while c0 < n {
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let qb = &q[c0 * dk..][..rows * dk];
+        let kb = &k[c0 * dk..][..rows * dk];
+        let vb = &v[c0 * dv..][..rows * dv];
+        let ob = &mut o[c0 * dv..][..rows * dv];
+        gemm::gemm_nn(qb, s, rows, dk, dv, ob);
+        if gamma != 1.0 {
+            scale_rows_geometric(ob, rows, dv, gamma);
+        }
+        if gamma == 1.0 {
+            quad_fwd_one(qb, kb, vb, rows, dk, dv, ob);
+            gemm::gemm_tn(kb, vb, dk, rows, dv, s);
+        } else {
+            quad_fwd_decayed_one(qb, kb, vb, rows, dk, dv, gamma, ob);
+            chunk_state_decay_step(kb, vb, rows, dk, dv, gamma, &mut kdec, s);
+        }
+        c0 = ce;
+    }
+}
+
+/// Per-chunk entry states seeded from the carry: `st[0] = s`, then each
+/// chunk advances the recurrence; the same step once more (over the last
+/// chunk) writes the end-of-window state back into `s`.
+#[allow(clippy::too_many_arguments)]
+fn chunk_states_prefix_carry(
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    c: usize,
+    nc: usize,
+    gamma: f32,
+    s: &mut [f32],
+    st: &mut [f32],
+) {
+    let sd = dk * dv;
+    let mut kdec = vec![0.0f32; if gamma != 1.0 { c * dk } else { 0 }];
+    st[..sd].copy_from_slice(&s[..sd]);
+    for i in 1..=nc {
+        let c0 = (i - 1) * c;
+        let ce = (c0 + c).min(n);
+        let rows = ce - c0;
+        let kb = &k[c0 * dk..][..rows * dk];
+        let vb = &v[c0 * dv..][..rows * dv];
+        if i < nc {
+            let (head, tail) = st.split_at_mut(i * sd);
+            let prev = &head[(i - 1) * sd..];
+            let cur = &mut tail[..sd];
+            chunk_state_advance(prev, kb, vb, rows, dk, dv, gamma, &mut kdec, cur);
+        } else {
+            // the final chunk advances the last entry state into the carry
+            let prev = &st[(nc - 1) * sd..][..sd];
+            chunk_state_advance(prev, kb, vb, rows, dk, dv, gamma, &mut kdec, s);
+        }
+    }
+}
+
+/// `cur = γ^{rows}·prev + Σ_i γ^{rows-1-i}·k_iᵀ·v_i` over one chunk
+/// (`γ = 1` degenerates to copy + plain `KᵀV`).
+// deny_alloc
+#[allow(clippy::too_many_arguments)]
+fn chunk_state_advance(
+    prev: &[f32],
+    kb: &[f32],
+    vb: &[f32],
+    rows: usize,
+    dk: usize,
+    dv: usize,
+    gamma: f32,
+    kdec: &mut [f32],
+    cur: &mut [f32],
+) {
+    if gamma == 1.0 {
+        cur.copy_from_slice(prev);
+        gemm::gemm_tn(kb, vb, dk, rows, dv, cur);
+    } else {
+        let g = gamma.powi(rows as i32);
+        for (o, &p) in cur.iter_mut().zip(prev) {
+            *o = g * p;
+        }
+        decay_rows_into(kb, rows, dk, gamma, kdec);
+        gemm::gemm_tn(&kdec[..rows * dk], vb, dk, rows, dv, cur);
+    }
+}
+
+/// In-place chunk-state step for the running-state fallback:
+/// `s ← γ^{rows}·s + Σ_i γ^{rows-1-i}·k_iᵀ·v_i`.
+// deny_alloc
+#[allow(clippy::too_many_arguments)]
+fn chunk_state_decay_step(
+    kb: &[f32],
+    vb: &[f32],
+    rows: usize,
+    dk: usize,
+    dv: usize,
+    gamma: f32,
+    kdec: &mut [f32],
+    s: &mut [f32],
+) {
+    let g = gamma.powi(rows as i32);
+    for x in s.iter_mut() {
+        *x *= g;
+    }
+    decay_rows_into(kb, rows, dk, gamma, kdec);
+    gemm::gemm_tn(&kdec[..rows * dk], vb, dk, rows, dv, s);
+}
+
+/// Scale row `t` of a `rows×cols` tile by `γ^{t+1}` — the inter-chunk decay
+/// of the carried state as seen from local position `t`.
+// deny_alloc
+fn scale_rows_geometric(o: &mut [f32], rows: usize, cols: usize, gamma: f32) {
+    let mut g = gamma;
+    for r in 0..rows {
+        for x in &mut o[r * cols..][..cols] {
+            *x *= g;
+        }
+        g *= gamma;
+    }
+}
+
+/// `out` row `i` = `γ^{rows-1-i}·k_i` — the per-token decay weights one
+/// chunk's keys contribute to the chunk-state sum.
+// deny_alloc
+fn decay_rows_into(k: &[f32], rows: usize, dk: usize, gamma: f32, out: &mut [f32]) {
+    let mut g = 1.0f32;
+    for i in (0..rows).rev() {
+        let kr = &k[i * dk..][..dk];
+        let orow = &mut out[i * dk..][..dk];
+        for (o, &x) in orow.iter_mut().zip(kr) {
+            *o = g * x;
+        }
+        g *= gamma;
+    }
+}
+
+/// Causal decay mask on a score tile whose rows are queries `t0..t0+rows`
+/// and columns keys `s0..s0+cols`: pair `(t, s)` keeps weight `γ^{t-s}` for
+/// `s ≤ t` and is zeroed otherwise.
+// deny_alloc
+fn apply_causal_decay(att: &mut [f32], rows: usize, cols: usize, t0: usize, s0: usize, gamma: f32) {
+    for t in 0..rows {
+        let tq = t0 + t;
+        let arow = &mut att[t * cols..][..cols];
+        for (i, x) in arow.iter_mut().enumerate() {
+            let sk = s0 + i;
+            if sk > tq {
+                *x = 0.0;
+            } else {
+                *x *= gamma.powi((tq - sk) as i32);
+            }
+        }
+    }
+}
+
+/// [`quad_fwd_one`] with the pairwise decay `γ^{t-s}` folded into every
+/// score tile — the intra-chunk term of the gated chunkwise forward.
+#[allow(clippy::too_many_arguments)]
+fn quad_fwd_decayed_one(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    dk: usize,
+    dv: usize,
+    gamma: f32,
+    o: &mut [f32],
+) {
+    let nb = n.div_ceil(QUAD_BLOCK);
+    let mut att = vec![0.0f32; QUAD_BLOCK * QUAD_BLOCK];
+    for ti in 0..nb {
+        let t0 = ti * QUAD_BLOCK;
+        let te = (t0 + QUAD_BLOCK).min(n);
+        let rows = te - t0;
+        let qb = &q[t0 * dk..][..rows * dk];
+        let ob = &mut o[t0 * dv..][..rows * dv];
+        for si in 0..=ti {
+            let s0 = si * QUAD_BLOCK;
+            let se = (s0 + QUAD_BLOCK).min(n);
+            let cols = se - s0;
+            let kb = &k[s0 * dk..][..cols * dk];
+            let vb = &v[s0 * dv..][..cols * dv];
+            let at = &mut att[..rows * cols];
+            at.fill(0.0);
+            gemm::gemm_nt(qb, kb, rows, dk, cols, at);
+            apply_causal_decay(at, rows, cols, t0, s0, gamma);
+            gemm::gemm_nn(at, vb, rows, cols, dv, ob);
+        }
+    }
+}
+
 /// Backward of [`la_chunk_fwd`]: same inter/intra split; prefix states drive
 /// `dq`, suffix states drive `dk`/`dv`, and every `(bh, chunk)` gradient
 /// tile is independent once both state sets exist.

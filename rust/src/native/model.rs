@@ -47,7 +47,9 @@ use crate::infer::state::{AttnState, DecodeState};
 use crate::runtime::Tensor;
 
 use super::gemm;
-use super::kernels::{la_scan_bwd, la_scan_fwd, softmax_bwd, softmax_fwd, LayerShape};
+use super::kernels::{
+    la_chunk_fwd_carry, la_scan_bwd, la_scan_fwd, softmax_bwd, softmax_fwd, LayerShape,
+};
 use super::pool::ThreadPool;
 use super::quant::{self, QuantBuf};
 
@@ -1262,6 +1264,90 @@ impl DecodeScratch {
     }
 }
 
+/// Caller-held work buffers for the chunked prompt prefill — the whole-window
+/// sibling of [`DecodeScratch`]: every buffer spans all `ns · l` prompt rows
+/// of one layer pass instead of one token. Sized once by `ensure` at the top
+/// of [`DecodeModel::prefill_chunked`] and reused, so a warm prefill's
+/// allocation count is bounded by the number of chunks the kernels tile the
+/// window into (the chunkwise states + per-tile score buffers), never by the
+/// prompt length. `tests/alloc_gate.rs` pins that budget.
+#[derive(Default)]
+pub struct PrefillScratch {
+    /// Residual stream (`ns·l × d`), seq-major (row `r = s·l + t`); taken
+    /// out of the struct during a pass so `block_prefill` can borrow it
+    /// mutably alongside the other buffers.
+    h: Vec<f32>,
+    x1: Vec<f32>,
+    qp: Vec<f32>,
+    kp: Vec<f32>,
+    vp: Vec<f32>,
+    qh: Vec<f32>,
+    kh: Vec<f32>,
+    vh: Vec<f32>,
+    fq: Vec<f32>,
+    fk: Vec<f32>,
+    vext: Vec<f32>,
+    /// Chunkwise-kernel output: one `hd+1` row (`Sᵀ·φ(q)` ++ normalizer)
+    /// per (seq, head, token).
+    u: Vec<f32>,
+    ah: Vec<f32>,
+    a: Vec<f32>,
+    x2: Vec<f32>,
+    m1: Vec<f32>,
+    gact: Vec<f32>,
+    /// f32 staging for one layer's whole recurrent state (`n_sh` blocks of
+    /// `hd·(hd+1)`): dequantized in, scanned by the carry kernel, then
+    /// requantized back in one [`QuantBuf::store_f32`] pass.
+    s0: Vec<f32>,
+    /// Token-major staging for the softmax KV cache: the head-major
+    /// projections transposed into the cache's `(token, seq·head)` row
+    /// order so the whole window appends in one `append_rows` call.
+    kstage: Vec<f32>,
+    vstage: Vec<f32>,
+    /// Softmax score rows, one `n_ctx` window per in-flight (query, head)
+    /// task — bounded by the chunk length, not the prompt length.
+    scores: Vec<f32>,
+}
+
+impl PrefillScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to the sizes a `(cfg, ns, l)` prefill pass needs.
+    fn ensure(&mut self, cfg: &LmConfig, ns: usize, l: usize, chunk: usize) {
+        let d = cfg.d_model;
+        let (nh, hd) = (cfg.n_head, cfg.head_dim());
+        let n_sh = ns * nh;
+        let rows = ns * l;
+        let f = cfg.d_ff;
+        self.h.resize(rows * d, 0.0);
+        self.x1.resize(rows * d, 0.0);
+        self.qp.resize(rows * d, 0.0);
+        self.kp.resize(rows * d, 0.0);
+        self.vp.resize(rows * d, 0.0);
+        self.qh.resize(rows * d, 0.0);
+        self.kh.resize(rows * d, 0.0);
+        self.vh.resize(rows * d, 0.0);
+        self.a.resize(rows * d, 0.0);
+        self.x2.resize(rows * d, 0.0);
+        self.m1.resize(rows * f, 0.0);
+        self.gact.resize(rows * f, 0.0);
+        if cfg.attn == AttnKind::Softmax {
+            self.kstage.resize(rows * d, 0.0);
+            self.vstage.resize(rows * d, 0.0);
+            self.scores.resize(n_sh * chunk.min(l) * cfg.n_ctx, 0.0);
+        } else {
+            self.fq.resize(rows * d, 0.0);
+            self.fk.resize(rows * d, 0.0);
+            self.vext.resize(n_sh * l * (hd + 1), 0.0);
+            self.u.resize(n_sh * l * (hd + 1), 0.0);
+            self.s0.resize(n_sh * hd * (hd + 1), 0.0);
+        }
+        self.ah.resize(n_sh * l * hd, 0.0);
+    }
+}
+
 /// Parameter views bound and shape-checked **once** for a decode session.
 /// The free [`logits_step`]/[`prefill_step`] functions rebind per call —
 /// fine for tests and one-shot use, but a generation loop issues one call
@@ -1332,6 +1418,95 @@ impl<'a> DecodeModel<'a> {
         sc: &mut DecodeScratch,
     ) -> Result<()> {
         self.step_with(tokens, st, pool, sc, false).map(|_| ())
+    }
+
+    /// Chunked prompt prefill: consume `l` tokens per sequence (`tokens` is
+    /// seq-major, `ns · l` ids) in **one pass per layer** through the
+    /// parallel chunkwise kernels instead of `l` sequential
+    /// [`prefill_step`](Self::prefill_step) calls — the projections, MLP and
+    /// reshapes run batched over all `ns · l` rows, the linear variants scan
+    /// via [`la_chunk_fwd_carry`] (inter/intra GEMM tiles with the decode
+    /// state as the carry), and softmax fills its KV cache in one bulk
+    /// append plus a blocked pass of the streaming quadratic kernel. The
+    /// [`DecodeState`] afterwards is the same state the token-by-token route
+    /// produces (bit-exact for softmax/f32, reassociation-tolerance for the
+    /// linear kinds, one requantization per layer instead of per token for
+    /// bf16/int8 — `tests/infer.rs` pins all of it), so decoding continues
+    /// seamlessly. No logits are computed; follow with
+    /// [`logits_step_scratch`](Self::logits_step_scratch) on the last prompt
+    /// token.
+    ///
+    /// Chunk length comes from `RUST_PALLAS_CHUNK` (default 128) — use
+    /// [`prefill_chunked_with`](Self::prefill_chunked_with) to pin it.
+    pub fn prefill_chunked(
+        &self,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+        sc: &mut PrefillScratch,
+    ) -> Result<()> {
+        self.prefill_chunked_with(super::ours_chunk(), tokens, st, pool, sc)
+    }
+
+    /// [`prefill_chunked`](Self::prefill_chunked) with an explicit chunk
+    /// length (the chunk-invariance tests sweep this directly instead of
+    /// mutating the process environment).
+    pub fn prefill_chunked_with(
+        &self,
+        chunk: usize,
+        tokens: &[i32],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+        sc: &mut PrefillScratch,
+    ) -> Result<()> {
+        let (cfg, p) = (&self.cfg, &self.p);
+        st.check(cfg)?;
+        let ns = st.n_seq();
+        if tokens.is_empty() || tokens.len() % ns != 0 {
+            bail!(
+                "prefill_chunked wants a non-empty seq-major window of {} sequences \
+                 (l ids each), got {} token ids",
+                ns,
+                tokens.len()
+            );
+        }
+        let l = tokens.len() / ns;
+        let pos = st.pos();
+        let (d, v) = (cfg.d_model, cfg.vocab);
+        if pos + l > cfg.n_ctx {
+            bail!(
+                "context window exhausted: positions [{pos}, {}) exceed n_ctx {} — \
+                 reset the DecodeState",
+                pos + l,
+                cfg.n_ctx
+            );
+        }
+        let chunk = chunk.max(1);
+        sc.ensure(cfg, ns, l, chunk);
+
+        // h[s·l + t] = wte[tok] + wpe[pos + t], all prompt rows at once
+        let mut h = std::mem::take(&mut sc.h);
+        let wte = p.at(p.idx.wte);
+        let wpe = p.at(p.idx.wpe);
+        for (r, &tok) in tokens.iter().enumerate() {
+            if tok < 0 || tok as usize >= v {
+                sc.h = h;
+                bail!("token id {tok} out of range [0, {v})");
+            }
+            let te = &wte[tok as usize * d..][..d];
+            let pe = &wpe[(pos + r % l) * d..][..d];
+            let hr = &mut h[r * d..][..d];
+            for ((hx, a), b) in hr.iter_mut().zip(te).zip(pe) {
+                *hx = a + b;
+            }
+        }
+
+        for (li, bi) in p.idx.blocks.iter().enumerate() {
+            block_prefill(cfg, p, bi, &mut h, st.layer_mut(li), ns, l, pos, chunk, pool, sc);
+        }
+        st.advance_by(l);
+        sc.h = h;
+        Ok(())
     }
 
     /// Shared one-token step: embed, run every block through the decode
@@ -1665,6 +1840,189 @@ fn linear_state_task(
     let z = uw[hd] + EPS;
     for (ax, ux) in aw.iter_mut().zip(&uw[..hd]) {
         *ax = ux / z;
+    }
+}
+
+/// One block of the chunked prefill: the whole-window sibling of
+/// [`block_step`]. Same pre-norm attention + residual, pre-norm MLP +
+/// residual structure, but batched over all `ns · l` prompt rows so the
+/// projections/MLP are real GEMMs and the attention mixer runs through the
+/// parallel chunkwise kernels:
+///
+/// - **Linear** (`ours`/`gated`): the layer's recurrent state is
+///   dequantized once into `sc.s0`, [`la_chunk_fwd_carry`] advances it over
+///   the window (per-chunk inter/intra GEMM tiles, prefix-state carry — the
+///   training-scan decomposition), and the result is requantized back in
+///   one [`QuantBuf::store_f32`] pass (vs per token in `block_step`).
+/// - **Softmax**: the head-major K/V projections are transposed into the
+///   cache's token-major row order, appended in one bulk call, then the
+///   queries run the identical streaming two-pass softmax as `block_step`,
+///   blocked `chunk` rows at a time so the score scratch stays bounded by
+///   the chunk length.
+// deny_alloc
+#[allow(clippy::too_many_arguments)]
+fn block_prefill(
+    cfg: &LmConfig,
+    p: &DecodeP,
+    bi: &BlockIdx,
+    h: &mut [f32],
+    ls: &mut AttnState,
+    ns: usize,
+    l: usize,
+    pos: usize,
+    chunk: usize,
+    pool: &ThreadPool,
+    sc: &mut PrefillScratch,
+) {
+    let d = cfg.d_model;
+    let (nh, hd) = (cfg.n_head, cfg.head_dim());
+    let n_sh = ns * nh;
+    let rows = ns * l;
+
+    match bi.ln1 {
+        Some(i) => ln_fwd_into(h, p.at(i), p.at(i + 1), rows, d, &mut sc.x1),
+        None => sc.x1.copy_from_slice(h),
+    }
+    // matmul accumulates into its output: clear the projection buffers
+    sc.qp.fill(0.0);
+    sc.kp.fill(0.0);
+    sc.vp.fill(0.0);
+    matmul_q(pool, &sc.x1, p.w(bi.wq), rows, d, d, &mut sc.qp);
+    matmul_q(pool, &sc.x1, p.w(bi.wq + 1), rows, d, d, &mut sc.kp);
+    matmul_q(pool, &sc.x1, p.w(bi.wq + 2), rows, d, d, &mut sc.vp);
+    split_heads_into(&sc.qp, ns, l, nh, hd, &mut sc.qh);
+    split_heads_into(&sc.kp, ns, l, nh, hd, &mut sc.kh);
+    split_heads_into(&sc.vp, ns, l, nh, hd, &mut sc.vh);
+
+    sc.ah.fill(0.0);
+    match ls {
+        AttnState::Linear { s, gamma } => {
+            // φ(q), φ(k), [v, 1] for every (seq, head, token) row
+            for (o, &x) in sc.fq.iter_mut().zip(sc.qh.iter()) {
+                *o = elu1(x);
+            }
+            for (o, &x) in sc.fk.iter_mut().zip(sc.kh.iter()) {
+                *o = elu1(x);
+            }
+            for r in 0..n_sh * l {
+                sc.vext[r * (hd + 1)..][..hd].copy_from_slice(&sc.vh[r * hd..][..hd]);
+                sc.vext[r * (hd + 1) + hd] = 1.0;
+            }
+            // whole-layer state staged in f32, scanned by the carry kernel,
+            // requantized back once (vs per token in block_step)
+            s.dequantize_into(&mut sc.s0);
+            let shp = LayerShape { bh: n_sh, n: l, dk: hd, dv: hd + 1 };
+            la_chunk_fwd_carry(
+                pool,
+                &sc.fq,
+                &sc.fk,
+                &sc.vext,
+                shp,
+                chunk,
+                *gamma,
+                &mut sc.s0,
+                &mut sc.u,
+            );
+            s.store_f32(&sc.s0);
+            normalize_linear_rows(&sc.u, hd, &mut sc.ah);
+        }
+        AttnState::Softmax { k, v } => {
+            // head-major [(s,h)][t][hd] → the cache's token-major
+            // [t][(s,h)][hd] rows, then one bulk (quantizing) append
+            for shi in 0..n_sh {
+                for t in 0..l {
+                    let kk = &sc.kh[(shi * l + t) * hd..][..hd];
+                    sc.kstage[(t * n_sh + shi) * hd..][..hd].copy_from_slice(kk);
+                    let vv = &sc.vh[(shi * l + t) * hd..][..hd];
+                    sc.vstage[(t * n_sh + shi) * hd..][..hd].copy_from_slice(vv);
+                }
+            }
+            k.append_rows(&sc.kstage[..rows * d]);
+            v.append_rows(&sc.vstage[..rows * d]);
+            let (kc, vc) = (&*k, &*v);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let qh = &sc.qh[..];
+            let nctx = cfg.n_ctx;
+            // identical per-query streaming softmax as block_step (same
+            // accumulation order ⇒ same bits), blocked `chunk` query rows
+            // at a time so the score scratch is chunk-bounded
+            let qblock = chunk.min(l);
+            let scp = super::pool::SliceParts::new(&mut sc.scores);
+            let ap = super::pool::SliceParts::new(&mut sc.ah);
+            let mut q0 = 0;
+            while q0 < l {
+                let tb = qblock.min(l - q0);
+                let base = q0;
+                pool.run(tb * n_sh, |task| {
+                    let (ti, sh) = (task / n_sh, task % n_sh);
+                    let t = base + ti;
+                    let g = pos + t; // global position of this query row
+                    let qr = &qh[(sh * l + t) * hd..][..hd];
+                    // SAFETY: task `task` touches scores window `task` and
+                    // ah window `(sh·l + t)` only — each (t, sh) pair occurs
+                    // in exactly one task across the query blocks.
+                    let (scores, out) = unsafe {
+                        (scp.window(task * nctx, g + 1), ap.window((sh * l + t) * hd, hd))
+                    };
+                    let mut m = f32::NEG_INFINITY;
+                    for (tt, sx) in scores.iter_mut().enumerate() {
+                        let a = kc.row_dot(tt * n_sh + sh, hd, qr) * scale;
+                        *sx = a;
+                        m = m.max(a);
+                    }
+                    let mut z = 0.0f32;
+                    for sx in scores.iter_mut() {
+                        *sx = (*sx - m).exp();
+                        z += *sx;
+                    }
+                    let inv = 1.0 / z;
+                    for (tt, sx) in scores.iter().enumerate() {
+                        vc.row_axpy(tt * n_sh + sh, hd, sx * inv, out);
+                    }
+                });
+                q0 += tb;
+            }
+        }
+    }
+    merge_heads_into(&sc.ah, ns, l, nh, hd, &mut sc.a);
+    matmul_q(pool, &sc.a, p.w(bi.wq + 3), rows, d, d, h);
+
+    if let Some(mi) = bi.mlp {
+        let f = cfg.d_ff;
+        match bi.ln2 {
+            Some(i) => ln_fwd_into(h, p.at(i), p.at(i + 1), rows, d, &mut sc.x2),
+            None => sc.x2.copy_from_slice(h),
+        }
+        let b1 = p.at(mi + 1);
+        for r in 0..rows {
+            sc.m1[r * f..][..f].copy_from_slice(b1);
+        }
+        matmul_q(pool, &sc.x2, p.w(mi), rows, d, f, &mut sc.m1);
+        for (o, &x) in sc.gact.iter_mut().zip(sc.m1.iter()) {
+            *o = gelu(x);
+        }
+        let b2 = p.at(mi + 3);
+        for r in 0..rows {
+            let hr = &mut h[r * d..][..d];
+            for (hx, bx) in hr.iter_mut().zip(b2) {
+                *hx += bx;
+            }
+        }
+        matmul_q(pool, &sc.gact, p.w(mi + 2), rows, f, d, h);
+    }
+}
+
+/// The linear variants' normalizer divide over whole-window kernel output:
+/// each `hd+1` row of `u` is `Sᵀ·φ(q)` ++ ones-channel; `ah` gets the first
+/// `hd` entries divided by the (floored) normalizer — the batched form of
+/// [`linear_state_task`]'s tail.
+// deny_alloc
+fn normalize_linear_rows(u: &[f32], hd: usize, ah: &mut [f32]) {
+    for (ur, ar) in u.chunks_exact(hd + 1).zip(ah.chunks_exact_mut(hd)) {
+        let z = ur[hd] + EPS;
+        for (a, &x) in ar.iter_mut().zip(&ur[..hd]) {
+            *a = x / z;
+        }
     }
 }
 

@@ -263,6 +263,29 @@ impl QuantBuf {
         }
     }
 
+    /// Re-encode the whole buffer from `src` (`src.len() == self.len()`),
+    /// requantizing per int8 row — the bulk inverse of
+    /// [`Self::dequantize_into`], used by chunked prefill to write the
+    /// f32-accumulated recurrent state back in one pass.
+    // deny_alloc
+    pub fn store_f32(&mut self, src: &[f32]) {
+        match self {
+            QuantBuf::F32(d) => d.copy_from_slice(src),
+            QuantBuf::Bf16(d) => {
+                debug_assert_eq!(d.len(), src.len());
+                for (o, &x) in d.iter_mut().zip(src) {
+                    *o = f32_to_bf16(x);
+                }
+            }
+            QuantBuf::Int8 { q, scales, row } => {
+                debug_assert_eq!(q.len(), src.len());
+                for (r, chunk) in src.chunks_exact(*row).enumerate() {
+                    scales[r] = quantize_row_i8(chunk, &mut q[r * *row..][..*row]);
+                }
+            }
+        }
+    }
+
     /// Append whole rows (quantizing as needed). `src.len()` must be a
     /// multiple of the int8 `row`; for f32/bf16 any length is a "row".
     /// Allocation-free while the reserved capacity lasts.

@@ -19,6 +19,10 @@
 //!   is **strictly allocation-free** for every `AttnKind` — linear variants
 //!   by scratch reuse, softmax additionally via the `n_ctx`-reserved KV
 //!   cache.
+//! - warm chunked prefill (`prefill_chunked_with` on a caller-held
+//!   [`PrefillScratch`]) allocates **O(chunk count)** — the carry kernel's
+//!   chunk-state table and constant-size tile scratch — never O(prompt
+//!   tokens): equal chunk counts at 3× the tokens measure equal.
 //! - `train_step_mut` cannot be literally zero-alloc (the forward/backward
 //!   activations are per-step temporaries by design), so it is pinned to
 //!   **net-zero retained bytes** and a **constant per-step allocation
@@ -27,7 +31,7 @@
 #![cfg(feature = "alloc-gate")]
 
 use repro::infer::DecodeState;
-use repro::native::model::{self, AdamwScratch, AttnKind, DecodeScratch, LmConfig, Precision};
+use repro::native::model::{self, AdamwScratch, AttnKind, DecodeScratch, LmConfig, Precision, PrefillScratch};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;
 use repro::util::alloc_gate::measure;
@@ -97,6 +101,65 @@ fn decode_step_is_allocation_free_when_warm_for_every_attn_kind() {
         assert_no_alloc!(format!("prefill_step_scratch (warm, {attn:?})"), {
             bound.prefill_step_scratch(&[1, 1], &mut st, &pool, &mut sc).unwrap()
         });
+    }
+}
+
+#[test]
+fn warm_chunked_prefill_allocates_per_chunk_not_per_token() {
+    // the chunked-prefill satellite contract: with a warm caller-held
+    // [`PrefillScratch`], the only allocations left in a whole-prompt pass
+    // are the carry kernel's per-window chunk-state table (1 per layer),
+    // its per-(seq·head) decay staging (gated only), and the constant-size
+    // per-(seq·head, chunk) quadratic tile scratch — all O(chunk count),
+    // never O(prompt tokens). Softmax prefill is fully scratch-resident
+    // (zero), which the same budget trivially admits.
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let mut state = cfg.init_state(4);
+        state.truncate(cfg.n_param_arrays());
+        let params: Vec<&Tensor> = state.iter().collect();
+        let pool = ThreadPool::new(1);
+        let bound = model::DecodeModel::bind(&cfg, &params).unwrap();
+        let mut psc = PrefillScratch::new();
+        let bh = 2 * cfg.n_head; // 2 sequences
+
+        // warm, 48-token prompt in 16-token chunks (nc = 3)
+        let (l, chunk) = (48usize, 16usize);
+        let nc = l.div_ceil(chunk);
+        let toks: Vec<i32> = (0..2 * l).map(|i| (i % 23) as i32).collect();
+        let mut st = DecodeState::new(&cfg, 2).unwrap();
+        // warm-up pass grows every scratch buffer to its steady size
+        bound.prefill_chunked_with(chunk, &toks, &mut st, &pool, &mut psc).unwrap();
+        let budget = cfg.n_layer * (1 + bh + bh * nc) + 4;
+        let mut st = DecodeState::new(&cfg, 2).unwrap();
+        alloc_budget!(format!("prefill_chunked (warm, {attn:?})"), max_allocs = budget, {
+            bound.prefill_chunked_with(chunk, &toks, &mut st, &pool, &mut psc).unwrap()
+        });
+        // the prefilled window decodes on without further allocation
+        let mut sc = DecodeScratch::new();
+        bound.logits_step_scratch(&[1, 2], &mut st, &pool, &mut sc).unwrap();
+
+        // chunk-count invariance: one 16-token chunk and one 48-token chunk
+        // are both nc = 1 — identical warm allocation counts at 3× the
+        // tokens, and nothing retained after either pass
+        let mut run_allocs = |l: usize, chunk: usize| -> usize {
+            let toks: Vec<i32> = (0..2 * l).map(|i| (i % 23) as i32).collect();
+            let mut st = DecodeState::new(&cfg, 2).unwrap();
+            // warm-up sizes the scratch for this (l, chunk) shape
+            bound.prefill_chunked_with(chunk, &toks, &mut st, &pool, &mut psc).unwrap();
+            let mut st = DecodeState::new(&cfg, 2).unwrap();
+            let ((), d) = measure(|| {
+                bound.prefill_chunked_with(chunk, &toks, &mut st, &pool, &mut psc).unwrap()
+            });
+            assert_eq!(d.net_bytes(), 0, "{attn:?} l={l}: prefill retained bytes: {d:?}");
+            d.allocs
+        };
+        let short = run_allocs(16, 16);
+        let long = run_allocs(48, 48);
+        assert_eq!(
+            short, long,
+            "{attn:?}: warm prefill allocations must track chunk count, not prompt length"
+        );
     }
 }
 

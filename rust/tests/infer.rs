@@ -121,6 +121,165 @@ fn prefill_step_advances_state_identically() {
     }
 }
 
+/// Greedy decode from a chunked-prefilled state must match the
+/// token-by-token-prefilled state for every mixer family at both preset
+/// depths: identical continuation tokens, first-step logits within TOL.
+/// Softmax is additionally bit-exact off-simd — the blocked prefill runs
+/// the same streaming two-pass softmax in the same accumulation order as
+/// the per-token step — while the linear kinds see GEMM-reordered sums
+/// (inter/intra chunk split), so they get the rounding tolerance.
+#[test]
+fn chunked_prefill_matches_serial_prefill_for_every_attn_kind() {
+    let pool = ThreadPool::new(4);
+    for preset in ["tiny", "small"] {
+        for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+            let cfg = LmConfig::by_preset(preset, attn).unwrap();
+            let params = param_state(&cfg, 13);
+            let refs: Vec<&Tensor> = params.iter().collect();
+            let bound = model::DecodeModel::bind(&cfg, &refs).unwrap();
+            let steps = 8;
+            // leave room in the window for the greedy continuation; cap the
+            // deeper preset so the debug-profile serial oracle stays cheap
+            let l = (cfg.n_ctx - steps - 1).min(96);
+            let toks: Vec<i32> =
+                (0..l).map(|i| ((i * 31 + 7) % cfg.vocab) as i32).collect();
+
+            // serial oracle: one prefill_step per prompt token
+            let mut st_s = DecodeState::new(&cfg, 1).unwrap();
+            let mut dsc = model::DecodeScratch::new();
+            for &t in &toks[..l - 1] {
+                bound.prefill_step_scratch(&[t], &mut st_s, &pool, &mut dsc).unwrap();
+            }
+
+            // chunked route: whole prompt in one pass, ragged tail included
+            let mut st_c = DecodeState::new(&cfg, 1).unwrap();
+            let mut psc = model::PrefillScratch::new();
+            bound.prefill_chunked_with(16, &toks[..l - 1], &mut st_c, &pool, &mut psc).unwrap();
+
+            assert_eq!(st_s.pos(), st_c.pos(), "{preset}/{attn:?}: position skew");
+            assert_eq!(
+                st_s.state_bytes(),
+                st_c.state_bytes(),
+                "{preset}/{attn:?}: state footprint skew"
+            );
+
+            let run = |st: &mut DecodeState| -> (Vec<f32>, Vec<i32>) {
+                let mut sc = model::DecodeScratch::new();
+                let mut first = Vec::new();
+                let mut out = Vec::new();
+                let mut tok = toks[l - 1];
+                for s in 0..steps {
+                    let logits =
+                        bound.logits_step_scratch(&[tok], st, &pool, &mut sc).unwrap();
+                    if s == 0 {
+                        first = logits.to_vec();
+                    }
+                    tok = logits
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, x)| x.is_finite())
+                        .max_by(|a, b| a.1.total_cmp(b.1).then(b.0.cmp(&a.0)))
+                        .map(|(i, _)| i as i32)
+                        .unwrap();
+                    out.push(tok);
+                }
+                (first, out)
+            };
+            let (first_s, gen_s) = run(&mut st_s);
+            let (first_c, gen_c) = run(&mut st_c);
+
+            let d = first_s
+                .iter()
+                .zip(&first_c)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(d < TOL, "{preset}/{attn:?}: first logits diverge (max {d})");
+            assert_eq!(gen_s, gen_c, "{preset}/{attn:?}: greedy continuations diverge");
+            #[cfg(not(feature = "simd"))]
+            if attn == AttnKind::Softmax {
+                // same kernels, same accumulation order ⇒ same bits
+                assert_eq!(first_s, first_c, "{preset}: softmax prefill must be exact");
+            }
+        }
+    }
+}
+
+/// The chunk length is a throughput knob, not a semantics knob: sweeping it
+/// (including one chunk larger than the whole prompt, and a ragged tail)
+/// must leave the post-prefill logits within rounding of each other, with
+/// the prompt batched over two sequences.
+#[test]
+fn chunked_prefill_is_chunk_length_invariant() {
+    let pool = ThreadPool::new(2);
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let params = param_state(&cfg, 17);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let bound = model::DecodeModel::bind(&cfg, &refs).unwrap();
+        let l = cfg.n_ctx - 10; // not a multiple of 16: exercises the tail
+        let toks: Vec<i32> =
+            (0..2 * l).map(|i| ((i * 31 + 7) % cfg.vocab) as i32).collect();
+        let mut outs = Vec::new();
+        for chunk in [16usize, 128] {
+            let mut st = DecodeState::new(&cfg, 2).unwrap();
+            let mut psc = model::PrefillScratch::new();
+            bound.prefill_chunked_with(chunk, &toks, &mut st, &pool, &mut psc).unwrap();
+            assert_eq!(st.pos(), l, "{attn:?}/chunk={chunk}");
+            outs.push(model::logits_step(&cfg, &refs, &[1, 2], &mut st, &pool).unwrap());
+        }
+        let d = outs[0]
+            .iter()
+            .zip(&outs[1])
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d < TOL, "{attn:?}: chunk length changed the logits (max {d})");
+    }
+}
+
+/// Quantized chunked prefill requantizes each layer's state once per window
+/// instead of once per token, so it is NOT bit-identical to the serial
+/// route — but it must stay within the same tolerance band the step-vs-full
+/// parity suite grants bf16/int8 state storage.
+#[test]
+fn quantized_chunked_prefill_agrees_with_serial_route() {
+    use repro::native::model::{Precision, QuantModel};
+    let pool = ThreadPool::new(2);
+    let tol = 0.75f32;
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        for prec in [Precision::Bf16, Precision::Int8] {
+            let cfg = LmConfig::tiny(attn);
+            let params = param_state(&cfg, 19);
+            let refs: Vec<&Tensor> = params.iter().collect();
+            let qm = QuantModel::from_params(&cfg, &refs, prec).unwrap();
+            let run_cfg = *qm.cfg();
+            let bound = model::DecodeModel::bind_quantized(&qm).unwrap();
+            let l = 40usize;
+            let toks: Vec<i32> =
+                (0..l).map(|i| ((i * 31 + 7) % cfg.vocab) as i32).collect();
+
+            let mut st_s = DecodeState::new(&run_cfg, 1).unwrap();
+            let mut dsc = model::DecodeScratch::new();
+            for &t in &toks {
+                bound.prefill_step_scratch(&[t], &mut st_s, &pool, &mut dsc).unwrap();
+            }
+            let a = bound.logits_step(&[3], &mut st_s, &pool).unwrap();
+
+            let mut st_c = DecodeState::new(&run_cfg, 1).unwrap();
+            let mut psc = model::PrefillScratch::new();
+            bound.prefill_chunked(&toks, &mut st_c, &pool, &mut psc).unwrap();
+            assert_eq!(st_s.pos(), st_c.pos());
+            let b = bound.logits_step(&[3], &mut st_c, &pool).unwrap();
+
+            let d =
+                a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+            assert!(
+                d < tol && a.iter().all(|x| x.is_finite()),
+                "{attn:?}/{prec}: quantized routes diverge (max {d})"
+            );
+        }
+    }
+}
+
 /// Greedy decoding from the same state must emit identical token ids on a
 /// 1-thread and a many-thread pool (the pool's task decomposition is
 /// worker-count independent).
@@ -247,6 +406,7 @@ fn generate_is_deterministic_and_respects_the_window() {
         mode: SampleMode::TopK { k: 8, temperature: 1.0 },
         seed: 42,
         samples: 2,
+        ..GenRequest::default()
     };
     let a = session.generate(&req).unwrap();
     assert_eq!(a.texts.len(), 2);
@@ -266,6 +426,7 @@ fn generate_is_deterministic_and_respects_the_window() {
         mode: SampleMode::Greedy,
         seed: 0,
         samples: 1,
+        ..GenRequest::default()
     };
     let out = session.generate(&long).unwrap();
     assert_eq!(out.prompt_tokens, cfg.n_ctx - 1);

@@ -25,7 +25,7 @@ use repro::native::kernels::{
     la_chunk_bwd, la_chunk_fwd, la_quadratic_bwd, la_quadratic_fwd, la_scan_bwd, la_scan_fwd,
     softmax_bwd, softmax_fwd, LayerShape,
 };
-use repro::native::model::{self, AttnKind, DecodeScratch, LmConfig, Precision};
+use repro::native::model::{self, AttnKind, DecodeScratch, LmConfig, Precision, PrefillScratch};
 use repro::native::pool::ThreadPool;
 use repro::runtime::Tensor;
 
@@ -188,6 +188,50 @@ fn decode_scratch_reuse_matches_the_fresh_scratch_path() {
             let fresh = bound.logits_step(&toks, &mut st_a, &pool).unwrap();
             let reused = bound.logits_step_scratch(&toks, &mut st_b, &pool, &mut sc).unwrap();
             assert_eq!(fresh.as_slice(), reused, "token {t} ({attn:?}): scratch reuse diverged");
+        }
+    }
+}
+
+/// Size-reduced twin of the chunked-prefill parity suite in
+/// `tests/infer.rs`: the chunked route drives the carry kernel's
+/// `SliceParts` state windows and the blocked-softmax score windows through
+/// real pool submissions, so Miri/TSan must see it too. Serial
+/// (`prefill_step`) and chunked (`prefill_chunked_with`) prompt ingestion
+/// must land in states that produce the same next-token logits.
+#[test]
+fn chunked_prefill_matches_serial_under_the_interpreter() {
+    // looser than the kernel TOL: layer-stacked GEMM reassociation
+    let tol = 2e-3f32;
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = lm_cfg(attn);
+        let mut state = cfg.init_state(7);
+        state.truncate(cfg.n_param_arrays());
+        let params: Vec<&Tensor> = state.iter().collect();
+        let pool = ThreadPool::new(2);
+        let bound = model::DecodeModel::bind(&cfg, &params).unwrap();
+        // several chunks plus a ragged tail at either scale
+        let (l, chunk) = if cfg!(miri) { (5, 2) } else { (40, 16) };
+        let toks: Vec<i32> = (0..l).map(|i| ((i * 31 + 7) % cfg.vocab) as i32).collect();
+
+        let mut st_s = DecodeState::new(&cfg, 1).unwrap();
+        let mut dsc = DecodeScratch::new();
+        for &t in &toks {
+            bound.prefill_step_scratch(&[t], &mut st_s, &pool, &mut dsc).unwrap();
+        }
+        let a = bound.logits_step(&[3], &mut st_s, &pool).unwrap();
+
+        let mut st_c = DecodeState::new(&cfg, 1).unwrap();
+        let mut psc = PrefillScratch::new();
+        bound.prefill_chunked_with(chunk, &toks, &mut st_c, &pool, &mut psc).unwrap();
+        assert_eq!(st_s.pos(), st_c.pos(), "{attn:?}: position skew");
+        let b = bound.logits_step(&[3], &mut st_c, &pool).unwrap();
+
+        assert!(b.iter().all(|x| x.is_finite()), "{attn:?}");
+        let d = max_abs_diff(&a, &b);
+        assert!(d < tol, "{attn:?}: chunked prefill diverged from serial (max {d})");
+        #[cfg(not(feature = "simd"))]
+        if attn == AttnKind::Softmax {
+            assert_eq!(a, b, "softmax prefill must be bit-exact off-simd");
         }
     }
 }

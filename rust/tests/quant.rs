@@ -32,6 +32,7 @@ fn greedy(prompt: &str, max_new: usize) -> GenRequest {
         mode: SampleMode::Greedy,
         seed: 0,
         samples: 1,
+        ..GenRequest::default()
     }
 }
 
