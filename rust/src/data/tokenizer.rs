@@ -104,10 +104,12 @@ impl ByteTokenizer {
         let mut out = Vec::with_capacity(toks.len());
         let mut i = 0;
         while i < toks.len() {
+            // in_bounds: both reads sit behind `i + 1 < toks.len()`
             if i + 1 < toks.len() && (toks[i], toks[i + 1]) == pair {
                 out.push(id);
                 i += 2;
             } else {
+                // in_bounds: the loop condition holds `i < toks.len()`
                 out.push(toks[i]);
                 i += 1;
             }
@@ -151,6 +153,7 @@ impl ByteTokenizer {
         Ok(String::from_utf8_lossy(&bytes).into_owned())
     }
 
+    // no_panic
     fn push_bytes(&self, id: u32, out: &mut Vec<u8>) -> Result<()> {
         if id < 256 {
             out.push(id as u8);
@@ -160,6 +163,7 @@ impl ByteTokenizer {
         if rank >= self.merges.len() {
             bail!("token id {id} out of vocabulary");
         }
+        // in_bounds: rank checked against merges.len() just above
         let (l, r) = self.merges[rank];
         self.push_bytes(l, out)?;
         self.push_bytes(r, out)?;
@@ -191,6 +195,7 @@ pub struct DecodeStream<'a> {
 impl DecodeStream<'_> {
     /// Feed one token id; returns the text that became decodable (possibly
     /// empty). Errors only on an out-of-vocabulary id.
+    // no_panic
     pub fn push(&mut self, id: i32) -> Result<String> {
         if id < 0 {
             bail!("token id {id} out of vocabulary");
@@ -206,6 +211,7 @@ impl DecodeStream<'_> {
 
     /// Flush whatever remains, replacing an unfinished trailing sequence
     /// with U+FFFD (end-of-generation can legitimately cut a scalar short).
+    // no_panic
     pub fn finish(mut self) -> String {
         let mut out = self.drain();
         if !self.buf.is_empty() {
@@ -228,6 +234,8 @@ impl DecodeStream<'_> {
                 }
                 Err(e) => {
                     let valid = e.valid_up_to();
+                    // in_bounds: valid ≤ buf.len() by valid_up_to's contract;
+                    // guarded: from_utf8 re-checks exactly the validated prefix
                     out.push_str(std::str::from_utf8(&self.buf[..valid]).expect("validated"));
                     match e.error_len() {
                         // incomplete trailing sequence: keep it buffered for

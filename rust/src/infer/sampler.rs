@@ -56,6 +56,7 @@ impl Sampler {
 
     /// Choose the next token id from one logits row. Errors (never panics)
     /// when every logit is non-finite — a diverged model, surfaced clearly.
+    // no_panic
     pub fn sample(&mut self, logits: &[f32]) -> Result<usize> {
         match self.mode {
             SampleMode::Greedy => greedy(logits),
@@ -63,6 +64,7 @@ impl Sampler {
         }
     }
 
+    // no_panic
     fn top_k(&mut self, logits: &[f32], k: usize, temperature: f32) -> Result<usize> {
         let mut finite: Vec<(usize, f32)> = logits
             .iter()
@@ -87,11 +89,13 @@ impl Sampler {
             cdf.push(acc);
         }
         let pick = self.rng.sample_cdf(&cdf)?;
+        // in_bounds: sample_cdf returns an index < cdf.len() == finite.len()
         Ok(finite[pick].0)
     }
 }
 
 /// Argmax with `total_cmp` over the finite entries only.
+// no_panic
 fn greedy(logits: &[f32]) -> Result<usize> {
     logits
         .iter()

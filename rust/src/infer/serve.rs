@@ -45,6 +45,7 @@ pub struct ServeStats {
 }
 
 /// Build a [`GenRequest`] from one parsed request object.
+// no_panic
 fn build_request(v: &Json, default_max_new: usize) -> Result<GenRequest> {
     let prompt = v
         .req("prompt")?
@@ -123,6 +124,7 @@ fn error_response(id: Json, err: &anyhow::Error) -> Json {
 
 /// Drive the request/response loop until EOF. Generic over the streams so
 /// tests can run it against in-memory buffers.
+// no_panic
 pub fn serve_loop(
     session: &ModelSession,
     input: impl BufRead,
@@ -169,6 +171,8 @@ pub fn serve_loop(
                         Json::obj(vec![
                             ("id", id),
                             ("ok", Json::Bool(true)),
+                            // in_bounds: samples ≥ 1 is validated above, so
+                            // texts is non-empty
                             ("text", Json::str(out.texts[0].clone())),
                             (
                                 "texts",

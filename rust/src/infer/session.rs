@@ -259,6 +259,7 @@ impl ModelSession {
     /// state (never re-scanning it), then sample `max_new` tokens per
     /// sample. The prompt is truncated to the last `n_ctx − 1` tokens and
     /// `max_new` is clamped to the remaining window.
+    // no_panic
     pub fn generate(&self, req: &GenRequest) -> Result<GenOutcome> {
         if req.samples == 0 || req.samples > MAX_SAMPLES {
             // the cap keeps one request from allocating an unbounded batch
@@ -299,6 +300,7 @@ impl ModelSession {
         // layer; `serial_prefill` keeps the token-by-token oracle reachable.
         if ids.len() > 1 {
             if req.serial_prefill {
+                // in_bounds: guarded by ids.len() > 1 above
                 for &tok in &ids[..ids.len() - 1] {
                     tok_row.fill(tok);
                     bound.prefill_step_scratch(&tok_row, &mut st, &self.pool, &mut sc)?;
@@ -307,13 +309,16 @@ impl ModelSession {
                 let l = ids.len() - 1;
                 let mut prompt = Vec::with_capacity(n_seq * l);
                 for _ in 0..n_seq {
+                    // in_bounds: l = ids.len() - 1 with ids.len() > 1
                     prompt.extend_from_slice(&ids[..l]);
                 }
                 let mut psc = model::PrefillScratch::new();
                 bound.prefill_chunked(&prompt, &mut st, &self.pool, &mut psc)?;
             }
         }
-        let last = *ids.last().expect("non-empty prompt");
+        let last = *ids
+            .last()
+            .ok_or_else(|| anyhow::anyhow!("prompt tokenized to zero tokens"))?;
         tok_row.fill(last);
         // the scratch's logits view dies at the next step — keep a copy the
         // sampler reads while the scratch is reused
@@ -335,9 +340,12 @@ impl ModelSession {
         let mut texts = vec![String::new(); n_seq];
         for step in 0..max_new {
             for (row, out) in token_ids.iter_mut().enumerate() {
+                // in_bounds: logits holds n_seq rows of v ≥ decodable floats
                 let tok = sampler.sample(&logits[row * v..][..decodable])? as i32;
                 out.push(tok);
+                // in_bounds: texts/streams are n_seq-sized like token_ids
                 texts[row].push_str(&streams[row].push(tok)?);
+                // in_bounds: tok_row is n_seq-sized
                 tok_row[row] = tok;
             }
             if step == 0 {

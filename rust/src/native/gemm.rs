@@ -185,6 +185,7 @@ pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f3
 #[cfg(not(feature = "simd"))]
 #[inline]
 #[allow(clippy::needless_range_loop)]
+// bounds: full-tile fast path — caller dispatches it only when mh == MR && nh == NR, and the enclosing gemm's entry debug_assert covers every a/b/out span
 fn tile_nn_full(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, j0: usize, out: &mut [f32]) {
     let mut acc = [[0.0f32; NR]; MR];
     for p in 0..k {
@@ -207,6 +208,7 @@ fn tile_nn_full(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, j0: usize, 
 #[cfg(feature = "simd")]
 #[inline]
 #[allow(clippy::needless_range_loop)]
+// bounds: full-tile fast path — caller dispatches it only when mh == MR && nh == NR, and the enclosing gemm's entry debug_assert covers every a/b/out span
 fn tile_nn_full(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, j0: usize, out: &mut [f32]) {
     use std::simd::f32x8;
     use std::simd::StdFloat;
@@ -227,6 +229,7 @@ fn tile_nn_full(a: &[f32], b: &[f32], k: usize, n: usize, i0: usize, j0: usize, 
 
 /// Edge tile of `gemm_nn` (`mh ≤ MR`, `nh ≤ NR` at runtime).
 #[inline]
+// bounds: mh/nh clamp the tile to the matrix edge; all spans sit inside the enclosing gemm's entry debug_assert
 fn tile_nn_edge(
     a: &[f32],
     b: &[f32],
@@ -329,6 +332,7 @@ pub(crate) fn gemm_tn_rows(
 // --- parallel wrappers --------------------------------------------------------
 
 /// [`gemm_nn`] with output rows striped across the pool.
+// bounds: stripe offsets mirror run_stripes' disjoint partition of out[..m*n]; a rows covered by the serial gemm's entry debug_assert
 pub fn par_gemm_nn(
     pool: &ThreadPool,
     a: &[f32],
@@ -422,6 +426,7 @@ pub fn gemm_nn_bf16(a: &[f32], b: &[u16], m: usize, k: usize, n: usize, out: &mu
 #[cfg(not(feature = "simd"))]
 #[inline]
 #[allow(clippy::needless_range_loop)]
+// bounds: full-tile fast path — caller dispatches it only when mh == MR && nh == NR, and the enclosing gemm's entry debug_assert covers every a/b/out span
 fn tile_nn_bf16_full(a: &[f32], b: &[u16], k: usize, n: usize, i0: usize, j0: usize, out: &mut [f32]) {
     let mut acc = [[0.0f32; NR]; MR];
     for p in 0..k {
@@ -448,6 +453,7 @@ fn tile_nn_bf16_full(a: &[f32], b: &[u16], k: usize, n: usize, i0: usize, j0: us
 #[cfg(feature = "simd")]
 #[inline]
 #[allow(clippy::needless_range_loop)]
+// bounds: full-tile fast path — caller dispatches it only when mh == MR && nh == NR, and the enclosing gemm's entry debug_assert covers every a/b/out span
 fn tile_nn_bf16_full(a: &[f32], b: &[u16], k: usize, n: usize, i0: usize, j0: usize, out: &mut [f32]) {
     use std::simd::f32x8;
     use std::simd::StdFloat;
@@ -474,6 +480,7 @@ fn tile_nn_bf16_full(a: &[f32], b: &[u16], k: usize, n: usize, i0: usize, j0: us
 /// Edge tile of [`gemm_nn_bf16`] (`mh ≤ MR`, `nh ≤ NR` at runtime).
 #[inline]
 #[allow(clippy::too_many_arguments)]
+// bounds: mh/nh clamp the tile to the matrix edge; all spans sit inside the enclosing gemm's entry debug_assert
 fn tile_nn_bf16_edge(
     a: &[f32],
     b: &[u16],
@@ -541,6 +548,7 @@ pub fn gemm_nn_i8(
 #[cfg(not(feature = "simd"))]
 #[inline]
 #[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// bounds: full-tile fast path — caller dispatches it only when mh == MR && nh == NR, and the enclosing gemm's entry debug_assert covers every a/b/out span
 fn tile_nn_i8_full(
     a: &[f32],
     b: &[i8],
@@ -577,6 +585,7 @@ fn tile_nn_i8_full(
 #[cfg(feature = "simd")]
 #[inline]
 #[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// bounds: full-tile fast path — caller dispatches it only when mh == MR && nh == NR, and the enclosing gemm's entry debug_assert covers every a/b/out span
 fn tile_nn_i8_full(
     a: &[f32],
     b: &[i8],
@@ -613,6 +622,7 @@ fn tile_nn_i8_full(
 /// Edge tile of [`gemm_nn_i8`] (`mh ≤ MR`, `nh ≤ NR` at runtime).
 #[inline]
 #[allow(clippy::too_many_arguments)]
+// bounds: mh/nh clamp the tile to the matrix edge; all spans sit inside the enclosing gemm's entry debug_assert
 fn tile_nn_i8_edge(
     a: &[f32],
     b: &[i8],
@@ -682,6 +692,7 @@ pub fn gemm_nn_i8_ref(
 }
 
 /// [`gemm_nn_bf16`] with output rows striped across the pool.
+// bounds: stripe offsets mirror run_stripes' disjoint partition of out[..m*n]; a rows covered by the serial gemm's entry debug_assert
 pub fn par_gemm_nn_bf16(
     pool: &ThreadPool,
     a: &[f32],
@@ -701,6 +712,7 @@ pub fn par_gemm_nn_bf16(
 }
 
 /// [`gemm_nn_i8`] with output rows striped across the pool.
+// bounds: stripe offsets mirror run_stripes' disjoint partition of out[..m*n]; a rows covered by the serial gemm's entry debug_assert
 pub fn par_gemm_nn_i8(
     pool: &ThreadPool,
     a: &[f32],

@@ -751,6 +751,8 @@ fn ln_fwd(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec<f32>, 
 /// [`ln_fwd`] into a caller-held buffer, without building the backward
 /// cache — the decode path's allocation-free variant.
 // deny_alloc
+// bounds: row spans r*d..r*d+d sit inside the entry debug_assert on y.len();
+// x/g/b spans match by the caller's shape contract
 fn ln_fwd_into(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize, y: &mut [f32]) {
     debug_assert_eq!(y.len(), rows * d);
     let inv_d = 1.0 / d as f32;
@@ -817,6 +819,8 @@ fn split_heads(x: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Vec
 
 /// [`split_heads`] into a caller-held buffer (fully overwritten).
 // deny_alloc
+// bounds: (b, h, t) index arithmetic is a permutation of 0..x.len(), which
+// the entry debug_assert pins to out.len()
 fn split_heads_into(x: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), x.len());
     let d = n_head * hd;
@@ -840,6 +844,7 @@ fn merge_heads(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize) -> Ve
 
 /// [`merge_heads`] into a caller-held buffer (fully overwritten).
 // deny_alloc
+// bounds: inverse permutation of split_heads_into — same entry debug_assert
 fn merge_heads_into(xh: &[f32], bsz: usize, l: usize, n_head: usize, hd: usize, out: &mut [f32]) {
     debug_assert_eq!(out.len(), xh.len());
     let d = n_head * hd;
@@ -1399,6 +1404,7 @@ impl<'a> DecodeModel<'a> {
     /// [`logits_step`](Self::logits_step) writing into caller-held scratch.
     /// The returned logits view (`ns × vocab`) borrows the scratch and is
     /// valid until the next step reuses it.
+    // no_panic
     pub fn logits_step_scratch<'s>(
         &self,
         tokens: &[i32],
@@ -1406,7 +1412,8 @@ impl<'a> DecodeModel<'a> {
         pool: &ThreadPool,
         sc: &'s mut DecodeScratch,
     ) -> Result<&'s [f32]> {
-        Ok(self.step_with(tokens, st, pool, sc, true)?.expect("logits requested"))
+        self.step_with(tokens, st, pool, sc, true)?
+            .ok_or_else(|| anyhow::anyhow!("internal: step_with(want_logits) returned no logits"))
     }
 
     /// [`prefill_step`](Self::prefill_step) with caller-held scratch.
@@ -1511,6 +1518,9 @@ impl<'a> DecodeModel<'a> {
 
     /// Shared one-token step: embed, run every block through the decode
     /// state, then (optionally) unembed. All intermediates live in `sc`.
+    // no_panic
+    // bounds: token ids are vocab-checked at entry; row/feature spans follow
+    // the scratch shapes sized by DecodeScratch::new
     fn step_with<'s>(
         &self,
         tokens: &[i32],
@@ -1584,6 +1594,9 @@ impl<'a> DecodeModel<'a> {
 /// pre-reserved by [`AttnState`]). `tests/alloc_gate.rs` gates this; keep
 /// new temporaries in the scratch.
 // deny_alloc
+// no_panic
+// bounds: per-head and per-row spans follow the scratch shapes sized by
+// DecodeScratch::new against the checkpoint config
 #[allow(clippy::too_many_arguments)]
 fn block_step(
     cfg: &LmConfig,
@@ -1812,6 +1825,8 @@ fn block_step(
 /// pre-quantization code, and the bf16/int8 paths run it on their
 /// dequantized staging windows.
 // deny_alloc
+// no_panic
+// bounds: sw/krow/vrow windows are carved by the caller to hd/hd+1 exactly
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn linear_state_task(

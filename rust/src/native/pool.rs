@@ -118,14 +118,13 @@ impl Job {
     /// wakes the submitter.
     fn drain(&self, core: &Core) {
         loop {
-            // Ordering audit (tested by the loom models): `Relaxed` is
-            // sufficient for `next` because a fetch_add's read-modify-write
-            // atomicity alone guarantees each index is claimed at most once,
-            // and the claim itself carries no data — the closure pointer was
-            // published to this thread under the `state` mutex (a
-            // happens-before edge at job pickup), and task *results* travel
-            // through `pending`'s AcqRel/Acquire pair below, never through
-            // `next`.
+            // ordering: Relaxed is sufficient for `next` (loom-modeled)
+            // because a fetch_add's read-modify-write atomicity alone
+            // guarantees each index is claimed at most once, and the claim
+            // itself carries no data — the closure pointer was published to
+            // this thread under the `state` mutex (a happens-before edge at
+            // job pickup), and task *results* travel through `pending`'s
+            // AcqRel/Acquire pair below, never through `next`.
             let i = self.next.fetch_add(1, Ordering::Relaxed);
             if i >= self.tasks {
                 return;
@@ -142,7 +141,7 @@ impl Job {
                     *slot = Some(payload);
                 }
             }
-            // `AcqRel` is load-bearing: the Release half publishes this
+            // ordering: `AcqRel` is load-bearing — the Release half publishes this
             // task's buffer writes into `pending`'s modification order, and
             // because every decrement is a read-modify-write, the chain of
             // fetch_subs forms one release sequence — the submitter's single
@@ -331,7 +330,7 @@ impl ThreadPool {
         job.drain(core);
         IN_POOL_TASK.with(|t| t.set(false));
         let mut st = core.state.lock().unwrap();
-        // Acquire pairs with every worker's AcqRel fetch_sub above: observing
+        // ordering: Acquire pairs with every worker's AcqRel fetch_sub above — observing
         // 0 synchronizes with the whole decrement chain, so all task writes
         // are visible before `run` returns — which is why callers (and the
         // unit tests below) may read task outputs with plain loads afterwards.

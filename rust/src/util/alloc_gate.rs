@@ -56,6 +56,8 @@ thread_local! {
 
 #[inline]
 fn record_alloc(bytes: usize) {
+    // ordering: Relaxed — monotone statistics read for reporting only; no
+    // memory is published through these counters
     TOTAL_ALLOCS.fetch_add(1, Ordering::Relaxed);
     TOTAL_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
     // `try_with`: the allocator can be called during thread teardown after
@@ -155,6 +157,8 @@ pub fn snapshot() -> AllocSnapshot {
 
 /// Whole-process totals `(allocation_events, bytes)` since start.
 pub fn global_totals() -> (u64, u64) {
+    // ordering: Relaxed — a statistics snapshot; the two loads need not be
+    // mutually consistent and publish nothing
     (TOTAL_ALLOCS.load(Ordering::Relaxed), TOTAL_BYTES.load(Ordering::Relaxed))
 }
 

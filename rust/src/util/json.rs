@@ -21,6 +21,7 @@ pub enum Json {
 }
 
 impl Json {
+    // no_panic
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -87,12 +88,14 @@ impl Json {
 
     // -- writer ---------------------------------------------------------------
 
+    // no_panic
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
         out
     }
 
+    // no_panic
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -192,6 +195,7 @@ impl<'a> Parser<'a> {
         }
     }
 
+    // no_panic
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
         match self.peek() {
@@ -207,6 +211,7 @@ impl<'a> Parser<'a> {
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        // in_bounds: pos ≤ bytes.len() — peek() returned Some to get here
         if self.bytes[self.pos..].starts_with(word.as_bytes()) {
             self.pos += word.len();
             Ok(v)
@@ -303,9 +308,12 @@ impl<'a> Parser<'a> {
                 }
                 Some(_) => {
                     // consume one UTF-8 scalar
+                    // in_bounds: pos < bytes.len() — peek() returned Some
                     let rest = &self.bytes[self.pos..];
                     let text = std::str::from_utf8(rest)
                         .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
+                    // guarded: rest is non-empty and from_utf8-validated, so
+                    // a first char exists
                     let c = text.chars().next().unwrap();
                     s.push(c);
                     self.pos += c.len_utf8();
@@ -323,6 +331,8 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
+        // in_bounds: start ≤ pos ≤ bytes.len() — pos only advances past
+        // peeked bytes
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
         Ok(Json::Num(text.parse::<f64>().map_err(|_| anyhow!("bad number {text:?}"))?))
     }

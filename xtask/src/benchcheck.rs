@@ -1,0 +1,442 @@
+//! `xtask bench-check`: validate `BENCH_native.json` against the
+//! `bench_native/v6` shape — section presence, per-row field types, and
+//! the decode/prefill fidelity-gate fields non-null whenever those arrays
+//! carry rows. Extra fields are tolerated (the committed placeholder adds
+//! a `note`), `lm[].grad_norm_last` is nullable by design (the emitter
+//! writes `null` for a non-finite norm), and empty section arrays are
+//! valid: the committed artifact is a placeholder CI overwrites.
+//!
+//! Ships its own ~100-line JSON reader instead of depending on the `repro`
+//! crate: the lint lane must not rebuild the model to validate a file.
+
+use std::collections::HashMap;
+
+/// Minimal JSON value (objects keep a map; duplicate keys keep the last).
+pub enum JsonVal {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonVal>),
+    Obj(HashMap<String, JsonVal>),
+}
+
+impl JsonVal {
+    fn type_name(&self) -> &'static str {
+        match self {
+            JsonVal::Null => "null",
+            JsonVal::Bool(_) => "bool",
+            JsonVal::Num(_) => "number",
+            JsonVal::Str(_) => "string",
+            JsonVal::Arr(_) => "array",
+            JsonVal::Obj(_) => "object",
+        }
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn lit(&mut self, s: &str, v: JsonVal) -> Result<JsonVal, String> {
+        if self.b[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            Err(format!("byte {}: expected `{s}`", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal, String> {
+        self.skip_ws();
+        match self.peek() {
+            None => Err("unexpected end of input".to_string()),
+            Some(b'n') => self.lit("null", JsonVal::Null),
+            Some(b't') => self.lit("true", JsonVal::Bool(true)),
+            Some(b'f') => self.lit("false", JsonVal::Bool(false)),
+            Some(b'"') => self.string().map(JsonVal::Str),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(JsonVal::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(JsonVal::Arr(items));
+                        }
+                        _ => return Err(format!("byte {}: expected `,` or `]`", self.pos)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut map = HashMap::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(JsonVal::Obj(map));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    if self.peek() != Some(b':') {
+                        return Err(format!("byte {}: expected `:`", self.pos));
+                    }
+                    self.pos += 1;
+                    map.insert(key, self.value()?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(JsonVal::Obj(map));
+                        }
+                        _ => return Err(format!("byte {}: expected `,` or `}}`", self.pos)),
+                    }
+                }
+            }
+            Some(_) => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        if self.peek() != Some(b'"') {
+            return Err(format!("byte {}: expected a string", self.pos));
+        }
+        self.pos += 1;
+        let mut out = Vec::new();
+        while let Some(c) = self.peek() {
+            self.pos += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| "invalid UTF-8".to_string());
+                }
+                b'\\' => {
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' | b'\\' | b'/' => out.push(esc),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'b' => out.push(8),
+                        b'f' => out.push(12),
+                        b'u' => {
+                            // \uXXXX — decode the code unit (no surrogate
+                            // pairing: the bench artifact is ASCII anyway)
+                            if self.pos + 4 > self.b.len() {
+                                return Err("truncated \\u escape".to_string());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let cp = u32::from_str_radix(hex, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            self.pos += 4;
+                            let ch = char::from_u32(cp).unwrap_or('\u{fffd}');
+                            let mut buf = [0u8; 4];
+                            out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                        }
+                        other => return Err(format!("bad escape `\\{}`", other as char)),
+                    }
+                }
+                other => out.push(other),
+            }
+        }
+        Err("unterminated string".to_string())
+    }
+
+    fn number(&mut self) -> Result<JsonVal, String> {
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| "bad number".to_string())?;
+        s.parse::<f64>().map(JsonVal::Num).map_err(|_| format!("byte {start}: bad number `{s}`"))
+    }
+}
+
+pub fn parse_json(text: &str) -> Result<JsonVal, String> {
+    let mut r = Reader { b: text.as_bytes(), pos: 0 };
+    let v = r.value()?;
+    r.skip_ws();
+    if r.pos != r.b.len() {
+        return Err(format!("byte {}: trailing data after the document", r.pos));
+    }
+    Ok(v)
+}
+
+/// Field requirement for one row of a section.
+enum Field {
+    Str(&'static str),
+    Num(&'static str),
+    /// A fidelity-gate field: must be present and a non-null number.
+    Gate(&'static str),
+    /// Present-if-any type check only (nullable or optional by design).
+    OptNum(&'static str),
+}
+
+fn section_spec(name: &str) -> &'static [Field] {
+    use Field::*;
+    match name {
+        "artifacts" => &[
+            Str("name"),
+            Str("impl"),
+            Str("kind"),
+            Num("bh"),
+            Num("n"),
+            Num("d"),
+            Num("chunk"),
+            Num("median_ns"),
+            Num("p10_ns"),
+            Num("p90_ns"),
+            OptNum("scalar_median_ns"),
+            OptNum("speedup_vs_scalar"),
+        ],
+        "lm" => &[
+            Str("preset"),
+            Str("attn"),
+            Num("n_layer"),
+            Num("n_head"),
+            Num("d_model"),
+            Num("n_params"),
+            Num("steps"),
+            Num("tokens_per_step"),
+            Num("step_s_p50"),
+            Num("step_s_p50_rebuild"),
+            Num("speedup_inplace"),
+            Num("weight_decay"),
+            Num("clip_norm"),
+            OptNum("grad_norm_last"),
+            Num("tokens_per_s"),
+            Num("loss_first"),
+            Num("loss_last"),
+        ],
+        "opt" => &[
+            Str("preset"),
+            Num("n_params"),
+            Num("n_param_arrays"),
+            Num("inplace_s_p50"),
+            Num("rebuild_s_p50"),
+            Num("speedup_inplace"),
+        ],
+        "decode" => &[
+            Str("preset"),
+            Str("attn"),
+            Str("precision"),
+            Num("n_params"),
+            Num("param_bytes"),
+            Num("tokens"),
+            Num("recurrent_tok_s"),
+            Num("recompute_tok_s"),
+            Num("speedup_recurrent"),
+            Num("step_s_p50_first_half"),
+            Num("step_s_p50_second_half"),
+            Num("state_bytes_first"),
+            Num("state_bytes_last"),
+            Num("state_growth"),
+            Gate("logit_maxabs_vs_f32"),
+            Gate("nll_delta_vs_f32"),
+        ],
+        "prefill" => &[
+            Str("preset"),
+            Str("attn"),
+            Str("precision"),
+            Num("prompt_tokens"),
+            Num("chunk"),
+            Num("ttft_ms"),
+            Num("prefill_tok_s"),
+            Num("serial_tok_s"),
+            Num("speedup_vs_serial"),
+            Gate("logit_maxabs_vs_serial"),
+            Gate("nll_delta_vs_f32"),
+        ],
+        _ => &[],
+    }
+}
+
+const SECTIONS: &[&str] = &["artifacts", "lm", "opt", "decode", "prefill"];
+
+/// Validate one parsed document. Returns human-readable problems (empty =
+/// the document conforms).
+pub fn validate_v6(doc: &JsonVal) -> Vec<String> {
+    let mut errs = Vec::new();
+    let top = match doc {
+        JsonVal::Obj(m) => m,
+        other => {
+            return vec![format!("top level must be an object, got {}", other.type_name())];
+        }
+    };
+    match top.get("schema") {
+        Some(JsonVal::Str(s)) if s == "bench_native/v6" => {}
+        Some(JsonVal::Str(s)) => errs.push(format!("schema is {s:?}, want \"bench_native/v6\"")),
+        Some(other) => errs.push(format!("schema must be a string, got {}", other.type_name())),
+        None => errs.push("missing top-level \"schema\"".to_string()),
+    }
+    for key in ["threads", "chunk"] {
+        match top.get(key) {
+            Some(JsonVal::Num(_)) => {}
+            Some(other) => {
+                errs.push(format!("\"{key}\" must be a number, got {}", other.type_name()));
+            }
+            None => errs.push(format!("missing top-level \"{key}\"")),
+        }
+    }
+    for &sec in SECTIONS {
+        let rows = match top.get(sec) {
+            Some(JsonVal::Arr(rows)) => rows,
+            Some(other) => {
+                errs.push(format!("\"{sec}\" must be an array, got {}", other.type_name()));
+                continue;
+            }
+            None => {
+                errs.push(format!("missing section \"{sec}\""));
+                continue;
+            }
+        };
+        for (ri, row) in rows.iter().enumerate() {
+            let obj = match row {
+                JsonVal::Obj(m) => m,
+                other => {
+                    errs.push(format!(
+                        "{sec}[{ri}] must be an object, got {}",
+                        other.type_name()
+                    ));
+                    continue;
+                }
+            };
+            for field in section_spec(sec) {
+                let (key, want, required, null_ok) = match field {
+                    Field::Str(k) => (*k, "string", true, false),
+                    Field::Num(k) => (*k, "number", true, false),
+                    Field::Gate(k) => (*k, "number", true, false),
+                    Field::OptNum(k) => (*k, "number", false, true),
+                };
+                match obj.get(key) {
+                    Some(JsonVal::Str(_)) if want == "string" => {}
+                    Some(JsonVal::Num(_)) if want == "number" => {}
+                    Some(JsonVal::Null) if null_ok => {}
+                    Some(JsonVal::Null) => {
+                        let gate = matches!(field, Field::Gate(_));
+                        errs.push(format!(
+                            "{sec}[{ri}].{key} is null{}",
+                            if gate { " — fidelity gate must carry a value" } else { "" }
+                        ));
+                    }
+                    Some(other) => errs.push(format!(
+                        "{sec}[{ri}].{key} must be a {want}, got {}",
+                        other.type_name()
+                    )),
+                    None if required => errs.push(format!("{sec}[{ri}] missing \"{key}\"")),
+                    None => {}
+                }
+            }
+        }
+    }
+    errs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_valid() -> String {
+        concat!(
+            "{\"schema\":\"bench_native/v6\",\"note\":\"extra fields tolerated\",",
+            "\"threads\":0,\"chunk\":128,",
+            "\"artifacts\":[],\"lm\":[],\"opt\":[],\"decode\":[],\"prefill\":[]}"
+        )
+        .to_string()
+    }
+
+    fn prefill_row(gate: &str) -> String {
+        format!(
+            concat!(
+                "{{\"preset\":\"tiny\",\"attn\":\"ours\",\"precision\":\"f32\",",
+                "\"prompt_tokens\":512,\"chunk\":128,\"ttft_ms\":1.0,",
+                "\"prefill_tok_s\":100.0,\"serial_tok_s\":50.0,\"speedup_vs_serial\":2.0,",
+                "\"logit_maxabs_vs_serial\":{gate},\"nll_delta_vs_f32\":0.0}}"
+            ),
+            gate = gate
+        )
+    }
+
+    fn errs_of(doc: &str) -> Vec<String> {
+        validate_v6(&parse_json(doc).expect("parse"))
+    }
+
+    #[test]
+    fn the_empty_placeholder_shape_passes() {
+        assert_eq!(errs_of(&minimal_valid()), Vec::<String>::new());
+    }
+
+    #[test]
+    fn a_missing_section_and_a_bad_type_fail() {
+        let doc = minimal_valid().replace(",\"prefill\":[]", "");
+        assert!(errs_of(&doc).iter().any(|e| e.contains("missing section \"prefill\"")));
+        let doc = minimal_valid().replace("\"threads\":0", "\"threads\":\"zero\"");
+        assert!(errs_of(&doc).iter().any(|e| e.contains("\"threads\" must be a number")));
+    }
+
+    #[test]
+    fn populated_rows_are_field_checked_and_gates_must_be_non_null() {
+        let with_row = |gate: &str| {
+            let rows = format!("\"prefill\":[{}]", prefill_row(gate));
+            minimal_valid().replace("\"prefill\":[]", &rows)
+        };
+        let good = with_row("0.001");
+        assert_eq!(errs_of(&good), Vec::<String>::new());
+        let nulled = with_row("null");
+        let errs = errs_of(&nulled);
+        assert!(errs.iter().any(|e| e.contains("fidelity gate")), "{errs:?}");
+        let missing = good.replace("\"ttft_ms\":1.0,", "");
+        assert!(errs_of(&missing).iter().any(|e| e.contains("missing \"ttft_ms\"")));
+    }
+
+    #[test]
+    fn nullable_grad_norm_is_tolerated_in_lm_rows() {
+        let row = concat!(
+            "{\"preset\":\"tiny\",\"attn\":\"ours\",\"n_layer\":2,\"n_head\":2,",
+            "\"d_model\":32,\"n_params\":1000,\"steps\":2,\"tokens_per_step\":512,",
+            "\"step_s_p50\":0.1,\"step_s_p50_rebuild\":0.2,\"speedup_inplace\":2.0,",
+            "\"weight_decay\":0.1,\"clip_norm\":1.0,\"grad_norm_last\":null,",
+            "\"tokens_per_s\":5120.0,\"loss_first\":5.0,\"loss_last\":4.0}"
+        );
+        let doc = minimal_valid().replace("\"lm\":[]", &format!("\"lm\":[{row}]"));
+        assert_eq!(errs_of(&doc), Vec::<String>::new());
+    }
+
+    #[test]
+    fn the_parser_rejects_malformed_documents() {
+        assert!(parse_json("{\"a\":1,}").is_err());
+        assert!(parse_json("{\"a\" 1}").is_err());
+        assert!(parse_json("[1, 2").is_err());
+        assert!(parse_json("{} trailing").is_err());
+        assert!(parse_json("{\"a\": nul}").is_err());
+    }
+}

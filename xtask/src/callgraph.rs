@@ -1,0 +1,316 @@
+//! Workspace-wide call graph over the parsed items, with the conservative
+//! resolution policy the transitive contracts run on.
+//!
+//! Resolution is deliberately heuristic (no type inference):
+//!
+//! - `Type::name(…)` — exact `(impl type, name)` match, falling back to
+//!   free fns of that name; `Self::name(…)` maps `Self` to the caller's
+//!   impl type first.
+//! - `recv.name(…)` — candidates are fns named `name` **with a `self`
+//!   receiver**. A `self.…` receiver prefers the caller's own impl; a
+//!   plain-ident receiver must share a substring (≥ 3 chars, case- and
+//!   underscore-insensitive) with the impl type name, else the call is
+//!   treated as external (std/core) and drops no edge; a complex receiver
+//!   (`xs[i].push(…)`, `foo().bar(…)`) keeps every candidate — over- rather
+//!   than under-approximating the contract closure.
+//! - `name(…)` — free fns of that name.
+
+use crate::parse::{Call, CallKind, FnItem, SourceFile};
+use std::collections::{HashMap, HashSet};
+
+/// Index of every non-test fn across the scanned files, addressed as
+/// `(file index, fn index)`.
+pub struct Graph {
+    /// Flattened (file idx, fn idx) pairs; graph node ids index this.
+    pub fns: Vec<(usize, usize)>,
+    by_method: HashMap<String, Vec<usize>>,
+    by_free: HashMap<String, Vec<usize>>,
+    by_qual: HashMap<(String, String), Vec<usize>>,
+}
+
+impl Graph {
+    pub fn new(files: &[SourceFile]) -> Self {
+        let mut fns = Vec::new();
+        for (fi, sf) in files.iter().enumerate() {
+            for (gi, f) in sf.fns.iter().enumerate() {
+                if !f.is_test {
+                    fns.push((fi, gi));
+                }
+            }
+        }
+        let mut by_method: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut by_free: HashMap<String, Vec<usize>> = HashMap::new();
+        let mut by_qual: HashMap<(String, String), Vec<usize>> = HashMap::new();
+        for (idx, &(fi, gi)) in fns.iter().enumerate() {
+            let f = &files[fi].fns[gi];
+            match &f.impl_ty {
+                Some(ty) => {
+                    if f.has_self {
+                        by_method.entry(f.name.clone()).or_default().push(idx);
+                    }
+                    by_qual.entry((ty.clone(), f.name.clone())).or_default().push(idx);
+                }
+                None => by_free.entry(f.name.clone()).or_default().push(idx),
+            }
+        }
+        Graph { fns, by_method, by_free, by_qual }
+    }
+
+    pub fn item<'a>(&self, files: &'a [SourceFile], idx: usize) -> (&'a SourceFile, &'a FnItem) {
+        let (fi, gi) = self.fns[idx];
+        (&files[fi], &files[fi].fns[gi])
+    }
+
+    /// Does `impl_ty` define a method/assoc fn named `name`? (Used by the
+    /// no-panic rule to tell a workspace `self.expect(…)` call from std's.)
+    pub fn impl_defines(&self, impl_ty: &str, name: &str) -> bool {
+        self.by_qual.contains_key(&(impl_ty.to_string(), name.to_string()))
+    }
+
+    /// Candidate callees for one call site.
+    pub fn resolve(
+        &self,
+        files: &[SourceFile],
+        call: &Call,
+        caller_impl: Option<&str>,
+    ) -> Vec<usize> {
+        match call.kind {
+            CallKind::Qual => {
+                let qual = match (call.recv.as_deref(), caller_impl) {
+                    (Some("Self"), Some(ci)) => ci,
+                    (Some(q), _) => q,
+                    (None, _) => "",
+                };
+                if let Some(hits) = self.by_qual.get(&(qual.to_string(), call.name.clone())) {
+                    return hits.clone();
+                }
+                self.by_free.get(&call.name).cloned().unwrap_or_default()
+            }
+            CallKind::Method => {
+                let cands = match self.by_method.get(&call.name) {
+                    Some(c) => c,
+                    None => return Vec::new(),
+                };
+                let recv = call.recv.as_deref().unwrap_or("<complex>");
+                if recv == "<complex>" {
+                    return cands.clone();
+                }
+                let rl: String =
+                    recv.trim_matches('_').to_lowercase();
+                if rl == "self" {
+                    if let Some(ci) = caller_impl {
+                        let own: Vec<usize> = cands
+                            .iter()
+                            .copied()
+                            .filter(|&c| self.item(files, c).1.impl_ty.as_deref() == Some(ci))
+                            .collect();
+                        if !own.is_empty() {
+                            return own;
+                        }
+                    }
+                    return cands.clone();
+                }
+                cands
+                    .iter()
+                    .copied()
+                    .filter(|&c| {
+                        let ty = self
+                            .item(files, c)
+                            .1
+                            .impl_ty
+                            .as_deref()
+                            .unwrap_or("")
+                            .to_lowercase();
+                        !ty.is_empty() && rl.len() >= 3 && (ty.contains(&rl) || rl.contains(&ty))
+                    })
+                    .collect()
+            }
+            CallKind::Free => self.by_free.get(&call.name).cloned().unwrap_or_default(),
+        }
+    }
+}
+
+/// One transitive-contract violation: the offending site plus the call
+/// chain that reaches it from the marked root.
+pub struct ChainHit {
+    /// Node id of the fn the offending token sits in.
+    pub node: usize,
+    /// 0-based line of the token.
+    pub line: usize,
+    /// Display form of what was found (`` `vec!` ``, ``indexing `[i]` ``).
+    pub what: String,
+    /// `key (path:line)` entries from the root down to the offending fn.
+    pub chain: Vec<String>,
+}
+
+/// DFS from `root`, cutting at callees that carry the contract themselves
+/// (they are checked at their own root) or sit on the audited allowlist.
+/// Every node on the walk is scanned; hits carry the full call chain.
+pub fn transitive_check(
+    files: &[SourceFile],
+    graph: &Graph,
+    root: usize,
+    scan: &dyn Fn(&SourceFile, &FnItem) -> Vec<(usize, String)>,
+    allowlist: &[(Option<&str>, &str)],
+    marked: &dyn Fn(&FnItem) -> bool,
+) -> Vec<ChainHit> {
+    let mut out = Vec::new();
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut stack: Vec<(usize, Vec<String>)> = vec![(root, Vec::new())];
+    while let Some((idx, chain)) = stack.pop() {
+        if !seen.insert(idx) {
+            continue;
+        }
+        let (sf, f) = graph.item(files, idx);
+        let mut here = chain;
+        here.push(format!("{} ({}:{})", f.key(), sf.path(), f.line + 1));
+        for (ln, what) in scan(sf, f) {
+            out.push(ChainHit { node: idx, line: ln, what, chain: here.clone() });
+        }
+        for call in &f.calls {
+            for tgt in graph.resolve(files, call, f.impl_ty.as_deref()) {
+                if seen.contains(&tgt) {
+                    continue;
+                }
+                let (_, tf) = graph.item(files, tgt);
+                let allowed = allowlist.iter().any(|&(ty, nm)| {
+                    nm == tf.name && (ty.is_none() || ty == tf.impl_ty.as_deref())
+                });
+                if allowed || marked(tf) {
+                    continue; // audited primitive / checked at its own root
+                }
+                stack.push((tgt, here.clone()));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parse::SourceFile;
+
+    fn graph_of(srcs: &[(&str, &str)]) -> (Vec<SourceFile>, Graph) {
+        let files: Vec<SourceFile> =
+            srcs.iter().map(|(rel, src)| SourceFile::new("rust/src", rel, src)).collect();
+        let g = Graph::new(&files);
+        (files, g)
+    }
+
+    fn resolved_keys(files: &[SourceFile], g: &Graph, caller: &str) -> Vec<String> {
+        let idx = (0..g.fns.len())
+            .find(|&i| g.item(files, i).1.name == caller)
+            .expect("caller fn present");
+        let f = g.item(files, idx).1;
+        let caller_impl = f.impl_ty.clone();
+        let mut out = Vec::new();
+        for c in &f.calls {
+            for t in g.resolve(files, c, caller_impl.as_deref()) {
+                out.push(g.item(files, t).1.key());
+            }
+        }
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    const TWO_IMPLS: &str = "struct ThreadPool;\nstruct DecodeStream;\nimpl ThreadPool {\n    pub fn push(&self, n: usize) -> usize { n }\n}\nimpl DecodeStream {\n    pub fn push(&self, n: usize) -> usize { n + 1 }\n}\n";
+
+    #[test]
+    fn ident_receiver_resolves_by_type_substring() {
+        let src = format!("{TWO_IMPLS}fn caller(pool: &ThreadPool) {{ pool.push(1); }}\n");
+        let (files, g) = graph_of(&[("a.rs", &src)]);
+        assert_eq!(resolved_keys(&files, &g, "caller"), vec!["ThreadPool::push"]);
+    }
+
+    #[test]
+    fn unmatched_ident_receiver_is_treated_as_external() {
+        let src = format!("{TWO_IMPLS}fn caller(cdf: &Cdf) {{ cdf.push(1); }}\n");
+        let (files, g) = graph_of(&[("a.rs", &src)]);
+        assert!(resolved_keys(&files, &g, "caller").is_empty());
+    }
+
+    #[test]
+    fn short_receivers_never_substring_match() {
+        let src = format!("{TWO_IMPLS}fn caller(d: &DecodeStream) {{ d.push(1); }}\n");
+        let (files, g) = graph_of(&[("a.rs", &src)]);
+        // "d" is too short to claim DecodeStream — external, no edge
+        assert!(resolved_keys(&files, &g, "caller").is_empty());
+    }
+
+    #[test]
+    fn complex_receiver_keeps_every_candidate() {
+        let src = format!("{TWO_IMPLS}fn caller(v: &[DecodeStream]) {{ v[0].push(1); }}\n");
+        let (files, g) = graph_of(&[("a.rs", &src)]);
+        assert_eq!(
+            resolved_keys(&files, &g, "caller"),
+            vec!["DecodeStream::push", "ThreadPool::push"]
+        );
+    }
+
+    #[test]
+    fn self_receiver_prefers_the_callers_impl() {
+        let src = format!(
+            "{TWO_IMPLS}impl ThreadPool {{\n    fn caller(&self) {{ self.push(1); }}\n}}\n"
+        );
+        let (files, g) = graph_of(&[("a.rs", &src)]);
+        assert_eq!(resolved_keys(&files, &g, "caller"), vec!["ThreadPool::push"]);
+    }
+
+    #[test]
+    fn self_qualifier_maps_to_the_callers_impl() {
+        let src = "struct A;\nstruct B;\nimpl A {\n    fn mk() -> usize { 1 }\n    fn caller(&self) -> usize { Self::mk() }\n}\nimpl B {\n    fn mk() -> usize { 2 }\n}\n";
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        assert_eq!(resolved_keys(&files, &g, "caller"), vec!["A::mk"]);
+    }
+
+    #[test]
+    fn associated_fns_are_not_method_candidates() {
+        // Args::parse has no self receiver — `s.parse()` must not edge to it
+        let src = "struct Args;\nimpl Args {\n    fn parse(v: usize) -> usize { v }\n}\nfn caller(s: &str) {\n    s.parse::<u32>().ok();\n}\n";
+        let (files, g) = graph_of(&[("a.rs", src)]);
+        assert!(resolved_keys(&files, &g, "caller").is_empty());
+    }
+
+    #[test]
+    fn qual_falls_back_to_free_fns_and_crosses_files() {
+        let (files, g) = graph_of(&[
+            ("a.rs", "fn caller() { other::helper(); }\n"),
+            ("b.rs", "pub fn helper() {}\n"),
+        ]);
+        assert_eq!(resolved_keys(&files, &g, "caller"), vec!["helper"]);
+    }
+
+    #[test]
+    fn transitive_walk_reports_the_full_chain() {
+        let (files, g) = graph_of(&[(
+            "a.rs",
+            "fn root() { mid(); }\nfn mid() { leaf(); }\nfn leaf() { tok(); }\n",
+        )]);
+        let root = (0..g.fns.len()).find(|&i| g.item(&files, i).1.name == "root").unwrap();
+        let scan = |_sf: &SourceFile, f: &FnItem| -> Vec<(usize, String)> {
+            if f.name == "leaf" { vec![(f.line, "`tok`".to_string())] } else { Vec::new() }
+        };
+        let hits = transitive_check(&files, &g, root, &scan, &[], &|_| false);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].chain.len(), 3);
+        assert!(hits[0].chain[0].starts_with("root "));
+        assert!(hits[0].chain[2].starts_with("leaf "));
+    }
+
+    #[test]
+    fn allowlisted_and_marked_callees_cut_the_walk() {
+        let (files, g) = graph_of(&[(
+            "a.rs",
+            "fn root() { audited(); checked(); }\nfn audited() { tok(); }\n// deny_alloc\nfn checked() { tok(); }\n",
+        )]);
+        let root = (0..g.fns.len()).find(|&i| g.item(&files, i).1.name == "root").unwrap();
+        let scan = |_sf: &SourceFile, f: &FnItem| -> Vec<(usize, String)> {
+            if f.name != "root" { vec![(f.line, "`tok`".to_string())] } else { Vec::new() }
+        };
+        let hits =
+            transitive_check(&files, &g, root, &scan, &[(None, "audited")], &|f| f.deny_alloc);
+        assert!(hits.is_empty(), "both callees must be cut");
+    }
+}

@@ -1,0 +1,262 @@
+//! Masking lexer: split Rust source into two aligned, line-preserving
+//! views — code-only and comments-only — so downstream rules never fire
+//! on commented-out code or string contents.
+//!
+//! Handles line comments, nested block comments, ordinary and byte
+//! strings, raw strings (`r"…"`, `r#"…"#`, `br"…"`), char literals
+//! (escaped and plain), and char-vs-lifetime disambiguation. Newlines
+//! survive in both views so indices map 1:1 to source lines.
+
+/// Split `src` into `(code, comments)` views of equal length.
+pub fn mask(src: &str) -> (String, String) {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut code = String::with_capacity(src.len());
+    let mut com = String::with_capacity(src.len());
+    let keep_nl = |c: char| if c == '\n' { '\n' } else { ' ' };
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        // line comment
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                code.push(' ');
+                com.push(b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // block comment (nesting, as in Rust)
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 0usize;
+            while i < n {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    code.push(' ');
+                    com.push('/');
+                    code.push(' ');
+                    com.push('*');
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    code.push(' ');
+                    com.push('*');
+                    code.push(' ');
+                    com.push('/');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    code.push(keep_nl(b[i]));
+                    com.push(b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // raw string r"…" / r#"…"# (with optional b prefix)
+        let raw_at = if c == 'r' && !prev_is_ident(&b, i) {
+            Some(i + 1)
+        } else if c == 'b' && !prev_is_ident(&b, i) && i + 1 < n && b[i + 1] == 'r' {
+            Some(i + 2)
+        } else {
+            None
+        };
+        if let Some(mut j) = raw_at {
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                // emit the prefix + opening quote as code, then blank until
+                // the matching `"###…` terminator
+                while i <= j {
+                    code.push(b[i]);
+                    com.push(' ');
+                    i += 1;
+                }
+                'scan: while i < n {
+                    if b[i] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                code.push(b[i]);
+                                com.push(' ');
+                                i += 1;
+                            }
+                            break 'scan;
+                        }
+                    }
+                    code.push(keep_nl(b[i]));
+                    com.push(keep_nl(b[i]));
+                    i += 1;
+                }
+                continue;
+            }
+            // `r` / `br` not followed by a string — fall through as code
+        }
+        // ordinary string (also covers b"…")
+        if c == '"' {
+            code.push('"');
+            com.push(' ');
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    code.push(' ');
+                    com.push(' ');
+                    code.push(keep_nl(b[i + 1]));
+                    com.push(keep_nl(b[i + 1]));
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    code.push('"');
+                    com.push(' ');
+                    i += 1;
+                    break;
+                }
+                code.push(keep_nl(b[i]));
+                com.push(keep_nl(b[i]));
+                i += 1;
+            }
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal: '…' with a backslash
+                code.push(' ');
+                com.push(' ');
+                i += 1;
+                while i < n && b[i] != '\'' {
+                    code.push(keep_nl(b[i]));
+                    com.push(keep_nl(b[i]));
+                    i += 1;
+                }
+                if i < n {
+                    code.push(' ');
+                    com.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // plain 'x' char literal: all three chars blanked in both views
+                for _ in 0..3 {
+                    code.push(keep_nl(b[i]));
+                    com.push(' ');
+                    i += 1;
+                }
+                continue;
+            }
+            // lifetime ('a) or lone quote — plain code
+            code.push('\'');
+            com.push(' ');
+            i += 1;
+            continue;
+        }
+        code.push(c);
+        com.push(keep_nl(c));
+        i += 1;
+    }
+    (code, com)
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
+}
+
+/// Positions (0-based char index) where `token` occurs in `hay` with
+/// identifier boundaries on both sides.
+pub fn token_positions(hay: &str, token: &str) -> Vec<usize> {
+    let h: Vec<char> = hay.chars().collect();
+    let t: Vec<char> = token.chars().collect();
+    let mut out = Vec::new();
+    if t.is_empty() || h.len() < t.len() {
+        return out;
+    }
+    let boundary_needed = t[0].is_alphanumeric() || t[0] == '_';
+    for s in 0..=h.len() - t.len() {
+        if h[s..s + t.len()] != t[..] {
+            continue;
+        }
+        if boundary_needed && s > 0 && (h[s - 1].is_alphanumeric() || h[s - 1] == '_') {
+            continue;
+        }
+        let e = s + t.len();
+        let last = t[t.len() - 1];
+        if (last.is_alphanumeric() || last == '_')
+            && e < h.len()
+            && (h[e].is_alphanumeric() || h[e] == '_')
+        {
+            continue;
+        }
+        out.push(s);
+    }
+    out
+}
+
+/// The human text of a comment line: strip leading `/` and `!` markers and
+/// surrounding whitespace (`// x`, `/// x`, `//! x` all yield `x …`).
+pub fn comment_text(line: &str) -> &str {
+    let mut t = line.trim();
+    loop {
+        if let Some(rest) = t.strip_prefix('/') {
+            t = rest;
+        } else if let Some(rest) = t.strip_prefix('!') {
+            t = rest;
+        } else {
+            break;
+        }
+    }
+    t.trim()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_blanks_strings_and_keeps_code() {
+        let (code, com) = mask("let s = \"unsafe\"; // unsafe here\nlet t = 'a';\n");
+        assert!(!code.contains("unsafe"), "string/comment leaked into code: {code:?}");
+        assert!(com.contains("unsafe here"), "comment text lost: {com:?}");
+        assert!(code.contains("let t ="));
+    }
+
+    #[test]
+    fn masking_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let r = r#\"vec! unsafe\"#; let c = '\\n'; let q = 'x'; }";
+        let (code, _) = mask(src);
+        assert!(!code.contains("unsafe"), "{code:?}");
+        assert!(!code.contains("vec!"), "{code:?}");
+        assert!(code.contains("<'a>"), "lifetime mangled: {code:?}");
+    }
+
+    #[test]
+    fn masking_is_line_aligned() {
+        let src = "a\n/* b\nc */\nd \"e\nf\" g\n";
+        let (code, com) = mask(src);
+        assert_eq!(code.matches('\n').count(), src.matches('\n').count());
+        assert_eq!(com.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn token_positions_respect_identifier_boundaries() {
+        assert!(token_positions("let unsafer = 1;", "unsafe").is_empty());
+        assert_eq!(token_positions("unsafe { }", "unsafe").len(), 1);
+        assert!(!token_positions("x.partial_cmp(&y)", "partial_cmp").is_empty());
+    }
+
+    #[test]
+    fn comment_text_strips_doc_markers() {
+        assert_eq!(comment_text("  /// hello"), "hello");
+        assert_eq!(comment_text("//! inner"), "inner");
+        assert_eq!(comment_text("// ordering: x"), "ordering: x");
+    }
+}

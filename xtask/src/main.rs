@@ -1,49 +1,70 @@
 //! `cargo run -p xtask -- lint`: repo-invariant checks clippy can't express.
 //!
-//! Scans `rust/src` and enforces:
+//! The engine builds a workspace-wide call graph from a dependency-free
+//! item parser (`parse.rs` on top of the masking lexer in `lexer.rs`,
+//! `callgraph.rs` for resolution) and runs the rules in `rules/`:
 //!
-//! 1. **`safety-comment`** — every `unsafe` keyword (block, fn, impl) is
-//!    preceded (within 8 lines, comments only) by a written `SAFETY:`
-//!    justification (`# Safety` doc headers count).
+//! 1. **`safety-comment`** — every `unsafe` keyword is preceded (within 8
+//!    lines, comments only) by a written `SAFETY:` justification.
 //! 2. **`unsafe-location`** — `unsafe` appears only under `native/` and in
-//!    `util/alloc_gate.rs` (the counting global allocator); everywhere else
-//!    is forbidden (and additionally `#![forbid(unsafe_code)]`-pinned).
-//! 3. **`float-ordering`** — no `partial_cmp` outside `util/`: float
-//!    comparisons in kernel/model/bench code must use `total_cmp`, which
-//!    cannot silently drop NaN rows the way `partial_cmp().unwrap_or(...)`
-//!    patterns do.
-//! 4. **`deny-alloc`** — a function whose preceding comment line contains
-//!    `deny_alloc` must not allocate: no `vec!`, `Vec::new`,
-//!    `Vec::with_capacity`, `Box::new`, `format!`, `.collect()`,
-//!    `.to_vec()`, `.to_string()`, `.to_owned()`, `String::…`, `Arc::new`,
-//!    `Rc::new` anywhere in its body. This pins the GEMM microkernels and
-//!    the decode `block_step` hot path.
+//!    `util/alloc_gate.rs` (the counting global allocator).
+//! 3. **`float-ordering`** — no `partial_cmp` outside `util/`: kernel and
+//!    model code must use `total_cmp`, which cannot silently drop NaN rows.
+//! 4. **`deny-alloc`** — a `// deny_alloc` fn must not allocate, in its own
+//!    body or through anything it transitively calls; violations print the
+//!    full call chain from the marked root.
+//! 5. **`no-panic`** — a `// no_panic` fn (the serve/decode hot path) must
+//!    not reach `unwrap`/`expect`/`panic!`-family tokens or un-annotated
+//!    slice indexing, transitively. `// in_bounds:` / `// guarded:` /
+//!    `// bounds:` annotations are the audited escape hatches.
+//! 6. **`atomic-ordering`** — every `Ordering::*` in `native/pool.rs` and
+//!    `util/alloc_gate.rs` must carry an adjacent `// ordering:`
+//!    justification; the justified set is printed as a reviewable table.
 //!
-//! The rule engine is a small hand-rolled lexer (line/block comments,
-//! strings, raw strings, char-vs-lifetime) producing two aligned views of
-//! each file — code-only and comments-only — so rules never fire on
-//! commented-out code or string contents. Deliberately dependency-free (no
-//! `syn`): the build image is hermetic.
+//! `lint` scans `rust/src` and self-hosts over `xtask/src`. Deliberately
+//! dependency-free (no `syn`): the build image is hermetic.
 //!
-//! `cargo run -p xtask -- lint --self-test` proves the checker has teeth:
-//! every rule must fire on an embedded seeded violation (an uncommented
-//! `unsafe` block, a stray `partial_cmp`, an allocating `deny_alloc` fn)
-//! and stay quiet on the good twin. The same fixtures run under
-//! `cargo test -p xtask`.
+//! `lint --self-test` proves the checker has teeth: every rule must fire
+//! on an embedded seeded violation (allocation hidden behind a helper one
+//! file away, a panic two calls deep, an unjustified atomic ordering) and
+//! stay quiet on the clean twin; a coverage pass asserts no registered
+//! rule is fixture-less. The same fixtures run under `cargo test -p xtask`.
+//!
+//! `bench-check [--file PATH]` validates a `BENCH_native.json` against the
+//! `bench_native/v6` schema emitted by `rust/src/bench/report.rs`.
 
-use std::fmt;
+#![forbid(unsafe_code)]
+
+mod benchcheck;
+mod callgraph;
+mod lexer;
+mod parse;
+mod rules;
+mod selftest;
+
+use parse::SourceFile;
+use rules::run_all;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Format {
+    Text,
+    Json,
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut cmd = None;
     let mut root: Option<PathBuf> = None;
+    let mut file: Option<PathBuf> = None;
     let mut self_test = false;
+    let mut format = Format::Text;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "lint" => cmd = Some("lint"),
+            "bench-check" => cmd = Some("bench-check"),
             "--self-test" => self_test = true,
             "--root" => {
                 i += 1;
@@ -52,20 +73,37 @@ fn main() -> ExitCode {
                     None => return usage("--root needs a path"),
                 }
             }
+            "--file" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => file = Some(PathBuf::from(p)),
+                    None => return usage("--file needs a path"),
+                }
+            }
+            "--format" => {
+                i += 1;
+                match args.get(i).map(|s| s.as_str()) {
+                    Some("text") => format = Format::Text,
+                    Some("json") => format = Format::Json,
+                    _ => return usage("--format needs `text` or `json`"),
+                }
+            }
             other => return usage(&format!("unknown argument {other:?}")),
         }
         i += 1;
     }
     match cmd {
-        Some("lint") if self_test => run_self_test(),
-        Some("lint") => run_lint(root),
-        _ => usage("expected a command: lint [--self-test] [--root PATH]"),
+        Some("lint") if self_test => selftest::run_self_test(),
+        Some("lint") => run_lint(root, format),
+        Some("bench-check") => run_bench_check(root, file),
+        _ => usage("expected a command: lint or bench-check"),
     }
 }
 
 fn usage(msg: &str) -> ExitCode {
     eprintln!("xtask: {msg}");
-    eprintln!("usage: cargo run -p xtask -- lint [--self-test] [--root PATH]");
+    eprintln!("usage: cargo run -p xtask -- lint [--self-test] [--root PATH] [--format text|json]");
+    eprintln!("       cargo run -p xtask -- bench-check [--root PATH] [--file PATH]");
     ExitCode::from(2)
 }
 
@@ -76,46 +114,118 @@ fn repo_root(cli: Option<PathBuf>) -> PathBuf {
     })
 }
 
-fn run_lint(root: Option<PathBuf>) -> ExitCode {
-    let root = repo_root(root);
-    let src = root.join("rust").join("src");
-    if !src.is_dir() {
-        eprintln!("xtask lint: {} is not a directory", src.display());
-        return ExitCode::from(2);
+/// Load every `.rs` file under `root/<tree>` as a `SourceFile` rooted at
+/// `tree` (so paths in diagnostics read `rust/src/...` / `xtask/src/...`).
+fn load_tree(
+    root: &Path,
+    tree: &str,
+    required: bool,
+    out: &mut Vec<SourceFile>,
+) -> Result<(), ExitCode> {
+    let dir = root.join(tree);
+    if !dir.is_dir() {
+        if required {
+            eprintln!("xtask lint: {} is not a directory", dir.display());
+            return Err(ExitCode::from(2));
+        }
+        return Ok(());
     }
-    let mut files = Vec::new();
-    if let Err(e) = collect_rs_files(&src, &mut files) {
-        eprintln!("xtask lint: walking {}: {e}", src.display());
-        return ExitCode::from(2);
+    let mut paths = Vec::new();
+    if let Err(e) = collect_rs_files(&dir, &mut paths) {
+        eprintln!("xtask lint: walking {}: {e}", dir.display());
+        return Err(ExitCode::from(2));
     }
-    files.sort();
-    let mut violations = Vec::new();
-    let mut checked = 0usize;
-    for path in &files {
+    paths.sort();
+    for path in &paths {
         let rel = path
-            .strip_prefix(&src)
-            .expect("collected under src")
+            .strip_prefix(&dir)
+            .expect("collected under tree")
             .to_string_lossy()
             .replace('\\', "/");
         match std::fs::read_to_string(path) {
-            Ok(text) => {
-                checked += 1;
-                check_source(&rel, &text, &mut violations);
-            }
+            Ok(text) => out.push(SourceFile::new(tree, &rel, &text)),
             Err(e) => {
                 eprintln!("xtask lint: reading {}: {e}", path.display());
-                return ExitCode::from(2);
+                return Err(ExitCode::from(2));
             }
         }
     }
-    for v in &violations {
-        eprintln!("{v}");
+    Ok(())
+}
+
+fn run_lint(root: Option<PathBuf>, format: Format) -> ExitCode {
+    let root = repo_root(root);
+    let mut files = Vec::new();
+    // rust/src is the product tree; xtask/src is self-hosted so the linter
+    // obeys its own contracts.
+    if let Err(code) = load_tree(&root, "rust/src", true, &mut files) {
+        return code;
+    }
+    if let Err(code) = load_tree(&root, "xtask/src", false, &mut files) {
+        return code;
+    }
+    let (violations, atomics) = run_all(&files);
+    match format {
+        Format::Json => {
+            for v in &violations {
+                println!("{}", v.to_json_line());
+            }
+        }
+        Format::Text => {
+            for v in &violations {
+                eprintln!("{v}");
+            }
+            if !atomics.is_empty() {
+                println!("audited atomics ({} justified):", atomics.len());
+                for row in &atomics {
+                    println!(
+                        "  {}:{}  {:<8} {}",
+                        row.path, row.line, row.ordering, row.note
+                    );
+                }
+            }
+        }
     }
     if violations.is_empty() {
-        println!("xtask lint: {checked} files clean (safety-comment, unsafe-location, float-ordering, deny-alloc)");
+        if format == Format::Text {
+            println!(
+                "xtask lint: {} files clean ({})",
+                files.len(),
+                rules::RULES.join(", ")
+            );
+        }
         ExitCode::SUCCESS
     } else {
-        eprintln!("xtask lint: {} violation(s) in {checked} files", violations.len());
+        eprintln!("xtask lint: {} violation(s) in {} files", violations.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn run_bench_check(root: Option<PathBuf>, file: Option<PathBuf>) -> ExitCode {
+    let path = file.unwrap_or_else(|| repo_root(root).join("BENCH_native.json"));
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("xtask bench-check: reading {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    };
+    let doc = match benchcheck::parse_json(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("xtask bench-check: {}: invalid JSON: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    let errors = benchcheck::validate_v6(&doc);
+    if errors.is_empty() {
+        println!("xtask bench-check: {} conforms to bench_native/v6", path.display());
+        ExitCode::SUCCESS
+    } else {
+        for e in &errors {
+            eprintln!("xtask bench-check: {}: {e}", path.display());
+        }
+        eprintln!("xtask bench-check: {} schema error(s)", errors.len());
         ExitCode::FAILURE
     }
 }
@@ -131,577 +241,4 @@ fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
         }
     }
     Ok(())
-}
-
-#[derive(Debug, Clone, PartialEq, Eq)]
-struct Violation {
-    file: String,
-    line: usize,
-    rule: &'static str,
-    msg: String,
-}
-
-impl fmt::Display for Violation {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "rust/src/{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
-    }
-}
-
-// --- lexer ---------------------------------------------------------------
-
-/// Split `src` into two equal-length, line-aligned views: `code` (comments
-/// and string/char contents blanked) and `comments` (everything but comment
-/// text blanked). Newlines survive in both so indices map to source lines.
-fn mask(src: &str) -> (String, String) {
-    let b: Vec<char> = src.chars().collect();
-    let n = b.len();
-    let mut code = String::with_capacity(src.len());
-    let mut com = String::with_capacity(src.len());
-    let keep_nl = |c: char| if c == '\n' { '\n' } else { ' ' };
-    let mut i = 0;
-    while i < n {
-        let c = b[i];
-        // line comment
-        if c == '/' && i + 1 < n && b[i + 1] == '/' {
-            while i < n && b[i] != '\n' {
-                code.push(' ');
-                com.push(b[i]);
-                i += 1;
-            }
-            continue;
-        }
-        // block comment (nesting, as in Rust)
-        if c == '/' && i + 1 < n && b[i + 1] == '*' {
-            let mut depth = 0usize;
-            while i < n {
-                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
-                    depth += 1;
-                    code.push(' ');
-                    com.push('/');
-                    code.push(' ');
-                    com.push('*');
-                    i += 2;
-                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
-                    depth -= 1;
-                    code.push(' ');
-                    com.push('*');
-                    code.push(' ');
-                    com.push('/');
-                    i += 2;
-                    if depth == 0 {
-                        break;
-                    }
-                } else {
-                    code.push(keep_nl(b[i]));
-                    com.push(b[i]);
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // raw string r"…" / r#"…"# (with optional b prefix)
-        let raw_at = if c == 'r' && !prev_is_ident(&b, i) {
-            Some(i + 1)
-        } else if c == 'b' && !prev_is_ident(&b, i) && i + 1 < n && b[i + 1] == 'r' {
-            Some(i + 2)
-        } else {
-            None
-        };
-        if let Some(mut j) = raw_at {
-            let mut hashes = 0usize;
-            while j < n && b[j] == '#' {
-                hashes += 1;
-                j += 1;
-            }
-            if j < n && b[j] == '"' {
-                // emit the prefix + opening quote as code, then blank until
-                // the matching `"###…` terminator
-                while i <= j {
-                    code.push(b[i]);
-                    com.push(' ');
-                    i += 1;
-                }
-                'scan: while i < n {
-                    if b[i] == '"' {
-                        let mut k = 0usize;
-                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == '#' {
-                            k += 1;
-                        }
-                        if k == hashes {
-                            for _ in 0..=hashes {
-                                code.push(b[i]);
-                                com.push(' ');
-                                i += 1;
-                            }
-                            break 'scan;
-                        }
-                    }
-                    code.push(keep_nl(b[i]));
-                    com.push(keep_nl(b[i]));
-                    i += 1;
-                }
-                continue;
-            }
-            // `r` / `br` not followed by a string — fall through as code
-        }
-        // ordinary string (also covers b"…")
-        if c == '"' {
-            code.push('"');
-            com.push(' ');
-            i += 1;
-            while i < n {
-                if b[i] == '\\' && i + 1 < n {
-                    code.push(' ');
-                    com.push(' ');
-                    code.push(keep_nl(b[i + 1]));
-                    com.push(keep_nl(b[i + 1]));
-                    i += 2;
-                    continue;
-                }
-                if b[i] == '"' {
-                    code.push('"');
-                    com.push(' ');
-                    i += 1;
-                    break;
-                }
-                code.push(keep_nl(b[i]));
-                com.push(keep_nl(b[i]));
-                i += 1;
-            }
-            continue;
-        }
-        // char literal vs lifetime
-        if c == '\'' {
-            if i + 1 < n && b[i + 1] == '\\' {
-                // escaped char literal: '…' with a backslash
-                code.push(' ');
-                com.push(' ');
-                i += 1;
-                while i < n && b[i] != '\'' {
-                    code.push(keep_nl(b[i]));
-                    com.push(keep_nl(b[i]));
-                    i += 1;
-                }
-                if i < n {
-                    code.push(' ');
-                    com.push(' ');
-                    i += 1;
-                }
-                continue;
-            }
-            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
-                // plain 'x' char literal
-                // all three chars (quotes + payload) are blanked in both views
-                for _ in 0..3 {
-                    code.push(keep_nl(b[i]));
-                    com.push(' ');
-                    i += 1;
-                }
-                continue;
-            }
-            // lifetime ('a) or lone quote — plain code
-            code.push('\'');
-            com.push(' ');
-            i += 1;
-            continue;
-        }
-        code.push(c);
-        com.push(keep_nl(c));
-        i += 1;
-    }
-    (code, com)
-}
-
-fn prev_is_ident(b: &[char], i: usize) -> bool {
-    i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_')
-}
-
-/// Positions (0-based char index) where `token` occurs in `hay` with
-/// identifier boundaries on both sides.
-fn token_positions(hay: &str, token: &str) -> Vec<usize> {
-    let h: Vec<char> = hay.chars().collect();
-    let t: Vec<char> = token.chars().collect();
-    let mut out = Vec::new();
-    if t.is_empty() || h.len() < t.len() {
-        return out;
-    }
-    let boundary_needed = t[0].is_alphanumeric() || t[0] == '_';
-    for s in 0..=h.len() - t.len() {
-        if h[s..s + t.len()] != t[..] {
-            continue;
-        }
-        if boundary_needed && s > 0 && (h[s - 1].is_alphanumeric() || h[s - 1] == '_') {
-            continue;
-        }
-        let e = s + t.len();
-        let last = t[t.len() - 1];
-        if (last.is_alphanumeric() || last == '_')
-            && e < h.len()
-            && (h[e].is_alphanumeric() || h[e] == '_')
-        {
-            continue;
-        }
-        out.push(s);
-    }
-    out
-}
-
-// --- rules ---------------------------------------------------------------
-
-/// Files allowed to contain `unsafe`: the native executor and the counting
-/// global allocator (a `GlobalAlloc` impl is unsafe by definition).
-fn unsafe_allowed(rel: &str) -> bool {
-    rel.starts_with("native/") || rel == "util/alloc_gate.rs"
-}
-
-/// Files exempt from the `partial_cmp` ban (the util layer may build
-/// ordering helpers).
-fn float_ordering_exempt(rel: &str) -> bool {
-    rel.starts_with("util/")
-}
-
-/// How many comment lines above an `unsafe` keyword may hold the SAFETY
-/// justification.
-const SAFETY_LOOKBACK: usize = 8;
-
-const DENY_ALLOC_TOKENS: &[&str] = &[
-    "vec!",
-    "Vec::new",
-    "Vec::with_capacity",
-    "Box::new",
-    "String::new",
-    "String::from",
-    "String::with_capacity",
-    "Arc::new",
-    "Rc::new",
-    "format!",
-    ".collect()",
-    ".to_vec()",
-    ".to_string()",
-    ".to_owned()",
-];
-
-fn check_source(rel: &str, src: &str, out: &mut Vec<Violation>) {
-    let (code, com) = mask(src);
-    let code_lines: Vec<&str> = code.lines().collect();
-    let com_lines: Vec<&str> = com.lines().collect();
-
-    // rules 1 + 2: unsafe placement and SAFETY comments
-    for (ln, line) in code_lines.iter().enumerate() {
-        if token_positions(line, "unsafe").is_empty() {
-            continue;
-        }
-        if !unsafe_allowed(rel) {
-            out.push(Violation {
-                file: rel.to_string(),
-                line: ln + 1,
-                rule: "unsafe-location",
-                msg: "`unsafe` outside native/ (and util/alloc_gate.rs) — move the unsafe code \
-                      or express it safely"
-                    .to_string(),
-            });
-            continue;
-        }
-        let lo = ln.saturating_sub(SAFETY_LOOKBACK);
-        let justified = com_lines[lo..=ln]
-            .iter()
-            .any(|c| c.contains("SAFETY") || c.contains("# Safety") || c.contains("Safety:"));
-        if !justified {
-            out.push(Violation {
-                file: rel.to_string(),
-                line: ln + 1,
-                rule: "safety-comment",
-                msg: format!(
-                    "`unsafe` without a `// SAFETY:` comment within {SAFETY_LOOKBACK} lines"
-                ),
-            });
-        }
-    }
-
-    // rule 3: float ordering
-    if !float_ordering_exempt(rel) {
-        for (ln, line) in code_lines.iter().enumerate() {
-            if !token_positions(line, "partial_cmp").is_empty() {
-                out.push(Violation {
-                    file: rel.to_string(),
-                    line: ln + 1,
-                    rule: "float-ordering",
-                    msg: "`partial_cmp` outside util/ — use `f32::total_cmp` so NaN cannot \
-                          silently reorder"
-                        .to_string(),
-                });
-            }
-        }
-    }
-
-    // rule 4: deny_alloc-marked functions
-    for (ln, cline) in com_lines.iter().enumerate() {
-        if !cline.contains("deny_alloc") {
-            continue;
-        }
-        if let Some((fn_line, body)) = function_body_after(&code_lines, ln + 1) {
-            for tok in DENY_ALLOC_TOKENS {
-                for (bl, bline) in body.iter().enumerate() {
-                    if bline.contains(tok) {
-                        out.push(Violation {
-                            file: rel.to_string(),
-                            line: fn_line + bl + 1,
-                            rule: "deny-alloc",
-                            msg: format!(
-                                "`{tok}` inside a `// deny_alloc` function — use a caller-held \
-                                 scratch buffer"
-                            ),
-                        });
-                    }
-                }
-            }
-        } else {
-            out.push(Violation {
-                file: rel.to_string(),
-                line: ln + 1,
-                rule: "deny-alloc",
-                msg: "`deny_alloc` marker with no function following it".to_string(),
-            });
-        }
-    }
-}
-
-/// Starting at code line `start`, skip attributes/blank lines to the next
-/// `fn`, then return `(fn_first_line_0based, body_lines)` — the lines from
-/// the function's opening `{` through its matching close (code view, so
-/// braces in strings/comments are already blanked).
-fn function_body_after<'a>(code_lines: &[&'a str], start: usize) -> Option<(usize, Vec<&'a str>)> {
-    let mut i = start;
-    // allow attributes, cfgs, and blanks between the marker and the fn
-    while i < code_lines.len() {
-        let t = code_lines[i].trim();
-        if t.is_empty() || t.starts_with('#') {
-            i += 1;
-            continue;
-        }
-        if token_positions(code_lines[i], "fn").is_empty() {
-            return None; // something else intervened — marker is dangling
-        }
-        break;
-    }
-    if i >= code_lines.len() {
-        return None;
-    }
-    let fn_line = i;
-    let mut depth = 0usize;
-    let mut opened = false;
-    let mut body = Vec::new();
-    for line in code_lines.iter().skip(fn_line) {
-        if opened || line.contains('{') {
-            body.push(*line);
-        }
-        for c in line.chars() {
-            match c {
-                '{' => {
-                    depth += 1;
-                    opened = true;
-                }
-                '}' => {
-                    depth = depth.saturating_sub(1);
-                    if opened && depth == 0 {
-                        return Some((fn_line, body));
-                    }
-                }
-                _ => {}
-            }
-        }
-    }
-    if opened {
-        Some((fn_line, body)) // unbalanced (shouldn't happen on rustc-valid code)
-    } else {
-        None
-    }
-}
-
-// --- self-test -----------------------------------------------------------
-
-struct Fixture {
-    name: &'static str,
-    file: &'static str,
-    src: &'static str,
-    /// Rules that MUST fire (empty = must be clean).
-    expect: &'static [&'static str],
-}
-
-const FIXTURES: &[Fixture] = &[
-    Fixture {
-        name: "clean native file with commented unsafe",
-        file: "native/good.rs",
-        src: r#"
-/// Doc. The string "unsafe { }" and the comment below must not trip rules.
-// this line mentions partial_cmp but is a comment
-fn safe_fn(p: *const f32) -> bool {
-    // SAFETY: p is non-null and valid for reads by the caller contract.
-    let y = unsafe { *p };
-    y.total_cmp(&0.0).is_gt()
-}
-"#,
-        expect: &[],
-    },
-    Fixture {
-        name: "seeded: uncommented unsafe block",
-        file: "native/bad_safety.rs",
-        src: r#"
-fn oops(p: *const f32) -> f32 {
-    unsafe { *p }
-}
-"#,
-        expect: &["safety-comment"],
-    },
-    Fixture {
-        name: "seeded: unsafe outside native/",
-        file: "bench/bad_place.rs",
-        src: r#"
-// SAFETY: a comment does not make the location legal.
-fn oops(p: *const f32) -> f32 {
-    unsafe { *p }
-}
-"#,
-        expect: &["unsafe-location"],
-    },
-    Fixture {
-        name: "seeded: partial_cmp in model code",
-        file: "native/bad_float.rs",
-        src: r#"
-fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    for i in 1..xs.len() {
-        if xs[i].partial_cmp(&xs[best]) == Some(core::cmp::Ordering::Greater) {
-            best = i;
-        }
-    }
-    best
-}
-"#,
-        expect: &["float-ordering"],
-    },
-    Fixture {
-        name: "seeded: allocation in a deny_alloc function",
-        file: "native/bad_alloc.rs",
-        src: r#"
-// deny_alloc
-#[inline]
-fn hot(n: usize) -> f32 {
-    let tmp = vec![0.0f32; n];
-    tmp.iter().sum()
-}
-"#,
-        expect: &["deny-alloc"],
-    },
-    Fixture {
-        name: "deny_alloc function that is actually clean",
-        file: "native/good_alloc.rs",
-        src: r#"
-// deny_alloc
-fn hot(out: &mut [f32]) {
-    for o in out.iter_mut() {
-        *o += 1.0;
-    }
-}
-"#,
-        expect: &[],
-    },
-];
-
-/// Run every fixture through the real rule engine; exit non-zero if any
-/// seeded violation goes undetected (or a clean fixture trips).
-fn run_self_test() -> ExitCode {
-    let mut failed = false;
-    for f in FIXTURES {
-        let mut vs = Vec::new();
-        check_source(f.file, f.src, &mut vs);
-        let fired: Vec<&str> = vs.iter().map(|v| v.rule).collect();
-        let ok = f.expect.iter().all(|r| fired.contains(r))
-            && fired.iter().all(|r| f.expect.contains(r));
-        if ok {
-            println!("self-test ok: {} → {:?}", f.name, fired);
-        } else {
-            failed = true;
-            eprintln!("self-test FAILED: {} — expected rules {:?}, got {:?}", f.name, f.expect, fired);
-            for v in &vs {
-                eprintln!("  {v}");
-            }
-        }
-    }
-    if failed {
-        eprintln!("xtask lint --self-test: the checker missed a seeded violation");
-        ExitCode::FAILURE
-    } else {
-        println!("xtask lint --self-test: all {} fixtures behaved", FIXTURES.len());
-        ExitCode::SUCCESS
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn rules_for(file: &str, src: &str) -> Vec<&'static str> {
-        let mut vs = Vec::new();
-        check_source(file, src, &mut vs);
-        vs.iter().map(|v| v.rule).collect()
-    }
-
-    #[test]
-    fn fixtures_behave_exactly_as_the_self_test_demands() {
-        for f in FIXTURES {
-            let fired = rules_for(f.file, f.src);
-            assert!(
-                f.expect.iter().all(|r| fired.contains(r))
-                    && fired.iter().all(|r| f.expect.contains(r)),
-                "{}: expected {:?}, got {:?}",
-                f.name,
-                f.expect,
-                fired
-            );
-        }
-    }
-
-    #[test]
-    fn masking_blanks_strings_and_keeps_code() {
-        let (code, com) = mask("let s = \"unsafe\"; // unsafe here\nlet t = 'a';\n");
-        assert!(!code.contains("unsafe"), "string/comment leaked into code: {code:?}");
-        assert!(com.contains("unsafe here"), "comment text lost: {com:?}");
-        assert!(code.contains("let t ="));
-    }
-
-    #[test]
-    fn masking_handles_raw_strings_and_lifetimes() {
-        let src = "fn f<'a>(x: &'a str) { let r = r#\"vec! unsafe\"#; let c = '\\n'; let q = 'x'; }";
-        let (code, _) = mask(src);
-        assert!(!code.contains("unsafe"), "{code:?}");
-        assert!(!code.contains("vec!"), "{code:?}");
-        assert!(code.contains("<'a>"), "lifetime mangled: {code:?}");
-    }
-
-    #[test]
-    fn token_positions_respect_identifier_boundaries() {
-        assert!(token_positions("let unsafer = 1;", "unsafe").is_empty());
-        assert_eq!(token_positions("unsafe { }", "unsafe").len(), 1);
-        assert!(!token_positions("x.partial_cmp(&y)", "partial_cmp").is_empty());
-    }
-
-    #[test]
-    fn safety_lookback_window_is_bounded() {
-        // a SAFETY comment 10 lines up must NOT satisfy the rule
-        let mut src = String::from("// SAFETY: too far away.\n");
-        for _ in 0..10 {
-            src.push_str("fn pad() {}\n");
-        }
-        src.push_str("fn f(p: *const f32) -> f32 { unsafe { *p } }\n");
-        assert!(rules_for("native/far.rs", &src).contains(&"safety-comment"));
-    }
-
-    #[test]
-    fn deny_alloc_sees_through_attributes_and_reports_none_on_clean() {
-        let src = "// deny_alloc\n#[allow(clippy::too_many_arguments)]\n#[inline]\nfn f(x: &mut [f32]) { x[0] = 1.0; }\n";
-        assert!(rules_for("native/a.rs", src).is_empty());
-        let bad = "// deny_alloc\nfn f() -> Vec<f32> { Vec::with_capacity(4) }\n";
-        assert_eq!(rules_for("native/b.rs", bad), vec!["deny-alloc"]);
-    }
 }

@@ -1,0 +1,708 @@
+//! Lightweight Rust item parser: functions, impl blocks, methods, and the
+//! contract markers above them. Built on the masking lexer — a deliberate
+//! non-goal is full Rust syntax (no `syn`; the build image is hermetic).
+//! Closures are not items of their own: calls inside a closure body are
+//! attributed to the enclosing `fn`, which is exactly what the transitive
+//! contracts need.
+
+use crate::lexer::{comment_text, mask, token_positions};
+
+/// How a call site names its target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallKind {
+    /// `helper(x)` — a plain path call.
+    Free,
+    /// `recv.name(x)` — a method call; `recv` holds the receiver ident (or
+    /// `<complex>` when the receiver is an expression).
+    Method,
+    /// `Type::name(x)` — a qualified call; `recv` holds the qualifier.
+    Qual,
+}
+
+/// One call site extracted from a function body.
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub kind: CallKind,
+    /// Receiver ident (Method), qualifier (Qual), or None (Free).
+    pub recv: Option<String>,
+    pub name: String,
+}
+
+/// One `fn` item (free function, inherent/trait-impl method, or nested fn).
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// Enclosing `impl` type name, if any.
+    pub impl_ty: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub line: usize,
+    /// Inclusive 0-based line span of the body (opening `{` .. closing `}`).
+    pub body: (usize, usize),
+    /// Inside a `#[cfg(test)] mod` region.
+    pub is_test: bool,
+    pub deny_alloc: bool,
+    pub no_panic: bool,
+    /// `// bounds:` fn-level audit: indexing in this fn is argued safe as a
+    /// whole (used for microkernels where per-line annotations would drown
+    /// the code).
+    pub bounds_audit: bool,
+    /// Declared with a `self` receiver (method rather than associated fn).
+    pub has_self: bool,
+    pub calls: Vec<Call>,
+}
+
+impl FnItem {
+    /// Display key: `Type::name` or `name`.
+    pub fn key(&self) -> String {
+        match &self.impl_ty {
+            Some(t) => format!("{t}::{}", self.name),
+            None => self.name.clone(),
+        }
+    }
+}
+
+/// A parsed source file: aligned code/comment views plus the items found.
+pub struct SourceFile {
+    /// Scan root the file came from (`rust/src` or `xtask/src`).
+    pub root: String,
+    /// Path relative to the root, with `/` separators.
+    pub rel: String,
+    pub code_lines: Vec<String>,
+    pub com_lines: Vec<String>,
+    /// Per line: inside a `#[cfg(test)] mod` block.
+    pub test_lines: Vec<bool>,
+    pub fns: Vec<FnItem>,
+    /// 0-based comment lines consumed as a contract marker by some fn —
+    /// any marker line NOT in this set is dangling.
+    pub claimed_markers: Vec<usize>,
+}
+
+impl SourceFile {
+    pub fn new(root: &str, rel: &str, src: &str) -> Self {
+        let (code, com) = mask(src);
+        let code_lines: Vec<String> = code.split('\n').map(|s| s.to_string()).collect();
+        let com_lines: Vec<String> = com.split('\n').map(|s| s.to_string()).collect();
+        let test_lines = compute_test_regions(&code_lines);
+        let mut sf = SourceFile {
+            root: root.to_string(),
+            rel: rel.to_string(),
+            code_lines,
+            com_lines,
+            test_lines,
+            fns: Vec::new(),
+            claimed_markers: Vec::new(),
+        };
+        parse_fns(&mut sf);
+        sf
+    }
+
+    /// Display path: `root/rel`.
+    pub fn path(&self) -> String {
+        format!("{}/{}", self.root, self.rel)
+    }
+}
+
+/// Per-line flags: inside a `#[cfg(test)]` (or `#[cfg(all(test, …))]`) mod.
+fn compute_test_regions(code_lines: &[String]) -> Vec<bool> {
+    let n = code_lines.len();
+    let mut in_test = vec![false; n];
+    let mut pending_attr = false;
+    let mut i = 0;
+    while i < n {
+        let line = &code_lines[i];
+        let stripped = line.trim();
+        if stripped.starts_with("#[")
+            && stripped.contains("cfg")
+            && !token_positions(line, "test").is_empty()
+        {
+            pending_attr = true;
+            i += 1;
+            continue;
+        }
+        if pending_attr {
+            if stripped.starts_with("#[") || stripped.is_empty() {
+                i += 1;
+                continue;
+            }
+            if !token_positions(line, "mod").is_empty() {
+                // brace-match the mod block from here
+                let mut depth = 0i64;
+                let mut opened = false;
+                let mut j = i;
+                while j < n {
+                    for ch in code_lines[j].chars() {
+                        if ch == '{' {
+                            depth += 1;
+                            opened = true;
+                        } else if ch == '}' {
+                            depth -= 1;
+                        }
+                    }
+                    in_test[j] = true;
+                    if opened && depth <= 0 {
+                        break;
+                    }
+                    j += 1;
+                }
+                i = j + 1;
+                pending_attr = false;
+                continue;
+            }
+            pending_attr = false;
+        }
+        i += 1;
+    }
+    in_test
+}
+
+/// A contract marker found at the start of a comment line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Marker {
+    DenyAlloc,
+    NoPanic,
+    BoundsAudit,
+}
+
+/// The marker this comment line carries, if any. The marker token must
+/// START the comment text (after `//`/`///`/`//!`), so prose that merely
+/// mentions a contract never registers.
+pub fn marker_of(com_line: &str) -> Option<Marker> {
+    let t = comment_text(com_line);
+    if starts_with_ident_token(t, "deny_alloc") {
+        Some(Marker::DenyAlloc)
+    } else if starts_with_ident_token(t, "no_panic") {
+        Some(Marker::NoPanic)
+    } else if t.starts_with("bounds:") {
+        Some(Marker::BoundsAudit)
+    } else {
+        None
+    }
+}
+
+fn starts_with_ident_token(t: &str, tok: &str) -> bool {
+    if !t.starts_with(tok) {
+        return false;
+    }
+    match t[tok.len()..].chars().next() {
+        Some(c) => !(c.is_alphanumeric() || c == '_'),
+        None => true,
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "in", "as", "else", "let", "mut", "ref",
+    "dyn", "impl", "pub", "use", "where", "async", "await", "break", "continue", "crate",
+    "super", "struct", "enum", "union", "trait", "type", "mod", "static", "const", "extern",
+    "move", "unsafe", "fn", "self", "Self", "true", "false",
+];
+
+/// Marker lines may sit this many comment/attr/blank lines above the `fn`.
+const MARK_LOOKBACK: usize = 16;
+
+fn parse_fns(sf: &mut SourceFile) {
+    let n = sf.code_lines.len();
+    // impl region stack: (type name, inclusive end line)
+    let mut impl_stack: Vec<(String, usize)> = Vec::new();
+    let mut fns = Vec::new();
+    let mut claimed = Vec::new();
+    let mut i = 0;
+    while i < n {
+        while impl_stack.last().is_some_and(|top| i > top.1) {
+            impl_stack.pop();
+        }
+        let line = &sf.code_lines[i];
+        let trimmed = line.trim();
+        if !token_positions(line, "impl").is_empty()
+            && (trimmed.starts_with("impl") || trimmed.starts_with("unsafe impl"))
+        {
+            if let Some(ty) = impl_type_name(&sf.code_lines, i) {
+                let end = brace_span_end(&sf.code_lines, i);
+                impl_stack.push((ty, end));
+            }
+        }
+        if !token_positions(line, "fn").is_empty() {
+            let impl_ty = impl_stack.last().map(|t| t.0.clone());
+            if let Some(f) = parse_one_fn(sf, i, impl_ty, &mut claimed) {
+                fns.push(f);
+                // body lines are NOT skipped: nested fns are parsed too
+            }
+        }
+        i += 1;
+    }
+    sf.fns = fns;
+    sf.claimed_markers = claimed;
+}
+
+/// The `Self` type an `impl` header names: the last path segment of the
+/// type after `for` (trait impls) or after the generics (inherent impls).
+fn impl_type_name(code_lines: &[String], i: usize) -> Option<String> {
+    // gather the header until `{` or `;`
+    let mut buf = String::new();
+    let mut j = i;
+    while j < code_lines.len() && !buf.contains('{') && !buf.contains(';') {
+        buf.push_str(&code_lines[j]);
+        buf.push(' ');
+        j += 1;
+    }
+    let header = match buf.find('{') {
+        Some(p) => &buf[..p],
+        None => &buf[..],
+    };
+    let tail: String = if let Some(fp) = token_positions(header, "for").first() {
+        header.chars().skip(fp + 3).collect()
+    } else {
+        // strip `unsafe`, `impl`, and one `<…>` generics group
+        let chars: Vec<char> = header.chars().collect();
+        let mut k = 0;
+        let skip_ws = |k: &mut usize, chars: &[char]| {
+            while *k < chars.len() && chars[*k].is_whitespace() {
+                *k += 1;
+            }
+        };
+        skip_ws(&mut k, &chars);
+        for kw in ["unsafe", "impl"] {
+            let kwc: Vec<char> = kw.chars().collect();
+            if chars.len() >= k + kwc.len() && chars[k..k + kwc.len()] == kwc[..] {
+                k += kwc.len();
+                skip_ws(&mut k, &chars);
+            }
+        }
+        if k < chars.len() && chars[k] == '<' {
+            while k < chars.len() && chars[k] != '>' {
+                k += 1;
+            }
+            if k < chars.len() {
+                k += 1;
+            }
+            skip_ws(&mut k, &chars);
+        }
+        chars[k.min(chars.len())..].iter().collect()
+    };
+    // leading path: `(ident::)* ident` with no spaces around `::`
+    let tc: Vec<char> = tail.trim().chars().collect();
+    let mut pos = 0;
+    let mut last: Option<String> = None;
+    loop {
+        let start = pos;
+        if pos < tc.len() && (tc[pos].is_alphabetic() || tc[pos] == '_') {
+            while pos < tc.len() && (tc[pos].is_alphanumeric() || tc[pos] == '_') {
+                pos += 1;
+            }
+            last = Some(tc[start..pos].iter().collect());
+        } else {
+            break;
+        }
+        if pos + 1 < tc.len() && tc[pos] == ':' && tc[pos + 1] == ':' {
+            pos += 2;
+        } else {
+            break;
+        }
+    }
+    last
+}
+
+/// Inclusive end line of the brace block opening at/after `start`.
+fn brace_span_end(code_lines: &[String], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (j, line) in code_lines.iter().enumerate().skip(start) {
+        for ch in line.chars() {
+            if ch == '{' {
+                depth += 1;
+                opened = true;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        if opened && depth <= 0 {
+            return j;
+        }
+    }
+    code_lines.len().saturating_sub(1)
+}
+
+fn parse_one_fn(
+    sf: &SourceFile,
+    i: usize,
+    impl_ty: Option<String>,
+    claimed: &mut Vec<usize>,
+) -> Option<FnItem> {
+    let first: Vec<char> = sf.code_lines[i].chars().collect();
+    let p = *token_positions(&sf.code_lines[i], "fn").first()?;
+    // the name is the first ident after `fn`
+    let mut q = p + 2;
+    while q < first.len() && first[q].is_whitespace() {
+        q += 1;
+    }
+    let name_start = q;
+    if q >= first.len() || !(first[q].is_alphabetic() || first[q] == '_') {
+        return None;
+    }
+    while q < first.len() && (first[q].is_alphanumeric() || first[q] == '_') {
+        q += 1;
+    }
+    let name: String = first[name_start..q].iter().collect();
+
+    // scan forward for the body span; `;` at paren depth 0 before any `{`
+    // means a trait declaration without a body — not an item we track
+    let mut paren = 0i64;
+    let mut brace = 0i64;
+    let mut opened = false;
+    let mut start_line = 0usize;
+    let mut sig = String::new();
+    let mut sig_done = false;
+    let mut j = i;
+    let mut body: Option<(usize, usize)> = None;
+    'outer: while j < sf.code_lines.len() {
+        let text: Vec<char> = sf.code_lines[j].chars().collect();
+        let mut k = if j == i { p } else { 0 };
+        while k < text.len() {
+            let ch = text[k];
+            if paren > 0 && !sig_done && !opened {
+                sig.push(ch);
+            }
+            if ch == '(' {
+                paren += 1;
+            } else if ch == ')' {
+                paren -= 1;
+                if paren == 0 && !sig_done {
+                    sig_done = true;
+                }
+            } else if ch == ';' && paren == 0 && !opened {
+                return None;
+            } else if ch == '{' {
+                if paren == 0 && !opened {
+                    start_line = j;
+                }
+                if paren == 0 || opened {
+                    brace += 1;
+                    opened = true;
+                }
+            } else if ch == '}' && opened {
+                brace -= 1;
+                if brace == 0 {
+                    body = Some((start_line, j));
+                    break 'outer;
+                }
+            }
+            k += 1;
+        }
+        j += 1;
+    }
+    let body = match body {
+        Some(b) => b,
+        None if opened => (start_line, sf.code_lines.len().saturating_sub(1)),
+        None => return None,
+    };
+
+    let mut f = FnItem {
+        name,
+        impl_ty,
+        line: i,
+        body,
+        is_test: sf.test_lines[i],
+        deny_alloc: false,
+        no_panic: false,
+        bounds_audit: false,
+        has_self: !token_positions(&sig, "self").is_empty(),
+        calls: Vec::new(),
+    };
+
+    // contract markers: walk upward over comment/attr/blank lines
+    let mut up = i;
+    let mut steps = 0;
+    while up > 0 && steps < MARK_LOOKBACK {
+        up -= 1;
+        steps += 1;
+        let code = sf.code_lines[up].trim();
+        if !code.is_empty() && !code.starts_with('#') {
+            break; // real code intervenes
+        }
+        match marker_of(&sf.com_lines[up]) {
+            Some(Marker::DenyAlloc) => {
+                f.deny_alloc = true;
+                claimed.push(up);
+            }
+            Some(Marker::NoPanic) => {
+                f.no_panic = true;
+                claimed.push(up);
+            }
+            Some(Marker::BoundsAudit) => {
+                f.bounds_audit = true;
+                claimed.push(up);
+            }
+            None => {}
+        }
+    }
+
+    // call sites, line by line over the body span
+    for text in sf.code_lines.iter().take(body.1 + 1).skip(body.0) {
+        let chars: Vec<char> = text.chars().collect();
+        extract_calls(&chars, &mut f.calls);
+    }
+    Some(f)
+}
+
+/// Extract call sites from one (masked) code line. Mirrors the shape
+/// `[Qual ::] name [::<…>] (` with macro (`name!(…)`) and keyword
+/// filtering; a `.` before the name makes it a method call and captures
+/// the receiver ident when there is one.
+fn extract_calls(chars: &[char], out: &mut Vec<Call>) {
+    let n = chars.len();
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut i = 0;
+    while i < n {
+        if !is_ident(chars[i]) {
+            i += 1;
+            continue;
+        }
+        // an ident run starts here (scanning left-to-right guarantees the
+        // previous char is a non-ident)
+        let start = i;
+        let mut e = i;
+        while e < n && is_ident(chars[e]) {
+            e += 1;
+        }
+        i = e;
+        if chars[start].is_ascii_digit() {
+            continue; // numeric literal, not an ident
+        }
+        // after the ident: optional spaces, then `(` or a turbofish `::<…>(`
+        let mut j = e;
+        while j < n && chars[j] == ' ' {
+            j += 1;
+        }
+        let mut is_call = false;
+        if j < n && chars[j] == '(' {
+            is_call = true;
+        } else if j + 1 < n && chars[j] == ':' && chars[j + 1] == ':' {
+            let mut k = j + 2;
+            while k < n && chars[k] == ' ' {
+                k += 1;
+            }
+            if k < n && chars[k] == '<' {
+                // turbofish call: next `(` must be directly preceded
+                // (modulo spaces) by the closing `>`
+                let mut m = k;
+                while m < n && chars[m] != '(' {
+                    m += 1;
+                }
+                if m < n {
+                    let mut back = m;
+                    while back > k && chars[back - 1] == ' ' {
+                        back -= 1;
+                    }
+                    if back > k && chars[back - 1] == '>' {
+                        is_call = true;
+                    }
+                }
+            }
+            // plain `Qual::name` — the name is scanned on a later iteration
+        }
+        if !is_call {
+            continue;
+        }
+        let name: String = chars[start..e].iter().collect();
+        if KEYWORDS.contains(&name.as_str()) {
+            continue;
+        }
+        // what precedes the name decides the call kind
+        let mut b = start;
+        while b > 0 && chars[b - 1] == ' ' {
+            b -= 1;
+        }
+        if b >= 2 && chars[b - 1] == ':' && chars[b - 2] == ':' {
+            // qualified: walk back over `Qual ::`
+            let mut qe = b - 2;
+            while qe > 0 && chars[qe - 1] == ' ' {
+                qe -= 1;
+            }
+            let mut qs = qe;
+            while qs > 0 && is_ident(chars[qs - 1]) {
+                qs -= 1;
+            }
+            if qs < qe && !chars[qs].is_ascii_digit() {
+                let qual: String = chars[qs..qe].iter().collect();
+                out.push(Call { kind: CallKind::Qual, recv: Some(qual), name });
+                continue;
+            }
+            // `>::name(` / `]::name(` — no single qualifying ident; treat
+            // as a free call so it can still resolve to a free fn by name
+            out.push(Call { kind: CallKind::Free, recv: None, name });
+            continue;
+        }
+        if b >= 1 && chars[b - 1] == '.' {
+            // method: receiver ident directly before the dot, if any
+            let re = b - 1;
+            let mut rs = re;
+            while rs > 0 && is_ident(chars[rs - 1]) {
+                rs -= 1;
+            }
+            let recv: String = if rs < re {
+                chars[rs..re].iter().collect()
+            } else {
+                "<complex>".to_string()
+            };
+            out.push(Call { kind: CallKind::Method, recv: Some(recv), name });
+            continue;
+        }
+        // `fn name(` is a definition, not a call
+        let pre: String = chars[..start].iter().collect();
+        if token_positions(pre.trim_end(), "fn")
+            .last()
+            .is_some_and(|&p| p + 2 == pre.trim_end().chars().count())
+        {
+            continue;
+        }
+        out.push(Call { kind: CallKind::Free, recv: None, name });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SourceFile {
+        SourceFile::new("rust/src", "native/t.rs", src)
+    }
+
+    fn find<'a>(sf: &'a SourceFile, name: &str) -> &'a FnItem {
+        sf.fns
+            .iter()
+            .find(|f| f.name == name)
+            .unwrap_or_else(|| panic!("fn {name} not parsed; got {:?}", names(sf)))
+    }
+
+    fn names(sf: &SourceFile) -> Vec<String> {
+        sf.fns.iter().map(|f| f.key()).collect()
+    }
+
+    #[test]
+    fn generic_fns_and_where_clauses_parse() {
+        let sf = parse(
+            "fn gen<T: Into<String>, const N: usize>(x: [T; N]) -> usize\nwhere\n    T: Clone,\n{\n    x.len()\n}\n",
+        );
+        let f = find(&sf, "gen");
+        assert!(!f.has_self);
+        assert_eq!(f.body.0, 3);
+    }
+
+    #[test]
+    fn impl_methods_get_the_type_and_self_flag() {
+        let sf = parse(
+            "struct Pool;\nimpl Pool {\n    pub fn run(&self, n: usize) -> usize { n }\n    pub fn make() -> Pool { Pool }\n}\n",
+        );
+        let run = find(&sf, "run");
+        assert_eq!(run.impl_ty.as_deref(), Some("Pool"));
+        assert!(run.has_self);
+        let make = find(&sf, "make");
+        assert_eq!(make.impl_ty.as_deref(), Some("Pool"));
+        assert!(!make.has_self);
+    }
+
+    #[test]
+    fn trait_impl_for_clause_names_the_self_type() {
+        let sf = parse(
+            "impl<'a> core::fmt::Display for Violation {\n    fn fmt(&self) -> usize { 0 }\n}\n",
+        );
+        let f = find(&sf, "fmt");
+        assert_eq!(f.impl_ty.as_deref(), Some("Violation"));
+    }
+
+    #[test]
+    fn trait_declarations_without_bodies_are_skipped() {
+        let sf = parse("trait T {\n    fn sig_only(&self);\n    fn with_default(&self) -> usize { 1 }\n}\n");
+        assert!(sf.fns.iter().all(|f| f.name != "sig_only"));
+        assert!(sf.fns.iter().any(|f| f.name == "with_default"));
+    }
+
+    #[test]
+    fn same_name_methods_on_different_impls_both_parse() {
+        let sf = parse(
+            "struct A;\nstruct B;\nimpl A {\n    fn go(&self) -> usize { 1 }\n}\nimpl B {\n    fn go(&self) -> usize { 2 }\n}\n",
+        );
+        let tys: Vec<_> = sf
+            .fns
+            .iter()
+            .filter(|f| f.name == "go")
+            .map(|f| f.impl_ty.clone())
+            .collect();
+        assert_eq!(tys.len(), 2, "{:?}", names(&sf));
+        assert!(tys.contains(&Some("A".to_string())));
+        assert!(tys.contains(&Some("B".to_string())));
+    }
+
+    #[test]
+    fn nested_closures_attribute_calls_to_the_enclosing_fn() {
+        let sf = parse(
+            "fn outer(xs: &[f32]) -> f32 {\n    let f = |x: f32| helper(x) + inner_helper(x);\n    xs.iter().map(|&x| f(x)).sum()\n}\n",
+        );
+        let f = find(&sf, "outer");
+        let called: Vec<_> = f.calls.iter().map(|c| c.name.as_str()).collect();
+        assert!(called.contains(&"helper"), "{called:?}");
+        assert!(called.contains(&"inner_helper"), "{called:?}");
+    }
+
+    #[test]
+    fn macro_invocations_are_not_calls_but_their_args_are_scanned() {
+        let sf = parse("fn f(n: usize) {\n    println!(\"{}\", compute(n));\n    assert_eq!(compute(n), 1);\n}\n");
+        let f = find(&sf, "f");
+        assert!(f.calls.iter().all(|c| c.name != "println"));
+        assert!(f.calls.iter().all(|c| c.name != "assert_eq"));
+        assert!(f.calls.iter().any(|c| c.name == "compute"));
+    }
+
+    #[test]
+    fn receivers_and_qualifiers_are_captured() {
+        let sf = parse(
+            "fn f(pool: &Pool, xs: Vec<f32>) {\n    pool.run(1);\n    Pool::make();\n    Self::assoc();\n    xs[0].clamp(0.0, 1.0);\n    helper();\n}\n",
+        );
+        let f = find(&sf, "f");
+        let get = |nm: &str| {
+            f.calls.iter().find(|c| c.name == nm).map(|c| (c.kind, c.recv.clone()))
+        };
+        assert_eq!(get("run"), Some((CallKind::Method, Some("pool".to_string()))));
+        assert_eq!(get("make"), Some((CallKind::Qual, Some("Pool".to_string()))));
+        assert_eq!(get("assoc"), Some((CallKind::Qual, Some("Self".to_string()))));
+        assert_eq!(get("clamp"), Some((CallKind::Method, Some("<complex>".to_string()))));
+        assert_eq!(get("helper"), Some((CallKind::Free, None)));
+    }
+
+    #[test]
+    fn turbofish_calls_are_calls_and_fn_pointer_types_are_not() {
+        let sf = parse(
+            "fn f(xs: &[f32], g: fn(usize) -> usize) -> Vec<f32> {\n    let v = xs.iter().copied().collect::<Vec<f32>>();\n    parse::<u32>(\"1\");\n    v\n}\n",
+        );
+        let f = find(&sf, "f");
+        assert!(f.calls.iter().any(|c| c.name == "collect"));
+        assert!(f.calls.iter().any(|c| c.name == "parse"));
+    }
+
+    #[test]
+    fn markers_are_claimed_through_attributes() {
+        let sf = parse("// deny_alloc\n// no_panic\n#[inline]\nfn hot(x: &mut [f32]) { x.fill(0.0); }\n");
+        let f = find(&sf, "hot");
+        assert!(f.deny_alloc && f.no_panic);
+        assert_eq!(sf.claimed_markers.len(), 2);
+    }
+
+    #[test]
+    fn marker_prose_mentions_do_not_register() {
+        assert_eq!(marker_of("// the deny_alloc contract is documented here"), None);
+        assert_eq!(marker_of("// `deny_alloc` in backticks"), None);
+        assert_eq!(marker_of("// deny_allocator"), None);
+        assert_eq!(marker_of("// deny_alloc"), Some(Marker::DenyAlloc));
+        assert_eq!(marker_of("/// no_panic — reason"), Some(Marker::NoPanic));
+        assert_eq!(marker_of("// bounds: argued below"), Some(Marker::BoundsAudit));
+        assert_eq!(marker_of("// in_bounds: line-level, not a fn marker"), None);
+    }
+
+    #[test]
+    fn cfg_test_mod_regions_are_flagged() {
+        let sf = parse(
+            "fn prod() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { helper(); }\n}\n",
+        );
+        assert!(!find(&sf, "prod").is_test);
+        assert!(find(&sf, "t").is_test);
+    }
+}

@@ -1,0 +1,64 @@
+//! `atomic-ordering`: every memory-ordering constant in the thread pool
+//! and the counting allocator must sit within a few lines of a
+//! `// ordering: <why>` justification. Justified sites are collected into
+//! a reviewable table (printed by `lint` in text mode) so an ordering
+//! audit is one read, not a grep.
+
+use crate::lexer::token_positions;
+use crate::parse::SourceFile;
+use crate::rules::{AtomicRow, Violation};
+
+/// Files under the audit: the only two modules that touch atomics.
+const AUDITED: &[&str] = &["rust/src/native/pool.rs", "rust/src/util/alloc_gate.rs"];
+
+const ATOMIC_TOKENS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+/// How many lines above an atomic site the `// ordering:` comment may sit.
+const ORDERING_LOOKBACK: usize = 8;
+
+pub fn check(files: &[SourceFile], out: &mut Vec<Violation>) -> Vec<AtomicRow> {
+    let mut rows = Vec::new();
+    for sf in files {
+        if !AUDITED.contains(&sf.path().as_str()) {
+            continue;
+        }
+        for (ln, line) in sf.code_lines.iter().enumerate() {
+            if sf.test_lines[ln] {
+                continue;
+            }
+            for &tok in ATOMIC_TOKENS {
+                for _ in token_positions(line, tok) {
+                    let lo = ln.saturating_sub(ORDERING_LOOKBACK);
+                    let just = (lo..=ln)
+                        .rev()
+                        .map(|cl| &sf.com_lines[cl])
+                        .find(|c| c.contains("ordering:"));
+                    match just {
+                        Some(note) => rows.push(AtomicRow {
+                            path: sf.path(),
+                            line: ln + 1,
+                            ordering: tok.split("::").last().unwrap_or(tok).to_string(),
+                            note: note.trim().to_string(),
+                        }),
+                        None => out.push(Violation {
+                            path: sf.path(),
+                            line: ln + 1,
+                            rule: "atomic-ordering",
+                            msg: format!(
+                                "`{tok}` without a `// ordering:` justification within \
+                                 {ORDERING_LOOKBACK} lines"
+                            ),
+                        }),
+                    }
+                }
+            }
+        }
+    }
+    rows
+}

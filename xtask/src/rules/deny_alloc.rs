@@ -1,0 +1,102 @@
+//! `deny-alloc`: a fn marked `// deny_alloc` may not allocate — not in its
+//! own body, and not through anything it (transitively) calls. The walk
+//! cuts at callees that are themselves marked (checked at their own root)
+//! and at the audited allowlist below; everything else reached from a
+//! marked root is scanned for allocating tokens, and a hit is reported
+//! with the full call chain from the root.
+
+use crate::callgraph::{transitive_check, Graph};
+use crate::parse::{marker_of, Marker, SourceFile};
+use crate::rules::Violation;
+
+const DENY_ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    "Vec::with_capacity",
+    "Box::new",
+    "String::new",
+    "String::from",
+    "String::with_capacity",
+    "Arc::new",
+    "Rc::new",
+    "format!",
+    ".collect()",
+    ".to_vec()",
+    ".to_string()",
+    ".to_owned()",
+];
+
+/// Audited non-allocating-by-contract primitives the walk may rely on
+/// without descending into them:
+/// - `ThreadPool::run*` — task dispatch reuses the pool's slot storage;
+///   steady-state allocation freedom is asserted by `tests/alloc_gate.rs`.
+/// - `QuantBuf::append_rows` — itself `// deny_alloc`-marked and
+///   amortized-growth audited.
+/// - `la_chunk_fwd_carry` — per-chunk scratch is budget-bounded by design
+///   (`CHUNK_STATE_FLOATS_BUDGET`); the alloc-gate prefill budget pins it.
+const ALLOC_ALLOWLIST: &[(Option<&str>, &str)] = &[
+    (Some("ThreadPool"), "run"),
+    (Some("ThreadPool"), "run_chunks"),
+    (Some("ThreadPool"), "run_chunks3"),
+    (Some("ThreadPool"), "run_stripes"),
+    (Some("QuantBuf"), "append_rows"),
+    (None, "la_chunk_fwd_carry"),
+];
+
+pub fn check(files: &[SourceFile], graph: &Graph, out: &mut Vec<Violation>) {
+    let scan = |sf: &SourceFile, f: &crate::parse::FnItem| -> Vec<(usize, String)> {
+        let mut hits = Vec::new();
+        for (ln, line) in
+            sf.code_lines.iter().enumerate().take(f.body.1 + 1).skip(f.body.0)
+        {
+            for tok in DENY_ALLOC_TOKENS {
+                if line.contains(tok) {
+                    hits.push((ln, format!("`{tok}`")));
+                }
+            }
+        }
+        hits
+    };
+    for root in 0..graph.fns.len() {
+        let (_, f) = graph.item(files, root);
+        if !f.deny_alloc {
+            continue;
+        }
+        for hit in transitive_check(files, graph, root, &scan, ALLOC_ALLOWLIST, &|tf| {
+            tf.deny_alloc
+        }) {
+            let (hsf, _) = graph.item(files, hit.node);
+            let msg = if hit.chain.len() == 1 {
+                format!(
+                    "{} in `// deny_alloc` fn {} — use a caller-held scratch buffer",
+                    hit.what, hit.chain[0]
+                )
+            } else {
+                format!(
+                    "{} reachable from `// deny_alloc` root via {}",
+                    hit.what,
+                    hit.chain.join(" -> ")
+                )
+            };
+            out.push(Violation {
+                path: hsf.path(),
+                line: hit.line + 1,
+                rule: "deny-alloc",
+                msg,
+            });
+        }
+    }
+    // dangling markers: a marker comment no fn claimed protects nothing
+    for sf in files {
+        for (ln, com) in sf.com_lines.iter().enumerate() {
+            if marker_of(com) == Some(Marker::DenyAlloc) && !sf.claimed_markers.contains(&ln) {
+                out.push(Violation {
+                    path: sf.path(),
+                    line: ln + 1,
+                    rule: "deny-alloc",
+                    msg: "`deny_alloc` marker with no function following it".to_string(),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! `float-ordering`: no `partial_cmp` outside `rust/src/util/` — float
+//! comparisons in kernel/model/bench code must use `total_cmp`, which
+//! cannot silently drop NaN rows the way `partial_cmp().unwrap_or(…)`
+//! patterns do. The util layer may build ordering helpers; `xtask` itself
+//! gets no exemption.
+
+use crate::lexer::token_positions;
+use crate::parse::SourceFile;
+use crate::rules::Violation;
+
+fn exempt(sf: &SourceFile) -> bool {
+    sf.root == "rust/src" && sf.rel.starts_with("util/")
+}
+
+pub fn check(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if exempt(sf) {
+        return;
+    }
+    for (ln, line) in sf.code_lines.iter().enumerate() {
+        if !token_positions(line, "partial_cmp").is_empty() {
+            out.push(Violation {
+                path: sf.path(),
+                line: ln + 1,
+                rule: "float-ordering",
+                msg: "`partial_cmp` outside util/ — use `f32::total_cmp` so NaN cannot \
+                      silently reorder"
+                    .to_string(),
+            });
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Rule registry and the single entry point that runs every rule over a
+//! set of parsed files. Per-file rules (safety, float ordering) run first;
+//! the call-graph rules (transitive contracts, atomics audit) run over the
+//! whole workspace at once.
+
+pub mod atomics;
+pub mod deny_alloc;
+pub mod float;
+pub mod no_panic;
+pub mod safety;
+
+use crate::callgraph::Graph;
+use crate::parse::SourceFile;
+use std::fmt;
+
+/// Every rule id the engine can emit. `--self-test` asserts each one is
+/// exercised by at least one seeded fixture — no rule ships twin-less.
+pub const RULES: &[&str] = &[
+    "safety-comment",
+    "unsafe-location",
+    "float-ordering",
+    "deny-alloc",
+    "no-panic",
+    "atomic-ordering",
+];
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Display path: `rust/src/…` or `xtask/src/…`.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+impl Violation {
+    /// One-line JSON object for `--format json` (consumed by the CI
+    /// problem matcher; keys are emitted in a fixed order).
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"msg\":\"{}\"}}",
+            json_escape(&self.path),
+            self.line,
+            self.rule,
+            json_escape(&self.msg)
+        )
+    }
+}
+
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One justified atomic site, for the reviewable `ordering:` table.
+pub struct AtomicRow {
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// `Relaxed` / `Acquire` / `Release` / `AcqRel` / `SeqCst`.
+    pub ordering: String,
+    /// The justification comment, trimmed.
+    pub note: String,
+}
+
+/// Run every rule over `files`. Returns the sorted violation list and the
+/// audited-atomics table.
+pub fn run_all(files: &[SourceFile]) -> (Vec<Violation>, Vec<AtomicRow>) {
+    let mut out = Vec::new();
+    for sf in files {
+        safety::check(sf, &mut out);
+        float::check(sf, &mut out);
+    }
+    let graph = Graph::new(files);
+    deny_alloc::check(files, &graph, &mut out);
+    no_panic::check(files, &graph, &mut out);
+    let rows = atomics::check(files, &mut out);
+    out.sort_by(|a, b| {
+        (&a.path, a.line, a.rule, &a.msg).cmp(&(&b.path, b.line, b.rule, &b.msg))
+    });
+    out.dedup();
+    (out, rows)
+}

@@ -1,0 +1,168 @@
+//! `no-panic`: a fn marked `// no_panic` (the serve/decode hot path) may
+//! not reach a panic site — `unwrap`/`expect`/`panic!`/`todo!`/
+//! `unimplemented!`/`unreachable!` — or un-annotated slice indexing,
+//! transitively through everything it calls.
+//!
+//! Escape hatches, each carrying a written argument:
+//! - line-level `// in_bounds: <why>` — the indexing on this line (or the
+//!   line below a comment block) is proven in range;
+//! - line-level `// guarded: <why>` — the panic token cannot fire (e.g. a
+//!   re-check of an already-validated prefix);
+//! - fn-level `// bounds: <why>` — every index in this fn is argued safe
+//!   as a whole (microkernel tile loops, where the enclosing dispatch
+//!   asserts the spans).
+//!
+//! `.expect(…)` on `self` is treated as a call edge rather than a panic
+//! site when the caller's own impl defines an `expect` method (the JSON
+//! parser's `Parser::expect` returns `Result`).
+
+use crate::callgraph::{transitive_check, Graph};
+use crate::parse::{marker_of, FnItem, Marker, SourceFile};
+use crate::rules::Violation;
+
+const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!", "todo!", "unimplemented!", "unreachable!"];
+
+/// `ThreadPool::run*` re-raises task panics by design (the submitting
+/// thread must observe a worker's panic, not deadlock on it); the closures
+/// submitted INTO the pool are still walked at their own call sites.
+const NO_PANIC_ALLOWLIST: &[(Option<&str>, &str)] = &[
+    (Some("ThreadPool"), "run"),
+    (Some("ThreadPool"), "run_chunks"),
+    (Some("ThreadPool"), "run_chunks3"),
+    (Some("ThreadPool"), "run_stripes"),
+];
+
+/// The same-line or directly-above contiguous comment block that may hold
+/// a line-level annotation for line `ln`.
+fn annotation_scope(sf: &SourceFile, ln: usize) -> String {
+    let mut anno = sf.com_lines[ln].clone();
+    let mut j = ln;
+    while j > 0 {
+        j -= 1;
+        if sf.com_lines[j].trim().is_empty() || !sf.code_lines[j].trim().is_empty() {
+            break;
+        }
+        anno.push(' ');
+        anno.push_str(&sf.com_lines[j]);
+    }
+    anno
+}
+
+/// Indexing sites on a (masked) code line: a `[` directly glued to an
+/// ident/`]`/`)` — space-separated `[` is a slice TYPE (`&mut [f32]`),
+/// not an index. Full-range `[..]` re-slices are not indexing.
+fn find_indexing(chars: &[char]) -> Vec<String> {
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if chars[i] == '[' {
+            let prev = if i > 0 { chars[i - 1] } else { ' ' };
+            if prev.is_alphanumeric() || prev == '_' || prev == ']' || prev == ')' {
+                let mut depth = 0i64;
+                let mut k = i;
+                while k < n {
+                    if chars[k] == '[' {
+                        depth += 1;
+                    } else if chars[k] == ']' {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                let inner: String = if k < n {
+                    chars[i + 1..k].iter().collect()
+                } else {
+                    chars[i + 1..].iter().collect()
+                };
+                let t = inner.trim();
+                if !t.is_empty() && t != ".." {
+                    out.push(t.chars().take(24).collect());
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+pub fn check(files: &[SourceFile], graph: &Graph, out: &mut Vec<Violation>) {
+    let scan = |sf: &SourceFile, f: &FnItem| -> Vec<(usize, String)> {
+        let mut hits = Vec::new();
+        for (ln, line) in
+            sf.code_lines.iter().enumerate().take(f.body.1 + 1).skip(f.body.0)
+        {
+            let anno = annotation_scope(sf, ln);
+            let guarded = anno.contains("guarded:");
+            for tok in PANIC_TOKENS {
+                if !line.contains(tok) {
+                    continue;
+                }
+                if guarded {
+                    continue;
+                }
+                if *tok == ".expect(" {
+                    if let Some(ty) = f.impl_ty.as_deref() {
+                        let squeezed: String = line.chars().filter(|c| *c != ' ').collect();
+                        if graph.impl_defines(ty, "expect") && squeezed.contains("self.expect(")
+                        {
+                            continue; // workspace Result-returning expect
+                        }
+                    }
+                }
+                hits.push((ln, format!("`{tok}`")));
+            }
+            if !f.bounds_audit {
+                let chars: Vec<char> = line.chars().collect();
+                for inner in find_indexing(&chars) {
+                    if anno.contains("in_bounds:") {
+                        continue;
+                    }
+                    hits.push((ln, format!("un-annotated indexing `[{inner}]`")));
+                }
+            }
+        }
+        hits
+    };
+    for root in 0..graph.fns.len() {
+        let (_, f) = graph.item(files, root);
+        if !f.no_panic {
+            continue;
+        }
+        for hit in
+            transitive_check(files, graph, root, &scan, NO_PANIC_ALLOWLIST, &|tf| tf.no_panic)
+        {
+            let (hsf, _) = graph.item(files, hit.node);
+            let msg = if hit.chain.len() == 1 {
+                format!("{} in `// no_panic` fn {}", hit.what, hit.chain[0])
+            } else {
+                format!(
+                    "{} reachable from `// no_panic` root via {}",
+                    hit.what,
+                    hit.chain.join(" -> ")
+                )
+            };
+            out.push(Violation { path: hsf.path(), line: hit.line + 1, rule: "no-panic", msg });
+        }
+    }
+    // dangling markers protect nothing
+    for sf in files {
+        for (ln, com) in sf.com_lines.iter().enumerate() {
+            let m = marker_of(com);
+            if (m == Some(Marker::NoPanic) || m == Some(Marker::BoundsAudit))
+                && !sf.claimed_markers.contains(&ln)
+            {
+                let which = if m == Some(Marker::NoPanic) { "no_panic" } else { "bounds:" };
+                out.push(Violation {
+                    path: sf.path(),
+                    line: ln + 1,
+                    rule: "no-panic",
+                    msg: format!("`{which}` marker with no function following it"),
+                });
+            }
+        }
+    }
+}

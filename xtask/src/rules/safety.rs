@@ -1,0 +1,51 @@
+//! `safety-comment` / `unsafe-location`: every `unsafe` keyword carries a
+//! written SAFETY justification within a bounded comment window, and
+//! `unsafe` may only appear under `rust/src/native/` and in the counting
+//! allocator. `xtask/src` is `#![forbid(unsafe_code)]` and additionally
+//! lint-banned here, so the checker cannot grow an unsafe surface of its
+//! own.
+
+use crate::lexer::token_positions;
+use crate::parse::SourceFile;
+use crate::rules::Violation;
+
+/// How many comment lines above an `unsafe` keyword may hold the SAFETY
+/// justification.
+const SAFETY_LOOKBACK: usize = 8;
+
+fn unsafe_allowed(sf: &SourceFile) -> bool {
+    sf.root == "rust/src" && (sf.rel.starts_with("native/") || sf.rel == "util/alloc_gate.rs")
+}
+
+pub fn check(sf: &SourceFile, out: &mut Vec<Violation>) {
+    for (ln, line) in sf.code_lines.iter().enumerate() {
+        if token_positions(line, "unsafe").is_empty() {
+            continue;
+        }
+        if !unsafe_allowed(sf) {
+            out.push(Violation {
+                path: sf.path(),
+                line: ln + 1,
+                rule: "unsafe-location",
+                msg: "`unsafe` outside native/ (and util/alloc_gate.rs) — move the unsafe code \
+                      or express it safely"
+                    .to_string(),
+            });
+            continue;
+        }
+        let lo = ln.saturating_sub(SAFETY_LOOKBACK);
+        let justified = sf.com_lines[lo..=ln]
+            .iter()
+            .any(|c| c.contains("SAFETY") || c.contains("# Safety") || c.contains("Safety:"));
+        if !justified {
+            out.push(Violation {
+                path: sf.path(),
+                line: ln + 1,
+                rule: "safety-comment",
+                msg: format!(
+                    "`unsafe` without a `// SAFETY:` comment within {SAFETY_LOOKBACK} lines"
+                ),
+            });
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! `lint --self-test`: run the full engine over embedded fixtures — every
+//! rule must fire on its seeded violation and stay quiet on the clean
+//! twin, mirroring `tests/pool_model.rs`'s broken-twin pattern. A final
+//! coverage pass asserts every registered rule is exercised by at least
+//! one fixture, so a rule can never ship twin-less.
+
+use crate::parse::SourceFile;
+use crate::rules::{run_all, Violation, RULES};
+use std::process::ExitCode;
+
+pub struct Fixture {
+    pub name: &'static str,
+    /// Files as `(rel-path-under-rust/src, source)` — multi-file fixtures
+    /// exercise cross-file call-graph edges.
+    pub files: &'static [(&'static str, &'static str)],
+    /// Rules that MUST fire (empty = must be clean).
+    pub expect: &'static [&'static str],
+}
+
+pub const FIXTURES: &[Fixture] = &[
+    Fixture {
+        name: "clean native file with commented unsafe",
+        files: &[(
+            "native/good.rs",
+            r#"
+/// Doc. The string "unsafe { }" and the comment below must not trip rules.
+// this line mentions partial_cmp but is a comment
+fn safe_fn(p: *const f32) -> bool {
+    // SAFETY: p is non-null and valid for reads by the caller contract.
+    let y = unsafe { *p };
+    y.total_cmp(&0.0).is_gt()
+}
+"#,
+        )],
+        expect: &[],
+    },
+    Fixture {
+        name: "seeded: uncommented unsafe block",
+        files: &[(
+            "native/bad_safety.rs",
+            r#"
+fn oops(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"#,
+        )],
+        expect: &["safety-comment"],
+    },
+    Fixture {
+        name: "seeded: unsafe outside native/",
+        files: &[(
+            "bench/bad_place.rs",
+            r#"
+// SAFETY: a comment does not make the location legal.
+fn oops(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"#,
+        )],
+        expect: &["unsafe-location"],
+    },
+    Fixture {
+        name: "seeded: partial_cmp in model code",
+        files: &[(
+            "native/bad_float.rs",
+            r#"
+fn pick(a: f32, b: f32) -> bool {
+    a.partial_cmp(&b) == Some(core::cmp::Ordering::Greater)
+}
+"#,
+        )],
+        expect: &["float-ordering"],
+    },
+    Fixture {
+        name: "seeded: allocation in a deny_alloc function",
+        files: &[(
+            "native/bad_alloc.rs",
+            r#"
+// deny_alloc
+#[inline]
+fn hot(n: usize) -> f32 {
+    let tmp = vec![0.0f32; n];
+    tmp.iter().sum()
+}
+"#,
+        )],
+        expect: &["deny-alloc"],
+    },
+    Fixture {
+        name: "deny_alloc function that is actually clean",
+        files: &[(
+            "native/good_alloc.rs",
+            r#"
+// deny_alloc
+fn hot(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o += 1.0;
+    }
+}
+"#,
+        )],
+        expect: &[],
+    },
+    Fixture {
+        name: "seeded: allocation hidden behind a helper, one file away",
+        files: &[
+            (
+                "native/twin_chain_root.rs",
+                r#"
+// deny_alloc
+pub fn hot(out: &mut [f32]) {
+    helper_fill(out);
+}
+"#,
+            ),
+            (
+                "native/twin_chain_helper.rs",
+                r#"
+pub fn helper_fill(out: &mut [f32]) {
+    let tmp = vec![0.0f32; out.len()];
+    for (o, t) in out.iter_mut().zip(tmp.iter()) {
+        *o = *t;
+    }
+}
+"#,
+            ),
+        ],
+        expect: &["deny-alloc"],
+    },
+    Fixture {
+        name: "deny_alloc chain whose helper carries the contract too",
+        files: &[
+            (
+                "native/twin_chain_root.rs",
+                r#"
+// deny_alloc
+pub fn hot(out: &mut [f32]) {
+    helper_fill(out);
+}
+"#,
+            ),
+            (
+                "native/twin_chain_helper.rs",
+                r#"
+// deny_alloc
+pub fn helper_fill(out: &mut [f32]) {
+    for o in out.iter_mut() {
+        *o += 1.0;
+    }
+}
+"#,
+            ),
+        ],
+        expect: &[],
+    },
+    Fixture {
+        name: "seeded: panic two calls deep on a no_panic path",
+        files: &[(
+            "infer/twin_panic.rs",
+            r#"
+// no_panic
+pub fn serve_one(xs: &[f32]) -> f32 {
+    mid(xs)
+}
+fn mid(xs: &[f32]) -> f32 {
+    leaf(xs)
+}
+fn leaf(xs: &[f32]) -> f32 {
+    *xs.first().unwrap()
+}
+"#,
+        )],
+        expect: &["no-panic"],
+    },
+    Fixture {
+        name: "no_panic chain with guarded, annotated indexing",
+        files: &[(
+            "infer/twin_panic_clean.rs",
+            r#"
+// no_panic
+pub fn serve_one(xs: &[f32]) -> f32 {
+    mid(xs)
+}
+fn mid(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    // in_bounds: emptiness is checked directly above
+    xs[0]
+}
+"#,
+        )],
+        expect: &[],
+    },
+    Fixture {
+        name: "seeded: atomic access without an ordering justification",
+        files: &[(
+            "util/alloc_gate.rs",
+            r#"
+use std::sync::atomic::{AtomicUsize, Ordering};
+pub static HITS: AtomicUsize = AtomicUsize::new(0);
+pub fn bump() -> usize {
+    HITS.fetch_add(1, Ordering::Relaxed)
+}
+"#,
+        )],
+        expect: &["atomic-ordering"],
+    },
+    Fixture {
+        name: "atomic access with a written ordering justification",
+        files: &[(
+            "util/alloc_gate.rs",
+            r#"
+use std::sync::atomic::{AtomicUsize, Ordering};
+pub static HITS: AtomicUsize = AtomicUsize::new(0);
+pub fn bump() -> usize {
+    // ordering: Relaxed — a monotone statistic; nothing is published
+    HITS.fetch_add(1, Ordering::Relaxed)
+}
+"#,
+        )],
+        expect: &[],
+    },
+];
+
+/// Run one fixture through the real engine and return the fired rules
+/// (sorted, deduped).
+pub fn fired_rules(fixture: &Fixture) -> (Vec<&'static str>, Vec<Violation>) {
+    let files: Vec<SourceFile> = fixture
+        .files
+        .iter()
+        .map(|(rel, src)| SourceFile::new("rust/src", rel, src))
+        .collect();
+    let (vs, _) = run_all(&files);
+    let mut fired: Vec<&'static str> = vs.iter().map(|v| v.rule).collect();
+    fired.sort_unstable();
+    fired.dedup();
+    (fired, vs)
+}
+
+pub fn fixture_ok(fixture: &Fixture, fired: &[&str]) -> bool {
+    fixture.expect.iter().all(|r| fired.contains(r))
+        && fired.iter().all(|r| fixture.expect.contains(r))
+}
+
+/// Exit non-zero if any seeded violation goes undetected, a clean twin
+/// trips, or some registered rule has no fixture exercising it.
+pub fn run_self_test() -> ExitCode {
+    let mut failed = false;
+    for f in FIXTURES {
+        let (fired, vs) = fired_rules(f);
+        if fixture_ok(f, &fired) {
+            println!("self-test ok: {} → {:?}", f.name, fired);
+        } else {
+            failed = true;
+            eprintln!(
+                "self-test FAILED: {} — expected rules {:?}, got {:?}",
+                f.name, f.expect, fired
+            );
+            for v in &vs {
+                eprintln!("  {v}");
+            }
+        }
+    }
+    // coverage: no registered rule may be twin-less
+    let mut uncovered = Vec::new();
+    for rule in RULES {
+        if !FIXTURES.iter().any(|f| f.expect.contains(rule)) {
+            uncovered.push(*rule);
+        }
+    }
+    if !uncovered.is_empty() {
+        failed = true;
+        eprintln!("self-test FAILED: rules with no seeded fixture: {uncovered:?}");
+    }
+    if failed {
+        eprintln!("xtask lint --self-test: the checker missed a seeded violation");
+        ExitCode::FAILURE
+    } else {
+        println!(
+            "xtask lint --self-test: all {} fixtures behaved; every rule of {:?} is exercised",
+            FIXTURES.len(),
+            RULES
+        );
+        ExitCode::SUCCESS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixtures_behave_exactly_as_the_self_test_demands() {
+        for f in FIXTURES {
+            let (fired, vs) = fired_rules(f);
+            assert!(
+                fixture_ok(f, &fired),
+                "{}: expected {:?}, got {:?}\n{}",
+                f.name,
+                f.expect,
+                fired,
+                vs.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+            );
+        }
+    }
+
+    #[test]
+    fn every_registered_rule_has_a_seeding_fixture() {
+        for rule in RULES {
+            assert!(
+                FIXTURES.iter().any(|f| f.expect.contains(rule)),
+                "rule {rule} has no fixture that seeds it"
+            );
+        }
+    }
+
+    #[test]
+    fn chain_violations_name_the_full_path() {
+        let fixture = FIXTURES
+            .iter()
+            .find(|f| f.name.contains("panic two calls deep"))
+            .expect("fixture present");
+        let (_, vs) = fired_rules(fixture);
+        let v = vs.iter().find(|v| v.rule == "no-panic").expect("violation");
+        assert!(v.msg.contains("serve_one"), "{}", v.msg);
+        assert!(v.msg.contains("mid"), "{}", v.msg);
+        assert!(v.msg.contains("leaf"), "{}", v.msg);
+    }
+}
