@@ -17,9 +17,14 @@ use crate::native::model::{self, AttnKind, LmConfig};
 use crate::native::pool::ThreadPool;
 use crate::runtime::{Engine, Tensor};
 
-use crate::infer::DecodeState;
+use crate::data::ByteTokenizer;
+use crate::infer::engine::loadgen;
+use crate::infer::{BatchEngine, DecodeState, EngineConfig, LoadGenConfig};
+use crate::simulator::ArrivalPattern;
 
-use super::report::{DecodeBenchPoint, LmBenchPoint, OptBenchPoint, PrefillBenchPoint};
+use super::report::{
+    DecodeBenchPoint, LmBenchPoint, OptBenchPoint, PrefillBenchPoint, ServeBenchPoint,
+};
 use super::timing::TimingStats;
 
 /// Corpus size every LM bench trains on.
@@ -467,5 +472,90 @@ pub fn measure_adamw(
         n_param_arrays: cfg.n_param_arrays(),
         inplace_s_p50: inplace.p50,
         rebuild_s_p50: rebuild.p50,
+    })
+}
+
+/// Measure the continuous-batching serve engine on one (preset, attn,
+/// precision) triple: a deterministic burst load run (`requests` requests
+/// arriving in slot-sized groups, so admissions genuinely overlap in-flight
+/// decodes) through a [`BatchEngine`], summarized as occupancy, per-request
+/// TTFT/latency/throughput percentiles, and the traffic-model calibration
+/// fitted to the engine's per-step `(bytes, seconds)` samples. Weights are
+/// freshly initialized (serve cost is data-independent); the queue is sized
+/// to the run so nothing is shed — a bench point measures the engine, not
+/// the load-shedding policy.
+pub fn measure_serve(
+    preset: &str,
+    attn: &str,
+    precision: &str,
+    requests: usize,
+    slots: usize,
+) -> Result<ServeBenchPoint> {
+    ensure!(requests >= 2, "measure_serve needs at least 2 requests to overlap");
+    ensure!(slots >= 1, "measure_serve needs at least one decode slot");
+    let cfg = LmConfig::by_preset(preset, AttnKind::from_name(attn)?)?;
+    let prec = model::Precision::from_name(precision)?;
+    let pool = ThreadPool::from_env();
+    let state = cfg.init_state(0);
+    let np = cfg.n_param_arrays();
+    let params: Vec<&Tensor> = state[..np].iter().collect();
+    let qm;
+    let bound = if prec.is_quantized() {
+        qm = model::QuantModel::from_params(&cfg, &params, prec)?;
+        model::DecodeModel::bind_quantized(&qm)?
+    } else {
+        model::DecodeModel::bind(&cfg, &params)?
+    };
+    let tokenizer = ByteTokenizer::for_artifact(cfg.vocab, 0)?;
+    let mut engine = BatchEngine::new(
+        bound,
+        &tokenizer,
+        &pool,
+        EngineConfig { slots, queue: requests, prefill_budget: 64 },
+    )?;
+    let conf = LoadGenConfig {
+        n_requests: requests,
+        pattern: ArrivalPattern::Burst { burst: slots, gap_s: 0.02 },
+        seed: 0,
+        prompt_len: 24,
+        max_new: 16,
+        cycles_per_s: 200.0,
+    };
+    let report = loadgen::run(&mut engine, &conf)?;
+    ensure!(
+        report.completed == requests,
+        "serve bench completed {}/{} requests ({} rejected, {} errors) for \
+         {preset}/{attn}/{precision}",
+        report.completed,
+        requests,
+        report.rejected,
+        report.errors,
+    );
+    let pct = |st: &Option<TimingStats>, sel: fn(&TimingStats) -> f64| {
+        st.as_ref().map(sel).unwrap_or(0.0)
+    };
+    let ttft = report.stats.ttft_stats();
+    let lat = report.stats.latency_stats();
+    let tok = report.stats.decode_tok_s_stats();
+    Ok(ServeBenchPoint {
+        preset: preset.to_string(),
+        attn: attn.to_string(),
+        precision: prec.name().to_string(),
+        slots,
+        requests,
+        rejected: report.rejected,
+        occupancy_mean: report.stats.mean_occupancy(),
+        occupancy_max: report.stats.max_occupancy,
+        ttft_ms_p50: pct(&ttft, |s| s.p50) * 1e3,
+        ttft_ms_p95: pct(&ttft, |s| s.p95) * 1e3,
+        ttft_ms_p99: pct(&ttft, |s| s.p99) * 1e3,
+        latency_ms_p50: pct(&lat, |s| s.p50) * 1e3,
+        latency_ms_p95: pct(&lat, |s| s.p95) * 1e3,
+        latency_ms_p99: pct(&lat, |s| s.p99) * 1e3,
+        decode_tok_s_p50: pct(&tok, |s| s.p50),
+        fit_overhead_ms: report.fit.as_ref().map(|f| f.launch_overhead_s * 1e3).unwrap_or(0.0),
+        fit_bytes_per_s: report.fit.as_ref().map(|f| f.bytes_per_s).unwrap_or(0.0),
+        fit_rms_residual_ms: report.fit.as_ref().map(|f| f.rms_residual_s * 1e3).unwrap_or(0.0),
+        fit_samples: report.fit.as_ref().map(|f| f.n_samples).unwrap_or(0),
     })
 }

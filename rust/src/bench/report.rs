@@ -206,14 +206,58 @@ pub struct PrefillBenchPoint {
     pub nll_delta_vs_f32: f64,
 }
 
+/// One measured point of the `serve` section: a seeded load-generator run
+/// through the continuous-batching engine (burst arrivals, so slots
+/// genuinely overlap), summarized as occupancy, per-request TTFT/latency/
+/// throughput percentiles, and the traffic-model calibration fitted to the
+/// engine's per-step `(bytes, seconds)` samples — the serve-side closing
+/// of the loop between the analytic model and measured decode latency.
+#[derive(Debug, Clone)]
+pub struct ServeBenchPoint {
+    pub preset: String,
+    pub attn: String,
+    /// Storage precision of weights + decode state (`f32`/`bf16`/`int8`).
+    pub precision: String,
+    /// Decode slots the engine ran with.
+    pub slots: usize,
+    /// Requests submitted by the load run.
+    pub requests: usize,
+    /// Requests shed by the bounded admission queue.
+    pub rejected: usize,
+    /// Mean/max occupied slots per decode step.
+    pub occupancy_mean: f64,
+    pub occupancy_max: usize,
+    /// Per-request time-to-first-token percentiles, milliseconds.
+    pub ttft_ms_p50: f64,
+    pub ttft_ms_p95: f64,
+    pub ttft_ms_p99: f64,
+    /// Per-request total-latency percentiles, milliseconds.
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    /// Median per-request decode throughput, tokens/s.
+    pub decode_tok_s_p50: f64,
+    /// Fitted fixed per-step overhead, milliseconds.
+    pub fit_overhead_ms: f64,
+    /// Fitted effective bandwidth, bytes/s (0 = slope not identifiable).
+    pub fit_bytes_per_s: f64,
+    /// RMS residual of the fit, milliseconds — how much measured latency
+    /// the linear traffic model fails to explain.
+    pub fit_rms_residual_ms: f64,
+    /// Step samples the fit consumed.
+    pub fit_samples: usize,
+}
+
 /// Machine-readable perf trajectory artifact (`BENCH_native.json`): one entry
 /// per artifact measured on the parallel/tiled path, joined with the scalar
 /// single-thread reference baseline for the speedup column, plus the LM
 /// per-step section (`lm`, in-place vs rebuild), the AdamW-update
 /// microbench (`opt`), the autoregressive decoding section (`decode`,
 /// recurrent vs full-recompute), and the prompt-ingestion section
-/// (`prefill`, chunked vs serial with TTFT). Times are nanoseconds (median
-/// plus p10/p90 spread) for kernels, seconds for LM/optimizer steps.
+/// (`prefill`, chunked vs serial with TTFT), and the continuous-batching
+/// section (`serve`, engine occupancy + request percentiles + traffic-model
+/// fit). Times are nanoseconds (median plus p10/p90 spread) for kernels,
+/// seconds for LM/optimizer steps.
 #[allow(clippy::too_many_arguments)]
 pub fn bench_native_json(
     parallel: &[SweepPoint],
@@ -222,6 +266,7 @@ pub fn bench_native_json(
     opt: &[OptBenchPoint],
     decode: &[DecodeBenchPoint],
     prefill: &[PrefillBenchPoint],
+    serve: &[ServeBenchPoint],
     threads: usize,
     chunk: usize,
 ) -> String {
@@ -334,8 +379,34 @@ pub fn bench_native_json(
             ])
         })
         .collect();
+    let serve_arts: Vec<Json> = serve
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("preset", Json::str(p.preset.clone())),
+                ("attn", Json::str(p.attn.clone())),
+                ("precision", Json::str(p.precision.clone())),
+                ("slots", Json::num(p.slots as f64)),
+                ("requests", Json::num(p.requests as f64)),
+                ("rejected", Json::num(p.rejected as f64)),
+                ("occupancy_mean", Json::num(p.occupancy_mean)),
+                ("occupancy_max", Json::num(p.occupancy_max as f64)),
+                ("ttft_ms_p50", Json::num(p.ttft_ms_p50)),
+                ("ttft_ms_p95", Json::num(p.ttft_ms_p95)),
+                ("ttft_ms_p99", Json::num(p.ttft_ms_p99)),
+                ("latency_ms_p50", Json::num(p.latency_ms_p50)),
+                ("latency_ms_p95", Json::num(p.latency_ms_p95)),
+                ("latency_ms_p99", Json::num(p.latency_ms_p99)),
+                ("decode_tok_s_p50", Json::num(p.decode_tok_s_p50)),
+                ("fit_overhead_ms", Json::num(p.fit_overhead_ms)),
+                ("fit_bytes_per_s", Json::num(p.fit_bytes_per_s)),
+                ("fit_rms_residual_ms", Json::num(p.fit_rms_residual_ms)),
+                ("fit_samples", Json::num(p.fit_samples as f64)),
+            ])
+        })
+        .collect();
     Json::obj(vec![
-        ("schema", Json::str("bench_native/v6")),
+        ("schema", Json::str("bench_native/v7")),
         ("threads", Json::num(threads as f64)),
         ("chunk", Json::num(chunk as f64)),
         ("artifacts", Json::Arr(arts)),
@@ -343,8 +414,42 @@ pub fn bench_native_json(
         ("opt", Json::Arr(opt_arts)),
         ("decode", Json::Arr(decode_arts)),
         ("prefill", Json::Arr(prefill_arts)),
+        ("serve", Json::Arr(serve_arts)),
     ])
     .to_string()
+}
+
+/// Human-readable companion of the `serve` section: engine occupancy,
+/// request-level percentiles, and the calibrated traffic-model constants.
+pub fn bench_serve_markdown(serve: &[ServeBenchPoint]) -> String {
+    let mut out = String::from(
+        "| preset | attn | prec | slots | reqs | shed | occ mean/max | ttft p50/p95 | \
+         latency p50/p95 | tok/s p50 | fit overhead | fit GB/s | fit rms |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for p in serve {
+        let _ = writeln!(
+            out,
+            "| {} | {} | {} | {} | {} | {} | {:.2}/{} | {}/{} | {}/{} | {:.0} | {} | {:.2} | {} |",
+            p.preset,
+            p.attn,
+            p.precision,
+            p.slots,
+            p.requests,
+            p.rejected,
+            p.occupancy_mean,
+            p.occupancy_max,
+            fmt_time(p.ttft_ms_p50 / 1e3),
+            fmt_time(p.ttft_ms_p95 / 1e3),
+            fmt_time(p.latency_ms_p50 / 1e3),
+            fmt_time(p.latency_ms_p95 / 1e3),
+            p.decode_tok_s_p50,
+            fmt_time(p.fit_overhead_ms / 1e3),
+            p.fit_bytes_per_s / 1e9,
+            fmt_time(p.fit_rms_residual_ms / 1e3),
+        );
+    }
+    out
 }
 
 /// Human-readable companion of the `prefill` section: chunked prompt
@@ -677,9 +782,30 @@ mod tests {
             logit_maxabs_vs_serial: 1.5e-4,
             nll_delta_vs_f32: 0.0,
         }];
-        let text = bench_native_json(&par, &base, &lm, &opt, &decode, &prefill, 4, 128);
+        let serve = vec![ServeBenchPoint {
+            preset: "small".into(),
+            attn: "ours".into(),
+            precision: "f32".into(),
+            slots: 4,
+            requests: 8,
+            rejected: 1,
+            occupancy_mean: 2.5,
+            occupancy_max: 4,
+            ttft_ms_p50: 15.0,
+            ttft_ms_p95: 40.0,
+            ttft_ms_p99: 55.0,
+            latency_ms_p50: 80.0,
+            latency_ms_p95: 150.0,
+            latency_ms_p99: 180.0,
+            decode_tok_s_p50: 1200.0,
+            fit_overhead_ms: 0.2,
+            fit_bytes_per_s: 8.5e9,
+            fit_rms_residual_ms: 0.05,
+            fit_samples: 96,
+        }];
+        let text = bench_native_json(&par, &base, &lm, &opt, &decode, &prefill, &serve, 4, 128);
         let v = Json::parse(&text).unwrap();
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v6"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("bench_native/v7"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
         let arts = v.get("artifacts").unwrap().as_arr().unwrap();
         assert_eq!(arts.len(), 1);
@@ -714,6 +840,19 @@ mod tests {
         assert_eq!(pre[0].get("ttft_ms").unwrap().as_f64(), Some(120.0));
         assert_eq!(pre[0].get("prefill_tok_s").unwrap().as_f64(), Some(34_000.0));
         assert!((pre[0].get("speedup_vs_serial").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
+        let srv = v.get("serve").unwrap().as_arr().unwrap();
+        assert_eq!(srv.len(), 1);
+        assert_eq!(srv[0].get("slots").unwrap().as_usize(), Some(4));
+        assert_eq!(srv[0].get("requests").unwrap().as_usize(), Some(8));
+        assert_eq!(srv[0].get("rejected").unwrap().as_usize(), Some(1));
+        assert_eq!(srv[0].get("occupancy_mean").unwrap().as_f64(), Some(2.5));
+        assert_eq!(srv[0].get("ttft_ms_p50").unwrap().as_f64(), Some(15.0));
+        assert_eq!(srv[0].get("latency_ms_p99").unwrap().as_f64(), Some(180.0));
+        assert_eq!(srv[0].get("fit_bytes_per_s").unwrap().as_f64(), Some(8.5e9));
+        assert_eq!(srv[0].get("fit_samples").unwrap().as_usize(), Some(96));
+        let smd = bench_serve_markdown(&serve);
+        assert!(smd.contains("2.50/4"), "serve markdown occupancy:\n{smd}");
+        assert!(smd.contains("8.50"), "serve markdown fit GB/s:\n{smd}");
         let pmd = bench_prefill_markdown(&prefill);
         assert!(pmd.contains("4096") && pmd.contains("4.00×"), "prefill markdown:\n{pmd}");
         assert!(pmd.contains("120.00 ms"), "prefill markdown missing ttft:\n{pmd}");
@@ -748,7 +887,7 @@ mod tests {
             loss_first: 5.5,
             loss_last: 5.5,
         }];
-        let text = bench_native_json(&[], &[], &lm, &[], &[], &[], 1, 128);
+        let text = bench_native_json(&[], &[], &lm, &[], &[], &[], &[], 1, 128);
         let v = Json::parse(&text).unwrap();
         let lms = v.get("lm").unwrap().as_arr().unwrap();
         assert_eq!(lms[0].get("grad_norm_last"), Some(&Json::Null));

@@ -14,6 +14,7 @@ pub struct TimingStats {
     pub p50: f64,
     pub p90: f64,
     pub p95: f64,
+    pub p99: f64,
     pub min: f64,
     pub max: f64,
 }
@@ -44,6 +45,7 @@ impl TimingStats {
             p50: pct(0.50),
             p90: pct(0.90),
             p95: pct(0.95),
+            p99: pct(0.99),
             min: samples[0],
             max: samples[n - 1],
         })
@@ -88,9 +90,10 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 100.0);
         assert_eq!(s.p50, 3.0);
-        // p10 rounds to the lowest sample, p90 to the highest of five
+        // p10 rounds to the lowest sample, p90/p99 to the highest of five
         assert_eq!(s.p10, 1.0);
         assert_eq!(s.p90, 100.0);
+        assert_eq!(s.p99, 100.0);
         assert!(s.p10 <= s.p50 && s.p50 <= s.p90);
         assert!((s.mean - 22.0).abs() < 1e-9);
         // trimmed mean must be robust to the 100.0 outlier vs the raw mean

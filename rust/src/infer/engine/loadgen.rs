@@ -1,0 +1,162 @@
+//! Deterministic in-process load generator (`repro loadgen`).
+//!
+//! Replays a seeded arrival trace ([`ArrivalPattern::trace`]) against a
+//! [`BatchEngine`] on a **virtual clock**: arrivals are mapped to scheduler
+//! cycles (`cycles_per_s` cycles per virtual second), so the submission
+//! schedule — which requests overlap, which get shed — is a pure function
+//! of `(pattern, n, seed, cycles_per_s)` and replays identically across
+//! machines regardless of their actual decode speed. Only the *measured
+//! latencies* (what the traffic-model fit consumes) come from the real
+//! clock.
+//!
+//! Prompts are synthesized from the same seed with varying lengths, so
+//! softmax runs see varying KV-lane footprints — the spread the serve fit
+//! needs to identify a bandwidth slope, not just an intercept.
+
+use anyhow::{bail, Result};
+
+use crate::data::rng::SplitMix64;
+use crate::simulator::{ArrivalPattern, ServeFit};
+
+use super::super::sampler::SampleMode;
+use super::super::session::GenRequest;
+use super::stats::EngineStats;
+use super::BatchEngine;
+
+/// One load run's shape. Defaults give the CI smoke: a burst of 8
+/// overlapping short requests.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadGenConfig {
+    pub n_requests: usize,
+    pub pattern: ArrivalPattern,
+    /// Seeds both the arrival trace and the synthetic prompts.
+    pub seed: u64,
+    /// Prompt lengths are drawn uniformly from `[1, prompt_len]` chars.
+    pub prompt_len: usize,
+    pub max_new: usize,
+    /// Virtual scheduler cycles per virtual second — the knob mapping
+    /// trace timestamps onto cycles.
+    pub cycles_per_s: f64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            n_requests: 8,
+            pattern: ArrivalPattern::Burst { burst: 8, gap_s: 1.0 },
+            seed: 0,
+            prompt_len: 24,
+            max_new: 16,
+            cycles_per_s: 100.0,
+        }
+    }
+}
+
+/// What a load run produced: request counters, engine statistics, and the
+/// traffic-model calibration fitted to the run's per-step samples.
+#[derive(Debug, Clone)]
+pub struct LoadGenReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub errors: usize,
+    /// Scheduler cycles executed (virtual-clock ticks).
+    pub cycles: usize,
+    pub stats: EngineStats,
+    /// `None` when the run produced under two usable step samples.
+    pub fit: Option<ServeFit>,
+}
+
+impl LoadGenReport {
+    /// One-paragraph run summary (the loadgen CLI prints this).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "loadgen: {} submitted, {} completed, {} rejected, {} error(s) over {} cycles",
+            self.submitted, self.completed, self.rejected, self.errors, self.cycles,
+        );
+        s.push('\n');
+        s.push_str(&self.stats.summary());
+        if let Some(fit) = &self.fit {
+            s.push_str(&format!(
+                "\nfit: overhead {:.3} ms, bandwidth {:.3} GB/s, rms residual {:.3} ms \
+                 ({} samples)",
+                fit.launch_overhead_s * 1e3,
+                fit.bytes_per_s / 1e9,
+                fit.rms_residual_s * 1e3,
+                fit.n_samples,
+            ));
+        }
+        s
+    }
+}
+
+/// Synthesize request `i`'s prompt: seeded lowercase text with a length in
+/// `[1, max_len]` so state footprints vary across requests.
+fn synth_prompt(rng: &mut SplitMix64, max_len: usize) -> String {
+    let max_len = max_len.max(1);
+    let len = 1 + (rng.next_u64() as usize) % max_len;
+    (0..len).map(|_| (b'a' + (rng.next_u64() % 26) as u8) as char).collect()
+}
+
+/// Drive `engine` through one load run. Every submitted request is
+/// answered (completed, shed, or failed) before this returns; shed and
+/// failed requests are counted, not errors of the run itself.
+// no_panic
+pub fn run(engine: &mut BatchEngine<'_>, conf: &LoadGenConfig) -> Result<LoadGenReport> {
+    if conf.n_requests == 0 {
+        bail!("loadgen wants at least one request");
+    }
+    if !(conf.cycles_per_s.is_finite() && conf.cycles_per_s > 0.0) {
+        bail!("loadgen cycles_per_s must be a positive finite rate, got {}", conf.cycles_per_s);
+    }
+    let trace = conf.pattern.trace(conf.n_requests, conf.seed);
+    let mut prompts = SplitMix64::new(conf.seed ^ 0x9e37_79b9_7f4a_7c15);
+    let mut next = 0usize;
+    let mut cycle = 0usize;
+    let mut answered = 0usize;
+    while next < trace.len() || !engine.is_idle() {
+        let vt = cycle as f64 / conf.cycles_per_s;
+        while next < trace.len() && trace.get(next).is_some_and(|&t| t <= vt) {
+            let gen = GenRequest {
+                prompt: synth_prompt(&mut prompts, conf.prompt_len),
+                max_new: conf.max_new,
+                mode: SampleMode::Greedy,
+                seed: conf.seed.wrapping_add(next as u64),
+                samples: 1,
+                serial_prefill: false,
+            };
+            engine.submit(next as u64, gen);
+            next += 1;
+        }
+        let progressed = engine.step()?;
+        answered += engine.take_finished().len();
+        if !progressed {
+            if let Some(&t) = trace.get(next) {
+                // idle with the next arrival in the future: jump the
+                // virtual clock instead of spinning empty cycles
+                let jump = (t * conf.cycles_per_s).ceil() as usize;
+                cycle = jump.max(cycle + 1);
+                continue;
+            }
+        }
+        cycle += 1;
+    }
+    answered += engine.take_finished().len();
+    let stats = engine.stats().clone();
+    if answered != conf.n_requests {
+        bail!(
+            "loadgen answered {answered} of {} requests — the drain loop leaked responses",
+            conf.n_requests
+        );
+    }
+    let fit = ServeFit::from_samples(stats.step_samples());
+    Ok(LoadGenReport {
+        submitted: stats.submitted,
+        completed: stats.completed,
+        rejected: stats.rejected,
+        errors: stats.errors,
+        cycles: cycle,
+        stats,
+        fit,
+    })
+}

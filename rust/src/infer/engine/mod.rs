@@ -1,0 +1,631 @@
+//! Continuous-batching serve engine: dynamic join/leave over one shared
+//! batched decode state.
+//!
+//! `repro serve` used to answer one request at a time, leaving the batched
+//! [`DecodeModel`] machinery (which already steps `n_seq` sequences per
+//! token) idle under concurrent load. [`BatchEngine`] closes that gap with
+//! a slot-based scheduler:
+//!
+//! - **Slots** — a fixed-capacity pool of decode lanes backed by *one*
+//!   shared [`DecodeState`]/[`DecodeScratch`] pair (`--slots` wide). Each
+//!   admitted request owns `samples` slots until it finishes.
+//! - **Admission** — queued requests are prefilled through a one-sequence
+//!   *staging* state (budgeted to `prefill_budget` prompt tokens per
+//!   scheduler cycle so a long prompt cannot stall in-flight decodes), then
+//!   adopted into their reserved slots between decode steps
+//!   ([`DecodeState::adopt_seq`] — a raw per-lane copy, so decoding from
+//!   the slot is bit-identical to decoding from the staging state).
+//! - **Decode** — one [`DecodeModel::decode_step_masked`] call per cycle
+//!   advances every occupied slot at its own position; every decode op is
+//!   row-independent, so a request's tokens are bit-identical whether it
+//!   runs alone or joins a busy batch mid-stream (the parity tests in
+//!   `tests/engine.rs` pin this per `AttnKind`).
+//! - **Eviction** — finished/capped sequences release their slots
+//!   immediately ([`DecodeState::clear_seq`], allocation-free) so the next
+//!   admission can reuse them on the very next cycle.
+//! - **Backpressure** — the admission queue is bounded; overflow answers an
+//!   explicit `queue_full` rejection instead of growing without bound, and
+//!   nothing in the engine panics (`// no_panic`, machine-checked by
+//!   `xtask lint`).
+//!
+//! The engine is synchronous and in-process: callers interleave
+//! [`submit`](BatchEngine::submit) / [`step`](BatchEngine::step) /
+//! [`take_finished`](BatchEngine::take_finished) however their transport
+//! requires (the serve loop polls a reader thread between cycles; the load
+//! generator replays seeded arrival traces).
+
+pub mod loadgen;
+pub mod request;
+pub mod stats;
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{ByteTokenizer, DecodeStream};
+use crate::native::model::{DecodeModel, DecodeScratch, Precision, PrefillScratch};
+use crate::native::pool::ThreadPool;
+
+use super::sampler::Sampler;
+use super::session::{GenRequest, MAX_SAMPLES};
+use super::state::DecodeState;
+
+pub use request::{EngineOutput, EngineRequest, EngineResponse};
+pub use stats::EngineStats;
+
+/// Scheduler knobs. Defaults suit the tiny/small presets the tests and CI
+/// drive; the serve CLI exposes each as a flag.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Decode-batch width: how many sequences share the batched step.
+    pub slots: usize,
+    /// Admission-queue bound; submissions past it are shed (`queue_full`).
+    pub queue: usize,
+    /// Prompt tokens prefilled per scheduler cycle — the knob trading new
+    /// requests' TTFT against in-flight requests' inter-token latency.
+    pub prefill_budget: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { slots: 4, queue: 32, prefill_budget: 64 }
+    }
+}
+
+impl EngineConfig {
+    fn validate(&self) -> Result<()> {
+        if self.slots == 0 || self.slots > MAX_SAMPLES {
+            bail!("engine slots must be in [1, {MAX_SAMPLES}], got {}", self.slots);
+        }
+        if self.queue == 0 {
+            bail!("engine queue bound must be ≥ 1");
+        }
+        if self.prefill_budget == 0 {
+            bail!("engine prefill budget must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
+/// One validated, tokenized submission waiting for slots.
+struct Queued {
+    serial: u64,
+    gen: GenRequest,
+    /// Prompt ids, already truncated to the last `n_ctx − 1`.
+    ids: Vec<i32>,
+    /// `max_new` after context-window clamping.
+    max_new: usize,
+    sampler: Sampler,
+    arrival: Instant,
+}
+
+/// The request currently being prefilled through the staging state.
+struct Prefilling {
+    req: Queued,
+    /// Reserved slot indices, ascending (sample order).
+    slots: Vec<usize>,
+    /// Prompt tokens already consumed (of `ids.len() − 1`).
+    consumed: usize,
+    /// When the slots were reserved and prefill began.
+    admit: Instant,
+    /// Accumulated staging-prefill wall-clock across cycles.
+    prefill_s: f64,
+}
+
+/// A request decoding in its slots.
+struct InFlight<'a> {
+    serial: u64,
+    sampler: Sampler,
+    /// Slot indices, ascending — within a request, sample order follows
+    /// slot order, so the per-request RNG stream draws exactly like
+    /// [`generate`](crate::infer::session::ModelSession::generate)'s
+    /// row-major loop.
+    slots: Vec<usize>,
+    max_new: usize,
+    prompt_tokens: usize,
+    arrival: Instant,
+    queue_s: f64,
+    prefill_s: f64,
+    ttft_s: f64,
+    decode_start: Instant,
+    generated: usize,
+    token_ids: Vec<Vec<i32>>,
+    texts: Vec<String>,
+    streams: Vec<DecodeStream<'a>>,
+    occ_sum: usize,
+    occ_steps: usize,
+    /// Set when sampling failed mid-stream (diverged logits); the request
+    /// is evicted and answered with this error.
+    failed: Option<anyhow::Error>,
+}
+
+/// The continuous-batching scheduler. See the module docs for the slot
+/// model; lifetimes tie the engine to the session that owns the parameter
+/// tensors, tokenizer, and thread pool.
+pub struct BatchEngine<'a> {
+    model: DecodeModel<'a>,
+    tokenizer: &'a ByteTokenizer,
+    pool: &'a ThreadPool,
+    conf: EngineConfig,
+    /// The shared batch state: one sequence lane per slot.
+    batch: DecodeState,
+    sc: DecodeScratch,
+    /// One-sequence staging state prompts are prefilled through before
+    /// adoption (so a half-prefilled prompt never occupies batch lanes).
+    staging: DecodeState,
+    staging_sc: DecodeScratch,
+    staging_psc: PrefillScratch,
+    /// Per-slot occupancy mask — the masked decode step's `active`.
+    active: Vec<bool>,
+    /// Per-slot next token to feed (last prompt token at adoption, then
+    /// each freshly sampled token).
+    pending: Vec<i32>,
+    queue: VecDeque<Queued>,
+    prefilling: Option<Prefilling>,
+    inflight: Vec<InFlight<'a>>,
+    done: Vec<EngineResponse>,
+    stats: EngineStats,
+    /// Modeled parameter bytes streamed per decode step (precision-aware) —
+    /// the constant term of the per-step traffic estimate the calibration
+    /// fit consumes.
+    step_param_bytes: f64,
+}
+
+impl<'a> BatchEngine<'a> {
+    /// Build an engine over a bound model. The `DecodeState`s and scratch
+    /// buffers are allocated here, once; steady-state scheduling reuses
+    /// them (the per-token hot path stays allocation-free — pinned in
+    /// `tests/alloc_gate.rs`).
+    pub fn new(
+        model: DecodeModel<'a>,
+        tokenizer: &'a ByteTokenizer,
+        pool: &'a ThreadPool,
+        conf: EngineConfig,
+    ) -> Result<Self> {
+        conf.validate()?;
+        let cfg = *model.cfg();
+        let batch = DecodeState::new(&cfg, conf.slots)?;
+        let staging = DecodeState::new(&cfg, 1)?;
+        let per_elem = match cfg.precision {
+            Precision::F32 => 4.0,
+            Precision::Bf16 => 2.0,
+            Precision::Int8 => 1.0,
+        };
+        let step_param_bytes = cfg.n_params() as f64 * per_elem;
+        Ok(Self {
+            model,
+            tokenizer,
+            pool,
+            conf,
+            batch,
+            sc: DecodeScratch::new(),
+            staging,
+            staging_sc: DecodeScratch::new(),
+            staging_psc: PrefillScratch::new(),
+            active: vec![false; conf.slots],
+            pending: vec![0; conf.slots],
+            queue: VecDeque::new(),
+            prefilling: None,
+            inflight: Vec::new(),
+            done: Vec::new(),
+            stats: EngineStats::default(),
+            step_param_bytes,
+        })
+    }
+
+    /// The scheduler configuration this engine runs with.
+    pub fn config(&self) -> &EngineConfig {
+        &self.conf
+    }
+
+    /// Aggregate statistics so far (occupancy, percentiles, fit samples).
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// True when nothing is queued, prefilling, or decoding.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.prefilling.is_none() && self.inflight.is_empty()
+    }
+
+    /// Currently occupied decode slots.
+    pub fn occupancy(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Completed/rejected/failed responses accumulated since the last call,
+    /// in completion order (transports needing arrival order re-sort by
+    /// `serial`).
+    pub fn take_finished(&mut self) -> Vec<EngineResponse> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Validate and enqueue one request. Invalid requests and
+    /// backpressure rejections are answered immediately through
+    /// [`take_finished`](Self::take_finished); nothing here panics and
+    /// nothing blocks.
+    // no_panic
+    pub fn submit(&mut self, serial: u64, gen: GenRequest) {
+        self.stats.submitted += 1;
+        if gen.samples == 0 || gen.samples > MAX_SAMPLES {
+            // same contract as `generate`: an absurd batch size answers an
+            // error, it must not abort (or starve) a warm server
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(
+                serial,
+                anyhow!("samples must be in [1, {MAX_SAMPLES}], got {}", gen.samples),
+            ));
+            return;
+        }
+        if gen.samples > self.conf.slots {
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(
+                serial,
+                anyhow!(
+                    "samples {} exceeds the engine's {} decode slot(s) — raise --slots \
+                     or lower samples",
+                    gen.samples,
+                    self.conf.slots
+                ),
+            ));
+            return;
+        }
+        let sampler = match Sampler::new(gen.mode, gen.seed) {
+            Ok(s) => s,
+            Err(e) => {
+                self.stats.errors += 1;
+                self.done.push(EngineResponse::failed(serial, e));
+                return;
+            }
+        };
+        if self.queue.len() >= self.conf.queue {
+            // explicit load shedding: the bounded queue is the engine's
+            // backpressure valve — answer now, don't grow without bound
+            self.stats.rejected += 1;
+            self.done.push(EngineResponse::shed(
+                serial,
+                anyhow!(
+                    "queue_full: admission queue at capacity {} — retry later or raise --queue",
+                    self.conf.queue
+                ),
+            ));
+            return;
+        }
+        let n_ctx = self.model.cfg().n_ctx;
+        let mut ids = self.tokenizer.encode(&gen.prompt);
+        if ids.len() > n_ctx - 1 {
+            ids.drain(..ids.len() - (n_ctx - 1));
+        }
+        if ids.is_empty() {
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(
+                serial,
+                anyhow!("prompt encodes to zero tokens — provide a non-empty prompt"),
+            ));
+            return;
+        }
+        let max_new = gen.max_new.min(n_ctx - ids.len());
+        let arrival = Instant::now();
+        self.queue.push_back(Queued { serial, gen, ids, max_new, sampler, arrival });
+    }
+
+    /// One scheduler cycle: admit queued requests into free slots (staging
+    /// prefill under the budget, then adoption), then advance every
+    /// occupied slot by one masked decode step, retiring finished requests.
+    /// Returns `false` when the engine was idle (nothing to do). Errors are
+    /// systemic (a broken state); per-request failures are answered through
+    /// [`take_finished`](Self::take_finished) instead.
+    // no_panic
+    // bounds: slot indices come from `active`/`pending`/the batch state,
+    // all sized to conf.slots at construction; logits rows are slot-indexed
+    pub fn step(&mut self) -> Result<bool> {
+        if self.is_idle() {
+            return Ok(false);
+        }
+        self.admit_cycle()?;
+        if self.inflight.is_empty() {
+            // admission made progress (prefill slice or an answered
+            // request) but nothing decodes yet
+            return Ok(true);
+        }
+
+        let occupancy = self.occupancy();
+        let mut lane_bytes = 0usize;
+        for (i, &a) in self.active.iter().enumerate() {
+            if a {
+                lane_bytes += self.batch.seq_state_bytes(i);
+            }
+        }
+        let bytes = self.step_param_bytes + 2.0 * lane_bytes as f64;
+
+        let t0 = Instant::now();
+        let logits = self.model.decode_step_masked(
+            &self.pending,
+            &self.active,
+            &mut self.batch,
+            self.pool,
+            &mut self.sc,
+        )?;
+        let v = self.model.cfg().vocab;
+        // BPE merge training can saturate below the artifact vocabulary —
+        // sample only over the decodable prefix, exactly like `generate`
+        let decodable = v.min(256 + self.tokenizer.n_merges());
+        for fl in &mut self.inflight {
+            let first = fl.generated == 0;
+            'sample: for (si, &slot) in fl.slots.iter().enumerate() {
+                let tok = match fl.sampler.sample(&logits[slot * v..][..decodable]) {
+                    Ok(t) => t as i32,
+                    Err(e) => {
+                        // diverged logits: answer this request with the
+                        // error and evict it; its batch-mates continue
+                        fl.failed = Some(e);
+                        break 'sample;
+                    }
+                };
+                fl.token_ids[si].push(tok);
+                match fl.streams[si].push(tok) {
+                    Ok(piece) => fl.texts[si].push_str(&piece),
+                    Err(e) => {
+                        fl.failed = Some(e);
+                        break 'sample;
+                    }
+                }
+                self.pending[slot] = tok;
+            }
+            if fl.failed.is_none() {
+                fl.generated += 1;
+                if first {
+                    fl.ttft_s = fl.arrival.elapsed().as_secs_f64();
+                }
+            }
+            fl.occ_sum += occupancy;
+            fl.occ_steps += 1;
+        }
+        let step_s = t0.elapsed().as_secs_f64();
+        self.stats.record_step(occupancy, bytes, step_s);
+
+        // retire finished (or failed) requests in admission order and free
+        // their slots for the next cycle's admissions
+        let inflight = std::mem::take(&mut self.inflight);
+        for fl in inflight {
+            if fl.failed.is_some() || fl.generated >= fl.max_new {
+                self.retire(fl)?;
+            } else {
+                self.inflight.push(fl);
+            }
+        }
+        Ok(true)
+    }
+
+    /// Run the scheduler until every queued and in-flight request is
+    /// answered — the EOF drain of the serve loop. Terminates because each
+    /// cycle consumes prompt tokens or produces decode tokens, both
+    /// bounded.
+    // no_panic
+    pub fn drain(&mut self) -> Result<()> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Admission half of a cycle: spend up to `prefill_budget` prompt
+    /// tokens on the staging prefill, adopting completed prompts into
+    /// their reserved slots; start new prefills while budget and slots
+    /// remain (smallest-serial first — strict arrival order).
+    // no_panic
+    // bounds: reserved slot indices come from the free-slot scan over
+    // `active` (conf.slots wide); prompt windows are carved from `consumed`,
+    // which is bounded by ids.len() − 1
+    fn admit_cycle(&mut self) -> Result<()> {
+        let mut budget = self.conf.prefill_budget;
+        loop {
+            if self.prefilling.is_none() {
+                let need = match self.queue.front() {
+                    None => break,
+                    Some(q) => q.gen.samples,
+                };
+                let free: Vec<usize> =
+                    (0..self.conf.slots).filter(|&i| !self.active[i]).collect();
+                if free.len() < need {
+                    break; // head-of-line waits for evictions; order stays deterministic
+                }
+                let req = match self.queue.pop_front() {
+                    Some(q) => q,
+                    None => break,
+                };
+                self.staging.reset();
+                let mut slots = free;
+                slots.truncate(need);
+                self.prefilling =
+                    Some(Prefilling { req, slots, consumed: 0, admit: Instant::now(), prefill_s: 0.0 });
+            }
+            if budget == 0 {
+                break;
+            }
+            let pf = match self.prefilling.as_mut() {
+                Some(p) => p,
+                None => break,
+            };
+            // every prompt token but the last only advances the state; the
+            // last is fed to the first decode step (logits + first sample)
+            let prompt = pf.req.ids.len() - 1;
+            let take = (prompt - pf.consumed).min(budget);
+            if take > 0 {
+                let t0 = Instant::now();
+                let window = &pf.req.ids[pf.consumed..pf.consumed + take];
+                if pf.req.gen.serial_prefill {
+                    for &tok in window {
+                        self.model.prefill_step_scratch(
+                            &[tok],
+                            &mut self.staging,
+                            self.pool,
+                            &mut self.staging_sc,
+                        )?;
+                    }
+                } else {
+                    self.model.prefill_chunked(
+                        window,
+                        &mut self.staging,
+                        self.pool,
+                        &mut self.staging_psc,
+                    )?;
+                }
+                pf.consumed += take;
+                pf.prefill_s += t0.elapsed().as_secs_f64();
+                budget -= take;
+            }
+            if pf.consumed < prompt {
+                break; // budget exhausted mid-prompt; resume next cycle
+            }
+            // prompt fully staged — adopt into the reserved slots
+            let pf = match self.prefilling.take() {
+                Some(p) => p,
+                None => break,
+            };
+            self.adopt(pf)?;
+        }
+        Ok(())
+    }
+
+    /// Move a fully-prefilled request from staging into its slots and the
+    /// in-flight set (or answer it directly when `max_new` clamped to 0).
+    // no_panic
+    // bounds: slot indices were reserved from the free-slot scan; per-slot
+    // arrays are conf.slots wide
+    fn adopt(&mut self, pf: Prefilling) -> Result<()> {
+        let Prefilling { req, slots, admit, prefill_s, .. } = pf;
+        let queue_s = admit.duration_since(req.arrival).as_secs_f64();
+        let n = req.gen.samples;
+        if req.max_new == 0 {
+            // nothing to decode: answer now, slots were never dirtied
+            let state_bytes = self.staging.seq_state_bytes(0) * n;
+            let ttft_s = req.arrival.elapsed().as_secs_f64();
+            self.stats.record_request(queue_s, ttft_s, ttft_s, 0.0);
+            self.done.push(EngineResponse::done(
+                req.serial,
+                EngineOutput {
+                    texts: vec![String::new(); n],
+                    token_ids: vec![Vec::new(); n],
+                    prompt_tokens: req.ids.len(),
+                    new_tokens: 0,
+                    queue_s,
+                    prefill_s,
+                    ttft_s,
+                    decode_s: 0.0,
+                    decode_tok_s: 0.0,
+                    occupancy_mean: 0.0,
+                    state_bytes,
+                },
+            ));
+            return Ok(());
+        }
+        let last = match req.ids.last() {
+            Some(&t) => t,
+            None => bail!("internal: admitted request with an empty prompt"),
+        };
+        for &slot in &slots {
+            self.batch.adopt_seq(slot, &self.staging)?;
+            self.active[slot] = true;
+            self.pending[slot] = last;
+        }
+        self.inflight.push(InFlight {
+            serial: req.serial,
+            sampler: req.sampler,
+            slots,
+            max_new: req.max_new,
+            prompt_tokens: req.ids.len(),
+            arrival: req.arrival,
+            queue_s,
+            prefill_s,
+            ttft_s: 0.0,
+            decode_start: Instant::now(),
+            generated: 0,
+            token_ids: vec![Vec::new(); n],
+            texts: vec![String::new(); n],
+            streams: (0..n).map(|_| self.tokenizer.decode_stream()).collect(),
+            occ_sum: 0,
+            occ_steps: 0,
+            failed: None,
+        });
+        Ok(())
+    }
+
+    /// Evict one finished/failed request: free its slots (allocation-free
+    /// per-lane reset) and push its response.
+    // no_panic
+    fn retire(&mut self, fl: InFlight<'a>) -> Result<()> {
+        let mut state_bytes = 0usize;
+        for &slot in &fl.slots {
+            state_bytes += self.batch.seq_state_bytes(slot);
+            self.batch.clear_seq(slot)?;
+            // in_bounds: slot < conf.slots — reserved from the free-slot scan
+            self.active[slot] = false;
+            // in_bounds: same slot bound as the line above
+            self.pending[slot] = 0;
+        }
+        if let Some(err) = fl.failed {
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(fl.serial, err));
+            return Ok(());
+        }
+        let decode_s = fl.decode_start.elapsed().as_secs_f64();
+        let latency_s = fl.arrival.elapsed().as_secs_f64();
+        let new_tokens = fl.generated;
+        let n = fl.slots.len();
+        let decode_tok_s =
+            if decode_s > 0.0 { (new_tokens * n) as f64 / decode_s } else { 0.0 };
+        let occupancy_mean =
+            if fl.occ_steps > 0 { fl.occ_sum as f64 / fl.occ_steps as f64 } else { 0.0 };
+        let mut texts = fl.texts;
+        for (text, stream) in texts.iter_mut().zip(fl.streams) {
+            text.push_str(&stream.finish());
+        }
+        let ttft_s = if fl.ttft_s > 0.0 { fl.ttft_s } else { latency_s };
+        self.stats.record_request(fl.queue_s, ttft_s, latency_s, decode_tok_s);
+        self.done.push(EngineResponse::done(
+            fl.serial,
+            EngineOutput {
+                texts,
+                token_ids: fl.token_ids,
+                prompt_tokens: fl.prompt_tokens,
+                new_tokens,
+                queue_s: fl.queue_s,
+                prefill_s: fl.prefill_s,
+                ttft_s,
+                decode_s,
+                decode_tok_s,
+                occupancy_mean,
+                state_bytes,
+            },
+        ));
+        Ok(())
+    }
+
+    /// Systemic-failure recovery: answer every queued and in-flight
+    /// request with `err`, clear all slots, and return the engine to an
+    /// idle (but warm) state. The serve loop calls this when
+    /// [`step`](Self::step) itself errors so one broken request can never
+    /// wedge the server.
+    // no_panic
+    pub fn fail_all(&mut self, err: &anyhow::Error) {
+        let msg = format!("{err:#}");
+        for q in std::mem::take(&mut self.queue) {
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(q.serial, anyhow!("{msg}")));
+        }
+        if let Some(pf) = self.prefilling.take() {
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(pf.req.serial, anyhow!("{msg}")));
+        }
+        for fl in std::mem::take(&mut self.inflight) {
+            self.stats.errors += 1;
+            self.done.push(EngineResponse::failed(fl.serial, anyhow!("{msg}")));
+        }
+        self.batch.reset();
+        self.staging.reset();
+        self.active.fill(false);
+        self.pending.fill(0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Request/response types of the continuous-batching engine.
+//!
+//! The engine is transport-agnostic: the serve loop maps JSONL lines to
+//! [`EngineRequest`]s and [`EngineResponse`]s back to JSONL; the load
+//! generator fabricates requests directly. `serial` is the engine-assigned
+//! admission ticket — responses carry it so callers can re-order completions
+//! (slots finish in decode order, not arrival order) back into arrival
+//! order when their protocol needs it.
+
+use anyhow::Error;
+
+use crate::infer::session::GenRequest;
+
+/// One queued generation: the session-level request plus the caller's
+/// correlation handle.
+#[derive(Debug, Clone)]
+pub struct EngineRequest {
+    /// Caller-chosen correlation id (the serve loop stores its JSON `id`
+    /// out-of-band and uses the submission serial instead).
+    pub serial: u64,
+    pub gen: GenRequest,
+}
+
+/// What a completed request produced, with the latency split the serve
+/// responses report. Mirrors
+/// [`GenOutcome`](crate::infer::session::GenOutcome) plus the queueing and
+/// batching figures that only exist under concurrency.
+#[derive(Debug, Clone)]
+pub struct EngineOutput {
+    /// Decoded text per sample (prompt not included).
+    pub texts: Vec<String>,
+    /// Generated token ids per sample.
+    pub token_ids: Vec<Vec<i32>>,
+    pub prompt_tokens: usize,
+    /// New tokens generated per sample (after context-window clamping).
+    pub new_tokens: usize,
+    /// Submission → admission (time spent waiting for a free slot).
+    pub queue_s: f64,
+    /// Wall-clock of consuming the prompt through the staging state
+    /// (budget-sliced across scheduler cycles; this sums the slices).
+    pub prefill_s: f64,
+    /// Submission → first sampled token (queueing + prefill + first step).
+    pub ttft_s: f64,
+    /// First decode step → last token (shared batch steps included).
+    pub decode_s: f64,
+    /// Generated tokens per second across this request's samples, decode
+    /// phase only.
+    pub decode_tok_s: f64,
+    /// Mean number of occupied slots over this request's decode steps —
+    /// how much batching the request actually experienced.
+    pub occupancy_mean: f64,
+    /// Attention-state footprint of this request's slots at completion.
+    pub state_bytes: usize,
+}
+
+/// Terminal answer for one submission: completed, rejected by backpressure,
+/// or failed validation/decoding.
+#[derive(Debug)]
+pub struct EngineResponse {
+    /// Echo of [`EngineRequest::serial`].
+    pub serial: u64,
+    /// True when the request was shed by the bounded admission queue
+    /// (`queue_full`) — the explicit load-shedding signal, distinct from a
+    /// request that was simply invalid.
+    pub rejected: bool,
+    pub result: Result<EngineOutput, Error>,
+}
+
+impl EngineResponse {
+    pub(crate) fn done(serial: u64, out: EngineOutput) -> Self {
+        Self { serial, rejected: false, result: Ok(out) }
+    }
+
+    pub(crate) fn failed(serial: u64, err: Error) -> Self {
+        Self { serial, rejected: false, result: Err(err) }
+    }
+
+    pub(crate) fn shed(serial: u64, err: Error) -> Self {
+        Self { serial, rejected: true, result: Err(err) }
+    }
+}

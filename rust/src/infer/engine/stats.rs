@@ -1,0 +1,169 @@
+//! Aggregate engine statistics: request counters, batch occupancy, and the
+//! per-request latency/TTFT distributions summarized through the bench
+//! harness's [`TimingStats`] (same non-finite filtering, same percentile
+//! definitions), plus the raw per-step samples the traffic-model fit
+//! consumes.
+
+use crate::bench::timing::TimingStats;
+
+/// Counters and sample sets accumulated over an engine's lifetime. Cheap to
+/// update per event; the percentile summaries are computed on demand (at
+/// shutdown or when the bench serializes a serve section).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Requests handed to `submit` (including rejected ones).
+    pub submitted: usize,
+    /// Requests answered with a completed generation.
+    pub completed: usize,
+    /// Requests shed by the bounded admission queue (`queue_full`).
+    pub rejected: usize,
+    /// Requests answered with a validation/decoding error.
+    pub errors: usize,
+    /// Masked decode steps executed.
+    pub decode_steps: usize,
+    /// Tokens produced across all slots (one per active slot per step).
+    pub slot_tokens: usize,
+    /// Highest number of simultaneously occupied slots observed.
+    pub max_occupancy: usize,
+    occupancy_sum: usize,
+    /// Per-request time-to-first-token (submission → first token), seconds.
+    ttft_s: Vec<f64>,
+    /// Per-request total latency (submission → completion), seconds.
+    latency_s: Vec<f64>,
+    /// Per-request queue wait, seconds.
+    queue_s: Vec<f64>,
+    /// Per-request decode throughput, tokens/s.
+    decode_tok_s: Vec<f64>,
+    /// Per-decode-step `(bytes moved estimate, measured seconds)` — the
+    /// traffic-model calibration's sample set.
+    step_samples: Vec<(f64, f64)>,
+}
+
+impl EngineStats {
+    /// Record one masked decode step: how many slots were occupied, how
+    /// long it took, and the modeled bytes it moved.
+    pub(crate) fn record_step(&mut self, occupancy: usize, bytes: f64, seconds: f64) {
+        self.decode_steps += 1;
+        self.slot_tokens += occupancy;
+        self.occupancy_sum += occupancy;
+        self.max_occupancy = self.max_occupancy.max(occupancy);
+        self.step_samples.push((bytes, seconds));
+    }
+
+    /// Record one completed request's latency split.
+    pub(crate) fn record_request(
+        &mut self,
+        queue_s: f64,
+        ttft_s: f64,
+        latency_s: f64,
+        decode_tok_s: f64,
+    ) {
+        self.completed += 1;
+        self.queue_s.push(queue_s);
+        self.ttft_s.push(ttft_s);
+        self.latency_s.push(latency_s);
+        self.decode_tok_s.push(decode_tok_s);
+    }
+
+    /// Mean occupied slots per decode step (0 when no step ran).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// TTFT distribution over completed requests.
+    pub fn ttft_stats(&self) -> Option<TimingStats> {
+        TimingStats::from_samples(self.ttft_s.clone())
+    }
+
+    /// Total-latency distribution over completed requests.
+    pub fn latency_stats(&self) -> Option<TimingStats> {
+        TimingStats::from_samples(self.latency_s.clone())
+    }
+
+    /// Queue-wait distribution over completed requests.
+    pub fn queue_stats(&self) -> Option<TimingStats> {
+        TimingStats::from_samples(self.queue_s.clone())
+    }
+
+    /// Decode-throughput distribution over completed requests.
+    pub fn decode_tok_s_stats(&self) -> Option<TimingStats> {
+        TimingStats::from_samples(self.decode_tok_s.clone())
+    }
+
+    /// Per-step `(bytes, seconds)` samples for the traffic-model fit.
+    pub fn step_samples(&self) -> &[(f64, f64)] {
+        &self.step_samples
+    }
+
+    /// Multi-line shutdown report: counters, occupancy, and p50/p95/p99
+    /// latency + TTFT percentiles (the serve CLI logs this to stderr).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "engine: {} submitted, {} completed, {} rejected, {} error(s); \
+             {} decode steps, occupancy mean {:.2} max {}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.decode_steps,
+            self.mean_occupancy(),
+            self.max_occupancy,
+        );
+        let line = |name: &str, st: &TimingStats| {
+            format!(
+                "\nengine: {name} p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms",
+                st.p50 * 1e3,
+                st.p95 * 1e3,
+                st.p99 * 1e3,
+            )
+        };
+        if let Some(st) = self.ttft_stats() {
+            s.push_str(&line("ttft", &st));
+        }
+        if let Some(st) = self.latency_stats() {
+            s.push_str(&line("latency", &st));
+        }
+        if let Some(st) = self.decode_tok_s_stats() {
+            s.push_str(&format!(
+                "\nengine: decode {:.0} tok/s p50 ({:.0} p10, {:.0} p90)",
+                st.p50, st.p10, st.p90,
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_and_percentiles_accumulate() {
+        let mut st = EngineStats::default();
+        assert_eq!(st.mean_occupancy(), 0.0);
+        assert!(st.ttft_stats().is_none());
+        st.record_step(1, 10.0, 0.001);
+        st.record_step(3, 30.0, 0.003);
+        assert_eq!(st.decode_steps, 2);
+        assert_eq!(st.slot_tokens, 4);
+        assert_eq!(st.max_occupancy, 3);
+        assert!((st.mean_occupancy() - 2.0).abs() < 1e-12);
+        assert_eq!(st.step_samples().len(), 2);
+
+        for i in 0..5 {
+            st.record_request(0.0, 0.01 * (i + 1) as f64, 0.1, 100.0);
+        }
+        assert_eq!(st.completed, 5);
+        let ttft = st.ttft_stats().unwrap();
+        assert_eq!(ttft.reps, 5);
+        assert!((ttft.p50 - 0.03).abs() < 1e-12);
+        assert!(ttft.p99 >= ttft.p50);
+        let sum = st.summary();
+        assert!(sum.contains("occupancy mean 2.00 max 3"));
+        assert!(sum.contains("ttft p50"));
+    }
+}

@@ -22,17 +22,25 @@
 //! - [`session`] — [`ModelSession`]: checkpoint → ready-to-decode model
 //!   (tokenizer rebuilt deterministically from the checkpoint seed), batched
 //!   [`generate`](ModelSession::generate);
+//! - [`engine`] — the continuous-batching [`BatchEngine`]: slot-based
+//!   scheduling of many concurrent requests over **one** shared batched
+//!   decode state, with dynamic join/leave, budgeted prefill/decode
+//!   interleaving, bounded-queue load shedding, and the deterministic
+//!   load generator behind `repro loadgen`;
 //! - [`serve`] — the long-lived JSONL request/response loop behind
-//!   `repro serve`, keeping model + tokenizer + thread pool warm across
-//!   requests.
+//!   `repro serve`, now a thin transport over the engine, keeping model +
+//!   tokenizer + thread pool warm across requests.
 
 #![forbid(unsafe_code)]
 
+pub mod engine;
 pub mod sampler;
 pub mod serve;
 pub mod session;
 pub mod state;
 
+pub use engine::loadgen::{LoadGenConfig, LoadGenReport};
+pub use engine::{BatchEngine, EngineConfig, EngineOutput, EngineRequest, EngineResponse, EngineStats};
 pub use sampler::{SampleMode, Sampler};
 pub use serve::{serve_loop, ServeStats};
 pub use session::{quantize_checkpoint, GenOutcome, GenRequest, ModelSession, QuantizeOutcome};

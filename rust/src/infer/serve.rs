@@ -1,12 +1,21 @@
 //! Warm serve mode: a long-lived JSONL request/response loop over
-//! stdin/stdout.
+//! stdin/stdout, scheduled by the continuous-batching [`BatchEngine`].
 //!
 //! One JSON object per input line, one JSON object per output line; the
 //! model, tokenizer, and thread pool stay loaded across requests (loading —
 //! checkpoint deserialization plus BPE merge reconstruction — is paid once,
-//! not per call). EOF exits cleanly with a session summary on stderr; a
-//! malformed line or a failed generation answers `{"ok": false, "error":
-//! …}` and the loop continues.
+//! not per call). A reader thread feeds lines through a channel so the
+//! scheduler can interleave *reading* with *decoding*: requests arriving
+//! while a batch decodes are admitted into free slots between steps instead
+//! of waiting for the whole batch to finish. Responses complete in decode
+//! order but are emitted in **submission order** (a reorder buffer keyed by
+//! the admission serial), so clients can rely on positional correspondence.
+//! EOF stops admission and drains every in-flight request cleanly, then the
+//! engine's occupancy/percentile summary goes to stderr; a malformed line
+//! or a failed generation answers `{"ok": false, "error": …}` and the loop
+//! continues. When the bounded admission queue overflows, the response is
+//! an explicit rejection (`"rejected": true`, `queue_full` in the error) —
+//! graceful shedding, never a panic.
 //!
 //! Request schema (all fields but `prompt` optional; `seed` may be a plain
 //! number or — for values above 2⁵³, which don't survive a JSON f64
@@ -18,30 +27,55 @@
 //!  "temperature": 1.0, "top_k": 0, "seed": 0, "samples": 1,
 //!  "serial_prefill": false}
 //! ```
-//! Response (`id` echoed verbatim; `ttft_ms` is time-to-first-token —
-//! prompt ingestion through the first sampled token — and `prefill_tok_s`
-//! is prompt tokens per second of the prefill phase alone):
+//! Response (`id` echoed verbatim; `ttft_ms` is submission through the
+//! first sampled token, `queue_ms` the wait for a free slot, and
+//! `occupancy_mean` how many slots were busy on average while this request
+//! decoded):
 //! ```json
 //! {"id": 1, "ok": true, "text": "…", "texts": ["…"], "prompt_tokens": 2,
 //!  "new_tokens": 32, "prefill_ms": 0.8, "ttft_ms": 1.1,
 //!  "prefill_tok_s": 2500.0, "decode_ms": 11.2, "tokens_per_s": 2857.1,
-//!  "state_bytes": 69632}
+//!  "state_bytes": 69632, "queue_ms": 0.1, "decode_tok_s": 2857.1,
+//!  "occupancy_mean": 1.0}
 //! ```
 
+use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, Write};
+use std::sync::mpsc::{self, TryRecvError};
 
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
+use super::engine::{EngineConfig, EngineOutput, EngineStats};
 use super::sampler::SampleMode;
 use super::session::{GenRequest, ModelSession};
 
-/// End-of-loop summary (also logged to stderr by the CLI).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// End-of-loop summary (also logged to stderr by the CLI): line counters
+/// plus the engine's full occupancy/latency statistics.
+#[derive(Debug, Clone, Default)]
 pub struct ServeStats {
+    /// Non-empty input lines seen (valid or not).
     pub requests: usize,
+    /// Requests answered `"ok": false` (malformed, invalid, or failed).
     pub errors: usize,
+    /// The subset of `errors` shed by the bounded admission queue.
+    pub rejected: usize,
+    /// Scheduler-level statistics (occupancy, TTFT/latency percentiles).
+    pub engine: EngineStats,
+}
+
+impl ServeStats {
+    /// Multi-line shutdown report: serve counters + engine percentiles.
+    pub fn summary(&self) -> String {
+        format!(
+            "serve: {} request(s), {} error(s), {} rejected\n{}",
+            self.requests,
+            self.errors,
+            self.rejected,
+            self.engine.summary(),
+        )
+    }
 }
 
 /// Build a [`GenRequest`] from one parsed request object.
@@ -122,79 +156,189 @@ fn error_response(id: Json, err: &anyhow::Error) -> Json {
     ])
 }
 
-/// Drive the request/response loop until EOF. Generic over the streams so
-/// tests can run it against in-memory buffers.
+fn rejected_response(id: Json, err: &anyhow::Error) -> Json {
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(false)),
+        ("rejected", Json::Bool(true)),
+        ("error", Json::str(format!("{err:#}"))),
+    ])
+}
+
+fn ok_response(id: Json, out: &EngineOutput) -> Json {
+    let prefill_tok_s = if out.prefill_s > 0.0 {
+        out.prompt_tokens as f64 / out.prefill_s
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("id", id),
+        ("ok", Json::Bool(true)),
+        ("text", Json::str(out.texts.first().cloned().unwrap_or_default())),
+        ("texts", Json::Arr(out.texts.iter().map(|t| Json::str(t.clone())).collect())),
+        ("prompt_tokens", Json::num(out.prompt_tokens as f64)),
+        ("new_tokens", Json::num(out.new_tokens as f64)),
+        ("prefill_ms", Json::num(out.prefill_s * 1e3)),
+        ("ttft_ms", Json::num(out.ttft_s * 1e3)),
+        ("prefill_tok_s", Json::num(prefill_tok_s)),
+        ("decode_ms", Json::num(out.decode_s * 1e3)),
+        ("tokens_per_s", Json::num(out.decode_tok_s)),
+        ("state_bytes", Json::num(out.state_bytes as f64)),
+        ("queue_ms", Json::num(out.queue_s * 1e3)),
+        ("decode_tok_s", Json::num(out.decode_tok_s)),
+        ("occupancy_mean", Json::num(out.occupancy_mean)),
+    ])
+}
+
+/// Drive the request/response loop until EOF with the default engine
+/// configuration. Generic over the streams so tests can run it against
+/// in-memory buffers.
 // no_panic
 pub fn serve_loop(
     session: &ModelSession,
-    input: impl BufRead,
+    input: impl BufRead + Send,
+    output: impl Write,
+    default_max_new: usize,
+) -> Result<ServeStats> {
+    serve_loop_with(session, EngineConfig::default(), input, output, default_max_new)
+}
+
+/// [`serve_loop`] with explicit scheduler knobs (`--slots`, `--queue`,
+/// `--prefill-budget`).
+///
+/// A scoped reader thread pumps `input` into a channel; the scheduler
+/// thread alternates between ingesting whatever lines have arrived
+/// (blocking only when the engine is idle) and running engine cycles, so
+/// new requests join a busy batch between decode steps.
+// no_panic
+pub fn serve_loop_with(
+    session: &ModelSession,
+    conf: EngineConfig,
+    input: impl BufRead + Send,
     mut output: impl Write,
     default_max_new: usize,
 ) -> Result<ServeStats> {
+    let mut engine = session.engine(conf)?;
     let mut stats = ServeStats::default();
-    for line in input.lines() {
-        let line = line.context("reading request line")?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        stats.requests += 1;
-        let response = match Json::parse(&line).context("malformed JSON request") {
-            Err(e) => {
-                stats.errors += 1;
-                error_response(Json::Null, &e)
+    let tag = session.meta().artifact_tag.clone();
+    std::thread::scope(|scope| -> Result<()> {
+        let (tx, rx) = mpsc::channel::<std::io::Result<String>>();
+        scope.spawn(move || {
+            for line in input.lines() {
+                if tx.send(line).is_err() {
+                    return; // scheduler gone — stop reading
+                }
             }
-            Ok(v) => {
-                // the id is echoed even when field validation fails below —
-                // clients correlate responses to in-flight requests by it
-                let id = v.get("id").cloned().unwrap_or(Json::Null);
-                match build_request(&v, default_max_new)
-                    .and_then(|req| session.generate(&req))
-                {
+        });
+
+        // responses keyed by admission serial; emitted strictly in order
+        let mut next_serial: u64 = 0;
+        let mut emit_next: u64 = 0;
+        let mut ready: BTreeMap<u64, Json> = BTreeMap::new();
+        let mut ids: HashMap<u64, Json> = HashMap::new();
+        let mut eof = false;
+        loop {
+            // ingest: drain whatever lines have arrived; block only when
+            // the engine has nothing else to do
+            while !eof {
+                let line = if engine.is_idle() && ready.is_empty() {
+                    match rx.recv() {
+                        Ok(l) => l,
+                        Err(_) => {
+                            eof = true;
+                            break;
+                        }
+                    }
+                } else {
+                    match rx.try_recv() {
+                        Ok(l) => l,
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            eof = true;
+                            break;
+                        }
+                    }
+                };
+                let line = line.context("reading request line")?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                stats.requests += 1;
+                let serial = next_serial;
+                next_serial += 1;
+                match Json::parse(&line).context("malformed JSON request") {
                     Err(e) => {
                         stats.errors += 1;
-                        error_response(id, &e)
+                        ready.insert(serial, error_response(Json::Null, &e));
                     }
-                    Ok(out) => {
-                        eprintln!(
-                            "serve: {} prompt={}t new={}t prefill {:.1} ms ({:.0} tok/s) \
-                             ttft {:.1} ms decode {:.1} ms ({:.0} tok/s, state {} B)",
-                            session.meta().artifact_tag,
-                            out.prompt_tokens,
-                            out.new_tokens,
-                            out.prefill_s * 1e3,
-                            out.prefill_tok_s(),
-                            out.ttft_s * 1e3,
-                            out.decode_s * 1e3,
-                            out.tokens_per_s(),
-                            out.state_bytes,
-                        );
-                        Json::obj(vec![
-                            ("id", id),
-                            ("ok", Json::Bool(true)),
-                            // in_bounds: samples ≥ 1 is validated above, so
-                            // texts is non-empty
-                            ("text", Json::str(out.texts[0].clone())),
-                            (
-                                "texts",
-                                Json::Arr(
-                                    out.texts.iter().map(|t| Json::str(t.clone())).collect(),
-                                ),
-                            ),
-                            ("prompt_tokens", Json::num(out.prompt_tokens as f64)),
-                            ("new_tokens", Json::num(out.new_tokens as f64)),
-                            ("prefill_ms", Json::num(out.prefill_s * 1e3)),
-                            ("ttft_ms", Json::num(out.ttft_s * 1e3)),
-                            ("prefill_tok_s", Json::num(out.prefill_tok_s())),
-                            ("decode_ms", Json::num(out.decode_s * 1e3)),
-                            ("tokens_per_s", Json::num(out.tokens_per_s())),
-                            ("state_bytes", Json::num(out.state_bytes as f64)),
-                        ])
+                    Ok(v) => {
+                        // the id is echoed even when validation fails —
+                        // clients correlate responses by it
+                        let id = v.get("id").cloned().unwrap_or(Json::Null);
+                        match build_request(&v, default_max_new) {
+                            Err(e) => {
+                                stats.errors += 1;
+                                ready.insert(serial, error_response(id, &e));
+                            }
+                            Ok(req) => {
+                                ids.insert(serial, id);
+                                engine.submit(serial, req);
+                            }
+                        }
                     }
                 }
             }
-        };
-        writeln!(output, "{}", response.to_string())?;
-        output.flush()?;
-    }
+
+            // one scheduler cycle; a systemic error answers everything
+            // in flight instead of killing the warm server
+            if let Err(e) = engine.step() {
+                engine.fail_all(&e);
+            }
+
+            for resp in engine.take_finished() {
+                let id = ids.remove(&resp.serial).unwrap_or(Json::Null);
+                let json = match &resp.result {
+                    Ok(out) => {
+                        eprintln!(
+                            "serve: {tag} prompt={}t new={}t queue {:.1} ms prefill {:.1} ms \
+                             ttft {:.1} ms decode {:.1} ms ({:.0} tok/s, occ {:.2}, state {} B)",
+                            out.prompt_tokens,
+                            out.new_tokens,
+                            out.queue_s * 1e3,
+                            out.prefill_s * 1e3,
+                            out.ttft_s * 1e3,
+                            out.decode_s * 1e3,
+                            out.decode_tok_s,
+                            out.occupancy_mean,
+                            out.state_bytes,
+                        );
+                        ok_response(id, out)
+                    }
+                    Err(e) => {
+                        stats.errors += 1;
+                        if resp.rejected {
+                            stats.rejected += 1;
+                            rejected_response(id, e)
+                        } else {
+                            error_response(id, e)
+                        }
+                    }
+                };
+                ready.insert(resp.serial, json);
+            }
+
+            while let Some(json) = ready.remove(&emit_next) {
+                emit_next += 1;
+                writeln!(output, "{}", json.to_string())?;
+                output.flush()?;
+            }
+
+            if eof && engine.is_idle() && ready.is_empty() {
+                break;
+            }
+        }
+        Ok(())
+    })?;
+    stats.engine = engine.stats().clone();
     Ok(stats)
 }

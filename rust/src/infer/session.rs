@@ -21,6 +21,7 @@ use crate::native::model::{self, AttnKind, LmConfig, Precision, QuantModel};
 use crate::native::pool::ThreadPool;
 use crate::runtime::Tensor;
 
+use super::engine::{BatchEngine, EngineConfig};
 use super::sampler::{SampleMode, Sampler};
 use super::state::DecodeState;
 
@@ -373,6 +374,22 @@ impl ModelSession {
             decode_s,
             state_bytes: st.state_bytes(),
         })
+    }
+
+    /// Build a continuous-batching [`BatchEngine`] over this session's
+    /// parameters (bound once — the engine re-steps without re-validating
+    /// the layout), tokenizer, and pool. The engine borrows the session;
+    /// the serve loop and `repro loadgen` both run on top of this.
+    pub fn engine(&self, conf: EngineConfig) -> Result<BatchEngine<'_>> {
+        let params: Vec<&Tensor>;
+        let bound = match &self.params {
+            SessionParams::F32(p) => {
+                params = p.iter().collect();
+                model::DecodeModel::bind(&self.cfg, &params)?
+            }
+            SessionParams::Quant(qm) => model::DecodeModel::bind_quantized(qm)?,
+        };
+        BatchEngine::new(bound, &self.tokenizer, &self.pool, conf)
     }
 }
 

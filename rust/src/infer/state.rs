@@ -9,9 +9,11 @@
 //!   value columns plus the ones-channel normalizer row the training-time
 //!   scan uses. The footprint is **constant in the decoded length**:
 //!   O(n_seq · H · hd²) elements, full stop.
-//! - **`Softmax`**: the per-token key/value cache, appended each step —
-//!   O(n_seq · H · hd · t) elements after `t` tokens, the linearly-growing
-//!   baseline the paper's memory comparison is made against.
+//! - **`Softmax`**: the per-token key/value cache in fixed per-sequence
+//!   lanes — O(n_seq · H · hd · t) cached elements after `t` tokens, the
+//!   linearly-growing baseline the paper's memory comparison is made
+//!   against. Lanes let the continuous-batching engine evict and re-admit
+//!   one sequence without moving its batch-mates' rows.
 //!
 //! Both live in a [`QuantBuf`] at `cfg.precision`, so the decode state can
 //! be stored in bf16 (2 B/elem) or int8 (1 B/elem + one f32 scale per row)
@@ -38,10 +40,14 @@ pub enum AttnState {
     /// `gamma` each step (1.0 = undecayed `ours`). Int8 storage quantizes
     /// per state row (`hd + 1` elements each).
     Linear { s: QuantBuf, gamma: f32 },
-    /// Growing KV cache: each step appends one `n_seq · n_head · hd` block
-    /// to both `k` and `v` (token-major: block `t` holds every `(seq,
-    /// head)` row of token `t`). Int8 storage quantizes per cached head row
-    /// (`hd` elements each).
+    /// KV cache in per-sequence **lanes**: each sequence owns a fixed
+    /// `n_ctx`-token span so slots can join, leave, and rewind
+    /// independently. Row `(s·n_ctx + t)·n_head + h` holds token `t` of
+    /// sequence `s` for head `h`; the cached length of lane `s` is
+    /// [`DecodeState`]'s `seq_pos[s]` (rows past it are dead, never read).
+    /// The buffer is allocated to the full window up front, so per-token
+    /// lane writes never reallocate. Int8 storage quantizes per cached
+    /// head row (`hd` elements each).
     Softmax { k: QuantBuf, v: QuantBuf },
 }
 
@@ -55,14 +61,14 @@ impl AttnState {
         n_ctx: usize,
     ) -> Self {
         match kind {
-            // Reserve the full-window KV cache up front: the per-token
-            // `append_rows` in `block_step` then never reallocates, so
-            // softmax decode is allocation-free per step too (the cache
-            // *length* still grows linearly — `state_bytes` reports length,
-            // not capacity, and the memory comparison stands).
+            // Allocate the full-window lanes up front: the per-token
+            // `store_rows` in `block_step` then never reallocates, so
+            // softmax decode is allocation-free per step too (the cached
+            // *length* still grows linearly — `state_bytes` reports cached
+            // rows, not capacity, and the memory comparison stands).
             AttnKind::Softmax => AttnState::Softmax {
-                k: QuantBuf::reserved(prec, n_seq * n_head * hd * n_ctx, hd),
-                v: QuantBuf::reserved(prec, n_seq * n_head * hd * n_ctx, hd),
+                k: QuantBuf::zeros(prec, n_seq * n_ctx * n_head * hd, hd),
+                v: QuantBuf::zeros(prec, n_seq * n_ctx * n_head * hd, hd),
             },
             kind => AttnState::Linear {
                 s: QuantBuf::zeros(prec, n_seq * n_head * hd * (hd + 1), hd + 1),
@@ -71,30 +77,36 @@ impl AttnState {
         }
     }
 
-    /// Bytes currently held by this layer's attention state (true stored
-    /// footprint: quantized data plus any per-row scale vectors).
-    fn bytes(&self) -> usize {
-        match self {
-            AttnState::Linear { s, .. } => s.bytes(),
-            AttnState::Softmax { k, v } => k.bytes() + v.bytes(),
-        }
-    }
-
     fn reset(&mut self) {
         match self {
             AttnState::Linear { s, .. } => s.fill_zero(),
+            // lane contents past each sequence's cursor are never read —
+            // zeroing is hygiene, not correctness
             AttnState::Softmax { k, v } => {
-                k.clear();
-                v.clear();
+                k.fill_zero();
+                v.fill_zero();
             }
         }
     }
 }
 
+/// Stored bytes of one cached KV head row at `prec` (data + int8 scale).
+fn kv_row_bytes(prec: Precision, hd: usize) -> usize {
+    match prec {
+        Precision::F32 => hd * 4,
+        Precision::Bf16 => hd * 2,
+        Precision::Int8 => hd + 4,
+    }
+}
+
 /// Incremental decoding state for `n_seq` concurrent sequences: one
-/// [`AttnState`] per layer plus the shared position cursor. All sequences in
-/// the batch advance in lockstep (one token each per
-/// [`logits_step`](crate::native::model::logits_step) call).
+/// [`AttnState`] per layer plus a per-sequence position cursor. Sequences
+/// may advance in lockstep (one token each per
+/// [`logits_step`](crate::native::model::logits_step) call) or — the
+/// continuous-batching serve engine's mode — independently, with an active
+/// mask selecting which rows a step touches and
+/// [`clear_seq`](Self::clear_seq)/[`adopt_seq`](Self::adopt_seq) recycling
+/// one slot without disturbing its batch-mates.
 #[derive(Debug, Clone)]
 pub struct DecodeState {
     layers: Vec<AttnState>,
@@ -104,7 +116,7 @@ pub struct DecodeState {
     n_ctx: usize,
     attn: AttnKind,
     precision: Precision,
-    pos: usize,
+    seq_pos: Vec<usize>,
 }
 
 impl DecodeState {
@@ -127,7 +139,7 @@ impl DecodeState {
             n_ctx: cfg.n_ctx,
             attn: cfg.attn,
             precision: cfg.precision,
-            pos: 0,
+            seq_pos: vec![0; n_seq],
         })
     }
 
@@ -169,14 +181,23 @@ impl DecodeState {
         self.n_seq
     }
 
-    /// Tokens consumed so far (the position the *next* token will occupy).
+    /// Tokens consumed so far by the furthest-ahead sequence (the position
+    /// its *next* token will occupy). Equal to every sequence's cursor under
+    /// the lockstep API; the masked engine path reads
+    /// [`seq_positions`](Self::seq_positions) instead.
     pub fn pos(&self) -> usize {
-        self.pos
+        self.seq_pos.iter().copied().max().unwrap_or(0)
     }
 
-    /// Positions still available before the context window is exhausted.
+    /// Per-sequence position cursors (tokens consumed by each sequence).
+    pub fn seq_positions(&self) -> &[usize] {
+        &self.seq_pos
+    }
+
+    /// Positions still available before the context window is exhausted
+    /// for the furthest-ahead sequence.
     pub fn remaining(&self) -> usize {
-        self.n_ctx.saturating_sub(self.pos)
+        self.n_ctx.saturating_sub(self.pos())
     }
 
     /// Storage precision the attention states were built with.
@@ -190,23 +211,68 @@ impl DecodeState {
         &mut self.layers[layer]
     }
 
-    /// Advance the position cursor after one successful token step.
+    /// Advance every position cursor after one successful lockstep token.
     pub(crate) fn advance(&mut self) {
-        self.pos += 1;
+        for p in &mut self.seq_pos {
+            *p += 1;
+        }
     }
 
-    /// Advance the position cursor by a whole prompt window — the chunked
+    /// Advance every position cursor by a whole prompt window — the chunked
     /// prefill's single jump after consuming `n` tokens in one pass.
     pub(crate) fn advance_by(&mut self, n: usize) {
-        self.pos += n;
+        for p in &mut self.seq_pos {
+            *p += n;
+        }
+    }
+
+    /// Advance only the cursors of active sequences — the masked decode
+    /// step's bookkeeping (`active.len() == n_seq`, checked by the caller).
+    pub(crate) fn advance_masked(&mut self, active: &[bool]) {
+        for (p, &a) in self.seq_pos.iter_mut().zip(active) {
+            if a {
+                *p += 1;
+            }
+        }
     }
 
     /// Total bytes held by the attention states across all layers — the
     /// decode-memory figure the bench compares across AttnKinds and
     /// precisions: constant for the linear variants, growing linearly in
-    /// `pos` for softmax, and shrunk by bf16/int8 storage.
+    /// the cached positions for softmax, and shrunk by bf16/int8 storage.
+    /// Softmax lanes are accounted by *cached rows* (each sequence's
+    /// cursor), not allocated capacity — the same figure the append-based
+    /// cache reported, so the memory comparison is unchanged.
     pub fn state_bytes(&self) -> usize {
-        self.layers.iter().map(AttnState::bytes).sum()
+        let cached: usize = self.seq_pos.iter().sum();
+        let kv_bytes = 2 * cached * self.n_head * kv_row_bytes(self.precision, self.head_dim);
+        self.layers
+            .iter()
+            .map(|l| match l {
+                AttnState::Linear { s, .. } => s.bytes(),
+                AttnState::Softmax { .. } => kv_bytes,
+            })
+            .sum()
+    }
+
+    /// Attention-state bytes attributable to **one** sequence lane — what
+    /// the batch engine reports per request and feeds (summed over occupied
+    /// slots) into the per-step traffic estimate. Linear lanes carry an
+    /// equal share of the constant recurrent state; a softmax lane is its
+    /// own cached K/V rows, so the figure grows with that sequence's
+    /// cursor. Out-of-range indices report 0.
+    pub fn seq_state_bytes(&self, i: usize) -> usize {
+        let Some(&pos) = self.seq_pos.get(i) else {
+            return 0;
+        };
+        let kv_bytes = 2 * pos * self.n_head * kv_row_bytes(self.precision, self.head_dim);
+        self.layers
+            .iter()
+            .map(|l| match l {
+                AttnState::Linear { s, .. } => s.bytes() / self.n_seq,
+                AttnState::Softmax { .. } => kv_bytes,
+            })
+            .sum()
     }
 
     /// Rewind to position 0, dropping all accumulated context (buffers are
@@ -215,7 +281,88 @@ impl DecodeState {
         for l in &mut self.layers {
             l.reset();
         }
-        self.pos = 0;
+        self.seq_pos.fill(0);
+    }
+
+    /// Rewind **one** sequence to position 0 without reallocating or
+    /// touching its batch-mates: the slot-eviction reset of the
+    /// continuous-batching engine. Zeroes the sequence's recurrent `S`
+    /// blocks (they accumulate additively, so stale contributions must go)
+    /// and truncates its KV-cache lane by cursor alone (rows past the
+    /// cursor are never read). Allocation-free — `tests/alloc_gate.rs`
+    /// pins a warm admit→decode→evict→admit cycle at zero events.
+    pub fn clear_seq(&mut self, i: usize) -> Result<()> {
+        if i >= self.n_seq {
+            bail!("clear_seq: sequence {i} out of range [0, {})", self.n_seq);
+        }
+        let (nh, hd) = (self.n_head, self.head_dim);
+        for l in &mut self.layers {
+            if let AttnState::Linear { s, .. } = l {
+                s.zero_rows(i * nh * hd, nh * hd, hd + 1);
+            }
+        }
+        // in_bounds: i < n_seq == seq_pos.len() is checked above
+        self.seq_pos[i] = 0;
+        Ok(())
+    }
+
+    /// Adopt a fully-prefilled single-sequence staging state into slot
+    /// `slot`: a raw precision-exact copy of every layer's per-sequence
+    /// span (recurrent `S` block, or the first `seq_pos` cached KV lane
+    /// rows), so decoding from the slot is bit-identical to decoding from
+    /// the staging state. The admission half of slot recycling;
+    /// allocation-free on success.
+    pub fn adopt_seq(&mut self, slot: usize, src: &DecodeState) -> Result<()> {
+        if slot >= self.n_seq {
+            bail!("adopt_seq: slot {slot} out of range [0, {})", self.n_seq);
+        }
+        if src.n_seq != 1 {
+            bail!("adopt_seq: staging state must hold exactly 1 sequence, has {}", src.n_seq);
+        }
+        if src.layers.len() != self.layers.len()
+            || src.n_head != self.n_head
+            || src.head_dim != self.head_dim
+            || src.n_ctx != self.n_ctx
+            || src.attn != self.attn
+            || src.precision != self.precision
+        {
+            bail!(
+                "adopt_seq: staging state architecture ({} layers × {} heads, hd {}, n_ctx {}, \
+                 {:?}, {}) does not match the batch state ({} layers × {} heads, hd {}, n_ctx \
+                 {}, {:?}, {})",
+                src.layers.len(),
+                src.n_head,
+                src.head_dim,
+                src.n_ctx,
+                src.attn,
+                src.precision,
+                self.layers.len(),
+                self.n_head,
+                self.head_dim,
+                self.n_ctx,
+                self.attn,
+                self.precision,
+            );
+        }
+        let (nh, hd, n_ctx) = (self.n_head, self.head_dim, self.n_ctx);
+        // in_bounds: src.n_seq == 1 is checked above
+        let src_pos = src.seq_pos[0];
+        for (dst, s) in self.layers.iter_mut().zip(&src.layers) {
+            match (dst, s) {
+                (AttnState::Linear { s: d, .. }, AttnState::Linear { s: sr, .. }) => {
+                    d.copy_rows_from(slot * nh * hd, sr, 0, nh * hd, hd + 1)?;
+                }
+                (AttnState::Softmax { k, v }, AttnState::Softmax { k: sk, v: sv }) => {
+                    k.copy_rows_from(slot * n_ctx * nh, sk, 0, src_pos * nh, hd)?;
+                    v.copy_rows_from(slot * n_ctx * nh, sv, 0, src_pos * nh, hd)?;
+                }
+                // the architecture check above makes mixed kinds unreachable
+                _ => bail!("adopt_seq: mismatched per-layer attention kinds"),
+            }
+        }
+        // in_bounds: slot < n_seq == seq_pos.len() is checked above
+        self.seq_pos[slot] = src_pos;
+        Ok(())
     }
 }
 
@@ -296,14 +443,124 @@ mod tests {
     fn reset_rewinds_and_clears() {
         let cfg = LmConfig::tiny(AttnKind::Softmax);
         let mut st = DecodeState::new(&cfg, 1).unwrap();
-        if let AttnState::Softmax { k, v } = st.layer_mut(0) {
-            k.append_rows(&[1.0; 8]);
-            v.append_rows(&[2.0; 8]);
-        }
         st.advance();
         assert!(st.state_bytes() > 0);
         st.reset();
         assert_eq!(st.pos(), 0);
         assert_eq!(st.state_bytes(), 0);
+    }
+
+    /// Softmax accounting is per cached row at the storage precision — the
+    /// exact figure the append-based cache reported before the lane layout.
+    #[test]
+    fn softmax_state_bytes_grow_per_sequence() {
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut cfg = LmConfig::tiny(AttnKind::Softmax);
+            cfg.precision = prec;
+            let hd = cfg.head_dim();
+            let row_bytes = match prec {
+                Precision::F32 => hd * 4,
+                Precision::Bf16 => hd * 2,
+                Precision::Int8 => hd + 4,
+            };
+            let mut st = DecodeState::new(&cfg, 2).unwrap();
+            st.advance(); // both sequences cache one token
+            assert_eq!(st.state_bytes(), cfg.n_layer * 2 * 2 * cfg.n_head * row_bytes);
+            st.advance_masked(&[true, false]); // only sequence 0 advances
+            assert_eq!(st.state_bytes(), cfg.n_layer * 2 * 3 * cfg.n_head * row_bytes);
+            assert_eq!(st.seq_positions(), &[2, 1]);
+            assert_eq!(st.pos(), 2);
+            // per-lane accounting splits the same total by each cursor
+            assert_eq!(st.seq_state_bytes(0), cfg.n_layer * 2 * 2 * cfg.n_head * row_bytes);
+            assert_eq!(st.seq_state_bytes(1), cfg.n_layer * 2 * cfg.n_head * row_bytes);
+            assert_eq!(st.seq_state_bytes(0) + st.seq_state_bytes(1), st.state_bytes());
+            assert_eq!(st.seq_state_bytes(2), 0);
+        }
+    }
+
+    /// Linear lanes hold an equal share of the constant recurrent state,
+    /// independent of the cursor.
+    #[test]
+    fn linear_seq_state_bytes_are_an_equal_constant_share() {
+        let cfg = LmConfig::tiny(AttnKind::Ours);
+        let mut st = DecodeState::new(&cfg, 2).unwrap();
+        let share = st.seq_state_bytes(0);
+        assert!(share > 0);
+        assert_eq!(share * 2, st.state_bytes());
+        st.advance_masked(&[true, false]);
+        assert_eq!(st.seq_state_bytes(0), share);
+        assert_eq!(st.seq_state_bytes(1), share);
+        assert_eq!(st.seq_state_bytes(9), 0);
+    }
+
+    #[test]
+    fn clear_seq_rewinds_one_slot_only() {
+        for attn in [AttnKind::Ours, AttnKind::Softmax] {
+            let cfg = LmConfig::tiny(attn);
+            let mut st = DecodeState::new(&cfg, 3).unwrap();
+            st.advance();
+            st.advance();
+            st.clear_seq(1).unwrap();
+            assert_eq!(st.seq_positions(), &[2, 0, 2]);
+            assert!(st.clear_seq(3).is_err());
+        }
+    }
+
+    /// Adopting a staging sequence copies its exact stored rows into the
+    /// slot's span and nothing else.
+    #[test]
+    fn adopt_seq_copies_the_staging_state_bit_for_bit() {
+        for attn in [AttnKind::Ours, AttnKind::Softmax] {
+            for prec in [Precision::F32, Precision::Int8] {
+                let mut cfg = LmConfig::tiny(attn);
+                cfg.precision = prec;
+                let mut staging = DecodeState::new(&cfg, 1).unwrap();
+                // fill the staging state's layer 0 with recognizable rows
+                // (two tokens' worth for the KV lanes)
+                let (nh, hd) = (cfg.n_head, cfg.head_dim());
+                match staging.layer_mut(0) {
+                    AttnState::Linear { s, .. } => {
+                        let vals: Vec<f32> =
+                            (0..nh * hd * (hd + 1)).map(|i| (i as f32 * 0.11).sin()).collect();
+                        s.store_rows(0, hd + 1, &vals);
+                    }
+                    AttnState::Softmax { k, v } => {
+                        let vals: Vec<f32> =
+                            (0..2 * nh * hd).map(|i| (i as f32 * 0.07).cos()).collect();
+                        k.store_rows(0, hd, &vals);
+                        v.store_rows(0, hd, &vals);
+                    }
+                }
+                staging.advance();
+                staging.advance();
+
+                let mut batch = DecodeState::new(&cfg, 3).unwrap();
+                batch.adopt_seq(2, &staging).unwrap();
+                assert_eq!(batch.seq_positions(), &[0, 0, 2]);
+
+                // slot 2's layer-0 span decodes to exactly the staging rows
+                let probe = |st: &mut DecodeState, seq: usize| -> Vec<f32> {
+                    match st.layer_mut(0) {
+                        AttnState::Linear { s, .. } => {
+                            let mut all = vec![0.0f32; s.len()];
+                            s.dequantize_into(&mut all);
+                            all[seq * nh * hd * (hd + 1)..][..nh * hd * (hd + 1)].to_vec()
+                        }
+                        AttnState::Softmax { k, .. } => {
+                            let mut all = vec![0.0f32; k.len()];
+                            k.dequantize_into(&mut all);
+                            all[seq * cfg.n_ctx * nh * hd..][..2 * nh * hd].to_vec()
+                        }
+                    }
+                };
+                let want = probe(&mut staging, 0);
+                let got = probe(&mut batch, 2);
+                assert_eq!(want, got, "{attn:?}/{prec}");
+
+                // mismatched staging shapes are rejected
+                let wide = DecodeState::new(&cfg, 2).unwrap();
+                assert!(batch.adopt_seq(0, &wide).is_err());
+            }
+        }
     }
 }

@@ -49,6 +49,9 @@ SUBCOMMANDS
                  [--prefill-attns ours,gated,softmax]
                  [--prefill-precisions f32] [--prefill-reps 3]
                  [--prefill-chunk 0]  (0 = RUST_PALLAS_CHUNK)
+                 [--serve-requests 8] [--serve-slots 4]
+                 [--serve-presets tiny] [--serve-attns ours,softmax]
+                 [--serve-precisions f32]
                  measures the parallel/tiled kernels (RUST_PALLAS_THREADS)
                  against the scalar single-thread reference, per-step LM
                  training cost/loss for each (preset, attn) pair through
@@ -58,8 +61,10 @@ SUBCOMMANDS
                  state/param bytes, and quantized-vs-f32 quality drift per
                  precision; 0 disables), the prefill section (chunked vs
                  serial prompt ingestion with TTFT per prompt length; empty
-                 --prefill-lens disables), and writes the machine-readable
-                 speedup artifact
+                 --prefill-lens disables), the serve section (continuous-
+                 batching engine under a deterministic burst load with a
+                 traffic-model fit; --serve-requests 0 disables), and writes
+                 the machine-readable speedup artifact
   bench-traffic  [--csv out.csv]
   eval-tasks     --ckpt runs/lm_tiny_ours/final.ckpt [--count 64] [--seed 0]
   generate       --ckpt runs/lm_tiny_ours/final.ckpt [--prompt \"the \"]
@@ -87,10 +92,21 @@ SUBCOMMANDS
                  optimizer moments dropped), probes per-token logit drift
                  against the f32 source, and fails if it exceeds the bound
   serve          --ckpt runs/lm_tiny_ours/final.ckpt [--max-new 64]
-                 long-lived JSONL loop: one request object per stdin line
-                 ({\"prompt\": ..., \"max_new\": ..., \"mode\": ...}), one
-                 response per stdout line; model/tokenizer/pool stay warm
-                 across requests; EOF exits cleanly
+                 [--slots 4] [--queue 32] [--prefill-budget 64]
+                 long-lived JSONL loop over the continuous-batching engine:
+                 one request object per stdin line ({\"prompt\": ...,
+                 \"max_new\": ..., \"mode\": ...}), one response per stdout
+                 line (emitted in submission order); concurrent requests
+                 share the decode batch, overflow past --queue is shed with
+                 an explicit rejection; EOF drains in-flight work cleanly
+  loadgen        --ckpt runs/lm_tiny_ours/final.ckpt [--requests 8]
+                 [--pattern burst|poisson] [--rate 50] [--burst 8]
+                 [--gap-s 1.0] [--seed 0] [--prompt-len 24] [--max-new 16]
+                 [--slots 4] [--queue 32] [--prefill-budget 64]
+                 deterministic in-process load run: replays a seeded
+                 arrival trace against the engine, prints occupancy and
+                 latency percentiles, and fits the traffic model's
+                 overhead/bandwidth constants to the measured steps
   report         [--runs runs]
   inspect        [--filter substr]
 ";
@@ -107,6 +123,7 @@ fn main() -> Result<()> {
         Some("prefill-check") => cmd_prefill_check(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("report") => cmd_report(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("run-artifact") => cmd_run_artifact(&args),
@@ -220,6 +237,11 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     let prefill_precisions = split_list(args.get_or("prefill-precisions", "f32"));
     let prefill_reps = args.get_usize("prefill-reps", 3)?;
     let prefill_chunk = args.get_usize("prefill-chunk", 0)?; // 0 = RUST_PALLAS_CHUNK
+    let serve_requests = args.get_usize("serve-requests", 8)?; // 0 disables
+    let serve_slots = args.get_usize("serve-slots", 4)?;
+    let serve_presets = split_list(args.get_or("serve-presets", "tiny"));
+    let serve_attns = split_list(args.get_or("serve-attns", "ours,softmax"));
+    let serve_precisions = split_list(args.get_or("serve-precisions", "f32"));
 
     let threads = ThreadPool::env_threads();
     let par_engine = Engine::with_backend(Box::new(NativeBackend::new()))?;
@@ -325,6 +347,30 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
         }
     }
 
+    // serve section: the continuous-batching engine under a deterministic
+    // burst load run — occupancy, request percentiles, and the traffic-model
+    // constants fitted to measured per-step latencies (0 requests disables)
+    let mut serve_points = Vec::new();
+    if serve_requests > 0 {
+        for preset in &serve_presets {
+            for attn in &serve_attns {
+                for precision in &serve_precisions {
+                    eprintln!(
+                        "bench-native: serve {preset}/{attn}/{precision} \
+                         ({serve_requests} requests, {serve_slots} slots) …"
+                    );
+                    serve_points.push(repro::bench::lm::measure_serve(
+                        preset,
+                        attn,
+                        precision,
+                        serve_requests,
+                        serve_slots,
+                    )?);
+                }
+            }
+        }
+    }
+
     println!("{}", rpt::bench_native_markdown(&parallel, &scalar));
     if !lm_points.is_empty() {
         println!("{}", rpt::bench_lm_markdown(&lm_points));
@@ -338,6 +384,9 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
     if !prefill_points.is_empty() {
         println!("{}", rpt::bench_prefill_markdown(&prefill_points));
     }
+    if !serve_points.is_empty() {
+        println!("{}", rpt::bench_serve_markdown(&serve_points));
+    }
     let json = rpt::bench_native_json(
         &parallel,
         &scalar,
@@ -345,6 +394,7 @@ fn cmd_bench_native(args: &Args) -> Result<()> {
         &opt_points,
         &decode_points,
         &prefill_points,
+        &serve_points,
         threads,
         repro::native::ours_chunk(),
     );
@@ -642,22 +692,73 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Engine knobs shared by `serve` and `loadgen`.
+fn engine_config(args: &Args) -> Result<repro::infer::EngineConfig> {
+    Ok(repro::infer::EngineConfig {
+        slots: args.get_usize("slots", 4)?,
+        queue: args.get_usize("queue", 32)?,
+        prefill_budget: args.get_usize("prefill-budget", 64)?,
+    })
+}
+
 /// Warm serve mode: keep the loaded model, tokenizer, and thread pool
-/// resident, answering JSONL requests on stdin until EOF.
+/// resident, answering JSONL requests on stdin until EOF through the
+/// continuous-batching engine.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use repro::infer::{serve_loop, ModelSession};
+    use repro::infer::{serve::serve_loop_with, ModelSession};
 
     let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt is required"))?;
     let default_max_new = args.get_usize("max-new", 64)?;
+    let conf = engine_config(args)?;
     let session = ModelSession::load(ckpt)?;
-    eprintln!("serving {} (JSONL on stdin, EOF to exit)", session.summary());
+    eprintln!(
+        "serving {} (JSONL on stdin, EOF to exit; {} slot(s), queue {}, prefill budget {})",
+        session.summary(),
+        conf.slots,
+        conf.queue,
+        conf.prefill_budget
+    );
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
-    let stats = serve_loop(&session, stdin.lock(), stdout.lock(), default_max_new)?;
-    eprintln!(
-        "serve: exiting after {} request(s), {} error(s)",
-        stats.requests, stats.errors
-    );
+    let stats = serve_loop_with(&session, conf, stdin.lock(), stdout.lock(), default_max_new)?;
+    eprintln!("{}", stats.summary());
+    Ok(())
+}
+
+/// Deterministic load run: replay a seeded arrival trace against the
+/// engine and fit the traffic model's serve-side constants.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use repro::infer::{engine::loadgen, LoadGenConfig, ModelSession};
+    use repro::simulator::ArrivalPattern;
+
+    let ckpt = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt is required"))?;
+    let parse_f64 = |name: &str, default: f64| -> Result<f64> {
+        match args.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{name} must be a number, got {s:?}")),
+        }
+    };
+    let pattern = match args.get_or("pattern", "burst") {
+        "poisson" => ArrivalPattern::Poisson { rate_hz: parse_f64("rate", 50.0)? },
+        "burst" => ArrivalPattern::Burst {
+            burst: args.get_usize("burst", 8)?,
+            gap_s: parse_f64("gap-s", 1.0)?,
+        },
+        other => bail!("--pattern must be poisson or burst, got {other:?}"),
+    };
+    let conf = LoadGenConfig {
+        n_requests: args.get_usize("requests", 8)?,
+        pattern,
+        seed: args.get_u64("seed", 0)?,
+        prompt_len: args.get_usize("prompt-len", 24)?,
+        max_new: args.get_usize("max-new", 16)?,
+        cycles_per_s: parse_f64("cycles-per-s", 100.0)?,
+    };
+    let session = ModelSession::load(ckpt)?;
+    eprintln!("loadgen over {}", session.summary());
+    let mut engine = session.engine(engine_config(args)?)?;
+    let report = loadgen::run(&mut engine, &conf)?;
+    println!("{}", report.summary());
     Ok(())
 }
 

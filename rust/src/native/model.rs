@@ -419,7 +419,9 @@ struct P<'a> {
 }
 
 impl<'a> P<'a> {
-    fn bind(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
+    // the outer slice only needs to live for the bind itself — the views
+    // borrow the tensors, so callers may pass a temporary Vec of refs
+    fn bind(cfg: &LmConfig, params: &[&'a Tensor]) -> Result<Self> {
         let shapes = cfg.param_shapes();
         if params.len() < shapes.len() {
             bail!("expected {} parameter arrays, got {}", shapes.len(), params.len());
@@ -464,7 +466,7 @@ struct DecodeP<'a> {
 impl<'a> DecodeP<'a> {
     /// All-f32 views over full-precision tensors — identical binding (and
     /// identical downstream arithmetic) to the pre-quantization decode path.
-    fn from_f32(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
+    fn from_f32(cfg: &LmConfig, params: &[&'a Tensor]) -> Result<Self> {
         let p = P::bind(cfg, params)?;
         Ok(Self { arrs: p.arrs.iter().map(|a| WView::F32(a)).collect(), idx: p.idx })
     }
@@ -1192,10 +1194,11 @@ pub fn prefill_step(
 /// Every intermediate `block_step`/`step` once allocated fresh per token
 /// now lives here and is resized once, then reused: after the first token
 /// of a session the steady-state decode performs **zero** allocations on
-/// the stepping thread for the linear attention variants (the softmax
-/// variant additionally appends to the KV cache, which
-/// [`AttnState`] pre-reserves to `n_ctx`). `tests/alloc_gate.rs` pins this
-/// with the counting global allocator; the budget there is the contract.
+/// the stepping thread for every attention variant (the softmax variant
+/// stores its K/V rows into per-sequence cache lanes that [`AttnState`]
+/// allocates up-front to the full `n_ctx` window). `tests/alloc_gate.rs`
+/// pins this with the counting global allocator; the budget there is the
+/// contract.
 ///
 /// Buffers are plain `Vec<f32>`s sized by [`DecodeScratch::ensure`] at the
 /// top of each step, so one scratch can serve configs of different sizes
@@ -1228,6 +1231,11 @@ pub struct DecodeScratch {
     /// f32 staging for quantized linear-attention state: one `hd·(hd+1)`
     /// window per (seq, head) task, dequantized in, requantized out.
     sdeq: Vec<f32>,
+    /// Per-sequence position cursors snapshotted from the [`DecodeState`]
+    /// at the top of a step (sequences in a continuous batch sit at
+    /// different depths); taken out of the struct alongside `h` during the
+    /// step so `block_step` can read it while borrowing the rest mutably.
+    spos: Vec<usize>,
     xf: Vec<f32>,
     logits: Vec<f32>,
 }
@@ -1264,6 +1272,7 @@ impl DecodeScratch {
         self.gact.resize(ns * f, 0.0);
         self.scores.resize(n_sh * cfg.n_ctx, 0.0);
         self.sdeq.resize(n_sh * hd * (hd + 1), 0.0);
+        self.spos.resize(ns, 0);
         self.xf.resize(ns * d, 0.0);
         self.logits.resize(ns * cfg.vocab, 0.0);
     }
@@ -1304,9 +1313,9 @@ pub struct PrefillScratch {
     /// `hd·(hd+1)`): dequantized in, scanned by the carry kernel, then
     /// requantized back in one [`QuantBuf::store_f32`] pass.
     s0: Vec<f32>,
-    /// Token-major staging for the softmax KV cache: the head-major
-    /// projections transposed into the cache's `(token, seq·head)` row
-    /// order so the whole window appends in one `append_rows` call.
+    /// Staging for the softmax KV cache: the head-major projections
+    /// transposed into each sequence lane's `(token, head)` row order so
+    /// the whole window stores in one `store_rows` call per sequence.
     kstage: Vec<f32>,
     vstage: Vec<f32>,
     /// Softmax score rows, one `n_ctx` window per in-flight (query, head)
@@ -1364,8 +1373,17 @@ pub struct DecodeModel<'a> {
 }
 
 impl<'a> DecodeModel<'a> {
-    pub fn bind(cfg: &LmConfig, params: &'a [&'a Tensor]) -> Result<Self> {
+    /// Bind full-precision tensors. The slice of refs itself may be a
+    /// temporary — the model borrows the tensors, not the slice — so a
+    /// session can bind from a freshly-collected `Vec<&Tensor>`.
+    pub fn bind(cfg: &LmConfig, params: &[&'a Tensor]) -> Result<Self> {
         Ok(Self { cfg: *cfg, p: DecodeP::from_f32(cfg, params)? })
+    }
+
+    /// The architecture this model was bound for (including the storage
+    /// precision its [`DecodeState`]s must match).
+    pub fn cfg(&self) -> &LmConfig {
+        &self.cfg
     }
 
     /// Bind a quantized parameter set. The session config comes from the
@@ -1412,7 +1430,28 @@ impl<'a> DecodeModel<'a> {
         pool: &ThreadPool,
         sc: &'s mut DecodeScratch,
     ) -> Result<&'s [f32]> {
-        self.step_with(tokens, st, pool, sc, true)?
+        self.step_with(tokens, st, pool, sc, true, None)?
+            .ok_or_else(|| anyhow::anyhow!("internal: step_with(want_logits) returned no logits"))
+    }
+
+    /// One masked incremental step for the continuous-batching engine: rows
+    /// with `active[r] == false` are carried through the batched arithmetic
+    /// as zero lanes — their per-layer state is not written, their position
+    /// cursor does not advance, and their logits rows are meaningless
+    /// (callers must not sample them; their token ids are ignored). Active
+    /// rows produce logits bit-identical to a lockstep step over only those
+    /// rows, because every decode op is row-independent — the engine's
+    /// batch-parity tests pin this per `AttnKind`.
+    // no_panic
+    pub fn decode_step_masked<'s>(
+        &self,
+        tokens: &[i32],
+        active: &[bool],
+        st: &mut DecodeState,
+        pool: &ThreadPool,
+        sc: &'s mut DecodeScratch,
+    ) -> Result<&'s [f32]> {
+        self.step_with(tokens, st, pool, sc, true, Some(active))?
             .ok_or_else(|| anyhow::anyhow!("internal: step_with(want_logits) returned no logits"))
     }
 
@@ -1424,7 +1463,7 @@ impl<'a> DecodeModel<'a> {
         pool: &ThreadPool,
         sc: &mut DecodeScratch,
     ) -> Result<()> {
-        self.step_with(tokens, st, pool, sc, false).map(|_| ())
+        self.step_with(tokens, st, pool, sc, false, None).map(|_| ())
     }
 
     /// Chunked prompt prefill: consume `l` tokens per sequence (`tokens` is
@@ -1479,6 +1518,14 @@ impl<'a> DecodeModel<'a> {
         }
         let l = tokens.len() / ns;
         let pos = st.pos();
+        if st.seq_positions().iter().any(|&p| p != pos) {
+            bail!(
+                "prefill_chunked wants lockstep sequences (all at one position), \
+                 got cursors {:?} — prefill each sequence separately (the batch \
+                 engine stages prompts through a one-sequence state)",
+                st.seq_positions()
+            );
+        }
         let (d, v) = (cfg.d_model, cfg.vocab);
         if pos + l > cfg.n_ctx {
             bail!(
@@ -1518,9 +1565,14 @@ impl<'a> DecodeModel<'a> {
 
     /// Shared one-token step: embed, run every block through the decode
     /// state, then (optionally) unembed. All intermediates live in `sc`.
+    /// With an `active` mask, sequences are stepped at their own position
+    /// cursors (a continuous batch is not lockstep) and masked rows are
+    /// zeroed through the row-independent arithmetic without touching
+    /// their state.
     // no_panic
-    // bounds: token ids are vocab-checked at entry; row/feature spans follow
-    // the scratch shapes sized by DecodeScratch::new
+    // bounds: token ids are vocab-checked at entry; the mask length is
+    // checked against ns at entry; row/feature spans follow the scratch
+    // shapes sized by DecodeScratch::new
     fn step_with<'s>(
         &self,
         tokens: &[i32],
@@ -1528,6 +1580,7 @@ impl<'a> DecodeModel<'a> {
         pool: &ThreadPool,
         sc: &'s mut DecodeScratch,
         compute_logits: bool,
+        active: Option<&[bool]>,
     ) -> Result<Option<&'s [f32]>> {
         let (cfg, p) = (&self.cfg, &self.p);
         st.check(cfg)?;
@@ -1535,38 +1588,63 @@ impl<'a> DecodeModel<'a> {
         if tokens.len() != ns {
             bail!("logits_step wants {} token ids (one per sequence), got {}", ns, tokens.len());
         }
-        let pos = st.pos();
-        let (d, v) = (cfg.d_model, cfg.vocab);
-        if pos >= cfg.n_ctx {
-            bail!(
-                "context window exhausted: position {pos} ≥ n_ctx {} — reset the DecodeState",
-                cfg.n_ctx
-            );
+        if let Some(a) = active {
+            if a.len() != ns {
+                bail!("active mask wants {} flags (one per sequence), got {}", ns, a.len());
+            }
+            if !a.iter().any(|&x| x) {
+                bail!("active mask selects no sequences");
+            }
         }
+        let (d, v) = (cfg.d_model, cfg.vocab);
         sc.ensure(cfg, ns);
+        sc.spos.copy_from_slice(st.seq_positions());
+        for (r, &pos) in sc.spos.iter().enumerate() {
+            if active.map_or(true, |a| a[r]) && pos >= cfg.n_ctx {
+                bail!(
+                    "context window exhausted: sequence {r} at position {pos} ≥ n_ctx {} — \
+                     reset (or clear) the DecodeState",
+                    cfg.n_ctx
+                );
+            }
+        }
 
-        // h = wte[tok] + wpe[pos]. The residual buffer is moved out of the
-        // scratch for the duration of the step so `block_step` can mutate it
-        // alongside the other scratch fields (put back before returning).
+        // h = wte[tok] + wpe[spos[r]]. The residual and position buffers are
+        // moved out of the scratch for the duration of the step so
+        // `block_step` can use them alongside the other scratch fields
+        // (put back before returning).
         let mut h = std::mem::take(&mut sc.h);
+        let spos = std::mem::take(&mut sc.spos);
         let wte = p.at(p.idx.wte);
-        let wpe = &p.at(p.idx.wpe)[pos * d..][..d];
+        let wpe = p.at(p.idx.wpe);
         for (r, &tok) in tokens.iter().enumerate() {
+            let hr = &mut h[r * d..][..d];
+            if !active.map_or(true, |a| a[r]) {
+                // masked lane: zero input keeps every downstream row finite
+                // (LN has an epsilon) without touching this row's state
+                hr.fill(0.0);
+                continue;
+            }
             if tok < 0 || tok as usize >= v {
                 sc.h = h;
+                sc.spos = spos;
                 bail!("token id {tok} out of range [0, {v})");
             }
             let te = &wte[tok as usize * d..][..d];
-            let hr = &mut h[r * d..][..d];
-            for ((hx, a), b) in hr.iter_mut().zip(te).zip(wpe) {
+            let pe = &wpe[spos[r] * d..][..d];
+            for ((hx, a), b) in hr.iter_mut().zip(te).zip(pe) {
                 *hx = a + b;
             }
         }
 
         for (li, bi) in p.idx.blocks.iter().enumerate() {
-            block_step(cfg, p, bi, &mut h, st.layer_mut(li), ns, pos, pool, sc);
+            block_step(cfg, p, bi, &mut h, st.layer_mut(li), ns, &spos, active, pool, sc);
         }
-        st.advance();
+        match active {
+            None => st.advance(),
+            Some(a) => st.advance_masked(a),
+        }
+        sc.spos = spos;
 
         if !compute_logits {
             sc.h = h;
@@ -1588,15 +1666,19 @@ impl<'a> DecodeModel<'a> {
 
 /// One block of the incremental forward: pre-norm attention step (through
 /// the layer's [`AttnState`]) + residual, then the pre-norm MLP + residual.
+/// `spos[s]` is sequence `s`'s position cursor (a continuous batch is not
+/// lockstep); rows whose `active` flag is false flow through the batched
+/// GEMM/LN arithmetic as zero lanes but never read or write their state.
 ///
 /// Allocation-free on the stepping thread: every intermediate lives in the
-/// caller's [`DecodeScratch`] (the softmax KV append draws on capacity
-/// pre-reserved by [`AttnState`]). `tests/alloc_gate.rs` gates this; keep
-/// new temporaries in the scratch.
+/// caller's [`DecodeScratch`] (the softmax K/V rows are stored into
+/// per-sequence cache lanes [`AttnState`] allocates up-front).
+/// `tests/alloc_gate.rs` gates this; keep new temporaries in the scratch.
 // deny_alloc
 // no_panic
 // bounds: per-head and per-row spans follow the scratch shapes sized by
-// DecodeScratch::new against the checkpoint config
+// DecodeScratch::new against the checkpoint config; spos/active are
+// ns-length by step_with's entry checks
 #[allow(clippy::too_many_arguments)]
 fn block_step(
     cfg: &LmConfig,
@@ -1605,13 +1687,15 @@ fn block_step(
     h: &mut [f32],
     ls: &mut AttnState,
     ns: usize,
-    pos: usize,
+    spos: &[usize],
+    active: Option<&[bool]>,
     pool: &ThreadPool,
     sc: &mut DecodeScratch,
 ) {
     let d = cfg.d_model;
     let (nh, hd) = (cfg.n_head, cfg.head_dim());
     let n_sh = ns * nh;
+    let act = move |s: usize| active.map_or(true, |a| a[s]);
 
     match bi.ln1 {
         Some(i) => ln_fwd_into(h, p.at(i), p.at(i + 1), ns, d, &mut sc.x1),
@@ -1657,6 +1741,9 @@ fn block_step(
                 QuantBuf::F32(data) => {
                     let sp = super::pool::SliceParts::new(data);
                     pool.run(n_sh, |i| {
+                        if !act(i / nh) {
+                            return; // masked lane: state untouched, ah row stays zero
+                        }
                         // SAFETY: task `i` touches windows `i` of
                         // `s`/`ah`/`u` only.
                         let (sw, aw, uw) = unsafe {
@@ -1682,6 +1769,9 @@ fn block_step(
                     let sp = super::pool::SliceParts::new(data);
                     let dp = super::pool::SliceParts::new(&mut sc.sdeq);
                     pool.run(n_sh, |i| {
+                        if !act(i / nh) {
+                            return; // masked lane: state untouched, ah row stays zero
+                        }
                         // SAFETY: task `i` touches windows `i` of
                         // `s`/`sdeq`/`ah`/`u` only.
                         let (sw, dw, aw, uw) = unsafe {
@@ -1715,6 +1805,9 @@ fn block_step(
                     let scl = super::pool::SliceParts::new(scales);
                     let dp = super::pool::SliceParts::new(&mut sc.sdeq);
                     pool.run(n_sh, |i| {
+                        if !act(i / nh) {
+                            return; // masked lane: state untouched, ah row stays zero
+                        }
                         // SAFETY: task `i` touches windows `i` of
                         // `s`/`scales`/`sdeq`/`ah`/`u` only.
                         let (sw, scw, dw, aw, uw) = unsafe {
@@ -1755,26 +1848,40 @@ fn block_step(
             }
         }
         AttnState::Softmax { k, v } => {
-            k.append_rows(&sc.kh);
-            v.append_rows(&sc.vh);
+            // store this token's K/V head rows into each active sequence's
+            // cache lane (row `(s·n_ctx + spos[s])·nh + h`); store_rows
+            // quantizes per row exactly like the legacy bulk append did
+            let nctx = cfg.n_ctx;
+            for s in 0..ns {
+                if !act(s) {
+                    continue;
+                }
+                let base = (s * nctx + spos[s]) * nh;
+                k.store_rows(base, hd, &sc.kh[s * nh * hd..][..nh * hd]);
+                v.store_rows(base, hd, &sc.vh[s * nh * hd..][..nh * hd]);
+            }
             let (kc, vc) = (&*k, &*v);
             let scale = 1.0 / (hd as f32).sqrt();
             let qh = &sc.qh[..];
-            let nctx = cfg.n_ctx;
             let scp = super::pool::SliceParts::new(&mut sc.scores);
-            // streaming causal softmax over the cached prefix, one
+            // streaming causal softmax over the cached lane prefix, one
             // (seq, head) row per pool task — identical accumulation order
-            // to softmax_fwd's row `pos`. Cache rows are read through
+            // to softmax_fwd's row `spos[s]`. Cache rows are read through
             // [`QuantBuf::row_dot`]/[`QuantBuf::row_axpy`], whose f32 arms
             // are the same `gemm::dot`/`gemm::axpy` calls as before.
             pool.run_chunks(&mut sc.ah, hd, |sh, out| {
+                let (s, hh) = (sh / nh, sh % nh);
+                if !act(s) {
+                    return; // masked lane: ah row stays zero
+                }
+                let pos = spos[s];
                 let qr = &qh[sh * hd..][..hd];
                 // SAFETY: task `sh` touches scores window `sh` only (rows
                 // are `nctx` apart; `pos + 1 ≤ nctx`).
                 let scores = unsafe { scp.window(sh * nctx, pos + 1) };
                 let mut m = f32::NEG_INFINITY;
                 for (t, sc) in scores.iter_mut().enumerate() {
-                    let a = kc.row_dot(t * n_sh + sh, hd, qr) * scale;
+                    let a = kc.row_dot((s * nctx + t) * nh + hh, hd, qr) * scale;
                     *sc = a;
                     m = m.max(a);
                 }
@@ -1785,7 +1892,7 @@ fn block_step(
                 }
                 let inv = 1.0 / z;
                 for (t, sc) in scores.iter().enumerate() {
-                    vc.row_axpy(t * n_sh + sh, hd, sc * inv, out);
+                    vc.row_axpy((s * nctx + t) * nh + hh, hd, sc * inv, out);
                 }
             });
         }
@@ -1869,11 +1976,11 @@ fn linear_state_task(
 ///   the window (per-chunk inter/intra GEMM tiles, prefix-state carry — the
 ///   training-scan decomposition), and the result is requantized back in
 ///   one [`QuantBuf::store_f32`] pass (vs per token in `block_step`).
-/// - **Softmax**: the head-major K/V projections are transposed into the
-///   cache's token-major row order, appended in one bulk call, then the
-///   queries run the identical streaming two-pass softmax as `block_step`,
-///   blocked `chunk` rows at a time so the score scratch stays bounded by
-///   the chunk length.
+/// - **Softmax**: the head-major K/V projections are transposed into each
+///   sequence's cache-lane row order, stored in one bulk call per sequence,
+///   then the queries run the identical streaming two-pass softmax as
+///   `block_step`, blocked `chunk` rows at a time so the score scratch
+///   stays bounded by the chunk length.
 // deny_alloc
 #[allow(clippy::too_many_arguments)]
 fn block_prefill(
@@ -1942,22 +2049,27 @@ fn block_prefill(
             normalize_linear_rows(&sc.u, hd, &mut sc.ah);
         }
         AttnState::Softmax { k, v } => {
-            // head-major [(s,h)][t][hd] → the cache's token-major
-            // [t][(s,h)][hd] rows, then one bulk (quantizing) append
+            // head-major [(s,h)][t][hd] → the cache lane's [t][h][hd] row
+            // order per sequence, then one bulk (quantizing) store per
+            // sequence at its lane offset `(s·n_ctx + pos)·nh`
             for shi in 0..n_sh {
+                let (s, hh) = (shi / nh, shi % nh);
                 for t in 0..l {
                     let kk = &sc.kh[(shi * l + t) * hd..][..hd];
-                    sc.kstage[(t * n_sh + shi) * hd..][..hd].copy_from_slice(kk);
+                    sc.kstage[((s * l + t) * nh + hh) * hd..][..hd].copy_from_slice(kk);
                     let vv = &sc.vh[(shi * l + t) * hd..][..hd];
-                    sc.vstage[(t * n_sh + shi) * hd..][..hd].copy_from_slice(vv);
+                    sc.vstage[((s * l + t) * nh + hh) * hd..][..hd].copy_from_slice(vv);
                 }
             }
-            k.append_rows(&sc.kstage[..rows * d]);
-            v.append_rows(&sc.vstage[..rows * d]);
+            let nctx = cfg.n_ctx;
+            for s in 0..ns {
+                let base = (s * nctx + pos) * nh;
+                k.store_rows(base, hd, &sc.kstage[s * l * d..][..l * d]);
+                v.store_rows(base, hd, &sc.vstage[s * l * d..][..l * d]);
+            }
             let (kc, vc) = (&*k, &*v);
             let scale = 1.0 / (hd as f32).sqrt();
             let qh = &sc.qh[..];
-            let nctx = cfg.n_ctx;
             // identical per-query streaming softmax as block_step (same
             // accumulation order ⇒ same bits), blocked `chunk` query rows
             // at a time so the score scratch is chunk-bounded
@@ -1970,6 +2082,7 @@ fn block_prefill(
                 let base = q0;
                 pool.run(tb * n_sh, |task| {
                     let (ti, sh) = (task / n_sh, task % n_sh);
+                    let (s, hh) = (sh / nh, sh % nh);
                     let t = base + ti;
                     let g = pos + t; // global position of this query row
                     let qr = &qh[(sh * l + t) * hd..][..hd];
@@ -1981,7 +2094,7 @@ fn block_prefill(
                     };
                     let mut m = f32::NEG_INFINITY;
                     for (tt, sx) in scores.iter_mut().enumerate() {
-                        let a = kc.row_dot(tt * n_sh + sh, hd, qr) * scale;
+                        let a = kc.row_dot((s * nctx + tt) * nh + hh, hd, qr) * scale;
                         *sx = a;
                         m = m.max(a);
                     }
@@ -1992,7 +2105,7 @@ fn block_prefill(
                     }
                     let inv = 1.0 / z;
                     for (tt, sx) in scores.iter().enumerate() {
-                        vc.row_axpy(tt * n_sh + sh, hd, sx * inv, out);
+                        vc.row_axpy((s * nctx + tt) * nh + hh, hd, sx * inv, out);
                     }
                 });
                 q0 += tb;

@@ -286,6 +286,90 @@ impl QuantBuf {
         }
     }
 
+    /// Re-encode `src.len() / rowlen` whole rows starting at row `r`
+    /// **in place** (the buffer keeps its length) — the per-sequence-lane
+    /// sibling of [`Self::store_f32`], used by the decode step to write one
+    /// token's K/V rows into a sequence's pre-sized cache lane. Quantizes
+    /// per int8 row with the exact arithmetic [`Self::append_rows`] uses, so
+    /// a lane write and an append of the same row store identical codes.
+    // deny_alloc
+    // bounds: callers carve `r`/`rowlen` spans inside the buffer length —
+    // the decode step derives them from the DecodeState lane layout
+    pub fn store_rows(&mut self, r: usize, rowlen: usize, src: &[f32]) {
+        match self {
+            QuantBuf::F32(d) => d[r * rowlen..][..src.len()].copy_from_slice(src),
+            QuantBuf::Bf16(d) => {
+                for (o, &x) in d[r * rowlen..][..src.len()].iter_mut().zip(src) {
+                    *o = f32_to_bf16(x);
+                }
+            }
+            QuantBuf::Int8 { q, scales, row } => {
+                debug_assert_eq!(*row, rowlen);
+                debug_assert!(src.len() % rowlen == 0, "store_rows: partial int8 row");
+                for (i, chunk) in src.chunks_exact(rowlen).enumerate() {
+                    scales[r + i] = quantize_row_i8(chunk, &mut q[(r + i) * rowlen..][..rowlen]);
+                }
+            }
+        }
+    }
+
+    /// Raw precision-exact copy of `n_rows` stored rows from `src` (codes
+    /// and, for int8, their scales — no dequantize/requantize round trip),
+    /// used to adopt a staging sequence's state into a batch slot so the
+    /// adopted lane is bit-identical to the staging lane.
+    pub fn copy_rows_from(
+        &mut self,
+        dst_row: usize,
+        src: &QuantBuf,
+        src_row: usize,
+        n_rows: usize,
+        rowlen: usize,
+    ) -> Result<()> {
+        let n = n_rows * rowlen;
+        match (self, src) {
+            (QuantBuf::F32(d), QuantBuf::F32(s)) => {
+                d[dst_row * rowlen..][..n].copy_from_slice(&s[src_row * rowlen..][..n]);
+            }
+            (QuantBuf::Bf16(d), QuantBuf::Bf16(s)) => {
+                d[dst_row * rowlen..][..n].copy_from_slice(&s[src_row * rowlen..][..n]);
+            }
+            (
+                QuantBuf::Int8 { q: dq, scales: dsc, row: dr },
+                QuantBuf::Int8 { q: sq, scales: ssc, row: sr },
+            ) => {
+                if *dr != rowlen || *sr != rowlen {
+                    bail!("copy_rows_from: int8 row {dr}/{sr} != rowlen {rowlen}");
+                }
+                dq[dst_row * rowlen..][..n].copy_from_slice(&sq[src_row * rowlen..][..n]);
+                dsc[dst_row..][..n_rows].copy_from_slice(&ssc[src_row..][..n_rows]);
+            }
+            (d, s) => bail!(
+                "copy_rows_from: precision mismatch ({} ← {})",
+                d.precision().name(),
+                s.precision().name()
+            ),
+        }
+        Ok(())
+    }
+
+    /// Zero `n_rows` stored rows (codes and, for int8, scales) starting at
+    /// row `r`, keeping the length — the slot-eviction reset of one
+    /// sequence's recurrent-state block.
+    // deny_alloc
+    // bounds: callers carve `r`/`rowlen` spans inside the buffer length
+    pub fn zero_rows(&mut self, r: usize, n_rows: usize, rowlen: usize) {
+        let n = n_rows * rowlen;
+        match self {
+            QuantBuf::F32(d) => d[r * rowlen..][..n].fill(0.0),
+            QuantBuf::Bf16(d) => d[r * rowlen..][..n].fill(0),
+            QuantBuf::Int8 { q, scales, row } => {
+                debug_assert_eq!(*row, rowlen);
+                q[r * rowlen..][..n].fill(0);
+                scales[r..][..n_rows].fill(0.0);
+            }
+        }
+    }
+
     /// Append whole rows (quantizing as needed). `src.len()` must be a
     /// multiple of the int8 `row`; for f32/bf16 any length is a "row".
     /// Allocation-free while the reserved capacity lasts.
@@ -520,6 +604,56 @@ mod tests {
             let mut out = vec![9.0f32; 12];
             buf.dequantize_into(&mut out);
             assert!(out.iter().all(|&v| v == 0.0), "{prec}");
+        }
+    }
+
+    /// An in-place lane write must store the same encoded bits as appending
+    /// the same rows — the decode step's lane store and the legacy append
+    /// must be interchangeable for parity.
+    #[test]
+    fn store_rows_matches_append_rows_bitwise() {
+        let rows: Vec<f32> = (0..12).map(|i| ((i * 13) % 7) as f32 * 0.4 - 1.0).collect();
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut appended = QuantBuf::reserved(prec, 12, 4);
+            appended.append_rows(&rows);
+            let mut stored = QuantBuf::zeros(prec, 12, 4);
+            stored.store_rows(0, 4, &rows[..4]);
+            stored.store_rows(1, 4, &rows[4..]);
+            assert_eq!(appended, stored, "{prec}");
+        }
+    }
+
+    #[test]
+    fn copy_rows_from_is_precision_exact_and_rejects_mismatch() {
+        let rows: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let src = QuantBuf::from_f32(&rows, 4, prec);
+            let mut dst = QuantBuf::zeros(prec, 16, 4);
+            dst.copy_rows_from(2, &src, 0, 2, 4).unwrap();
+            // the copied rows carry the source's exact codes (and scales)
+            let mut out = vec![0.0f32; 16];
+            dst.dequantize_into(&mut out);
+            let mut want = vec![0.0f32; 8];
+            src.dequantize_into(&mut want);
+            assert_eq!(&out[8..16], &want[..], "{prec}");
+            assert!(out[..8].iter().all(|&v| v == 0.0), "{prec}");
+        }
+        let f = QuantBuf::zeros(Precision::F32, 8, 4);
+        let mut b = QuantBuf::zeros(Precision::Bf16, 8, 4);
+        assert!(b.copy_rows_from(0, &f, 0, 1, 4).is_err());
+    }
+
+    #[test]
+    fn zero_rows_clears_only_the_span() {
+        let rows: Vec<f32> = (0..12).map(|i| i as f32 + 1.0).collect();
+        for prec in [Precision::F32, Precision::Bf16, Precision::Int8] {
+            let mut buf = QuantBuf::from_f32(&rows, 4, prec);
+            buf.zero_rows(1, 1, 4);
+            let mut out = vec![0.0f32; 12];
+            buf.dequantize_into(&mut out);
+            assert!(out[4..8].iter().all(|&v| v == 0.0), "{prec}");
+            assert!(out[..4].iter().all(|&v| v != 0.0), "{prec}");
+            assert!(out[8..].iter().all(|&v| v != 0.0), "{prec}");
         }
     }
 }

@@ -18,5 +18,5 @@ pub mod traffic;
 pub mod vmem;
 
 pub use device::DeviceSpec;
-pub use traffic::{Impl, TrafficModel, TrafficReport};
+pub use traffic::{ArrivalPattern, Impl, ServeFit, TrafficModel, TrafficReport};
 pub use vmem::VmemModel;

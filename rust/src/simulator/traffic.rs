@@ -202,6 +202,126 @@ impl TrafficModel {
     }
 }
 
+// --- serve-side calibration ---------------------------------------------------
+//
+// The analytic model above predicts; the serve engine measures. These pieces
+// close the loop: seeded arrival traces drive the engine reproducibly
+// (`repro loadgen`), and the per-step (bytes-moved estimate, seconds)
+// samples the engine records are fitted back to the model's two serve-side
+// constants — per-step fixed overhead (the launch-overhead analogue) and
+// effective bytes/s — with the residual quantifying how well the linear
+// traffic model explains measured decode latency.
+
+/// Synthetic arrival process for the in-process load generator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalPattern {
+    /// Memoryless arrivals at `rate_hz` (exponential inter-arrival gaps) —
+    /// the steady-traffic case.
+    Poisson { rate_hz: f64 },
+    /// `burst` simultaneous arrivals every `gap_s` — the worst case for a
+    /// bounded admission queue (exercises slot contention and shedding).
+    Burst { burst: usize, gap_s: f64 },
+}
+
+impl ArrivalPattern {
+    /// Deterministic arrival timestamps (seconds from start, nondecreasing):
+    /// the same `(pattern, n, seed)` always yields the same trace, so load
+    /// runs are replayable bit-for-bit.
+    pub fn trace(&self, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::data::rng::SplitMix64::new(seed);
+        let mut out = Vec::with_capacity(n);
+        match *self {
+            ArrivalPattern::Poisson { rate_hz } => {
+                let rate = if rate_hz.is_finite() && rate_hz > 0.0 { rate_hz } else { 1.0 };
+                let mut t = 0.0;
+                for _ in 0..n {
+                    // inverse-CDF exponential; next_f64 ∈ [0,1) keeps ln(1−u) finite
+                    let u = rng.next_f64();
+                    t += -(1.0 - u).ln() / rate;
+                    out.push(t);
+                }
+            }
+            ArrivalPattern::Burst { burst, gap_s } => {
+                let burst = burst.max(1);
+                let gap = if gap_s.is_finite() && gap_s > 0.0 { gap_s } else { 1.0 };
+                for i in 0..n {
+                    out.push((i / burst) as f64 * gap);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Least-squares calibration of the serve-side latency model
+/// `step_s ≈ overhead + bytes / bytes_per_s` against the engine's measured
+/// per-step samples.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeFit {
+    /// Fixed per-step cost (scheduling + launch analogue), seconds.
+    pub launch_overhead_s: f64,
+    /// Effective streaming bandwidth implied by the slope; 0 when the
+    /// samples cannot identify a slope (constant bytes — e.g. pure
+    /// linear-attention state at fixed occupancy — or a non-positive one).
+    pub bytes_per_s: f64,
+    /// RMS residual of the fit, seconds — how much measured latency the
+    /// linear traffic model fails to explain.
+    pub rms_residual_s: f64,
+    pub n_samples: usize,
+}
+
+impl ServeFit {
+    /// Fit `(bytes, seconds)` samples; `None` below two samples (a line
+    /// needs two points — with exactly constant x the slope falls back to 0
+    /// and the intercept to the mean).
+    pub fn from_samples(samples: &[(f64, f64)]) -> Option<Self> {
+        let pts: Vec<(f64, f64)> =
+            samples.iter().copied().filter(|(x, y)| x.is_finite() && y.is_finite()).collect();
+        let n = pts.len();
+        if n < 2 {
+            return None;
+        }
+        let nf = n as f64;
+        let mx = pts.iter().map(|p| p.0).sum::<f64>() / nf;
+        let my = pts.iter().map(|p| p.1).sum::<f64>() / nf;
+        let sxx = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum::<f64>();
+        let sxy = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum::<f64>();
+        // degenerate x (all steps moved the same bytes) cannot identify a
+        // slope — fall back to the pure-overhead model instead of dividing
+        // by ~0 and reporting a garbage bandwidth
+        let slope = if sxx > 1e-9 * mx.abs().max(1.0) { sxy / sxx } else { 0.0 };
+        let slope = if slope.is_finite() && slope > 0.0 { slope } else { 0.0 };
+        let intercept = my - slope * mx;
+        let ss_res =
+            pts.iter().map(|p| { let r = p.1 - (intercept + slope * p.0); r * r }).sum::<f64>();
+        Some(Self {
+            launch_overhead_s: intercept,
+            bytes_per_s: if slope > 0.0 { 1.0 / slope } else { 0.0 },
+            rms_residual_s: (ss_res / nf).sqrt(),
+            n_samples: n,
+        })
+    }
+
+    /// Predicted step latency under the fitted constants.
+    pub fn predict(&self, bytes: f64) -> f64 {
+        let move_s = if self.bytes_per_s > 0.0 { bytes / self.bytes_per_s } else { 0.0 };
+        self.launch_overhead_s + move_s
+    }
+
+    /// Write the fitted constants back into a [`DeviceSpec`] (only the
+    /// identifiable ones), yielding a [`TrafficModel`] calibrated against
+    /// this machine's measured serving behaviour.
+    pub fn apply(&self, mut dev: DeviceSpec) -> DeviceSpec {
+        if self.launch_overhead_s.is_finite() && self.launch_overhead_s > 0.0 {
+            dev.launch_overhead = self.launch_overhead_s;
+        }
+        if self.bytes_per_s.is_finite() && self.bytes_per_s > 0.0 {
+            dev.mem_bw = self.bytes_per_s;
+        }
+        dev
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,6 +407,63 @@ mod tests {
         let gated = m.memory_bytes(Impl::Gated, BH, N, D);
         assert!((ours - flash).abs() / ours < 1e-9);
         assert!(gated > 1.5 * ours, "gated {gated} vs ours {ours}");
+    }
+
+    #[test]
+    fn poisson_trace_is_seeded_and_monotone() {
+        let p = ArrivalPattern::Poisson { rate_hz: 50.0 };
+        let a = p.trace(100, 7);
+        let b = p.trace(100, 7);
+        assert_eq!(a, b, "same seed must replay the same trace");
+        assert_ne!(a, p.trace(100, 8), "different seed, different trace");
+        assert_eq!(a.len(), 100);
+        assert!(a.windows(2).all(|w| w[1] >= w[0]), "arrivals must be nondecreasing");
+        assert!(a.iter().all(|t| t.is_finite() && *t >= 0.0));
+        // mean inter-arrival ≈ 1/rate within a loose band
+        let mean_gap = a.last().unwrap() / 100.0;
+        assert!(mean_gap > 0.005 && mean_gap < 0.08, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn burst_trace_groups_arrivals() {
+        let p = ArrivalPattern::Burst { burst: 4, gap_s: 0.5 };
+        let t = p.trace(10, 0);
+        assert_eq!(t[0..4], [0.0; 4]);
+        assert_eq!(t[4..8], [0.5; 4]);
+        assert_eq!(t[8..10], [1.0; 2]);
+    }
+
+    #[test]
+    fn serve_fit_recovers_a_known_line() {
+        // t = 2ms + bytes / 1e9
+        let samples: Vec<(f64, f64)> =
+            (1..=20).map(|i| { let b = i as f64 * 1e6; (b, 2e-3 + b / 1e9) }).collect();
+        let fit = ServeFit::from_samples(&samples).unwrap();
+        assert!((fit.launch_overhead_s - 2e-3).abs() < 1e-9, "{}", fit.launch_overhead_s);
+        assert!((fit.bytes_per_s - 1e9).abs() / 1e9 < 1e-6, "{}", fit.bytes_per_s);
+        assert!(fit.rms_residual_s < 1e-9);
+        assert_eq!(fit.n_samples, 20);
+        assert!((fit.predict(5e6) - (2e-3 + 5e-3)).abs() < 1e-9);
+        // calibration writes the identifiable constants back into the device
+        let dev = fit.apply(DeviceSpec::a6000());
+        assert!((dev.mem_bw - 1e9).abs() / 1e9 < 1e-6);
+        assert!((dev.launch_overhead - 2e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_fit_degenerate_x_falls_back_to_overhead_only() {
+        // constant bytes (fixed-occupancy linear attention): slope is not
+        // identifiable — the fit must not report a garbage bandwidth
+        let samples = vec![(1e6, 3e-3), (1e6, 5e-3), (1e6, 4e-3)];
+        let fit = ServeFit::from_samples(&samples).unwrap();
+        assert_eq!(fit.bytes_per_s, 0.0);
+        assert!((fit.launch_overhead_s - 4e-3).abs() < 1e-12);
+        assert!(fit.rms_residual_s > 0.0);
+        // unidentifiable constants leave the device spec untouched
+        let dev = fit.apply(DeviceSpec::a6000());
+        assert_eq!(dev.mem_bw, DeviceSpec::a6000().mem_bw);
+        assert!(ServeFit::from_samples(&[(1.0, 1.0)]).is_none());
+        assert!(ServeFit::from_samples(&[]).is_none());
     }
 
     #[test]

@@ -27,6 +27,10 @@
 //!   activations are per-step temporaries by design), so it is pinned to
 //!   **net-zero retained bytes** and a **constant per-step allocation
 //!   count** — any leak or accidental per-step growth moves one of the two.
+//! - the engine's warm slot-recycling cycle (staging prefill →
+//!   `adopt_seq` → masked decode → `clear_seq` → immediate re-admit) is
+//!   **strictly allocation-free** — continuous batching adds no
+//!   steady-state allocation on top of the decode step it schedules.
 
 #![cfg(feature = "alloc-gate")]
 
@@ -245,4 +249,60 @@ fn softmax_kv_cache_reservation_survives_a_full_window() {
         d.allocs, 0,
         "softmax decode allocated across a full window (KV reservation lost?): {d:?}"
     );
+}
+
+#[test]
+fn slot_recycling_admit_decode_evict_admit_is_allocation_free_when_warm() {
+    // the continuous-batching engine's steady state: a request prefills
+    // through the one-sequence staging state, is adopted into a free batch
+    // slot, decodes under the active mask, is evicted with `clear_seq`,
+    // and the freed slot immediately hosts the next admission — all on
+    // buffers sized at engine construction. With every scratch warm, one
+    // full recycle performs ZERO allocation events, for every mixer.
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let cfg = LmConfig::tiny(attn);
+        let mut state = cfg.init_state(6);
+        state.truncate(cfg.n_param_arrays());
+        let params: Vec<&Tensor> = state.iter().collect();
+        let pool = ThreadPool::new(1);
+        let bound = model::DecodeModel::bind(&cfg, &params).unwrap();
+        let mut batch = DecodeState::new(&cfg, 2).unwrap();
+        let mut staging = DecodeState::new(&cfg, 1).unwrap();
+        let mut sc = DecodeScratch::new();
+        let mut ssc = DecodeScratch::new();
+        // slot 0 plays the parked resident the engine schedules around
+        bound.prefill_step_scratch(&[7, 7], &mut batch, &pool, &mut sc).unwrap();
+
+        let mut recycle = |seed_tok: i32| {
+            staging.reset();
+            for t in 0..3 {
+                bound
+                    .prefill_step_scratch(&[seed_tok + t], &mut staging, &pool, &mut ssc)
+                    .unwrap();
+            }
+            batch.adopt_seq(1, &staging).unwrap();
+            let active = [false, true];
+            let mut tok = [0i32, seed_tok];
+            for step in 0..3 {
+                let logits =
+                    bound.decode_step_masked(&tok, &active, &mut batch, &pool, &mut sc).unwrap();
+                assert!(
+                    logits.iter().all(|x| x.is_finite()),
+                    "bad logits from the recycled slot ({attn:?})"
+                );
+                tok[1] = (seed_tok + step) % 23;
+            }
+            batch.clear_seq(1).unwrap();
+            // re-admit into the just-freed slot
+            staging.reset();
+            bound.prefill_step_scratch(&[seed_tok], &mut staging, &pool, &mut ssc).unwrap();
+            batch.adopt_seq(1, &staging).unwrap();
+            bound.decode_step_masked(&tok, &active, &mut batch, &pool, &mut sc).unwrap();
+            batch.clear_seq(1).unwrap();
+        };
+        recycle(1); // warm-up: grows every scratch to its steady size
+        assert_no_alloc!(format!("slot recycle admit→decode→evict→admit (warm, {attn:?})"), {
+            recycle(2)
+        });
+    }
 }

@@ -1,0 +1,324 @@
+//! Continuous-batching engine integration tests: batch-vs-solo token parity
+//! per `AttnKind` (joining a busy batch mid-stream must not change a
+//! request's tokens), bounded-queue load shedding, join/leave schedule
+//! determinism under a fixed seed, EOF draining through the serve loop, and
+//! the loadgen smoke the CI lane mirrors.
+
+// Too slow under the Miri interpreter (tests/miri_parity.rs covers the
+// unsafe families at reduced sizes instead).
+#![cfg(not(miri))]
+
+use std::collections::HashMap;
+use std::io::Cursor;
+
+use repro::coordinator::{Checkpoint, CheckpointMeta, PARAM_LAYOUT_VERSION};
+use repro::data::ByteTokenizer;
+use repro::infer::engine::loadgen;
+use repro::infer::{
+    serve_loop, BatchEngine, EngineConfig, EngineOutput, EngineResponse, GenRequest,
+    LoadGenConfig, ModelSession, SampleMode,
+};
+use repro::native::model::{self, AttnKind, LmConfig};
+use repro::native::pool::ThreadPool;
+use repro::runtime::Tensor;
+use repro::simulator::ArrivalPattern;
+use repro::util::json::Json;
+
+/// Everything a checkpoint-free engine borrows, bundled so tests can build
+/// several engines over the same weights.
+struct Parts {
+    cfg: LmConfig,
+    params: Vec<Tensor>,
+    tokenizer: ByteTokenizer,
+    pool: ThreadPool,
+}
+
+fn parts(attn: AttnKind, seed: u64) -> Parts {
+    let cfg = LmConfig::tiny(attn);
+    let mut params = cfg.init_state(seed);
+    params.truncate(cfg.n_param_arrays());
+    let tokenizer = ByteTokenizer::for_artifact(cfg.vocab, 0).unwrap();
+    let pool = ThreadPool::new(2);
+    Parts { cfg, params, tokenizer, pool }
+}
+
+impl Parts {
+    fn engine(&self, conf: EngineConfig) -> BatchEngine<'_> {
+        let refs: Vec<&Tensor> = self.params.iter().collect();
+        let bound = model::DecodeModel::bind(&self.cfg, &refs).unwrap();
+        BatchEngine::new(bound, &self.tokenizer, &self.pool, conf).unwrap()
+    }
+}
+
+fn greedy(prompt: &str, max_new: usize) -> GenRequest {
+    GenRequest {
+        prompt: prompt.to_string(),
+        max_new,
+        mode: SampleMode::Greedy,
+        seed: 0,
+        samples: 1,
+        ..GenRequest::default()
+    }
+}
+
+/// Completed outputs keyed by serial; panics on any failed response.
+fn outputs_of(resps: Vec<EngineResponse>) -> HashMap<u64, EngineOutput> {
+    resps
+        .into_iter()
+        .map(|r| {
+            let serial = r.serial;
+            (serial, r.result.unwrap_or_else(|e| panic!("request {serial} failed: {e:#}")))
+        })
+        .collect()
+}
+
+/// A request's sampled tokens must be bit-identical whether it decodes in
+/// an otherwise empty engine or joins a batch whose neighbour is already
+/// mid-stream — the row-independence contract of the masked decode step,
+/// per mixer family. The probe samples (top-k, fixed seed) so the parity
+/// also covers the per-request RNG stream, not just the argmax.
+#[test]
+fn joining_a_busy_batch_leaves_tokens_bit_identical() {
+    for attn in [AttnKind::Ours, AttnKind::Gated, AttnKind::Softmax] {
+        let p = parts(attn, 21);
+        let probe = GenRequest {
+            prompt: "the quick brown ".to_string(),
+            max_new: 10,
+            mode: SampleMode::TopK { k: 8, temperature: 1.0 },
+            seed: 77,
+            samples: 1,
+            ..GenRequest::default()
+        };
+
+        // solo: the probe has the whole engine to itself
+        let mut solo = p.engine(EngineConfig::default());
+        solo.submit(0, probe.clone());
+        solo.drain().unwrap();
+        let solo_out = outputs_of(solo.take_finished()).remove(&0).unwrap();
+        assert_eq!(solo_out.new_tokens, 10, "{attn:?}");
+
+        // busy: a long-running neighbour is several tokens in when the
+        // probe joins, and it keeps decoding after the probe leaves
+        let mut busy = p.engine(EngineConfig::default());
+        busy.submit(0, greedy("a much longer neighbouring prompt ", 24));
+        for _ in 0..4 {
+            busy.step().unwrap();
+        }
+        assert_eq!(busy.occupancy(), 1, "{attn:?}: neighbour not yet decoding");
+        busy.submit(1, probe.clone());
+        busy.drain().unwrap();
+        assert!(busy.is_idle());
+        assert!(
+            busy.stats().max_occupancy >= 2,
+            "{attn:?}: probe never overlapped the neighbour"
+        );
+        let m = outputs_of(busy.take_finished());
+        let joined = &m[&1];
+        assert_eq!(
+            joined.token_ids, solo_out.token_ids,
+            "{attn:?}: joining a busy batch changed the probe's tokens"
+        );
+        assert_eq!(joined.texts, solo_out.texts, "{attn:?}: decoded text diverged");
+        assert!(joined.occupancy_mean > 1.0, "{attn:?}: probe decoded unbatched");
+    }
+}
+
+/// The bounded admission queue sheds overflow with an explicit `queue_full`
+/// rejection (flagged `rejected`, distinct from a validation error), and an
+/// over-wide `samples` answers an error — neither aborts or starves the
+/// warm engine.
+#[test]
+fn queue_overflow_sheds_and_absurd_samples_answer_errors() {
+    let p = parts(AttnKind::Ours, 3);
+    let mut e = p.engine(EngineConfig { slots: 1, queue: 2, prefill_budget: 64 });
+    for serial in 0..4u64 {
+        e.submit(serial, greedy("the ", 3));
+    }
+    e.submit(9, GenRequest { samples: 5, ..greedy("the ", 2) });
+    let early = e.take_finished();
+    assert_eq!(early.len(), 3);
+    for r in &early {
+        match r.serial {
+            2 | 3 => {
+                assert!(r.rejected, "overflow must be flagged as shed");
+                let err = format!("{:#}", r.result.as_ref().unwrap_err());
+                assert!(err.contains("queue_full"), "unhelpful rejection: {err}");
+            }
+            9 => {
+                assert!(!r.rejected, "a validation error is not load shedding");
+                let err = format!("{:#}", r.result.as_ref().unwrap_err());
+                assert!(err.contains("slot"), "unhelpful samples error: {err}");
+            }
+            other => panic!("unexpected early response for serial {other}"),
+        }
+    }
+
+    // the two admitted requests still complete
+    e.drain().unwrap();
+    let done = outputs_of(e.take_finished());
+    assert_eq!(done.len(), 2);
+    assert!(done.contains_key(&0) && done.contains_key(&1));
+    assert_eq!(e.stats().rejected, 2);
+    assert_eq!(e.stats().errors, 1);
+    assert_eq!(e.stats().completed, 2);
+    assert_eq!(e.stats().submitted, 5);
+}
+
+/// The same staggered submit/step schedule run twice must produce identical
+/// tokens for every request: admission order, slot assignment, and each
+/// request's sampler stream are all functions of the inputs, never of
+/// wall-clock timing.
+#[test]
+fn join_leave_schedule_is_deterministic_under_a_fixed_seed() {
+    let p = parts(AttnKind::Ours, 5);
+    let run = || {
+        let mut e = p.engine(EngineConfig { slots: 3, queue: 8, prefill_budget: 32 });
+        e.submit(
+            0,
+            GenRequest {
+                prompt: "alpha ".to_string(),
+                max_new: 9,
+                mode: SampleMode::TopK { k: 8, temperature: 0.9 },
+                seed: 11,
+                samples: 1,
+                ..GenRequest::default()
+            },
+        );
+        e.step().unwrap();
+        e.step().unwrap();
+        e.submit(
+            1,
+            GenRequest {
+                prompt: "beta ".to_string(),
+                max_new: 5,
+                mode: SampleMode::TopK { k: 4, temperature: 1.1 },
+                seed: 22,
+                samples: 2,
+                ..GenRequest::default()
+            },
+        );
+        e.step().unwrap();
+        e.submit(2, greedy("gamma ", 7));
+        e.drain().unwrap();
+        assert!(e.stats().max_occupancy > 1, "schedule never overlapped");
+        let m = outputs_of(e.take_finished());
+        m.into_iter().map(|(s, o)| (s, o.token_ids)).collect::<HashMap<_, _>>()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "replaying the schedule changed the tokens");
+    assert_eq!(a.len(), 3);
+    assert_eq!(a[&1].len(), 2, "two samples decode two token streams");
+    assert_eq!(a[&1][0].len(), 5);
+}
+
+/// An idle engine's step is a no-op `Ok(false)`, and `drain` leaves the
+/// engine idle with every submission answered.
+#[test]
+fn drain_answers_everything_and_idles_the_engine() {
+    let p = parts(AttnKind::Gated, 7);
+    let mut e = p.engine(EngineConfig { slots: 2, queue: 8, prefill_budget: 16 });
+    assert!(!e.step().unwrap(), "an idle engine must report no progress");
+    for serial in 0..5u64 {
+        e.submit(serial, greedy("some prompt text ", 4));
+    }
+    e.drain().unwrap();
+    assert!(e.is_idle());
+    assert_eq!(e.occupancy(), 0);
+    let done = outputs_of(e.take_finished());
+    assert_eq!(done.len(), 5);
+    for out in done.values() {
+        assert_eq!(out.new_tokens, 4);
+        assert!(out.ttft_s.is_finite() && out.ttft_s >= 0.0);
+    }
+    assert!(!e.step().unwrap(), "a drained engine must be idle again");
+}
+
+fn write_ckpt(dir: &std::path::Path, name: &str, cfg: &LmConfig) {
+    let meta = CheckpointMeta {
+        artifact_tag: "lm_tiny_ours".to_string(),
+        step: 1,
+        loss: 1.5,
+        seed: 0,
+        layout: PARAM_LAYOUT_VERSION,
+    };
+    Checkpoint::write(dir.join(name), &meta, &cfg.init_state(0)).unwrap();
+}
+
+/// The serve loop over the engine: overlapping requests (a long first
+/// request, short followers that may well finish before it) must come back
+/// ok, in strict submission order, with the engine-era latency fields —
+/// and EOF must drain the in-flight long request cleanly.
+#[test]
+fn serve_loop_preserves_submission_order_and_drains_on_eof() {
+    let dir = std::env::temp_dir().join("repro_engine_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = LmConfig::tiny(AttnKind::Ours);
+    write_ckpt(&dir, "ok.ckpt", &cfg);
+    let session = ModelSession::load(dir.join("ok.ckpt")).unwrap();
+
+    let input = concat!(
+        "{\"id\": 1, \"prompt\": \"the long one \", \"max_new\": 24}\n",
+        "{\"id\": 2, \"prompt\": \"a \", \"max_new\": 2}\n",
+        "{\"id\": 3, \"prompt\": \"b \", \"max_new\": 2}\n",
+        "{\"id\": 4, \"prompt\": \"c \", \"max_new\": 2}\n",
+        "{\"id\": 5, \"prompt\": \"d \", \"max_new\": 2}\n",
+        "{\"id\": 6, \"prompt\": \"e \", \"max_new\": 2}\n",
+    );
+    let mut out = Vec::new();
+    let stats = serve_loop(&session, Cursor::new(input), &mut out, 64).unwrap();
+    assert_eq!(stats.requests, 6);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.rejected, 0);
+    assert_eq!(stats.engine.completed, 6);
+
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().lines().collect();
+    assert_eq!(lines.len(), 6);
+    for (i, line) in lines.iter().enumerate() {
+        let r = Json::parse(line).unwrap();
+        assert_eq!(
+            r.get("id").and_then(Json::as_usize),
+            Some(i + 1),
+            "responses must come back in submission order"
+        );
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(r.get("ttft_ms").and_then(Json::as_f64).is_some());
+        assert!(r.get("queue_ms").and_then(Json::as_f64).is_some());
+        assert!(r.get("decode_tok_s").and_then(Json::as_f64).is_some());
+        assert!(r.get("occupancy_mean").and_then(Json::as_f64).is_some());
+    }
+    let r1 = Json::parse(lines[0]).unwrap();
+    assert_eq!(r1.get("new_tokens").and_then(Json::as_usize), Some(24));
+}
+
+/// The in-process load generator (the CI smoke in test form): 8 requests in
+/// staggered bursts of 4 over 4 slots must all complete, with finite TTFT
+/// percentiles for every request, genuine batching (max occupancy above 1),
+/// and a traffic-model fit over the run's step samples.
+#[test]
+fn loadgen_burst_overlaps_and_answers_every_request() {
+    let p = parts(AttnKind::Ours, 9);
+    let mut e = p.engine(EngineConfig::default());
+    let conf = LoadGenConfig {
+        n_requests: 8,
+        pattern: ArrivalPattern::Burst { burst: 4, gap_s: 0.02 },
+        seed: 0,
+        prompt_len: 16,
+        max_new: 8,
+        cycles_per_s: 200.0,
+    };
+    let report = loadgen::run(&mut e, &conf).unwrap();
+    assert_eq!(report.submitted, 8);
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.errors, 0);
+    assert!(report.stats.max_occupancy > 1, "burst load never overlapped in the batch");
+    let ttft = report.stats.ttft_stats().unwrap();
+    assert_eq!(ttft.reps, 8);
+    assert_eq!(ttft.dropped, 0, "a non-finite TTFT slipped through");
+    assert!(ttft.p50 >= 0.0 && ttft.p99 >= ttft.p50);
+    assert!(report.fit.is_some(), "enough step samples for a fit");
+    let summary = report.summary();
+    assert!(summary.contains("8 submitted, 8 completed"), "summary:\n{summary}");
+    assert!(summary.contains("fit:"), "summary missing the fit line:\n{summary}");
+}

@@ -1,5 +1,5 @@
 //! `xtask bench-check`: validate `BENCH_native.json` against the
-//! `bench_native/v6` shape — section presence, per-row field types, and
+//! `bench_native/v7` shape — section presence, per-row field types, and
 //! the decode/prefill fidelity-gate fields non-null whenever those arrays
 //! carry rows. Extra fields are tolerated (the committed placeholder adds
 //! a `note`), `lm[].grad_norm_last` is nullable by design (the emitter
@@ -276,15 +276,36 @@ fn section_spec(name: &str) -> &'static [Field] {
             Gate("logit_maxabs_vs_serial"),
             Gate("nll_delta_vs_f32"),
         ],
+        "serve" => &[
+            Str("preset"),
+            Str("attn"),
+            Str("precision"),
+            Num("slots"),
+            Num("requests"),
+            Num("rejected"),
+            Num("occupancy_mean"),
+            Num("occupancy_max"),
+            Num("ttft_ms_p50"),
+            Num("ttft_ms_p95"),
+            Num("ttft_ms_p99"),
+            Num("latency_ms_p50"),
+            Num("latency_ms_p95"),
+            Num("latency_ms_p99"),
+            Num("decode_tok_s_p50"),
+            Num("fit_overhead_ms"),
+            Num("fit_bytes_per_s"),
+            Num("fit_rms_residual_ms"),
+            Num("fit_samples"),
+        ],
         _ => &[],
     }
 }
 
-const SECTIONS: &[&str] = &["artifacts", "lm", "opt", "decode", "prefill"];
+const SECTIONS: &[&str] = &["artifacts", "lm", "opt", "decode", "prefill", "serve"];
 
 /// Validate one parsed document. Returns human-readable problems (empty =
 /// the document conforms).
-pub fn validate_v6(doc: &JsonVal) -> Vec<String> {
+pub fn validate_v7(doc: &JsonVal) -> Vec<String> {
     let mut errs = Vec::new();
     let top = match doc {
         JsonVal::Obj(m) => m,
@@ -293,8 +314,8 @@ pub fn validate_v6(doc: &JsonVal) -> Vec<String> {
         }
     };
     match top.get("schema") {
-        Some(JsonVal::Str(s)) if s == "bench_native/v6" => {}
-        Some(JsonVal::Str(s)) => errs.push(format!("schema is {s:?}, want \"bench_native/v6\"")),
+        Some(JsonVal::Str(s)) if s == "bench_native/v7" => {}
+        Some(JsonVal::Str(s)) => errs.push(format!("schema is {s:?}, want \"bench_native/v7\"")),
         Some(other) => errs.push(format!("schema must be a string, got {}", other.type_name())),
         None => errs.push("missing top-level \"schema\"".to_string()),
     }
@@ -367,9 +388,10 @@ mod tests {
 
     fn minimal_valid() -> String {
         concat!(
-            "{\"schema\":\"bench_native/v6\",\"note\":\"extra fields tolerated\",",
+            "{\"schema\":\"bench_native/v7\",\"note\":\"extra fields tolerated\",",
             "\"threads\":0,\"chunk\":128,",
-            "\"artifacts\":[],\"lm\":[],\"opt\":[],\"decode\":[],\"prefill\":[]}"
+            "\"artifacts\":[],\"lm\":[],\"opt\":[],\"decode\":[],\"prefill\":[],",
+            "\"serve\":[]}"
         )
         .to_string()
     }
@@ -387,7 +409,7 @@ mod tests {
     }
 
     fn errs_of(doc: &str) -> Vec<String> {
-        validate_v6(&parse_json(doc).expect("parse"))
+        validate_v7(&parse_json(doc).expect("parse"))
     }
 
     #[test]
@@ -416,6 +438,31 @@ mod tests {
         assert!(errs.iter().any(|e| e.contains("fidelity gate")), "{errs:?}");
         let missing = good.replace("\"ttft_ms\":1.0,", "");
         assert!(errs_of(&missing).iter().any(|e| e.contains("missing \"ttft_ms\"")));
+    }
+
+    #[test]
+    fn serve_rows_are_field_checked() {
+        let row = concat!(
+            "{\"preset\":\"tiny\",\"attn\":\"ours\",\"precision\":\"f32\",",
+            "\"slots\":4,\"requests\":8,\"rejected\":0,",
+            "\"occupancy_mean\":2.5,\"occupancy_max\":4,",
+            "\"ttft_ms_p50\":10.0,\"ttft_ms_p95\":20.0,\"ttft_ms_p99\":25.0,",
+            "\"latency_ms_p50\":50.0,\"latency_ms_p95\":90.0,\"latency_ms_p99\":99.0,",
+            "\"decode_tok_s_p50\":1000.0,\"fit_overhead_ms\":0.2,",
+            "\"fit_bytes_per_s\":1e9,\"fit_rms_residual_ms\":0.05,\"fit_samples\":64}"
+        );
+        let good = minimal_valid().replace("\"serve\":[]", &format!("\"serve\":[{row}]"));
+        assert_eq!(errs_of(&good), Vec::<String>::new());
+        let missing = good.replace("\"occupancy_mean\":2.5,", "");
+        assert!(
+            errs_of(&missing).iter().any(|e| e.contains("missing \"occupancy_mean\"")),
+            "{:?}",
+            errs_of(&missing)
+        );
+        let bad = good.replace("\"fit_samples\":64", "\"fit_samples\":\"many\"");
+        assert!(errs_of(&bad).iter().any(|e| e.contains("fit_samples") && e.contains("number")));
+        let doc = minimal_valid().replace(",\"serve\":[]", "");
+        assert!(errs_of(&doc).iter().any(|e| e.contains("missing section \"serve\"")));
     }
 
     #[test]

@@ -31,7 +31,7 @@
 //! rule is fixture-less. The same fixtures run under `cargo test -p xtask`.
 //!
 //! `bench-check [--file PATH]` validates a `BENCH_native.json` against the
-//! `bench_native/v6` schema emitted by `rust/src/bench/report.rs`.
+//! `bench_native/v7` schema emitted by `rust/src/bench/report.rs`.
 
 #![forbid(unsafe_code)]
 
@@ -217,9 +217,9 @@ fn run_bench_check(root: Option<PathBuf>, file: Option<PathBuf>) -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
-    let errors = benchcheck::validate_v6(&doc);
+    let errors = benchcheck::validate_v7(&doc);
     if errors.is_empty() {
-        println!("xtask bench-check: {} conforms to bench_native/v6", path.display());
+        println!("xtask bench-check: {} conforms to bench_native/v7", path.display());
         ExitCode::SUCCESS
     } else {
         for e in &errors {
